@@ -1,0 +1,80 @@
+//! Paper-scale reproduction: every Fig 2 sweep plus Fig 3 on the
+//! simulated paper cluster (1000 × 617 MiB BigBrain blocks), with the
+//! analytic model bounds shaded on each chart.
+//!
+//! ```bash
+//! cargo run --release --example bigbrain_paper              # full scale
+//! SEA_SCALE=0.1 cargo run --release --example bigbrain_paper # 1/10 blocks
+//! ```
+//!
+//! Output: `results/fig2{a,b,c,d}.{csv,txt}`, `results/fig3.csv`, and a
+//! summary table comparing measured speedups with the paper's claims.
+
+use sea::report::{self, Scale};
+use sea::sim::spec::ClusterSpec;
+use sea::util::csv::{f, Csv};
+
+fn main() -> sea::Result<()> {
+    let scale = Scale {
+        blocks: std::env::var("SEA_SCALE")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1.0),
+    };
+    let spec = ClusterSpec::paper_default();
+    let seed = 42;
+    let out = std::path::Path::new("results");
+
+    println!("bigbrain_paper: scale {} (1.0 = 1000 blocks x 617 MiB)\n", scale.blocks);
+
+    let paper_claims = [
+        ("fig2a", "max speedup ~2.4x at 5 nodes"),
+        ("fig2b", "max speedup ~2x at 6 disks; Sea slower at 1 disk"),
+        ("fig2c", "max speedup ~2.6x at 10 iterations; parity at 1"),
+        ("fig2d", "max speedup ~3x at 32 procs"),
+    ];
+
+    let t0 = std::time::Instant::now();
+    let figs = vec![
+        report::fig2a(&spec, scale, &[1, 2, 3, 4, 5, 6, 7, 8], seed)?,
+        report::fig2b(&spec, scale, &[1, 2, 3, 4, 5, 6], seed)?,
+        report::fig2c(&spec, scale, &[1, 5, 10, 15], seed)?,
+        report::fig2d(&spec, scale, &[1, 2, 4, 8, 16, 32, 64], seed)?,
+    ];
+    let mut summary = Csv::new(vec!["figure", "max_speedup", "paper_claim"]);
+    for fig in &figs {
+        fig.write_to(out)?;
+        println!("{}", fig.to_ascii());
+        let claim = paper_claims
+            .iter()
+            .find(|(id, _)| *id == fig.id)
+            .map(|(_, c)| *c)
+            .unwrap_or("");
+        println!("  max speedup: {:.2}x   (paper: {claim})\n", fig.max_speedup());
+        summary.row(vec![fig.id.clone(), f(fig.max_speedup()), claim.to_string()]);
+    }
+
+    // Fig 3: mode comparison at fixed conditions
+    let rows = report::fig3(&spec, scale, seed)?;
+    let mut fig3csv = Csv::new(vec!["mode", "makespan_s", "app_done_s"]);
+    println!("Fig 3 (5 nodes / 6 procs / 6 disks / 5 iterations):");
+    for (name, r) in &rows {
+        println!("  {name:<16} {:>8.1} s", r.makespan);
+        fig3csv.row(vec![name.clone(), f(r.makespan), f(r.app_done)]);
+    }
+    fig3csv.write_to(out.join("fig3.csv"))?;
+    let get = |m: &str| rows.iter().find(|(n, _)| n == m).map(|(_, r)| r.makespan).unwrap_or(f64::NAN);
+    println!(
+        "  flush-all / in-memory = {:.2}x (paper: 3.5x);  flush-all / lustre = {:.2}x (paper: 1.3x)",
+        get("sea-flush-all") / get("sea-in-memory"),
+        get("sea-flush-all") / get("lustre"),
+    );
+    summary.row(vec![
+        "fig3".to_string(),
+        f(get("lustre") / get("sea-in-memory")),
+        "flush-all 3.5x slower than in-memory, 1.3x slower than lustre".to_string(),
+    ]);
+    summary.write_to(out.join("paper_summary.csv"))?;
+    println!("\nall figures written to results/ in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Quickstart: mount Sea over a tmpfs + disk hierarchy, run a tiny
+//! incrementation workload with REAL bytes and PJRT compute, and print
+//! the placement map and the speedup against writing straight to the
+//! (rate-limited) PFS.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use sea::coordinator::{run_pipeline, PipelineCfg};
+use sea::placement::RuleSet;
+use sea::runtime::Engine;
+use sea::util::{fmt_bytes, MIB};
+use sea::vfs::{RateLimitedFs, RealFs, SeaFs, SeaFsConfig, Vfs};
+use sea::workload::{dataset, IncrementationSpec};
+
+fn main() -> sea::Result<()> {
+    let work = std::env::temp_dir().join("sea_quickstart");
+    let _ = std::fs::remove_dir_all(&work);
+
+    // Layer 2/1: the AOT-compiled JAX+Pallas compute, loaded via PJRT.
+    let engine = Arc::new(Engine::load("artifacts")?);
+    println!("loaded artifacts: {:?}", engine.manifest().names());
+
+    // a small real dataset (12 blocks at the lowered chunk geometry)
+    let ds = dataset::generate(&work.join("pfs/inputs"), 12, engine.chunk_elems(), 1)?;
+    println!(
+        "dataset: {} blocks x {}",
+        ds.blocks.len(),
+        fmt_bytes(ds.block_bytes())
+    );
+
+    // the "PFS": a directory rate-limited to lustre-ish speeds
+    let pfs = || -> sea::Result<Arc<dyn Vfs>> {
+        Ok(Arc::new(RateLimitedFs::new(
+            RealFs::new(work.join("pfs"))?,
+            1381.0 * MIB as f64,
+            121.0 * MIB as f64,
+        )))
+    };
+
+    // baseline: write everything through the PFS
+    let direct = run_pipeline(&PipelineCfg {
+        engine: engine.clone(),
+        vfs: pfs()?,
+        dataset: ds.clone(),
+        mount_prefix: PathBuf::new(),
+        iterations: 3,
+        workers: 2,
+        read_back: true,
+        verify: true,
+        cleanup_intermediate: true,
+    })?;
+    println!("direct PFS : {:.2}s", direct.makespan);
+
+    // Sea: tmpfs tier + one disk tier over the same PFS, in-memory rules
+    let sea = SeaFs::mount(SeaFsConfig {
+        mountpoint: PathBuf::from("/sea"),
+        devices: vec![
+            (PathBuf::from("/dev/shm/sea_quickstart"), 0, 512 * MIB),
+            (work.join("disk0"), 1, 4096 * MIB),
+        ],
+        pfs: pfs()?,
+        max_file_size: ds.block_bytes(),
+        parallel_procs: 2,
+        rules: RuleSet::in_memory(IncrementationSpec::final_glob()),
+        seed: 7,
+    })?;
+    let report = run_pipeline(&PipelineCfg {
+        engine: engine.clone(),
+        vfs: Arc::new(sea),
+        dataset: ds.clone(),
+        mount_prefix: PathBuf::from("/sea"),
+        iterations: 3,
+        workers: 2,
+        read_back: true,
+        verify: true,
+        cleanup_intermediate: true,
+    })?;
+    println!("sea        : {:.2}s", report.makespan);
+    println!("speedup    : {:.2}x", direct.makespan / report.makespan);
+    println!(
+        "I/O        : {} read, {} written, {} PJRT calls (mean {:.2} ms)",
+        fmt_bytes(report.bytes_read),
+        fmt_bytes(report.bytes_written),
+        report.pjrt_calls,
+        report.pjrt_mean_s * 1e3
+    );
+
+    let _ = std::fs::remove_dir_all("/dev/shm/sea_quickstart");
+    let _ = std::fs::remove_dir_all(&work);
+    Ok(())
+}

@@ -1,0 +1,95 @@
+"""AOT lowering: JAX (L2) -> HLO text artifacts consumed by the Rust runtime.
+
+HLO *text* is the interchange format, NOT ``lowered.compile().serialize()``
+and NOT a serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit
+instruction ids which the xla crate's bundled xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``). The text parser on the Rust side reassigns
+ids, so text round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Usage (from python/):
+    python -m compile.aot --out ../artifacts/model.hlo.txt [--rows 4096]
+
+Emits, next to --out:
+    model.hlo.txt        step(x)      the request-path single iteration
+    step5.hlo.txt        step_n(x,5)  fused 5-iteration variant
+    blend.hlo.txt        blend(x, y)
+    stats.hlo.txt        stats(x)
+    manifest.txt         name -> file, rows, lanes, dtype (parsed by Rust)
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", required=True, help="path of the primary artifact")
+    ap.add_argument("--rows", type=int, default=model.CHUNK_ROWS,
+                    help="chunk rows at lowering time (cols fixed at LANES)")
+    ap.add_argument("--fused-n", type=int, default=5,
+                    help="n for the fused step_n artifact")
+    ap.add_argument("--block-rows", type=int, default=0,
+                    help="Pallas tile height; 0 = whole chunk (grid of 1), "
+                         "the fast choice for CPU-interpret execution. Use "
+                         "256 for the TPU-canonical VMEM tiling.")
+    args = ap.parse_args()
+    block_rows = args.block_rows if args.block_rows > 0 else args.rows
+
+    outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(outdir, exist_ok=True)
+    spec = model.chunk_spec(args.rows)
+
+    entries = {
+        # primary artifact keeps the --out name for Makefile compatibility
+        os.path.basename(args.out): (
+            functools.partial(model.step, block_rows=block_rows), (spec,)),
+        f"step{args.fused_n}.hlo.txt": (
+            functools.partial(model.step_n, n=args.fused_n, block_rows=block_rows),
+            (spec,)),
+        "blend.hlo.txt": (
+            functools.partial(model.blend, block_rows=block_rows), (spec, spec)),
+        "stats.hlo.txt": (
+            functools.partial(model.stats, block_rows=block_rows), (spec,)),
+    }
+
+    manifest = [f"# name\tfile\trows\tlanes\tdtype"]
+    logical = {os.path.basename(args.out): "step",
+               f"step{args.fused_n}.hlo.txt": f"step_n:{args.fused_n}",
+               "blend.hlo.txt": "blend", "stats.hlo.txt": "stats"}
+    for fname, (fn, ex) in entries.items():
+        text = lower_entry(fn, ex)
+        path = os.path.join(outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        from compile.kernels.increment import LANES
+        manifest.append(f"{logical[fname]}\t{fname}\t{args.rows}\t{LANES}\tf32")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(outdir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels for the Sea reproduction.
+
+The incrementation application (paper Algorithm 1) is elementwise,
+memory-bound work over large image chunks. Kernels here are written with
+``jax.experimental.pallas`` and tiled via ``BlockSpec`` so that, on a real
+TPU, each grid step streams one VMEM-resident block HBM->VMEM, applies the
+VPU op, and streams it back. On this CPU-only image they are lowered with
+``interpret=True`` (real-TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot execute) — correctness is asserted against the pure-jnp
+oracles in :mod:`compile.kernels.ref`.
+"""
+
+from compile.kernels.increment import increment, increment_n, saxpby
+from compile.kernels.blockstats import block_stats
+
+__all__ = ["increment", "increment_n", "saxpby", "block_stats"]

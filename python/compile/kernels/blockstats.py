@@ -1,0 +1,73 @@
+"""Pallas block-statistics kernel (Layer 1).
+
+The end-to-end driver verifies data integrity after n increment rounds
+(checksum: every element of the output must equal input + n). Computing
+``(sum, min, max)`` of a chunk on the PJRT device instead of in Rust keeps
+the verification on the same compute path as the increments.
+
+Implemented as a grid reduction: each grid step reduces one
+``(BLOCK_ROWS, LANES)`` tile into a running partial carried in the output
+ref; Pallas guarantees sequential grid execution on TPU, so the
+accumulate-into-output pattern is the canonical reduction idiom.
+
+Partial final tiles: when ``rows % BLOCK_ROWS != 0`` the last tile is
+padded by Pallas with *undefined* values, so every reduction masks rows
+``>= rows - i*BLOCK_ROWS`` with its neutral element (0 / +inf / -inf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.increment import BLOCK_ROWS, LANES
+
+
+def _stats_kernel(x_ref, o_ref, *, rows, block_rows):
+    i = pl.program_id(0)
+    tile = x_ref[...]
+    # Mask away padded rows of the final partial tile (neutral elements).
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, tile.shape, 0)
+    valid = row_ids < (rows - i * block_rows)
+    tile_sum = jnp.sum(jnp.where(valid, tile, 0.0), dtype=jnp.float32)
+    tile_min = jnp.min(jnp.where(valid, tile, jnp.inf))
+    tile_max = jnp.max(jnp.where(valid, tile, -jnp.inf))
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0] = tile_sum
+        o_ref[1] = tile_min
+        o_ref[2] = tile_max
+
+    @pl.when(i != 0)
+    def _acc():
+        o_ref[0] = o_ref[0] + tile_sum
+        o_ref[1] = jnp.minimum(o_ref[1], tile_min)
+        o_ref[2] = jnp.maximum(o_ref[2], tile_max)
+
+
+def block_stats(x: jax.Array, *, block_rows=None) -> jax.Array:
+    """Return ``[sum, min, max]`` (f32[3]) of a (rows, LANES) chunk.
+
+    ``block_rows`` as in :func:`compile.kernels.increment.increment`:
+    None = TPU-canonical tiles, rows = single-step grid for CPU interpret.
+    """
+    if x.ndim != 2 or x.shape[1] != LANES:
+        raise ValueError(f"block_stats expects (rows, {LANES}), got {x.shape}")
+    from compile.kernels.increment import _block_rows_for
+
+    br = _block_rows_for(x.shape, block_rows)
+    grid = (pl.cdiv(x.shape[0], br),)
+    kernel = functools.partial(_stats_kernel, rows=x.shape[0], block_rows=br)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, LANES), lambda i: (i, 0))],
+        # The 3-element stats vector lives whole in VMEM across grid steps.
+        out_specs=pl.BlockSpec((3,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((3,), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,118 @@
+"""Pallas increment kernels (Layer 1).
+
+Algorithm 1 of the paper increments an image chunk ``n`` times, saving each
+iteration to the file system. The per-iteration compute hot-spot is a
+single elementwise ``chunk + 1`` over a ~617 MiB block; here it is expressed
+as a Pallas kernel tiled into VMEM-sized blocks.
+
+TPU adaptation (DESIGN.md §3): this workload has no matmul, so the MXU is
+idle and the roofline is memory bandwidth — exactly the paper's own framing.
+The ``BlockSpec`` tiling expresses the HBM<->VMEM streaming schedule: a 1-D
+grid walks ``(BLOCK_ROWS, LANES)`` tiles; each tile is far below the ~16 MiB
+VMEM budget so double-buffering can overlap DMA with the VPU add.
+
+All ``pallas_call``s use ``interpret=True`` — mandatory on this CPU-only
+image (see kernels/__init__.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile geometry. The last dim is kept at 256 lanes (a multiple of the 128
+# TPU lane width); 256x256 f32 = 256 KiB per in/out tile, comfortably
+# within VMEM with room for double buffering.
+LANES = 256
+BLOCK_ROWS = 256
+
+
+def _increment_kernel(x_ref, o_ref, *, amount):
+    """One grid step: o = x + amount over a VMEM-resident tile."""
+    o_ref[...] = x_ref[...] + amount
+
+
+def _block_rows_for(shape, block_rows):
+    """Resolve the tile height.
+
+    ``block_rows=None`` selects the TPU-canonical ``BLOCK_ROWS``; on the
+    CPU-interpret path callers pass ``block_rows=rows`` (grid of 1): the
+    interpret-mode grid lowers to an XLA while-loop whose every step
+    copies the *full* output via dynamic_update_slice, so small tiles
+    cost ~26x on CPU while being mandatory on real TPU VMEM
+    (EXPERIMENTS.md §Perf records the measurement).
+    """
+    return min(shape[0], block_rows or BLOCK_ROWS)
+
+
+def _grid_for(shape, block_rows):
+    """1-D grid over row-blocks of a 2-D (rows, LANES) array."""
+    return (pl.cdiv(shape[0], block_rows),)
+
+
+def increment(x: jax.Array, *, amount=1, block_rows=None) -> jax.Array:
+    """Elementwise ``x + amount`` via a tiled Pallas kernel.
+
+    ``x`` must be 2-D with trailing dim ``LANES`` (the L2 model reshapes
+    flat chunks into this canonical layout).
+    """
+    if x.ndim != 2 or x.shape[1] != LANES:
+        raise ValueError(f"increment expects (rows, {LANES}), got {x.shape}")
+    br = _block_rows_for(x.shape, block_rows)
+    kernel = functools.partial(_increment_kernel, amount=amount)
+    return pl.pallas_call(
+        kernel,
+        grid=_grid_for(x.shape, br),
+        in_specs=[pl.BlockSpec((br, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+def increment_n(x: jax.Array, n: int, *, amount=1, block_rows=None) -> jax.Array:
+    """``n`` fused increment steps (compute-graph view of Algorithm 1's
+    inner loop when no intermediate is materialized).
+
+    The paper's app writes every iteration to the file system, so the
+    runtime usually calls the single-step executable n times; this fused
+    variant exists for the in-memory end of the model (and as an XLA
+    fusion sanity check: n static steps must lower to one add).
+    """
+    if n < 0:
+        raise ValueError("n must be >= 0")
+    # n is static at trace time: the adds fold into a single `+ n*amount`,
+    # which is what XLA does anyway — keep the loop explicit so the HLO
+    # cost analysis in tests can verify the fusion actually happened.
+    y = x
+    for _ in range(n):
+        y = increment(y, amount=amount, block_rows=block_rows)
+    return y
+
+
+def _saxpby_kernel(x_ref, y_ref, o_ref, *, a, b):
+    o_ref[...] = a * x_ref[...] + b * y_ref[...]
+
+
+def saxpby(x: jax.Array, y: jax.Array, *, a=1.0, b=1.0, block_rows=None) -> jax.Array:
+    """``a*x + b*y`` tiled kernel — used by the multi-stage example
+    workload (stencil-free blend step) to give the pipeline a second,
+    two-input compute shape."""
+    if x.shape != y.shape:
+        raise ValueError(f"shape mismatch {x.shape} vs {y.shape}")
+    if x.ndim != 2 or x.shape[1] != LANES:
+        raise ValueError(f"saxpby expects (rows, {LANES}), got {x.shape}")
+    br = _block_rows_for(x.shape, block_rows)
+    kernel = functools.partial(_saxpby_kernel, a=a, b=b)
+    spec = pl.BlockSpec((br, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=_grid_for(x.shape, br),
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, y)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the correctness ground truth: pytest (and hypothesis sweeps)
+assert the Pallas kernels match these to within exact / float tolerance.
+They deliberately avoid Pallas, BlockSpec, or any tiling — just jnp.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def increment_ref(x: jax.Array, *, amount=1) -> jax.Array:
+    """Oracle for kernels.increment: elementwise x + amount."""
+    return x + jnp.asarray(amount, dtype=x.dtype)
+
+
+def increment_n_ref(x: jax.Array, n: int, *, amount=1) -> jax.Array:
+    """Oracle for kernels.increment_n: x + n*amount."""
+    return x + jnp.asarray(n, dtype=x.dtype) * jnp.asarray(amount, dtype=x.dtype)
+
+
+def saxpby_ref(x: jax.Array, y: jax.Array, *, a=1.0, b=1.0) -> jax.Array:
+    """Oracle for kernels.saxpby."""
+    return jnp.asarray(a, dtype=x.dtype) * x + jnp.asarray(b, dtype=y.dtype) * y
+
+
+def block_stats_ref(x: jax.Array) -> jax.Array:
+    """Oracle for kernels.block_stats: f32[3] = [sum, min, max]."""
+    return jnp.stack(
+        [
+            jnp.sum(x, dtype=jnp.float32),
+            jnp.min(x).astype(jnp.float32),
+            jnp.max(x).astype(jnp.float32),
+        ]
+    )

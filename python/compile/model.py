@@ -1,0 +1,70 @@
+"""Layer-2 JAX model: the incrementation application's compute graph.
+
+The paper's synthetic application (Algorithm 1) reads an image chunk,
+increments it n times, and saves every iteration. The Rust coordinator
+drives the file-system side; the per-iteration compute is this module's
+``step`` function (one increment + integrity stats), lowered ONCE at build
+time to HLO text and executed from Rust via PJRT for every chunk-iteration.
+
+Exported entry points (see aot.py for the artifact list):
+
+- ``step(x)``            -> (x+1, stats)    the request-path hot function
+- ``step_n(x)``          -> (x+n, stats)    fused n-iteration variant
+  (in-memory end of the model; n baked at lowering time)
+- ``blend(x, y)``        -> 0.5x + 0.5y     multi-stage pipeline's merge op
+- ``stats(x)``           -> f32[3]          standalone integrity check
+
+Chunks are canonically shaped ``(rows, LANES)`` f32. The Rust side memmaps
+flat chunk bytes and reinterprets them with this layout; ``CHUNK_ROWS``
+below is the default lowering shape (examples override via aot.py flags).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import block_stats, increment, increment_n, saxpby
+from compile.kernels.increment import LANES
+
+# Default lowering geometry: 4096 x 256 f32 = 4 MiB per chunk. This is the
+# real-bytes end-to-end default; the simulator models paper-scale 617 MiB
+# blocks analytically, while real runs use chunks this size (DESIGN.md §2).
+CHUNK_ROWS = 4096
+
+
+def step(x: jax.Array, *, block_rows=None):
+    """One Algorithm-1 iteration: increment the chunk, return stats too.
+
+    Returning ``(sum, min, max)`` with the chunk keeps integrity checking
+    on-device and costs one extra pass over a VMEM-resident tile stream —
+    XLA fuses it with the add under jit.
+
+    ``block_rows`` selects the Pallas tile height at lowering time:
+    ``None`` keeps the TPU-canonical 256-row tiles; the CPU AOT path
+    lowers with ``block_rows=rows`` (see kernels/increment.py).
+    """
+    y = increment(x, block_rows=block_rows)
+    return y, block_stats(y, block_rows=block_rows)
+
+
+def step_n(x: jax.Array, *, n: int, block_rows=None):
+    """n fused iterations (no intermediate materialization)."""
+    y = increment_n(x, n, block_rows=block_rows)
+    return y, block_stats(y, block_rows=block_rows)
+
+
+def blend(x: jax.Array, y: jax.Array, *, block_rows=None):
+    """Merge step of the multi-stage example workload: mean of two chunks."""
+    z = saxpby(x, y, a=0.5, b=0.5, block_rows=block_rows)
+    return z, block_stats(z, block_rows=block_rows)
+
+
+def stats(x: jax.Array, *, block_rows=None):
+    """Standalone integrity statistics."""
+    return (block_stats(x, block_rows=block_rows),)
+
+
+def chunk_spec(rows: int = CHUNK_ROWS) -> jax.ShapeDtypeStruct:
+    """The canonical chunk ShapeDtypeStruct used for lowering."""
+    return jax.ShapeDtypeStruct((rows, LANES), jnp.float32)

@@ -1,0 +1,132 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Every Pallas kernel is checked against its pure-jnp oracle in
+compile.kernels.ref, exactly (integer-valued data) or to float tolerance,
+across shapes, paddings, and value regimes. Hypothesis sweeps shapes and
+dtypes in test_kernel_properties.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import block_stats, increment, increment_n, saxpby
+from compile.kernels import ref
+from compile.kernels.increment import BLOCK_ROWS, LANES
+
+
+def chunk(rows, seed=0, dtype=jnp.float32, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.standard_normal((rows, LANES)).astype(np.float32) * scale, dtype=dtype
+    )
+
+
+# --- increment -----------------------------------------------------------
+
+@pytest.mark.parametrize("rows", [BLOCK_ROWS, 2 * BLOCK_ROWS, 8 * BLOCK_ROWS])
+def test_increment_matches_ref(rows):
+    x = chunk(rows)
+    np.testing.assert_array_equal(increment(x), ref.increment_ref(x))
+
+
+def test_increment_exact_on_integral_values():
+    # f32 holds integers exactly up to 2**24: Algorithm 1's uint16-style
+    # data stays integral through every iteration.
+    x = jnp.arange(BLOCK_ROWS * LANES, dtype=jnp.float32).reshape(BLOCK_ROWS, LANES)
+    y = increment(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x) + 1.0)
+
+
+def test_increment_amount():
+    x = chunk(BLOCK_ROWS, seed=1)
+    np.testing.assert_array_equal(
+        increment(x, amount=7), ref.increment_ref(x, amount=7)
+    )
+
+
+def test_increment_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        increment(jnp.zeros((4, 4), jnp.float32))
+    with pytest.raises(ValueError):
+        increment(jnp.zeros((LANES,), jnp.float32))
+
+
+@pytest.mark.parametrize("rows", [1, 3, BLOCK_ROWS - 1, BLOCK_ROWS + 1])
+def test_increment_ragged_rows(rows):
+    # rows not divisible by BLOCK_ROWS exercise the padded final tile.
+    x = chunk(rows, seed=2)
+    np.testing.assert_array_equal(increment(x), ref.increment_ref(x))
+
+
+# --- increment_n ---------------------------------------------------------
+
+@pytest.mark.parametrize("n", [0, 1, 2, 5, 10])
+def test_increment_n_matches_ref(n):
+    x = chunk(BLOCK_ROWS, seed=3)
+    np.testing.assert_allclose(
+        increment_n(x, n), ref.increment_n_ref(x, n), rtol=0, atol=1e-5
+    )
+
+
+def test_increment_n_integral_exact():
+    x = jnp.full((BLOCK_ROWS, LANES), 5.0, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(increment_n(x, 10)), 15.0)
+
+
+def test_increment_n_negative_rejected():
+    with pytest.raises(ValueError):
+        increment_n(chunk(BLOCK_ROWS), -1)
+
+
+# --- saxpby --------------------------------------------------------------
+
+@pytest.mark.parametrize("a,b", [(1.0, 1.0), (0.5, 0.5), (2.0, -1.0)])
+def test_saxpby_matches_ref(a, b):
+    x, y = chunk(2 * BLOCK_ROWS, seed=4), chunk(2 * BLOCK_ROWS, seed=5)
+    np.testing.assert_allclose(
+        saxpby(x, y, a=a, b=b), ref.saxpby_ref(x, y, a=a, b=b), rtol=1e-6
+    )
+
+
+def test_saxpby_shape_mismatch_rejected():
+    with pytest.raises(ValueError):
+        saxpby(chunk(BLOCK_ROWS), chunk(2 * BLOCK_ROWS))
+
+
+# --- block_stats ---------------------------------------------------------
+
+@pytest.mark.parametrize("rows", [BLOCK_ROWS, 3 * BLOCK_ROWS, 8 * BLOCK_ROWS])
+def test_block_stats_matches_ref(rows):
+    x = chunk(rows, seed=6, scale=10.0)
+    got, want = block_stats(x), ref.block_stats_ref(x)
+    # sum over ~2M elements: allow accumulation-order tolerance
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-5)
+    np.testing.assert_array_equal(got[1:], want[1:])
+
+
+def test_block_stats_constant_field():
+    x = jnp.full((2 * BLOCK_ROWS, LANES), 3.0, jnp.float32)
+    s = np.asarray(block_stats(x))
+    assert s[0] == pytest.approx(3.0 * x.size)
+    assert s[1] == 3.0 and s[2] == 3.0
+
+
+def test_block_stats_detects_single_outlier():
+    # the e2e integrity check relies on min/max catching any corrupt value
+    x = np.zeros((2 * BLOCK_ROWS, LANES), np.float32)
+    x[BLOCK_ROWS + 17, 31] = -42.0
+    s = np.asarray(block_stats(jnp.asarray(x)))
+    assert s[1] == -42.0 and s[2] == 0.0
+
+
+# --- end-to-end kernel contract used by the Rust driver -------------------
+
+def test_algorithm1_invariant_via_kernels():
+    """After n single-step increments, stats must certify x0 + n exactly."""
+    x = jnp.zeros((BLOCK_ROWS, LANES), jnp.float32)
+    n = 7
+    for _ in range(n):
+        x = increment(x)
+    s = np.asarray(block_stats(x))
+    assert s[1] == n and s[2] == n and s[0] == pytest.approx(n * x.size)

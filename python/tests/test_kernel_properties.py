@@ -1,0 +1,68 @@
+"""Hypothesis property sweeps over the Pallas kernels (shapes / values).
+
+The guide's L1 requirement: hypothesis sweeps the kernel's shapes/dtypes and
+assert_allclose against ref.py. Shapes are bounded to keep interpret-mode
+runtime reasonable; the deadline is disabled because interpret=True tracing
+dominates wall time on first example.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import block_stats, increment, increment_n, saxpby
+from compile.kernels import ref
+from compile.kernels.increment import LANES
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+rows_st = st.integers(min_value=1, max_value=640)
+seed_st = st.integers(min_value=0, max_value=2**31 - 1)
+amount_st = st.integers(min_value=-8, max_value=8)
+
+
+def mk(rows, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((rows, LANES)).astype(np.float32) * scale)
+
+
+@given(rows=rows_st, seed=seed_st, amount=amount_st)
+@settings(**SETTINGS)
+def test_increment_property(rows, seed, amount):
+    x = mk(rows, seed)
+    np.testing.assert_array_equal(
+        increment(x, amount=amount), ref.increment_ref(x, amount=amount)
+    )
+
+
+@given(rows=rows_st, seed=seed_st, n=st.integers(min_value=0, max_value=6))
+@settings(**SETTINGS)
+def test_increment_n_property(rows, seed, n):
+    x = mk(rows, seed)
+    np.testing.assert_allclose(
+        increment_n(x, n), ref.increment_n_ref(x, n), rtol=0, atol=1e-5
+    )
+
+
+@given(
+    rows=rows_st,
+    seed=seed_st,
+    a=st.floats(min_value=-4, max_value=4, allow_nan=False),
+    b=st.floats(min_value=-4, max_value=4, allow_nan=False),
+)
+@settings(**SETTINGS)
+def test_saxpby_property(rows, seed, a, b):
+    x, y = mk(rows, seed), mk(rows, seed + 1)
+    np.testing.assert_allclose(
+        saxpby(x, y, a=a, b=b), ref.saxpby_ref(x, y, a=a, b=b),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@given(rows=rows_st, seed=seed_st, scale=st.sampled_from([1.0, 100.0, 1e4]))
+@settings(**SETTINGS)
+def test_block_stats_property(rows, seed, scale):
+    x = mk(rows, seed, scale)
+    got, want = np.asarray(block_stats(x)), np.asarray(ref.block_stats_ref(x))
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-4, atol=1e-3)
+    np.testing.assert_array_equal(got[1:], want[1:])

@@ -1,0 +1,62 @@
+//! Ablations of Sea's design choices (DESIGN.md §5 extras):
+//!
+//! * placement policy — fastest-with-space (the paper) vs Lustre-always;
+//! * eviction — in-memory rules (flush+evict finals) vs keep-everything
+//!   vs flush-all;
+//! * the `p·F` reservation — paper config vs a 64-proc reservation that
+//!   disqualifies tmpfs (the §3.1.2 "minimum space" rule's cost).
+
+mod common;
+
+use sea::coordinator::{run_experiment, ExperimentCfg, Mode};
+use sea::bench::Harness;
+use sea::placement::RuleSet;
+use sea::workload::IncrementationSpec;
+
+fn run(mode: Mode, blocks: usize, procs: usize) -> f64 {
+    let mut spec = common::paper_spec();
+    spec.procs_per_node = procs;
+    let mut w = IncrementationSpec::paper_default();
+    w.blocks = blocks;
+    w.iterations = 5;
+    run_experiment(&ExperimentCfg { spec, workload: w, mode, seed: common::SEED })
+        .expect("sim")
+        .makespan
+}
+
+fn main() {
+    let mut h = Harness::new("ablate").with_reps(0, 1);
+    let blocks = (1000.0 * common::bench_scale().blocks).round().max(1.0) as usize;
+
+    // placement policy ablation
+    let lustre = run(Mode::Lustre, blocks, 6);
+    let sea = run(Mode::SeaInMemory, blocks, 6);
+    h.record("policy_lustre_always", vec![lustre], "baseline placement");
+    h.record("policy_fastest_with_space", vec![sea], format!("{:.2}x", lustre / sea));
+
+    // eviction ablation: keep-everything (no rules) vs in-memory vs all
+    let keep = run(Mode::SeaCustom(RuleSet::default()), blocks, 6);
+    let flush_all = run(Mode::SeaCopyAll, blocks, 6);
+    h.record("evict_in_memory_rules", vec![sea], "flush+evict finals");
+    h.record("evict_keep_everything", vec![keep], format!("{:.2}x vs in-mem", keep / sea));
+    h.record("evict_flush_all", vec![flush_all], format!("{:.2}x vs in-mem", flush_all / sea));
+
+    // reservation ablation: heavy p·F reservation starves tmpfs
+    let sea_64 = run(Mode::SeaInMemory, blocks, 64);
+    let lustre_64 = run(Mode::Lustre, blocks, 64);
+    h.record("reserve_p6_speedup", vec![lustre / sea], "p*F = 3.6 GiB/node");
+    h.record(
+        "reserve_p64_speedup",
+        vec![lustre_64 / sea_64],
+        "p*F = 38.6 GiB/node (tmpfs mostly reserved)",
+    );
+
+    println!(
+        "\npolicy {:.2}x | keep {:.2}x | flush-all {:.2}x | p=64 speedup {:.2}x",
+        lustre / sea,
+        keep / sea,
+        flush_all / sea,
+        lustre_64 / sea_64
+    );
+    h.finish();
+}

@@ -1,0 +1,29 @@
+//! Fig 2a: Lustre vs Sea in-memory, varying the node count (10 iters).
+
+mod common;
+
+use sea::bench::Harness;
+use sea::report;
+
+fn main() {
+    let scale = common::bench_scale();
+    let mut h = Harness::new("fig2a").with_reps(0, 1);
+    let mut fig = None;
+    h.case("sweep_nodes_1..8", || {
+        let f = report::fig2a(&common::paper_spec(), scale, &[1, 2, 3, 4, 5, 6, 7, 8], common::SEED)
+            .expect("fig2a");
+        fig = Some(f);
+    });
+    let fig = fig.expect("ran");
+    for p in &fig.points {
+        h.record(
+            &format!("nodes_{}", p.x as usize),
+            vec![p.lustre, p.sea],
+            format!("lustre {:.1}s sea {:.1}s speedup {:.2}x", p.lustre, p.sea, p.speedup()),
+        );
+    }
+    fig.write_to(std::path::Path::new("results")).expect("write fig2a");
+    println!("{}", fig.to_ascii());
+    println!("fig2a max speedup {:.2}x (paper: ~2.4x at 5 nodes)", fig.max_speedup());
+    h.finish();
+}

@@ -1,0 +1,30 @@
+//! Fig 2b: Lustre vs Sea in-memory, varying local disks (5 iters).
+//! Paper shape: Sea loses at 1 disk, wins ~2x by 6 disks.
+
+mod common;
+
+use sea::bench::Harness;
+use sea::report;
+
+fn main() {
+    let scale = common::bench_scale();
+    let mut h = Harness::new("fig2b").with_reps(0, 1);
+    let mut fig = None;
+    h.case("sweep_disks_1..6", || {
+        let f = report::fig2b(&common::paper_spec(), scale, &[1, 2, 3, 4, 5, 6], common::SEED)
+            .expect("fig2b");
+        fig = Some(f);
+    });
+    let fig = fig.expect("ran");
+    for p in &fig.points {
+        h.record(
+            &format!("disks_{}", p.x as usize),
+            vec![p.lustre, p.sea],
+            format!("lustre {:.1}s sea {:.1}s speedup {:.2}x", p.lustre, p.sea, p.speedup()),
+        );
+    }
+    fig.write_to(std::path::Path::new("results")).expect("write fig2b");
+    println!("{}", fig.to_ascii());
+    println!("fig2b max speedup {:.2}x (paper: ~2x at 6 disks)", fig.max_speedup());
+    h.finish();
+}

@@ -1,0 +1,30 @@
+//! Fig 2c: Lustre vs Sea in-memory, varying iterations (D_m volume).
+//! Paper shape: parity at 1 iteration, ~2.6x at 10.
+
+mod common;
+
+use sea::bench::Harness;
+use sea::report;
+
+fn main() {
+    let scale = common::bench_scale();
+    let mut h = Harness::new("fig2c").with_reps(0, 1);
+    let mut fig = None;
+    h.case("sweep_iters_1-15", || {
+        let f = report::fig2c(&common::paper_spec(), scale, &[1, 5, 10, 15], common::SEED)
+            .expect("fig2c");
+        fig = Some(f);
+    });
+    let fig = fig.expect("ran");
+    for p in &fig.points {
+        h.record(
+            &format!("iters_{}", p.x as usize),
+            vec![p.lustre, p.sea],
+            format!("lustre {:.1}s sea {:.1}s speedup {:.2}x", p.lustre, p.sea, p.speedup()),
+        );
+    }
+    fig.write_to(std::path::Path::new("results")).expect("write fig2c");
+    println!("{}", fig.to_ascii());
+    println!("fig2c max speedup {:.2}x (paper: ~2.6x at 10 iterations)", fig.max_speedup());
+    h.finish();
+}

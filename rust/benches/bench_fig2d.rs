@@ -1,0 +1,55 @@
+//! Fig 2d: Lustre vs Sea in-memory, varying parallel processes (5 iters).
+//! Paper shape: ~3x at 32 procs; Lustre *exceeds* its bandwidth-model
+//! bounds above ~30 procs/node as the MDS saturates.
+
+mod common;
+
+use sea::bench::Harness;
+use sea::model::{lustre_bounds, ModelParams};
+use sea::report;
+use sea::workload::IncrementationSpec;
+
+fn main() {
+    let scale = common::bench_scale();
+    let mut h = Harness::new("fig2d").with_reps(0, 1);
+    let mut fig = None;
+    h.case("sweep_procs_1..64", || {
+        let f = report::fig2d(
+            &common::paper_spec(),
+            scale,
+            &[1, 2, 4, 8, 16, 32, 64],
+            common::SEED,
+        )
+        .expect("fig2d");
+        fig = Some(f);
+    });
+    let fig = fig.expect("ran");
+    for p in &fig.points {
+        h.record(
+            &format!("procs_{}", p.x as usize),
+            vec![p.lustre, p.sea],
+            format!("lustre {:.1}s sea {:.1}s speedup {:.2}x", p.lustre, p.sea, p.speedup()),
+        );
+    }
+    fig.write_to(std::path::Path::new("results")).expect("write fig2d");
+    println!("{}", fig.to_ascii());
+    println!("fig2d max speedup {:.2}x (paper: ~3x at 32 procs)", fig.max_speedup());
+
+    // the paper's Fig 2d observation: at high process counts Lustre's
+    // measured makespan escapes the bandwidth-only model's upper bound
+    let mut w = IncrementationSpec::paper_default();
+    w.iterations = 5;
+    w.blocks = ((w.blocks as f64 * scale.blocks).round() as usize).max(1);
+    if let Some(p) = fig.points.iter().find(|p| p.x as usize == 64) {
+        let mut spec = common::paper_spec();
+        spec.procs_per_node = 64;
+        let bounds = lustre_bounds(&ModelParams::from_spec(&spec, w.file_size), &w.volume());
+        println!(
+            "procs=64: lustre measured {:.1}s vs model upper bound {:.1}s (escape ratio {:.2})",
+            p.lustre,
+            bounds.upper,
+            p.lustre / bounds.upper
+        );
+    }
+    h.finish();
+}

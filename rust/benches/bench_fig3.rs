@@ -1,0 +1,32 @@
+//! Fig 3: the three modes at the fixed conditions (5 nodes, 6 procs,
+//! 6 disks, 5 iterations). Paper: flush-all is 3.5x slower than
+//! in-memory and 1.3x slower than plain Lustre.
+
+mod common;
+
+use sea::bench::Harness;
+use sea::report;
+
+fn main() {
+    let scale = common::bench_scale();
+    let mut h = Harness::new("fig3").with_reps(0, 1);
+    let mut rows = None;
+    h.case("three_modes", || {
+        rows = Some(report::fig3(&common::paper_spec(), scale, common::SEED).expect("fig3"));
+    });
+    let rows = rows.expect("ran");
+    for (name, r) in &rows {
+        h.record(
+            name,
+            vec![r.makespan],
+            format!("app {:.1}s total {:.1}s", r.app_done, r.makespan),
+        );
+    }
+    let get = |m: &str| rows.iter().find(|(n, _)| n == m).map(|(_, r)| r.makespan).unwrap();
+    println!(
+        "flush-all/in-memory = {:.2}x (paper 3.5x) ; flush-all/lustre = {:.2}x (paper 1.3x)",
+        get("sea-flush-all") / get("sea-in-memory"),
+        get("sea-flush-all") / get("lustre"),
+    );
+    h.finish();
+}

@@ -1,0 +1,36 @@
+//! Analytic-model evaluation throughput (Eqs 1–11): the model is called
+//! at every figure sweep point; it must be effectively free.
+
+mod common;
+
+use sea::bench::Harness;
+use sea::model::{lustre_bounds, sea_bounds, ModelParams};
+use sea::util::MIB;
+use sea::workload::IncrementationSpec;
+
+fn main() {
+    let mut h = Harness::new("model").with_reps(1, 5);
+    let spec = common::paper_spec();
+    let params = ModelParams::from_spec(&spec, 617 * MIB);
+
+    h.case("bounds_100k_evals", || {
+        let mut acc = 0.0;
+        for i in 0..100_000u64 {
+            let w = IncrementationSpec {
+                blocks: 100 + (i % 900) as usize,
+                file_size: 617 * MIB,
+                iterations: 1 + (i % 15) as usize,
+                compute_per_iter: 0.0,
+                read_back: true,
+            };
+            let v = w.volume();
+            let lb = lustre_bounds(&params, &v);
+            let sb = sea_bounds(&params, &v);
+            acc += lb.upper + sb.lower;
+        }
+        assert!(acc.is_finite());
+    });
+    let results = h.finish();
+    let per = results[0].summary().mean / 100_000.0 * 1e9;
+    println!("per bounds-pair evaluation: {per:.1} ns");
+}

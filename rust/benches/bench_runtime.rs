@@ -1,0 +1,58 @@
+//! PJRT hot path: per-call latency and effective bandwidth of the AOT
+//! compiled `step` / fused `step_n` / `stats` executables (the L3→L2→L1
+//! request path of the end-to-end driver).
+
+mod common;
+
+use sea::bench::Harness;
+use sea::runtime::Engine;
+use sea::util::MIB;
+
+fn main() {
+    let engine = match Engine::load("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("bench_runtime: artifacts not built ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let elems = engine.chunk_elems();
+    let bytes = (elems * 4) as f64;
+    let mut h = Harness::new("runtime").with_reps(2, 10);
+
+    let mut buf = vec![1f32; elems];
+    h.case("step_4mib_chunk", || {
+        engine.step(&mut buf).expect("step");
+    });
+    let mut buf2 = vec![1f32; elems];
+    h.case("step_fused_n", || {
+        engine.step_fused(&mut buf2).expect("fused");
+    });
+    let buf3 = vec![1f32; elems];
+    h.case("stats_only", || {
+        engine.stats(&buf3).expect("stats");
+    });
+    let mut a = vec![1f32; elems];
+    let b = vec![2f32; elems];
+    h.case("blend", || {
+        engine.blend(&mut a, &b).expect("blend");
+    });
+
+    let results = h.finish();
+    for r in &results {
+        let s = r.summary();
+        // step moves the chunk in + out ≈ 2x bytes per call
+        println!(
+            "{:<28} {:>8.1} MiB/s effective",
+            r.name,
+            2.0 * bytes / MIB as f64 / s.mean
+        );
+    }
+    let t = engine.timings();
+    println!(
+        "\ncumulative: {} calls, mean {:.3} ms, payload bandwidth {:.1} MiB/s",
+        t.calls,
+        t.mean().as_secs_f64() * 1e3,
+        t.bandwidth() / MIB as f64
+    );
+}

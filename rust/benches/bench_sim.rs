@@ -1,0 +1,51 @@
+//! Simulator engine throughput (the perf-pass subject for L3): completed
+//! flows per host-second and rate-recomputations per host-second on the
+//! paper-scale fig2c point (5 nodes, 6 procs, 10 iterations).
+
+mod common;
+
+use sea::bench::Harness;
+use sea::coordinator::{run_experiment, ExperimentCfg, Mode};
+use sea::workload::IncrementationSpec;
+
+fn main() {
+    let mut h = Harness::new("sim").with_reps(1, 3);
+    for (name, blocks) in [("blocks_100", 100), ("blocks_250", 250)] {
+        let mut flows = 0u64;
+        let mut recomputes = 0u64;
+        h.case(name, || {
+            let mut w = IncrementationSpec::paper_default();
+            w.blocks = blocks;
+            let r = run_experiment(&ExperimentCfg {
+                spec: common::paper_spec(),
+                workload: w,
+                mode: Mode::SeaInMemory,
+                seed: common::SEED,
+            })
+            .expect("sim");
+            flows = r.flows;
+            recomputes = r.recomputes;
+        });
+        let last = h
+            .case(&format!("{name}_lustre"), || {
+                let mut w = IncrementationSpec::paper_default();
+                w.blocks = blocks;
+                run_experiment(&ExperimentCfg {
+                    spec: common::paper_spec(),
+                    workload: w,
+                    mode: Mode::Lustre,
+                    seed: common::SEED,
+                })
+                .expect("sim");
+            })
+            .summary()
+            .mean;
+        println!(
+            "{name}: {flows} flows, {recomputes} reallocations; lustre-mode host time {last:.2}s"
+        );
+    }
+    let results = h.finish();
+    for r in &results {
+        println!("{:<24} mean {:.3}s", r.name, r.summary().mean);
+    }
+}

@@ -1,0 +1,110 @@
+//! Table 2: per-tier storage bandwidths.
+//!
+//! Two parts: (a) the simulator calibration echo — single-stream
+//! simulated dd per tier must land on the Table 2 numbers (a calibration
+//! regression test); (b) a real dd-style micro-benchmark of this
+//! machine's tmpfs and disk (informational — absolute numbers are
+//! host-specific).
+
+mod common;
+
+use sea::bench::Harness;
+use sea::sim::engine::{ProcId, Process, Sim, Step};
+use sea::sim::stack::Stack;
+use sea::sim::topology::Location;
+use sea::util::{MIB};
+use sea::vfs::{RealFs, Vfs};
+
+/// Simulated single-stream dd: returns seconds to move `bytes`.
+fn sim_dd(write: bool, loc: Location, bytes: u64) -> f64 {
+    struct Dd {
+        loc: Location,
+        bytes: u64,
+        write: bool,
+        started: bool,
+        done: std::rc::Rc<std::cell::Cell<f64>>,
+        stack: Stack,
+    }
+    impl Process for Dd {
+        fn resume(&mut self, sim: &mut Sim, pid: ProcId) -> Step {
+            if !self.started {
+                self.started = true;
+                if self.write {
+                    self.stack.write(sim, 0, 1, self.bytes, self.loc, pid).expect("write");
+                } else {
+                    self.stack.register_file(1, self.bytes, self.loc);
+                    self.stack.read(sim, 0, 1, pid).expect("read");
+                }
+                Step::Waiting
+            } else {
+                self.done.set(sim.now());
+                Step::Done
+            }
+        }
+    }
+    let mut spec = common::paper_spec();
+    // avoid page-cache absorption so the device speed is visible
+    spec.dirty_ratio = 0.0;
+    let mut sim = Sim::new();
+    let stack = Stack::new(&mut sim, &spec);
+    let done = std::rc::Rc::new(std::cell::Cell::new(-1.0));
+    sim.spawn(Box::new(Dd {
+        loc,
+        bytes,
+        write,
+        started: false,
+        done: done.clone(),
+        stack: stack.clone(),
+    }));
+    sim.run(1e9).expect("sim dd");
+    done.get()
+}
+
+fn main() {
+    let mut h = Harness::new("table2").with_reps(0, 1);
+    let size = 4096 * MIB; // 4 GiB simulated stream
+
+    println!("simulated single-stream dd (calibration echo of Table 2):");
+    let cases = [
+        ("tmpfs_write", true, Location::Tmpfs { node: 0 }, 2560.0),
+        ("tmpfs_read", false, Location::Tmpfs { node: 0 }, 6676.0),
+        ("disk_write", true, Location::Disk { node: 0, disk: 0 }, 426.0),
+        ("disk_read", false, Location::Disk { node: 0, disk: 0 }, 501.7),
+        ("lustre_write", true, Location::Lustre, 121.0),
+        ("lustre_read", false, Location::Lustre, 1381.14),
+    ];
+    for (name, write, loc, table2_mibs) in cases {
+        let secs = sim_dd(write, loc, size);
+        let mibs = size as f64 / MIB as f64 / secs;
+        println!(
+            "  {name:<14} {mibs:>9.1} MiB/s  (Table 2: {table2_mibs:>7.1} MiB/s, ratio {:.3})",
+            mibs / table2_mibs
+        );
+        // calibration must match within 10% (MDS latency perturbs lustre)
+        assert!(
+            (mibs / table2_mibs - 1.0).abs() < 0.10,
+            "{name}: simulated {mibs:.1} vs Table 2 {table2_mibs:.1}"
+        );
+        h.record(name, vec![secs], format!("{mibs:.1} MiB/s vs Table2 {table2_mibs} MiB/s"));
+    }
+
+    println!("\nreal dd-style on this host (informational):");
+    for (name, dir) in [("host_shm", "/dev/shm/sea_t2"), ("host_tmp", "/tmp/sea_t2")] {
+        let fs_ = RealFs::new(dir).expect("mk");
+        let payload = vec![0xA5u8; (256 * MIB) as usize];
+        let t0 = std::time::Instant::now();
+        fs_.write(std::path::Path::new("dd.dat"), &payload).expect("write");
+        let w = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let _ = fs_.read(std::path::Path::new("dd.dat")).expect("read");
+        let r = t0.elapsed().as_secs_f64();
+        println!(
+            "  {name:<14} write {:>8.1} MiB/s  cached read {:>8.1} MiB/s",
+            256.0 / w,
+            256.0 / r
+        );
+        h.record(name, vec![w, r], format!("w {:.0} / r {:.0} MiB/s", 256.0 / w, 256.0 / r));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+    h.finish();
+}

@@ -1,0 +1,87 @@
+//! Interception overhead: the paper claims glibc interception cost is
+//! "minimal, and negligible compared to system call interception and
+//! file systems such as FUSE". Measure the library-level analogue —
+//! SeaFs path translation + registry vs a plain RealFs — per operation.
+
+mod common;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use sea::bench::Harness;
+use sea::placement::RuleSet;
+use sea::util::{KIB, MIB};
+use sea::vfs::{RealFs, SeaFs, SeaFsConfig, Vfs};
+
+fn main() {
+    let work = std::env::temp_dir().join("sea_bench_vfs");
+    let _ = std::fs::remove_dir_all(&work);
+    let mut h = Harness::new("vfs").with_reps(1, 5);
+
+    let plain = RealFs::new(work.join("plain")).expect("plain");
+    let pfs = Arc::new(RealFs::new(work.join("pfs")).expect("pfs"));
+    let sea = SeaFs::mount(SeaFsConfig {
+        mountpoint: PathBuf::from("/sea"),
+        devices: vec![(work.join("dev0"), 0, 4096 * MIB)],
+        pfs,
+        max_file_size: MIB,
+        parallel_procs: 4,
+        rules: RuleSet::default(),
+        seed: 1,
+    })
+    .expect("mount");
+
+    const N: usize = 200;
+    let payload4k = vec![7u8; 4 * KIB as usize];
+    let payload1m = vec![7u8; MIB as usize];
+
+    h.case("realfs_write_4k_x200", || {
+        for i in 0..N {
+            plain.write(Path::new(&format!("w/{i}.dat")), &payload4k).unwrap();
+        }
+    });
+    h.case("seafs_write_4k_x200", || {
+        for i in 0..N {
+            sea.write(Path::new(&format!("/sea/w/{i}.dat")), &payload4k).unwrap();
+        }
+    });
+    h.case("realfs_write_1m_x200", || {
+        for i in 0..N {
+            plain.write(Path::new(&format!("m/{i}.dat")), &payload1m).unwrap();
+        }
+    });
+    h.case("seafs_write_1m_x200", || {
+        for i in 0..N {
+            sea.write(Path::new(&format!("/sea/m/{i}.dat")), &payload1m).unwrap();
+        }
+    });
+    h.case("realfs_read_1m_x200", || {
+        for i in 0..N {
+            let _ = plain.read(Path::new(&format!("m/{i}.dat"))).unwrap();
+        }
+    });
+    h.case("seafs_read_1m_x200", || {
+        for i in 0..N {
+            let _ = sea.read(Path::new(&format!("/sea/m/{i}.dat"))).unwrap();
+        }
+    });
+    h.case("seafs_stat_x200", || {
+        for i in 0..N {
+            let _ = sea.size(Path::new(&format!("/sea/m/{i}.dat"))).unwrap();
+        }
+    });
+
+    let results = h.finish();
+    // derive the per-op interception overhead from the 4k pair
+    let mean = |name: &str| {
+        results
+            .iter()
+            .find(|r| r.name.ends_with(name))
+            .map(|r| r.summary().mean)
+            .unwrap_or(f64::NAN)
+    };
+    let overhead =
+        (mean("seafs_write_4k_x200") - mean("realfs_write_4k_x200")) / N as f64 * 1e6;
+    println!("\nper-write interception overhead (4k): {overhead:.2} µs");
+    let _ = std::fs::remove_dir_all(&work);
+}

@@ -1,0 +1,30 @@
+//! Shared helpers for the figure benches.
+//!
+//! Each `bench_fig*` target regenerates one paper artifact: it *times*
+//! the regeneration (host cost) and *records* the simulated makespans
+//! (the paper's measured quantity) plus the analytic bounds, writing
+//! `results/<fig>.csv` / `.txt` like `sea experiment` does.
+//!
+//! `SEA_BENCH_SCALE` (default 0.1) scales the block count; 1.0 is the
+//! paper's full 1000 x 617 MiB dataset.
+
+use sea::report::Scale;
+use sea::sim::spec::ClusterSpec;
+
+/// Scale from the environment (default quick).
+pub fn bench_scale() -> Scale {
+    Scale {
+        blocks: std::env::var("SEA_BENCH_SCALE")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0.1),
+    }
+}
+
+/// The paper cluster (always the figure baseline).
+pub fn paper_spec() -> ClusterSpec {
+    ClusterSpec::paper_default()
+}
+
+/// Deterministic bench seed.
+pub const SEED: u64 = 42;

@@ -1,0 +1,306 @@
+//! `LD_PRELOAD` glibc interposer — the paper's actual mechanism (§3.1.2),
+//! as a `cdylib` loadable into *unmodified* dynamically-linked binaries.
+//!
+//! The paper's Sea wraps "every glibc function accepting a file path" and
+//! rewrites paths under the Sea mountpoint to the best storage device.
+//! This shim demonstrates that mechanism end-to-end on real processes:
+//! every wrapped call rewrites `SEA_MOUNT`-prefixed paths to
+//! `SEA_TARGET`-prefixed ones and forwards to the real glibc symbol via
+//! `dlsym(RTLD_NEXT)`.
+//!
+//! Policy (device selection, flush/evict rules) lives in the `sea`
+//! library; keeping the shim to pure prefix translation keeps it tiny,
+//! dependency-free and safe to inject into arbitrary binaries — the demo
+//! (`examples/interpose_demo.rs`) points `SEA_TARGET` at a directory the
+//! library manages.
+//!
+//! Environment:
+//! * `SEA_MOUNT`  — logical mountpoint prefix (default `/sea`).
+//! * `SEA_TARGET` — directory that backs the mountpoint.
+//!
+//! Wrapped symbols: `open`, `open64`, `openat`, `creat`, `fopen`,
+//! `fopen64`, `stat`, `lstat`, `access`, `unlink`, `mkdir`, `rename`
+//! (both arguments), `opendir`, `remove`, `truncate`, `chdir`.
+//! Statically-linked binaries and direct syscalls bypass the shim —
+//! the same documented limitation as the paper's library.
+
+use std::ffi::{CStr, CString, OsStr};
+use std::os::raw::{c_char, c_int, c_void};
+use std::os::unix::ffi::OsStrExt;
+
+// --- env + translation ------------------------------------------------------
+
+fn env_or(name: &str, default: &str) -> Vec<u8> {
+    std::env::var_os(name)
+        .map(|v| v.as_bytes().to_vec())
+        .unwrap_or_else(|| default.as_bytes().to_vec())
+}
+
+/// Translate `path` if it lies under `SEA_MOUNT`; returns the rewritten
+/// C string (kept alive by the caller's scope).
+fn translate(path: &CStr) -> Option<CString> {
+    let mount = env_or("SEA_MOUNT", "/sea");
+    let target = env_or("SEA_TARGET", "/tmp/sea_target");
+    let bytes = path.to_bytes();
+    if !bytes.starts_with(&mount) {
+        return None;
+    }
+    // exact prefix or prefix + '/'
+    let rest = &bytes[mount.len()..];
+    if !(rest.is_empty() || rest[0] == b'/') {
+        return None;
+    }
+    let mut out = target;
+    out.extend_from_slice(rest);
+    CString::new(out).ok()
+}
+
+macro_rules! real {
+    ($name:literal, $ty:ty) => {{
+        let sym = unsafe { libc::dlsym(libc::RTLD_NEXT, $name.as_ptr() as *const c_char) };
+        if sym.is_null() {
+            None
+        } else {
+            Some(unsafe { std::mem::transmute::<*mut c_void, $ty>(sym) })
+        }
+    }};
+}
+
+/// Wrap a single-path function: translate arg 0, forward the rest.
+macro_rules! wrap_path_fn {
+    ($name:ident, $cname:literal, ($($arg:ident : $argty:ty),*), $ret:ty, $errno_ret:expr) => {
+        /// glibc interposer: translate Sea-mounted paths, forward to libc.
+        ///
+        /// # Safety
+        /// Called by arbitrary C code with C ABI invariants; `path` must
+        /// be a valid NUL-terminated string (as libc requires).
+        #[no_mangle]
+        pub unsafe extern "C" fn $name(path: *const c_char $(, $arg: $argty)*) -> $ret {
+            type Fn = unsafe extern "C" fn(*const c_char $(, $argty)*) -> $ret;
+            let Some(real) = real!($cname, Fn) else { return $errno_ret; };
+            if path.is_null() {
+                return real(path $(, $arg)*);
+            }
+            let c = CStr::from_ptr(path);
+            match translate(c) {
+                Some(t) => real(t.as_ptr() $(, $arg)*),
+                None => real(path $(, $arg)*),
+            }
+        }
+    };
+}
+
+// open/creat family (mode passed through variadically-safe fixed arg)
+wrap_path_fn!(open, b"open\0", (flags: c_int, mode: libc::mode_t), c_int, -1);
+wrap_path_fn!(open64, b"open64\0", (flags: c_int, mode: libc::mode_t), c_int, -1);
+wrap_path_fn!(creat, b"creat\0", (mode: libc::mode_t), c_int, -1);
+wrap_path_fn!(unlink, b"unlink\0", (), c_int, -1);
+wrap_path_fn!(mkdir, b"mkdir\0", (mode: libc::mode_t), c_int, -1);
+wrap_path_fn!(truncate, b"truncate\0", (len: libc::off_t), c_int, -1);
+wrap_path_fn!(chdir, b"chdir\0", (), c_int, -1);
+wrap_path_fn!(remove, b"remove\0", (), c_int, -1);
+wrap_path_fn!(access, b"access\0", (mode: c_int), c_int, -1);
+
+/// `openat`: translate the path argument (position 1).
+///
+/// # Safety
+/// C ABI; `path` must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn openat(
+    dirfd: c_int,
+    path: *const c_char,
+    flags: c_int,
+    mode: libc::mode_t,
+) -> c_int {
+    type Fn = unsafe extern "C" fn(c_int, *const c_char, c_int, libc::mode_t) -> c_int;
+    let Some(real) = real!(b"openat\0", Fn) else { return -1 };
+    if path.is_null() {
+        return real(dirfd, path, flags, mode);
+    }
+    let c = CStr::from_ptr(path);
+    match translate(c) {
+        Some(t) => real(dirfd, t.as_ptr(), flags, mode),
+        None => real(dirfd, path, flags, mode),
+    }
+}
+
+/// `fopen`: translate the path argument.
+///
+/// # Safety
+/// C ABI; `path`/`modes` must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn fopen(path: *const c_char, modes: *const c_char) -> *mut libc::FILE {
+    type Fn = unsafe extern "C" fn(*const c_char, *const c_char) -> *mut libc::FILE;
+    let Some(real) = real!(b"fopen\0", Fn) else { return std::ptr::null_mut() };
+    if path.is_null() {
+        return real(path, modes);
+    }
+    let c = CStr::from_ptr(path);
+    match translate(c) {
+        Some(t) => real(t.as_ptr(), modes),
+        None => real(path, modes),
+    }
+}
+
+/// `fopen64`: translate the path argument.
+///
+/// # Safety
+/// C ABI; `path`/`modes` must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn fopen64(path: *const c_char, modes: *const c_char) -> *mut libc::FILE {
+    type Fn = unsafe extern "C" fn(*const c_char, *const c_char) -> *mut libc::FILE;
+    let Some(real) = real!(b"fopen64\0", Fn) else { return std::ptr::null_mut() };
+    if path.is_null() {
+        return real(path, modes);
+    }
+    let c = CStr::from_ptr(path);
+    match translate(c) {
+        Some(t) => real(t.as_ptr(), modes),
+        None => real(path, modes),
+    }
+}
+
+/// `stat`: translate the path argument.
+///
+/// # Safety
+/// C ABI; pointers must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn stat(path: *const c_char, buf: *mut libc::stat) -> c_int {
+    type Fn = unsafe extern "C" fn(*const c_char, *mut libc::stat) -> c_int;
+    let Some(real) = real!(b"stat\0", Fn) else { return -1 };
+    if path.is_null() {
+        return real(path, buf);
+    }
+    let c = CStr::from_ptr(path);
+    match translate(c) {
+        Some(t) => real(t.as_ptr(), buf),
+        None => real(path, buf),
+    }
+}
+
+/// `lstat`: translate the path argument.
+///
+/// # Safety
+/// C ABI; pointers must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn lstat(path: *const c_char, buf: *mut libc::stat) -> c_int {
+    type Fn = unsafe extern "C" fn(*const c_char, *mut libc::stat) -> c_int;
+    let Some(real) = real!(b"lstat\0", Fn) else { return -1 };
+    if path.is_null() {
+        return real(path, buf);
+    }
+    let c = CStr::from_ptr(path);
+    match translate(c) {
+        Some(t) => real(t.as_ptr(), buf),
+        None => real(path, buf),
+    }
+}
+
+/// `rename`: translate *both* arguments.
+///
+/// # Safety
+/// C ABI; pointers must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn rename(from: *const c_char, to: *const c_char) -> c_int {
+    type Fn = unsafe extern "C" fn(*const c_char, *const c_char) -> c_int;
+    let Some(real) = real!(b"rename\0", Fn) else { return -1 };
+    let tf = if from.is_null() { None } else { translate(CStr::from_ptr(from)) };
+    let tt = if to.is_null() { None } else { translate(CStr::from_ptr(to)) };
+    let fp = tf.as_ref().map(|c| c.as_ptr()).unwrap_or(from);
+    let tp = tt.as_ref().map(|c| c.as_ptr()).unwrap_or(to);
+    real(fp, tp)
+}
+
+/// `statx`: translate the path argument (modern coreutils stat path).
+///
+/// # Safety
+/// C ABI; pointers must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn statx(
+    dirfd: c_int,
+    path: *const c_char,
+    flags: c_int,
+    mask: libc::c_uint,
+    buf: *mut libc::statx,
+) -> c_int {
+    type Fn = unsafe extern "C" fn(
+        c_int,
+        *const c_char,
+        c_int,
+        libc::c_uint,
+        *mut libc::statx,
+    ) -> c_int;
+    let Some(real) = real!(b"statx\0", Fn) else { return -1 };
+    if path.is_null() {
+        return real(dirfd, path, flags, mask, buf);
+    }
+    let c = CStr::from_ptr(path);
+    match translate(c) {
+        Some(t) => real(dirfd, t.as_ptr(), flags, mask, buf),
+        None => real(dirfd, path, flags, mask, buf),
+    }
+}
+
+/// `fstatat` (a.k.a. `newfstatat`): translate the path argument.
+///
+/// # Safety
+/// C ABI; pointers must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn fstatat(
+    dirfd: c_int,
+    path: *const c_char,
+    buf: *mut libc::stat,
+    flags: c_int,
+) -> c_int {
+    type Fn = unsafe extern "C" fn(c_int, *const c_char, *mut libc::stat, c_int) -> c_int;
+    let Some(real) = real!(b"fstatat\0", Fn) else { return -1 };
+    if path.is_null() {
+        return real(dirfd, path, buf, flags);
+    }
+    let c = CStr::from_ptr(path);
+    match translate(c) {
+        Some(t) => real(dirfd, t.as_ptr(), buf, flags),
+        None => real(dirfd, path, buf, flags),
+    }
+}
+
+/// `opendir`: translate the path argument.
+///
+/// # Safety
+/// C ABI; `path` must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn opendir(path: *const c_char) -> *mut libc::DIR {
+    type Fn = unsafe extern "C" fn(*const c_char) -> *mut libc::DIR;
+    let Some(real) = real!(b"opendir\0", Fn) else { return std::ptr::null_mut() };
+    if path.is_null() {
+        return real(path);
+    }
+    let c = CStr::from_ptr(path);
+    match translate(c) {
+        Some(t) => real(t.as_ptr()),
+        None => real(path),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(mount: &str, target: &str, path: &str) -> Option<String> {
+        std::env::set_var("SEA_MOUNT", mount);
+        std::env::set_var("SEA_TARGET", target);
+        let c = CString::new(path).unwrap();
+        translate(&c).map(|s| s.to_string_lossy().into_owned())
+    }
+
+    #[test]
+    fn prefix_translation() {
+        assert_eq!(
+            t("/sea", "/data", "/sea/x/y.dat").as_deref(),
+            Some("/data/x/y.dat")
+        );
+        assert_eq!(t("/sea", "/data", "/sea").as_deref(), Some("/data"));
+        assert_eq!(t("/sea", "/data", "/seaside/x"), None);
+        assert_eq!(t("/sea", "/data", "/other/x"), None);
+    }
+}

@@ -1,0 +1,190 @@
+//! Minimal benchmark harness (offline criterion substitute).
+//!
+//! `cargo bench` runs each `[[bench]]` target with `harness = false`;
+//! targets build a [`Harness`], register closures, and call
+//! [`Harness::finish`], which prints a criterion-like table and appends
+//! CSV rows to `results/bench.csv`.
+
+use std::time::{Duration, Instant};
+
+use crate::util::csv::{f, Csv};
+use crate::util::Summary;
+
+/// One benchmark's timing samples.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Bench id (`target/case`).
+    pub name: String,
+    /// Per-repetition wall times (seconds).
+    pub samples: Vec<f64>,
+    /// Optional throughput denominator (bytes or items per rep).
+    pub throughput: Option<(f64, &'static str)>,
+    /// Optional free-form note column (e.g. measured makespan).
+    pub note: String,
+}
+
+impl BenchResult {
+    /// Summary statistics of the samples.
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples).expect("at least one sample")
+    }
+}
+
+/// Bench registry + runner.
+pub struct Harness {
+    target: String,
+    warmup: usize,
+    reps: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Harness {
+    /// New harness for a bench target. Honours `SEA_BENCH_REPS` /
+    /// `SEA_BENCH_WARMUP` env overrides.
+    pub fn new(target: impl Into<String>) -> Harness {
+        let reps = std::env::var("SEA_BENCH_REPS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(3);
+        let warmup = std::env::var("SEA_BENCH_WARMUP")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1);
+        Harness { target: target.into(), warmup, reps, results: Vec::new() }
+    }
+
+    /// Override repetition counts (tests).
+    pub fn with_reps(mut self, warmup: usize, reps: usize) -> Harness {
+        self.warmup = warmup;
+        self.reps = reps;
+        self
+    }
+
+    /// Time `body` (called `warmup + reps` times); records the reps.
+    pub fn case<F: FnMut() -> R, R>(&mut self, name: &str, mut body: F) -> &mut BenchResult {
+        for _ in 0..self.warmup {
+            let _ = body();
+        }
+        let mut samples = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps.max(1) {
+            let t0 = Instant::now();
+            let _ = body();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        self.results.push(BenchResult {
+            name: format!("{}/{}", self.target, name),
+            samples,
+            throughput: None,
+            note: String::new(),
+        });
+        self.results.last_mut().expect("just pushed")
+    }
+
+    /// Record an externally-measured sample set (e.g. simulated seconds
+    /// rather than wall time).
+    pub fn record(
+        &mut self,
+        name: &str,
+        samples: Vec<f64>,
+        note: impl Into<String>,
+    ) -> &mut BenchResult {
+        assert!(!samples.is_empty());
+        self.results.push(BenchResult {
+            name: format!("{}/{}", self.target, name),
+            samples,
+            throughput: None,
+            note: note.into(),
+        });
+        self.results.last_mut().expect("just pushed")
+    }
+
+    /// Print the table and append `results/bench.csv`. Returns the
+    /// results for further assertions.
+    pub fn finish(self) -> Vec<BenchResult> {
+        println!("\n== bench: {} (warmup {}, reps {}) ==", self.target, self.warmup, self.reps);
+        println!(
+            "{:<52} {:>12} {:>12} {:>12}  {}",
+            "case", "mean", "min", "max", "note"
+        );
+        let mut csv = Csv::new(vec![
+            "target", "case", "n", "mean_s", "std_s", "min_s", "max_s", "note",
+        ]);
+        for r in &self.results {
+            let s = r.summary();
+            let fmt = |x: f64| {
+                if x >= 1.0 {
+                    format!("{x:.3} s")
+                } else if x >= 1e-3 {
+                    format!("{:.3} ms", x * 1e3)
+                } else {
+                    format!("{:.1} µs", x * 1e6)
+                }
+            };
+            println!(
+                "{:<52} {:>12} {:>12} {:>12}  {}",
+                r.name,
+                fmt(s.mean),
+                fmt(s.min),
+                fmt(s.max),
+                r.note
+            );
+            let case = r.name.split('/').skip(1).collect::<Vec<_>>().join("/");
+            csv.row(vec![
+                self.target.clone(),
+                case,
+                s.n.to_string(),
+                f(s.mean),
+                f(s.std),
+                f(s.min),
+                f(s.max),
+                r.note.clone(),
+            ]);
+        }
+        // append-style: one csv per target to avoid interleaving
+        let path = format!("results/bench_{}.csv", self.target.replace('/', "_"));
+        if let Err(e) = csv.write_to(&path) {
+            eprintln!("bench: could not write {path}: {e}");
+        }
+        self.results
+    }
+}
+
+/// Convenience: time one closure once (used inside bench bodies).
+pub fn time_once<F: FnOnce() -> R, R>(body: F) -> (Duration, R) {
+    let t0 = Instant::now();
+    let r = body();
+    (t0.elapsed(), r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_collects_samples() {
+        let mut h = Harness::new("unit").with_reps(1, 3);
+        h.case("noop", || 1 + 1);
+        let rs = h.finish();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].samples.len(), 3);
+        assert!(rs[0].summary().mean >= 0.0);
+        let _ = std::fs::remove_file("results/bench_unit.csv");
+    }
+
+    #[test]
+    fn record_takes_external_samples() {
+        let mut h = Harness::new("unit2").with_reps(0, 1);
+        h.record("sim", vec![1.0, 2.0, 3.0], "simulated");
+        let rs = h.finish();
+        assert_eq!(rs[0].summary().mean, 2.0);
+        assert_eq!(rs[0].note, "simulated");
+        let _ = std::fs::remove_file("results/bench_unit2.csv");
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (dt, v) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(dt.as_nanos() > 0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Minimal flag parser: `--key value`, `--key=value`, `--flag`, positionals.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::util::bytes::parse_bytes;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    positionals: Vec<String>,
+    pos_cursor: usize,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse a raw argv slice. Flags may repeat; `--k=v` and `--k v` are
+    /// equivalent; a flag followed by another flag (or end) is boolean.
+    pub fn parse(argv: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.flags
+                        .entry(stripped.to_string())
+                        .or_default()
+                        .push(argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.entry(stripped.to_string()).or_default().push(String::new());
+                }
+            } else {
+                a.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    /// Consume the next positional argument.
+    pub fn next_positional(&mut self) -> Option<String> {
+        let p = self.positionals.get(self.pos_cursor).cloned();
+        if p.is_some() {
+            self.pos_cursor += 1;
+        }
+        p
+    }
+
+    /// All remaining positionals.
+    pub fn rest(&self) -> &[String] {
+        &self.positionals[self.pos_cursor.min(self.positionals.len())..]
+    }
+
+    /// Is a boolean flag present?
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    /// Last value of a string flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values of a repeatable flag.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    /// String flag with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Required string flag.
+    pub fn require(&self, key: &str) -> Result<String> {
+        self.get(key)
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .ok_or_else(|| Error::InvalidArg(format!("missing required --{key}")))
+    }
+
+    /// Integer flag with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::InvalidArg(format!("--{key}: bad integer {s:?}"))),
+        }
+    }
+
+    /// Float flag with default.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::InvalidArg(format!("--{key}: bad float {s:?}"))),
+        }
+    }
+
+    /// Byte-size flag (accepts `617MiB` etc.) with default.
+    pub fn bytes_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => {
+                parse_bytes(s).ok_or_else(|| Error::InvalidArg(format!("--{key}: bad size {s:?}")))
+            }
+        }
+    }
+
+    /// Comma-separated list of integers (`1,2,4,8`) with default.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|_| Error::InvalidArg(format!("--{key}: bad integer {t:?}")))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        // note: a bare flag followed by a non-flag token greedily takes it
+        // as a value, so boolean flags go last or use `--flag=`
+        let mut a = Args::parse(&argv(&[
+            "sim", "--nodes", "5", "--mode=in-memory", "extra", "--verbose",
+        ]));
+        assert_eq!(a.next_positional().as_deref(), Some("sim"));
+        assert_eq!(a.get("nodes"), Some("5"));
+        assert_eq!(a.get("mode"), Some("in-memory"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.rest(), &["extra".to_string()]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(&argv(&["--n", "12", "--x", "2.5", "--size", "617MiB"]));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 12);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("x", 0.0).unwrap(), 2.5);
+        assert_eq!(a.bytes_or("size", 0).unwrap(), 617 * crate::util::MIB);
+        assert!(a.usize_or("x", 0).is_err());
+        assert!(a.require("missing").is_err());
+    }
+
+    #[test]
+    fn lists_and_repeats() {
+        let a = Args::parse(&argv(&["--sweep", "1,2,4", "--tier", "a", "--tier", "b"]));
+        assert_eq!(a.usize_list_or("sweep", &[]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.get_all("tier"), vec!["a", "b"]);
+        assert_eq!(a.usize_list_or("none", &[9]).unwrap(), vec![9]);
+    }
+}

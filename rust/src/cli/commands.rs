@@ -1,0 +1,378 @@
+//! CLI subcommand implementations.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::cli::Args;
+use crate::config;
+use crate::coordinator::{run_pipeline, ExperimentCfg, Mode, PipelineCfg};
+use crate::coordinator::run_experiment as run_sim_experiment;
+use crate::error::{Error, Result};
+use crate::model::{lustre_bounds, sea_bounds, ModelParams};
+use crate::placement::RuleSet;
+use crate::report::{self, describe_run, Scale};
+use crate::runtime::Engine;
+use crate::sim::spec::ClusterSpec;
+use crate::util::bytes::fmt_bw;
+use crate::util::{fmt_bytes, MIB};
+use crate::vfs::{RateLimitedFs, RealFs, SeaFs, SeaFsConfig, Vfs};
+use crate::workload::{dataset, IncrementationSpec};
+
+fn load_spec(args: &Args) -> Result<ClusterSpec> {
+    match args.get("cluster") {
+        Some(path) => config::load_cluster_spec(std::path::Path::new(path)),
+        None => Ok(ClusterSpec::paper_default()),
+    }
+}
+
+fn workload_from(args: &Args) -> Result<IncrementationSpec> {
+    let mut w = IncrementationSpec::paper_default();
+    w.blocks = args.usize_or("blocks", w.blocks)?;
+    w.file_size = args.bytes_or("file-size", w.file_size)?;
+    w.iterations = args.usize_or("iterations", w.iterations)?;
+    w.compute_per_iter = args.f64_or("compute", 0.0)?;
+    w.read_back = !args.has("no-read-back");
+    Ok(w)
+}
+
+fn mode_from(args: &Args) -> Result<Mode> {
+    match args.str_or("mode", "sea-in-memory").as_str() {
+        "lustre" => Ok(Mode::Lustre),
+        "sea-in-memory" | "in-memory" => Ok(Mode::SeaInMemory),
+        "sea-flush-all" | "flush-all" | "copy-all" => Ok(Mode::SeaCopyAll),
+        other => Err(Error::InvalidArg(format!(
+            "--mode {other:?}: expected lustre | sea-in-memory | sea-flush-all"
+        ))),
+    }
+}
+
+/// `sea sim` — one simulated experiment.
+pub fn run_sim(args: &mut Args) -> Result<i32> {
+    if args.has("help") {
+        println!(
+            "sea sim [--cluster cfg.toml] [--mode lustre|sea-in-memory|sea-flush-all]\n\
+             \x20       [--blocks N] [--file-size 617MiB] [--iterations N]\n\
+             \x20       [--nodes N] [--procs N] [--disks N] [--compute SECS] [--seed N]"
+        );
+        return Ok(0);
+    }
+    let mut spec = load_spec(args)?;
+    spec.nodes = args.usize_or("nodes", spec.nodes)?;
+    spec.procs_per_node = args.usize_or("procs", spec.procs_per_node)?;
+    spec.disks_per_node = args.usize_or("disks", spec.disks_per_node)?;
+    let workload = workload_from(args)?;
+    let mode = mode_from(args)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    let report = run_sim_experiment(&ExperimentCfg { spec, workload, mode, seed })?;
+    print!("{}", describe_run(&report));
+    Ok(0)
+}
+
+/// `sea experiment` — regenerate a paper figure/table.
+pub fn run_experiment_cmd(args: &mut Args) -> Result<i32> {
+    let which = match args.next_positional() {
+        Some(w) => w,
+        None => {
+            println!(
+                "sea experiment <fig2a|fig2b|fig2c|fig2d|fig3|table2|all>\n\
+                 \x20   [--scale paper|quick] [--out results/] [--seed N] [--cluster cfg.toml]"
+            );
+            return Ok(2);
+        }
+    };
+    let spec = load_spec(args)?;
+    let scale = match args.str_or("scale", "paper").as_str() {
+        "paper" => Scale::paper(),
+        "quick" => Scale::quick(),
+        other => {
+            let f: f64 = other
+                .parse()
+                .map_err(|_| Error::InvalidArg(format!("--scale {other:?}")))?;
+            Scale { blocks: f }
+        }
+    };
+    let out = PathBuf::from(args.str_or("out", "results"));
+    let seed = args.usize_or("seed", 42)? as u64;
+
+    let run_fig = |id: &str| -> Result<()> {
+        let fig = match id {
+            "fig2a" => report::fig2a(&spec, scale, &[1, 2, 3, 4, 5, 6, 7, 8], seed)?,
+            "fig2b" => report::fig2b(&spec, scale, &[1, 2, 3, 4, 5, 6], seed)?,
+            "fig2c" => report::fig2c(&spec, scale, &[1, 5, 10, 15], seed)?,
+            "fig2d" => report::fig2d(&spec, scale, &[1, 2, 4, 8, 16, 32, 64], seed)?,
+            _ => unreachable!(),
+        };
+        let (csv, txt) = fig.write_to(&out)?;
+        println!("{}", fig.to_ascii());
+        println!("max speedup: {:.2}x", fig.max_speedup());
+        println!("wrote {} and {}", csv.display(), txt.display());
+        Ok(())
+    };
+
+    match which.as_str() {
+        "fig2a" | "fig2b" | "fig2c" | "fig2d" => run_fig(&which)?,
+        "fig3" => {
+            let rows = report::fig3(&spec, scale, seed)?;
+            println!("Fig 3: Sea modes at 5 nodes / 6 procs / 6 disks / 5 iterations\n");
+            for (name, r) in &rows {
+                println!("--- {name}\n{}", describe_run(r));
+            }
+            let mut csv = crate::util::csv::Csv::new(vec!["mode", "makespan_s", "app_done_s"]);
+            for (name, r) in &rows {
+                csv.row(vec![
+                    name.clone(),
+                    crate::util::csv::f(r.makespan),
+                    crate::util::csv::f(r.app_done),
+                ]);
+            }
+            csv.write_to(out.join("fig3.csv"))?;
+            println!("wrote {}", out.join("fig3.csv").display());
+        }
+        "table2" => {
+            println!("Table 2 (simulator calibration, from cluster spec):");
+            println!("{:<12} {:>8} {:>18}", "layer", "action", "bandwidth");
+            let rows = [
+                ("tmpfs", "read", spec.mem_read_bw),
+                ("tmpfs", "write", spec.mem_write_bw),
+                ("local disk", "read", spec.disk_read_bw),
+                ("local disk", "write", spec.disk_write_bw),
+                ("lustre", "read", spec.lustre.ost_read_bw),
+                ("lustre", "write", spec.lustre.ost_write_bw),
+            ];
+            for (layer, action, bw) in rows {
+                println!("{layer:<12} {action:>8} {:>18}", fmt_bw(bw));
+            }
+            println!("\n(real-device dd-style measurements: `sea bench-devices`)");
+        }
+        "all" => {
+            for id in ["fig2a", "fig2b", "fig2c", "fig2d"] {
+                run_fig(id)?;
+            }
+            let rows = report::fig3(&spec, scale, seed)?;
+            for (name, r) in &rows {
+                println!("--- {name}\n{}", describe_run(r));
+            }
+        }
+        other => {
+            return Err(Error::InvalidArg(format!("unknown experiment {other:?}")));
+        }
+    }
+    Ok(0)
+}
+
+/// `sea model` — print analytic bounds for a configuration.
+pub fn run_model(args: &mut Args) -> Result<i32> {
+    if args.has("help") {
+        println!(
+            "sea model [--cluster cfg.toml] [--blocks N] [--file-size S] [--iterations N]\n\
+             \x20         [--nodes N] [--procs N] [--disks N]"
+        );
+        return Ok(0);
+    }
+    let mut spec = load_spec(args)?;
+    spec.nodes = args.usize_or("nodes", spec.nodes)?;
+    spec.procs_per_node = args.usize_or("procs", spec.procs_per_node)?;
+    spec.disks_per_node = args.usize_or("disks", spec.disks_per_node)?;
+    let w = workload_from(args)?;
+    let params = ModelParams::from_spec(&spec, w.file_size);
+    let vol = w.volume();
+    let lb = lustre_bounds(&params, &vol);
+    let sb = sea_bounds(&params, &vol);
+    println!(
+        "workload: {} blocks x {} x {} iterations",
+        w.blocks,
+        fmt_bytes(w.file_size),
+        w.iterations
+    );
+    println!(
+        "volumes : D_I {}  D_m {}  D_f {}",
+        fmt_bytes(vol.d_i as u64),
+        fmt_bytes(vol.d_m as u64),
+        fmt_bytes(vol.d_f as u64)
+    );
+    println!("lustre  : [{:.1}, {:.1}] s  (Eq 5 .. Eq 1)", lb.lower, lb.upper);
+    println!("sea     : [{:.1}, {:.1}] s  (Eq 11 .. Eq 7)", sb.lower, sb.upper);
+    let b = crate::model::sea_breakdown(&params, &vol);
+    println!(
+        "sea tier fill: tmpfs w {}  disk w {}  lustre w {}",
+        fmt_bytes(b.d_tw as u64),
+        fmt_bytes(b.d_gw as u64),
+        fmt_bytes(b.d_lw as u64)
+    );
+    Ok(0)
+}
+
+/// `sea bench-devices` — dd-style micro-benchmark of real directories
+/// (regenerates Table 2 for this machine).
+pub fn run_bench_devices(args: &mut Args) -> Result<i32> {
+    let size = args.bytes_or("size", 256 * MIB)?;
+    let reps = args.usize_or("reps", 3)?;
+    let dirs: Vec<String> = {
+        let ds = args.get_all("dir");
+        if ds.is_empty() {
+            vec!["/dev/shm/sea_bench".to_string(), "/tmp/sea_bench".to_string()]
+        } else {
+            ds.into_iter().map(String::from).collect()
+        }
+    };
+    println!("{:<24} {:>10} {:>14} {:>14} {:>14}", "dir", "size", "write", "read", "cached read");
+    for dir in dirs {
+        let root = PathBuf::from(&dir);
+        let fs_ = RealFs::new(&root)?;
+        let payload = vec![0xA5u8; size as usize];
+        let mut wr = Vec::new();
+        let mut rd = Vec::new();
+        let mut crd = Vec::new();
+        for r in 0..reps.max(1) {
+            let p = PathBuf::from(format!("bench_{r}.dat"));
+            let t0 = std::time::Instant::now();
+            fs_.write(&p, &payload)?;
+            wr.push(size as f64 / t0.elapsed().as_secs_f64());
+            // drop-ish: reading right back is the cached case
+            let t0 = std::time::Instant::now();
+            let _ = fs_.read(&p)?;
+            crd.push(size as f64 / t0.elapsed().as_secs_f64());
+            let t0 = std::time::Instant::now();
+            let _ = fs_.read(&p)?;
+            rd.push(size as f64 / t0.elapsed().as_secs_f64());
+            let _ = fs_.unlink(&p);
+        }
+        let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        println!(
+            "{:<24} {:>10} {:>14} {:>14} {:>14}",
+            dir,
+            fmt_bytes(size),
+            fmt_bw(avg(&wr)),
+            fmt_bw(avg(&rd)),
+            fmt_bw(avg(&crd)),
+        );
+        let _ = std::fs::remove_dir_all(&root);
+    }
+    Ok(0)
+}
+
+/// `sea dataset` — generate a real-bytes dataset.
+pub fn run_dataset(args: &mut Args) -> Result<i32> {
+    let dir = PathBuf::from(args.str_or("dir", "data/bigbrain"));
+    let blocks = args.usize_or("blocks", 16)?;
+    let rows = args.usize_or("rows", 4096)?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let ds = dataset::generate(&dir, blocks, rows * 256, seed)?;
+    println!(
+        "dataset: {} blocks x {} at {}",
+        ds.blocks.len(),
+        fmt_bytes(ds.block_bytes()),
+        dir.display()
+    );
+    Ok(0)
+}
+
+/// `sea run` — the real-bytes pipeline through a Sea mount vs direct PFS.
+pub fn run_real(args: &mut Args) -> Result<i32> {
+    if args.has("help") {
+        println!(
+            "sea run [--artifacts artifacts/] [--work /tmp/sea_run] [--blocks N]\n\
+             \x20       [--iterations N] [--workers N] [--mode sea|direct|both]\n\
+             \x20       [--pfs-read-mibs N] [--pfs-write-mibs N] [--flush-all]"
+        );
+        return Ok(0);
+    }
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let work = PathBuf::from(args.str_or("work", "/tmp/sea_run"));
+    let blocks = args.usize_or("blocks", 8)?;
+    let iterations = args.usize_or("iterations", 5)?;
+    let workers = args.usize_or("workers", 2)?;
+    let pfs_r = args.f64_or("pfs-read-mibs", 1200.0)? * MIB as f64;
+    let pfs_w = args.f64_or("pfs-write-mibs", 120.0)? * MIB as f64;
+    let mode = args.str_or("mode", "both");
+    let flush_all = args.has("flush-all");
+
+    let engine = Arc::new(Engine::load(&artifacts)?);
+    let elems = engine.chunk_elems();
+    let ds = dataset::generate(&work.join("pfs/inputs"), blocks, elems, 7)?;
+    println!(
+        "dataset: {blocks} x {} ({} total)",
+        fmt_bytes(ds.block_bytes()),
+        fmt_bytes(ds.block_bytes() * blocks as u64)
+    );
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    if mode == "direct" || mode == "both" {
+        let pfs: Arc<dyn Vfs> = Arc::new(RateLimitedFs::new(
+            RealFs::new(work.join("pfs"))?,
+            pfs_r,
+            pfs_w,
+        ));
+        let r = run_pipeline(&PipelineCfg {
+            engine: engine.clone(),
+            vfs: pfs,
+            dataset: ds.clone(),
+            mount_prefix: PathBuf::new(),
+            iterations,
+            workers,
+            read_back: true,
+            verify: true,
+            cleanup_intermediate: true,
+        })?;
+        println!(
+            "direct-pfs : {:.2}s  ({} read, {} written, {} pjrt calls)",
+            r.makespan,
+            fmt_bytes(r.bytes_read),
+            fmt_bytes(r.bytes_written),
+            r.pjrt_calls
+        );
+        results.push(("direct".into(), r.makespan));
+    }
+    if mode == "sea" || mode == "both" {
+        let pfs: Arc<dyn Vfs> = Arc::new(RateLimitedFs::new(
+            RealFs::new(work.join("pfs"))?,
+            pfs_r,
+            pfs_w,
+        ));
+        let rules = if flush_all {
+            RuleSet::copy_all()
+        } else {
+            RuleSet::in_memory(IncrementationSpec::final_glob())
+        };
+        let sea = SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![
+                (PathBuf::from("/dev/shm/sea_run_tier0"), 0, 2 * 1024 * MIB),
+                (work.join("tier1_disk0"), 1, 8 * 1024 * MIB),
+                (work.join("tier1_disk1"), 1, 8 * 1024 * MIB),
+            ],
+            pfs,
+            max_file_size: ds.block_bytes(),
+            parallel_procs: workers as u64,
+            rules,
+            seed: 11,
+        })?;
+        let r = run_pipeline(&PipelineCfg {
+            engine: engine.clone(),
+            vfs: Arc::new(sea),
+            dataset: ds.clone(),
+            mount_prefix: PathBuf::from("/sea"),
+            iterations,
+            workers,
+            read_back: true,
+            verify: true,
+            cleanup_intermediate: true,
+        })?;
+        println!(
+            "sea        : {:.2}s  ({} read, {} written, {} pjrt calls)",
+            r.makespan,
+            fmt_bytes(r.bytes_read),
+            fmt_bytes(r.bytes_written),
+            r.pjrt_calls
+        );
+        results.push(("sea".into(), r.makespan));
+        let _ = std::fs::remove_dir_all("/dev/shm/sea_run_tier0");
+    }
+    if results.len() == 2 {
+        println!("speedup    : {:.2}x", results[0].1 / results[1].1);
+    }
+    Ok(0)
+}
+
+// keep the dispatcher's expected names
+pub use run_experiment_cmd as run_experiment;

@@ -1,0 +1,56 @@
+//! Hand-rolled CLI (offline substitute for clap — DESIGN.md §2).
+
+mod args;
+pub mod commands;
+
+pub use args::Args;
+
+use crate::error::Result;
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+sea — reproduction of the Sea data-placement library (Hayot-Sasson 2022)
+
+USAGE:
+    sea <COMMAND> [OPTIONS]
+
+COMMANDS:
+    run            run the incrementation pipeline on REAL files through a Sea mount
+    sim            run one simulated experiment on the paper-scale cluster
+    experiment     regenerate a paper figure/table (fig2a|fig2b|fig2c|fig2d|fig3|table2)
+    model          evaluate the analytic performance model (Eqs 1-11)
+    bench-devices  dd-style bandwidth micro-benchmark of real storage dirs (Table 2)
+    dataset        generate a real-bytes BigBrain-like chunked dataset
+    help           show this message
+
+Run `sea <COMMAND> --help` for per-command options.
+";
+
+/// Dispatch a CLI invocation; returns the process exit code.
+pub fn run(argv: &[String]) -> Result<i32> {
+    let mut args = Args::parse(argv);
+    let cmd = match args.next_positional() {
+        Some(c) => c,
+        None => {
+            print!("{USAGE}");
+            return Ok(2);
+        }
+    };
+    match cmd.as_str() {
+        "run" => commands::run_real(&mut args),
+        "sim" => commands::run_sim(&mut args),
+        "experiment" => commands::run_experiment(&mut args),
+        "model" => commands::run_model(&mut args),
+        "bench-devices" => commands::run_bench_devices(&mut args),
+        "dataset" => commands::run_dataset(&mut args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(0)
+        }
+        other => {
+            eprintln!("sea: unknown command {other:?}\n");
+            print!("{USAGE}");
+            Ok(2)
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Typed cluster-spec loading from a config document.
+
+use std::path::Path;
+
+use crate::config::parse::Doc;
+use crate::error::Result;
+use crate::sim::spec::{ClusterSpec, LustreSpec};
+use crate::util::{GIB, MIB};
+
+/// Build a [`ClusterSpec`] from a parsed document; missing keys keep the
+/// paper defaults, so an empty file IS the paper cluster.
+pub fn spec_from_doc(d: &Doc) -> Result<ClusterSpec> {
+    let dflt = ClusterSpec::paper_default();
+    let ldflt = LustreSpec::default();
+    let mib = MIB as f64;
+    let spec = ClusterSpec {
+        nodes: d.usize_or("cluster.nodes", dflt.nodes),
+        procs_per_node: d.usize_or("cluster.procs_per_node", dflt.procs_per_node),
+        cores_per_node: d.usize_or("cluster.cores_per_node", dflt.cores_per_node),
+        mem_bytes: d.bytes_or("cluster.mem", dflt.mem_bytes),
+        tmpfs_bytes: d.bytes_or("cluster.tmpfs", dflt.tmpfs_bytes),
+        mem_read_bw: d.f64_or("cluster.mem_read_mibs", dflt.mem_read_bw / mib) * mib,
+        mem_write_bw: d.f64_or("cluster.mem_write_mibs", dflt.mem_write_bw / mib) * mib,
+        disks_per_node: d.usize_or("cluster.disks_per_node", dflt.disks_per_node),
+        disk_bytes: d.bytes_or("cluster.disk", dflt.disk_bytes),
+        disk_read_bw: d.f64_or("cluster.disk_read_mibs", dflt.disk_read_bw / mib) * mib,
+        disk_write_bw: d.f64_or("cluster.disk_write_mibs", dflt.disk_write_bw / mib) * mib,
+        nic_bw: d.f64_or("cluster.nic_gbps", dflt.nic_bw * 8.0 / 1e9) * 1e9 / 8.0,
+        dirty_ratio: d.f64_or("cluster.dirty_ratio", dflt.dirty_ratio),
+        cacheable_ratio: d.f64_or("cluster.cacheable_ratio", dflt.cacheable_ratio),
+        flush_parallelism: d.usize_or("cluster.flush_parallelism", dflt.flush_parallelism),
+        lustre: LustreSpec {
+            oss_count: d.usize_or("lustre.oss", ldflt.oss_count),
+            osts_per_oss: d.usize_or("lustre.osts_per_oss", ldflt.osts_per_oss),
+            ost_bytes: d.bytes_or("lustre.ost", ldflt.ost_bytes),
+            ost_read_bw: d.f64_or("lustre.ost_read_mibs", ldflt.ost_read_bw / mib) * mib,
+            ost_write_bw: d.f64_or("lustre.ost_write_mibs", ldflt.ost_write_bw / mib) * mib,
+            server_nic_bw: d.f64_or("lustre.nic_gbps", ldflt.server_nic_bw * 8.0 / 1e9)
+                * 1e9
+                / 8.0,
+            mds_ops_per_sec: d.f64_or("lustre.mds_ops_per_sec", ldflt.mds_ops_per_sec),
+            mds_op_latency: d.f64_or("lustre.mds_op_latency", ldflt.mds_op_latency),
+            mds_ops_per_open: d.f64_or("lustre.mds_ops_per_open", ldflt.mds_ops_per_open),
+            mds_ops_per_mib_written: d.f64_or(
+                "lustre.mds_ops_per_mib_written",
+                ldflt.mds_ops_per_mib_written,
+            ),
+            client_dirty_per_ost: d.bytes_or("lustre.client_dirty_per_ost", GIB),
+            mds_contention_alpha: d.f64_or(
+                "lustre.mds_contention_alpha",
+                ldflt.mds_contention_alpha,
+            ),
+        },
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// Load a cluster spec from a TOML-subset file.
+pub fn load_cluster_spec(path: &Path) -> Result<ClusterSpec> {
+    spec_from_doc(&Doc::load(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_doc_is_the_paper_cluster() {
+        let d = Doc::parse("").unwrap();
+        let s = spec_from_doc(&d).unwrap();
+        assert_eq!(s.nodes, 5);
+        assert_eq!(s.lustre.ost_count(), 44);
+        assert!((s.lustre.ost_write_bw / MIB as f64 - 121.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let d = Doc::parse(
+            "[cluster]\nnodes = 8\ntmpfs = \"64GiB\"\ndisk_write_mibs = 200\n\
+             [lustre]\noss = 2\nost_write_mibs = 50\n",
+        )
+        .unwrap();
+        let s = spec_from_doc(&d).unwrap();
+        assert_eq!(s.nodes, 8);
+        assert_eq!(s.tmpfs_bytes, 64 * GIB);
+        assert!((s.disk_write_bw / MIB as f64 - 200.0).abs() < 1e-9);
+        assert_eq!(s.lustre.oss_count, 2);
+        assert!((s.lustre.ost_write_bw / MIB as f64 - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        let d = Doc::parse("[cluster]\nnodes = 0\n").unwrap();
+        assert!(spec_from_doc(&d).is_err());
+    }
+}

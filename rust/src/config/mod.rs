@@ -1,0 +1,14 @@
+//! Configuration: a TOML-subset parser (offline serde/toml substitute)
+//! plus typed loaders for cluster and Sea-mount configuration.
+//!
+//! Supported syntax: `[section]` and `[section.sub]` headers, `key =
+//! value` with string/float/integer/bool/size values (`"x"`, `1.5`, `42`,
+//! `true`, `"617MiB"` via the size-typed getters), `#` comments. Arrays
+//! of scalars: `[1, 2, 3]`. That covers every config this repo ships
+//! (`configs/paper_cluster.toml` etc.) without pulling in serde.
+
+mod cluster;
+mod parse;
+
+pub use cluster::{load_cluster_spec, spec_from_doc};
+pub use parse::{Doc, Value};

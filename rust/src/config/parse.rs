@@ -1,0 +1,233 @@
+//! The TOML-subset parser.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::bytes::parse_bytes;
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Number (all numerics parse as f64).
+    Num(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Array of scalars.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// As string, if a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As f64, if numeric.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// As u64: a number, or a size string like `"617MiB"`.
+    pub fn as_bytes(&self) -> Option<u64> {
+        match self {
+            Value::Num(n) if *n >= 0.0 => Some(*n as u64),
+            Value::Str(s) => parse_bytes(s),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-key → value.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    values: BTreeMap<String, Value>,
+}
+
+fn parse_scalar(tok: &str, lineno: usize) -> Result<Value> {
+    let t = tok.trim();
+    if let Some(stripped) = t.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| Error::Config(format!("line {lineno}: unterminated string")))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    t.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| Error::Config(format!("line {lineno}: bad value {t:?}")))
+}
+
+impl Doc {
+    /// Parse a document from text.
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let lineno = i + 1;
+            let line = match raw.find('#') {
+                // keep '#' inside quotes
+                Some(pos) if !raw[..pos].contains('"') || raw[..pos].matches('"').count() % 2 == 0 => {
+                    &raw[..pos]
+                }
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(h) = line.strip_prefix('[') {
+                let name = h
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::Config(format!("line {lineno}: bad section")))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("line {lineno}: expected key = value")))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{}.{}", section, k.trim())
+            };
+            let vt = v.trim();
+            let value = if let Some(body) = vt.strip_prefix('[') {
+                let body = body
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::Config(format!("line {lineno}: unterminated array")))?;
+                let items: Result<Vec<Value>> = body
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(|s| parse_scalar(s, lineno))
+                    .collect();
+                Value::Array(items?)
+            } else {
+                parse_scalar(vt, lineno)?
+            };
+            values.insert(key, value);
+        }
+        Ok(Doc { values })
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &Path) -> Result<Doc> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+        Self::parse(&text)
+    }
+
+    /// Raw lookup by dotted key.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    /// Typed getters with defaults.
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    /// usize with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_f64).map(|v| v as usize).unwrap_or(default)
+    }
+
+    /// Byte size with default (numbers or `"617MiB"` strings).
+    pub fn bytes_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(Value::as_bytes).unwrap_or(default)
+    }
+
+    /// String with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    /// All keys (diagnostics).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::MIB;
+
+    const SAMPLE: &str = r#"
+# cluster description
+title = "paper"
+
+[cluster]
+nodes = 5
+procs_per_node = 6
+tmpfs = "126GiB"
+dirty_ratio = 0.2
+swap = false
+
+[cluster.lustre]
+oss = 4
+sweep = [1, 2, 4, 8]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = Doc::parse(SAMPLE).unwrap();
+        assert_eq!(d.str_or("title", ""), "paper");
+        assert_eq!(d.usize_or("cluster.nodes", 0), 5);
+        assert_eq!(d.bytes_or("cluster.tmpfs", 0), 126 * 1024 * MIB);
+        assert_eq!(d.f64_or("cluster.dirty_ratio", 0.0), 0.2);
+        assert_eq!(d.get("cluster.swap").unwrap().as_bool(), Some(false));
+        assert_eq!(d.usize_or("cluster.lustre.oss", 0), 4);
+        match d.get("cluster.lustre.sweep").unwrap() {
+            Value::Array(a) => assert_eq!(a.len(), 4),
+            _ => panic!("expected array"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let d = Doc::parse("").unwrap();
+        assert_eq!(d.usize_or("none", 7), 7);
+        assert_eq!(d.str_or("none", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Doc::parse("[unclosed").is_err());
+        assert!(Doc::parse("novalue").is_err());
+        assert!(Doc::parse("x = \"unterminated").is_err());
+        assert!(Doc::parse("x = [1, 2").is_err());
+        assert!(Doc::parse("x = nonsense").is_err());
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let d = Doc::parse("a = 1 # trailing\n# whole line\nb = 2\n").unwrap();
+        assert_eq!(d.f64_or("a", 0.0), 1.0);
+        assert_eq!(d.f64_or("b", 0.0), 2.0);
+    }
+}

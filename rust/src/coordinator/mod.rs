@@ -1,0 +1,18 @@
+//! The Layer-3 coordinator: experiment drivers for the simulated cluster
+//! and the real-bytes pipeline.
+//!
+//! * [`sim_driver`] — assembles simulator + policy + workload into one
+//!   experiment run and extracts the paper's measured quantities
+//!   (application makespan, per-tier transfer volumes, MDS load,
+//!   cache behaviour, placement decisions).
+//! * [`real_driver`] — leader/worker pipeline over OS threads: workers
+//!   pull chunk tasks from a bounded queue (backpressure), do real file
+//!   I/O through a [`crate::vfs`] mount, and run the per-iteration
+//!   compute on the PJRT engine. This is the end-to-end path that proves
+//!   the three layers compose (DESIGN.md §6).
+
+pub mod real_driver;
+pub mod sim_driver;
+
+pub use sim_driver::{run_experiment, ExperimentCfg, Mode, SimReport};
+pub use real_driver::{run_pipeline, PipelineCfg, PipelineReport};

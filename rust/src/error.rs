@@ -1,0 +1,67 @@
+//! Crate-wide error type.
+
+use std::path::PathBuf;
+
+/// Unified error for all sea subsystems.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Underlying I/O failure from the real file system.
+    #[error("io error on {path:?}: {source}")]
+    Io {
+        path: PathBuf,
+        #[source]
+        source: std::io::Error,
+    },
+
+    /// A path was expected to live under the Sea mountpoint.
+    #[error("path {0:?} is outside the sea mountpoint")]
+    OutsideMount(PathBuf),
+
+    /// File not found in any tier / backend.
+    #[error("no such file: {0:?}")]
+    NotFound(PathBuf),
+
+    /// No storage device has room for the requested reservation.
+    #[error("no space: need {needed} B for {path:?} (largest free {largest_free} B)")]
+    NoSpace {
+        path: PathBuf,
+        needed: u64,
+        largest_free: u64,
+    },
+
+    /// Configuration file / value errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Simulator protocol violations (these are bugs, not user errors).
+    #[error("simulator invariant violated: {0}")]
+    Sim(String),
+
+    /// PJRT / XLA runtime failures.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Workload-level integrity failure (checksum mismatch etc.).
+    #[error("integrity error: {0}")]
+    Integrity(String),
+
+    /// Invalid argument to a public API.
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+}
+
+impl Error {
+    /// Convenience constructor tagging an `io::Error` with its path.
+    pub fn io(path: impl Into<PathBuf>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,130 @@
+//! Thread-safe free-space accounting for hierarchy devices.
+//!
+//! Real-mode worker threads and the (single-threaded) simulator share
+//! this type; a plain mutex keeps the arithmetic exact — contention is
+//! negligible next to actual I/O.
+
+use std::sync::Mutex;
+
+use crate::hierarchy::{DeviceRef, Hierarchy};
+
+/// Free-space ledger over a [`Hierarchy`]'s devices.
+#[derive(Debug)]
+pub struct SpaceAccountant {
+    free: Mutex<Vec<u64>>,
+}
+
+impl SpaceAccountant {
+    /// All devices start with their full capacity free.
+    pub fn new(h: &Hierarchy) -> SpaceAccountant {
+        SpaceAccountant {
+            free: Mutex::new(h.iter().map(|(_, d)| d.capacity).collect()),
+        }
+    }
+
+    /// Current free bytes of `d`.
+    pub fn free(&self, d: DeviceRef) -> u64 {
+        self.free.lock().expect("accountant poisoned")[d]
+    }
+
+    /// Attempt to debit `bytes` from `d` **iff** at least `floor` bytes
+    /// are free (the `p·F` eligibility rule). Returns success.
+    pub fn try_debit(&self, d: DeviceRef, bytes: u64, floor: u64) -> bool {
+        let mut f = self.free.lock().expect("accountant poisoned");
+        if f[d] >= floor && f[d] >= bytes {
+            f[d] -= bytes;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Credit `bytes` back to `d` (eviction / deletion), saturating at
+    /// the ledger's running total (over-credit is a caller bug, but we
+    /// saturate rather than wrap).
+    pub fn credit(&self, d: DeviceRef, bytes: u64) {
+        let mut f = self.free.lock().expect("accountant poisoned");
+        f[d] = f[d].saturating_add(bytes);
+    }
+
+    /// Largest free block across devices (diagnostics for NoSpace errors).
+    pub fn largest_free(&self) -> u64 {
+        self.free
+            .lock()
+            .expect("accountant poisoned")
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total free bytes.
+    pub fn total_free(&self) -> u64 {
+        self.free.lock().expect("accountant poisoned").iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::MIB;
+
+    fn h2() -> Hierarchy {
+        let mut h = Hierarchy::new();
+        h.add(0, 10 * MIB, "a");
+        h.add(1, 100 * MIB, "b");
+        h
+    }
+
+    #[test]
+    fn debit_respects_floor() {
+        let h = h2();
+        let acc = SpaceAccountant::new(&h);
+        // floor 8 MiB: first debit of 4 MiB ok (10 free >= 8)
+        assert!(acc.try_debit(0, 4 * MIB, 8 * MIB));
+        // now 6 MiB free < 8 MiB floor: rejected even though 4 fits
+        assert!(!acc.try_debit(0, 4 * MIB, 8 * MIB));
+        assert_eq!(acc.free(0), 6 * MIB);
+    }
+
+    #[test]
+    fn credit_restores() {
+        let h = h2();
+        let acc = SpaceAccountant::new(&h);
+        assert!(acc.try_debit(1, 50 * MIB, 0));
+        acc.credit(1, 50 * MIB);
+        assert_eq!(acc.free(1), 100 * MIB);
+    }
+
+    #[test]
+    fn totals() {
+        let h = h2();
+        let acc = SpaceAccountant::new(&h);
+        assert_eq!(acc.total_free(), 110 * MIB);
+        assert_eq!(acc.largest_free(), 100 * MIB);
+    }
+
+    #[test]
+    fn concurrent_debits_never_oversubscribe() {
+        use std::sync::Arc;
+        let mut h = Hierarchy::new();
+        h.add(0, 1000, "d");
+        let acc = Arc::new(SpaceAccountant::new(&h));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let a = acc.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = 0u64;
+                for _ in 0..1000 {
+                    if a.try_debit(0, 1, 0) {
+                        got += 1;
+                    }
+                }
+                got
+            }));
+        }
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 1000, "exactly capacity granted");
+        assert_eq!(acc.free(0), 0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Storage hierarchy: ordered tiers of devices with space accounting and
+//! the paper's fastest-with-sufficient-space selection rule (§3.1.2).
+//!
+//! The hierarchy is *abstract*: a device is an index with a tier rank and
+//! a capacity. The simulator maps indices to [`crate::sim::Location`]s and
+//! the real-bytes VFS maps them to directories, so the same selection and
+//! accounting code drives both (DESIGN.md S8/S9).
+//!
+//! Selection rule, as in the paper:
+//! * walk tiers from fastest to slowest;
+//! * within a tier, visit devices in *randomly shuffled* order ("selected
+//!   by Sea via a random shuffling", §4.1);
+//! * a device is eligible when its free space is at least the
+//!   *reservation floor* `p · F` (parallel processes × max file size):
+//!   Sea "calculates the minimum space required on a storage device to
+//!   write the file to it" from those two user-provided numbers;
+//! * the chosen device is debited the actual file size; if no device in
+//!   any tier is eligible the caller falls back to the PFS.
+
+mod accountant;
+mod select;
+
+pub use accountant::SpaceAccountant;
+pub use select::{select_device, SelectCfg};
+
+/// Index of a device within a [`Hierarchy`].
+pub type DeviceRef = usize;
+
+/// Static description of one device.
+#[derive(Debug, Clone)]
+pub struct DeviceInfo {
+    /// Tier rank: 0 = fastest. Devices with equal rank are peers.
+    pub tier: u8,
+    /// Usable capacity in bytes.
+    pub capacity: u64,
+    /// Display name (diagnostics / reports).
+    pub name: String,
+}
+
+/// An ordered set of devices forming the Sea hierarchy for one node.
+#[derive(Debug, Clone, Default)]
+pub struct Hierarchy {
+    devices: Vec<DeviceInfo>,
+}
+
+impl Hierarchy {
+    /// Empty hierarchy.
+    pub fn new() -> Hierarchy {
+        Hierarchy::default()
+    }
+
+    /// Add a device; returns its [`DeviceRef`].
+    pub fn add(&mut self, tier: u8, capacity: u64, name: impl Into<String>) -> DeviceRef {
+        self.devices.push(DeviceInfo { tier, capacity, name: name.into() });
+        self.devices.len() - 1
+    }
+
+    /// Device metadata.
+    pub fn info(&self, d: DeviceRef) -> &DeviceInfo {
+        &self.devices[d]
+    }
+
+    /// Number of devices.
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// True when no devices are registered.
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Distinct tier ranks, ascending (fastest first).
+    pub fn tiers(&self) -> Vec<u8> {
+        let mut t: Vec<u8> = self.devices.iter().map(|d| d.tier).collect();
+        t.sort_unstable();
+        t.dedup();
+        t
+    }
+
+    /// Devices of a given tier, in insertion order.
+    pub fn tier_devices(&self, tier: u8) -> Vec<DeviceRef> {
+        self.devices
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.tier == tier)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Iterate (ref, info) pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (DeviceRef, &DeviceInfo)> {
+        self.devices.iter().enumerate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::GIB;
+
+    #[test]
+    fn tiers_sorted_and_deduped() {
+        let mut h = Hierarchy::new();
+        h.add(1, GIB, "ssd0");
+        h.add(0, GIB, "tmpfs");
+        h.add(1, GIB, "ssd1");
+        assert_eq!(h.tiers(), vec![0, 1]);
+        assert_eq!(h.tier_devices(1).len(), 2);
+        assert_eq!(h.info(1).name, "tmpfs");
+        assert_eq!(h.len(), 3);
+    }
+}

@@ -1,0 +1,120 @@
+//! The paper's device-selection rule (§3.1.2).
+
+use crate::hierarchy::{DeviceRef, Hierarchy, SpaceAccountant};
+use crate::util::Rng;
+
+/// Selection parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SelectCfg {
+    /// Max file size produced by the workflow (`F`, user-declared).
+    pub max_file_size: u64,
+    /// Parallel application processes on this node (`p`, user-declared).
+    pub parallel_procs: u64,
+}
+
+impl SelectCfg {
+    /// The eligibility floor `p · F`.
+    pub fn floor(&self) -> u64 {
+        self.max_file_size.saturating_mul(self.parallel_procs)
+    }
+}
+
+/// Pick the fastest eligible device for a `size`-byte file and debit it.
+///
+/// Tiers are walked fastest-first; peers within a tier are visited in
+/// randomly shuffled order (load spreading across same-speed disks).
+/// Returns `None` when no device qualifies — the caller falls back to the
+/// PFS (which Sea always treats as the unbounded last resort).
+pub fn select_device(
+    h: &Hierarchy,
+    acc: &SpaceAccountant,
+    cfg: &SelectCfg,
+    size: u64,
+    rng: &mut Rng,
+) -> Option<DeviceRef> {
+    let floor = cfg.floor().max(size);
+    for tier in h.tiers() {
+        let mut peers = h.tier_devices(tier);
+        rng.shuffle(&mut peers);
+        for d in peers {
+            if acc.try_debit(d, size, floor) {
+                return Some(d);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::MIB;
+
+    fn setup() -> (Hierarchy, SpaceAccountant) {
+        let mut h = Hierarchy::new();
+        h.add(0, 10 * MIB, "tmpfs");
+        h.add(1, 100 * MIB, "ssd0");
+        h.add(1, 100 * MIB, "ssd1");
+        let acc = SpaceAccountant::new(&h);
+        (h, acc)
+    }
+
+    fn cfg(f: u64, p: u64) -> SelectCfg {
+        SelectCfg { max_file_size: f, parallel_procs: p }
+    }
+
+    #[test]
+    fn prefers_fastest_tier() {
+        let (h, acc) = setup();
+        let mut rng = Rng::new(1);
+        let d = select_device(&h, &acc, &cfg(MIB, 2), MIB, &mut rng).unwrap();
+        assert_eq!(h.info(d).name, "tmpfs");
+    }
+
+    #[test]
+    fn falls_to_next_tier_when_floor_unmet() {
+        let (h, acc) = setup();
+        let mut rng = Rng::new(1);
+        // floor 4*5 = 20 MiB > tmpfs capacity: tmpfs never eligible
+        let d = select_device(&h, &acc, &cfg(4 * MIB, 5), MIB, &mut rng).unwrap();
+        assert!(h.info(d).name.starts_with("ssd"));
+    }
+
+    #[test]
+    fn shuffling_spreads_across_peers() {
+        let (h, acc) = setup();
+        let mut rng = Rng::new(7);
+        let c = cfg(20 * MIB, 1); // skip tmpfs (floor 20 MiB)
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..20 {
+            let d = select_device(&h, &acc, &c, MIB, &mut rng).unwrap();
+            seen.insert(h.info(d).name.clone());
+            acc.credit(d, MIB); // keep space constant
+        }
+        assert_eq!(seen.len(), 2, "both ssds should be picked over 20 draws");
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let (h, acc) = setup();
+        let mut rng = Rng::new(3);
+        let c = cfg(MIB, 1);
+        let mut picks = 0;
+        while select_device(&h, &acc, &c, 10 * MIB, &mut rng).is_some() {
+            picks += 1;
+            assert!(picks < 1000, "must exhaust");
+        }
+        // 10 MiB files: 1 fits tmpfs, 10 per ssd => 21 total
+        assert_eq!(picks, 21);
+        assert!(select_device(&h, &acc, &c, 10 * MIB, &mut rng).is_none());
+    }
+
+    #[test]
+    fn floor_is_at_least_file_size() {
+        let (h, acc) = setup();
+        let mut rng = Rng::new(3);
+        // tiny declared F but huge file: floor must still cover the file
+        let d = select_device(&h, &acc, &cfg(1, 1), 50 * MIB, &mut rng).unwrap();
+        assert!(h.info(d).name.starts_with("ssd"));
+    }
+}

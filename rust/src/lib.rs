@@ -1,0 +1,45 @@
+//! # sea — reproduction of *"Sea: A lightweight data-placement library for
+//! Big Data scientific computing"* (Hayot-Sasson, Dugré, Glatard, 2022)
+//!
+//! Sea intercepts POSIX file-system calls made by unmodified scientific
+//! pipelines and transparently redirects files under a user mountpoint to
+//! the fastest storage device with sufficient space in a user-declared
+//! hierarchy (tmpfs → local disks → parallel file system), with rule-driven
+//! flush / evict / prefetch memory management.
+//!
+//! This crate is the Layer-3 Rust coordinator of a three-layer stack
+//! (see `DESIGN.md`):
+//!
+//! * [`vfs`] — the interception layer: a `Vfs` trait with real
+//!   (`std::fs`) and simulated backends, and `SeaFs` implementing the
+//!   paper's mountpoint translation on top of any backend.
+//! * [`hierarchy`] + [`placement`] — storage tiers, space accounting and
+//!   the `.sea_flushlist` / `.sea_evictlist` / `.sea_prefetchlist`
+//!   memory-management modes of Table 1.
+//! * [`sim`] — a fluid-flow discrete-event cluster simulator (Lustre with
+//!   MDS/OSS/OST, per-node page cache with dirty-ratio writeback, local
+//!   disks, NICs) standing in for the paper's physical testbed.
+//! * [`model`] — the analytic performance model, Eqs. (1)–(11).
+//! * [`runtime`] — PJRT loader/executor for the AOT-lowered JAX/Pallas
+//!   compute (`artifacts/*.hlo.txt`); Python never runs at request time.
+//! * [`workload`] + [`coordinator`] — the incrementation application
+//!   (paper Algorithm 1) and the leader/worker pipeline driver.
+//! * [`bench`], [`testkit`] — offline substitutes for criterion/proptest.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod hierarchy;
+pub mod model;
+pub mod placement;
+pub mod report;
+pub mod runtime;
+pub mod testkit;
+pub mod vfs;
+pub mod workload;
+pub mod sim;
+pub mod util;
+
+pub use error::{Error, Result};

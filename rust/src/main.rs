@@ -1,0 +1,16 @@
+//! `sea` binary: CLI entry point for the Sea reproduction.
+//!
+//! See `sea --help` (module [`sea::cli`]) for subcommands: real pipeline
+//! runs, paper-scale simulations, analytic model evaluation, device
+//! benchmarks and dataset generation.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match sea::cli::run(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("sea: error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

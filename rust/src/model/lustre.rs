@@ -1,0 +1,107 @@
+//! Lustre makespan model: Eqs. (1)–(5).
+
+use crate::model::{ModelParams, WorkloadVolume};
+
+/// Eq. (2): `L_r = min(cN, sN, d_r · min(d, cp))`.
+pub fn lustre_read_bw(m: &ModelParams) -> f64 {
+    (m.c * m.n_bw)
+        .min(m.s * m.n_bw)
+        .min(m.d_r * m.d.min(m.c * m.p))
+}
+
+/// Eq. (3): `L_w = min(cN, sN, d_w · min(d, cp))`.
+pub fn lustre_write_bw(m: &ModelParams) -> f64 {
+    (m.c * m.n_bw)
+        .min(m.s * m.n_bw)
+        .min(m.d_w * m.d.min(m.c * m.p))
+}
+
+/// Eq. (1): the no-cache Lustre makespan
+/// `M_l = D_r/L_r + D_w/L_w`.
+pub fn makespan_nocache(m: &ModelParams, v: &WorkloadVolume) -> f64 {
+    v.reads() / lustre_read_bw(m) + v.writes() / lustre_write_bw(m)
+}
+
+/// Eq. (4): page-cache-only makespan
+/// `M_c = D_cr/(c·C_r) + D_cw/(c·C_w)` with `D_cr = D_m`,
+/// `D_cw = D_m + D_f` (everything after the first read is cached).
+pub fn page_cache_makespan(m: &ModelParams, v: &WorkloadVolume) -> f64 {
+    v.d_m / (m.c * m.c_r) + v.writes() / (m.c * m.c_w)
+}
+
+/// Eq. (5): the all-cached Lustre lower bound
+/// `M_lc = D_I/L_r + M_c`.
+pub fn makespan_cached(m: &ModelParams, v: &WorkloadVolume) -> f64 {
+    v.d_i / lustre_read_bw(m) + page_cache_makespan(m, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::spec::ClusterSpec;
+    use crate::util::MIB;
+
+    fn m() -> ModelParams {
+        ModelParams::from_spec(&ClusterSpec::paper_default(), 617 * MIB)
+    }
+
+    #[test]
+    fn read_bw_bound_by_streams_then_disks() {
+        let mut p = m();
+        p.p = 1.0;
+        p.c = 1.0;
+        // one stream: d_r * 1
+        assert!((lustre_read_bw(&p) - p.d_r).abs() < 1.0);
+        p.c = 5.0;
+        p.p = 100.0; // cp = 500 > 44 disks
+        let bw = lustre_read_bw(&p);
+        assert!(bw <= p.d * p.d_r + 1.0);
+        assert!(bw <= p.s * p.n_bw + 1.0, "server NICs cap aggregate reads");
+    }
+
+    #[test]
+    fn cached_bound_below_nocache() {
+        let p = m();
+        let v = WorkloadVolume::incrementation(1000, 617 * MIB, 10);
+        assert!(makespan_cached(&p, &v) < makespan_nocache(&p, &v));
+    }
+
+    #[test]
+    fn makespans_scale_with_iterations() {
+        let p = m();
+        let v5 = WorkloadVolume::incrementation(1000, 617 * MIB, 5);
+        let v10 = WorkloadVolume::incrementation(1000, 617 * MIB, 10);
+        assert!(makespan_nocache(&p, &v10) > makespan_nocache(&p, &v5));
+        assert!(makespan_cached(&p, &v10) > makespan_cached(&p, &v5));
+    }
+
+    #[test]
+    fn hand_computed_tiny_case() {
+        // c=1, p=1, N=100, s=1, d=2, d_r=10, d_w=5, mem 100/50
+        let p = ModelParams {
+            c: 1.0,
+            p: 1.0,
+            n_bw: 100.0,
+            s: 1.0,
+            d: 2.0,
+            d_r: 10.0,
+            d_w: 5.0,
+            c_r: 100.0,
+            c_w: 50.0,
+            t: 0.0,
+            g: 1.0,
+            r: 0.0,
+            g_r: 1.0,
+            g_w: 1.0,
+            file: 10.0,
+        };
+        // L_r = min(100, 100, 10*1) = 10; L_w = min(100,100,5*1) = 5
+        assert_eq!(lustre_read_bw(&p), 10.0);
+        assert_eq!(lustre_write_bw(&p), 5.0);
+        let v = WorkloadVolume { d_i: 100.0, d_m: 50.0, d_f: 100.0, file: 10.0 };
+        // M_l = 150/10 + 150/5 = 45
+        assert_eq!(makespan_nocache(&p, &v), 45.0);
+        // M_c = 50/100 + 150/50 = 3.5 ; M_lc = 100/10 + 3.5 = 13.5
+        assert_eq!(makespan_cached(&p, &v), 13.5);
+    }
+}

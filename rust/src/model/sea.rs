@@ -1,0 +1,167 @@
+//! Sea makespan model: Eqs. (6)–(11).
+
+use crate::model::lustre::{lustre_read_bw, lustre_write_bw};
+use crate::model::{ModelParams, WorkloadVolume};
+
+/// Per-tier data volumes computed by the fill rule (Eqs. 8–10).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SeaBreakdown {
+    /// Intermediate bytes read from tmpfs (`D_tr`).
+    pub d_tr: f64,
+    /// Bytes written to tmpfs (`D_tw`).
+    pub d_tw: f64,
+    /// Bytes read from local disks (`D_gr`).
+    pub d_gr: f64,
+    /// Bytes written to local disks (`D_gw`).
+    pub d_gw: f64,
+    /// Intermediate bytes read from Lustre (`D_Lr`).
+    pub d_lr: f64,
+    /// Bytes spilled to Lustre (`D_Lw`).
+    pub d_lw: f64,
+}
+
+/// Apply the tier fill rule of Eqs. (8)–(10).
+///
+/// Usable space per tier subtracts the `p·F` reservation per node:
+/// tmpfs `c·(t − pF)`, disks `c·(g·r − pF)`. Writes fill fastest-first;
+/// reads of intermediate data come from wherever it was written.
+pub fn sea_breakdown(m: &ModelParams, v: &WorkloadVolume) -> SeaBreakdown {
+    let tmpfs_space = m.c * (m.t - m.p * m.file).max(0.0);
+    let disk_space = m.c * (m.g * m.r - m.p * m.file).max(0.0);
+
+    // Eq. (8)
+    let d_tr = v.d_m.min(tmpfs_space);
+    let d_tw = (v.d_m + v.d_f).min(tmpfs_space);
+    // Eq. (9)
+    let d_gr = (v.d_m - d_tr).max(0.0).min(disk_space);
+    let d_gw = (v.d_m + v.d_f - d_tw).max(0.0).min(disk_space);
+    // Eq. (10)
+    let d_lr = (v.d_m - d_gr - d_tr).max(0.0);
+    let d_lw = (v.d_m + v.d_f - d_gw - d_tw).max(0.0);
+
+    SeaBreakdown { d_tr, d_tw, d_gr, d_gw, d_lr, d_lw }
+}
+
+/// Eq. (7): `M_S = M_SL + M_Sg + M_St` — the no-cache Sea makespan.
+pub fn sea_makespan(m: &ModelParams, v: &WorkloadVolume) -> f64 {
+    let b = sea_breakdown(m, v);
+    // Eq. (8): tmpfs component
+    let m_st = b.d_tr / (m.c * m.c_r) + b.d_tw / (m.c * m.c_w);
+    // Eq. (9): local-disk component (g disks per node, c nodes)
+    let m_sg = b.d_gr / (m.g * m.c * m.g_r) + b.d_gw / (m.g * m.c * m.g_w);
+    // Eq. (10): Lustre component (initial read + spills)
+    let m_sl = v.d_i / lustre_read_bw(m)
+        + b.d_lr / lustre_read_bw(m)
+        + b.d_lw / lustre_write_bw(m);
+    m_st + m_sg + m_sl
+}
+
+/// Eq. (11): the in-memory Sea lower bound
+/// `M_Sc = D_I/L_r + D_m/(c·C_r) + (D_m + D_f)/(c·C_w)`.
+pub fn sea_makespan_cached(m: &ModelParams, v: &WorkloadVolume) -> f64 {
+    v.d_i / lustre_read_bw(m)
+        + v.d_m / (m.c * m.c_r)
+        + (v.d_m + v.d_f) / (m.c * m.c_w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::spec::ClusterSpec;
+    use crate::util::{GIB, MIB};
+
+    fn m() -> ModelParams {
+        ModelParams::from_spec(&ClusterSpec::paper_default(), 617 * MIB)
+    }
+
+    #[test]
+    fn breakdown_conserves_volume() {
+        let p = m();
+        for iters in [1usize, 5, 10, 15] {
+            let v = WorkloadVolume::incrementation(1000, 617 * MIB, iters);
+            let b = sea_breakdown(&p, &v);
+            let reads = b.d_tr + b.d_gr + b.d_lr;
+            let writes = b.d_tw + b.d_gw + b.d_lw;
+            assert!((reads - v.d_m).abs() < 1.0, "iters {iters}: reads");
+            assert!((writes - (v.d_m + v.d_f)).abs() < 1.0, "iters {iters}: writes");
+            assert!(b.d_tr >= 0.0 && b.d_gr >= 0.0 && b.d_lr >= 0.0);
+        }
+    }
+
+    #[test]
+    fn fill_order_is_tmpfs_first() {
+        let p = m();
+        // small volume fits entirely in tmpfs: 100 blocks * 617 MiB * 2
+        let v = WorkloadVolume::incrementation(100, 617 * MIB, 2);
+        let b = sea_breakdown(&p, &v);
+        assert_eq!(b.d_gw, 0.0, "no disk writes while tmpfs has room");
+        assert_eq!(b.d_lw, 0.0);
+        assert!((b.d_tw - v.writes()).abs() < 1.0);
+    }
+
+    #[test]
+    fn reservation_shrinks_usable_tmpfs() {
+        let mut p = m();
+        let v = WorkloadVolume::incrementation(1000, 617 * MIB, 10);
+        let b1 = sea_breakdown(&p, &v);
+        p.p = 64.0; // 64 procs reserve 64·617 MiB ≈ 38.6 GiB per node
+        let b2 = sea_breakdown(&p, &v);
+        assert!(b2.d_tw < b1.d_tw);
+    }
+
+    #[test]
+    fn overflow_cascades_to_lustre() {
+        let mut p = m();
+        p.t = GIB as f64; // tiny tmpfs
+        p.r = GIB as f64; // tiny disks
+        let v = WorkloadVolume::incrementation(1000, 617 * MIB, 10);
+        let b = sea_breakdown(&p, &v);
+        assert!(b.d_lw > 0.0, "spill to lustre expected");
+        assert!(b.d_lr > 0.0);
+    }
+
+    #[test]
+    fn hand_computed_tiny_case() {
+        let p = ModelParams {
+            c: 2.0,
+            p: 1.0,
+            n_bw: 1e9,
+            s: 1.0,
+            d: 4.0,
+            d_r: 100.0,
+            d_w: 50.0,
+            c_r: 1000.0,
+            c_w: 500.0,
+            t: 60.0,
+            g: 2.0,
+            r: 30.0,
+            g_r: 200.0,
+            g_w: 100.0,
+            file: 10.0,
+        };
+        let v = WorkloadVolume { d_i: 100.0, d_m: 150.0, d_f: 50.0, file: 10.0 };
+        let b = sea_breakdown(&p, &v);
+        // tmpfs space = 2*(60-10) = 100; disks = 2*(2*30-10) = 100
+        assert_eq!(b.d_tr, 100.0);
+        assert_eq!(b.d_tw, 100.0);
+        // d_gr = min(150-100, 100) = 50 ; d_gw = min(200-100, 100) = 100
+        assert_eq!(b.d_gr, 50.0);
+        assert_eq!(b.d_gw, 100.0);
+        // d_lr = 150-100-50 = 0 ; d_lw = 200-100-100 = 0
+        assert_eq!(b.d_lr, 0.0);
+        assert_eq!(b.d_lw, 0.0);
+        // M_St = 100/(2*1000) + 100/(2*500) = 0.05 + 0.1 = 0.15
+        // M_Sg = 50/(2*2*200) + 100/(2*2*100) = 0.0625 + 0.25 = 0.3125
+        // L_r = min(2e9, 1e9, 100*min(4,2)) = 200 ; M_SL = 100/200 = 0.5
+        let ms = sea_makespan(&p, &v);
+        assert!((ms - (0.15 + 0.3125 + 0.5)).abs() < 1e-9, "ms = {ms}");
+    }
+
+    #[test]
+    fn cached_bound_is_monotone_in_volume() {
+        let p = m();
+        let v1 = WorkloadVolume::incrementation(1000, 617 * MIB, 5);
+        let v2 = WorkloadVolume::incrementation(1000, 617 * MIB, 10);
+        assert!(sea_makespan_cached(&p, &v1) < sea_makespan_cached(&p, &v2));
+    }
+}

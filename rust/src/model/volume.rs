@@ -1,0 +1,67 @@
+//! Workload data-volume description used by the analytic model.
+
+/// Data volumes of one experiment run (f64 bytes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadVolume {
+    /// Input data read once from the PFS (`D_I`).
+    pub d_i: f64,
+    /// Intermediate data, written *and* re-read (`D_m`).
+    pub d_m: f64,
+    /// Final output data (`D_f`).
+    pub d_f: f64,
+    /// Size of a single file (`F`).
+    pub file: f64,
+}
+
+impl WorkloadVolume {
+    /// Volumes of the incrementation application (Algorithm 1):
+    /// `blocks` chunks of `file_size` bytes, `iterations` increment
+    /// rounds. Each round writes every chunk; rounds 2..n re-read the
+    /// previous round's output, so intermediate data is
+    /// `(n-1) · blocks · F` and the final round's output is `blocks · F`.
+    pub fn incrementation(blocks: usize, file_size: u64, iterations: usize) -> WorkloadVolume {
+        let b = blocks as f64;
+        let f = file_size as f64;
+        let n = iterations.max(1) as f64;
+        WorkloadVolume {
+            d_i: b * f,
+            d_m: (n - 1.0) * b * f,
+            d_f: b * f,
+            file: f,
+        }
+    }
+
+    /// Total bytes read (`D_r = D_I + D_m`).
+    pub fn reads(&self) -> f64 {
+        self.d_i + self.d_m
+    }
+
+    /// Total bytes written (`D_w = D_m + D_f`).
+    pub fn writes(&self) -> f64 {
+        self.d_m + self.d_f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::MIB;
+
+    #[test]
+    fn incrementation_volumes() {
+        let v = WorkloadVolume::incrementation(1000, 617 * MIB, 10);
+        let f = (617 * MIB) as f64;
+        assert_eq!(v.d_i, 1000.0 * f);
+        assert_eq!(v.d_m, 9000.0 * f);
+        assert_eq!(v.d_f, 1000.0 * f);
+        assert_eq!(v.reads(), 10_000.0 * f);
+        assert_eq!(v.writes(), 10_000.0 * f);
+    }
+
+    #[test]
+    fn single_iteration_has_no_intermediate() {
+        let v = WorkloadVolume::incrementation(10, MIB, 1);
+        assert_eq!(v.d_m, 0.0);
+        assert_eq!(v.writes(), v.d_f);
+    }
+}

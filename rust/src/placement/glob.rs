@@ -1,0 +1,107 @@
+//! Minimal glob matching for Sea rule lists (offline `glob` substitute).
+//!
+//! Supported syntax, matched against `/`-separated paths:
+//! * `?`  — any single character except `/`
+//! * `*`  — any run of characters except `/`
+//! * `**` — any run of characters *including* `/`
+//! * everything else matches literally.
+
+/// Does `pat` match `path` in full?
+pub fn glob_match(pat: &str, path: &str) -> bool {
+    let p: Vec<char> = pat.chars().collect();
+    let s: Vec<char> = path.chars().collect();
+    matches_at(&p, 0, &s, 0)
+}
+
+fn matches_at(p: &[char], mut pi: usize, s: &[char], mut si: usize) -> bool {
+    // iterative with backtracking stack for * / ** (classic two-pointer
+    // doesn't cover the two star kinds cleanly, so do explicit recursion
+    // on stars only — patterns are short).
+    loop {
+        if pi == p.len() {
+            return si == s.len();
+        }
+        match p[pi] {
+            '*' => {
+                let double = pi + 1 < p.len() && p[pi + 1] == '*';
+                let (skip, cross_sep) = if double { (2, true) } else { (1, false) };
+                // try every possible extent, shortest first
+                let mut k = si;
+                loop {
+                    if matches_at(p, pi + skip, s, k) {
+                        return true;
+                    }
+                    if k == s.len() || (!cross_sep && s[k] == '/') {
+                        return false;
+                    }
+                    k += 1;
+                }
+            }
+            '?' => {
+                if si == s.len() || s[si] == '/' {
+                    return false;
+                }
+                pi += 1;
+                si += 1;
+            }
+            c => {
+                if si == s.len() || s[si] != c {
+                    return false;
+                }
+                pi += 1;
+                si += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals() {
+        assert!(glob_match("a/b.txt", "a/b.txt"));
+        assert!(!glob_match("a/b.txt", "a/b.txd"));
+        assert!(!glob_match("a/b", "a/b/c"));
+    }
+
+    #[test]
+    fn single_star_stops_at_separator() {
+        assert!(glob_match("out/*.nii", "out/block_001.nii"));
+        assert!(!glob_match("out/*.nii", "out/sub/block.nii"));
+        assert!(glob_match("*.log", "app.log"));
+        assert!(!glob_match("*.log", "dir/app.log"));
+    }
+
+    #[test]
+    fn double_star_crosses_separators() {
+        assert!(glob_match("**/*.nii", "a/b/c/block.nii"));
+        assert!(glob_match("out/**", "out/x/y/z"));
+        assert!(glob_match("**", "anything/at/all"));
+        assert!(!glob_match("**/*.nii", "a/b/c/block.txt"));
+    }
+
+    #[test]
+    fn question_mark() {
+        assert!(glob_match("iter_?.dat", "iter_3.dat"));
+        assert!(!glob_match("iter_?.dat", "iter_10.dat"));
+        assert!(!glob_match("a?c", "a/c"));
+    }
+
+    #[test]
+    fn tricky_backtracking() {
+        assert!(glob_match("*_final_*", "block_final_0001"));
+        assert!(glob_match("a*b*c", "axxbyyc"));
+        assert!(!glob_match("a*b*c", "axxbyy"));
+        assert!(glob_match("**final**", "x/y/final/z"));
+    }
+
+    #[test]
+    fn empty_cases() {
+        assert!(glob_match("", ""));
+        assert!(!glob_match("", "a"));
+        assert!(glob_match("*", ""));
+        assert!(glob_match("**", ""));
+    }
+}

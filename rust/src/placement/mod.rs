@@ -1,0 +1,21 @@
+//! Sea memory management: rule lists, Table 1 modes, and placement
+//! policies (DESIGN.md S8/S10).
+//!
+//! * [`glob`] — pattern matching for the rule lists;
+//! * [`rules`] — `.sea_flushlist` / `.sea_evictlist` / `.sea_prefetchlist`
+//!   parsing and the Copy/Remove/Move/Keep mode table;
+//! * [`table`] — path ⇄ id interning shared by policies and workloads;
+//! * [`policy`] — [`SeaPolicy`] (hierarchy placement + rule actions) and
+//!   the [`LustrePolicy`] baseline, as simulator placers. The real-bytes
+//!   counterpart lives in `vfs::sea` and shares everything but the device
+//!   mapping.
+
+pub mod glob;
+pub mod policy;
+pub mod rules;
+pub mod table;
+
+pub use glob::glob_match;
+pub use policy::{LustrePolicy, SeaPolicy};
+pub use rules::{MgmtMode, PatternList, RuleSet};
+pub use table::FileTable;

@@ -1,0 +1,250 @@
+//! Placement policies: Sea's hierarchy policy and the plain-Lustre
+//! baseline, as [`SimPlacer`]s for the simulator.
+//!
+//! The real-bytes VFS uses the same [`Hierarchy`]/[`SpaceAccountant`]/
+//! [`RuleSet`] machinery (module `vfs::sea`); only the device mapping
+//! differs (directories instead of [`Location`]s).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::hierarchy::{select_device, DeviceRef, Hierarchy, SelectCfg, SpaceAccountant};
+use crate::placement::rules::{MgmtMode, RuleSet};
+use crate::placement::table::FileTable;
+use crate::sim::app::{MgmtAction, SimPlacer};
+use crate::sim::spec::ClusterSpec;
+use crate::sim::stack::{FileId, StackState};
+use crate::sim::topology::Location;
+use crate::util::Rng;
+
+/// Baseline: every file goes straight to Lustre; no management actions.
+#[derive(Debug, Default)]
+pub struct LustrePolicy;
+
+impl SimPlacer for LustrePolicy {
+    fn place(&mut self, _st: &mut StackState, _node: usize, _f: FileId, _s: u64) -> Location {
+        Location::Lustre
+    }
+    fn on_write_complete(&mut self, _file: FileId) -> Vec<MgmtAction> {
+        Vec::new()
+    }
+    fn on_freed(&mut self, _loc: Location, _size: u64) {}
+}
+
+/// One node's view of the Sea hierarchy (simulation flavour).
+struct NodeDevices {
+    hierarchy: Hierarchy,
+    accountant: SpaceAccountant,
+    /// DeviceRef → simulator location.
+    loc_of: Vec<Location>,
+    /// Reverse map for space credits.
+    dev_of: HashMap<Location, DeviceRef>,
+}
+
+/// Sea's placement policy over the simulated cluster.
+///
+/// Owns per-node hierarchies (tmpfs tier 0, local disks tier 1), the
+/// `p·F` reservation config, and the rule lists that decide Table 1
+/// actions after each write.
+pub struct SeaPolicy {
+    nodes: Vec<NodeDevices>,
+    cfg: SelectCfg,
+    rules: RuleSet,
+    table: Arc<FileTable>,
+    rng: Rng,
+    /// Statistics: placements per tier name.
+    pub placed: HashMap<&'static str, u64>,
+    /// Statistics: placements that fell back to Lustre.
+    pub fallbacks: u64,
+}
+
+impl SeaPolicy {
+    /// Build the per-node hierarchies from a cluster spec.
+    pub fn new(
+        spec: &ClusterSpec,
+        cfg: SelectCfg,
+        rules: RuleSet,
+        table: Arc<FileTable>,
+        seed: u64,
+    ) -> SeaPolicy {
+        let mut nodes = Vec::with_capacity(spec.nodes);
+        for n in 0..spec.nodes {
+            let mut h = Hierarchy::new();
+            let mut loc_of = Vec::new();
+            let mut dev_of = HashMap::new();
+            let d = h.add(0, spec.tmpfs_bytes, format!("n{n}.tmpfs"));
+            loc_of.push(Location::Tmpfs { node: n });
+            dev_of.insert(Location::Tmpfs { node: n }, d);
+            for disk in 0..spec.disks_per_node {
+                let d = h.add(1, spec.disk_bytes, format!("n{n}.disk{disk}"));
+                loc_of.push(Location::Disk { node: n, disk });
+                dev_of.insert(Location::Disk { node: n, disk }, d);
+            }
+            let accountant = SpaceAccountant::new(&h);
+            nodes.push(NodeDevices { hierarchy: h, accountant, loc_of, dev_of });
+        }
+        SeaPolicy {
+            nodes,
+            cfg,
+            rules,
+            table,
+            rng: Rng::new(seed),
+            placed: HashMap::new(),
+            fallbacks: 0,
+        }
+    }
+
+    /// Free bytes on a node's fastest tier (diagnostics).
+    pub fn tmpfs_free(&self, node: usize) -> u64 {
+        self.nodes[node].accountant.free(0)
+    }
+}
+
+impl SimPlacer for SeaPolicy {
+    fn place(&mut self, _st: &mut StackState, node: usize, _file: FileId, size: u64) -> Location {
+        let nd = &self.nodes[node];
+        match select_device(&nd.hierarchy, &nd.accountant, &self.cfg, size, &mut self.rng) {
+            Some(d) => {
+                let loc = nd.loc_of[d];
+                *self.placed.entry(loc.tier_name()).or_default() += 1;
+                loc
+            }
+            None => {
+                self.fallbacks += 1;
+                *self.placed.entry("lustre").or_default() += 1;
+                Location::Lustre
+            }
+        }
+    }
+
+    fn on_write_complete(&mut self, file: FileId) -> Vec<MgmtAction> {
+        let path = self.table.path(file);
+        match self.rules.mode_for(&path) {
+            MgmtMode::Copy => vec![MgmtAction::Flush(file)],
+            MgmtMode::Move => vec![MgmtAction::FlushEvict(file)],
+            MgmtMode::Remove => vec![MgmtAction::Evict(file)],
+            MgmtMode::Keep => Vec::new(),
+        }
+    }
+
+    fn on_freed(&mut self, loc: Location, size: u64) {
+        let node = match loc {
+            Location::Tmpfs { node } | Location::Disk { node, .. } => node,
+            Location::Lustre => return,
+        };
+        let nd = &self.nodes[node];
+        if let Some(&d) = nd.dev_of.get(&loc) {
+            nd.accountant.credit(d, size);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::Sim;
+    use crate::sim::stack::Stack;
+    use crate::util::{GIB, MIB};
+
+    fn spec() -> ClusterSpec {
+        ClusterSpec {
+            nodes: 2,
+            disks_per_node: 2,
+            tmpfs_bytes: 10 * MIB,
+            disk_bytes: 100 * MIB,
+            ..ClusterSpec::default()
+        }
+    }
+
+    fn policy(rules: RuleSet) -> (SeaPolicy, Arc<FileTable>) {
+        let table = Arc::new(FileTable::new());
+        let cfg = SelectCfg { max_file_size: MIB, parallel_procs: 2 };
+        (SeaPolicy::new(&spec(), cfg, rules, table.clone(), 42), table)
+    }
+
+    fn stack_state() -> (Sim, Stack) {
+        let mut sim = Sim::new();
+        let stack = Stack::new(&mut sim, &spec());
+        (sim, stack)
+    }
+
+    #[test]
+    fn fills_tmpfs_then_disks_then_lustre() {
+        let (mut p, table) = policy(RuleSet::default());
+        let (_sim, stack) = stack_state();
+        let mut st = stack.state.borrow_mut();
+        let mut tiers = Vec::new();
+        for i in 0..230 {
+            let f = table.intern(&format!("f{i}"));
+            tiers.push(p.place(&mut st, 0, f, MIB).tier_name());
+        }
+        // 10 MiB tmpfs with floor 2 MiB -> ~8 placements; 2x100 MiB disks
+        // with floor 2 -> ~198; rest lustre
+        let tmpfs = tiers.iter().filter(|t| **t == "tmpfs").count();
+        let disk = tiers.iter().filter(|t| **t == "local disk").count();
+        let lustre = tiers.iter().filter(|t| **t == "lustre").count();
+        assert!(tmpfs >= 8 && tmpfs <= 10, "tmpfs {tmpfs}");
+        assert!(disk >= 196 && disk <= 200, "disk {disk}");
+        assert!(lustre >= 20, "lustre {lustre}");
+        assert!(p.fallbacks > 0);
+        // fastest-first: first placement must be tmpfs
+        assert_eq!(tiers[0], "tmpfs");
+    }
+
+    #[test]
+    fn nodes_have_independent_space() {
+        let (mut p, table) = policy(RuleSet::default());
+        let (_sim, stack) = stack_state();
+        let mut st = stack.state.borrow_mut();
+        for i in 0..8 {
+            let f = table.intern(&format!("a{i}"));
+            p.place(&mut st, 0, f, MIB);
+        }
+        // node 1 untouched: still places on its tmpfs
+        let f = table.intern("b0");
+        let loc = p.place(&mut st, 1, f, MIB);
+        assert_eq!(loc, Location::Tmpfs { node: 1 });
+    }
+
+    #[test]
+    fn rules_translate_to_actions() {
+        let rules = RuleSet::from_texts("out/final_*", "out/final_*\nscratch/*", "");
+        let (mut p, table) = policy(rules);
+        let fin = table.intern("out/final_3");
+        let scr = table.intern("scratch/tmp");
+        let keep = table.intern("out/iter_1");
+        assert_eq!(p.on_write_complete(fin), vec![MgmtAction::FlushEvict(fin)]);
+        assert_eq!(p.on_write_complete(scr), vec![MgmtAction::Evict(scr)]);
+        assert_eq!(p.on_write_complete(keep), vec![]);
+    }
+
+    #[test]
+    fn freed_space_is_reusable() {
+        let (mut p, table) = policy(RuleSet::default());
+        let (_sim, stack) = stack_state();
+        let mut st = stack.state.borrow_mut();
+        // fill tmpfs: 9 placements leave 1 MiB free (< 2 MiB floor)
+        let mut placed = Vec::new();
+        for i in 0..9 {
+            let f = table.intern(&format!("x{i}"));
+            placed.push(p.place(&mut st, 0, f, MIB));
+        }
+        assert!(placed.iter().all(|l| *l == Location::Tmpfs { node: 0 }));
+        // exhausted -> next goes to disk
+        let f = table.intern("spill");
+        assert_eq!(p.place(&mut st, 0, f, MIB).tier_name(), "local disk");
+        // credit back 4 MiB -> tmpfs eligible again (floor 2 MiB)
+        p.on_freed(Location::Tmpfs { node: 0 }, 4 * MIB);
+        let f2 = table.intern("again");
+        assert_eq!(p.place(&mut st, 0, f2, MIB), Location::Tmpfs { node: 0 });
+    }
+
+    #[test]
+    fn lustre_policy_places_everything_on_lustre() {
+        let mut p = LustrePolicy;
+        let (_sim, stack) = stack_state();
+        let mut st = stack.state.borrow_mut();
+        assert_eq!(p.place(&mut st, 0, 1, GIB), Location::Lustre);
+        assert!(p.on_write_complete(1).is_empty());
+    }
+}

@@ -1,0 +1,182 @@
+//! Sea's rule lists and the Table 1 memory-management modes.
+//!
+//! | Mode   | `.sea_flushlist` | `.sea_evictlist` |
+//! |--------|------------------|------------------|
+//! | Copy   | yes              | no               |
+//! | Remove | no               | yes              |
+//! | Move   | yes              | yes              |
+//! | Keep   | no               | no               |
+//!
+//! A third list, `.sea_prefetchlist`, names input files to pull into the
+//! fast tiers at startup.
+
+use std::fs;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::placement::glob::glob_match;
+
+/// The four per-file modes of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MgmtMode {
+    /// Flush to PFS, keep in cache (reused + shared).
+    Copy,
+    /// Drop without persisting (scratch/log files).
+    Remove,
+    /// Flush to PFS then drop from cache (copy-and-remove).
+    Move,
+    /// Stay in cache, never persisted.
+    Keep,
+}
+
+/// One parsed pattern list.
+#[derive(Debug, Clone, Default)]
+pub struct PatternList {
+    patterns: Vec<String>,
+}
+
+impl PatternList {
+    /// Parse a list body: one glob per line, `#` comments, blank lines ok.
+    pub fn parse(text: &str) -> PatternList {
+        PatternList {
+            patterns: text
+                .lines()
+                .map(str::trim)
+                .filter(|l| !l.is_empty() && !l.starts_with('#'))
+                .map(String::from)
+                .collect(),
+        }
+    }
+
+    /// Load from a file; a missing file is an empty list (Sea's default).
+    pub fn load(path: &Path) -> Result<PatternList> {
+        match fs::read_to_string(path) {
+            Ok(text) => Ok(Self::parse(&text)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(PatternList::default()),
+            Err(e) => Err(Error::io(path, e)),
+        }
+    }
+
+    /// Does any pattern match `path` (mount-relative)?
+    pub fn matches(&self, path: &str) -> bool {
+        self.patterns.iter().any(|p| glob_match(p, path))
+    }
+
+    /// Number of patterns.
+    pub fn len(&self) -> usize {
+        self.patterns.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.patterns.is_empty()
+    }
+}
+
+/// The complete rule configuration of a Sea mount.
+#[derive(Debug, Clone, Default)]
+pub struct RuleSet {
+    /// `.sea_flushlist` patterns.
+    pub flush: PatternList,
+    /// `.sea_evictlist` patterns.
+    pub evict: PatternList,
+    /// `.sea_prefetchlist` patterns.
+    pub prefetch: PatternList,
+}
+
+impl RuleSet {
+    /// Build from in-memory pattern bodies.
+    pub fn from_texts(flush: &str, evict: &str, prefetch: &str) -> RuleSet {
+        RuleSet {
+            flush: PatternList::parse(flush),
+            evict: PatternList::parse(evict),
+            prefetch: PatternList::parse(prefetch),
+        }
+    }
+
+    /// Load the three dot-files from a directory (each optional).
+    pub fn load_dir(dir: &Path) -> Result<RuleSet> {
+        Ok(RuleSet {
+            flush: PatternList::load(&dir.join(".sea_flushlist"))?,
+            evict: PatternList::load(&dir.join(".sea_evictlist"))?,
+            prefetch: PatternList::load(&dir.join(".sea_prefetchlist"))?,
+        })
+    }
+
+    /// Table 1: the mode of a (mount-relative) path.
+    pub fn mode_for(&self, rel_path: &str) -> MgmtMode {
+        match (self.flush.matches(rel_path), self.evict.matches(rel_path)) {
+            (true, false) => MgmtMode::Copy,
+            (false, true) => MgmtMode::Remove,
+            (true, true) => MgmtMode::Move,
+            (false, false) => MgmtMode::Keep,
+        }
+    }
+
+    /// Convenience: "flush everything, evict nothing" (Sea copy-all).
+    pub fn copy_all() -> RuleSet {
+        Self::from_texts("**", "", "")
+    }
+
+    /// Convenience: flush+evict only paths matching `final_pat`
+    /// (the paper's in-memory configuration: only the last iteration of
+    /// files is flushed and evicted).
+    pub fn in_memory(final_pat: &str) -> RuleSet {
+        Self::from_texts(final_pat, final_pat, "")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_modes() {
+        let r = RuleSet::from_texts("keepme/**\nshared_*", "scratch/**\nshared_*", "");
+        assert_eq!(r.mode_for("keepme/x"), MgmtMode::Copy);
+        assert_eq!(r.mode_for("scratch/tmp.log"), MgmtMode::Remove);
+        assert_eq!(r.mode_for("shared_01.nii"), MgmtMode::Move);
+        assert_eq!(r.mode_for("other.dat"), MgmtMode::Keep);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let l = PatternList::parse("# header\n\n  *.log  \n# trailing\n");
+        assert_eq!(l.len(), 1);
+        assert!(l.matches("x.log"));
+        assert!(!l.matches("x.dat"));
+    }
+
+    #[test]
+    fn missing_files_mean_empty_lists() {
+        let dir = std::env::temp_dir().join("sea_rules_none");
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = RuleSet::load_dir(&dir).unwrap();
+        assert!(r.flush.is_empty() && r.evict.is_empty() && r.prefetch.is_empty());
+        assert_eq!(r.mode_for("anything"), MgmtMode::Keep);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_dir_reads_dotfiles() {
+        let dir = std::env::temp_dir().join("sea_rules_load");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(".sea_flushlist"), "out/**\n").unwrap();
+        std::fs::write(dir.join(".sea_evictlist"), "out/iter9_*\n").unwrap();
+        std::fs::write(dir.join(".sea_prefetchlist"), "input/**\n").unwrap();
+        let r = RuleSet::load_dir(&dir).unwrap();
+        assert_eq!(r.mode_for("out/iter1_b.dat"), MgmtMode::Copy);
+        assert_eq!(r.mode_for("out/iter9_b.dat"), MgmtMode::Move);
+        assert!(r.prefetch.matches("input/block1"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn presets() {
+        let ca = RuleSet::copy_all();
+        assert_eq!(ca.mode_for("x/y/z"), MgmtMode::Copy);
+        let im = RuleSet::in_memory("**/final_*");
+        assert_eq!(im.mode_for("b/final_3"), MgmtMode::Move);
+        assert_eq!(im.mode_for("b/iter_2"), MgmtMode::Keep);
+    }
+}

@@ -1,0 +1,86 @@
+//! Interning table mapping logical file paths to numeric [`FileId`]s.
+//!
+//! The simulator and the Sea policies work with `u64` ids; paths are the
+//! user-facing identity (and what the rule globs match). One table per
+//! run, shared via `Rc`/`Arc` as needed.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::sim::stack::FileId;
+
+/// Bidirectional path ⇄ id map (thread-safe).
+#[derive(Debug, Default)]
+pub struct FileTable {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    by_path: HashMap<String, FileId>,
+    by_id: Vec<String>,
+}
+
+impl FileTable {
+    /// Empty table.
+    pub fn new() -> FileTable {
+        FileTable::default()
+    }
+
+    /// Get or assign the id for `path`.
+    pub fn intern(&self, path: &str) -> FileId {
+        let mut g = self.inner.lock().expect("filetable poisoned");
+        if let Some(&id) = g.by_path.get(path) {
+            return id;
+        }
+        let id = g.by_id.len() as FileId;
+        g.by_id.push(path.to_string());
+        g.by_path.insert(path.to_string(), id);
+        id
+    }
+
+    /// Look up an existing id (no interning).
+    pub fn get(&self, path: &str) -> Option<FileId> {
+        self.inner.lock().expect("filetable poisoned").by_path.get(path).copied()
+    }
+
+    /// Path of an id (panics on unknown id — ids only come from intern).
+    pub fn path(&self, id: FileId) -> String {
+        self.inner.lock().expect("filetable poisoned").by_id[id as usize].clone()
+    }
+
+    /// Number of interned paths.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("filetable poisoned").by_id.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent() {
+        let t = FileTable::new();
+        let a = t.intern("x/y");
+        let b = t.intern("x/y");
+        assert_eq!(a, b);
+        assert_eq!(t.path(a), "x/y");
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn distinct_paths_distinct_ids() {
+        let t = FileTable::new();
+        let a = t.intern("a");
+        let b = t.intern("b");
+        assert_ne!(a, b);
+        assert_eq!(t.get("a"), Some(a));
+        assert_eq!(t.get("c"), None);
+    }
+}

@@ -1,0 +1,228 @@
+//! Paper-figure sweep drivers: each function regenerates one figure's
+//! data by running the simulator at every sweep point for both systems
+//! and evaluating the analytic model bounds (shaded regions in Fig 2).
+//!
+//! These are used by `sea experiment`, by `examples/bigbrain_paper.rs`,
+//! and by the `bench_fig2*` / `bench_fig3` bench targets.
+
+use crate::coordinator::{run_experiment, ExperimentCfg, Mode, SimReport};
+use crate::error::Result;
+use crate::model::{lustre_bounds, sea_bounds, ModelParams};
+use crate::report::{FigPoint, Figure};
+use crate::sim::spec::ClusterSpec;
+use crate::workload::IncrementationSpec;
+
+/// Scale factor applied to the paper workload so sweeps finish quickly
+/// on a laptop-class host while preserving all contention ratios.
+#[derive(Debug, Clone, Copy)]
+pub struct Scale {
+    /// Multiplier on block count (1.0 = the paper's 1000 blocks).
+    pub blocks: f64,
+}
+
+impl Scale {
+    /// Full paper scale.
+    pub fn paper() -> Scale {
+        Scale { blocks: 1.0 }
+    }
+
+    /// Quick scale for CI / benches (1/10 of the blocks).
+    pub fn quick() -> Scale {
+        Scale { blocks: 0.1 }
+    }
+
+    fn apply(&self, w: &IncrementationSpec) -> IncrementationSpec {
+        let mut w = w.clone();
+        w.blocks = ((w.blocks as f64 * self.blocks).round() as usize).max(1);
+        w
+    }
+}
+
+fn point(
+    spec: &ClusterSpec,
+    workload: &IncrementationSpec,
+    x: f64,
+    seed: u64,
+) -> Result<(FigPoint, SimReport, SimReport)> {
+    let lustre = run_experiment(&ExperimentCfg {
+        spec: spec.clone(),
+        workload: workload.clone(),
+        mode: Mode::Lustre,
+        seed,
+    })?;
+    let sea = run_experiment(&ExperimentCfg {
+        spec: spec.clone(),
+        workload: workload.clone(),
+        mode: Mode::SeaInMemory,
+        seed,
+    })?;
+    let params = ModelParams::from_spec(spec, workload.file_size);
+    let vol = workload.volume();
+    let p = FigPoint {
+        x,
+        lustre: lustre.makespan,
+        sea: sea.makespan,
+        lustre_bounds: lustre_bounds(&params, &vol),
+        sea_bounds: sea_bounds(&params, &vol),
+    };
+    Ok((p, lustre, sea))
+}
+
+/// Fig 2a: vary the number of nodes (paper: 10 iterations).
+pub fn fig2a(base: &ClusterSpec, scale: Scale, nodes: &[usize], seed: u64) -> Result<Figure> {
+    let mut w = IncrementationSpec::paper_default();
+    w.iterations = 10;
+    let w = scale.apply(&w);
+    let mut points = Vec::new();
+    for &n in nodes {
+        let mut spec = base.clone();
+        spec.nodes = n;
+        points.push(point(&spec, &w, n as f64, seed)?.0);
+    }
+    Ok(Figure {
+        id: "fig2a".into(),
+        title: "Fig 2a: varying nodes (10 iterations)".into(),
+        xlabel: "nodes".into(),
+        points,
+    })
+}
+
+/// Fig 2b: vary the number of local disks (paper: 5 iterations).
+pub fn fig2b(base: &ClusterSpec, scale: Scale, disks: &[usize], seed: u64) -> Result<Figure> {
+    let mut w = IncrementationSpec::paper_default();
+    w.iterations = 5;
+    let w = scale.apply(&w);
+    let mut points = Vec::new();
+    for &d in disks {
+        let mut spec = base.clone();
+        spec.disks_per_node = d;
+        points.push(point(&spec, &w, d as f64, seed)?.0);
+    }
+    Ok(Figure {
+        id: "fig2b".into(),
+        title: "Fig 2b: varying local disks (5 iterations)".into(),
+        xlabel: "disks per node".into(),
+        points,
+    })
+}
+
+/// Fig 2c: vary the iteration count (intermediate-data volume).
+pub fn fig2c(base: &ClusterSpec, scale: Scale, iters: &[usize], seed: u64) -> Result<Figure> {
+    let mut points = Vec::new();
+    for &n in iters {
+        let mut w = IncrementationSpec::paper_default();
+        w.iterations = n;
+        let w = scale.apply(&w);
+        points.push(point(base, &w, n as f64, seed)?.0);
+    }
+    Ok(Figure {
+        id: "fig2c".into(),
+        title: "Fig 2c: varying iterations".into(),
+        xlabel: "iterations".into(),
+        points,
+    })
+}
+
+/// Fig 2d: vary parallel processes per node (paper: 5 iterations).
+pub fn fig2d(base: &ClusterSpec, scale: Scale, procs: &[usize], seed: u64) -> Result<Figure> {
+    let mut w = IncrementationSpec::paper_default();
+    w.iterations = 5;
+    let w = scale.apply(&w);
+    let mut points = Vec::new();
+    for &p in procs {
+        let mut spec = base.clone();
+        spec.procs_per_node = p;
+        points.push(point(&spec, &w, p as f64, seed)?.0);
+    }
+    Ok(Figure {
+        id: "fig2d".into(),
+        title: "Fig 2d: varying parallel processes (5 iterations)".into(),
+        xlabel: "processes per node".into(),
+        points,
+    })
+}
+
+/// Fig 3 rows: the three modes at fixed conditions (5 nodes, 6 procs,
+/// 6 disks, 5 iterations).
+pub fn fig3(base: &ClusterSpec, scale: Scale, seed: u64) -> Result<Vec<(String, SimReport)>> {
+    let mut w = IncrementationSpec::paper_default();
+    w.iterations = 5;
+    let w = scale.apply(&w);
+    let mut rows = Vec::new();
+    for mode in [Mode::Lustre, Mode::SeaInMemory, Mode::SeaCopyAll] {
+        let name = mode.name().to_string();
+        let r = run_experiment(&ExperimentCfg {
+            spec: base.clone(),
+            workload: w.clone(),
+            mode,
+            seed,
+        })?;
+        rows.push((name, r));
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::MIB;
+
+    fn tiny_spec() -> ClusterSpec {
+        let mut s = ClusterSpec::paper_default();
+        s.nodes = 2;
+        s.procs_per_node = 2;
+        // shrink RAM so the workload exceeds page cache — the paper's
+        // stated precondition for Sea speedups (§3.1.1)
+        s.mem_bytes = 16 * crate::util::GIB;
+        s.tmpfs_bytes = 8 * crate::util::GIB;
+        s
+    }
+
+    /// Very small scale so tests stay fast.
+    fn tiny_scale() -> Scale {
+        Scale { blocks: 0.05 } // 50 blocks
+    }
+
+    #[test]
+    fn fig2c_shows_sea_advantage_growing_with_iterations() {
+        let f = fig2c(&tiny_spec(), tiny_scale(), &[1, 5, 10], 1).unwrap();
+        assert_eq!(f.points.len(), 3);
+        let s1 = f.points[0].speedup();
+        let s10 = f.points[2].speedup();
+        assert!(
+            s10 > s1,
+            "speedup should grow with iterations: {s1:.2} -> {s10:.2}"
+        );
+    }
+
+    #[test]
+    fn figures_write_csv_and_ascii() {
+        let f = fig2c(&tiny_spec(), tiny_scale(), &[1, 5], 1).unwrap();
+        let dir = std::env::temp_dir().join("sea_figtest");
+        let (csv, txt) = f.write_to(&dir).unwrap();
+        assert!(csv.exists() && txt.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fig3_orders_modes_as_paper() {
+        // in-memory fastest; flush-all slowest (slower than lustre too)
+        let mut spec = tiny_spec();
+        spec.procs_per_node = 4;
+        let rows = fig3(&spec, tiny_scale(), 3).unwrap();
+        let get = |m: &str| rows.iter().find(|(n, _)| n == m).unwrap().1.makespan;
+        let im = get("sea-in-memory");
+        let lu = get("lustre");
+        let fa = get("sea-flush-all");
+        assert!(im < lu, "in-memory {im:.1} < lustre {lu:.1}");
+        assert!(fa > im, "flush-all {fa:.1} > in-memory {im:.1}");
+    }
+
+    #[test]
+    fn scale_preserves_file_size() {
+        let w = IncrementationSpec::paper_default();
+        let s = Scale::quick().apply(&w);
+        assert_eq!(s.file_size, 617 * MIB);
+        assert_eq!(s.blocks, 100);
+    }
+}

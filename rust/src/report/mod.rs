@@ -1,0 +1,208 @@
+//! Figure/table emission: every paper artifact is written as CSV (exact
+//! numbers) plus an ASCII chart (shape at a glance) under `results/`.
+
+pub mod figures;
+
+pub use figures::{fig2a, fig2b, fig2c, fig2d, fig3, Scale};
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::SimReport;
+use crate::error::Result;
+use crate::model::Bounds;
+use crate::util::ascii_plot::Plot;
+use crate::util::csv::{f, Csv};
+
+/// One sweep point of a figure: x value, measured makespans, model bounds.
+#[derive(Debug, Clone)]
+pub struct FigPoint {
+    /// Sweep coordinate (nodes / disks / iterations / processes).
+    pub x: f64,
+    /// Lustre measured makespan (s).
+    pub lustre: f64,
+    /// Sea measured makespan (s).
+    pub sea: f64,
+    /// Lustre model bounds.
+    pub lustre_bounds: Bounds,
+    /// Sea model bounds.
+    pub sea_bounds: Bounds,
+}
+
+impl FigPoint {
+    /// Speedup of Sea over Lustre at this point.
+    pub fn speedup(&self) -> f64 {
+        if self.sea > 0.0 { self.lustre / self.sea } else { f64::NAN }
+    }
+}
+
+/// A complete figure: sweep label + points.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    /// Figure id (e.g. `fig2a`).
+    pub id: String,
+    /// Human title.
+    pub title: String,
+    /// X-axis label.
+    pub xlabel: String,
+    /// The sweep.
+    pub points: Vec<FigPoint>,
+}
+
+impl Figure {
+    /// Serialize to CSV rows matching the paper's series.
+    pub fn to_csv(&self) -> Csv {
+        let mut c = Csv::new(vec![
+            "x",
+            "lustre_s",
+            "sea_s",
+            "speedup",
+            "lustre_model_lo",
+            "lustre_model_hi",
+            "sea_model_lo",
+            "sea_model_hi",
+        ]);
+        for p in &self.points {
+            c.row(vec![
+                f(p.x),
+                f(p.lustre),
+                f(p.sea),
+                f(p.speedup()),
+                f(p.lustre_bounds.lower),
+                f(p.lustre_bounds.upper),
+                f(p.sea_bounds.lower),
+                f(p.sea_bounds.upper),
+            ]);
+        }
+        c
+    }
+
+    /// Render the ASCII chart with measured lines + model-bound bands.
+    pub fn to_ascii(&self) -> String {
+        let lustre: Vec<(f64, f64)> = self.points.iter().map(|p| (p.x, p.lustre)).collect();
+        let sea: Vec<(f64, f64)> = self.points.iter().map(|p| (p.x, p.sea)).collect();
+        let lb: Vec<(f64, f64, f64)> = self
+            .points
+            .iter()
+            .map(|p| (p.x, p.lustre_bounds.lower, p.lustre_bounds.upper))
+            .collect();
+        let sb: Vec<(f64, f64, f64)> = self
+            .points
+            .iter()
+            .map(|p| (p.x, p.sea_bounds.lower, p.sea_bounds.upper))
+            .collect();
+        Plot::new(&self.title, &self.xlabel, "makespan (s)")
+            .band("lustre model bounds", '.', lb)
+            .band("sea model bounds", ':', sb)
+            .series("lustre (measured)", 'L', lustre)
+            .series("sea (measured)", 'S', sea)
+            .render()
+    }
+
+    /// Write `<dir>/<id>.csv` and `<dir>/<id>.txt`.
+    pub fn write_to(&self, dir: &Path) -> Result<(PathBuf, PathBuf)> {
+        let csv_path = dir.join(format!("{}.csv", self.id));
+        let txt_path = dir.join(format!("{}.txt", self.id));
+        self.to_csv().write_to(&csv_path)?;
+        std::fs::create_dir_all(dir)
+            .map_err(|e| crate::error::Error::io(dir, e))?;
+        std::fs::write(&txt_path, self.to_ascii())
+            .map_err(|e| crate::error::Error::io(&txt_path, e))?;
+        Ok((csv_path, txt_path))
+    }
+
+    /// Max speedup across points (headline number).
+    pub fn max_speedup(&self) -> f64 {
+        self.points.iter().map(|p| p.speedup()).fold(f64::NAN, f64::max)
+    }
+}
+
+/// Summarize a [`SimReport`] as console lines (used by `sea sim`).
+pub fn describe_run(r: &SimReport) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(s, "mode           : {}", r.mode);
+    let _ = writeln!(s, "makespan       : {:.2} s", r.makespan);
+    let _ = writeln!(s, "app done       : {:.2} s", r.app_done);
+    let _ = writeln!(s, "quiescent      : {:.2} s", r.quiescent);
+    let _ = writeln!(s, "flushes/evicts : {}/{}", r.flushes, r.evictions);
+    let _ = writeln!(s, "mds ops        : {:.0}", r.stats.mds_ops);
+    let hit_ratio = if r.cache_hits + r.cache_misses > 0 {
+        r.cache_hits as f64 / (r.cache_hits + r.cache_misses) as f64
+    } else {
+        0.0
+    };
+    let _ = writeln!(s, "cache hit ratio: {:.1}%", hit_ratio * 100.0);
+    let mut tiers: Vec<_> = r.stats.tiers.iter().collect();
+    tiers.sort_by_key(|(k, _)| *k);
+    for (tier, b) in tiers {
+        let _ = writeln!(
+            s,
+            "  {tier:<11}: read {:>10} written {:>10} (cache r/w {:>10}/{:>10})",
+            crate::util::fmt_bytes(b.read),
+            crate::util::fmt_bytes(b.written),
+            crate::util::fmt_bytes(b.cache_read),
+            crate::util::fmt_bytes(b.cache_write),
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig() -> Figure {
+        Figure {
+            id: "figx".into(),
+            title: "test".into(),
+            xlabel: "n".into(),
+            points: vec![
+                FigPoint {
+                    x: 1.0,
+                    lustre: 100.0,
+                    sea: 50.0,
+                    lustre_bounds: Bounds { lower: 40.0, upper: 120.0 },
+                    sea_bounds: Bounds { lower: 30.0, upper: 60.0 },
+                },
+                FigPoint {
+                    x: 2.0,
+                    lustre: 90.0,
+                    sea: 30.0,
+                    lustre_bounds: Bounds { lower: 35.0, upper: 110.0 },
+                    sea_bounds: Bounds { lower: 20.0, upper: 45.0 },
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn csv_has_all_series() {
+        let c = fig().to_csv();
+        let s = c.to_string();
+        assert!(s.starts_with("x,lustre_s,sea_s,speedup"));
+        assert_eq!(c.len(), 2);
+        assert!(s.contains("100.000000"));
+    }
+
+    #[test]
+    fn speedup_and_headline() {
+        let f = fig();
+        assert!((f.points[0].speedup() - 2.0).abs() < 1e-9);
+        assert!((f.max_speedup() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ascii_renders_both_series() {
+        let a = fig().to_ascii();
+        assert!(a.contains('L') && a.contains('S'));
+        assert!(a.contains("sea model bounds"));
+    }
+
+    #[test]
+    fn writes_files() {
+        let dir = std::env::temp_dir().join("sea_report_test");
+        let (csv, txt) = fig().write_to(&dir).unwrap();
+        assert!(csv.exists() && txt.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

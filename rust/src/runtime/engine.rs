@@ -1,0 +1,253 @@
+//! PJRT execution engine: compile-once, execute-many.
+
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{Manifest, ManifestEntry};
+
+/// On-device integrity statistics of a chunk: `[sum, min, max]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChunkStats {
+    /// Sum of all elements (f32 accumulation on device).
+    pub sum: f64,
+    /// Minimum element.
+    pub min: f32,
+    /// Maximum element.
+    pub max: f32,
+}
+
+impl ChunkStats {
+    fn from_vec(v: &[f32]) -> Result<ChunkStats> {
+        if v.len() != 3 {
+            return Err(Error::Runtime(format!("stats arity {} != 3", v.len())));
+        }
+        Ok(ChunkStats { sum: v[0] as f64, min: v[1], max: v[2] })
+    }
+
+    /// Certify the Algorithm-1 invariant: a chunk initialized to `base`
+    /// and incremented `n` times must be uniformly `base + n`.
+    pub fn certify_uniform(&self, expect: f32, elems: usize) -> Result<()> {
+        let ok = self.min == expect
+            && self.max == expect
+            && (self.sum - expect as f64 * elems as f64).abs()
+                <= 1e-3 * (elems as f64).max(1.0);
+        if ok {
+            Ok(())
+        } else {
+            Err(Error::Integrity(format!(
+                "expected uniform {expect}: got min={} max={} sum={}",
+                self.min, self.max, self.sum
+            )))
+        }
+    }
+}
+
+/// Cumulative execution timing (hot-path observability for the perf pass).
+#[derive(Debug, Default, Clone)]
+pub struct ExecTimer {
+    /// Executions performed.
+    pub calls: u64,
+    /// Total wall time inside PJRT execute + host copies.
+    pub total: Duration,
+    /// Total payload bytes in + out.
+    pub bytes: u64,
+}
+
+impl ExecTimer {
+    fn record(&mut self, dt: Duration, bytes: u64) {
+        self.calls += 1;
+        self.total += dt;
+        self.bytes += bytes;
+    }
+
+    /// Mean time per call.
+    pub fn mean(&self) -> Duration {
+        if self.calls == 0 { Duration::ZERO } else { self.total / self.calls as u32 }
+    }
+
+    /// Effective payload bandwidth (bytes/s).
+    pub fn bandwidth(&self) -> f64 {
+        let s = self.total.as_secs_f64();
+        if s > 0.0 { self.bytes as f64 / s } else { 0.0 }
+    }
+}
+
+struct Compiled {
+    entry: ManifestEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Compile-once execute-many PJRT engine over the artifact manifest.
+///
+/// One engine per process; executions are serialized behind an internal
+/// mutex (the CPU PJRT client is effectively single-stream on this box,
+/// and worker threads spend their parallelism in I/O, matching the
+/// paper's data-intensive regime).
+pub struct Engine {
+    #[allow(dead_code)] // keeps the client alive for the executables
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: Vec<Compiled>,
+    timer: Mutex<ExecTimer>,
+    lock: Mutex<()>,
+}
+
+// SAFETY: the xla wrapper types are opaque pointers into the PJRT C++
+// runtime, which is internally synchronized; the wrapper simply never
+// declares Send/Sync. All Engine executions are additionally serialized
+// behind `lock`, and the timer behind its own mutex, so no &mut aliasing
+// of the underlying handles can occur across threads.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load every artifact in `<dir>/manifest.txt` and compile it.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut compiled = Vec::new();
+        for entry in manifest.entries() {
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            compiled.push(Compiled { entry: entry.clone(), exe });
+        }
+        Ok(Engine {
+            client,
+            manifest,
+            compiled,
+            timer: Mutex::new(ExecTimer::default()),
+            lock: Mutex::new(()),
+        })
+    }
+
+    /// The manifest this engine serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Chunk element count for the canonical `step` entry.
+    pub fn chunk_elems(&self) -> usize {
+        self.manifest.get("step").map(|e| e.elems()).unwrap_or(0)
+    }
+
+    /// Snapshot of cumulative execution timings.
+    pub fn timings(&self) -> ExecTimer {
+        self.timer.lock().expect("timer poisoned").clone()
+    }
+
+    fn find(&self, name: &str) -> Result<&Compiled> {
+        self.compiled
+            .iter()
+            .find(|c| c.entry.name == name)
+            .ok_or_else(|| Error::Runtime(format!("no artifact named {name:?}")))
+    }
+
+    fn literal_of(&self, entry: &ManifestEntry, data: &[f32]) -> Result<xla::Literal> {
+        if data.len() != entry.elems() {
+            return Err(Error::InvalidArg(format!(
+                "chunk len {} != lowered geometry {}x{}",
+                data.len(),
+                entry.rows,
+                entry.lanes
+            )));
+        }
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &[entry.rows, entry.lanes],
+            bytes,
+        )?)
+    }
+
+    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let c = self.find(name)?;
+        let _guard = self.lock.lock().expect("exec lock poisoned");
+        let t0 = Instant::now();
+        let result = c.exe.execute::<xla::Literal>(inputs)?;
+        let root = result[0][0].to_literal_sync()?;
+        let parts = root.to_tuple()?;
+        let dt = t0.elapsed();
+        let bytes: u64 = inputs.iter().map(|l| l.size_bytes() as u64).sum::<u64>()
+            + parts.iter().map(|l| l.size_bytes() as u64).sum::<u64>();
+        self.timer.lock().expect("timer poisoned").record(dt, bytes);
+        Ok(parts)
+    }
+
+    /// One Algorithm-1 iteration: increments `data` in place and returns
+    /// the post-increment stats.
+    pub fn step(&self, data: &mut [f32]) -> Result<ChunkStats> {
+        let entry = self.find("step")?.entry.clone();
+        let input = self.literal_of(&entry, data)?;
+        let parts = self.run("step", &[input])?;
+        if parts.len() != 2 {
+            return Err(Error::Runtime(format!("step returned {} parts", parts.len())));
+        }
+        parts[0].copy_raw_to::<f32>(data)?;
+        ChunkStats::from_vec(&parts[1].to_vec::<f32>()?)
+    }
+
+    /// Fused n-iteration step, if `step_n:<n>` was lowered; returns the
+    /// fused n. In-memory fast path for when intermediates are not
+    /// materialized (DESIGN.md L2).
+    pub fn step_fused(&self, data: &mut [f32]) -> Result<(usize, ChunkStats)> {
+        let (n, entry) = self
+            .manifest
+            .fused_step()
+            .map(|(n, e)| (n, e.clone()))
+            .ok_or_else(|| Error::Runtime("no fused step artifact".into()))?;
+        let input = self.literal_of(&entry, data)?;
+        let parts = self.run(&entry.name, &[input])?;
+        parts[0].copy_raw_to::<f32>(data)?;
+        Ok((n, ChunkStats::from_vec(&parts[1].to_vec::<f32>()?)?))
+    }
+
+    /// Blend two chunks (multi-stage workload merge): `0.5a + 0.5b`,
+    /// written into `a`.
+    pub fn blend(&self, a: &mut [f32], b: &[f32]) -> Result<ChunkStats> {
+        let entry = self.find("blend")?.entry.clone();
+        let la = self.literal_of(&entry, a)?;
+        let lb = self.literal_of(&entry, b)?;
+        let parts = self.run("blend", &[la, lb])?;
+        parts[0].copy_raw_to::<f32>(a)?;
+        ChunkStats::from_vec(&parts[1].to_vec::<f32>()?)
+    }
+
+    /// Standalone integrity statistics of a chunk.
+    pub fn stats(&self, data: &[f32]) -> Result<ChunkStats> {
+        let entry = self.find("stats")?.entry.clone();
+        // stats is lowered for the canonical geometry; callers pass chunks
+        let mut owned;
+        let input = if data.len() == entry.elems() {
+            self.literal_of(&entry, data)?
+        } else {
+            // pad with the first element so min/max are unaffected
+            owned = vec![*data.first().unwrap_or(&0.0); entry.elems()];
+            owned[..data.len()].copy_from_slice(data);
+            self.literal_of(&entry, &owned)?
+        };
+        let parts = self.run("stats", &[input])?;
+        ChunkStats::from_vec(&parts[0].to_vec::<f32>()?)
+    }
+
+    /// Measure the single-step compute throughput (chunk-steps/second).
+    ///
+    /// Used to calibrate the simulator's per-iteration compute cost so
+    /// simulated experiments charge a compute time consistent with the
+    /// real PJRT hot path (DESIGN.md S6).
+    pub fn calibrate_steps_per_sec(&self, reps: usize) -> Result<f64> {
+        let elems = self.chunk_elems();
+        let mut buf = vec![0f32; elems];
+        // warmup
+        self.step(&mut buf)?;
+        let t0 = Instant::now();
+        for _ in 0..reps.max(1) {
+            self.step(&mut buf)?;
+        }
+        Ok(reps.max(1) as f64 / t0.elapsed().as_secs_f64())
+    }
+}

@@ -1,0 +1,147 @@
+//! Artifact manifest parsing.
+//!
+//! `python -m compile.aot` writes `manifest.txt` next to the HLO artifacts:
+//! one tab-separated line per entry: `name  file  rows  lanes  dtype`.
+//! Logical names are `step`, `step_n:<n>`, `blend`, `stats`.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Logical name (`step`, `step_n:5`, `blend`, `stats`).
+    pub name: String,
+    /// HLO text file path (absolute, resolved against the manifest dir).
+    pub file: PathBuf,
+    /// Chunk rows the entry was lowered for.
+    pub rows: usize,
+    /// Chunk lanes (always 256 in this repo).
+    pub lanes: usize,
+    /// Element dtype (always `f32` in this repo).
+    pub dtype: String,
+}
+
+impl ManifestEntry {
+    /// Elements per chunk.
+    pub fn elems(&self) -> usize {
+        self.rows * self.lanes
+    }
+
+    /// Chunk payload size in bytes (f32).
+    pub fn chunk_bytes(&self) -> usize {
+        self.elems() * 4
+    }
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    entries: BTreeMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.txt");
+        let text = fs::read_to_string(&path).map_err(|e| Error::io(&path, e))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` resolves relative artifact file names.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut entries = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 5 {
+                return Err(Error::Config(format!(
+                    "manifest line {}: expected 5 tab-separated fields, got {}",
+                    lineno + 1,
+                    cols.len()
+                )));
+            }
+            let rows: usize = cols[2].parse().map_err(|_| {
+                Error::Config(format!("manifest line {}: bad rows {:?}", lineno + 1, cols[2]))
+            })?;
+            let lanes: usize = cols[3].parse().map_err(|_| {
+                Error::Config(format!("manifest line {}: bad lanes {:?}", lineno + 1, cols[3]))
+            })?;
+            let entry = ManifestEntry {
+                name: cols[0].to_string(),
+                file: dir.join(cols[1]),
+                rows,
+                lanes,
+                dtype: cols[4].to_string(),
+            };
+            entries.insert(entry.name.clone(), entry);
+        }
+        if entries.is_empty() {
+            return Err(Error::Config("manifest has no entries".into()));
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Look up an entry by logical name.
+    pub fn get(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.get(name)
+    }
+
+    /// All entries, name-sorted.
+    pub fn entries(&self) -> impl Iterator<Item = &ManifestEntry> {
+        self.entries.values()
+    }
+
+    /// Names of all entries.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// The fused-step entry (`step_n:<n>`), if any, with its n.
+    pub fn fused_step(&self) -> Option<(usize, &ManifestEntry)> {
+        self.entries.iter().find_map(|(name, e)| {
+            name.strip_prefix("step_n:")
+                .and_then(|n| n.parse::<usize>().ok())
+                .map(|n| (n, e))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# name\tfile\trows\tlanes\tdtype\n\
+        step\tmodel.hlo.txt\t4096\t256\tf32\n\
+        step_n:5\tstep5.hlo.txt\t4096\t256\tf32\n\
+        blend\tblend.hlo.txt\t4096\t256\tf32\n\
+        stats\tstats.hlo.txt\t4096\t256\tf32\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.names(), vec!["blend", "stats", "step", "step_n:5"]);
+        let step = m.get("step").unwrap();
+        assert_eq!(step.rows, 4096);
+        assert_eq!(step.chunk_bytes(), 4096 * 256 * 4);
+        assert_eq!(step.file, Path::new("/a/model.hlo.txt"));
+        let (n, e) = m.fused_step().unwrap();
+        assert_eq!(n, 5);
+        assert_eq!(e.name, "step_n:5");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("a\tb\tc\n", Path::new(".")).is_err());
+        assert!(Manifest::parse("step\tf\tx\t256\tf32\n", Path::new(".")).is_err());
+        assert!(Manifest::parse("", Path::new(".")).is_err());
+        assert!(Manifest::parse("# only comments\n", Path::new(".")).is_err());
+    }
+}

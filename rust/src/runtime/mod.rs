@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT-lowered HLO-text artifacts and execute them.
+//!
+//! This is the only bridge between the Rust request path and the
+//! JAX/Pallas compute lowered at build time (`make artifacts`). Python is
+//! never on the request path: [`Engine::load`] parses
+//! `artifacts/manifest.txt`, reads each `*.hlo.txt` with
+//! `HloModuleProto::from_text_file` (HLO *text* — the serialized-proto path
+//! is rejected by xla_extension 0.5.1 on jax≥0.5 modules, see DESIGN.md),
+//! compiles each entry once on the PJRT CPU client, and serves executions
+//! for the lifetime of the process.
+
+mod engine;
+mod manifest;
+
+pub use engine::{ChunkStats, Engine, ExecTimer};
+pub use manifest::{Manifest, ManifestEntry};

@@ -1,0 +1,547 @@
+//! Application instruction-VM and the per-node flush-and-evict daemon.
+//!
+//! A simulated application process executes a sequential program of
+//! blocking I/O + compute instructions (exactly Algorithm 1's structure).
+//! Placement of every new file is delegated to a [`SimPlacer`] — either
+//! the plain-Lustre baseline or Sea's hierarchy policy (module
+//! `placement`), so the *same* policy code drives simulation and the
+//! real-bytes VFS.
+//!
+//! After each file is written, the placer returns management actions
+//! (flush / evict, per the `.sea_flushlist` / `.sea_evictlist` rules of
+//! Table 1) which are queued to the node's single [`FlushDaemon`] —
+//! mirroring the paper's one flush-and-evict process per node (§5.1).
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use crate::sim::engine::{ProcId, Process, Sim, Step};
+use crate::sim::stack::{FileId, Stack, StackState};
+use crate::sim::topology::Location;
+
+/// One blocking instruction of an application program.
+#[derive(Debug, Clone)]
+pub enum Instr {
+    /// Read a whole file (wherever it currently lives).
+    Read(FileId),
+    /// Create/overwrite a file of `size` bytes; destination chosen by the
+    /// placer at execution time.
+    Write { file: FileId, size: u64 },
+    /// Burn CPU for `seconds` (one core).
+    Compute { seconds: f64 },
+    /// Remove a file.
+    Delete(FileId),
+}
+
+/// Memory-management action decided by the placer (Table 1 semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MgmtAction {
+    /// Copy to Lustre, keep the local copy (mode *Copy*).
+    Flush(FileId),
+    /// Copy to Lustre, then drop the local copy (mode *Move*).
+    FlushEvict(FileId),
+    /// Remove without persisting (mode *Remove*).
+    Evict(FileId),
+}
+
+/// Placement policy driven by the simulator.
+pub trait SimPlacer {
+    /// Choose where a new `size`-byte file written from `node` goes.
+    /// Must never fail: the last-resort destination is Lustre.
+    fn place(&mut self, st: &mut StackState, node: usize, file: FileId, size: u64) -> Location;
+
+    /// Called when a file's write has completed; returns management
+    /// actions for the node's flush daemon (empty for mode *Keep*).
+    fn on_write_complete(&mut self, file: FileId) -> Vec<MgmtAction>;
+
+    /// Called when a local copy was evicted or deleted, so the policy can
+    /// credit the freed space.
+    fn on_freed(&mut self, loc: Location, size: u64);
+}
+
+/// Shared per-node management queues + daemon pids.
+pub struct MgmtQueues {
+    queues: Vec<RefCell<VecDeque<MgmtAction>>>,
+    daemons: RefCell<Vec<ProcId>>,
+}
+
+impl MgmtQueues {
+    /// Empty queues for `nodes` nodes.
+    pub fn new(nodes: usize) -> Rc<MgmtQueues> {
+        Rc::new(MgmtQueues {
+            queues: (0..nodes).map(|_| RefCell::new(VecDeque::new())).collect(),
+            daemons: RefCell::new(Vec::new()),
+        })
+    }
+
+    /// Enqueue an action for `node`'s daemon and wake it.
+    pub fn push(&self, sim: &mut Sim, node: usize, action: MgmtAction) {
+        self.queues[node].borrow_mut().push_back(action);
+        if let Some(&pid) = self.daemons.borrow().get(node) {
+            sim.notify(pid);
+        }
+    }
+
+    /// All queues empty (quiescence check)?
+    pub fn drained(&self) -> bool {
+        self.queues.iter().all(|q| q.borrow().is_empty())
+    }
+}
+
+/// Outcome counters shared by a run's processes.
+#[derive(Debug, Default)]
+pub struct RunOutcome {
+    /// Completion time of each finished app process.
+    pub proc_done: Vec<f64>,
+    /// Time the last app process finished (the application makespan).
+    pub app_done: f64,
+    /// Flush actions executed.
+    pub flushes: u64,
+    /// Evictions executed.
+    pub evictions: u64,
+    /// Time the last flush-daemon action completed (0 if none ran).
+    pub last_mgmt_done: f64,
+}
+
+/// An application process executing a program of [`Instr`]s.
+pub struct AppProc {
+    /// Home node.
+    pub node: usize,
+    /// Remaining program.
+    pub prog: VecDeque<Instr>,
+    /// Storage stack handle.
+    pub stack: Stack,
+    /// Placement policy (shared across all processes of the run).
+    pub placer: Rc<RefCell<dyn SimPlacer>>,
+    /// Per-node flush daemon queues.
+    pub mgmt: Rc<MgmtQueues>,
+    /// Shared outcome record.
+    pub outcome: Rc<RefCell<RunOutcome>>,
+    /// File whose write is in flight (to fire `on_write_complete`).
+    pending_write: Option<FileId>,
+    /// File whose delete is in flight (to fire `on_freed`).
+    pending_delete: Option<(Location, u64)>,
+}
+
+impl AppProc {
+    /// Create a process for `node` with the given program.
+    pub fn new(
+        node: usize,
+        prog: Vec<Instr>,
+        stack: Stack,
+        placer: Rc<RefCell<dyn SimPlacer>>,
+        mgmt: Rc<MgmtQueues>,
+        outcome: Rc<RefCell<RunOutcome>>,
+    ) -> AppProc {
+        AppProc {
+            node,
+            prog: prog.into(),
+            stack,
+            placer,
+            mgmt,
+            outcome,
+            pending_write: None,
+            pending_delete: None,
+        }
+    }
+}
+
+impl Process for AppProc {
+    fn resume(&mut self, sim: &mut Sim, pid: ProcId) -> Step {
+        // post-completion hooks of the instruction that just finished
+        if let Some(file) = self.pending_write.take() {
+            let actions = self.placer.borrow_mut().on_write_complete(file);
+            for a in actions {
+                self.mgmt.push(sim, self.node, a);
+            }
+        }
+        if let Some((loc, size)) = self.pending_delete.take() {
+            self.placer.borrow_mut().on_freed(loc, size);
+        }
+        match self.prog.pop_front() {
+            None => {
+                let mut out = self.outcome.borrow_mut();
+                let t = sim.now();
+                out.proc_done.push(t);
+                out.app_done = out.app_done.max(t);
+                Step::Done
+            }
+            Some(instr) => {
+                match instr {
+                    Instr::Read(f) => {
+                        self.stack
+                            .read(sim, self.node, f, pid)
+                            .expect("program read of unknown/remote file");
+                    }
+                    Instr::Write { file, size } => {
+                        let loc = {
+                            let stack = self.stack.clone();
+                            let mut st = stack.state.borrow_mut();
+                            self.placer.borrow_mut().place(&mut st, self.node, file, size)
+                        };
+                        self.pending_write = Some(file);
+                        self.stack
+                            .write(sim, self.node, file, size, loc, pid)
+                            .expect("program write failed");
+                    }
+                    Instr::Compute { seconds } => {
+                        self.stack.compute(sim, self.node, seconds, pid);
+                    }
+                    Instr::Delete(f) => {
+                        let meta = self.stack.file_meta(f);
+                        if let Some(m) = meta {
+                            if !matches!(m.loc, Location::Lustre) {
+                                self.pending_delete = Some((m.loc, m.size));
+                            }
+                        }
+                        self.stack
+                            .delete(sim, self.node, f, pid)
+                            .expect("program delete of unknown file");
+                    }
+                }
+                Step::Waiting
+            }
+        }
+    }
+}
+
+/// The per-node flush-and-evict daemon (one per node, as in the paper).
+pub struct FlushDaemon {
+    /// Home node.
+    pub node: usize,
+    /// Storage stack handle.
+    pub stack: Stack,
+    /// Shared queues (this daemon serves `queues[node]`).
+    pub mgmt: Rc<MgmtQueues>,
+    /// Placement policy, for space credits on eviction.
+    pub placer: Rc<RefCell<dyn SimPlacer>>,
+    /// Shared outcome record.
+    pub outcome: Rc<RefCell<RunOutcome>>,
+    /// Concurrent transfer budget (spec.flush_parallelism).
+    pub parallelism: usize,
+    /// Actions in flight, each with its done flag (set by the trampoline
+    /// when the underlying op truly finishes — wake-ups from new queue
+    /// pushes must not complete them early).
+    inflight: Vec<(MgmtAction, Rc<std::cell::Cell<bool>>)>,
+}
+
+/// One-shot relay: woken by a storage op's completion, sets the done
+/// flag and forwards the wake to the daemon. Spawned with
+/// `Sim::spawn_idle`, so its first (and only) resume IS the completion.
+struct Trampoline {
+    daemon: ProcId,
+    done: Rc<std::cell::Cell<bool>>,
+}
+
+impl Process for Trampoline {
+    fn resume(&mut self, sim: &mut Sim, _pid: ProcId) -> Step {
+        self.done.set(true);
+        sim.notify(self.daemon);
+        Step::Done
+    }
+}
+
+impl FlushDaemon {
+    /// Spawn a daemon for `node` and register its pid in `mgmt`.
+    pub fn spawn(
+        sim: &mut Sim,
+        node: usize,
+        stack: Stack,
+        mgmt: Rc<MgmtQueues>,
+        placer: Rc<RefCell<dyn SimPlacer>>,
+        outcome: Rc<RefCell<RunOutcome>>,
+    ) -> ProcId {
+        let parallelism = stack.state.borrow().spec.flush_parallelism.max(1);
+        let pid = sim.spawn(Box::new(FlushDaemon {
+            node,
+            stack,
+            mgmt: mgmt.clone(),
+            placer,
+            outcome,
+            parallelism,
+            inflight: Vec::new(),
+        }));
+        let mut daemons = mgmt.daemons.borrow_mut();
+        if daemons.len() <= node {
+            daemons.resize(node + 1, pid);
+        }
+        daemons[node] = pid;
+        pid
+    }
+
+    fn finish_action(&mut self, action: MgmtAction) {
+        let mut out = self.outcome.borrow_mut();
+        match action {
+            MgmtAction::Flush(_) => out.flushes += 1,
+            MgmtAction::FlushEvict(f) => {
+                out.flushes += 1;
+                out.evictions += 1;
+                drop(out);
+                // space credit for the evicted local copy
+                if let Some(m) = self.stack.file_meta(f) {
+                    // after FlushEvict the registry primary is Lustre;
+                    // the placer was already credited by evict_local's
+                    // caller — here *we* are that caller, so credit now.
+                    let _ = m;
+                }
+            }
+            MgmtAction::Evict(_) => out.evictions += 1,
+        }
+    }
+}
+
+impl Process for FlushDaemon {
+    fn resume(&mut self, sim: &mut Sim, pid: ProcId) -> Step {
+        // complete every in-flight action whose relay has fired; wakes
+        // from new queue pushes while busy complete nothing
+        let mut finished = Vec::new();
+        self.inflight.retain(|(action, done)| {
+            if done.get() {
+                finished.push(*action);
+                false
+            } else {
+                true
+            }
+        });
+        if !finished.is_empty() {
+            for action in finished {
+                self.finish_action(action);
+            }
+            let mut out = self.outcome.borrow_mut();
+            out.last_mgmt_done = out.last_mgmt_done.max(sim.now());
+        }
+        // start new actions up to the parallelism budget
+        while self.inflight.len() < self.parallelism {
+            let next = self.mgmt.queues[self.node].borrow_mut().pop_front();
+            let Some(action) = next else { break };
+            let done = Rc::new(std::cell::Cell::new(false));
+            let relay = sim.spawn_idle(Box::new(Trampoline {
+                daemon: pid,
+                done: done.clone(),
+            }));
+            match action {
+                MgmtAction::Flush(f) => {
+                    if self.stack.flush(sim, self.node, f, false, relay).is_err() {
+                        sim.notify(relay); // skip broken entries
+                    }
+                }
+                MgmtAction::FlushEvict(f) => {
+                    // capture size/loc for the space credit before the
+                    // move invalidates them
+                    let before = self.stack.file_meta(f);
+                    if self.stack.flush(sim, self.node, f, true, relay).is_err() {
+                        sim.notify(relay);
+                    } else if let Some(m) = before {
+                        if !matches!(m.loc, Location::Lustre) {
+                            self.placer.borrow_mut().on_freed(m.loc, m.size);
+                        }
+                    }
+                }
+                MgmtAction::Evict(f) => {
+                    let before = self.stack.file_meta(f);
+                    if self.stack.delete(sim, self.node, f, relay).is_err() {
+                        sim.notify(relay);
+                    } else if let Some(m) = before {
+                        if !matches!(m.loc, Location::Lustre) {
+                            self.placer.borrow_mut().on_freed(m.loc, m.size);
+                        }
+                    }
+                }
+            }
+            self.inflight.push((action, done));
+        }
+        Step::Waiting
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::spec::ClusterSpec;
+    use crate::util::{GIB, MIB};
+
+    /// Trivial placer: everything to tmpfs, flush+evict nothing.
+    struct TmpfsPlacer;
+    impl SimPlacer for TmpfsPlacer {
+        fn place(&mut self, _st: &mut StackState, node: usize, _f: FileId, _s: u64) -> Location {
+            Location::Tmpfs { node }
+        }
+        fn on_write_complete(&mut self, _file: FileId) -> Vec<MgmtAction> {
+            vec![]
+        }
+        fn on_freed(&mut self, _loc: Location, _size: u64) {}
+    }
+
+    /// Placer that flushes+evicts every file (copy-all + evict).
+    struct MoveAllPlacer;
+    impl SimPlacer for MoveAllPlacer {
+        fn place(&mut self, _st: &mut StackState, node: usize, _f: FileId, _s: u64) -> Location {
+            Location::Tmpfs { node }
+        }
+        fn on_write_complete(&mut self, file: FileId) -> Vec<MgmtAction> {
+            vec![MgmtAction::FlushEvict(file)]
+        }
+        fn on_freed(&mut self, _loc: Location, _size: u64) {}
+    }
+
+    fn small_spec() -> ClusterSpec {
+        let mut s = ClusterSpec {
+            nodes: 1,
+            procs_per_node: 1,
+            cores_per_node: 4,
+            mem_bytes: 10 * GIB,
+            tmpfs_bytes: 4 * GIB,
+            mem_read_bw: 1000.0 * MIB as f64,
+            mem_write_bw: 500.0 * MIB as f64,
+            disks_per_node: 1,
+            disk_bytes: 100 * GIB,
+            disk_read_bw: 100.0 * MIB as f64,
+            disk_write_bw: 50.0 * MIB as f64,
+            nic_bw: 1000.0 * MIB as f64,
+            dirty_ratio: 0.2,
+            cacheable_ratio: 0.8,
+            ..ClusterSpec::default()
+        };
+        s.lustre.ost_write_bw = 100.0 * MIB as f64;
+        s.lustre.ost_read_bw = 200.0 * MIB as f64;
+        s.lustre.server_nic_bw = 1000.0 * MIB as f64;
+        s.lustre.mds_ops_per_mib_written = 0.0;
+        s
+    }
+
+    fn run_app(
+        spec: &ClusterSpec,
+        placer: Rc<RefCell<dyn SimPlacer>>,
+        progs: Vec<Vec<Instr>>,
+        inputs: &[(FileId, u64)],
+    ) -> (f64, Rc<RefCell<RunOutcome>>) {
+        let mut sim = Sim::new();
+        let stack = Stack::new(&mut sim, spec);
+        for &(f, s) in inputs {
+            stack.register_file(f, s, Location::Lustre);
+        }
+        let mgmt = MgmtQueues::new(spec.nodes);
+        let outcome = Rc::new(RefCell::new(RunOutcome::default()));
+        for node in 0..spec.nodes {
+            FlushDaemon::spawn(
+                &mut sim,
+                node,
+                stack.clone(),
+                mgmt.clone(),
+                placer.clone(),
+                outcome.clone(),
+            );
+        }
+        for (i, prog) in progs.into_iter().enumerate() {
+            let node = i % spec.nodes;
+            sim.spawn(Box::new(AppProc::new(
+                node,
+                prog,
+                stack.clone(),
+                placer.clone(),
+                mgmt.clone(),
+                outcome.clone(),
+            )));
+        }
+        let t = sim.run(1e12).unwrap();
+        assert!(mgmt.drained(), "flush queues drained at quiescence");
+        (t, outcome)
+    }
+
+    #[test]
+    fn single_proc_read_compute_write() {
+        let spec = small_spec();
+        let placer = Rc::new(RefCell::new(TmpfsPlacer));
+        let prog = vec![
+            Instr::Read(1),
+            Instr::Compute { seconds: 1.0 },
+            Instr::Write { file: 100, size: 200 * MIB },
+        ];
+        let (t, out) = run_app(&spec, placer, vec![prog], &[(1, 200 * MIB)]);
+        // read 200 MiB @ 200 MiB/s (+1ms mds) + compute 1s + write @500
+        let expect = 1.0 + 0.001 + 1.0 + 0.4;
+        assert!((t - expect).abs() < 5e-3, "t = {t}, expect ≈ {expect}");
+        assert_eq!(out.borrow().proc_done.len(), 1);
+    }
+
+    #[test]
+    fn flush_evict_moves_file_to_lustre() {
+        let spec = small_spec();
+        let placer = Rc::new(RefCell::new(MoveAllPlacer));
+        let prog = vec![Instr::Write { file: 100, size: 100 * MIB }];
+        let mut sim_check = None;
+        let (t, out) = {
+            let mut sim = Sim::new();
+            let stack = Stack::new(&mut sim, &spec);
+            let mgmt = MgmtQueues::new(spec.nodes);
+            let outcome = Rc::new(RefCell::new(RunOutcome::default()));
+            FlushDaemon::spawn(
+                &mut sim, 0, stack.clone(), mgmt.clone(),
+                placer.clone(), outcome.clone(),
+            );
+            sim.spawn(Box::new(AppProc::new(
+                0, prog, stack.clone(), placer, mgmt, outcome.clone(),
+            )));
+            let t = sim.run(1e12).unwrap();
+            sim_check = Some(stack.file_meta(100).unwrap());
+            (t, outcome)
+        };
+        let meta = sim_check.unwrap();
+        assert!(matches!(meta.loc, Location::Lustre), "moved to lustre: {meta:?}");
+        assert!(!meta.lustre_replica);
+        assert_eq!(out.borrow().flushes, 1);
+        assert_eq!(out.borrow().evictions, 1);
+        // app write (0.2s) + flush read (0.1s) + lustre write ≥ 1s
+        assert!(t > 1.0, "t = {t}");
+    }
+
+    #[test]
+    fn app_done_before_flush_completes() {
+        // the app's makespan excludes the asynchronous flush tail
+        let spec = small_spec();
+        let placer = Rc::new(RefCell::new(MoveAllPlacer));
+        let prog = vec![Instr::Write { file: 100, size: 500 * MIB }];
+        let (t_quiescent, out) = run_app(&spec, placer, vec![prog], &[]);
+        let app_done = out.borrow().app_done;
+        assert!(app_done < t_quiescent, "flush runs past app exit");
+    }
+
+    #[test]
+    fn parallel_procs_contend_on_memory_bus() {
+        let spec = small_spec();
+        let placer = Rc::new(RefCell::new(TmpfsPlacer));
+        let one = vec![Instr::Write { file: 100, size: 500 * MIB }];
+        let two = vec![Instr::Write { file: 101, size: 500 * MIB }];
+        let (t, _) = run_app(&spec, placer, vec![one, two], &[]);
+        // two 500 MiB writes share the 500 MiB/s mem_w lane -> 2s
+        assert!((t - 2.0).abs() < 1e-6, "t = {t}");
+    }
+
+    #[test]
+    fn delete_fires_on_freed() {
+        struct CountingPlacer {
+            freed: u64,
+        }
+        impl SimPlacer for CountingPlacer {
+            fn place(&mut self, _st: &mut StackState, node: usize, _f: FileId, _s: u64) -> Location {
+                Location::Tmpfs { node }
+            }
+            fn on_write_complete(&mut self, _f: FileId) -> Vec<MgmtAction> {
+                vec![]
+            }
+            fn on_freed(&mut self, _loc: Location, size: u64) {
+                self.freed += size;
+            }
+        }
+        let spec = small_spec();
+        let placer = Rc::new(RefCell::new(CountingPlacer { freed: 0 }));
+        let prog = vec![
+            Instr::Write { file: 100, size: 100 * MIB },
+            Instr::Delete(100),
+        ];
+        let placer2 = placer.clone();
+        let (_t, _) = run_app(&spec, placer, vec![prog], &[]);
+        assert_eq!(placer2.borrow().freed, 100 * MIB);
+    }
+}

@@ -1,0 +1,684 @@
+//! Fluid-flow discrete-event engine with max-min fair sharing.
+//!
+//! Everything that consumes a rated capacity is a **flow**: a data
+//! transfer over a NIC+disk path, a metadata op through the MDS
+//! (processor-sharing queue), or a compute burst through a node's CPU
+//! (per-flow rate cap of one core). Rates are reallocated with the
+//! progressive-filling (max-min fair) algorithm whenever the flow set
+//! changes; between changes every flow progresses linearly, so the next
+//! interesting instant is the earliest completion — a classic fluid DES.
+//!
+//! Simulated **processes** are cooperative state machines: a process is
+//! resumed, issues at most one blocking request (flow / sleep), and
+//! returns [`Step::Waiting`]. Completion wakes it again. Daemons (page
+//! cache writeback) additionally get woken by condition notifications.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::error::{Error, Result};
+
+/// Simulated time in seconds.
+pub type Time = f64;
+
+/// Tolerance for "flow is finished" in float bytes.
+const EPS_BYTES: f64 = 1e-6;
+/// Tolerance when comparing candidate bottleneck rates.
+const EPS_RATE: f64 = 1e-12;
+
+/// Identifies a rated resource (NIC, disk, memory bus, CPU, MDS).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ResourceId(pub(crate) u32);
+
+/// Identifies a live flow (generation-checked).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlowId {
+    idx: u32,
+    gen: u32,
+}
+
+/// Identifies a simulated process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ProcId(pub(crate) u32);
+
+/// What a resumed process tells the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    /// Blocked on the request it just issued (or idle awaiting notify).
+    Waiting,
+    /// Finished; will never be resumed again.
+    Done,
+}
+
+/// A cooperative simulated process.
+pub trait Process {
+    /// Resume after the awaited event (or a notification). The process
+    /// may issue new requests through [`Sim`] before returning.
+    fn resume(&mut self, sim: &mut Sim, pid: ProcId) -> Step;
+}
+
+#[derive(Debug)]
+struct Resource {
+    capacity: f64,
+    #[allow(dead_code)]
+    name: String,
+    /// Cumulative busy integral (bytes through this resource), for
+    /// utilization reporting.
+    work_done: f64,
+}
+
+struct Flow {
+    path: Vec<ResourceId>,
+    remaining: f64,
+    rate: f64,
+    cap: f64,
+    waker: Option<ProcId>,
+    gen: u32,
+    alive: bool,
+}
+
+/// Totally-ordered f64 key for the event heap (times are never NaN).
+#[derive(PartialEq, PartialOrd)]
+struct TimeKey(f64);
+impl Eq for TimeKey {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for TimeKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).expect("NaN time")
+    }
+}
+
+enum EventKind {
+    /// Re-examine flow completions; valid only for the matching epoch.
+    FlowCheck { epoch: u64 },
+    /// Wake a sleeping process.
+    Timer { pid: ProcId },
+}
+
+/// The simulation engine.
+pub struct Sim {
+    now: Time,
+    /// Time up to which flow progress has been integrated.
+    last_settle: Time,
+    seq: u64,
+    epoch: u64,
+    events: BinaryHeap<Reverse<(TimeKey, u64, EventWrap)>>,
+    resources: Vec<Resource>,
+    flows: Vec<Flow>,
+    free_flows: Vec<u32>,
+    active: Vec<u32>,
+    processes: Vec<Option<Box<dyn Process>>>,
+    runnable: Vec<ProcId>,
+    /// Statistics: completed flow count.
+    pub flows_completed: u64,
+    /// Statistics: rate recomputations.
+    pub recomputes: u64,
+    /// scratch buffers for the progressive-filling pass (perf)
+    scratch_rem: Vec<f64>,
+    scratch_cnt: Vec<u32>,
+}
+
+struct EventWrap(EventKind);
+// Heap ordering only uses (TimeKey, seq); EventWrap comparisons are moot.
+impl PartialEq for EventWrap {
+    fn eq(&self, _: &Self) -> bool {
+        true
+    }
+}
+impl Eq for EventWrap {}
+impl PartialOrd for EventWrap {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for EventWrap {
+    fn cmp(&self, _: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal
+    }
+}
+
+impl Default for Sim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sim {
+    /// New empty simulation at t = 0.
+    pub fn new() -> Sim {
+        Sim {
+            now: 0.0,
+            last_settle: 0.0,
+            seq: 0,
+            epoch: 0,
+            events: BinaryHeap::new(),
+            resources: Vec::new(),
+            flows: Vec::new(),
+            free_flows: Vec::new(),
+            active: Vec::new(),
+            processes: Vec::new(),
+            runnable: Vec::new(),
+            flows_completed: 0,
+            recomputes: 0,
+            scratch_rem: Vec::new(),
+            scratch_cnt: Vec::new(),
+        }
+    }
+
+    /// Current simulated time (seconds).
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Register a rated resource (capacity in units/second).
+    pub fn add_resource(&mut self, name: impl Into<String>, capacity: f64) -> ResourceId {
+        assert!(capacity > 0.0, "resource capacity must be positive");
+        let id = ResourceId(self.resources.len() as u32);
+        self.resources.push(Resource { capacity, name: name.into(), work_done: 0.0 });
+        id
+    }
+
+    /// Total units moved through a resource so far (utilization numerator).
+    pub fn resource_work(&self, r: ResourceId) -> f64 {
+        self.resources[r.0 as usize].work_done
+    }
+
+    /// Resource capacity.
+    pub fn resource_capacity(&self, r: ResourceId) -> f64 {
+        self.resources[r.0 as usize].capacity
+    }
+
+    /// Register a process; it is made runnable immediately.
+    pub fn spawn(&mut self, p: Box<dyn Process>) -> ProcId {
+        let pid = self.spawn_idle(p);
+        self.runnable.push(pid);
+        pid
+    }
+
+    /// Register a process WITHOUT making it runnable: it only runs when
+    /// explicitly notified (completion relays, condition waiters).
+    pub fn spawn_idle(&mut self, p: Box<dyn Process>) -> ProcId {
+        let pid = ProcId(self.processes.len() as u32);
+        self.processes.push(Some(p));
+        pid
+    }
+
+    /// Make a process runnable now (condition notify). Idempotent per tick.
+    pub fn notify(&mut self, pid: ProcId) {
+        if !self.runnable.contains(&pid) {
+            self.runnable.push(pid);
+        }
+    }
+
+    /// Start a flow of `units` over `path`, optionally rate-capped, waking
+    /// `waker` on completion. Instantaneous zero-unit flows complete at
+    /// once (waker still queued).
+    pub fn start_flow(
+        &mut self,
+        path: Vec<ResourceId>,
+        units: f64,
+        cap: f64,
+        waker: Option<ProcId>,
+    ) -> FlowId {
+        assert!(units >= 0.0 && cap > 0.0);
+        self.settle();
+        if units <= EPS_BYTES {
+            if let Some(pid) = waker {
+                self.notify(pid);
+            }
+            // a degenerate, already-dead flow id
+            return FlowId { idx: u32::MAX, gen: 0 };
+        }
+        let idx = match self.free_flows.pop() {
+            Some(i) => i,
+            None => {
+                self.flows.push(Flow {
+                    path: Vec::new(),
+                    remaining: 0.0,
+                    rate: 0.0,
+                    cap: f64::INFINITY,
+                    waker: None,
+                    gen: 0,
+                    alive: false,
+                });
+                (self.flows.len() - 1) as u32
+            }
+        };
+        let f = &mut self.flows[idx as usize];
+        f.path = path;
+        f.remaining = units;
+        f.rate = 0.0;
+        f.cap = cap;
+        f.waker = waker;
+        f.gen = f.gen.wrapping_add(1);
+        f.alive = true;
+        let gen = f.gen;
+        self.active.push(idx);
+        self.reallocate();
+        FlowId { idx, gen }
+    }
+
+    /// Is a flow still in progress?
+    pub fn flow_alive(&self, id: FlowId) -> bool {
+        id.idx != u32::MAX
+            && (id.idx as usize) < self.flows.len()
+            && self.flows[id.idx as usize].alive
+            && self.flows[id.idx as usize].gen == id.gen
+    }
+
+    /// Sleep: wake `pid` after `dt` seconds.
+    pub fn sleep(&mut self, pid: ProcId, dt: f64) {
+        assert!(dt >= 0.0);
+        let at = self.now + dt;
+        self.push_event(at, EventKind::Timer { pid });
+    }
+
+    fn push_event(&mut self, at: Time, kind: EventKind) {
+        self.seq += 1;
+        self.events.push(Reverse((TimeKey(at), self.seq, EventWrap(kind))));
+    }
+
+    /// Advance all active flows' progress to `self.now`.
+    fn settle(&mut self) {
+        // `now` only moves inside run(); callers set it before settle.
+        // progress = rate * elapsed is tracked lazily: we store remaining
+        // relative to last settle time via `last_settle`.
+        let dt = self.now - self.last_settle;
+        if dt > 0.0 {
+            for &idx in &self.active {
+                let f = &mut self.flows[idx as usize];
+                let moved = f.rate * dt;
+                f.remaining -= moved;
+                for &r in &f.path {
+                    self.resources[r.0 as usize].work_done += moved;
+                }
+            }
+        }
+        self.last_settle = self.now;
+    }
+
+    /// Max-min fair (progressive filling) reallocation with per-flow caps.
+    fn reallocate(&mut self) {
+        self.recomputes += 1;
+        let nres = self.resources.len();
+        self.scratch_rem.clear();
+        self.scratch_rem.extend(self.resources.iter().map(|r| r.capacity));
+        self.scratch_cnt.clear();
+        self.scratch_cnt.resize(nres, 0);
+
+        // unfrozen = active flows not yet assigned a final rate
+        let mut unfrozen: Vec<u32> = self.active.clone();
+        for &idx in &unfrozen {
+            for &r in &self.flows[idx as usize].path {
+                self.scratch_cnt[r.0 as usize] += 1;
+            }
+        }
+        while !unfrozen.is_empty() {
+            // candidate bottleneck rate: min over resources of fair share,
+            // and min over flows of their cap
+            let mut rate = f64::INFINITY;
+            for r in 0..nres {
+                if self.scratch_cnt[r] > 0 {
+                    rate = rate.min(self.scratch_rem[r] / self.scratch_cnt[r] as f64);
+                }
+            }
+            let min_cap = unfrozen
+                .iter()
+                .map(|&i| self.flows[i as usize].cap)
+                .fold(f64::INFINITY, f64::min);
+            let capped_round = min_cap < rate - EPS_RATE;
+            let round_rate = rate.min(min_cap).max(0.0);
+
+            if capped_round {
+                // freeze only flows at the cap
+                let mut next = Vec::with_capacity(unfrozen.len());
+                for &i in &unfrozen {
+                    let f = &self.flows[i as usize];
+                    if f.cap <= round_rate + EPS_RATE {
+                        self.flows[i as usize].rate = round_rate;
+                        for &r in &self.flows[i as usize].path.clone() {
+                            self.scratch_rem[r.0 as usize] =
+                                (self.scratch_rem[r.0 as usize] - round_rate).max(0.0);
+                            self.scratch_cnt[r.0 as usize] -= 1;
+                        }
+                    } else {
+                        next.push(i);
+                    }
+                }
+                unfrozen = next;
+            } else {
+                // freeze all flows through the bottleneck resource(s)
+                let mut bottlenecks = Vec::new();
+                for r in 0..nres {
+                    if self.scratch_cnt[r] > 0
+                        && self.scratch_rem[r] / self.scratch_cnt[r] as f64
+                            <= round_rate + EPS_RATE
+                    {
+                        bottlenecks.push(r);
+                    }
+                }
+                let mut next = Vec::with_capacity(unfrozen.len());
+                for &i in &unfrozen {
+                    let through = self.flows[i as usize]
+                        .path
+                        .iter()
+                        .any(|r| bottlenecks.contains(&(r.0 as usize)));
+                    if through {
+                        self.flows[i as usize].rate = round_rate;
+                        for &r in &self.flows[i as usize].path.clone() {
+                            self.scratch_rem[r.0 as usize] =
+                                (self.scratch_rem[r.0 as usize] - round_rate).max(0.0);
+                            self.scratch_cnt[r.0 as usize] -= 1;
+                        }
+                    } else {
+                        next.push(i);
+                    }
+                }
+                // safety: if nothing froze (degenerate), freeze everything
+                if next.len() == unfrozen.len() {
+                    for &i in &next {
+                        self.flows[i as usize].rate = round_rate;
+                    }
+                    next.clear();
+                }
+                unfrozen = next;
+            }
+        }
+        // schedule the next completion check
+        self.epoch += 1;
+        let mut t_next = f64::INFINITY;
+        for &idx in &self.active {
+            let f = &self.flows[idx as usize];
+            if f.rate > 0.0 {
+                t_next = t_next.min(self.now + f.remaining / f.rate);
+            }
+        }
+        if t_next.is_finite() {
+            let epoch = self.epoch;
+            self.push_event(t_next.max(self.now), EventKind::FlowCheck { epoch });
+        }
+    }
+
+    fn complete_finished_flows(&mut self) {
+        let mut finished = Vec::new();
+        let flows = &self.flows;
+        self.active.retain(|&idx| {
+            let f = &flows[idx as usize];
+            // Completion threshold is rate-relative: after settling, a
+            // flow can hold an f64 ulp residue proportional to its size
+            // (~100 bytes on a 600 MiB transfer). Anything representing
+            // less than a microsecond of remaining work is done —
+            // otherwise each residue respawns an O(flows·resources)
+            // reallocation microevent and large runs crawl.
+            if f.remaining <= EPS_BYTES.max(f.rate * 1e-6) {
+                finished.push(idx);
+                false
+            } else {
+                true
+            }
+        });
+        for idx in finished {
+            let f = &mut self.flows[idx as usize];
+            f.alive = false;
+            f.remaining = 0.0;
+            f.rate = 0.0;
+            let waker = f.waker.take();
+            self.free_flows.push(idx);
+            self.flows_completed += 1;
+            if let Some(pid) = waker {
+                self.notify(pid);
+            }
+        }
+    }
+
+    fn run_runnable(&mut self) {
+        while let Some(pid) = self.runnable.pop() {
+            let slot = pid.0 as usize;
+            let mut proc = match self.processes[slot].take() {
+                Some(p) => p,
+                None => continue, // already done
+            };
+            let step = proc.resume(self, pid);
+            match step {
+                Step::Waiting => self.processes[slot] = Some(proc),
+                Step::Done => { /* drop */ }
+            }
+        }
+    }
+
+    /// Run until no events remain or `max_time` is exceeded.
+    /// Returns the final simulated time.
+    pub fn run(&mut self, max_time: Time) -> Result<Time> {
+        self.run_runnable();
+        while let Some(Reverse((TimeKey(t), _, EventWrap(kind)))) = self.events.pop() {
+            if t > max_time {
+                return Err(Error::Sim(format!(
+                    "simulation exceeded max_time {max_time}s (at {t:.3}s, {} active flows)",
+                    self.active.len()
+                )));
+            }
+            debug_assert!(t >= self.now - 1e-9, "time went backwards");
+            self.now = t.max(self.now);
+            match kind {
+                EventKind::FlowCheck { epoch } => {
+                    if epoch != self.epoch {
+                        continue; // stale
+                    }
+                    self.settle();
+                    self.complete_finished_flows();
+                    self.run_runnable();
+                    // runnable processes may have started flows (which
+                    // reallocate) — only reallocate if they didn't
+                    self.settle();
+                    self.reallocate();
+                }
+                EventKind::Timer { pid } => {
+                    self.settle();
+                    self.notify(pid);
+                    self.run_runnable();
+                    self.settle();
+                    self.reallocate();
+                }
+            }
+        }
+        if !self.active.is_empty() {
+            return Err(Error::Sim(format!(
+                "event queue drained with {} flows still active (starved at rate 0?)",
+                self.active.len()
+            )));
+        }
+        Ok(self.now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A process that runs one flow of `units` over `path` then finishes,
+    /// recording the completion time.
+    struct OneFlow {
+        path: Vec<ResourceId>,
+        units: f64,
+        cap: f64,
+        started: bool,
+        done_at: std::rc::Rc<std::cell::Cell<f64>>,
+    }
+    impl Process for OneFlow {
+        fn resume(&mut self, sim: &mut Sim, pid: ProcId) -> Step {
+            if !self.started {
+                self.started = true;
+                sim.start_flow(self.path.clone(), self.units, self.cap, Some(pid));
+                Step::Waiting
+            } else {
+                self.done_at.set(sim.now());
+                Step::Done
+            }
+        }
+    }
+
+    fn one_flow(
+        sim: &mut Sim,
+        path: Vec<ResourceId>,
+        units: f64,
+        cap: f64,
+    ) -> std::rc::Rc<std::cell::Cell<f64>> {
+        let cell = std::rc::Rc::new(std::cell::Cell::new(-1.0));
+        sim.spawn(Box::new(OneFlow {
+            path,
+            units,
+            cap,
+            started: false,
+            done_at: cell.clone(),
+        }));
+        cell
+    }
+
+    #[test]
+    fn single_flow_takes_bytes_over_bandwidth() {
+        let mut sim = Sim::new();
+        let r = sim.add_resource("disk", 100.0);
+        let t = one_flow(&mut sim, vec![r], 1000.0, f64::INFINITY);
+        sim.run(1e9).unwrap();
+        assert!((t.get() - 10.0).abs() < 1e-6, "got {}", t.get());
+    }
+
+    #[test]
+    fn two_flows_share_fairly() {
+        let mut sim = Sim::new();
+        let r = sim.add_resource("disk", 100.0);
+        let a = one_flow(&mut sim, vec![r], 1000.0, f64::INFINITY);
+        let b = one_flow(&mut sim, vec![r], 1000.0, f64::INFINITY);
+        sim.run(1e9).unwrap();
+        // both at 50 -> both complete at t = 20
+        assert!((a.get() - 20.0).abs() < 1e-6, "a at {}", a.get());
+        assert!((b.get() - 20.0).abs() < 1e-6, "b at {}", b.get());
+    }
+
+    #[test]
+    fn shorter_flow_frees_bandwidth() {
+        let mut sim = Sim::new();
+        let r = sim.add_resource("disk", 100.0);
+        let a = one_flow(&mut sim, vec![r], 500.0, f64::INFINITY);
+        let b = one_flow(&mut sim, vec![r], 1500.0, f64::INFINITY);
+        sim.run(1e9).unwrap();
+        // a: 500 at 50/s -> t=10. b: 500 by t=10, then 1000 at 100/s -> t=20
+        assert!((a.get() - 10.0).abs() < 1e-6, "a at {}", a.get());
+        assert!((b.get() - 20.0).abs() < 1e-6, "b at {}", b.get());
+    }
+
+    #[test]
+    fn min_over_path_resources() {
+        let mut sim = Sim::new();
+        let fast = sim.add_resource("nic", 1000.0);
+        let slow = sim.add_resource("disk", 10.0);
+        let t = one_flow(&mut sim, vec![fast, slow], 100.0, f64::INFINITY);
+        sim.run(1e9).unwrap();
+        assert!((t.get() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn per_flow_cap_binds() {
+        let mut sim = Sim::new();
+        let r = sim.add_resource("mds", 1000.0);
+        // one op, capped at 10/s: takes 0.1 units/(10/s) ... 1 unit -> 0.1s
+        let t = one_flow(&mut sim, vec![r], 1.0, 10.0);
+        sim.run(1e9).unwrap();
+        assert!((t.get() - 0.1).abs() < 1e-9, "got {}", t.get());
+    }
+
+    #[test]
+    fn capped_flows_leave_headroom_for_others() {
+        let mut sim = Sim::new();
+        let r = sim.add_resource("link", 100.0);
+        // capped flow uses 10, uncapped gets the remaining 90
+        let a = one_flow(&mut sim, vec![r], 100.0, 10.0);
+        let b = one_flow(&mut sim, vec![r], 900.0, f64::INFINITY);
+        sim.run(1e9).unwrap();
+        assert!((a.get() - 10.0).abs() < 1e-6, "a at {}", a.get());
+        assert!((b.get() - 10.0).abs() < 1e-6, "b at {}", b.get());
+    }
+
+    #[test]
+    fn max_min_three_flows_two_resources() {
+        // classic: f1 uses r1, f2 uses r2, f3 uses both. r1=r2=100.
+        // max-min: f3 gets 50, f1 and f2 get 50 each... progressive
+        // filling: fair share r1 = 100/2 = 50, r2 = 50 -> all at 50.
+        let mut sim = Sim::new();
+        let r1 = sim.add_resource("r1", 100.0);
+        let r2 = sim.add_resource("r2", 100.0);
+        let f1 = one_flow(&mut sim, vec![r1], 500.0, f64::INFINITY);
+        let f2 = one_flow(&mut sim, vec![r2], 500.0, f64::INFINITY);
+        let f3 = one_flow(&mut sim, vec![r1, r2], 500.0, f64::INFINITY);
+        sim.run(1e9).unwrap();
+        // all rate 50 until f3 done at t=10; f1,f2 also done at t=10.
+        for (n, f) in [("f1", &f1), ("f2", &f2), ("f3", &f3)] {
+            assert!((f.get() - 10.0).abs() < 1e-6, "{n} at {}", f.get());
+        }
+    }
+
+    #[test]
+    fn unequal_paths_max_min() {
+        // r1 = 100 shared by fA (r1 only) and fB (r1+r2), r2 = 30.
+        // fB bottlenecked by r2 at 30; fA then gets 70.
+        let mut sim = Sim::new();
+        let r1 = sim.add_resource("r1", 100.0);
+        let r2 = sim.add_resource("r2", 30.0);
+        let a = one_flow(&mut sim, vec![r1], 700.0, f64::INFINITY);
+        let b = one_flow(&mut sim, vec![r1, r2], 300.0, f64::INFINITY);
+        sim.run(1e9).unwrap();
+        assert!((a.get() - 10.0).abs() < 1e-6, "a at {}", a.get());
+        assert!((b.get() - 10.0).abs() < 1e-6, "b at {}", b.get());
+    }
+
+    #[test]
+    fn zero_unit_flow_completes_instantly() {
+        let mut sim = Sim::new();
+        let r = sim.add_resource("r", 1.0);
+        let t = one_flow(&mut sim, vec![r], 0.0, f64::INFINITY);
+        sim.run(1e9).unwrap();
+        assert_eq!(t.get(), 0.0);
+    }
+
+    #[test]
+    fn timers_fire_in_order() {
+        struct Sleeper {
+            phase: u32,
+            log: std::rc::Rc<std::cell::RefCell<Vec<f64>>>,
+        }
+        impl Process for Sleeper {
+            fn resume(&mut self, sim: &mut Sim, pid: ProcId) -> Step {
+                self.log.borrow_mut().push(sim.now());
+                self.phase += 1;
+                if self.phase <= 3 {
+                    sim.sleep(pid, 1.5);
+                    Step::Waiting
+                } else {
+                    Step::Done
+                }
+            }
+        }
+        let mut sim = Sim::new();
+        let log = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        sim.spawn(Box::new(Sleeper { phase: 0, log: log.clone() }));
+        sim.run(1e9).unwrap();
+        assert_eq!(&*log.borrow(), &[0.0, 1.5, 3.0, 4.5]);
+    }
+
+    #[test]
+    fn max_time_guard_trips() {
+        let mut sim = Sim::new();
+        let r = sim.add_resource("slow", 1.0);
+        let _t = one_flow(&mut sim, vec![r], 1e12, f64::INFINITY);
+        assert!(sim.run(10.0).is_err());
+    }
+
+    #[test]
+    fn resource_work_accounted() {
+        let mut sim = Sim::new();
+        let r = sim.add_resource("disk", 100.0);
+        let _ = one_flow(&mut sim, vec![r], 1000.0, f64::INFINITY);
+        sim.run(1e9).unwrap();
+        assert!((sim.resource_work(r) - 1000.0).abs() < 1e-6);
+    }
+}

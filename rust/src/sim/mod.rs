@@ -1,0 +1,36 @@
+//! Fluid-flow discrete-event simulator of the paper's HPC testbed.
+//!
+//! The paper evaluates Sea on a physical cluster (8 compute nodes, 4-OSS
+//! Lustre, 25 GbE). None of that hardware exists here, so this module
+//! builds the *closest synthetic equivalent that exercises the same code
+//! path* (DESIGN.md §2): a fluid-flow DES in the SimGrid tradition.
+//!
+//! * [`engine`] — event queue, **max-min fair** bandwidth sharing
+//!   (progressive filling with per-flow rate caps), cooperative processes.
+//! * [`spec`] — cluster description; defaults replicate the paper's
+//!   testbed calibrated with Table 2 bandwidths.
+//! * [`topology`] — maps the spec onto engine resources (per-node memory
+//!   bus, CPU, NIC, disks; per-OSS NIC; per-OST disk; MDS service).
+//! * [`pagecache`] — per-node Linux page-cache model: LRU clean pages,
+//!   dirty accounting, `dirty_ratio` throttling, async writeback.
+//! * [`stack`] — the storage stack: read/write/delete/copy operations
+//!   against tmpfs / local disks / Lustre, routed through the page cache,
+//!   with MDS metadata costs for Lustre ops.
+//! * [`app`] — the instruction-VM used to run workload programs
+//!   (sequential blocking I/O + compute per simulated process).
+//!
+//! The same placement logic (`hierarchy`/`placement`) drives both this
+//! simulator and the real-bytes VFS, so a policy bug shows up in both.
+
+pub mod app;
+pub mod engine;
+pub mod pagecache;
+pub mod spec;
+pub mod stack;
+pub mod topology;
+
+pub use app::{AppProc, FlushDaemon, Instr, MgmtAction, MgmtQueues, RunOutcome, SimPlacer};
+pub use engine::{FlowId, ProcId, Process, ResourceId, Sim, Step};
+pub use spec::{ClusterSpec, LustreSpec};
+pub use stack::{FileId, Stack, StackStats};
+pub use topology::{Location, Topology};

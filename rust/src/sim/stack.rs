@@ -1,0 +1,1080 @@
+//! The simulated storage stack: files, page cache, devices, Lustre, and
+//! asynchronous writeback — everything between a process's `read`/`write`
+//! and the engine's rated flows.
+//!
+//! Ops are executed by small *op processes* spawned per request; the
+//! requesting process blocks until the op process notifies it. All shared
+//! state lives in [`StackState`] behind an `Rc<RefCell<..>>` (the engine
+//! is single-threaded).
+//!
+//! Semantics (paper §2.3, §3.4):
+//!
+//! * **Lustre read**: MDS op (processor-sharing service), then cached
+//!   bytes at memory speed + missed bytes over OST→OSS-NIC→client-NIC,
+//!   populating the reader's page cache.
+//! * **Lustre write**: MDS open + per-MiB grant ops, then absorption into
+//!   the client page cache (bounded by `vm.dirty_ratio` *and* the per-OST
+//!   client dirty limit) at memory speed; the remainder throttles through
+//!   at device speed. Dirty pages drain via per-node writeback daemons.
+//! * **Local-disk write**: same, minus MDS and per-OST limits.
+//! * **tmpfs**: memory-speed read/write; consumes RAM, which *pressures*
+//!   the page cache (`PageCache::set_pressure`).
+//! * **compute**: a flow through the node's CPU pool, capped at one core.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+use crate::sim::engine::{ProcId, Process, Sim, Step};
+use crate::sim::pagecache::PageCache;
+use crate::sim::spec::ClusterSpec;
+use crate::sim::topology::{Location, Topology};
+use crate::util::MIB;
+
+/// Interned file identifier (assigned by the workload/placement layer).
+pub type FileId = u64;
+
+/// Registry record for one file.
+#[derive(Debug, Clone)]
+pub struct FileMeta {
+    /// Current size in bytes.
+    pub size: u64,
+    /// Where the primary copy lives.
+    pub loc: Location,
+    /// Assigned OST (files with Lustre presence; round-robin on first
+    /// placement).
+    pub ost: Option<usize>,
+    /// A flushed copy also exists on Lustre (Sea's *Copy* mode).
+    pub lustre_replica: bool,
+}
+
+/// Writeback target: one backing device reachable from a node's cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum WbTarget {
+    /// Local disk `disk` of the daemon's node.
+    Disk { disk: usize },
+    /// A Lustre OST (global index).
+    Ost { ost: usize },
+}
+
+/// Per-tier transfer statistics (bytes), for reports and tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TierBytes {
+    /// Bytes read from the device (cache misses / direct).
+    pub read: u64,
+    /// Bytes written to the device (throttled + writeback).
+    pub written: u64,
+    /// Bytes served from page cache on reads.
+    pub cache_read: u64,
+    /// Bytes absorbed by page cache on writes.
+    pub cache_write: u64,
+}
+
+/// Statistics per tier name.
+#[derive(Debug, Clone, Default)]
+pub struct StackStats {
+    /// Keyed by `Location::tier_name()`.
+    pub tiers: HashMap<&'static str, TierBytes>,
+    /// Total MDS ops issued.
+    pub mds_ops: f64,
+}
+
+impl StackStats {
+    fn tier(&mut self, name: &'static str) -> &mut TierBytes {
+        self.tiers.entry(name).or_default()
+    }
+}
+
+/// Shared mutable simulator-side state.
+pub struct StackState {
+    /// Cluster description.
+    pub spec: ClusterSpec,
+    /// Engine resource handles.
+    pub topo: Topology,
+    /// File registry.
+    pub files: HashMap<FileId, FileMeta>,
+    /// Per-node page caches.
+    pub caches: Vec<PageCache>,
+    /// Per-node tmpfs bytes in use.
+    pub tmpfs_used: Vec<u64>,
+    /// Per-node, per-target queues of (file, bytes) awaiting writeback.
+    wb_queues: Vec<BTreeMap<WbTarget, VecDeque<(FileId, u64)>>>,
+    /// Per-node total queued writeback bytes (fast emptiness check).
+    wb_pending: Vec<u64>,
+    /// Per-(node, ost) client dirty bytes (Lustre `max_dirty_mb` model).
+    dirty_per_ost: Vec<BTreeMap<usize, u64>>,
+    /// Writeback daemon pids, one per node (spawned by `Stack::new`).
+    wb_daemons: Vec<ProcId>,
+    /// Next OST for round-robin assignment.
+    next_ost: usize,
+    /// Concurrent Lustre write ops (drives MDS lock contention).
+    pub lustre_writers: u32,
+    /// Transfer statistics.
+    pub stats: StackStats,
+}
+
+impl StackState {
+    /// Round-robin OST assignment (one OST per file, paper §3.4).
+    pub fn assign_ost(&mut self) -> usize {
+        let ost = self.next_ost;
+        self.next_ost = (self.next_ost + 1) % self.spec.lustre.ost_count();
+        ost
+    }
+
+    fn queue_writeback(&mut self, node: usize, target: WbTarget, file: FileId, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        self.wb_queues[node].entry(target).or_default().push_back((file, bytes));
+        self.wb_pending[node] += bytes;
+        if let WbTarget::Ost { ost } = target {
+            *self.dirty_per_ost[node].entry(ost).or_default() += bytes;
+        }
+    }
+
+    /// Remove queued writeback work for an unlinked file. Returns bytes
+    /// cancelled.
+    fn cancel_writeback(&mut self, node: usize, file: FileId) -> u64 {
+        let mut cancelled = 0;
+        for (target, q) in self.wb_queues[node].iter_mut() {
+            let mut kept = VecDeque::with_capacity(q.len());
+            for (f, b) in q.drain(..) {
+                if f == file {
+                    cancelled += b;
+                    if let WbTarget::Ost { ost } = *target {
+                        if let Some(d) = self.dirty_per_ost[node].get_mut(&ost) {
+                            *d = d.saturating_sub(b);
+                        }
+                    }
+                } else {
+                    kept.push_back((f, b));
+                }
+            }
+            *q = kept;
+        }
+        self.wb_pending[node] = self.wb_pending[node].saturating_sub(cancelled);
+        cancelled
+    }
+
+    /// Per-OST client dirty room on `node` for `ost`.
+    fn ost_dirty_room(&self, node: usize, ost: usize) -> u64 {
+        let used = self.dirty_per_ost[node].get(&ost).copied().unwrap_or(0);
+        self.spec.lustre.client_dirty_per_ost.saturating_sub(used)
+    }
+
+    /// Is all writeback drained everywhere (quiescence check)?
+    pub fn writeback_drained(&self) -> bool {
+        self.wb_pending.iter().all(|&b| b == 0)
+    }
+}
+
+/// Handle to the shared stack; cheap to clone.
+#[derive(Clone)]
+pub struct Stack {
+    /// Shared state (single-threaded engine ⇒ `Rc<RefCell>`).
+    pub state: Rc<RefCell<StackState>>,
+}
+
+impl Stack {
+    /// Build topology + caches inside `sim` and spawn writeback daemons.
+    pub fn new(sim: &mut Sim, spec: &ClusterSpec) -> Stack {
+        let topo = Topology::build(sim, spec);
+        let caches = (0..spec.nodes)
+            .map(|_| PageCache::new(spec.cache_bytes(), spec.dirty_limit()))
+            .collect();
+        let state = Rc::new(RefCell::new(StackState {
+            spec: spec.clone(),
+            topo,
+            files: HashMap::new(),
+            caches,
+            tmpfs_used: vec![0; spec.nodes],
+            wb_queues: (0..spec.nodes).map(|_| BTreeMap::new()).collect(),
+            wb_pending: vec![0; spec.nodes],
+            dirty_per_ost: (0..spec.nodes).map(|_| BTreeMap::new()).collect(),
+            wb_daemons: Vec::new(),
+            next_ost: 0,
+            lustre_writers: 0,
+            stats: StackStats::default(),
+        }));
+        let stack = Stack { state };
+        for node in 0..spec.nodes {
+            let pid = sim.spawn(Box::new(WritebackDaemon {
+                node,
+                stack: stack.clone(),
+                inflight: Vec::new(),
+            }));
+            stack.state.borrow_mut().wb_daemons.push(pid);
+        }
+        stack
+    }
+
+    /// Register a file that already exists at `loc` with `size` bytes
+    /// (e.g. the input dataset on Lustre). Assigns an OST for Lustre.
+    pub fn register_file(&self, file: FileId, size: u64, loc: Location) {
+        let mut st = self.state.borrow_mut();
+        let ost = match loc {
+            Location::Lustre => Some(st.assign_ost()),
+            _ => None,
+        };
+        if let Location::Tmpfs { node } = loc {
+            st.tmpfs_used[node] += size;
+            let used = st.tmpfs_used[node];
+            st.caches[node].set_pressure(used);
+        }
+        st.files.insert(file, FileMeta { size, loc, ost, lustre_replica: false });
+    }
+
+    /// Current metadata of a file.
+    pub fn file_meta(&self, file: FileId) -> Option<FileMeta> {
+        self.state.borrow().files.get(&file).cloned()
+    }
+
+    /// Spawn a read op for `file` from `node`; wakes `waker` when done.
+    pub fn read(&self, sim: &mut Sim, node: usize, file: FileId, waker: ProcId) -> Result<()> {
+        let meta = self
+            .file_meta(file)
+            .ok_or_else(|| Error::Sim(format!("read of unknown file {file}")))?;
+        if !matches!(meta.loc, Location::Lustre) && !meta.loc.on_node(node) {
+            return Err(Error::Sim(format!(
+                "cross-node read: file {file} at {:?} from node {node}",
+                meta.loc
+            )));
+        }
+        let op = ReadOp { node, file, waker, stack: self.clone(), phase: 0, miss: 0 };
+        let pid = sim.spawn(Box::new(op));
+        let _ = pid;
+        Ok(())
+    }
+
+    /// Spawn a write op creating/overwriting `file` (`size` bytes) at
+    /// `loc` from `node`; wakes `waker` when done.
+    pub fn write(
+        &self,
+        sim: &mut Sim,
+        node: usize,
+        file: FileId,
+        size: u64,
+        loc: Location,
+        waker: ProcId,
+    ) -> Result<()> {
+        if !matches!(loc, Location::Lustre) && !loc.on_node(node) {
+            return Err(Error::Sim(format!(
+                "cross-node write: {loc:?} from node {node}"
+            )));
+        }
+        {
+            // registry update happens at op start: subsequent readers see
+            // the new location; their reads contend with our flows just
+            // as concurrent POSIX I/O would.
+            let mut st = self.state.borrow_mut();
+            let ost = match loc {
+                Location::Lustre => {
+                    let existing = st.files.get(&file).and_then(|m| m.ost);
+                    Some(match existing {
+                        Some(o) => o,
+                        None => st.assign_ost(),
+                    })
+                }
+                _ => None,
+            };
+            if let Location::Tmpfs { node: tn } = loc {
+                st.tmpfs_used[tn] += size;
+                let used = st.tmpfs_used[tn];
+                st.caches[tn].set_pressure(used);
+            }
+            st.files.insert(file, FileMeta { size, loc, ost, lustre_replica: false });
+        }
+        let op = WriteOp {
+            node,
+            file,
+            size,
+            loc,
+            waker,
+            stack: self.clone(),
+            phase: 0,
+            through: 0,
+            replica: false,
+        };
+        sim.spawn(Box::new(op));
+        Ok(())
+    }
+
+    /// Spawn a compute burst of `seconds` CPU-seconds on `node`.
+    pub fn compute(&self, sim: &mut Sim, node: usize, seconds: f64, waker: ProcId) {
+        let cpu = self.state.borrow().topo.nodes[node].cpu;
+        sim.start_flow(vec![cpu], seconds, 1.0, Some(waker));
+    }
+
+    /// Delete a file: drop cache residency, cancel queued writeback, free
+    /// tmpfs space. Charged as one MDS op for Lustre files; local deletes
+    /// are instantaneous (waker is still queued via a zero-length flow).
+    pub fn delete(&self, sim: &mut Sim, node: usize, file: FileId, waker: ProcId) -> Result<()> {
+        let (mds_ops, mds) = {
+            let mut st = self.state.borrow_mut();
+            let meta = st
+                .files
+                .remove(&file)
+                .ok_or_else(|| Error::Sim(format!("delete of unknown file {file}")))?;
+            match meta.loc {
+                Location::Tmpfs { node: tn } => {
+                    st.tmpfs_used[tn] = st.tmpfs_used[tn].saturating_sub(meta.size);
+                    let used = st.tmpfs_used[tn];
+                    st.caches[tn].set_pressure(used);
+                }
+                Location::Disk { node: dn, .. } => {
+                    st.caches[dn].unlink(file);
+                    st.cancel_writeback(dn, file);
+                }
+                Location::Lustre => {
+                    st.caches[node].unlink(file);
+                    st.cancel_writeback(node, file);
+                }
+            }
+            let ops = if matches!(meta.loc, Location::Lustre) {
+                st.stats.mds_ops += st.spec.lustre.mds_ops_per_open;
+                st.spec.lustre.mds_ops_per_open
+            } else {
+                0.0
+            };
+            (ops, st.topo.mds)
+        };
+        let latency_cap = 1.0 / self.state.borrow().spec.lustre.mds_op_latency;
+        sim.start_flow(vec![mds], mds_ops, latency_cap, Some(waker));
+        Ok(())
+    }
+
+    /// Spawn a *flush* op: copy `file` (currently node-local) to Lustre,
+    /// then optionally evict the local copy (Sea's Copy / Move modes,
+    /// Table 1). Wakes `waker` when the copy (and eviction) is complete.
+    ///
+    /// The local copy remains the registry's primary during the copy;
+    /// on completion either `lustre_replica` is set (Copy) or the
+    /// primary moves to Lustre (Move).
+    pub fn flush(
+        &self,
+        sim: &mut Sim,
+        node: usize,
+        file: FileId,
+        evict_after: bool,
+        waker: ProcId,
+    ) -> Result<()> {
+        let meta = self
+            .file_meta(file)
+            .ok_or_else(|| Error::Sim(format!("flush of unknown file {file}")))?;
+        if matches!(meta.loc, Location::Lustre) {
+            // already on Lustre: nothing to copy
+            sim.notify(waker);
+            return Ok(());
+        }
+        if !meta.loc.on_node(node) {
+            return Err(Error::Sim(format!(
+                "flush from wrong node: file {file} at {:?}, daemon on {node}",
+                meta.loc
+            )));
+        }
+        sim.spawn(Box::new(FlushOp {
+            node,
+            file,
+            evict_after,
+            waker,
+            stack: self.clone(),
+            phase: 0,
+        }));
+        Ok(())
+    }
+
+    /// Drop the local copy of a file whose primary (or replica) is on
+    /// Lustre; the file's primary becomes Lustre. Errors if no Lustre
+    /// copy exists (would lose data). Returns the freed local location.
+    pub fn evict_local(&self, file: FileId) -> Result<Location> {
+        let mut st = self.state.borrow_mut();
+        let meta = st
+            .files
+            .get(&file)
+            .cloned()
+            .ok_or_else(|| Error::Sim(format!("evict of unknown file {file}")))?;
+        let local = match meta.loc {
+            Location::Lustre => {
+                return Err(Error::Sim(format!("file {file} has no local copy")))
+            }
+            loc => loc,
+        };
+        if !meta.lustre_replica {
+            return Err(Error::Sim(format!(
+                "refusing to evict file {file}: no Lustre copy (would lose data)"
+            )));
+        }
+        match local {
+            Location::Tmpfs { node } => {
+                st.tmpfs_used[node] = st.tmpfs_used[node].saturating_sub(meta.size);
+                let used = st.tmpfs_used[node];
+                st.caches[node].set_pressure(used);
+            }
+            Location::Disk { node, .. } => {
+                st.caches[node].unlink(file);
+                st.cancel_writeback(node, file);
+            }
+            Location::Lustre => unreachable!(),
+        }
+        let m = st.files.get_mut(&file).expect("checked");
+        m.loc = Location::Lustre;
+        m.lustre_replica = false;
+        Ok(local)
+    }
+
+    /// Wake `node`'s writeback daemon (new dirty work queued).
+    fn kick_writeback(&self, sim: &mut Sim, node: usize) {
+        let pid = self.state.borrow().wb_daemons[node];
+        sim.notify(pid);
+    }
+
+    /// Tier statistics snapshot.
+    pub fn stats(&self) -> StackStats {
+        self.state.borrow().stats.clone()
+    }
+}
+
+// --- read op ---------------------------------------------------------------
+
+struct ReadOp {
+    node: usize,
+    file: FileId,
+    waker: ProcId,
+    stack: Stack,
+    phase: u8,
+    miss: u64,
+}
+
+impl Process for ReadOp {
+    fn resume(&mut self, sim: &mut Sim, pid: ProcId) -> Step {
+        loop {
+            match self.phase {
+                // phase 0: MDS for Lustre, else skip ahead
+                0 => {
+                    self.phase = 1;
+                    let st = self.stack.state.borrow();
+                    let meta = match st.files.get(&self.file) {
+                        Some(m) => m.clone(),
+                        None => {
+                            drop(st);
+                            // file vanished: wake requester, abort
+                            sim.notify(self.waker);
+                            return Step::Done;
+                        }
+                    };
+                    if matches!(meta.loc, Location::Lustre) {
+                        let ops = st.spec.lustre.mds_ops_per_open;
+                        let cap = 1.0 / st.spec.lustre.mds_op_latency;
+                        let mds = st.topo.mds;
+                        drop(st);
+                        self.stack.state.borrow_mut().stats.mds_ops += ops;
+                        sim.start_flow(vec![mds], ops, cap, Some(pid));
+                        return Step::Waiting;
+                    }
+                }
+                // phase 1: cached portion at memory speed
+                1 => {
+                    self.phase = 2;
+                    let mut st = self.stack.state.borrow_mut();
+                    let meta = match st.files.get(&self.file) {
+                        Some(m) => m.clone(),
+                        None => {
+                            sim.notify(self.waker);
+                            return Step::Done;
+                        }
+                    };
+                    // tmpfs never goes through the page cache split: it
+                    // IS memory
+                    let (hit, miss) = match meta.loc {
+                        Location::Tmpfs { .. } => (meta.size, 0),
+                        _ => st.caches[self.node].read_split(self.file, meta.size),
+                    };
+                    self.miss = miss;
+                    let tier = meta.loc.tier_name();
+                    st.stats.tier(tier).cache_read += match meta.loc {
+                        Location::Tmpfs { .. } => 0,
+                        _ => hit,
+                    };
+                    if matches!(meta.loc, Location::Tmpfs { .. }) {
+                        st.stats.tier(tier).read += hit;
+                    }
+                    let path = st.topo.cache_read_path(self.node);
+                    drop(st);
+                    if hit > 0 {
+                        sim.start_flow(path, hit as f64, f64::INFINITY, Some(pid));
+                        return Step::Waiting;
+                    }
+                }
+                // phase 2: missed portion from the device
+                2 => {
+                    self.phase = 3;
+                    if self.miss > 0 {
+                        let mut st = self.stack.state.borrow_mut();
+                        let meta = match st.files.get(&self.file) {
+                            Some(m) => m.clone(),
+                            None => {
+                                sim.notify(self.waker);
+                                return Step::Done;
+                            }
+                        };
+                        let path = match meta.loc {
+                            Location::Lustre => {
+                                let ost = meta.ost.expect("lustre file has ost");
+                                st.topo.lustre_read_path(self.node, ost)
+                            }
+                            loc => st.topo.local_read_path(loc),
+                        };
+                        st.stats.tier(meta.loc.tier_name()).read += self.miss;
+                        drop(st);
+                        sim.start_flow(path, self.miss as f64, f64::INFINITY, Some(pid));
+                        return Step::Waiting;
+                    }
+                }
+                // phase 3: populate cache with missed bytes, wake caller
+                _ => {
+                    if self.miss > 0 {
+                        let mut st = self.stack.state.borrow_mut();
+                        if st.files.contains_key(&self.file) {
+                            let node = self.node;
+                            let file = self.file;
+                            let miss = self.miss;
+                            st.caches[node].insert_clean(file, miss);
+                        }
+                    }
+                    sim.notify(self.waker);
+                    return Step::Done;
+                }
+            }
+        }
+    }
+}
+
+// --- write op --------------------------------------------------------------
+
+struct WriteOp {
+    node: usize,
+    file: FileId,
+    size: u64,
+    loc: Location,
+    waker: ProcId,
+    stack: Stack,
+    phase: u8,
+    through: u64,
+    /// Replica write (flush): on completion mark `lustre_replica` instead
+    /// of having re-registered the primary at op start.
+    replica: bool,
+}
+
+impl Process for WriteOp {
+    fn resume(&mut self, sim: &mut Sim, pid: ProcId) -> Step {
+        loop {
+            match self.phase {
+                // phase 0: MDS open + per-MiB grant ops for Lustre
+                0 => {
+                    self.phase = 1;
+                    if matches!(self.loc, Location::Lustre) {
+                        let mut st = self.stack.state.borrow_mut();
+                        // lock contention: grant traffic grows with the
+                        // number of concurrent writers (paper Fig 2d)
+                        st.lustre_writers += 1;
+                        let contention = 1.0
+                            + st.spec.lustre.mds_contention_alpha
+                                * (st.lustre_writers.saturating_sub(1)) as f64;
+                        let ops = st.spec.lustre.mds_ops_per_open
+                            + st.spec.lustre.mds_ops_per_mib_written
+                                * contention
+                                * (self.size as f64 / MIB as f64);
+                        st.stats.mds_ops += ops;
+                        // open is serial; grants pipeline moderately
+                        let cap = 8.0 / st.spec.lustre.mds_op_latency;
+                        let mds = st.topo.mds;
+                        drop(st);
+                        sim.start_flow(vec![mds], ops, cap, Some(pid));
+                        return Step::Waiting;
+                    }
+                }
+                // phase 1: tmpfs fast path / cache absorption
+                1 => {
+                    self.phase = 2;
+                    if self.replica {
+                        // flush copies stream straight to Lustre: the
+                        // flush is only *complete* when the bytes are
+                        // materialized on the PFS (paper §4.3 — flush-all
+                        // must wait for the actual transfer), so replica
+                        // writes bypass page-cache absorption entirely
+                        self.through = self.size;
+                        continue;
+                    }
+                    let mut st = self.stack.state.borrow_mut();
+                    let tier = self.loc.tier_name();
+                    match self.loc {
+                        Location::Tmpfs { .. } => {
+                            st.stats.tier(tier).written += self.size;
+                            let path = st.topo.cache_write_path(self.node);
+                            drop(st);
+                            self.through = 0;
+                            self.phase = 3; // no passthrough needed
+                            sim.start_flow(path, self.size as f64, f64::INFINITY, Some(pid));
+                            return Step::Waiting;
+                        }
+                        loc => {
+                            let extra = match loc {
+                                Location::Lustre => {
+                                    let ost = st
+                                        .files
+                                        .get(&self.file)
+                                        .and_then(|m| m.ost)
+                                        .expect("ost assigned at write start");
+                                    st.ost_dirty_room(self.node, ost)
+                                }
+                                _ => u64::MAX,
+                            };
+                            let absorbed =
+                                st.caches[self.node].absorb_write(self.file, self.size, extra);
+                            self.through = self.size - absorbed;
+                            st.stats.tier(tier).cache_write += absorbed;
+                            if absorbed > 0 {
+                                let target = match loc {
+                                    Location::Disk { disk, .. } => WbTarget::Disk { disk },
+                                    Location::Lustre => WbTarget::Ost {
+                                        ost: st.files.get(&self.file).and_then(|m| m.ost).unwrap(),
+                                    },
+                                    Location::Tmpfs { .. } => unreachable!(),
+                                };
+                                st.queue_writeback(self.node, target, self.file, absorbed);
+                            }
+                            let path = st.topo.cache_write_path(self.node);
+                            drop(st);
+                            if absorbed > 0 {
+                                self.stack.kick_writeback(sim, self.node);
+                                sim.start_flow(path, absorbed as f64, f64::INFINITY, Some(pid));
+                                return Step::Waiting;
+                            }
+                        }
+                    }
+                }
+                // phase 2: throttled passthrough at device speed
+                2 => {
+                    self.phase = 3;
+                    if self.through > 0 {
+                        let mut st = self.stack.state.borrow_mut();
+                        let path = match self.loc {
+                            Location::Lustre => {
+                                let ost =
+                                    st.files.get(&self.file).and_then(|m| m.ost).unwrap();
+                                st.topo.lustre_write_path(self.node, ost)
+                            }
+                            loc => st.topo.local_write_path(loc),
+                        };
+                        st.stats.tier(self.loc.tier_name()).written += self.through;
+                        drop(st);
+                        sim.start_flow(path, self.through as f64, f64::INFINITY, Some(pid));
+                        return Step::Waiting;
+                    }
+                }
+                // phase 3: done
+                _ => {
+                    let mut st = self.stack.state.borrow_mut();
+                    if matches!(self.loc, Location::Lustre) {
+                        st.lustre_writers = st.lustre_writers.saturating_sub(1);
+                    }
+                    if self.replica {
+                        if let Some(m) = st.files.get_mut(&self.file) {
+                            m.lustre_replica = true;
+                        }
+                    }
+                    drop(st);
+                    sim.notify(self.waker);
+                    return Step::Done;
+                }
+            }
+        }
+    }
+}
+
+// --- flush op (Sea Copy / Move, Table 1) -------------------------------------
+
+struct FlushOp {
+    node: usize,
+    file: FileId,
+    evict_after: bool,
+    waker: ProcId,
+    stack: Stack,
+    phase: u8,
+}
+
+impl Process for FlushOp {
+    fn resume(&mut self, sim: &mut Sim, pid: ProcId) -> Step {
+        match self.phase {
+            // phase 0: read the local copy (cache-aware)
+            0 => {
+                self.phase = 1;
+                if self.stack.read(sim, self.node, self.file, pid).is_err() {
+                    // file vanished (e.g. deleted while queued): give up
+                    sim.notify(self.waker);
+                    return Step::Done;
+                }
+                Step::Waiting
+            }
+            // phase 1: write a Lustre replica
+            1 => {
+                self.phase = 2;
+                let size = {
+                    let mut st = self.stack.state.borrow_mut();
+                    let meta = match st.files.get(&self.file).cloned() {
+                        Some(m) => m,
+                        None => {
+                            sim.notify(self.waker);
+                            return Step::Done;
+                        }
+                    };
+                    if meta.ost.is_none() {
+                        let ost = st.assign_ost();
+                        st.files.get_mut(&self.file).expect("present").ost = Some(ost);
+                    }
+                    meta.size
+                };
+                sim.spawn(Box::new(WriteOp {
+                    node: self.node,
+                    file: self.file,
+                    size,
+                    loc: Location::Lustre,
+                    waker: pid,
+                    stack: self.stack.clone(),
+                    phase: 0,
+                    through: 0,
+                    replica: true,
+                }));
+                Step::Waiting
+            }
+            // phase 2: optional eviction, then wake the requester
+            _ => {
+                if self.evict_after {
+                    // best-effort: replica flag is set by the WriteOp
+                    let _ = self.stack.evict_local(self.file);
+                }
+                sim.notify(self.waker);
+                Step::Done
+            }
+        }
+    }
+}
+
+// --- writeback daemon -------------------------------------------------------
+
+/// Per-node background flusher with one batch in flight **per backing
+/// device**, mirroring Linux's per-BDI flusher threads: a node can drain
+/// all its disks and several OSTs concurrently. A single daemon process
+/// multiplexes the batches by polling `flow_alive` on wake-up.
+struct WritebackDaemon {
+    node: usize,
+    stack: Stack,
+    /// In-flight batches: (flow, target, entries).
+    inflight: Vec<(crate::sim::engine::FlowId, WbTarget, Vec<(FileId, u64)>)>,
+}
+
+/// Max bytes per writeback batch flow.
+const WB_BATCH: u64 = 256 * MIB;
+
+impl Process for WritebackDaemon {
+    fn resume(&mut self, sim: &mut Sim, pid: ProcId) -> Step {
+        // complete finished batches
+        let mut still = Vec::with_capacity(self.inflight.len());
+        for (flow, target, entries) in self.inflight.drain(..) {
+            if sim.flow_alive(flow) {
+                still.push((flow, target, entries));
+                continue;
+            }
+            let mut st = self.stack.state.borrow_mut();
+            for &(file, bytes) in &entries {
+                let node = self.node;
+                st.caches[node].complete_writeback(file, bytes);
+                if let WbTarget::Ost { ost } = target {
+                    if let Some(d) = st.dirty_per_ost[node].get_mut(&ost) {
+                        *d = d.saturating_sub(bytes);
+                    }
+                }
+                st.wb_pending[node] = st.wb_pending[node].saturating_sub(bytes);
+                let tier = match target {
+                    WbTarget::Disk { .. } => "local disk",
+                    WbTarget::Ost { .. } => "lustre",
+                };
+                st.stats.tier(tier).written += bytes;
+            }
+        }
+        self.inflight = still;
+        // start one batch for every queued target without an in-flight one
+        let new_batches: Vec<(WbTarget, Vec<(FileId, u64)>, Vec<crate::sim::engine::ResourceId>, u64)> = {
+            let mut st = self.stack.state.borrow_mut();
+            let node = self.node;
+            let busy: Vec<WbTarget> = self.inflight.iter().map(|(_, t, _)| *t).collect();
+            let targets: Vec<WbTarget> = st.wb_queues[node]
+                .iter()
+                .filter(|(t, q)| !q.is_empty() && !busy.contains(t))
+                .map(|(&t, _)| t)
+                .collect();
+            targets
+                .into_iter()
+                .map(|target| {
+                    let q = st.wb_queues[node].get_mut(&target).expect("nonempty");
+                    let mut batch = Vec::new();
+                    let mut total = 0;
+                    while total < WB_BATCH {
+                        match q.pop_front() {
+                            Some((f, b)) => {
+                                let take = b.min(WB_BATCH - total);
+                                if take < b {
+                                    q.push_front((f, b - take));
+                                }
+                                total += take;
+                                batch.push((f, take));
+                            }
+                            None => break,
+                        }
+                    }
+                    let path = match target {
+                        WbTarget::Disk { disk } => {
+                            st.topo.local_write_path(Location::Disk { node, disk })
+                        }
+                        WbTarget::Ost { ost } => st.topo.lustre_write_path(node, ost),
+                    };
+                    (target, batch, path, total)
+                })
+                .collect()
+        };
+        for (target, batch, path, total) in new_batches {
+            let flow = sim.start_flow(path, total as f64, f64::INFINITY, Some(pid));
+            self.inflight.push((flow, target, batch));
+        }
+        Step::Waiting
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::GIB;
+
+    /// Tiny driver process that runs a closure-defined script of ops.
+    enum ScriptOp {
+        Read(FileId),
+        Write(FileId, u64, Location),
+        Delete(FileId),
+        Compute(f64),
+    }
+    struct Script {
+        node: usize,
+        ops: VecDeque<ScriptOp>,
+        stack: Stack,
+        waiting: bool,
+        done_at: Rc<RefCell<f64>>,
+    }
+    impl Process for Script {
+        fn resume(&mut self, sim: &mut Sim, pid: ProcId) -> Step {
+            self.waiting = false;
+            match self.ops.pop_front() {
+                None => {
+                    *self.done_at.borrow_mut() = sim.now();
+                    Step::Done
+                }
+                Some(op) => {
+                    match op {
+                        ScriptOp::Read(f) => self.stack.read(sim, self.node, f, pid).unwrap(),
+                        ScriptOp::Write(f, s, l) => {
+                            self.stack.write(sim, self.node, f, s, l, pid).unwrap()
+                        }
+                        ScriptOp::Delete(f) => {
+                            self.stack.delete(sim, self.node, f, pid).unwrap()
+                        }
+                        ScriptOp::Compute(s) => self.stack.compute(sim, self.node, s, pid),
+                    }
+                    Step::Waiting
+                }
+            }
+        }
+    }
+
+    fn run_script(spec: &ClusterSpec, preregister: &[(FileId, u64, Location)], ops: Vec<ScriptOp>) -> (f64, StackStats) {
+        let mut sim = Sim::new();
+        let stack = Stack::new(&mut sim, spec);
+        for &(f, s, l) in preregister {
+            stack.register_file(f, s, l);
+        }
+        let done = Rc::new(RefCell::new(-1.0));
+        sim.spawn(Box::new(Script {
+            node: 0,
+            ops: ops.into(),
+            stack: stack.clone(),
+            waiting: false,
+            done_at: done.clone(),
+        }));
+        sim.run(1e12).unwrap();
+        let t = *done.borrow();
+        assert!(t >= 0.0, "script did not finish");
+        (t, stack.stats())
+    }
+
+    fn small_spec() -> ClusterSpec {
+        // 1 node, simple numbers for hand-checkable results
+        let mut s = ClusterSpec {
+            nodes: 1,
+            procs_per_node: 1,
+            cores_per_node: 4,
+            mem_bytes: 10 * GIB,
+            tmpfs_bytes: 4 * GIB,
+            mem_read_bw: 1000.0 * MIB as f64,
+            mem_write_bw: 500.0 * MIB as f64,
+            disks_per_node: 2,
+            disk_bytes: 100 * GIB,
+            disk_read_bw: 100.0 * MIB as f64,
+            disk_write_bw: 50.0 * MIB as f64,
+            nic_bw: 1000.0 * MIB as f64,
+            dirty_ratio: 0.2,
+            cacheable_ratio: 0.8,
+            ..ClusterSpec::default()
+        };
+        s.lustre.ost_read_bw = 200.0 * MIB as f64;
+        s.lustre.ost_write_bw = 20.0 * MIB as f64;
+        s.lustre.server_nic_bw = 1000.0 * MIB as f64;
+        s.lustre.mds_ops_per_sec = 1000.0;
+        s.lustre.mds_op_latency = 1e-3;
+        s.lustre.mds_ops_per_mib_written = 0.0;
+        s
+    }
+
+    #[test]
+    fn tmpfs_write_then_read_at_memory_speed() {
+        let spec = small_spec();
+        let f = 1;
+        let sz = 500 * MIB;
+        let (t, stats) = run_script(
+            &spec,
+            &[],
+            vec![
+                ScriptOp::Write(f, sz, Location::Tmpfs { node: 0 }),
+                ScriptOp::Read(f),
+            ],
+        );
+        // write at 500 MiB/s = 1.0s; read at 1000 MiB/s = 0.5s
+        assert!((t - 1.5).abs() < 1e-6, "t = {t}");
+        assert_eq!(stats.tiers["tmpfs"].written, sz);
+        assert_eq!(stats.tiers["tmpfs"].read, sz);
+    }
+
+    #[test]
+    fn lustre_cold_read_travels_network() {
+        let spec = small_spec();
+        let f = 7;
+        let sz = 200 * MIB;
+        let (t, stats) = run_script(&spec, &[(f, sz, Location::Lustre)], vec![ScriptOp::Read(f)]);
+        // mds 1 op @1ms + 200 MiB at min(200, 1000, 1000) = 200 MiB/s = 1s
+        assert!((t - 1.001).abs() < 1e-3, "t = {t}");
+        assert_eq!(stats.tiers["lustre"].read, sz);
+        assert!(stats.mds_ops >= 1.0);
+    }
+
+    #[test]
+    fn second_lustre_read_hits_page_cache() {
+        let spec = small_spec();
+        let f = 7;
+        let sz = 200 * MIB;
+        let (t, stats) = run_script(
+            &spec,
+            &[(f, sz, Location::Lustre)],
+            vec![ScriptOp::Read(f), ScriptOp::Read(f)],
+        );
+        // second read at mem_r 1000 MiB/s = 0.2s (+1ms mds)
+        assert!((t - (1.001 + 0.2 + 0.001)).abs() < 5e-3, "t = {t}");
+        assert_eq!(stats.tiers["lustre"].read, sz, "device read only once");
+        assert_eq!(stats.tiers["lustre"].cache_read, sz);
+    }
+
+    #[test]
+    fn disk_write_absorbed_by_cache_then_writeback() {
+        let spec = small_spec();
+        let f = 3;
+        let sz = 100 * MIB; // well under dirty limit (2 GiB)
+        let (t, stats) = run_script(
+            &spec,
+            &[],
+            vec![ScriptOp::Write(f, sz, Location::Disk { node: 0, disk: 0 })],
+        );
+        // foreground completes at memory write speed: 100/500 = 0.2s
+        assert!((t - 0.2).abs() < 1e-6, "t = {t}");
+        assert_eq!(stats.tiers["local disk"].cache_write, sz);
+        // but the sim runs until writeback drains: device sees the bytes
+        assert_eq!(stats.tiers["local disk"].written, sz);
+    }
+
+    #[test]
+    fn dirty_limit_throttles_big_writes() {
+        let spec = small_spec(); // dirty limit = 2 GiB
+        let f = 4;
+        let sz = 4 * GIB;
+        let (t, _stats) = run_script(
+            &spec,
+            &[],
+            vec![ScriptOp::Write(f, sz, Location::Disk { node: 0, disk: 0 })],
+        );
+        // 2 GiB absorbed at 500 MiB/s (4.1s), 2 GiB through at ~50 MiB/s
+        // (writeback contends on the same disk lane, so ≥ 40.96s)
+        assert!(t > 30.0, "expected throttling, t = {t}");
+    }
+
+    #[test]
+    fn per_ost_dirty_limit_binds_lustre_writes() {
+        let mut spec = small_spec();
+        spec.lustre.client_dirty_per_ost = 100 * MIB;
+        let f = 5;
+        let sz = 1000 * MIB;
+        let (t, _) = run_script(&spec, &[], vec![ScriptOp::Write(f, sz, Location::Lustre)]);
+        // only 100 MiB absorbed; 900 MiB at ~20 MiB/s ≥ 45s
+        assert!(t > 40.0, "t = {t}");
+    }
+
+    #[test]
+    fn compute_uses_cpu_pool() {
+        let spec = small_spec();
+        let (t, _) = run_script(&spec, &[], vec![ScriptOp::Compute(2.5)]);
+        assert!((t - 2.5).abs() < 1e-9, "t = {t}");
+    }
+
+    #[test]
+    fn delete_frees_tmpfs_and_cache() {
+        let spec = small_spec();
+        let f = 6;
+        let (t, _) = run_script(
+            &spec,
+            &[],
+            vec![
+                ScriptOp::Write(f, GIB, Location::Tmpfs { node: 0 }),
+                ScriptOp::Delete(f),
+                ScriptOp::Write(f, GIB, Location::Tmpfs { node: 0 }),
+            ],
+        );
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn read_unknown_file_errors() {
+        let mut sim = Sim::new();
+        let spec = small_spec();
+        let stack = Stack::new(&mut sim, &spec);
+        let pid = ProcId(999);
+        assert!(stack.read(&mut sim, 0, 42, pid).is_err());
+    }
+
+    #[test]
+    fn cross_node_access_rejected() {
+        let mut spec = small_spec();
+        spec.nodes = 2;
+        let mut sim = Sim::new();
+        let stack = Stack::new(&mut sim, &spec);
+        stack.register_file(1, MIB, Location::Tmpfs { node: 1 });
+        assert!(stack.read(&mut sim, 0, 1, ProcId(999)).is_err());
+        assert!(stack
+            .write(&mut sim, 0, 2, MIB, Location::Disk { node: 1, disk: 0 }, ProcId(999))
+            .is_err());
+    }
+}

@@ -1,0 +1,227 @@
+//! Maps a [`ClusterSpec`] onto engine resources and names storage
+//! locations.
+//!
+//! Resources created per compute node: memory-bus read/write lanes, a CPU
+//! pool (capacity = cores, compute flows capped at 1), NIC in/out lanes,
+//! and per-disk read/write lanes. Per Lustre OSS: NIC in/out. Per OST:
+//! read/write lanes. One MDS processor-sharing service for the whole file
+//! system. Paths for a Lustre transfer traverse client NIC → server NIC →
+//! OST, reproducing the `min(cN, sN, d·min(d,cp))` structure of the
+//! paper's Eqs. (2)–(3).
+
+use crate::sim::engine::{ResourceId, Sim};
+use crate::sim::spec::ClusterSpec;
+
+/// Where bytes live, from a single node's point of view.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Location {
+    /// Node-local tmpfs (RAM-backed).
+    Tmpfs { node: usize },
+    /// Node-local disk `disk` on `node`.
+    Disk { node: usize, disk: usize },
+    /// The shared parallel file system; files are assigned an OST.
+    Lustre,
+}
+
+impl Location {
+    /// Human-readable tier name (matches Table 2 rows).
+    pub fn tier_name(&self) -> &'static str {
+        match self {
+            Location::Tmpfs { .. } => "tmpfs",
+            Location::Disk { .. } => "local disk",
+            Location::Lustre => "lustre",
+        }
+    }
+
+    /// Is this location on the given node (Lustre is on no node)?
+    pub fn on_node(&self, n: usize) -> bool {
+        match *self {
+            Location::Tmpfs { node } => node == n,
+            Location::Disk { node, .. } => node == n,
+            Location::Lustre => false,
+        }
+    }
+}
+
+/// Per-node resource handles.
+#[derive(Debug, Clone)]
+pub struct NodeRes {
+    /// Memory bus, read direction (page-cache & tmpfs reads).
+    pub mem_r: ResourceId,
+    /// Memory bus, write direction.
+    pub mem_w: ResourceId,
+    /// CPU pool (capacity = cores; compute flows capped at 1.0).
+    pub cpu: ResourceId,
+    /// NIC, node → fabric.
+    pub nic_out: ResourceId,
+    /// NIC, fabric → node.
+    pub nic_in: ResourceId,
+    /// Per-disk read lanes.
+    pub disk_r: Vec<ResourceId>,
+    /// Per-disk write lanes.
+    pub disk_w: Vec<ResourceId>,
+}
+
+/// Per-OSS resource handles.
+#[derive(Debug, Clone)]
+pub struct OssRes {
+    /// Server NIC, fabric → server (writes land here).
+    pub nic_in: ResourceId,
+    /// Server NIC, server → fabric (reads come from here).
+    pub nic_out: ResourceId,
+    /// Read lane per OST hosted by this server.
+    pub ost_r: Vec<ResourceId>,
+    /// Write lane per OST hosted by this server.
+    pub ost_w: Vec<ResourceId>,
+}
+
+/// All resource handles for a built cluster.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// The spec this topology was built from.
+    pub spec: ClusterSpec,
+    /// Compute-node resources, indexed by node id.
+    pub nodes: Vec<NodeRes>,
+    /// OSS resources, indexed by server id.
+    pub oss: Vec<OssRes>,
+    /// MDS processor-sharing service (units = metadata ops).
+    pub mds: ResourceId,
+}
+
+impl Topology {
+    /// Instantiate all resources for `spec` inside `sim`.
+    pub fn build(sim: &mut Sim, spec: &ClusterSpec) -> Topology {
+        let mut nodes = Vec::with_capacity(spec.nodes);
+        for n in 0..spec.nodes {
+            let mem_r = sim.add_resource(format!("n{n}.mem_r"), spec.mem_read_bw);
+            let mem_w = sim.add_resource(format!("n{n}.mem_w"), spec.mem_write_bw);
+            let cpu = sim.add_resource(format!("n{n}.cpu"), spec.cores_per_node as f64);
+            let nic_out = sim.add_resource(format!("n{n}.nic_out"), spec.nic_bw);
+            let nic_in = sim.add_resource(format!("n{n}.nic_in"), spec.nic_bw);
+            let mut disk_r = Vec::with_capacity(spec.disks_per_node);
+            let mut disk_w = Vec::with_capacity(spec.disks_per_node);
+            for d in 0..spec.disks_per_node {
+                disk_r.push(sim.add_resource(format!("n{n}.d{d}.r"), spec.disk_read_bw));
+                disk_w.push(sim.add_resource(format!("n{n}.d{d}.w"), spec.disk_write_bw));
+            }
+            nodes.push(NodeRes { mem_r, mem_w, cpu, nic_out, nic_in, disk_r, disk_w });
+        }
+        let mut oss = Vec::with_capacity(spec.lustre.oss_count);
+        for s in 0..spec.lustre.oss_count {
+            let nic_in = sim.add_resource(format!("oss{s}.nic_in"), spec.lustre.server_nic_bw);
+            let nic_out =
+                sim.add_resource(format!("oss{s}.nic_out"), spec.lustre.server_nic_bw);
+            let mut ost_r = Vec::with_capacity(spec.lustre.osts_per_oss);
+            let mut ost_w = Vec::with_capacity(spec.lustre.osts_per_oss);
+            for t in 0..spec.lustre.osts_per_oss {
+                ost_r.push(sim.add_resource(format!("oss{s}.ost{t}.r"), spec.lustre.ost_read_bw));
+                ost_w.push(
+                    sim.add_resource(format!("oss{s}.ost{t}.w"), spec.lustre.ost_write_bw),
+                );
+            }
+            oss.push(OssRes { nic_in, nic_out, ost_r, ost_w });
+        }
+        let mds = sim.add_resource("mds", spec.lustre.mds_ops_per_sec);
+        Topology { spec: spec.clone(), nodes, oss, mds }
+    }
+
+    /// Map a global OST index to (server, local OST index).
+    pub fn ost_of(&self, global_ost: usize) -> (usize, usize) {
+        let per = self.spec.lustre.osts_per_oss;
+        (global_ost / per % self.spec.lustre.oss_count, global_ost % per)
+    }
+
+    /// Resource path for reading `bytes` of a file on OST `ost` from
+    /// `node`: OST read lane → server NIC out → client NIC in.
+    pub fn lustre_read_path(&self, node: usize, ost: usize) -> Vec<ResourceId> {
+        let (s, t) = self.ost_of(ost);
+        vec![self.oss[s].ost_r[t], self.oss[s].nic_out, self.nodes[node].nic_in]
+    }
+
+    /// Resource path for writing to OST `ost` from `node`.
+    pub fn lustre_write_path(&self, node: usize, ost: usize) -> Vec<ResourceId> {
+        let (s, t) = self.ost_of(ost);
+        vec![self.nodes[node].nic_out, self.oss[s].nic_in, self.oss[s].ost_w[t]]
+    }
+
+    /// Resource path for a local device read on `node`.
+    pub fn local_read_path(&self, loc: Location) -> Vec<ResourceId> {
+        match loc {
+            Location::Tmpfs { node } => vec![self.nodes[node].mem_r],
+            Location::Disk { node, disk } => vec![self.nodes[node].disk_r[disk]],
+            Location::Lustre => unreachable!("lustre path needs an OST"),
+        }
+    }
+
+    /// Resource path for a local device write on `node`.
+    pub fn local_write_path(&self, loc: Location) -> Vec<ResourceId> {
+        match loc {
+            Location::Tmpfs { node } => vec![self.nodes[node].mem_w],
+            Location::Disk { node, disk } => vec![self.nodes[node].disk_w[disk]],
+            Location::Lustre => unreachable!("lustre path needs an OST"),
+        }
+    }
+
+    /// Page-cache read path (always the node's memory bus).
+    pub fn cache_read_path(&self, node: usize) -> Vec<ResourceId> {
+        vec![self.nodes[node].mem_r]
+    }
+
+    /// Page-cache write path.
+    pub fn cache_write_path(&self, node: usize) -> Vec<ResourceId> {
+        vec![self.nodes[node].mem_w]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::Sim;
+
+    #[test]
+    fn builds_paper_topology() {
+        let mut sim = Sim::new();
+        let spec = ClusterSpec::paper_default();
+        let topo = Topology::build(&mut sim, &spec);
+        assert_eq!(topo.nodes.len(), 5);
+        assert_eq!(topo.nodes[0].disk_r.len(), 6);
+        assert_eq!(topo.oss.len(), 4);
+        assert_eq!(topo.oss[0].ost_r.len(), 11);
+    }
+
+    #[test]
+    fn ost_mapping_covers_all_servers() {
+        let mut sim = Sim::new();
+        let spec = ClusterSpec::paper_default();
+        let topo = Topology::build(&mut sim, &spec);
+        let mut seen = std::collections::HashSet::new();
+        for g in 0..44 {
+            let (s, t) = topo.ost_of(g);
+            assert!(s < 4 && t < 11);
+            seen.insert((s, t));
+        }
+        assert_eq!(seen.len(), 44, "44 distinct OSTs");
+    }
+
+    #[test]
+    fn paths_have_expected_hops() {
+        let mut sim = Sim::new();
+        let spec = ClusterSpec::paper_default();
+        let topo = Topology::build(&mut sim, &spec);
+        assert_eq!(topo.lustre_read_path(0, 3).len(), 3);
+        assert_eq!(topo.lustre_write_path(1, 7).len(), 3);
+        assert_eq!(topo.local_read_path(Location::Tmpfs { node: 2 }).len(), 1);
+        assert_eq!(
+            topo.local_write_path(Location::Disk { node: 0, disk: 5 }).len(),
+            1
+        );
+    }
+
+    #[test]
+    fn location_helpers() {
+        assert_eq!(Location::Lustre.tier_name(), "lustre");
+        assert!(Location::Tmpfs { node: 1 }.on_node(1));
+        assert!(!Location::Disk { node: 1, disk: 0 }.on_node(2));
+        assert!(!Location::Lustre.on_node(0));
+    }
+}

@@ -1,0 +1,203 @@
+//! Mini property-based testing kit (offline proptest substitute).
+//!
+//! Deterministic: every case derives from a base seed, failures report
+//! the case seed so a run can be reproduced exactly. A failing case is
+//! *minimized* by retrying with shrunken generator bounds (halving),
+//! which in practice localizes size-dependent failures well enough for
+//! the invariants this repo checks (space accounting, routing, batching,
+//! conservation).
+//!
+//! ```text
+//! use sea::testkit::Config;
+//! sea::testkit::check("reverse twice is identity", Config::default(), |g| {
+//!     let xs = g.vec_u64(0..100, 0..1000);
+//!     let mut r = xs.clone();
+//!     r.reverse();
+//!     r.reverse();
+//!     assert_eq!(xs, r);
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Property-check configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed (case `i` uses `seed + i`).
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0x5EA_5EED }
+    }
+}
+
+/// Per-case generator handle.
+pub struct Gen {
+    rng: Rng,
+    /// Shrink factor in (0, 1]; generators scale their ranges by it.
+    shrink: f64,
+    /// Log of generated values (printed on failure).
+    log: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64, shrink: f64) -> Gen {
+        Gen { rng: Rng::new(seed), shrink, log: Vec::new() }
+    }
+
+    fn scale(&self, hi: u64, lo: u64) -> u64 {
+        let span = hi.saturating_sub(lo).max(1);
+        lo + ((span as f64 * self.shrink).ceil() as u64).max(1)
+    }
+
+    /// u64 in [range.start, range.end) (shrunk toward the low end).
+    pub fn u64(&mut self, range: std::ops::Range<u64>) -> u64 {
+        assert!(range.start < range.end);
+        let hi = self.scale(range.end, range.start).min(range.end);
+        let v = range.start + self.rng.below(hi - range.start);
+        self.log.push(format!("u64={v}"));
+        v
+    }
+
+    /// usize in range.
+    pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
+        self.u64(range.start as u64..range.end as u64) as usize
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.range_f64(lo, lo + (hi - lo) * self.shrink);
+        self.log.push(format!("f64={v:.4}"));
+        v
+    }
+
+    /// bool with probability `p` of true.
+    pub fn bool(&mut self, p: f64) -> bool {
+        let v = self.rng.f64() < p;
+        self.log.push(format!("bool={v}"));
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.index(xs.len());
+        self.log.push(format!("pick#{i}"));
+        &xs[i]
+    }
+
+    /// Vec of u64s with random length in `len` and values in `vals`.
+    pub fn vec_u64(
+        &mut self,
+        len: std::ops::Range<usize>,
+        vals: std::ops::Range<u64>,
+    ) -> Vec<u64> {
+        let n = self.usize(len.start.max(0)..len.end.max(len.start + 1));
+        (0..n).map(|_| self.rng.below(vals.end - vals.start) + vals.start).collect()
+    }
+
+    /// Raw RNG access (for domain-specific generation).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases; panics (with seed and a
+/// minimized reproduction hint) on the first failure.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cfg: Config, prop: F) {
+    for i in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(i as u64);
+        let failed = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, 1.0);
+            prop(&mut g);
+        })
+        .is_err();
+        if failed {
+            // shrink: halve the generator scale until it passes, report
+            // the smallest failing scale
+            let mut failing_shrink = 1.0;
+            let mut s = 0.5;
+            while s > 0.01 {
+                let fails = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, s);
+                    prop(&mut g);
+                })
+                .is_err();
+                if fails {
+                    failing_shrink = s;
+                    s /= 2.0;
+                } else {
+                    break;
+                }
+            }
+            // re-run at the minimized scale to produce the panic message
+            // and the generator log
+            let result = std::panic::catch_unwind(|| {
+                let mut g = Gen::new(seed, failing_shrink);
+                prop(&mut g);
+                g
+            });
+            panic!(
+                "property {name:?} failed: case {i}, seed {seed:#x}, \
+                 minimized shrink {failing_shrink}; rerun with \
+                 Config {{ cases: 1, seed: {seed:#x} }} ({:?})",
+                result.err().map(|e| {
+                    e.downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_default()
+                })
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", Config { cases: 16, ..Config::default() }, |g| {
+            let a = g.u64(0..1000);
+            let b = g.u64(0..1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports() {
+        check("always fails above 10", Config { cases: 32, ..Config::default() }, |g| {
+            let v = g.u64(0..100);
+            assert!(v <= 10, "v = {v}");
+        });
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        check("ranges", Config { cases: 64, ..Config::default() }, |g| {
+            let v = g.u64(10..20);
+            assert!((10..20).contains(&v));
+            let x = g.f64(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&x));
+            let n = g.usize(1..5);
+            assert!((1..5).contains(&n));
+            let xs = g.vec_u64(0..8, 0..100);
+            assert!(xs.len() < 8);
+            assert!(xs.iter().all(|&x| x < 100));
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Gen::new(9, 1.0);
+        let mut b = Gen::new(9, 1.0);
+        for _ in 0..32 {
+            assert_eq!(a.u64(0..1_000_000), b.u64(0..1_000_000));
+        }
+    }
+}

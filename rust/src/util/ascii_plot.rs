@@ -1,0 +1,206 @@
+//! Minimal ASCII line-plotting for figure reproduction in a terminal.
+//!
+//! Each paper figure is emitted both as CSV (exact numbers) and as an
+//! ASCII chart (shape at a glance). Series are drawn with distinct glyphs;
+//! shaded model-bound regions are rendered with `:` fill between the bound
+//! lines of the matching series.
+
+/// A named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    /// Legend label.
+    pub label: String,
+    /// Plot glyph.
+    pub glyph: char,
+    /// Data points (x ascending not required but typical).
+    pub points: Vec<(f64, f64)>,
+}
+
+/// A shaded vertical band between two y-series sharing x coordinates.
+#[derive(Debug, Clone)]
+pub struct Band {
+    /// Legend label.
+    pub label: String,
+    /// Fill glyph.
+    pub glyph: char,
+    /// (x, y_low, y_high) triples.
+    pub points: Vec<(f64, f64, f64)>,
+}
+
+/// Plot geometry and labels.
+#[derive(Debug, Clone)]
+pub struct Plot {
+    /// Chart title.
+    pub title: String,
+    /// X-axis label.
+    pub xlabel: String,
+    /// Y-axis label.
+    pub ylabel: String,
+    /// Character columns of the plotting area.
+    pub width: usize,
+    /// Character rows of the plotting area.
+    pub height: usize,
+    series: Vec<Series>,
+    bands: Vec<Band>,
+}
+
+impl Plot {
+    /// New empty plot with default 72x20 plotting area.
+    pub fn new(title: impl Into<String>, xlabel: impl Into<String>, ylabel: impl Into<String>) -> Self {
+        Plot {
+            title: title.into(),
+            xlabel: xlabel.into(),
+            ylabel: ylabel.into(),
+            width: 72,
+            height: 20,
+            series: Vec::new(),
+            bands: Vec::new(),
+        }
+    }
+
+    /// Add a line series.
+    pub fn series(mut self, label: impl Into<String>, glyph: char, points: Vec<(f64, f64)>) -> Self {
+        self.series.push(Series { label: label.into(), glyph, points });
+        self
+    }
+
+    /// Add a shaded bound band.
+    pub fn band(mut self, label: impl Into<String>, glyph: char, points: Vec<(f64, f64, f64)>) -> Self {
+        self.bands.push(Band { label: label.into(), glyph, points });
+        self
+    }
+
+    fn extents(&self) -> (f64, f64, f64, f64) {
+        let mut xmin = f64::INFINITY;
+        let mut xmax = f64::NEG_INFINITY;
+        let mut ymin: f64 = 0.0; // makespans start at 0
+        let mut ymax = f64::NEG_INFINITY;
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                xmin = xmin.min(x);
+                xmax = xmax.max(x);
+                ymin = ymin.min(y);
+                ymax = ymax.max(y);
+            }
+        }
+        for b in &self.bands {
+            for &(x, lo, hi) in &b.points {
+                xmin = xmin.min(x);
+                xmax = xmax.max(x);
+                ymin = ymin.min(lo);
+                ymax = ymax.max(hi);
+            }
+        }
+        if !xmin.is_finite() {
+            (0.0, 1.0, 0.0, 1.0)
+        } else {
+            let xpad = if xmax > xmin { 0.0 } else { 0.5 };
+            let ypad = if ymax > ymin { (ymax - ymin) * 0.05 } else { 0.5 };
+            (xmin - xpad, xmax + xpad, ymin, ymax + ypad)
+        }
+    }
+
+    /// Render to a multi-line string.
+    pub fn render(&self) -> String {
+        let (xmin, xmax, ymin, ymax) = self.extents();
+        let (w, h) = (self.width, self.height);
+        let mut grid = vec![vec![' '; w]; h];
+        let to_col = |x: f64| -> usize {
+            let t = if xmax > xmin { (x - xmin) / (xmax - xmin) } else { 0.5 };
+            ((t * (w - 1) as f64).round() as isize).clamp(0, w as isize - 1) as usize
+        };
+        let to_row = |y: f64| -> usize {
+            let t = if ymax > ymin { (y - ymin) / (ymax - ymin) } else { 0.5 };
+            let r = ((1.0 - t) * (h - 1) as f64).round() as isize;
+            r.clamp(0, h as isize - 1) as usize
+        };
+
+        // bands first (underneath)
+        for b in &self.bands {
+            for &(x, lo, hi) in &b.points {
+                if !(lo.is_finite() && hi.is_finite()) {
+                    continue;
+                }
+                let c = to_col(x);
+                let (r_hi, r_lo) = (to_row(hi), to_row(lo));
+                for r in r_hi..=r_lo {
+                    grid[r][c] = b.glyph;
+                }
+            }
+        }
+        // line series with linear interpolation between points
+        for s in &self.series {
+            let mut pts = s.points.clone();
+            pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for pair in pts.windows(2) {
+                let (x0, y0) = pair[0];
+                let (x1, y1) = pair[1];
+                let (c0, c1) = (to_col(x0), to_col(x1));
+                for c in c0..=c1 {
+                    let t = if c1 > c0 { (c - c0) as f64 / (c1 - c0) as f64 } else { 0.0 };
+                    let y = y0 + t * (y1 - y0);
+                    grid[to_row(y)][c] = s.glyph;
+                }
+            }
+            if pts.len() == 1 {
+                grid[to_row(pts[0].1)][to_col(pts[0].0)] = s.glyph;
+            }
+        }
+
+        let mut out = String::new();
+        out.push_str(&format!("  {}\n", self.title));
+        out.push_str(&format!("  {} (y)\n", self.ylabel));
+        for (i, row) in grid.iter().enumerate() {
+            let yval = ymax - (ymax - ymin) * i as f64 / (h - 1) as f64;
+            out.push_str(&format!("  {yval:>9.1} |"));
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push_str(&format!("  {:>9} +{}\n", "", "-".repeat(w)));
+        out.push_str(&format!(
+            "  {:>9}  {:<w2$.1}{:>w3$.1}   ({})\n",
+            "",
+            xmin,
+            xmax,
+            self.xlabel,
+            w2 = w / 2,
+            w3 = w - w / 2 - 3,
+        ));
+        for s in &self.series {
+            out.push_str(&format!("    {} {}\n", s.glyph, s.label));
+        }
+        for b in &self.bands {
+            out.push_str(&format!("    {} {}\n", b.glyph, b.label));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_series_and_bands() {
+        let p = Plot::new("t", "x", "y")
+            .series("lustre", 'L', vec![(1.0, 10.0), (2.0, 20.0), (3.0, 15.0)])
+            .band("model", ':', vec![(1.0, 5.0, 12.0), (2.0, 8.0, 25.0)]);
+        let s = p.render();
+        assert!(s.contains('L'));
+        assert!(s.contains(':'));
+        assert!(s.contains("lustre"));
+    }
+
+    #[test]
+    fn empty_plot_is_fine() {
+        let p = Plot::new("empty", "x", "y");
+        let s = p.render();
+        assert!(s.contains("empty"));
+    }
+
+    #[test]
+    fn single_point_series() {
+        let p = Plot::new("one", "x", "y").series("s", '*', vec![(1.0, 1.0)]);
+        assert!(p.render().contains('*'));
+    }
+}

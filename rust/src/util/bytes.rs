@@ -1,0 +1,78 @@
+//! Byte-size constants and human-readable formatting.
+
+/// One kibibyte.
+pub const KIB: u64 = 1024;
+/// One mebibyte.
+pub const MIB: u64 = 1024 * KIB;
+/// One gibibyte.
+pub const GIB: u64 = 1024 * MIB;
+/// One tebibyte.
+pub const TIB: u64 = 1024 * GIB;
+
+/// Format a byte count with binary units (e.g. `617.0 MiB`).
+pub fn fmt_bytes(n: u64) -> String {
+    let nf = n as f64;
+    if n >= TIB {
+        format!("{:.2} TiB", nf / TIB as f64)
+    } else if n >= GIB {
+        format!("{:.2} GiB", nf / GIB as f64)
+    } else if n >= MIB {
+        format!("{:.1} MiB", nf / MIB as f64)
+    } else if n >= KIB {
+        format!("{:.1} KiB", nf / KIB as f64)
+    } else {
+        format!("{n} B")
+    }
+}
+
+/// Format a bandwidth (bytes/second) as `MiB/s`.
+pub fn fmt_bw(bytes_per_s: f64) -> String {
+    format!("{:.1} MiB/s", bytes_per_s / MIB as f64)
+}
+
+/// Parse sizes like `617MiB`, `4 GiB`, `128`, `1.5GiB` (used by config).
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let t = s.trim();
+    let (num, unit) = match t.find(|c: char| c.is_ascii_alphabetic()) {
+        Some(i) => (t[..i].trim(), t[i..].trim()),
+        None => (t, ""),
+    };
+    let v: f64 = num.parse().ok()?;
+    let mult = match unit.to_ascii_lowercase().as_str() {
+        "" | "b" => 1.0,
+        "k" | "kib" | "kb" => KIB as f64,
+        "m" | "mib" | "mb" => MIB as f64,
+        "g" | "gib" | "gb" => GIB as f64,
+        "t" | "tib" | "tb" => TIB as f64,
+        _ => return None,
+    };
+    if v < 0.0 {
+        return None;
+    }
+    Some((v * mult).round() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_units() {
+        assert_eq!(parse_bytes("617MiB"), Some(617 * MIB));
+        assert_eq!(parse_bytes("1.5 GiB"), Some(3 * GIB / 2));
+        assert_eq!(parse_bytes("128"), Some(128));
+        assert_eq!(parse_bytes("10 TB"), Some(10 * TIB));
+        assert_eq!(parse_bytes("4k"), Some(4 * KIB));
+        assert_eq!(parse_bytes("-1"), None);
+        assert_eq!(parse_bytes("xMiB"), None);
+        assert_eq!(parse_bytes("1 parsec"), None);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(0), "0 B");
+        assert_eq!(fmt_bytes(617 * MIB), "617.0 MiB");
+        assert_eq!(fmt_bytes(603 * GIB), "603.00 GiB");
+        assert_eq!(fmt_bw(2560.0 * MIB as f64), "2560.0 MiB/s");
+    }
+}

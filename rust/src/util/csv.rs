@@ -1,0 +1,116 @@
+//! Tiny CSV writer (offline substitute for a csv crate).
+//!
+//! Quotes fields containing separators/quotes/newlines per RFC 4180; all
+//! experiment/bench outputs go through this so `results/*.csv` are loadable
+//! by pandas/gnuplot downstream.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// In-memory CSV table with a fixed header.
+#[derive(Debug, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+fn escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+impl Csv {
+    /// Create a table with the given column names.
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Csv { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row; panics if the arity doesn't match the header (bug).
+    pub fn row<S: Into<String>>(&mut self, fields: Vec<S>) -> &mut Self {
+        let fields: Vec<String> = fields.into_iter().map(Into::into).collect();
+        assert_eq!(
+            fields.len(),
+            self.header.len(),
+            "csv row arity {} != header {}",
+            fields.len(),
+            self.header.len()
+        );
+        self.rows.push(fields);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no data rows have been added.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Serialize to a CSV string (header + rows, `\n` line endings).
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.iter().map(|h| escape(h)).collect::<Vec<_>>().join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.iter().map(|f| escape(f)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn write_to(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir).map_err(|e| Error::io(dir, e))?;
+        }
+        fs::write(path, self.to_string()).map_err(|e| Error::io(path, e))
+    }
+}
+
+/// Format an f64 for CSV with enough precision for re-analysis.
+pub fn f(x: f64) -> String {
+    format!("{x:.6}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_csv() {
+        let mut c = Csv::new(vec!["a", "b"]);
+        c.row(vec!["1", "2"]).row(vec!["x,y", "he said \"hi\""]);
+        let s = c.to_string();
+        assert_eq!(s.lines().next(), Some("a,b"));
+        assert!(s.contains("\"x,y\""));
+        assert!(s.contains("\"he said \"\"hi\"\"\""));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut c = Csv::new(vec!["a", "b"]);
+        c.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("sea_csv_test");
+        let path = dir.join("t.csv");
+        let mut c = Csv::new(vec!["x"]);
+        c.row(vec![f(1.5)]);
+        c.write_to(&path).unwrap();
+        let got = std::fs::read_to_string(&path).unwrap();
+        assert!(got.contains("1.500000"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

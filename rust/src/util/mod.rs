@@ -1,0 +1,15 @@
+//! Small shared utilities: deterministic PRNG, byte-size formatting,
+//! descriptive statistics, ASCII plotting and CSV emission.
+//!
+//! These exist because the offline crate cache has no `rand`, `serde` or
+//! plotting crates (DESIGN.md §2, offline substitutions).
+
+pub mod ascii_plot;
+pub mod bytes;
+pub mod csv;
+pub mod rng;
+pub mod stats;
+
+pub use bytes::{fmt_bytes, GIB, KIB, MIB};
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,77 @@
+//! The interception layer: a small POSIX-ish file-system abstraction.
+//!
+//! The paper intercepts glibc calls with `LD_PRELOAD`; the library-level
+//! equivalent here is a [`Vfs`] trait every workload I/O goes through:
+//!
+//! * [`RealFs`] — plain `std::fs` against a root directory;
+//! * [`rate::RateLimitedFs`] — a decorator imposing read/write bandwidth
+//!   caps (stands in for a loaded PFS on this single machine);
+//! * [`sea::SeaFs`] — **the paper's library**: mountpoint translation to
+//!   the fastest eligible device directory, rule-driven flush/evict via a
+//!   background daemon, prefetch support.
+//!
+//! A separate `cdylib` (`sea-interpose`) provides the literal
+//! `LD_PRELOAD` mechanism for unmodified binaries; it reuses the same
+//! translation logic.
+
+pub mod rate;
+pub mod real;
+pub mod sea;
+
+pub use rate::RateLimitedFs;
+pub use real::RealFs;
+pub use sea::{SeaFs, SeaFsConfig};
+
+use std::path::Path;
+
+use crate::error::Result;
+
+/// Whole-file POSIX-ish operations (the granularity of the paper's
+/// workloads: scientific tools read and write whole block files).
+pub trait Vfs: Send + Sync {
+    /// Read the entire file at `path`.
+    fn read(&self, path: &Path) -> Result<Vec<u8>>;
+
+    /// Create/overwrite the file at `path` with `data`.
+    fn write(&self, path: &Path, data: &[u8]) -> Result<()>;
+
+    /// Remove the file at `path`.
+    fn unlink(&self, path: &Path) -> Result<()>;
+
+    /// Does `path` exist?
+    fn exists(&self, path: &Path) -> bool;
+
+    /// Size in bytes of the file at `path`.
+    fn size(&self, path: &Path) -> Result<u64>;
+
+    /// Rename `from` to `to` (same mount).
+    fn rename(&self, from: &Path, to: &Path) -> Result<()>;
+
+    /// List file names (not paths) under directory `path`.
+    fn readdir(&self, path: &Path) -> Result<Vec<String>>;
+
+    /// Block until background management work (flush/evict) is complete.
+    /// No-op for backends without daemons.
+    fn sync_mgmt(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+    /// A unique scratch directory under the system temp dir.
+    pub fn scratch(prefix: &str) -> PathBuf {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let d = std::env::temp_dir().join(format!(
+            "sea_test_{prefix}_{}_{n}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+}

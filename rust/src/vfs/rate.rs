@@ -1,0 +1,164 @@
+//! Bandwidth-limiting [`Vfs`] decorator.
+//!
+//! On this single machine there is no Lustre to contend on, so the
+//! end-to-end examples emulate a loaded PFS by wrapping its directory in
+//! a token-bucket rate limiter: concurrent readers/writers share the
+//! configured bandwidth, which is exactly the fair-sharing behaviour the
+//! simulator models for a saturated file system.
+
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+use crate::vfs::Vfs;
+
+#[derive(Debug)]
+struct Bucket {
+    rate: f64, // bytes/s
+    available: f64,
+    last: Instant,
+    cap: f64,
+}
+
+impl Bucket {
+    fn new(rate: f64) -> Bucket {
+        // burst budget of 50 ms: big enough to amortize scheduling noise,
+        // small enough that workloads beyond a few MiB feel the cap
+        Bucket { rate, available: 0.0, last: Instant::now(), cap: rate * 0.05 }
+    }
+
+    /// Take `bytes` of budget; returns how long the caller must sleep.
+    fn take(&mut self, bytes: f64) -> Duration {
+        let now = Instant::now();
+        self.available =
+            (self.available + now.duration_since(self.last).as_secs_f64() * self.rate)
+                .min(self.cap);
+        self.last = now;
+        self.available -= bytes;
+        if self.available >= 0.0 {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64(-self.available / self.rate)
+        }
+    }
+}
+
+/// A [`Vfs`] decorator imposing shared read/write bandwidth caps.
+pub struct RateLimitedFs<F> {
+    inner: F,
+    read_bucket: Mutex<Bucket>,
+    write_bucket: Mutex<Bucket>,
+}
+
+impl<F: Vfs> RateLimitedFs<F> {
+    /// Wrap `inner` with `read_bw` / `write_bw` byte-per-second caps.
+    pub fn new(inner: F, read_bw: f64, write_bw: f64) -> RateLimitedFs<F> {
+        assert!(read_bw > 0.0 && write_bw > 0.0);
+        RateLimitedFs {
+            inner,
+            read_bucket: Mutex::new(Bucket::new(read_bw)),
+            write_bucket: Mutex::new(Bucket::new(write_bw)),
+        }
+    }
+
+    /// The wrapped backend.
+    pub fn inner(&self) -> &F {
+        &self.inner
+    }
+
+    fn throttle(bucket: &Mutex<Bucket>, bytes: usize) {
+        let wait = bucket.lock().expect("bucket poisoned").take(bytes as f64);
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+    }
+}
+
+impl<F: Vfs> Vfs for RateLimitedFs<F> {
+    fn read(&self, path: &Path) -> Result<Vec<u8>> {
+        let data = self.inner.read(path)?;
+        Self::throttle(&self.read_bucket, data.len());
+        Ok(data)
+    }
+
+    fn write(&self, path: &Path, data: &[u8]) -> Result<()> {
+        Self::throttle(&self.write_bucket, data.len());
+        self.inner.write(path, data)
+    }
+
+    fn unlink(&self, path: &Path) -> Result<()> {
+        self.inner.unlink(path)
+    }
+
+    fn exists(&self, path: &Path) -> bool {
+        self.inner.exists(path)
+    }
+
+    fn size(&self, path: &Path) -> Result<u64> {
+        self.inner.size(path)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> Result<()> {
+        self.inner.rename(from, to)
+    }
+
+    fn readdir(&self, path: &Path) -> Result<Vec<String>> {
+        self.inner.readdir(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::MIB;
+    use crate::vfs::real::RealFs;
+    use crate::vfs::testutil::scratch;
+
+    #[test]
+    fn writes_are_throttled_to_the_configured_bandwidth() {
+        let dir = scratch("rate_w");
+        let fs_ = RateLimitedFs::new(
+            RealFs::new(&dir).unwrap(),
+            1e9,
+            20.0 * MIB as f64, // 20 MiB/s writes
+        );
+        let payload = vec![0u8; 10 * MIB as usize];
+        let t0 = Instant::now();
+        fs_.write(Path::new("a.dat"), &payload).unwrap();
+        fs_.write(Path::new("b.dat"), &payload).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        // 20 MiB at 20 MiB/s ≈ 1s (bucket gives ~0.25s head start)
+        assert!(dt > 0.6, "dt = {dt}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reads_are_throttled_too() {
+        let dir = scratch("rate_r");
+        let fs_ = RateLimitedFs::new(
+            RealFs::new(&dir).unwrap(),
+            20.0 * MIB as f64,
+            1e9,
+        );
+        fs_.write(Path::new("a.dat"), &vec![0u8; 10 * MIB as usize]).unwrap();
+        let t0 = Instant::now();
+        let _ = fs_.read(Path::new("a.dat")).unwrap();
+        let _ = fs_.read(Path::new("a.dat")).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt > 0.6, "dt = {dt}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn metadata_ops_pass_through() {
+        let dir = scratch("rate_md");
+        let fs_ = RateLimitedFs::new(RealFs::new(&dir).unwrap(), 1e9, 1e9);
+        fs_.write(Path::new("x"), b"1").unwrap();
+        assert!(fs_.exists(Path::new("x")));
+        assert_eq!(fs_.size(Path::new("x")).unwrap(), 1);
+        fs_.rename(Path::new("x"), Path::new("y")).unwrap();
+        fs_.unlink(Path::new("y")).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

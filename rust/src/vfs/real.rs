@@ -1,0 +1,154 @@
+//! `std::fs`-backed [`Vfs`] rooted at a directory.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::vfs::Vfs;
+
+/// A real directory tree; all paths are interpreted relative to `root`
+/// (absolute inputs are re-rooted by stripping the leading `/`).
+#[derive(Debug, Clone)]
+pub struct RealFs {
+    root: PathBuf,
+}
+
+impl RealFs {
+    /// Create (and mkdir) a RealFs rooted at `root`.
+    pub fn new(root: impl Into<PathBuf>) -> Result<RealFs> {
+        let root = root.into();
+        fs::create_dir_all(&root).map_err(|e| Error::io(&root, e))?;
+        Ok(RealFs { root })
+    }
+
+    /// The root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn resolve(&self, path: &Path) -> PathBuf {
+        let rel = path.strip_prefix("/").unwrap_or(path);
+        self.root.join(rel)
+    }
+}
+
+impl Vfs for RealFs {
+    fn read(&self, path: &Path) -> Result<Vec<u8>> {
+        let p = self.resolve(path);
+        fs::read(&p).map_err(|e| match e.kind() {
+            std::io::ErrorKind::NotFound => Error::NotFound(path.to_path_buf()),
+            _ => Error::io(&p, e),
+        })
+    }
+
+    fn write(&self, path: &Path, data: &[u8]) -> Result<()> {
+        let p = self.resolve(path);
+        if let Some(dir) = p.parent() {
+            fs::create_dir_all(dir).map_err(|e| Error::io(dir, e))?;
+        }
+        fs::write(&p, data).map_err(|e| Error::io(&p, e))
+    }
+
+    fn unlink(&self, path: &Path) -> Result<()> {
+        let p = self.resolve(path);
+        fs::remove_file(&p).map_err(|e| match e.kind() {
+            std::io::ErrorKind::NotFound => Error::NotFound(path.to_path_buf()),
+            _ => Error::io(&p, e),
+        })
+    }
+
+    fn exists(&self, path: &Path) -> bool {
+        self.resolve(path).exists()
+    }
+
+    fn size(&self, path: &Path) -> Result<u64> {
+        let p = self.resolve(path);
+        fs::metadata(&p)
+            .map(|m| m.len())
+            .map_err(|e| match e.kind() {
+                std::io::ErrorKind::NotFound => Error::NotFound(path.to_path_buf()),
+                _ => Error::io(&p, e),
+            })
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> Result<()> {
+        let (f, t) = (self.resolve(from), self.resolve(to));
+        if let Some(dir) = t.parent() {
+            fs::create_dir_all(dir).map_err(|e| Error::io(dir, e))?;
+        }
+        fs::rename(&f, &t).map_err(|e| Error::io(&f, e))
+    }
+
+    fn readdir(&self, path: &Path) -> Result<Vec<String>> {
+        let p = self.resolve(path);
+        let mut names = Vec::new();
+        for entry in fs::read_dir(&p).map_err(|e| Error::io(&p, e))? {
+            let entry = entry.map_err(|e| Error::io(&p, e))?;
+            names.push(entry.file_name().to_string_lossy().into_owned());
+        }
+        names.sort();
+        Ok(names)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vfs::testutil::scratch;
+
+    #[test]
+    fn crud_round_trip() {
+        let dir = scratch("realfs");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let p = Path::new("a/b/file.dat");
+        assert!(!fs_.exists(p));
+        fs_.write(p, b"hello").unwrap();
+        assert!(fs_.exists(p));
+        assert_eq!(fs_.size(p).unwrap(), 5);
+        assert_eq!(fs_.read(p).unwrap(), b"hello");
+        fs_.rename(p, Path::new("a/c.dat")).unwrap();
+        assert!(!fs_.exists(p));
+        assert_eq!(fs_.read(Path::new("a/c.dat")).unwrap(), b"hello");
+        fs_.unlink(Path::new("a/c.dat")).unwrap();
+        assert!(!fs_.exists(Path::new("a/c.dat")));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_files_are_notfound() {
+        let dir = scratch("realfs_nf");
+        let fs_ = RealFs::new(&dir).unwrap();
+        assert!(matches!(
+            fs_.read(Path::new("nope")),
+            Err(Error::NotFound(_))
+        ));
+        assert!(matches!(
+            fs_.unlink(Path::new("nope")),
+            Err(Error::NotFound(_))
+        ));
+        assert!(matches!(
+            fs_.size(Path::new("nope")),
+            Err(Error::NotFound(_))
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn absolute_paths_are_rerooted() {
+        let dir = scratch("realfs_abs");
+        let fs_ = RealFs::new(&dir).unwrap();
+        fs_.write(Path::new("/x.dat"), b"abs").unwrap();
+        assert_eq!(fs_.read(Path::new("x.dat")).unwrap(), b"abs");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn readdir_lists_sorted() {
+        let dir = scratch("realfs_ls");
+        let fs_ = RealFs::new(&dir).unwrap();
+        fs_.write(Path::new("d/b"), b"1").unwrap();
+        fs_.write(Path::new("d/a"), b"2").unwrap();
+        assert_eq!(fs_.readdir(Path::new("d")).unwrap(), vec!["a", "b"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

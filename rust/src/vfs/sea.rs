@@ -1,0 +1,619 @@
+//! [`SeaFs`] — the paper's library, real-bytes flavour.
+//!
+//! A Sea mount wraps a *long-term* backend (the "PFS": any [`Vfs`],
+//! typically rate-limited to emulate a loaded Lustre) plus an ordered set
+//! of fast device directories (tmpfs `/dev/shm`, local disk dirs).
+//! Every path under the logical mountpoint is translated to the fastest
+//! eligible device (the same `hierarchy` selection the simulator uses);
+//! paths outside the mountpoint pass through to the PFS untouched —
+//! exactly the interception semantics of the paper's glibc wrappers.
+//!
+//! A single background flush-and-evict daemon per mount (paper §5.1)
+//! applies the Table 1 modes after each write, asynchronously:
+//! Copy → replicate to PFS; Move → replicate then drop local;
+//! Remove → drop local without persisting.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::hierarchy::{select_device, DeviceRef, Hierarchy, SelectCfg, SpaceAccountant};
+use crate::placement::rules::{MgmtMode, RuleSet};
+use crate::util::Rng;
+use crate::vfs::Vfs;
+
+/// Configuration of a real Sea mount.
+pub struct SeaFsConfig {
+    /// Logical mountpoint prefix (e.g. `/sea`).
+    pub mountpoint: PathBuf,
+    /// Fast device directories: (directory, tier rank, capacity bytes).
+    pub devices: Vec<(PathBuf, u8, u64)>,
+    /// Long-term storage backend.
+    pub pfs: Arc<dyn Vfs>,
+    /// Max file size `F` declared by the user.
+    pub max_file_size: u64,
+    /// Parallel process count `p` declared by the user.
+    pub parallel_procs: u64,
+    /// Rule lists.
+    pub rules: RuleSet,
+    /// PRNG seed for same-tier shuffling.
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    dev: DeviceRef,
+    size: u64,
+    flushed: bool,
+}
+
+enum DaemonMsg {
+    Act { mode: MgmtMode, rel: String },
+    Drain(mpsc::Sender<()>),
+    Shutdown,
+}
+
+struct Shared {
+    hierarchy: Hierarchy,
+    accountant: SpaceAccountant,
+    device_dirs: Vec<PathBuf>,
+    registry: Mutex<HashMap<String, Entry>>,
+    pfs: Arc<dyn Vfs>,
+    /// Mgmt statistics: (flushes, evictions).
+    counters: Mutex<(u64, u64)>,
+}
+
+impl Shared {
+    fn local_path(&self, dev: DeviceRef, rel: &str) -> PathBuf {
+        self.device_dirs[dev].join(rel)
+    }
+}
+
+/// The real-bytes Sea mount.
+pub struct SeaFs {
+    mountpoint: PathBuf,
+    shared: Arc<Shared>,
+    select: SelectCfg,
+    rules: RuleSet,
+    rng: Mutex<Rng>,
+    daemon_tx: Mutex<mpsc::Sender<DaemonMsg>>,
+    daemon: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl SeaFs {
+    /// Mount: builds the hierarchy, spawns the flush-and-evict daemon.
+    pub fn mount(cfg: SeaFsConfig) -> Result<SeaFs> {
+        if cfg.devices.is_empty() {
+            return Err(Error::Config(
+                "sea requires at least one fast device (plus the PFS)".into(),
+            ));
+        }
+        let mut hierarchy = Hierarchy::new();
+        let mut device_dirs = Vec::new();
+        for (dir, tier, cap) in &cfg.devices {
+            fs::create_dir_all(dir).map_err(|e| Error::io(dir, e))?;
+            hierarchy.add(*tier, *cap, dir.to_string_lossy().into_owned());
+            device_dirs.push(dir.clone());
+        }
+        let accountant = SpaceAccountant::new(&hierarchy);
+        let shared = Arc::new(Shared {
+            hierarchy,
+            accountant,
+            device_dirs,
+            registry: Mutex::new(HashMap::new()),
+            pfs: cfg.pfs,
+            counters: Mutex::new((0, 0)),
+        });
+        let (tx, rx) = mpsc::channel::<DaemonMsg>();
+        let dshared = shared.clone();
+        let daemon = std::thread::Builder::new()
+            .name("sea-flush-evict".into())
+            .spawn(move || daemon_loop(dshared, rx))
+            .map_err(|e| Error::io("<thread>", e))?;
+        Ok(SeaFs {
+            mountpoint: cfg.mountpoint,
+            shared,
+            select: SelectCfg {
+                max_file_size: cfg.max_file_size,
+                parallel_procs: cfg.parallel_procs,
+            },
+            rules: cfg.rules,
+            rng: Mutex::new(Rng::new(cfg.seed)),
+            daemon_tx: Mutex::new(tx),
+            daemon: Mutex::new(Some(daemon)),
+        })
+    }
+
+    /// Mount-relative form of `path`, or `None` when outside the mount.
+    pub fn rel_of(&self, path: &Path) -> Option<String> {
+        path.strip_prefix(&self.mountpoint)
+            .ok()
+            .map(|r| r.to_string_lossy().into_owned())
+    }
+
+    /// Where a mount-relative file currently lives (diagnostics).
+    pub fn device_of(&self, rel: &str) -> Option<String> {
+        let reg = self.shared.registry.lock().expect("registry poisoned");
+        reg.get(rel)
+            .map(|e| self.shared.hierarchy.info(e.dev).name.clone())
+    }
+
+    /// (flushes, evictions) executed by the daemon so far.
+    pub fn mgmt_counters(&self) -> (u64, u64) {
+        *self.shared.counters.lock().expect("counters poisoned")
+    }
+
+    /// Prefetch: copy every PFS file under `dir` (mount-relative)
+    /// matching the `.sea_prefetchlist` into fast devices.
+    pub fn prefetch_dir(&self, dir: &str) -> Result<usize> {
+        let names = self.shared.pfs.readdir(Path::new(dir))?;
+        let mut n = 0;
+        for name in names {
+            let rel = if dir.is_empty() { name.clone() } else { format!("{dir}/{name}") };
+            if !self.rules.prefetch.matches(&rel) {
+                continue;
+            }
+            let data = self.shared.pfs.read(Path::new(&rel))?;
+            if self.place_and_write(&rel, &data, true)?.is_some() {
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Core placement: write `data` to the fastest eligible device.
+    /// Returns the chosen device, or `None` when it fell through to the
+    /// PFS. `already_flushed` marks prefetched inputs (they came *from*
+    /// the PFS, so eviction is always safe).
+    fn place_and_write(
+        &self,
+        rel: &str,
+        data: &[u8],
+        already_flushed: bool,
+    ) -> Result<Option<DeviceRef>> {
+        let sh = &self.shared;
+        // overwrite: free the previous local copy first
+        self.drop_local(rel)?;
+        let mut rng = self.rng.lock().expect("rng poisoned");
+        let pick = select_device(
+            &sh.hierarchy,
+            &sh.accountant,
+            &self.select,
+            data.len() as u64,
+            &mut rng,
+        );
+        drop(rng);
+        match pick {
+            Some(dev) => {
+                let p = sh.local_path(dev, rel);
+                if let Some(d) = p.parent() {
+                    fs::create_dir_all(d).map_err(|e| Error::io(d, e))?;
+                }
+                fs::write(&p, data).map_err(|e| Error::io(&p, e))?;
+                sh.registry.lock().expect("registry poisoned").insert(
+                    rel.to_string(),
+                    Entry { dev, size: data.len() as u64, flushed: already_flushed },
+                );
+                Ok(Some(dev))
+            }
+            None => {
+                sh.pfs.write(Path::new(rel), data)?;
+                Ok(None)
+            }
+        }
+    }
+
+    /// Remove the local copy of `rel` if any, crediting its space.
+    fn drop_local(&self, rel: &str) -> Result<()> {
+        let sh = &self.shared;
+        let old = sh.registry.lock().expect("registry poisoned").remove(rel);
+        if let Some(e) = old {
+            let p = sh.local_path(e.dev, rel);
+            match fs::remove_file(&p) {
+                Ok(()) => {}
+                Err(err) if err.kind() == std::io::ErrorKind::NotFound => {}
+                Err(err) => return Err(Error::io(&p, err)),
+            }
+            sh.accountant.credit(e.dev, e.size);
+        }
+        Ok(())
+    }
+}
+
+fn daemon_loop(sh: Arc<Shared>, rx: mpsc::Receiver<DaemonMsg>) {
+    // One sequential daemon per mount, as in the paper (§5.1): it is the
+    // only flusher, so app threads never pay the PFS write cost in-line.
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            DaemonMsg::Shutdown => break,
+            DaemonMsg::Drain(ack) => {
+                let _ = ack.send(());
+            }
+            DaemonMsg::Act { mode, rel } => {
+                let entry = {
+                    let reg = sh.registry.lock().expect("registry poisoned");
+                    reg.get(&rel).cloned()
+                };
+                let Some(entry) = entry else { continue };
+                let local = sh.local_path(entry.dev, &rel);
+                let flush = matches!(mode, MgmtMode::Copy | MgmtMode::Move);
+                let evict = matches!(mode, MgmtMode::Remove | MgmtMode::Move);
+                if flush && !entry.flushed {
+                    if let Ok(data) = fs::read(&local) {
+                        if sh.pfs.write(Path::new(&rel), &data).is_ok() {
+                            let mut reg = sh.registry.lock().expect("registry poisoned");
+                            if let Some(e) = reg.get_mut(&rel) {
+                                e.flushed = true;
+                            }
+                            sh.counters.lock().expect("counters").0 += 1;
+                        }
+                    }
+                }
+                if evict {
+                    // Remove-mode files are dropped unconditionally (the
+                    // user declared them disposable); Move-mode files
+                    // must have been flushed first.
+                    let safe = match mode {
+                        MgmtMode::Remove => true,
+                        _ => sh
+                            .registry
+                            .lock()
+                            .expect("registry poisoned")
+                            .get(&rel)
+                            .map(|e| e.flushed)
+                            .unwrap_or(false),
+                    };
+                    if safe {
+                        let removed = sh.registry.lock().expect("registry poisoned").remove(&rel);
+                        if let Some(e) = removed {
+                            let _ = fs::remove_file(sh.local_path(e.dev, &rel));
+                            sh.accountant.credit(e.dev, e.size);
+                            sh.counters.lock().expect("counters").1 += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Drop for SeaFs {
+    fn drop(&mut self) {
+        let _ = self
+            .daemon_tx
+            .lock()
+            .expect("tx poisoned")
+            .send(DaemonMsg::Shutdown);
+        if let Some(h) = self.daemon.lock().expect("daemon poisoned").take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Vfs for SeaFs {
+    fn read(&self, path: &Path) -> Result<Vec<u8>> {
+        match self.rel_of(path) {
+            None => self.shared.pfs.read(path),
+            Some(rel) => {
+                let entry = {
+                    let reg = self.shared.registry.lock().expect("registry poisoned");
+                    reg.get(&rel).cloned()
+                };
+                match entry {
+                    Some(e) => {
+                        let p = self.shared.local_path(e.dev, &rel);
+                        fs::read(&p).map_err(|err| Error::io(&p, err))
+                    }
+                    None => self.shared.pfs.read(Path::new(&rel)),
+                }
+            }
+        }
+    }
+
+    fn write(&self, path: &Path, data: &[u8]) -> Result<()> {
+        match self.rel_of(path) {
+            None => self.shared.pfs.write(path, data),
+            Some(rel) => {
+                self.place_and_write(&rel, data, false)?;
+                let mode = self.rules.mode_for(&rel);
+                if mode != MgmtMode::Keep {
+                    let _ = self
+                        .daemon_tx
+                        .lock()
+                        .expect("tx poisoned")
+                        .send(DaemonMsg::Act { mode, rel });
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn unlink(&self, path: &Path) -> Result<()> {
+        match self.rel_of(path) {
+            None => self.shared.pfs.unlink(path),
+            Some(rel) => {
+                let had_local = {
+                    let reg = self.shared.registry.lock().expect("registry poisoned");
+                    reg.contains_key(&rel)
+                };
+                self.drop_local(&rel)?;
+                // also remove a flushed/PFS copy if present
+                let on_pfs = self.shared.pfs.exists(Path::new(&rel));
+                if on_pfs {
+                    self.shared.pfs.unlink(Path::new(&rel))?;
+                }
+                if had_local || on_pfs {
+                    Ok(())
+                } else {
+                    Err(Error::NotFound(path.to_path_buf()))
+                }
+            }
+        }
+    }
+
+    fn exists(&self, path: &Path) -> bool {
+        match self.rel_of(path) {
+            None => self.shared.pfs.exists(path),
+            Some(rel) => {
+                self.shared
+                    .registry
+                    .lock()
+                    .expect("registry poisoned")
+                    .contains_key(&rel)
+                    || self.shared.pfs.exists(Path::new(&rel))
+            }
+        }
+    }
+
+    fn size(&self, path: &Path) -> Result<u64> {
+        match self.rel_of(path) {
+            None => self.shared.pfs.size(path),
+            Some(rel) => {
+                let entry = {
+                    let reg = self.shared.registry.lock().expect("registry poisoned");
+                    reg.get(&rel).cloned()
+                };
+                match entry {
+                    Some(e) => Ok(e.size),
+                    None => self.shared.pfs.size(Path::new(&rel)),
+                }
+            }
+        }
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> Result<()> {
+        match (self.rel_of(from), self.rel_of(to)) {
+            (Some(rf), Some(rt)) => {
+                let moved = {
+                    let mut reg = self.shared.registry.lock().expect("registry poisoned");
+                    reg.remove(&rf).map(|e| {
+                        let had = (e.dev, e.size, e.flushed);
+                        reg.insert(rt.clone(), e);
+                        had
+                    })
+                };
+                match moved {
+                    Some((dev, _, _)) => {
+                        let pf = self.shared.local_path(dev, &rf);
+                        let pt = self.shared.local_path(dev, &rt);
+                        if let Some(d) = pt.parent() {
+                            fs::create_dir_all(d).map_err(|e| Error::io(d, e))?;
+                        }
+                        fs::rename(&pf, &pt).map_err(|e| Error::io(&pf, e))
+                    }
+                    None => self.shared.pfs.rename(Path::new(&rf), Path::new(&rt)),
+                }
+            }
+            (None, None) => self.shared.pfs.rename(from, to),
+            _ => Err(Error::InvalidArg(
+                "rename across the sea mount boundary is not supported".into(),
+            )),
+        }
+    }
+
+    fn readdir(&self, path: &Path) -> Result<Vec<String>> {
+        match self.rel_of(path) {
+            None => self.shared.pfs.readdir(path),
+            Some(rel) => {
+                let mut names: Vec<String> = self
+                    .shared
+                    .pfs
+                    .readdir(Path::new(&rel))
+                    .unwrap_or_default();
+                let prefix = if rel.is_empty() { String::new() } else { format!("{rel}/") };
+                let reg = self.shared.registry.lock().expect("registry poisoned");
+                for key in reg.keys() {
+                    if let Some(rest) = key.strip_prefix(&prefix) {
+                        if !rest.is_empty() && !rest.contains('/') {
+                            names.push(rest.to_string());
+                        }
+                    }
+                }
+                names.sort();
+                names.dedup();
+                Ok(names)
+            }
+        }
+    }
+
+    fn sync_mgmt(&self) -> Result<()> {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        self.daemon_tx
+            .lock()
+            .expect("tx poisoned")
+            .send(DaemonMsg::Drain(ack_tx))
+            .map_err(|_| Error::Runtime("flush daemon gone".into()))?;
+        ack_rx
+            .recv()
+            .map_err(|_| Error::Runtime("flush daemon gone".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::MIB;
+    use crate::vfs::real::RealFs;
+    use crate::vfs::testutil::scratch;
+
+    fn mount(rules: RuleSet, tmpfs_cap: u64) -> (SeaFs, PathBuf, Arc<RealFs>) {
+        let root = scratch("seafs");
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
+        let sea = SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![
+                (root.join("tmpfs"), 0, tmpfs_cap),
+                (root.join("disk0"), 1, 100 * MIB),
+                (root.join("disk1"), 1, 100 * MIB),
+            ],
+            pfs: pfs.clone(),
+            max_file_size: MIB,
+            parallel_procs: 2,
+            rules,
+            seed: 7,
+        })
+        .unwrap();
+        (sea, root, pfs)
+    }
+
+    #[test]
+    fn writes_go_to_fastest_device_and_read_back() {
+        let (sea, root, _) = mount(RuleSet::default(), 10 * MIB);
+        let p = Path::new("/sea/derived/a.dat");
+        sea.write(p, &vec![7u8; MIB as usize]).unwrap();
+        assert!(sea.exists(p));
+        assert_eq!(sea.size(p).unwrap(), MIB);
+        assert_eq!(sea.device_of("derived/a.dat").unwrap(), root.join("tmpfs").to_string_lossy());
+        let data = sea.read(p).unwrap();
+        assert!(data.iter().all(|&b| b == 7));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn overflow_spills_to_next_tier_then_pfs() {
+        let (sea, root, pfs) = mount(RuleSet::default(), 4 * MIB);
+        // floor = p*F = 2 MiB; tmpfs 4 MiB holds 2-3 files of 1 MiB
+        let mut devices = Vec::new();
+        for i in 0..250 {
+            let p = PathBuf::from(format!("/sea/d/f{i:03}.dat"));
+            sea.write(&p, &vec![1u8; MIB as usize]).unwrap();
+            devices.push(sea.device_of(&format!("d/f{i:03}.dat")));
+        }
+        let on_tmpfs = devices.iter().flatten().filter(|d| d.contains("tmpfs")).count();
+        let on_disk = devices.iter().flatten().filter(|d| d.contains("disk")).count();
+        let on_pfs = devices.iter().filter(|d| d.is_none()).count();
+        assert!(on_tmpfs >= 2 && on_tmpfs <= 3, "tmpfs {on_tmpfs}");
+        assert!(on_disk >= 190, "disk {on_disk}");
+        assert!(on_pfs >= 40, "pfs {on_pfs}");
+        // the pfs fallback files really are on the pfs
+        assert!(pfs.exists(Path::new("d/f249.dat")));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn move_mode_flushes_then_evicts() {
+        let (sea, root, pfs) = mount(RuleSet::from_texts("**_final.dat", "**_final.dat", ""), 10 * MIB);
+        let p = Path::new("/sea/out/b_final.dat");
+        sea.write(p, &vec![3u8; MIB as usize]).unwrap();
+        sea.sync_mgmt().unwrap();
+        // after the move: gone locally, present on PFS, still readable
+        assert!(sea.device_of("out/b_final.dat").is_none());
+        assert!(pfs.exists(Path::new("out/b_final.dat")));
+        assert_eq!(sea.read(p).unwrap().len(), MIB as usize);
+        assert_eq!(sea.mgmt_counters(), (1, 1));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn copy_mode_keeps_local_copy() {
+        let (sea, root, pfs) = mount(RuleSet::from_texts("**", "", ""), 10 * MIB);
+        let p = Path::new("/sea/x.dat");
+        sea.write(p, &vec![5u8; MIB as usize]).unwrap();
+        sea.sync_mgmt().unwrap();
+        assert!(sea.device_of("x.dat").is_some(), "local copy kept");
+        assert!(pfs.exists(Path::new("x.dat")), "pfs copy exists");
+        assert_eq!(sea.mgmt_counters(), (1, 0));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn remove_mode_discards_without_persisting() {
+        let (sea, root, pfs) = mount(RuleSet::from_texts("", "*.log", ""), 10 * MIB);
+        let p = Path::new("/sea/noise.log");
+        sea.write(p, b"scratch").unwrap();
+        sea.sync_mgmt().unwrap();
+        assert!(!sea.exists(p));
+        assert!(!pfs.exists(Path::new("noise.log")));
+        assert_eq!(sea.mgmt_counters(), (0, 1));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn eviction_frees_space_for_later_files() {
+        // Move everything: space should keep being recycled, so many more
+        // files than tmpfs capacity all land on tmpfs eventually
+        let (sea, root, _) = mount(RuleSet::from_texts("**", "**", ""), 4 * MIB);
+        for i in 0..20 {
+            let p = PathBuf::from(format!("/sea/s/f{i}.dat"));
+            sea.write(&p, &vec![0u8; MIB as usize]).unwrap();
+            sea.sync_mgmt().unwrap(); // drain so space is recycled
+        }
+        let (fl, ev) = sea.mgmt_counters();
+        assert_eq!(fl, 20);
+        assert_eq!(ev, 20);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn outside_mount_passes_through_to_pfs() {
+        let (sea, root, pfs) = mount(RuleSet::default(), 10 * MIB);
+        sea.write(Path::new("plain/file.txt"), b"direct").unwrap();
+        assert!(pfs.exists(Path::new("plain/file.txt")));
+        assert_eq!(sea.read(Path::new("plain/file.txt")).unwrap(), b"direct");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn unlink_and_rename_within_mount() {
+        let (sea, root, _) = mount(RuleSet::default(), 10 * MIB);
+        let a = Path::new("/sea/a.dat");
+        let b = Path::new("/sea/b.dat");
+        sea.write(a, b"x").unwrap();
+        sea.rename(a, b).unwrap();
+        assert!(!sea.exists(a));
+        assert_eq!(sea.read(b).unwrap(), b"x");
+        sea.unlink(b).unwrap();
+        assert!(!sea.exists(b));
+        assert!(matches!(sea.unlink(b), Err(Error::NotFound(_))));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn readdir_merges_local_and_pfs() {
+        let (sea, root, pfs) = mount(RuleSet::default(), 10 * MIB);
+        pfs.write(Path::new("d/pfs_file"), b"1").unwrap();
+        sea.write(Path::new("/sea/d/local_file"), b"2").unwrap();
+        let names = sea.readdir(Path::new("/sea/d")).unwrap();
+        assert_eq!(names, vec!["local_file", "pfs_file"]);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn prefetch_pulls_matching_inputs() {
+        let (sea, root, pfs) = mount(
+            RuleSet::from_texts("", "", "inputs/*.dat"),
+            10 * MIB,
+        );
+        pfs.write(Path::new("inputs/a.dat"), &vec![1u8; MIB as usize]).unwrap();
+        pfs.write(Path::new("inputs/skip.txt"), b"no").unwrap();
+        let n = sea.prefetch_dir("inputs").unwrap();
+        assert_eq!(n, 1);
+        assert!(sea.device_of("inputs/a.dat").is_some());
+        assert!(sea.device_of("inputs/skip.txt").is_none());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

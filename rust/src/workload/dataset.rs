@@ -1,0 +1,183 @@
+//! Dataset generation: real-bytes chunk files for the end-to-end runs
+//! and the BigBrain-scale descriptor used by the simulator.
+//!
+//! Real chunks are raw little-endian f32 arrays in the canonical
+//! `(rows, 256)` geometry the AOT artifacts were lowered for; values are
+//! integral (0..=1000) so `n` increments stay exactly representable and
+//! the PJRT `block_stats` integrity check is bit-exact.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+/// Description of a generated dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Directory the blocks live in.
+    pub dir: PathBuf,
+    /// Block file paths in index order.
+    pub blocks: Vec<PathBuf>,
+    /// Elements per block.
+    pub elems: usize,
+    /// Constant base value of block `i` is `base_of(i)`.
+    pub seed: u64,
+}
+
+impl Dataset {
+    /// The base value every element of block `i` is initialized to.
+    /// Kept uniform per block so integrity after `n` increments is a
+    /// three-number check (min == max == base + n) on device.
+    pub fn base_of(&self, i: usize) -> f32 {
+        let mut s = self.seed.wrapping_add(i as u64);
+        (crate::util::rng::splitmix64(&mut s) % 1000) as f32
+    }
+
+    /// Bytes per block.
+    pub fn block_bytes(&self) -> u64 {
+        (self.elems * 4) as u64
+    }
+}
+
+/// Generate `blocks` files of `elems` f32 elements each under `dir`.
+///
+/// Returns the dataset descriptor. Existing files of the right size are
+/// reused (idempotent, like a cached download of BigBrain tiles).
+pub fn generate(dir: &Path, blocks: usize, elems: usize, seed: u64) -> Result<Dataset> {
+    fs::create_dir_all(dir).map_err(|e| Error::io(dir, e))?;
+    let ds = Dataset {
+        dir: dir.to_path_buf(),
+        blocks: (0..blocks).map(|i| dir.join(format!("block_{i:04}.dat"))).collect(),
+        elems,
+        seed,
+    };
+    let mut buf: Vec<u8> = Vec::new();
+    for (i, path) in ds.blocks.iter().enumerate() {
+        let want = ds.block_bytes();
+        if let Ok(md) = fs::metadata(path) {
+            if md.len() == want {
+                continue; // already generated
+            }
+        }
+        let base = ds.base_of(i);
+        buf.clear();
+        buf.reserve(want as usize);
+        for _ in 0..elems {
+            buf.extend_from_slice(&base.to_le_bytes());
+        }
+        fs::write(path, &buf).map_err(|e| Error::io(path, e))?;
+    }
+    Ok(ds)
+}
+
+/// Generate a *varied* block (non-uniform values) — used by tests that
+/// need realistic content rather than integrity-checkable uniformity.
+pub fn generate_varied_block(path: &Path, elems: usize, seed: u64) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir).map_err(|e| Error::io(dir, e))?;
+    }
+    let mut rng = Rng::new(seed);
+    let mut buf = Vec::with_capacity(elems * 4);
+    for _ in 0..elems {
+        let v = (rng.below(2048) as f32) - 1024.0;
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fs::write(path, &buf).map_err(|e| Error::io(path, e))
+}
+
+/// Read a block file as f32s (length-checked against `elems`).
+pub fn read_block(path: &Path, elems: usize) -> Result<Vec<f32>> {
+    let bytes = fs::read(path).map_err(|e| Error::io(path, e))?;
+    if bytes.len() != elems * 4 {
+        return Err(Error::Integrity(format!(
+            "block {path:?}: {} bytes, expected {}",
+            bytes.len(),
+            elems * 4
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a block of f32s.
+pub fn write_block(path: &Path, data: &[f32]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir).map_err(|e| Error::io(dir, e))?;
+    }
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fs::write(path, &buf).map_err(|e| Error::io(path, e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("sea_dataset_{name}"))
+    }
+
+    #[test]
+    fn generate_and_read_round_trip() {
+        let dir = tmp("rt");
+        let ds = generate(&dir, 3, 1024, 7).unwrap();
+        assert_eq!(ds.blocks.len(), 3);
+        for (i, b) in ds.blocks.iter().enumerate() {
+            let data = read_block(b, 1024).unwrap();
+            assert_eq!(data.len(), 1024);
+            assert!(data.iter().all(|&x| x == ds.base_of(i)));
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn generation_is_idempotent() {
+        let dir = tmp("idem");
+        let ds1 = generate(&dir, 2, 256, 1).unwrap();
+        let mtime = fs::metadata(&ds1.blocks[0]).unwrap().modified().unwrap();
+        let _ds2 = generate(&dir, 2, 256, 1).unwrap();
+        let mtime2 = fs::metadata(&ds1.blocks[0]).unwrap().modified().unwrap();
+        assert_eq!(mtime, mtime2, "existing blocks untouched");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn base_values_are_integral_and_bounded() {
+        let dir = tmp("base");
+        let ds = generate(&dir, 1, 16, 99).unwrap();
+        for i in 0..100 {
+            let b = ds.base_of(i);
+            assert!(b >= 0.0 && b < 1000.0);
+            assert_eq!(b.fract(), 0.0);
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_block_rejects_bad_length() {
+        let dir = tmp("bad");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.dat");
+        fs::write(&p, [0u8; 10]).unwrap();
+        assert!(read_block(&p, 4).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_read_varied() {
+        let dir = tmp("varied");
+        let p = dir.join("v.dat");
+        generate_varied_block(&p, 512, 3).unwrap();
+        let d = read_block(&p, 512).unwrap();
+        assert_eq!(d.len(), 512);
+        let distinct: std::collections::HashSet<i64> =
+            d.iter().map(|&x| x as i64).collect();
+        assert!(distinct.len() > 10, "values vary");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,225 @@
+//! Algorithm 1 — the incrementation application.
+//!
+//! ```text
+//! foreach chunk ∈ C:
+//!     read chunk from Lustre
+//!     for i ∈ [1, n]:
+//!         chunk ← chunk + 1
+//!         save chunk to fs
+//! ```
+//!
+//! Each iteration's output is written to the evaluated file system and
+//! the next iteration re-reads it (task-per-iteration structure, which is
+//! what gives the paper its intermediate-data volume `D_m`: condition 4
+//! varies `n` precisely to scale `D_m`). Final-iteration files are named
+//! `*_final.dat` so the Sea in-memory rule `**_final.dat` (flush + evict
+//! last iteration only, §3.5.1) can match them.
+
+use std::sync::Arc;
+
+use crate::placement::FileTable;
+use crate::sim::app::Instr;
+use crate::sim::stack::FileId;
+
+/// Parameters of one incrementation run.
+#[derive(Debug, Clone)]
+pub struct IncrementationSpec {
+    /// Number of image chunks (paper: 1000).
+    pub blocks: usize,
+    /// Bytes per chunk (paper: 617 MiB).
+    pub file_size: u64,
+    /// Increment rounds `n` (paper default: 10).
+    pub iterations: usize,
+    /// CPU-seconds charged per chunk-iteration (calibrated from the PJRT
+    /// hot path; ≈0 reproduces the paper's pure data-intensive regime).
+    pub compute_per_iter: f64,
+    /// Re-read the previous iteration's file (task-per-iteration, the
+    /// paper's structure). `false` models a single task holding the chunk
+    /// in memory (no `D_m` reads).
+    pub read_back: bool,
+}
+
+impl IncrementationSpec {
+    /// The paper's fixed conditions: 1000 × 617 MiB, 10 iterations.
+    pub fn paper_default() -> IncrementationSpec {
+        IncrementationSpec {
+            blocks: 1000,
+            file_size: 617 * crate::util::MIB,
+            iterations: 10,
+            compute_per_iter: 0.0,
+            read_back: true,
+        }
+    }
+
+    /// Canonical input path of block `b`.
+    pub fn input_path(b: usize) -> String {
+        format!("bigbrain/block_{b:04}.dat")
+    }
+
+    /// Canonical output path of block `b` after iteration `i` (1-based);
+    /// the last iteration gets the `_final` suffix the rules match.
+    pub fn iter_path(&self, b: usize, i: usize) -> String {
+        if i == self.iterations {
+            format!("derived/block_{b:04}_final.dat")
+        } else {
+            format!("derived/block_{b:04}_iter{i:02}.dat")
+        }
+    }
+
+    /// The glob matching final-iteration files (for in-memory rules).
+    pub fn final_glob() -> &'static str {
+        "**_final.dat"
+    }
+
+    /// Total volumes for the analytic model.
+    pub fn volume(&self) -> crate::model::WorkloadVolume {
+        crate::model::WorkloadVolume::incrementation(
+            self.blocks,
+            self.file_size,
+            self.iterations,
+        )
+    }
+}
+
+/// Simulation programs: per-process instruction lists plus the input
+/// files to pre-register on Lustre.
+#[derive(Debug)]
+pub struct SimPrograms {
+    /// `programs[k]` runs on node `k % nodes`.
+    pub programs: Vec<Vec<Instr>>,
+    /// `(file, size)` of every input block, to register on Lustre.
+    pub inputs: Vec<(FileId, u64)>,
+}
+
+impl IncrementationSpec {
+    /// Build per-process programs for `nodes × procs_per_node` workers.
+    ///
+    /// Blocks are dealt round-robin over all processes (the paper fixes
+    /// equal work per process by construction). File ids are interned in
+    /// `table` so placement rules can see the paths.
+    pub fn build_programs(
+        &self,
+        nodes: usize,
+        procs_per_node: usize,
+        table: &Arc<FileTable>,
+    ) -> SimPrograms {
+        let nprocs = nodes * procs_per_node;
+        assert!(nprocs > 0, "need at least one process");
+        let mut programs: Vec<Vec<Instr>> = vec![Vec::new(); nprocs];
+        let mut inputs = Vec::with_capacity(self.blocks);
+        for b in 0..self.blocks {
+            let input = table.intern(&Self::input_path(b));
+            inputs.push((input, self.file_size));
+            let prog = &mut programs[b % nprocs];
+            // read chunk from Lustre
+            prog.push(Instr::Read(input));
+            let mut prev: Option<FileId> = None;
+            for i in 1..=self.iterations {
+                if let Some(p) = prev {
+                    if self.read_back {
+                        prog.push(Instr::Read(p));
+                    }
+                }
+                if self.compute_per_iter > 0.0 {
+                    prog.push(Instr::Compute { seconds: self.compute_per_iter });
+                }
+                let out = table.intern(&self.iter_path(b, i));
+                prog.push(Instr::Write { file: out, size: self.file_size });
+                prev = Some(out);
+            }
+        }
+        SimPrograms { programs, inputs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::MIB;
+
+    fn spec() -> IncrementationSpec {
+        IncrementationSpec {
+            blocks: 6,
+            file_size: MIB,
+            iterations: 3,
+            compute_per_iter: 0.5,
+            read_back: true,
+        }
+    }
+
+    #[test]
+    fn paths_and_final_glob() {
+        let s = spec();
+        assert_eq!(s.iter_path(2, 1), "derived/block_0002_iter01.dat");
+        assert_eq!(s.iter_path(2, 3), "derived/block_0002_final.dat");
+        assert!(crate::placement::glob_match(
+            IncrementationSpec::final_glob(),
+            &s.iter_path(0, 3)
+        ));
+        assert!(!crate::placement::glob_match(
+            IncrementationSpec::final_glob(),
+            &s.iter_path(0, 2)
+        ));
+    }
+
+    #[test]
+    fn programs_cover_all_blocks_evenly() {
+        let s = spec();
+        let table = Arc::new(FileTable::new());
+        let p = s.build_programs(2, 2, &table); // 4 procs, 6 blocks
+        assert_eq!(p.programs.len(), 4);
+        assert_eq!(p.inputs.len(), 6);
+        let reads: usize = p
+            .programs
+            .iter()
+            .flat_map(|pr| pr.iter())
+            .filter(|i| matches!(i, Instr::Read(_)))
+            .count();
+        let writes: usize = p
+            .programs
+            .iter()
+            .flat_map(|pr| pr.iter())
+            .filter(|i| matches!(i, Instr::Write { .. }))
+            .count();
+        let computes: usize = p
+            .programs
+            .iter()
+            .flat_map(|pr| pr.iter())
+            .filter(|i| matches!(i, Instr::Compute { .. }))
+            .count();
+        // per block: 1 input read + 2 read-backs = 3 reads, 3 writes, 3 computes
+        assert_eq!(reads, 6 * 3);
+        assert_eq!(writes, 6 * 3);
+        assert_eq!(computes, 6 * 3);
+        // even split: 6 blocks over 4 procs -> 2,2,1,1
+        let mut lens: Vec<usize> = p
+            .programs
+            .iter()
+            .map(|pr| pr.iter().filter(|i| matches!(i, Instr::Write { .. })).count())
+            .collect();
+        lens.sort_unstable();
+        assert_eq!(lens, vec![3, 3, 6, 6]); // writes per proc: blocks*(iters)
+    }
+
+    #[test]
+    fn no_read_back_skips_intermediate_reads() {
+        let mut s = spec();
+        s.read_back = false;
+        let table = Arc::new(FileTable::new());
+        let p = s.build_programs(1, 1, &table);
+        let reads: usize = p.programs[0]
+            .iter()
+            .filter(|i| matches!(i, Instr::Read(_)))
+            .count();
+        assert_eq!(reads, 6, "only the input reads remain");
+    }
+
+    #[test]
+    fn volume_matches_model() {
+        let s = spec();
+        let v = s.volume();
+        assert_eq!(v.d_i, 6.0 * MIB as f64);
+        assert_eq!(v.d_m, 2.0 * 6.0 * MIB as f64);
+        assert_eq!(v.d_f, 6.0 * MIB as f64);
+    }
+}

@@ -1,0 +1,14 @@
+//! Workload definitions: the paper's incrementation application
+//! (Algorithm 1), a multi-stage variant, and dataset generators.
+//!
+//! * [`incrementation`] — program builder shared by the simulator and the
+//!   real-bytes runner: per-process instruction lists with the canonical
+//!   file naming that the Sea rule lists match against.
+//! * [`dataset`] — real-bytes chunk files (f32, canonical `(rows, 256)`
+//!   geometry) for the end-to-end examples, plus the BigBrain-scale
+//!   descriptor used by the simulator.
+
+pub mod dataset;
+pub mod incrementation;
+
+pub use incrementation::{IncrementationSpec, SimPrograms};

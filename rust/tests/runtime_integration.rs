@@ -1,0 +1,131 @@
+//! Integration: PJRT runtime over the real AOT artifacts.
+//!
+//! Requires `make artifacts` to have run (the Makefile `test` target
+//! guarantees this). These tests cover the full L3->L2->L1 compute path:
+//! HLO text -> xla parse -> PJRT compile -> execute -> host copy.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use sea::runtime::Engine;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> &'static Engine {
+    static ENGINE: OnceLock<Engine> = OnceLock::new();
+    ENGINE.get_or_init(|| Engine::load(artifacts_dir()).expect("load artifacts"))
+}
+
+#[test]
+fn manifest_lists_expected_entries() {
+    let names = engine().manifest().names();
+    assert!(names.contains(&"step"));
+    assert!(names.contains(&"blend"));
+    assert!(names.contains(&"stats"));
+}
+
+#[test]
+fn step_increments_uniform_chunk() {
+    let e = engine();
+    let n = e.chunk_elems();
+    assert!(n > 0);
+    let mut buf = vec![0f32; n];
+    let stats = e.step(&mut buf).expect("step");
+    assert!(buf.iter().all(|&x| x == 1.0));
+    stats.certify_uniform(1.0, n).expect("uniform 1");
+}
+
+#[test]
+fn step_matches_oracle_on_varied_data() {
+    let e = engine();
+    let n = e.chunk_elems();
+    let mut buf: Vec<f32> = (0..n).map(|i| (i % 1000) as f32).collect();
+    let want: Vec<f32> = buf.iter().map(|x| x + 1.0).collect();
+    let stats = e.step(&mut buf).expect("step");
+    assert_eq!(buf, want);
+    assert_eq!(stats.min, 1.0);
+    assert_eq!(stats.max, 1000.0);
+}
+
+#[test]
+fn algorithm1_invariant_n_steps() {
+    let e = engine();
+    let n = e.chunk_elems();
+    let mut buf = vec![3f32; n];
+    let iters = 7;
+    let mut last = None;
+    for _ in 0..iters {
+        last = Some(e.step(&mut buf).expect("step"));
+    }
+    last.unwrap()
+        .certify_uniform(3.0 + iters as f32, n)
+        .expect("after n steps chunk must be base+n");
+}
+
+#[test]
+fn fused_step_equals_n_single_steps() {
+    let e = engine();
+    let elems = e.chunk_elems();
+    let mut fused = vec![2f32; elems];
+    let (n, stats) = e.step_fused(&mut fused).expect("fused");
+    assert!(n > 0);
+    let mut single = vec![2f32; elems];
+    for _ in 0..n {
+        e.step(&mut single).expect("step");
+    }
+    assert_eq!(fused, single);
+    stats.certify_uniform(2.0 + n as f32, elems).expect("uniform");
+}
+
+#[test]
+fn blend_is_elementwise_mean() {
+    let e = engine();
+    let elems = e.chunk_elems();
+    let mut a = vec![1f32; elems];
+    let b = vec![5f32; elems];
+    let stats = e.blend(&mut a, &b).expect("blend");
+    assert!(a.iter().all(|&x| x == 3.0));
+    stats.certify_uniform(3.0, elems).expect("uniform 3");
+}
+
+#[test]
+fn stats_detects_outlier() {
+    let e = engine();
+    let elems = e.chunk_elems();
+    let mut buf = vec![0f32; elems];
+    buf[elems / 2] = -9.0;
+    let s = e.stats(&buf).expect("stats");
+    assert_eq!(s.min, -9.0);
+    assert_eq!(s.max, 0.0);
+}
+
+#[test]
+fn certify_uniform_rejects_corruption() {
+    let e = engine();
+    let elems = e.chunk_elems();
+    let mut buf = vec![1f32; elems];
+    buf[17] = 2.0; // corrupt one element
+    let s = e.stats(&buf).expect("stats");
+    assert!(s.certify_uniform(1.0, elems).is_err());
+}
+
+#[test]
+fn rejects_wrong_geometry() {
+    let e = engine();
+    let mut tiny = vec![0f32; 16];
+    assert!(e.step(&mut tiny).is_err());
+}
+
+#[test]
+fn timings_accumulate() {
+    let e = engine();
+    let elems = e.chunk_elems();
+    let mut buf = vec![0f32; elems];
+    let before = e.timings().calls;
+    e.step(&mut buf).unwrap();
+    let t = e.timings();
+    assert!(t.calls > before);
+    assert!(t.bytes > 0);
+}

@@ -1,0 +1,307 @@
+//! Property-based tests over the coordinator's core invariants
+//! (routing, batching, space/state management) using the offline
+//! `testkit` (proptest substitute) — DESIGN.md §2.
+
+use std::sync::Arc;
+
+use sea::hierarchy::{select_device, Hierarchy, SelectCfg, SpaceAccountant};
+use sea::model::{lustre_bounds, sea_bounds, sea_breakdown, ModelParams, WorkloadVolume};
+use sea::placement::{glob_match, FileTable, RuleSet};
+use sea::sim::engine::{ProcId, Process, Sim, Step};
+use sea::testkit::{check, Config};
+use sea::util::{Rng, MIB};
+use sea::workload::IncrementationSpec;
+
+// --- hierarchy / space accounting -------------------------------------------
+
+#[test]
+fn prop_space_accounting_never_oversubscribes() {
+    check("space accounting conserves capacity", Config::default(), |g| {
+        let devices = g.usize(1..6);
+        let cap = g.u64(1..1000) * MIB;
+        let mut h = Hierarchy::new();
+        for d in 0..devices {
+            h.add((d % 3) as u8, cap, format!("d{d}"));
+        }
+        let acc = SpaceAccountant::new(&h);
+        let cfg = SelectCfg {
+            max_file_size: g.u64(1..8) * MIB,
+            parallel_procs: g.u64(1..8),
+        };
+        let mut rng = Rng::new(g.u64(0..u64::MAX - 1));
+        let mut per_dev = vec![0u64; devices];
+        for _ in 0..g.usize(1..200) {
+            let size = g.u64(1..16) * MIB;
+            if let Some(d) = select_device(&h, &acc, &cfg, size, &mut rng) {
+                per_dev[d] += size;
+                // invariant: what we placed never exceeds capacity
+                assert!(per_dev[d] <= cap, "device {d} oversubscribed");
+            }
+        }
+        // ledger agrees with our shadow accounting
+        for (d, &used) in per_dev.iter().enumerate() {
+            assert_eq!(acc.free(d), cap - used);
+        }
+    });
+}
+
+#[test]
+fn prop_selection_prefers_fastest_eligible_tier() {
+    check("fastest eligible tier wins", Config::default(), |g| {
+        let mut h = Hierarchy::new();
+        let fast_cap = g.u64(1..50) * MIB;
+        let slow_cap = 1000 * MIB;
+        h.add(0, fast_cap, "fast");
+        h.add(1, slow_cap, "slow");
+        let acc = SpaceAccountant::new(&h);
+        let cfg = SelectCfg { max_file_size: MIB, parallel_procs: g.u64(1..4) };
+        let mut rng = Rng::new(1);
+        let size = MIB;
+        let floor = cfg.floor().max(size);
+        let d = select_device(&h, &acc, &cfg, size, &mut rng);
+        if fast_cap >= floor {
+            assert_eq!(d, Some(0), "fast tier eligible -> must be chosen");
+        } else {
+            assert_eq!(d, Some(1), "fast tier too small -> slow tier");
+        }
+    });
+}
+
+#[test]
+fn prop_credit_debit_roundtrip() {
+    check("credit restores exactly", Config::default(), |g| {
+        let mut h = Hierarchy::new();
+        let cap = g.u64(10..1000) * MIB;
+        h.add(0, cap, "d");
+        let acc = SpaceAccountant::new(&h);
+        let mut outstanding = Vec::new();
+        for _ in 0..g.usize(1..64) {
+            let size = g.u64(1..10) * MIB;
+            if acc.try_debit(0, size, size) {
+                outstanding.push(size);
+            }
+            if g.bool(0.4) {
+                if let Some(s) = outstanding.pop() {
+                    acc.credit(0, s);
+                }
+            }
+        }
+        let used: u64 = outstanding.iter().sum();
+        assert_eq!(acc.free(0), cap - used);
+    });
+}
+
+// --- rules / glob ------------------------------------------------------------
+
+#[test]
+fn prop_table1_mode_matches_membership() {
+    check("mode = f(flush member, evict member)", Config::default(), |g| {
+        use sea::placement::MgmtMode::*;
+        let name = format!("d{}/block_{:04}.dat", g.usize(0..4), g.usize(0..10_000));
+        let in_flush = g.bool(0.5);
+        let in_evict = g.bool(0.5);
+        let rules = RuleSet::from_texts(
+            if in_flush { "d*/**" } else { "nomatch/**" },
+            if in_evict { "**.dat" } else { "nomatch/**" },
+            "",
+        );
+        let expect = match (in_flush, in_evict) {
+            (true, false) => Copy,
+            (false, true) => Remove,
+            (true, true) => Move,
+            (false, false) => Keep,
+        };
+        assert_eq!(rules.mode_for(&name), expect);
+    });
+}
+
+#[test]
+fn prop_glob_literal_paths_always_match_themselves() {
+    check("identity glob", Config::default(), |g| {
+        let depth = g.usize(1..5);
+        let mut segs = Vec::new();
+        for _ in 0..depth {
+            segs.push(format!("s{}", g.usize(0..1000)));
+        }
+        let path = segs.join("/");
+        assert!(glob_match(&path, &path));
+        assert!(glob_match("**", &path));
+        // '*' must not cross separators
+        if depth > 1 {
+            assert!(!glob_match("*", &path));
+        }
+    });
+}
+
+// --- model --------------------------------------------------------------------
+
+#[test]
+fn prop_model_bounds_ordered_and_conserving() {
+    check("bounds ordered; tier fill conserves volume", Config::default(), |g| {
+        let spec = sea::sim::spec::ClusterSpec {
+            nodes: g.usize(1..9),
+            procs_per_node: g.usize(1..65),
+            disks_per_node: g.usize(1..7),
+            ..sea::sim::spec::ClusterSpec::paper_default()
+        };
+        let blocks = g.usize(1..2000);
+        let iters = g.usize(1..16);
+        let m = ModelParams::from_spec(&spec, 617 * MIB);
+        let v = WorkloadVolume::incrementation(blocks, 617 * MIB, iters);
+        let lb = lustre_bounds(&m, &v);
+        let sb = sea_bounds(&m, &v);
+        assert!(lb.lower <= lb.upper + 1e-9);
+        assert!(sb.lower <= sb.upper + 1e-9);
+        assert!(lb.lower > 0.0 && sb.lower > 0.0);
+        let b = sea_breakdown(&m, &v);
+        assert!((b.d_tr + b.d_gr + b.d_lr - v.d_m).abs() < 1.0);
+        assert!((b.d_tw + b.d_gw + b.d_lw - (v.d_m + v.d_f)).abs() < 1.0);
+        for x in [b.d_tr, b.d_tw, b.d_gr, b.d_gw, b.d_lr, b.d_lw] {
+            assert!(x >= 0.0);
+        }
+    });
+}
+
+// --- engine max-min fairness ---------------------------------------------------
+
+#[test]
+fn prop_max_min_rates_respect_capacities() {
+    struct Spawner {
+        paths: Vec<Vec<sea::sim::engine::ResourceId>>,
+        units: f64,
+        started: bool,
+        done: std::rc::Rc<std::cell::Cell<u32>>,
+    }
+    impl Process for Spawner {
+        fn resume(&mut self, sim: &mut Sim, pid: ProcId) -> Step {
+            if !self.started {
+                self.started = true;
+                // one process awaits the first flow only; the others are
+                // fire-and-forget (they still occupy bandwidth)
+                for (i, p) in self.paths.iter().enumerate() {
+                    let waker = if i == 0 { Some(pid) } else { None };
+                    sim.start_flow(p.clone(), self.units, f64::INFINITY, waker);
+                }
+                Step::Waiting
+            } else {
+                self.done.set(self.done.get() + 1);
+                Step::Done
+            }
+        }
+    }
+    check("flows complete; work conserved per resource", Config { cases: 32, ..Config::default() }, |g| {
+        let mut sim = Sim::new();
+        let nres = g.usize(1..6);
+        let caps: Vec<f64> = (0..nres).map(|_| g.f64(10.0, 1000.0)).collect();
+        let res: Vec<_> = caps
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| sim.add_resource(format!("r{i}"), c))
+            .collect();
+        let nflows = g.usize(1..12);
+        let units = g.f64(1.0, 500.0);
+        let mut paths = Vec::new();
+        for _ in 0..nflows {
+            let len = g.usize(1..nres + 1);
+            let mut p = Vec::new();
+            for _ in 0..len {
+                let r = *g.pick(&res);
+                if !p.contains(&r) {
+                    p.push(r);
+                }
+            }
+            paths.push(p);
+        }
+        let done = std::rc::Rc::new(std::cell::Cell::new(0));
+        let expected_work: Vec<f64> = res
+            .iter()
+            .map(|r| {
+                paths
+                    .iter()
+                    .filter(|p| p.contains(r))
+                    .count() as f64
+                    * units
+            })
+            .collect();
+        sim.spawn(Box::new(Spawner { paths, units, started: false, done: done.clone() }));
+        let t = sim.run(1e9).expect("run");
+        assert!(t.is_finite());
+        // conservation: every resource carried exactly its flows' units
+        for (i, r) in res.iter().enumerate() {
+            assert!(
+                (sim.resource_work(*r) - expected_work[i]).abs() < 1e-3,
+                "resource {i}: work {} expected {}",
+                sim.resource_work(*r),
+                expected_work[i]
+            );
+        }
+        // a lower bound on the makespan: the most loaded resource
+        let min_time: f64 = expected_work
+            .iter()
+            .zip(&caps)
+            .map(|(w, c)| w / c)
+            .fold(0.0, f64::max);
+        assert!(t >= min_time - 1e-6, "t {t} < physical bound {min_time}");
+    });
+}
+
+// --- workload construction ------------------------------------------------------
+
+#[test]
+fn prop_programs_partition_blocks() {
+    check("every block appears exactly once", Config::default(), |g| {
+        let spec = IncrementationSpec {
+            blocks: g.usize(1..200),
+            file_size: g.u64(1..10) * MIB,
+            iterations: g.usize(1..8),
+            compute_per_iter: 0.0,
+            read_back: g.bool(0.5),
+        };
+        let nodes = g.usize(1..6);
+        let procs = g.usize(1..8);
+        let table = Arc::new(FileTable::new());
+        let progs = spec.build_programs(nodes, procs, &table);
+        assert_eq!(progs.programs.len(), nodes * procs);
+        assert_eq!(progs.inputs.len(), spec.blocks);
+        // count input reads across all programs: exactly one per block
+        let mut input_reads = 0;
+        for p in &progs.programs {
+            for i in p {
+                if let sea::sim::app::Instr::Read(f) = i {
+                    if progs.inputs.iter().any(|(id, _)| id == f) {
+                        input_reads += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(input_reads, spec.blocks);
+        // writes per block = iterations
+        let writes: usize = progs
+            .programs
+            .iter()
+            .flatten()
+            .filter(|i| matches!(i, sea::sim::app::Instr::Write { .. }))
+            .count();
+        assert_eq!(writes, spec.blocks * spec.iterations);
+    });
+}
+
+#[test]
+fn prop_filetable_bijective() {
+    check("path <-> id bijection", Config::default(), |g| {
+        let t = FileTable::new();
+        let n = g.usize(1..100);
+        let mut ids = std::collections::HashMap::new();
+        for i in 0..n {
+            let path = format!("p{}/f{}", i % 7, i);
+            let id = t.intern(&path);
+            ids.insert(path, id);
+        }
+        for (path, id) in &ids {
+            assert_eq!(t.intern(path), *id, "re-intern stable");
+            assert_eq!(&t.path(*id), path);
+        }
+        let distinct: std::collections::HashSet<_> = ids.values().collect();
+        assert_eq!(distinct.len(), ids.len(), "ids distinct");
+    });
+}
