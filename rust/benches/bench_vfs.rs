@@ -1,17 +1,20 @@
 //! Interception overhead: the paper claims glibc interception cost is
 //! "minimal, and negligible compared to system call interception and
 //! file systems such as FUSE". Measure the library-level analogue —
-//! SeaFs path translation + registry vs a plain RealFs — per operation.
+//! SeaFs path translation + registry vs a plain RealFs — per operation,
+//! plus the handle API's partial-read path (64 KiB strides from 1 MiB
+//! blocks) and the flush pool's concurrent drain throughput.
 
 mod common;
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use sea::bench::Harness;
 use sea::placement::RuleSet;
 use sea::util::{KIB, MIB};
-use sea::vfs::{RealFs, SeaFs, SeaFsConfig, Vfs};
+use sea::vfs::{OpenMode, RealFs, SeaFs, SeaFsConfig, Vfs, VfsFile};
 
 fn main() {
     let work = std::env::temp_dir().join("sea_bench_vfs");
@@ -69,6 +72,70 @@ fn main() {
         for i in 0..N {
             let _ = sea.size(Path::new(&format!("/sea/m/{i}.dat"))).unwrap();
         }
+    });
+
+    // partial reads: 16 x 64 KiB strides from each 1 MiB block, through
+    // an offset-addressed handle (no whole-file materialization)
+    let strides = (MIB / (64 * KIB)) as u64;
+    h.case("realfs_pread_64k_strides_x200", || {
+        let mut buf = vec![0u8; 64 * KIB as usize];
+        for i in 0..N {
+            let mut f = plain
+                .open(Path::new(&format!("m/{i}.dat")), OpenMode::Read)
+                .unwrap();
+            for k in 0..strides {
+                f.pread_exact(&mut buf, k * 64 * KIB).unwrap();
+            }
+        }
+    });
+    h.case("seafs_pread_64k_strides_x200", || {
+        let mut buf = vec![0u8; 64 * KIB as usize];
+        for i in 0..N {
+            let mut f = sea
+                .open(Path::new(&format!("/sea/m/{i}.dat")), OpenMode::Read)
+                .unwrap();
+            for k in 0..strides {
+                f.pread_exact(&mut buf, k * 64 * KIB).unwrap();
+            }
+        }
+    });
+
+    // concurrent flush: 4 writer threads x 16 Move-mode files, drained by
+    // the flush pool (the seed's single daemon serialized this)
+    static FLUSH_REP: AtomicU64 = AtomicU64::new(0);
+    h.case("seafs_concurrent_flush_64x256k", || {
+        let rep = FLUSH_REP.fetch_add(1, Ordering::Relaxed);
+        let root = work.join(format!("flush_{rep}"));
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).expect("pfs"));
+        let mount = SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![(root.join("dev0"), 0, 1024 * MIB)],
+            pfs,
+            max_file_size: MIB,
+            parallel_procs: 4,
+            rules: RuleSet::from_texts("**", "**", ""), // move everything
+            seed: rep + 1,
+        })
+        .expect("mount");
+        let mount = Arc::new(mount);
+        let payload = vec![5u8; 256 * KIB as usize];
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let mount = mount.clone();
+                let payload = &payload;
+                scope.spawn(move || {
+                    for i in 0..16 {
+                        let p = PathBuf::from(format!("/sea/t{t}/f{i}.dat"));
+                        let mut f = mount.open(&p, OpenMode::Write).unwrap();
+                        f.pwrite_all(payload, 0).unwrap();
+                    }
+                });
+            }
+        });
+        mount.sync_mgmt().expect("drain");
+        let (fl, ev) = mount.mgmt_counters();
+        assert_eq!((fl, ev), (64, 64));
+        let _ = std::fs::remove_dir_all(&root);
     });
 
     let results = h.finish();

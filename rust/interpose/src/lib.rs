@@ -18,9 +18,20 @@
 //! * `SEA_MOUNT`  — logical mountpoint prefix (default `/sea`).
 //! * `SEA_TARGET` — directory that backs the mountpoint.
 //!
-//! Wrapped symbols: `open`, `open64`, `openat`, `creat`, `fopen`,
-//! `fopen64`, `stat`, `lstat`, `access`, `unlink`, `mkdir`, `rename`
-//! (both arguments), `opendir`, `remove`, `truncate`, `chdir`.
+//! Wrapped symbols: `open`, `open64`, `openat`, `creat`, `creat64`,
+//! `fopen`, `fopen64`, `stat`, `lstat`, `access`, `unlink`, `mkdir`,
+//! `rename` (both arguments), `opendir`, `remove`, `truncate`,
+//! `truncate64`, `chdir`.
+//!
+//! Offset-addressed I/O (`pread`/`pwrite`/`pread64`/`pwrite64`,
+//! `lseek`/`lseek64`) is also interposed: these operate on descriptors
+//! whose *path* was already translated at `open`, so no rewriting is
+//! needed — the wrappers forward to the real symbols, keeping the whole
+//! request path (open → positioned I/O → close) inside the shim. This
+//! mirrors the library-level `VfsFile` handle API: translation happens
+//! once at open, every subsequent request is offset-addressed against
+//! the translated target.
+//!
 //! Statically-linked binaries and direct syscalls bypass the shim —
 //! the same documented limitation as the paper's library.
 
@@ -55,13 +66,25 @@ fn translate(path: &CStr) -> Option<CString> {
     CString::new(out).ok()
 }
 
+/// Flag a missing real symbol to the caller: libc contracts promise a
+/// meaningful errno alongside the error return.
+unsafe fn no_sym<T>(ret: T) -> T {
+    *libc::__errno_location() = libc::ENOSYS;
+    ret
+}
+
+/// Resolve the next (real) definition of `$name`, caching the lookup so
+/// hot paths (pread/pwrite) don't pay a dlsym string search per call.
 macro_rules! real {
     ($name:literal, $ty:ty) => {{
-        let sym = unsafe { libc::dlsym(libc::RTLD_NEXT, $name.as_ptr() as *const c_char) };
-        if sym.is_null() {
+        static SYM: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+        let addr = *SYM.get_or_init(|| unsafe {
+            libc::dlsym(libc::RTLD_NEXT, $name.as_ptr() as *const c_char) as usize
+        });
+        if addr == 0 {
             None
         } else {
-            Some(unsafe { std::mem::transmute::<*mut c_void, $ty>(sym) })
+            Some(unsafe { std::mem::transmute::<usize, $ty>(addr) })
         }
     }};
 }
@@ -77,7 +100,7 @@ macro_rules! wrap_path_fn {
         #[no_mangle]
         pub unsafe extern "C" fn $name(path: *const c_char $(, $arg: $argty)*) -> $ret {
             type Fn = unsafe extern "C" fn(*const c_char $(, $argty)*) -> $ret;
-            let Some(real) = real!($cname, Fn) else { return $errno_ret; };
+            let Some(real) = real!($cname, Fn) else { return no_sym($errno_ret); };
             if path.is_null() {
                 return real(path $(, $arg)*);
             }
@@ -90,16 +113,57 @@ macro_rules! wrap_path_fn {
     };
 }
 
+/// Wrap an fd-based function: no path to translate (the descriptor's
+/// path was rewritten at `open`), just forward through the shim.
+macro_rules! wrap_fd_fn {
+    ($name:ident, $cname:literal, ($($arg:ident : $argty:ty),*), $ret:ty, $errno_ret:expr) => {
+        /// glibc interposer: forward an fd-granular call to libc (the
+        /// descriptor was opened through the translating `open` wrapper).
+        ///
+        /// # Safety
+        /// Called by arbitrary C code with C ABI invariants; pointer
+        /// arguments must be valid per the libc contract.
+        #[no_mangle]
+        pub unsafe extern "C" fn $name(fd: c_int $(, $arg: $argty)*) -> $ret {
+            type Fn = unsafe extern "C" fn(c_int $(, $argty)*) -> $ret;
+            let Some(real) = real!($cname, Fn) else { return no_sym($errno_ret); };
+            real(fd $(, $arg)*)
+        }
+    };
+}
+
 // open/creat family (mode passed through variadically-safe fixed arg)
 wrap_path_fn!(open, b"open\0", (flags: c_int, mode: libc::mode_t), c_int, -1);
 wrap_path_fn!(open64, b"open64\0", (flags: c_int, mode: libc::mode_t), c_int, -1);
 wrap_path_fn!(creat, b"creat\0", (mode: libc::mode_t), c_int, -1);
+wrap_path_fn!(creat64, b"creat64\0", (mode: libc::mode_t), c_int, -1);
 wrap_path_fn!(unlink, b"unlink\0", (), c_int, -1);
 wrap_path_fn!(mkdir, b"mkdir\0", (mode: libc::mode_t), c_int, -1);
 wrap_path_fn!(truncate, b"truncate\0", (len: libc::off_t), c_int, -1);
+wrap_path_fn!(truncate64, b"truncate64\0", (len: libc::off64_t), c_int, -1);
 wrap_path_fn!(chdir, b"chdir\0", (), c_int, -1);
 wrap_path_fn!(remove, b"remove\0", (), c_int, -1);
 wrap_path_fn!(access, b"access\0", (mode: c_int), c_int, -1);
+
+// offset-addressed I/O on already-translated descriptors: the same
+// request granularity as the library's `VfsFile::pread`/`pwrite`
+wrap_fd_fn!(pread, b"pread\0",
+    (buf: *mut c_void, count: libc::size_t, offset: libc::off_t),
+    libc::ssize_t, -1);
+wrap_fd_fn!(pread64, b"pread64\0",
+    (buf: *mut c_void, count: libc::size_t, offset: libc::off64_t),
+    libc::ssize_t, -1);
+wrap_fd_fn!(pwrite, b"pwrite\0",
+    (buf: *const c_void, count: libc::size_t, offset: libc::off_t),
+    libc::ssize_t, -1);
+wrap_fd_fn!(pwrite64, b"pwrite64\0",
+    (buf: *const c_void, count: libc::size_t, offset: libc::off64_t),
+    libc::ssize_t, -1);
+wrap_fd_fn!(lseek, b"lseek\0", (offset: libc::off_t, whence: c_int), libc::off_t, -1);
+wrap_fd_fn!(lseek64, b"lseek64\0",
+    (offset: libc::off64_t, whence: c_int), libc::off64_t, -1);
+wrap_fd_fn!(ftruncate, b"ftruncate\0", (len: libc::off_t), c_int, -1);
+wrap_fd_fn!(ftruncate64, b"ftruncate64\0", (len: libc::off64_t), c_int, -1);
 
 /// `openat`: translate the path argument (position 1).
 ///
@@ -113,7 +177,7 @@ pub unsafe extern "C" fn openat(
     mode: libc::mode_t,
 ) -> c_int {
     type Fn = unsafe extern "C" fn(c_int, *const c_char, c_int, libc::mode_t) -> c_int;
-    let Some(real) = real!(b"openat\0", Fn) else { return -1 };
+    let Some(real) = real!(b"openat\0", Fn) else { return no_sym(-1) };
     if path.is_null() {
         return real(dirfd, path, flags, mode);
     }
@@ -131,7 +195,7 @@ pub unsafe extern "C" fn openat(
 #[no_mangle]
 pub unsafe extern "C" fn fopen(path: *const c_char, modes: *const c_char) -> *mut libc::FILE {
     type Fn = unsafe extern "C" fn(*const c_char, *const c_char) -> *mut libc::FILE;
-    let Some(real) = real!(b"fopen\0", Fn) else { return std::ptr::null_mut() };
+    let Some(real) = real!(b"fopen\0", Fn) else { return no_sym(std::ptr::null_mut()) };
     if path.is_null() {
         return real(path, modes);
     }
@@ -149,7 +213,7 @@ pub unsafe extern "C" fn fopen(path: *const c_char, modes: *const c_char) -> *mu
 #[no_mangle]
 pub unsafe extern "C" fn fopen64(path: *const c_char, modes: *const c_char) -> *mut libc::FILE {
     type Fn = unsafe extern "C" fn(*const c_char, *const c_char) -> *mut libc::FILE;
-    let Some(real) = real!(b"fopen64\0", Fn) else { return std::ptr::null_mut() };
+    let Some(real) = real!(b"fopen64\0", Fn) else { return no_sym(std::ptr::null_mut()) };
     if path.is_null() {
         return real(path, modes);
     }
@@ -167,7 +231,7 @@ pub unsafe extern "C" fn fopen64(path: *const c_char, modes: *const c_char) -> *
 #[no_mangle]
 pub unsafe extern "C" fn stat(path: *const c_char, buf: *mut libc::stat) -> c_int {
     type Fn = unsafe extern "C" fn(*const c_char, *mut libc::stat) -> c_int;
-    let Some(real) = real!(b"stat\0", Fn) else { return -1 };
+    let Some(real) = real!(b"stat\0", Fn) else { return no_sym(-1) };
     if path.is_null() {
         return real(path, buf);
     }
@@ -185,7 +249,7 @@ pub unsafe extern "C" fn stat(path: *const c_char, buf: *mut libc::stat) -> c_in
 #[no_mangle]
 pub unsafe extern "C" fn lstat(path: *const c_char, buf: *mut libc::stat) -> c_int {
     type Fn = unsafe extern "C" fn(*const c_char, *mut libc::stat) -> c_int;
-    let Some(real) = real!(b"lstat\0", Fn) else { return -1 };
+    let Some(real) = real!(b"lstat\0", Fn) else { return no_sym(-1) };
     if path.is_null() {
         return real(path, buf);
     }
@@ -203,7 +267,7 @@ pub unsafe extern "C" fn lstat(path: *const c_char, buf: *mut libc::stat) -> c_i
 #[no_mangle]
 pub unsafe extern "C" fn rename(from: *const c_char, to: *const c_char) -> c_int {
     type Fn = unsafe extern "C" fn(*const c_char, *const c_char) -> c_int;
-    let Some(real) = real!(b"rename\0", Fn) else { return -1 };
+    let Some(real) = real!(b"rename\0", Fn) else { return no_sym(-1) };
     let tf = if from.is_null() { None } else { translate(CStr::from_ptr(from)) };
     let tt = if to.is_null() { None } else { translate(CStr::from_ptr(to)) };
     let fp = tf.as_ref().map(|c| c.as_ptr()).unwrap_or(from);
@@ -230,7 +294,7 @@ pub unsafe extern "C" fn statx(
         libc::c_uint,
         *mut libc::statx,
     ) -> c_int;
-    let Some(real) = real!(b"statx\0", Fn) else { return -1 };
+    let Some(real) = real!(b"statx\0", Fn) else { return no_sym(-1) };
     if path.is_null() {
         return real(dirfd, path, flags, mask, buf);
     }
@@ -253,7 +317,7 @@ pub unsafe extern "C" fn fstatat(
     flags: c_int,
 ) -> c_int {
     type Fn = unsafe extern "C" fn(c_int, *const c_char, *mut libc::stat, c_int) -> c_int;
-    let Some(real) = real!(b"fstatat\0", Fn) else { return -1 };
+    let Some(real) = real!(b"fstatat\0", Fn) else { return no_sym(-1) };
     if path.is_null() {
         return real(dirfd, path, buf, flags);
     }
@@ -271,7 +335,7 @@ pub unsafe extern "C" fn fstatat(
 #[no_mangle]
 pub unsafe extern "C" fn opendir(path: *const c_char) -> *mut libc::DIR {
     type Fn = unsafe extern "C" fn(*const c_char) -> *mut libc::DIR;
-    let Some(real) = real!(b"opendir\0", Fn) else { return std::ptr::null_mut() };
+    let Some(real) = real!(b"opendir\0", Fn) else { return no_sym(std::ptr::null_mut()) };
     if path.is_null() {
         return real(path);
     }

@@ -6,6 +6,11 @@
 //! on the AOT-compiled HLO through PJRT, integrity is certified by the
 //! on-device `block_stats`, and every file placement decision is Sea's.
 //!
+//! I/O is **streamed**: blocks move through fixed-size stride buffers
+//! (one engine chunk per stride) via `pread`/`pwrite` handles, so peak
+//! worker memory is one stride regardless of block size — blocks may be
+//! any multiple of the lowered chunk geometry.
+//!
 //! Backpressure: the leader feeds a *bounded* channel; workers pull. A
 //! slow tier (rate-limited PFS) therefore throttles the leader instead of
 //! queueing unbounded work — the same discipline the paper's Sea daemon
@@ -18,13 +23,14 @@ use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::runtime::Engine;
-use crate::vfs::Vfs;
-use crate::workload::dataset::Dataset;
-use crate::workload::IncrementationSpec;
+use crate::vfs::{OpenMode, Vfs, VfsFile};
+use crate::workload::dataset::{bytes_to_f32_into, f32_to_bytes_into, Dataset};
+use crate::workload::{stream_block, IncrementationSpec, StridePlan};
 
 /// Configuration of a real pipeline run.
 pub struct PipelineCfg {
-    /// Compiled PJRT engine (chunk geometry must match the dataset).
+    /// Compiled PJRT engine (chunk geometry must divide the dataset's
+    /// block geometry).
     pub engine: Arc<Engine>,
     /// The file system under test (Sea mount or plain/rate-limited dir).
     pub vfs: Arc<dyn Vfs>,
@@ -37,7 +43,10 @@ pub struct PipelineCfg {
     /// Worker threads.
     pub workers: usize,
     /// Re-read each iteration's file before the next (Algorithm 1's
-    /// task-per-iteration structure).
+    /// task-per-iteration structure). When `false`, each worker holds
+    /// one open output handle *per iteration* simultaneously (no
+    /// intermediate reads), so `workers × iterations` must stay well
+    /// under the process fd limit.
     pub read_back: bool,
     /// Verify on-device stats after every step and fail on corruption.
     pub verify: bool,
@@ -78,11 +87,11 @@ pub fn run_pipeline(cfg: &PipelineCfg) -> Result<PipelineReport> {
         return Err(Error::InvalidArg("iterations must be >= 1".into()));
     }
     let elems = cfg.dataset.elems;
-    if elems != cfg.engine.chunk_elems() {
+    let stride_elems = cfg.engine.chunk_elems();
+    if stride_elems == 0 || elems % stride_elems != 0 {
         return Err(Error::InvalidArg(format!(
-            "dataset elems {} != engine chunk {}",
-            elems,
-            cfg.engine.chunk_elems()
+            "dataset elems {} not a multiple of engine chunk {}",
+            elems, stride_elems
         )));
     }
     let spec = IncrementationSpec {
@@ -165,7 +174,7 @@ pub fn run_pipeline(cfg: &PipelineCfg) -> Result<PipelineReport> {
         return Err(e);
     }
     let app_time = t0.elapsed().as_secs_f64();
-    // wait for Sea's flush/evict daemon to drain (no-op for plain dirs)
+    // wait for Sea's flush/evict pool to drain (no-op for plain dirs)
     cfg.vfs.sync_mgmt()?;
     let makespan = t0.elapsed().as_secs_f64();
 
@@ -185,6 +194,8 @@ pub fn run_pipeline(cfg: &PipelineCfg) -> Result<PipelineReport> {
     })
 }
 
+/// Process one block, streaming strides through fixed-size buffers: the
+/// peak buffer is one engine chunk, never the whole block.
 #[allow(clippy::too_many_arguments)]
 fn process_block(
     b: usize,
@@ -199,60 +210,75 @@ fn process_block(
     bytes_read: &AtomicU64,
     bytes_written: &AtomicU64,
 ) -> Result<()> {
-    let elems = dataset.elems;
-    // read chunk from "Lustre" (the PFS side of the mount)
+    let stride_elems = engine.chunk_elems();
+    let plan = StridePlan::new(dataset.elems, stride_elems)?;
+    let base = dataset.base_of(b);
+    // input chunk lives on the "Lustre" (PFS) side of the mount
     let input_rel = PathBuf::from(format!(
         "inputs/{}",
         dataset.blocks[b].file_name().unwrap().to_string_lossy()
     ));
-    let raw = vfs.read(&input_rel)?;
-    bytes_read.fetch_add(raw.len() as u64, Ordering::Relaxed);
-    let mut chunk = bytes_to_f32(&raw, elems)?;
-    let base = dataset.base_of(b);
 
-    for i in 1..=spec.iterations {
-        if read_back && i > 1 {
-            let prev = derived_path(prefix, spec, b, i - 1);
-            let raw = vfs.read(&prev)?;
-            bytes_read.fetch_add(raw.len() as u64, Ordering::Relaxed);
-            chunk = bytes_to_f32(&raw, elems)?;
-        }
-        // L2/L1 compute through PJRT: chunk += 1, stats on device
-        let stats = engine.step(&mut chunk)?;
-        if verify {
-            stats.certify_uniform(base + i as f32, elems).map_err(|e| {
-                Error::Integrity(format!("block {b} iter {i}: {e}"))
+    if read_back {
+        // task-per-iteration: each iteration re-reads its predecessor's
+        // file, one stride at a time
+        for i in 1..=spec.iterations {
+            let src = if i == 1 {
+                input_rel.clone()
+            } else {
+                derived_path(prefix, spec, b, i - 1)
+            };
+            let dst = derived_path(prefix, spec, b, i);
+            let moved = stream_block(vfs, &src, &dst, &plan, |_k, chunk| {
+                let stats = engine.step(chunk)?;
+                if verify {
+                    stats
+                        .certify_uniform(base + i as f32, stride_elems)
+                        .map_err(|e| Error::Integrity(format!("block {b} iter {i}: {e}")))?;
+                }
+                Ok(())
             })?;
+            bytes_read.fetch_add(moved, Ordering::Relaxed);
+            bytes_written.fetch_add(moved, Ordering::Relaxed);
+            if cleanup && i > 1 {
+                let prev = derived_path(prefix, spec, b, i - 1);
+                let _ = vfs.unlink(&prev);
+            }
         }
-        let out = derived_path(prefix, spec, b, i);
-        vfs.write(&out, &f32_to_bytes(&chunk))?;
-        bytes_written.fetch_add((elems * 4) as u64, Ordering::Relaxed);
-        if cleanup && i > 1 {
-            let prev = derived_path(prefix, spec, b, i - 1);
-            let _ = vfs.unlink(&prev);
+    } else {
+        // single task holding each stride in memory across iterations:
+        // one pass over the input, writing every iteration's file at the
+        // stride's offset (no intermediate read-backs, no D_m reads)
+        let mut outs: Vec<Box<dyn VfsFile>> = (1..=spec.iterations)
+            .map(|i| vfs.open(&derived_path(prefix, spec, b, i), OpenMode::Write))
+            .collect::<Result<_>>()?;
+        let mut src = vfs.open(&input_rel, OpenMode::Read)?;
+        let mut raw = vec![0u8; plan.stride_bytes()];
+        let mut chunk = vec![0f32; stride_elems];
+        for k in 0..plan.strides() {
+            let off = plan.offset(k);
+            src.pread_exact(&mut raw, off)?;
+            bytes_read.fetch_add(raw.len() as u64, Ordering::Relaxed);
+            bytes_to_f32_into(&raw, &mut chunk)?;
+            for (idx, out) in outs.iter_mut().enumerate() {
+                let i = idx + 1;
+                let stats = engine.step(&mut chunk)?;
+                if verify {
+                    stats
+                        .certify_uniform(base + i as f32, stride_elems)
+                        .map_err(|e| Error::Integrity(format!("block {b} iter {i}: {e}")))?;
+                }
+                f32_to_bytes_into(&chunk, &mut raw);
+                out.pwrite_all(&raw, off)?;
+                bytes_written.fetch_add(raw.len() as u64, Ordering::Relaxed);
+            }
+        }
+        drop(outs); // close writers: Sea's deferred mgmt fires here
+        if cleanup {
+            for i in 1..spec.iterations {
+                let _ = vfs.unlink(&derived_path(prefix, spec, b, i));
+            }
         }
     }
     Ok(())
-}
-
-fn bytes_to_f32(raw: &[u8], elems: usize) -> Result<Vec<f32>> {
-    if raw.len() != elems * 4 {
-        return Err(Error::Integrity(format!(
-            "chunk has {} bytes, expected {}",
-            raw.len(),
-            elems * 4
-        )));
-    }
-    Ok(raw
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
-}
-
-fn f32_to_bytes(data: &[f32]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(data.len() * 4);
-    for v in data {
-        out.extend_from_slice(&v.to_le_bytes());
-    }
-    out
 }

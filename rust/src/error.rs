@@ -1,53 +1,83 @@
 //! Crate-wide error type.
+//!
+//! `Display` / `Error` are hand-implemented (offline substitute for the
+//! `thiserror` derive, in the same spirit as `util`'s rand/serde
+//! substitutes).
 
+use std::fmt;
 use std::path::PathBuf;
 
 /// Unified error for all sea subsystems.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Underlying I/O failure from the real file system.
-    #[error("io error on {path:?}: {source}")]
     Io {
+        /// Path the operation touched.
         path: PathBuf,
-        #[source]
+        /// The originating I/O error.
         source: std::io::Error,
     },
 
     /// A path was expected to live under the Sea mountpoint.
-    #[error("path {0:?} is outside the sea mountpoint")]
     OutsideMount(PathBuf),
 
     /// File not found in any tier / backend.
-    #[error("no such file: {0:?}")]
     NotFound(PathBuf),
 
     /// No storage device has room for the requested reservation.
-    #[error("no space: need {needed} B for {path:?} (largest free {largest_free} B)")]
     NoSpace {
+        /// File being placed.
         path: PathBuf,
+        /// Bytes requested.
         needed: u64,
+        /// Largest free block across devices.
         largest_free: u64,
     },
 
     /// Configuration file / value errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Simulator protocol violations (these are bugs, not user errors).
-    #[error("simulator invariant violated: {0}")]
     Sim(String),
 
     /// PJRT / XLA runtime failures.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Workload-level integrity failure (checksum mismatch etc.).
-    #[error("integrity error: {0}")]
     Integrity(String),
 
     /// Invalid argument to a public API.
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io { path, source } => write!(f, "io error on {path:?}: {source}"),
+            Error::OutsideMount(p) => {
+                write!(f, "path {p:?} is outside the sea mountpoint")
+            }
+            Error::NotFound(p) => write!(f, "no such file: {p:?}"),
+            Error::NoSpace { path, needed, largest_free } => write!(
+                f,
+                "no space: need {needed} B for {path:?} (largest free {largest_free} B)"
+            ),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Sim(m) => write!(f, "simulator invariant violated: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Integrity(m) => write!(f, "integrity error: {m}"),
+            Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl Error {

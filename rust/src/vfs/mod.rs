@@ -1,18 +1,40 @@
-//! The interception layer: a small POSIX-ish file-system abstraction.
+//! The interception layer: a handle-based, offset-aware POSIX-ish
+//! file-system abstraction.
 //!
-//! The paper intercepts glibc calls with `LD_PRELOAD`; the library-level
-//! equivalent here is a [`Vfs`] trait every workload I/O goes through:
+//! The paper intercepts glibc calls (`open`/`read`/`write`/`lseek`/
+//! `close`) with `LD_PRELOAD`; the library-level equivalent here is the
+//! [`Vfs`] trait every workload I/O goes through. Mirroring the paper's
+//! request granularity, the core primitive is [`Vfs::open`], which yields
+//! a [`VfsFile`] handle supporting positioned I/O:
 //!
-//! * [`RealFs`] — plain `std::fs` against a root directory;
+//! * [`VfsFile::pread`] / [`VfsFile::pwrite`] — offset-addressed reads
+//!   and writes (partial-block access, streaming writes);
+//! * [`VfsFile::set_len`], [`VfsFile::fsync`], [`VfsFile::len`] — the
+//!   rest of the handle lifecycle;
+//! * dropping a handle closes it — backends may defer management work
+//!   (placement bookkeeping, flush/evict scheduling) to that point.
+//!
+//! Whole-file [`Vfs::read`] / [`Vfs::write`] remain as default-method
+//! conveniences implemented on top of `open`, so code written against
+//! the original whole-file API keeps working while hot paths migrate to
+//! bounded-buffer streaming.
+//!
+//! Backends:
+//!
+//! * [`RealFs`] — plain `std::fs` against a root directory, positioned
+//!   I/O via `FileExt`;
 //! * [`rate::RateLimitedFs`] — a decorator imposing read/write bandwidth
-//!   caps (stands in for a loaded PFS on this single machine);
+//!   caps with **per-request** byte accounting (stands in for a loaded
+//!   PFS on this single machine);
 //! * [`sea::SeaFs`] — **the paper's library**: mountpoint translation to
-//!   the fastest eligible device directory, rule-driven flush/evict via a
-//!   background daemon, prefetch support.
+//!   the fastest eligible device directory at `open`, open-handle
+//!   tracking, and rule-driven flush/evict via a multi-worker flush pool
+//!   over a sharded registry, plus prefetch support.
 //!
 //! A separate `cdylib` (`sea-interpose`) provides the literal
 //! `LD_PRELOAD` mechanism for unmodified binaries; it reuses the same
-//! translation logic.
+//! translation logic (offset ops like `pread`/`pwrite` ride on
+//! descriptors whose path was translated at `open`).
 
 pub mod rate;
 pub mod real;
@@ -24,16 +46,104 @@ pub use sea::{SeaFs, SeaFsConfig};
 
 use std::path::Path;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 
-/// Whole-file POSIX-ish operations (the granularity of the paper's
-/// workloads: scientific tools read and write whole block files).
+/// How a [`VfsFile`] handle is opened.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpenMode {
+    /// Read-only; the file must exist.
+    Read,
+    /// Create or truncate, then read/write (POSIX `O_CREAT|O_TRUNC`).
+    Write,
+    /// Create if missing, keep existing contents, read/write.
+    ReadWrite,
+}
+
+impl OpenMode {
+    /// Does this mode permit writes?
+    pub fn writable(self) -> bool {
+        !matches!(self, OpenMode::Read)
+    }
+
+    /// Does this mode truncate an existing file?
+    pub fn truncates(self) -> bool {
+        matches!(self, OpenMode::Write)
+    }
+}
+
+/// An open file handle with positioned (offset-addressed) I/O.
+///
+/// Handles are independent cursors-free views: every operation names its
+/// offset explicitly, so concurrent handles never race on a shared file
+/// position. Dropping the handle closes it; backends may run deferred
+/// management (e.g. Sea's flush/evict) at that point.
+pub trait VfsFile: Send {
+    /// Read up to `buf.len()` bytes at `off`; returns bytes read
+    /// (0 at end-of-file).
+    fn pread(&mut self, buf: &mut [u8], off: u64) -> Result<usize>;
+
+    /// Write `data` at `off`, extending the file as needed; returns
+    /// bytes written.
+    fn pwrite(&mut self, data: &[u8], off: u64) -> Result<usize>;
+
+    /// Truncate or extend the file to exactly `len` bytes.
+    fn set_len(&mut self, len: u64) -> Result<()>;
+
+    /// Durably persist the handle's data to its backing store.
+    fn fsync(&mut self) -> Result<()>;
+
+    /// Current size of the file in bytes.
+    fn len(&self) -> Result<u64>;
+
+    /// True when the file is empty.
+    fn is_empty(&self) -> Result<bool> {
+        Ok(self.len()? == 0)
+    }
+
+    /// Read exactly `buf.len()` bytes at `off`, failing on short reads.
+    fn pread_exact(&mut self, buf: &mut [u8], off: u64) -> Result<()> {
+        let mut filled = 0usize;
+        while filled < buf.len() {
+            let n = self.pread(&mut buf[filled..], off + filled as u64)?;
+            if n == 0 {
+                return Err(Error::io(
+                    "<vfs-handle>",
+                    std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        format!("short read: {filled}/{} bytes", buf.len()),
+                    ),
+                ));
+            }
+            filled += n;
+        }
+        Ok(())
+    }
+
+    /// Write all of `data` at `off`, retrying partial writes.
+    fn pwrite_all(&mut self, data: &[u8], off: u64) -> Result<()> {
+        let mut done = 0usize;
+        while done < data.len() {
+            let n = self.pwrite(&data[done..], off + done as u64)?;
+            if n == 0 {
+                return Err(Error::io(
+                    "<vfs-handle>",
+                    std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        format!("short write: {done}/{} bytes", data.len()),
+                    ),
+                ));
+            }
+            done += n;
+        }
+        Ok(())
+    }
+}
+
+/// Handle-based POSIX-ish file-system operations. Whole-file `read` /
+/// `write` are conveniences layered over [`Vfs::open`].
 pub trait Vfs: Send + Sync {
-    /// Read the entire file at `path`.
-    fn read(&self, path: &Path) -> Result<Vec<u8>>;
-
-    /// Create/overwrite the file at `path` with `data`.
-    fn write(&self, path: &Path, data: &[u8]) -> Result<()>;
+    /// Open a handle on `path` in the given mode.
+    fn open(&self, path: &Path, mode: OpenMode) -> Result<Box<dyn VfsFile>>;
 
     /// Remove the file at `path`.
     fn unlink(&self, path: &Path) -> Result<()>;
@@ -54,6 +164,30 @@ pub trait Vfs: Send + Sync {
     /// No-op for backends without daemons.
     fn sync_mgmt(&self) -> Result<()> {
         Ok(())
+    }
+
+    /// Read the entire file at `path` (convenience over [`Vfs::open`]).
+    fn read(&self, path: &Path) -> Result<Vec<u8>> {
+        let mut f = self.open(path, OpenMode::Read)?;
+        let len = f.len()? as usize;
+        let mut buf = vec![0u8; len];
+        let mut filled = 0usize;
+        while filled < len {
+            let n = f.pread(&mut buf[filled..], filled as u64)?;
+            if n == 0 {
+                break; // racing truncation: return what we got
+            }
+            filled += n;
+        }
+        buf.truncate(filled);
+        Ok(buf)
+    }
+
+    /// Create/overwrite the file at `path` with `data` (convenience over
+    /// [`Vfs::open`]).
+    fn write(&self, path: &Path, data: &[u8]) -> Result<()> {
+        let mut f = self.open(path, OpenMode::Write)?;
+        f.pwrite_all(data, 0)
     }
 }
 

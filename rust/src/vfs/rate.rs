@@ -1,17 +1,24 @@
-//! Bandwidth-limiting [`Vfs`] decorator.
+//! Bandwidth-limiting [`Vfs`] decorator with per-request accounting.
 //!
 //! On this single machine there is no Lustre to contend on, so the
 //! end-to-end examples emulate a loaded PFS by wrapping its directory in
 //! a token-bucket rate limiter: concurrent readers/writers share the
 //! configured bandwidth, which is exactly the fair-sharing behaviour the
 //! simulator models for a saturated file system.
+//!
+//! Accounting is **per request**: every [`VfsFile::pread`] /
+//! [`VfsFile::pwrite`] debits the bucket for exactly the bytes it moved,
+//! so a 64 KiB partial read costs 64 KiB — not the whole file — while a
+//! whole-file transfer (which is just one big request through the
+//! default [`Vfs::read`] / [`Vfs::write`] conveniences) pays the same
+//! total as a chunked one.
 
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::Result;
-use crate::vfs::Vfs;
+use crate::vfs::{OpenMode, Vfs, VfsFile};
 
 #[derive(Debug)]
 struct Bucket {
@@ -44,11 +51,21 @@ impl Bucket {
     }
 }
 
+fn throttle(bucket: &Mutex<Bucket>, bytes: usize) {
+    if bytes == 0 {
+        return;
+    }
+    let wait = bucket.lock().expect("bucket poisoned").take(bytes as f64);
+    if !wait.is_zero() {
+        std::thread::sleep(wait);
+    }
+}
+
 /// A [`Vfs`] decorator imposing shared read/write bandwidth caps.
 pub struct RateLimitedFs<F> {
     inner: F,
-    read_bucket: Mutex<Bucket>,
-    write_bucket: Mutex<Bucket>,
+    read_bucket: Arc<Mutex<Bucket>>,
+    write_bucket: Arc<Mutex<Bucket>>,
 }
 
 impl<F: Vfs> RateLimitedFs<F> {
@@ -57,8 +74,8 @@ impl<F: Vfs> RateLimitedFs<F> {
         assert!(read_bw > 0.0 && write_bw > 0.0);
         RateLimitedFs {
             inner,
-            read_bucket: Mutex::new(Bucket::new(read_bw)),
-            write_bucket: Mutex::new(Bucket::new(write_bw)),
+            read_bucket: Arc::new(Mutex::new(Bucket::new(read_bw))),
+            write_bucket: Arc::new(Mutex::new(Bucket::new(write_bw))),
         }
     }
 
@@ -66,26 +83,53 @@ impl<F: Vfs> RateLimitedFs<F> {
     pub fn inner(&self) -> &F {
         &self.inner
     }
+}
 
-    fn throttle(bucket: &Mutex<Bucket>, bytes: usize) {
-        let wait = bucket.lock().expect("bucket poisoned").take(bytes as f64);
-        if !wait.is_zero() {
-            std::thread::sleep(wait);
-        }
+/// Handle decorator: each positioned request pays the bucket for the
+/// bytes it actually transferred.
+struct RateLimitedFile {
+    inner: Box<dyn VfsFile>,
+    read_bucket: Arc<Mutex<Bucket>>,
+    write_bucket: Arc<Mutex<Bucket>>,
+}
+
+impl VfsFile for RateLimitedFile {
+    fn pread(&mut self, buf: &mut [u8], off: u64) -> Result<usize> {
+        let n = self.inner.pread(buf, off)?;
+        throttle(&self.read_bucket, n);
+        Ok(n)
+    }
+
+    fn pwrite(&mut self, data: &[u8], off: u64) -> Result<usize> {
+        throttle(&self.write_bucket, data.len());
+        self.inner.pwrite(data, off)
+    }
+
+    fn set_len(&mut self, len: u64) -> Result<()> {
+        self.inner.set_len(len)
+    }
+
+    fn fsync(&mut self) -> Result<()> {
+        self.inner.fsync()
+    }
+
+    fn len(&self) -> Result<u64> {
+        self.inner.len()
     }
 }
 
 impl<F: Vfs> Vfs for RateLimitedFs<F> {
-    fn read(&self, path: &Path) -> Result<Vec<u8>> {
-        let data = self.inner.read(path)?;
-        Self::throttle(&self.read_bucket, data.len());
-        Ok(data)
+    fn open(&self, path: &Path, mode: OpenMode) -> Result<Box<dyn VfsFile>> {
+        let inner = self.inner.open(path, mode)?;
+        Ok(Box::new(RateLimitedFile {
+            inner,
+            read_bucket: self.read_bucket.clone(),
+            write_bucket: self.write_bucket.clone(),
+        }))
     }
 
-    fn write(&self, path: &Path, data: &[u8]) -> Result<()> {
-        Self::throttle(&self.write_bucket, data.len());
-        self.inner.write(path, data)
-    }
+    // whole-file read/write use the trait defaults, so they route through
+    // the same per-request accounting as streamed I/O
 
     fn unlink(&self, path: &Path) -> Result<()> {
         self.inner.unlink(path)
@@ -111,7 +155,7 @@ impl<F: Vfs> Vfs for RateLimitedFs<F> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::MIB;
+    use crate::util::{KIB, MIB};
     use crate::vfs::real::RealFs;
     use crate::vfs::testutil::scratch;
 
@@ -147,6 +191,92 @@ mod tests {
         let _ = fs_.read(Path::new("a.dat")).unwrap();
         let dt = t0.elapsed().as_secs_f64();
         assert!(dt > 0.6, "dt = {dt}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn partial_reads_pay_only_their_bytes() {
+        let dir = scratch("rate_partial");
+        let fs_ = RateLimitedFs::new(
+            RealFs::new(&dir).unwrap(),
+            20.0 * MIB as f64, // 20 MiB/s reads
+            1e9,
+        );
+        fs_.write(Path::new("big.dat"), &vec![0u8; 8 * MIB as usize]).unwrap();
+        // a single 64 KiB pread from an 8 MiB file must cost ~64 KiB of
+        // budget (within burst: instant), not the whole file (~0.4 s)
+        let mut f = fs_.open(Path::new("big.dat"), OpenMode::Read).unwrap();
+        let mut buf = vec![0u8; 64 * KIB as usize];
+        let t0 = Instant::now();
+        f.pread_exact(&mut buf, MIB).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt < 0.2, "64 KiB pread cost whole-file time: {dt}s");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn elapsed_time_respects_bandwidth_cap_for_streamed_transfer() {
+        let dir = scratch("rate_cap");
+        let fs_ = RateLimitedFs::new(
+            RealFs::new(&dir).unwrap(),
+            1e9,
+            20.0 * MIB as f64, // 20 MiB/s writes
+        );
+        // 10 MiB streamed as 160 x 64 KiB pwrites: cap implies >= ~0.45 s
+        // (10 MiB minus the 1 MiB burst headroom, at 20 MiB/s)
+        let chunk = vec![7u8; 64 * KIB as usize];
+        let t0 = Instant::now();
+        {
+            let mut f = fs_.open(Path::new("s.dat"), OpenMode::Write).unwrap();
+            for k in 0..160u64 {
+                f.pwrite_all(&chunk, k * 64 * KIB).unwrap();
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt > 0.3, "streamed transfer beat the cap: dt = {dt}");
+        assert_eq!(fs_.size(Path::new("s.dat")).unwrap(), 10 * MIB);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn per_request_accounting_matches_whole_file_totals() {
+        // the same K bytes cost the same total budget whether moved as
+        // one whole-file request or as many small ones
+        let dir = scratch("rate_match");
+        let payload = vec![3u8; 4 * MIB as usize];
+
+        let whole = RateLimitedFs::new(
+            RealFs::new(dir.join("w")).unwrap(),
+            1e9,
+            20.0 * MIB as f64,
+        );
+        let t0 = Instant::now();
+        whole.write(Path::new("x.dat"), &payload).unwrap();
+        let dt_whole = t0.elapsed().as_secs_f64();
+
+        let chunked = RateLimitedFs::new(
+            RealFs::new(dir.join("c")).unwrap(),
+            1e9,
+            20.0 * MIB as f64,
+        );
+        let t0 = Instant::now();
+        {
+            let mut f = chunked.open(Path::new("x.dat"), OpenMode::Write).unwrap();
+            for (k, part) in payload.chunks(256 * KIB as usize).enumerate() {
+                f.pwrite_all(part, k as u64 * 256 * KIB).unwrap();
+            }
+        }
+        let dt_chunked = t0.elapsed().as_secs_f64();
+
+        // identical bytes land on disk...
+        assert_eq!(
+            whole.inner().read(Path::new("x.dat")).unwrap(),
+            chunked.inner().read(Path::new("x.dat")).unwrap(),
+        );
+        // ...and both pay at least the cap-implied floor:
+        // (4 MiB - 1 MiB burst) / 20 MiB/s = 0.15 s
+        assert!(dt_whole > 0.1, "whole dt = {dt_whole}");
+        assert!(dt_chunked > 0.1, "chunked dt = {dt_chunked}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,10 +1,12 @@
-//! `std::fs`-backed [`Vfs`] rooted at a directory.
+//! `std::fs`-backed [`Vfs`] rooted at a directory, with positioned I/O
+//! handles over `std::os::unix::fs::FileExt`.
 
 use std::fs;
+use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
-use crate::vfs::Vfs;
+use crate::vfs::{OpenMode, Vfs, VfsFile};
 
 /// A real directory tree; all paths are interpreted relative to `root`
 /// (absolute inputs are re-rooted by stripping the leading `/`).
@@ -32,7 +34,81 @@ impl RealFs {
     }
 }
 
+/// Handle over a real file: offset-addressed reads and writes never
+/// touch a shared cursor, so concurrent handles are race-free.
+pub struct RealFile {
+    path: PathBuf,
+    file: fs::File,
+}
+
+impl RealFile {
+    /// Open `path` (already fully resolved — no root translation) in
+    /// `mode`. Used by [`RealFs`] and by `SeaFs` for device-local files.
+    pub(crate) fn open_at(path: PathBuf, mode: OpenMode) -> Result<RealFile> {
+        if mode.writable() {
+            if let Some(dir) = path.parent() {
+                fs::create_dir_all(dir).map_err(|e| Error::io(dir, e))?;
+            }
+        }
+        let mut opts = fs::OpenOptions::new();
+        opts.read(true);
+        match mode {
+            OpenMode::Read => {}
+            OpenMode::Write => {
+                opts.write(true).create(true).truncate(true);
+            }
+            OpenMode::ReadWrite => {
+                opts.write(true).create(true);
+            }
+        }
+        let file = opts.open(&path).map_err(|e| match e.kind() {
+            std::io::ErrorKind::NotFound => Error::NotFound(path.clone()),
+            _ => Error::io(&path, e),
+        })?;
+        Ok(RealFile { path, file })
+    }
+}
+
+impl VfsFile for RealFile {
+    fn pread(&mut self, buf: &mut [u8], off: u64) -> Result<usize> {
+        self.file.read_at(buf, off).map_err(|e| Error::io(&self.path, e))
+    }
+
+    fn pwrite(&mut self, data: &[u8], off: u64) -> Result<usize> {
+        self.file
+            .write_all_at(data, off)
+            .map_err(|e| Error::io(&self.path, e))?;
+        Ok(data.len())
+    }
+
+    fn set_len(&mut self, len: u64) -> Result<()> {
+        self.file.set_len(len).map_err(|e| Error::io(&self.path, e))
+    }
+
+    fn fsync(&mut self) -> Result<()> {
+        self.file.sync_all().map_err(|e| Error::io(&self.path, e))
+    }
+
+    fn len(&self) -> Result<u64> {
+        self.file
+            .metadata()
+            .map(|m| m.len())
+            .map_err(|e| Error::io(&self.path, e))
+    }
+}
+
 impl Vfs for RealFs {
+    fn open(&self, path: &Path, mode: OpenMode) -> Result<Box<dyn VfsFile>> {
+        let p = self.resolve(path);
+        let f = RealFile::open_at(p, mode).map_err(|e| match e {
+            // report the caller's (un-resolved) path for not-found
+            Error::NotFound(_) => Error::NotFound(path.to_path_buf()),
+            other => other,
+        })?;
+        Ok(Box::new(f))
+    }
+
+    // whole-file fast paths: skip the handle round trip
     fn read(&self, path: &Path) -> Result<Vec<u8>> {
         let p = self.resolve(path);
         fs::read(&p).map_err(|e| match e.kind() {
@@ -123,6 +199,10 @@ mod tests {
             Err(Error::NotFound(_))
         ));
         assert!(matches!(
+            fs_.open(Path::new("nope"), OpenMode::Read),
+            Err(Error::NotFound(_))
+        ));
+        assert!(matches!(
             fs_.unlink(Path::new("nope")),
             Err(Error::NotFound(_))
         ));
@@ -149,6 +229,63 @@ mod tests {
         fs_.write(Path::new("d/b"), b"1").unwrap();
         fs_.write(Path::new("d/a"), b"2").unwrap();
         assert_eq!(fs_.readdir(Path::new("d")).unwrap(), vec!["a", "b"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pread_pwrite_at_offsets() {
+        let dir = scratch("realfs_prw");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let p = Path::new("h/strided.dat");
+        {
+            let mut f = fs_.open(p, OpenMode::Write).unwrap();
+            // write strides out of order: [8..12) then [0..4) then [4..8)
+            f.pwrite_all(b"CCCC", 8).unwrap();
+            f.pwrite_all(b"AAAA", 0).unwrap();
+            f.pwrite_all(b"BBBB", 4).unwrap();
+            assert_eq!(f.len().unwrap(), 12);
+        }
+        assert_eq!(fs_.read(p).unwrap(), b"AAAABBBBCCCC");
+        let mut f = fs_.open(p, OpenMode::Read).unwrap();
+        let mut mid = [0u8; 4];
+        f.pread_exact(&mut mid, 4).unwrap();
+        assert_eq!(&mid, b"BBBB");
+        // pread past EOF returns 0
+        let mut tail = [0u8; 4];
+        assert_eq!(f.pread(&mut tail, 100).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn readwrite_preserves_write_truncates() {
+        let dir = scratch("realfs_rw");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let p = Path::new("f.dat");
+        fs_.write(p, b"0123456789").unwrap();
+        {
+            let mut f = fs_.open(p, OpenMode::ReadWrite).unwrap();
+            assert_eq!(f.len().unwrap(), 10, "ReadWrite keeps contents");
+            f.pwrite_all(b"XY", 2).unwrap();
+            f.set_len(6).unwrap();
+            f.fsync().unwrap();
+        }
+        assert_eq!(fs_.read(p).unwrap(), b"01XY45");
+        let mut f = fs_.open(p, OpenMode::Write).unwrap();
+        assert_eq!(f.len().unwrap(), 0, "Write truncates");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn whole_file_defaults_match_fast_paths() {
+        let dir = scratch("realfs_dflt");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let p = Path::new("d.dat");
+        // trait-default write via a handle, fast-path read back
+        {
+            let mut f = fs_.open(p, OpenMode::Write).unwrap();
+            f.pwrite_all(b"same-bytes", 0).unwrap();
+        }
+        assert_eq!(fs_.read(p).unwrap(), b"same-bytes");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -8,23 +8,45 @@
 //! paths outside the mountpoint pass through to the PFS untouched —
 //! exactly the interception semantics of the paper's glibc wrappers.
 //!
-//! A single background flush-and-evict daemon per mount (paper §5.1)
-//! applies the Table 1 modes after each write, asynchronously:
-//! Copy → replicate to PFS; Move → replicate then drop local;
-//! Remove → drop local without persisting.
+//! Placement happens at [`Vfs::open`]: a writer handle reserves a device
+//! slot, debits space as the file grows, and only when the **last**
+//! writer handle closes is the file handed to memory management. The
+//! Table 1 modes (Copy → replicate to PFS; Move → replicate then drop
+//! local; Remove → drop without persisting) are applied asynchronously by
+//! a **flush pool** of worker threads (a multi-worker generalisation of
+//! the paper's §5.1 daemon) so several files flush to the PFS in
+//! parallel. File metadata lives in an N-way **sharded registry** (one
+//! mutex per shard) so concurrent open/read/close traffic on different
+//! files never serialises on a single global lock.
+//!
+//! Flush jobs carry the registry entry's *generation*: a racing
+//! overwrite bumps the generation, so a stale job is discarded instead of
+//! flushing half-overwritten bytes, and per-file flush serialisation
+//! keeps two generations of the same file from interleaving on the PFS.
 
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::fs;
+use std::hash::{Hash, Hasher};
 use std::path::{Path, PathBuf};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
 use crate::hierarchy::{select_device, DeviceRef, Hierarchy, SelectCfg, SpaceAccountant};
 use crate::placement::rules::{MgmtMode, RuleSet};
 use crate::util::Rng;
-use crate::vfs::Vfs;
+use crate::vfs::real::RealFile;
+use crate::vfs::{OpenMode, Vfs, VfsFile};
+
+/// Registry shards: enough to keep 2× typical worker counts from
+/// colliding, small enough that readdir's full sweep stays cheap.
+const REGISTRY_SHARDS: usize = 16;
+
+/// Flush pool size (the paper used a single daemon; parallel flushing
+/// overlaps several PFS transfers).
+const FLUSH_WORKERS: usize = 4;
 
 /// Configuration of a real Sea mount.
 pub struct SeaFsConfig {
@@ -49,27 +71,154 @@ struct Entry {
     dev: DeviceRef,
     size: u64,
     flushed: bool,
+    /// Content version: bumped on every (re)placement or writer open;
+    /// flush jobs carry the generation they were enqueued for and stand
+    /// down when it no longer matches (a newer write superseded them).
+    generation: u64,
+    /// Entry identity: assigned when the entry is inserted and never
+    /// changed in place. Handles record the epoch of the entry their
+    /// writer count lives in, so a handle orphaned by `drop_local`
+    /// (entry replaced) never touches the superseding entry, while
+    /// concurrent in-place writers (who share one entry across
+    /// generation bumps) still decrement correctly on close.
+    epoch: u64,
+    /// Open writer handles; management is deferred until this drops to 0.
+    writers: u32,
 }
 
-enum DaemonMsg {
-    Act { mode: MgmtMode, rel: String },
-    Drain(mpsc::Sender<()>),
-    Shutdown,
+/// One unit of deferred memory management.
+struct Job {
+    mode: MgmtMode,
+    rel: String,
+    gen: u64,
+}
+
+/// N-way sharded `rel -> Entry` map: per-shard mutexes instead of one
+/// global lock.
+struct Registry {
+    shards: Vec<Mutex<HashMap<String, Entry>>>,
+}
+
+impl Registry {
+    fn new(n: usize) -> Registry {
+        Registry {
+            shards: (0..n.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn shard(&self, key: &str) -> &Mutex<HashMap<String, Entry>> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    fn get(&self, key: &str) -> Option<Entry> {
+        self.shard(key).lock().expect("registry poisoned").get(key).cloned()
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.shard(key).lock().expect("registry poisoned").contains_key(key)
+    }
+
+    fn insert(&self, key: String, e: Entry) {
+        self.shard(&key).lock().expect("registry poisoned").insert(key, e);
+    }
+
+    fn remove(&self, key: &str) -> Option<Entry> {
+        self.shard(key).lock().expect("registry poisoned").remove(key)
+    }
+
+    /// Remove `key` only when `pred` holds for its current entry.
+    fn remove_if(&self, key: &str, pred: impl FnOnce(&Entry) -> bool) -> Option<Entry> {
+        let mut m = self.shard(key).lock().expect("registry poisoned");
+        let matches = match m.get(key) {
+            Some(e) => pred(e),
+            None => false,
+        };
+        if matches {
+            m.remove(key)
+        } else {
+            None
+        }
+    }
+
+    /// Mutate the entry for `key` under its shard lock, returning the
+    /// closure's result (or `None` when absent).
+    fn update<R>(&self, key: &str, f: impl FnOnce(&mut Entry) -> R) -> Option<R> {
+        let mut m = self.shard(key).lock().expect("registry poisoned");
+        m.get_mut(key).map(f)
+    }
+
+    /// Snapshot of every key across all shards.
+    fn keys(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            out.extend(s.lock().expect("registry poisoned").keys().cloned());
+        }
+        out
+    }
 }
 
 struct Shared {
     hierarchy: Hierarchy,
     accountant: SpaceAccountant,
     device_dirs: Vec<PathBuf>,
-    registry: Mutex<HashMap<String, Entry>>,
+    registry: Registry,
     pfs: Arc<dyn Vfs>,
+    rules: RuleSet,
     /// Mgmt statistics: (flushes, evictions).
     counters: Mutex<(u64, u64)>,
+    /// Monotonic generation source for registry entries.
+    generations: AtomicU64,
+    /// Flush-pool inbox; `None` once the mount is dropped.
+    tx: Mutex<Option<mpsc::Sender<Job>>>,
+    /// Jobs enqueued but not yet fully processed.
+    pending: Mutex<u64>,
+    idle: Condvar,
+    /// Per-file flush serialisation (two generations of the same file
+    /// must not interleave their PFS writes).
+    flush_locks: Mutex<HashMap<String, Arc<Mutex<()>>>>,
 }
 
 impl Shared {
     fn local_path(&self, dev: DeviceRef, rel: &str) -> PathBuf {
         self.device_dirs[dev].join(rel)
+    }
+
+    fn next_gen(&self) -> u64 {
+        self.generations.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Hand `rel` to the flush pool (no-op for `Keep`).
+    fn enqueue_mgmt(&self, mode: MgmtMode, rel: &str, gen: u64) {
+        if matches!(mode, MgmtMode::Keep) {
+            return;
+        }
+        let tx = self.tx.lock().expect("tx poisoned");
+        if let Some(tx) = tx.as_ref() {
+            *self.pending.lock().expect("pending poisoned") += 1;
+            let sent = tx.send(Job { mode, rel: rel.to_string(), gen }).is_ok();
+            if !sent {
+                *self.pending.lock().expect("pending poisoned") -= 1;
+                self.idle.notify_all();
+            }
+        }
+    }
+
+    fn flush_lock(&self, rel: &str) -> Arc<Mutex<()>> {
+        let mut m = self.flush_locks.lock().expect("flush locks poisoned");
+        m.entry(rel.to_string())
+            .or_insert_with(|| Arc::new(Mutex::new(())))
+            .clone()
+    }
+
+    fn release_flush_lock(&self, rel: &str) {
+        let mut m = self.flush_locks.lock().expect("flush locks poisoned");
+        if let Some(a) = m.get(rel) {
+            if Arc::strong_count(a) == 1 {
+                m.remove(rel);
+            }
+        }
     }
 }
 
@@ -78,14 +227,12 @@ pub struct SeaFs {
     mountpoint: PathBuf,
     shared: Arc<Shared>,
     select: SelectCfg,
-    rules: RuleSet,
     rng: Mutex<Rng>,
-    daemon_tx: Mutex<mpsc::Sender<DaemonMsg>>,
-    daemon: Mutex<Option<JoinHandle<()>>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl SeaFs {
-    /// Mount: builds the hierarchy, spawns the flush-and-evict daemon.
+    /// Mount: builds the hierarchy, spawns the flush pool.
     pub fn mount(cfg: SeaFsConfig) -> Result<SeaFs> {
         if cfg.devices.is_empty() {
             return Err(Error::Config(
@@ -100,20 +247,32 @@ impl SeaFs {
             device_dirs.push(dir.clone());
         }
         let accountant = SpaceAccountant::new(&hierarchy);
+        let (tx, rx) = mpsc::channel::<Job>();
         let shared = Arc::new(Shared {
             hierarchy,
             accountant,
             device_dirs,
-            registry: Mutex::new(HashMap::new()),
+            registry: Registry::new(REGISTRY_SHARDS),
             pfs: cfg.pfs,
+            rules: cfg.rules,
             counters: Mutex::new((0, 0)),
+            generations: AtomicU64::new(0),
+            tx: Mutex::new(Some(tx)),
+            pending: Mutex::new(0),
+            idle: Condvar::new(),
+            flush_locks: Mutex::new(HashMap::new()),
         });
-        let (tx, rx) = mpsc::channel::<DaemonMsg>();
-        let dshared = shared.clone();
-        let daemon = std::thread::Builder::new()
-            .name("sea-flush-evict".into())
-            .spawn(move || daemon_loop(dshared, rx))
-            .map_err(|e| Error::io("<thread>", e))?;
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(FLUSH_WORKERS);
+        for w in 0..FLUSH_WORKERS {
+            let sh = shared.clone();
+            let rx = rx.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("sea-flush-{w}"))
+                .spawn(move || flush_worker(sh, rx))
+                .map_err(|e| Error::io("<thread>", e))?;
+            workers.push(h);
+        }
         Ok(SeaFs {
             mountpoint: cfg.mountpoint,
             shared,
@@ -121,10 +280,8 @@ impl SeaFs {
                 max_file_size: cfg.max_file_size,
                 parallel_procs: cfg.parallel_procs,
             },
-            rules: cfg.rules,
             rng: Mutex::new(Rng::new(cfg.seed)),
-            daemon_tx: Mutex::new(tx),
-            daemon: Mutex::new(Some(daemon)),
+            workers: Mutex::new(workers),
         })
     }
 
@@ -137,12 +294,13 @@ impl SeaFs {
 
     /// Where a mount-relative file currently lives (diagnostics).
     pub fn device_of(&self, rel: &str) -> Option<String> {
-        let reg = self.shared.registry.lock().expect("registry poisoned");
-        reg.get(rel)
+        self.shared
+            .registry
+            .get(rel)
             .map(|e| self.shared.hierarchy.info(e.dev).name.clone())
     }
 
-    /// (flushes, evictions) executed by the daemon so far.
+    /// (flushes, evictions) executed by the flush pool so far.
     pub fn mgmt_counters(&self) -> (u64, u64) {
         *self.shared.counters.lock().expect("counters poisoned")
     }
@@ -154,7 +312,7 @@ impl SeaFs {
         let mut n = 0;
         for name in names {
             let rel = if dir.is_empty() { name.clone() } else { format!("{dir}/{name}") };
-            if !self.rules.prefetch.matches(&rel) {
+            if !self.shared.rules.prefetch.matches(&rel) {
                 continue;
             }
             let data = self.shared.pfs.read(Path::new(&rel))?;
@@ -165,16 +323,17 @@ impl SeaFs {
         Ok(n)
     }
 
-    /// Core placement: write `data` to the fastest eligible device.
-    /// Returns the chosen device, or `None` when it fell through to the
-    /// PFS. `already_flushed` marks prefetched inputs (they came *from*
-    /// the PFS, so eviction is always safe).
+    /// Core whole-file placement: write `data` to the fastest eligible
+    /// device. Returns the chosen device and registry generation, or
+    /// `None` when it fell through to the PFS. `already_flushed` marks
+    /// prefetched inputs (they came *from* the PFS, so eviction is
+    /// always safe).
     fn place_and_write(
         &self,
         rel: &str,
         data: &[u8],
         already_flushed: bool,
-    ) -> Result<Option<DeviceRef>> {
+    ) -> Result<Option<(DeviceRef, u64)>> {
         let sh = &self.shared;
         // overwrite: free the previous local copy first
         self.drop_local(rel)?;
@@ -194,11 +353,19 @@ impl SeaFs {
                     fs::create_dir_all(d).map_err(|e| Error::io(d, e))?;
                 }
                 fs::write(&p, data).map_err(|e| Error::io(&p, e))?;
-                sh.registry.lock().expect("registry poisoned").insert(
+                let gen = sh.next_gen();
+                sh.registry.insert(
                     rel.to_string(),
-                    Entry { dev, size: data.len() as u64, flushed: already_flushed },
+                    Entry {
+                        dev,
+                        size: data.len() as u64,
+                        flushed: already_flushed,
+                        generation: gen,
+                        epoch: gen,
+                        writers: 0,
+                    },
                 );
-                Ok(Some(dev))
+                Ok(Some((dev, gen)))
             }
             None => {
                 sh.pfs.write(Path::new(rel), data)?;
@@ -207,10 +374,153 @@ impl SeaFs {
         }
     }
 
+    /// Open a writer handle on a mount-relative path: place at open,
+    /// debit space as the file grows, defer mgmt to the last close.
+    ///
+    /// Eligibility at open uses the declared `p·F` floor; a stream that
+    /// then outgrows the device fails that `pwrite` with `NoSpace`
+    /// rather than spilling mid-file to the PFS (whole-file `write`
+    /// does fall through — it knows its size up front). Mid-stream
+    /// spill is a tracked follow-on (ROADMAP "VFS layers").
+    fn open_writer(&self, rel: &str, mode: OpenMode) -> Result<Box<dyn VfsFile>> {
+        let sh = &self.shared;
+        if mode == OpenMode::ReadWrite {
+            // update an existing local copy in place: the entry (and its
+            // epoch) is shared with any other open writers
+            let gen = sh.next_gen();
+            let found = sh.registry.update(rel, |e| {
+                e.writers += 1;
+                e.flushed = false; // contents are about to change
+                e.generation = gen;
+                (e.dev, e.epoch)
+            });
+            if let Some((dev, epoch)) = found {
+                let local = sh.local_path(dev, rel);
+                match RealFile::open_at(local, OpenMode::ReadWrite) {
+                    Ok(file) => {
+                        return Ok(Box::new(SeaFile {
+                            shared: sh.clone(),
+                            rel: rel.to_string(),
+                            dev,
+                            epoch,
+                            file,
+                        }))
+                    }
+                    Err(e) => {
+                        // roll the writer count back so mgmt isn't pinned
+                        sh.registry.update(rel, |en| {
+                            if en.epoch == epoch {
+                                en.writers = en.writers.saturating_sub(1);
+                            }
+                        });
+                        return Err(e);
+                    }
+                }
+            }
+            if sh.pfs.exists(Path::new(rel)) {
+                // no local copy: update the PFS-resident file in place
+                return sh.pfs.open(Path::new(rel), mode);
+            }
+            // brand-new file: fall through to placement
+        }
+        self.drop_local(rel)?;
+        let mut rng = self.rng.lock().expect("rng poisoned");
+        // eligibility uses the p·F floor; actual bytes are debited as
+        // the handle grows the file
+        let pick = select_device(&sh.hierarchy, &sh.accountant, &self.select, 0, &mut rng);
+        drop(rng);
+        match pick {
+            Some(dev) => {
+                let p = sh.local_path(dev, rel);
+                let file = RealFile::open_at(p, OpenMode::Write)?;
+                let gen = sh.next_gen();
+                sh.registry.insert(
+                    rel.to_string(),
+                    Entry {
+                        dev,
+                        size: 0,
+                        flushed: false,
+                        generation: gen,
+                        epoch: gen,
+                        writers: 1,
+                    },
+                );
+                Ok(Box::new(SeaFile {
+                    shared: sh.clone(),
+                    rel: rel.to_string(),
+                    dev,
+                    epoch: gen,
+                    file,
+                }))
+            }
+            None => sh.pfs.open(Path::new(rel), OpenMode::Write),
+        }
+    }
+
+    /// `unlink` body; caller holds the per-file flush lock for `rel`.
+    fn unlink_locked(&self, path: &Path, rel: &str) -> Result<()> {
+        let had_local = self.shared.registry.contains(rel);
+        self.drop_local(rel)?;
+        // also remove a flushed/PFS copy if present
+        let on_pfs = self.shared.pfs.exists(Path::new(rel));
+        if on_pfs {
+            self.shared.pfs.unlink(Path::new(rel))?;
+        }
+        if had_local || on_pfs {
+            Ok(())
+        } else {
+            Err(Error::NotFound(path.to_path_buf()))
+        }
+    }
+
+    /// `rename` body; caller holds the per-file flush lock for `rf`.
+    fn rename_locked(&self, rf: &str, rt: &str) -> Result<()> {
+        // open writer handles key their registry updates by the old
+        // path; moving the entry out from under them would strand their
+        // writer counts, so refuse while any are open
+        let moved = self.shared.registry.remove_if(rf, |e| e.writers == 0);
+        match moved {
+            Some(e) => {
+                // rename-over-existing replaces the destination: drop its
+                // local copy (crediting its space) before the insert, or
+                // the old entry's bytes leak from the ledger forever
+                self.drop_local(rt)?;
+                let (dev, flushed, gen) = (e.dev, e.flushed, e.generation);
+                self.shared.registry.insert(rt.to_string(), e);
+                let pf = self.shared.local_path(dev, rf);
+                let pt = self.shared.local_path(dev, rt);
+                if let Some(d) = pt.parent() {
+                    fs::create_dir_all(d).map_err(|e| Error::io(d, e))?;
+                }
+                fs::rename(&pf, &pt).map_err(|e| Error::io(&pf, e))?;
+                if flushed && self.shared.pfs.exists(Path::new(rf)) {
+                    // a Copy-mode flush left a PFS replica under the old
+                    // name — move it along too
+                    self.shared.pfs.rename(Path::new(rf), Path::new(rt))?;
+                } else if !flushed {
+                    // pending mgmt enqueued under the old name was
+                    // dropped with the key; re-enqueue for the new
+                    let mode = self.shared.rules.mode_for(rt);
+                    self.shared.enqueue_mgmt(mode, rt, gen);
+                }
+                Ok(())
+            }
+            None if self.shared.registry.contains(rf) => Err(Error::InvalidArg(format!(
+                "rename {rf:?}: open writer handles pin the old name"
+            ))),
+            None => {
+                self.shared.pfs.rename(Path::new(rf), Path::new(rt))?;
+                // a pre-existing local copy under the destination name
+                // would shadow the renamed PFS file on reads — drop it
+                self.drop_local(rt)
+            }
+        }
+    }
+
     /// Remove the local copy of `rel` if any, crediting its space.
     fn drop_local(&self, rel: &str) -> Result<()> {
         let sh = &self.shared;
-        let old = sh.registry.lock().expect("registry poisoned").remove(rel);
+        let old = sh.registry.remove(rel);
         if let Some(e) = old {
             let p = sh.local_path(e.dev, rel);
             match fs::remove_file(&p) {
@@ -224,93 +534,263 @@ impl SeaFs {
     }
 }
 
-fn daemon_loop(sh: Arc<Shared>, rx: mpsc::Receiver<DaemonMsg>) {
-    // One sequential daemon per mount, as in the paper (§5.1): it is the
-    // only flusher, so app threads never pay the PFS write cost in-line.
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            DaemonMsg::Shutdown => break,
-            DaemonMsg::Drain(ack) => {
-                let _ = ack.send(());
-            }
-            DaemonMsg::Act { mode, rel } => {
-                let entry = {
-                    let reg = sh.registry.lock().expect("registry poisoned");
-                    reg.get(&rel).cloned()
-                };
-                let Some(entry) = entry else { continue };
-                let local = sh.local_path(entry.dev, &rel);
-                let flush = matches!(mode, MgmtMode::Copy | MgmtMode::Move);
-                let evict = matches!(mode, MgmtMode::Remove | MgmtMode::Move);
-                if flush && !entry.flushed {
-                    if let Ok(data) = fs::read(&local) {
-                        if sh.pfs.write(Path::new(&rel), &data).is_ok() {
-                            let mut reg = sh.registry.lock().expect("registry poisoned");
-                            if let Some(e) = reg.get_mut(&rel) {
-                                e.flushed = true;
-                            }
-                            sh.counters.lock().expect("counters").0 += 1;
-                        }
-                    }
+/// Writer handle on a device-local file: grows the registry entry (and
+/// the space ledger) as bytes land, and triggers deferred management
+/// when the last writer closes.
+struct SeaFile {
+    shared: Arc<Shared>,
+    rel: String,
+    dev: DeviceRef,
+    /// Epoch of the entry this handle's writer count lives in; a
+    /// mismatch means the entry was replaced (`drop_local`) and this
+    /// handle's file is an orphaned inode — writes still land there,
+    /// but registry and ledger must not be touched.
+    epoch: u64,
+    file: RealFile,
+}
+
+impl SeaFile {
+    /// Reserve registry/ledger space up to `end` bytes. Size update and
+    /// ledger debit happen together under the entry's shard lock, so a
+    /// failed reservation never has to roll back a size a concurrent
+    /// handle may have extended in the meantime. On exhaustion this is a
+    /// hard error (no mid-stream PFS spill — see `open_writer`).
+    fn reserve_to(&self, end: u64) -> Result<()> {
+        let sh = &self.shared;
+        sh.registry
+            .update(&self.rel, |e| {
+                if e.epoch != self.epoch || end <= e.size {
+                    return Ok(()); // superseded or already reserved
                 }
-                if evict {
-                    // Remove-mode files are dropped unconditionally (the
-                    // user declared them disposable); Move-mode files
-                    // must have been flushed first.
-                    let safe = match mode {
-                        MgmtMode::Remove => true,
-                        _ => sh
-                            .registry
-                            .lock()
-                            .expect("registry poisoned")
-                            .get(&rel)
-                            .map(|e| e.flushed)
-                            .unwrap_or(false),
-                    };
-                    if safe {
-                        let removed = sh.registry.lock().expect("registry poisoned").remove(&rel);
-                        if let Some(e) = removed {
-                            let _ = fs::remove_file(sh.local_path(e.dev, &rel));
-                            sh.accountant.credit(e.dev, e.size);
-                            sh.counters.lock().expect("counters").1 += 1;
-                        }
-                    }
+                let d = end - e.size;
+                if !sh.accountant.try_debit(self.dev, d, 0) {
+                    return Err(Error::NoSpace {
+                        path: PathBuf::from(&self.rel),
+                        needed: d,
+                        largest_free: sh.accountant.largest_free(),
+                    });
                 }
-            }
+                e.size = end;
+                Ok(())
+            })
+            .unwrap_or(Ok(()))
+    }
+}
+
+impl VfsFile for SeaFile {
+    fn pread(&mut self, buf: &mut [u8], off: u64) -> Result<usize> {
+        self.file.pread(buf, off)
+    }
+
+    fn pwrite(&mut self, data: &[u8], off: u64) -> Result<usize> {
+        if data.is_empty() {
+            return Ok(0);
+        }
+        self.reserve_to(off + data.len() as u64)?;
+        self.file.pwrite(data, off)
+    }
+
+    fn set_len(&mut self, len: u64) -> Result<()> {
+        let sh = &self.shared;
+        // size update and ledger adjustment are atomic under the shard
+        // lock, like reserve_to
+        sh.registry
+            .update(&self.rel, |e| {
+                if e.epoch != self.epoch {
+                    return Ok(()); // superseded: no accounting
+                }
+                if len > e.size {
+                    let d = len - e.size;
+                    if !sh.accountant.try_debit(self.dev, d, 0) {
+                        return Err(Error::NoSpace {
+                            path: PathBuf::from(&self.rel),
+                            needed: d,
+                            largest_free: sh.accountant.largest_free(),
+                        });
+                    }
+                } else {
+                    sh.accountant.credit(self.dev, e.size - len);
+                }
+                e.size = len;
+                Ok(())
+            })
+            .unwrap_or(Ok(()))?;
+        self.file.set_len(len)
+    }
+
+    fn fsync(&mut self) -> Result<()> {
+        self.file.fsync()
+    }
+
+    fn len(&self) -> Result<u64> {
+        self.file.len()
+    }
+}
+
+impl Drop for SeaFile {
+    fn drop(&mut self) {
+        let sh = &self.shared;
+        // Membership is by entry identity (epoch), not content
+        // generation: a concurrent in-place writer bumps the generation
+        // but shares this entry, so the count must still drop; a replaced
+        // entry (drop_local) took this handle's count with it, so the
+        // superseding entry must not be touched. The last closer enqueues
+        // with the entry's *current* generation so the job matches
+        // whatever the final writer left behind.
+        let mgmt = sh
+            .registry
+            .update(&self.rel, |e| {
+                if e.epoch != self.epoch {
+                    return None; // superseded by a newer placement
+                }
+                e.writers = e.writers.saturating_sub(1);
+                if e.writers == 0 {
+                    Some(e.generation)
+                } else {
+                    None
+                }
+            })
+            .flatten();
+        if let Some(gen) = mgmt {
+            let mode = sh.rules.mode_for(&self.rel);
+            sh.enqueue_mgmt(mode, &self.rel, gen);
+        }
+    }
+}
+
+fn flush_worker(sh: Arc<Shared>, rx: Arc<Mutex<mpsc::Receiver<Job>>>) {
+    loop {
+        // hold the inbox lock only while dequeuing; processing overlaps
+        // across the pool
+        let job = {
+            let guard = rx.lock().expect("rx poisoned");
+            guard.recv()
+        };
+        let Ok(job) = job else { break };
+        process_job(&sh, &job);
+        let mut p = sh.pending.lock().expect("pending poisoned");
+        *p -= 1;
+        sh.idle.notify_all();
+    }
+}
+
+fn process_job(sh: &Shared, job: &Job) {
+    // serialise per file so two generations never interleave on the PFS
+    let lk = sh.flush_lock(&job.rel);
+    {
+        let _file_guard = lk.lock().expect("flush lock poisoned");
+        run_job(sh, job);
+    }
+    drop(lk);
+    sh.release_flush_lock(&job.rel);
+}
+
+fn run_job(sh: &Shared, job: &Job) {
+    let Some(entry) = sh.registry.get(&job.rel) else { return };
+    // A newer write superseded this job (it enqueued its own), or a
+    // writer handle is still open (its close will re-enqueue): stand down.
+    if entry.generation != job.gen || entry.writers > 0 {
+        return;
+    }
+    let local = sh.local_path(entry.dev, &job.rel);
+    let flush = matches!(job.mode, MgmtMode::Copy | MgmtMode::Move);
+    let evict = matches!(job.mode, MgmtMode::Remove | MgmtMode::Move);
+    if flush && !entry.flushed {
+        let Ok(data) = fs::read(&local) else { return };
+        // a racing overwrite may have dropped and recreated the local
+        // file mid-read: only flush bytes whose size matches the entry
+        if data.len() as u64 != entry.size {
+            return;
+        }
+        if sh.pfs.write(Path::new(&job.rel), &data).is_err() {
+            return;
+        }
+        let confirmed = sh
+            .registry
+            .update(&job.rel, |e| {
+                if e.generation == job.gen {
+                    e.flushed = true;
+                    true
+                } else {
+                    false
+                }
+            })
+            .unwrap_or(false);
+        if !confirmed {
+            return; // superseded mid-flush: don't count, don't evict
+        }
+        sh.counters.lock().expect("counters poisoned").0 += 1;
+    }
+    if evict {
+        // Remove-mode files are dropped unconditionally (the user
+        // declared them disposable); Move-mode files must have been
+        // flushed first. Either way the generation must still match.
+        let removed = sh.registry.remove_if(&job.rel, |e| {
+            e.generation == job.gen
+                && e.writers == 0
+                && (matches!(job.mode, MgmtMode::Remove) || e.flushed)
+        });
+        if let Some(e) = removed {
+            let _ = fs::remove_file(sh.local_path(e.dev, &job.rel));
+            sh.accountant.credit(e.dev, e.size);
+            sh.counters.lock().expect("counters poisoned").1 += 1;
         }
     }
 }
 
 impl Drop for SeaFs {
     fn drop(&mut self) {
-        let _ = self
-            .daemon_tx
-            .lock()
-            .expect("tx poisoned")
-            .send(DaemonMsg::Shutdown);
-        if let Some(h) = self.daemon.lock().expect("daemon poisoned").take() {
+        // closing the inbox lets the pool drain the queue and exit
+        *self.shared.tx.lock().expect("tx poisoned") = None;
+        for h in self.workers.lock().expect("workers poisoned").drain(..) {
             let _ = h.join();
         }
     }
 }
 
 impl Vfs for SeaFs {
+    fn open(&self, path: &Path, mode: OpenMode) -> Result<Box<dyn VfsFile>> {
+        match self.rel_of(path) {
+            None => self.shared.pfs.open(path, mode),
+            Some(rel) => match mode {
+                OpenMode::Read => match self.shared.registry.get(&rel) {
+                    Some(e) => {
+                        let p = self.shared.local_path(e.dev, &rel);
+                        match RealFile::open_at(p, OpenMode::Read) {
+                            Ok(f) => Ok(Box::new(f)),
+                            // evicted between lookup and open: the flush
+                            // that preceded eviction put a PFS copy there
+                            Err(Error::NotFound(_)) => {
+                                self.shared.pfs.open(Path::new(&rel), OpenMode::Read)
+                            }
+                            Err(e) => Err(e),
+                        }
+                    }
+                    None => self.shared.pfs.open(Path::new(&rel), OpenMode::Read),
+                },
+                OpenMode::Write | OpenMode::ReadWrite => self.open_writer(&rel, mode),
+            },
+        }
+    }
+
     fn read(&self, path: &Path) -> Result<Vec<u8>> {
         match self.rel_of(path) {
             None => self.shared.pfs.read(path),
-            Some(rel) => {
-                let entry = {
-                    let reg = self.shared.registry.lock().expect("registry poisoned");
-                    reg.get(&rel).cloned()
-                };
-                match entry {
-                    Some(e) => {
-                        let p = self.shared.local_path(e.dev, &rel);
-                        fs::read(&p).map_err(|err| Error::io(&p, err))
+            Some(rel) => match self.shared.registry.get(&rel) {
+                Some(e) => {
+                    let p = self.shared.local_path(e.dev, &rel);
+                    match fs::read(&p) {
+                        Ok(d) => Ok(d),
+                        // evicted between lookup and read: fall through
+                        // to the flushed PFS copy
+                        Err(err) if err.kind() == std::io::ErrorKind::NotFound => {
+                            self.shared.pfs.read(Path::new(&rel))
+                        }
+                        Err(err) => Err(Error::io(&p, err)),
                     }
-                    None => self.shared.pfs.read(Path::new(&rel)),
                 }
-            }
+                None => self.shared.pfs.read(Path::new(&rel)),
+            },
         }
     }
 
@@ -318,14 +798,9 @@ impl Vfs for SeaFs {
         match self.rel_of(path) {
             None => self.shared.pfs.write(path, data),
             Some(rel) => {
-                self.place_and_write(&rel, data, false)?;
-                let mode = self.rules.mode_for(&rel);
-                if mode != MgmtMode::Keep {
-                    let _ = self
-                        .daemon_tx
-                        .lock()
-                        .expect("tx poisoned")
-                        .send(DaemonMsg::Act { mode, rel });
+                if let Some((_dev, gen)) = self.place_and_write(&rel, data, false)? {
+                    let mode = self.shared.rules.mode_for(&rel);
+                    self.shared.enqueue_mgmt(mode, &rel, gen);
                 }
                 Ok(())
             }
@@ -336,21 +811,18 @@ impl Vfs for SeaFs {
         match self.rel_of(path) {
             None => self.shared.pfs.unlink(path),
             Some(rel) => {
-                let had_local = {
-                    let reg = self.shared.registry.lock().expect("registry poisoned");
-                    reg.contains_key(&rel)
+                // serialise with the flush pool: an in-flight flush of
+                // `rel` must finish (or stand down) before we decide
+                // whether a PFS copy exists, or a completing flush could
+                // recreate the file on the PFS after this unlink
+                let lk = self.shared.flush_lock(&rel);
+                let res = {
+                    let _guard = lk.lock().expect("flush lock poisoned");
+                    self.unlink_locked(path, &rel)
                 };
-                self.drop_local(&rel)?;
-                // also remove a flushed/PFS copy if present
-                let on_pfs = self.shared.pfs.exists(Path::new(&rel));
-                if on_pfs {
-                    self.shared.pfs.unlink(Path::new(&rel))?;
-                }
-                if had_local || on_pfs {
-                    Ok(())
-                } else {
-                    Err(Error::NotFound(path.to_path_buf()))
-                }
+                drop(lk);
+                self.shared.release_flush_lock(&rel);
+                res
             }
         }
     }
@@ -359,11 +831,7 @@ impl Vfs for SeaFs {
         match self.rel_of(path) {
             None => self.shared.pfs.exists(path),
             Some(rel) => {
-                self.shared
-                    .registry
-                    .lock()
-                    .expect("registry poisoned")
-                    .contains_key(&rel)
+                self.shared.registry.contains(&rel)
                     || self.shared.pfs.exists(Path::new(&rel))
             }
         }
@@ -372,41 +840,40 @@ impl Vfs for SeaFs {
     fn size(&self, path: &Path) -> Result<u64> {
         match self.rel_of(path) {
             None => self.shared.pfs.size(path),
-            Some(rel) => {
-                let entry = {
-                    let reg = self.shared.registry.lock().expect("registry poisoned");
-                    reg.get(&rel).cloned()
-                };
-                match entry {
-                    Some(e) => Ok(e.size),
-                    None => self.shared.pfs.size(Path::new(&rel)),
-                }
-            }
+            Some(rel) => match self.shared.registry.get(&rel) {
+                Some(e) => Ok(e.size),
+                None => self.shared.pfs.size(Path::new(&rel)),
+            },
         }
     }
 
     fn rename(&self, from: &Path, to: &Path) -> Result<()> {
         match (self.rel_of(from), self.rel_of(to)) {
             (Some(rf), Some(rt)) => {
-                let moved = {
-                    let mut reg = self.shared.registry.lock().expect("registry poisoned");
-                    reg.remove(&rf).map(|e| {
-                        let had = (e.dev, e.size, e.flushed);
-                        reg.insert(rt.clone(), e);
-                        had
-                    })
-                };
-                match moved {
-                    Some((dev, _, _)) => {
-                        let pf = self.shared.local_path(dev, &rf);
-                        let pt = self.shared.local_path(dev, &rt);
-                        if let Some(d) = pt.parent() {
-                            fs::create_dir_all(d).map_err(|e| Error::io(d, e))?;
-                        }
-                        fs::rename(&pf, &pt).map_err(|e| Error::io(&pf, e))
-                    }
-                    None => self.shared.pfs.rename(Path::new(&rf), Path::new(&rt)),
+                // serialise with in-flight flushes of *both* names (a
+                // completing job could otherwise leave a PFS copy under
+                // `rf`, or recreate the replaced destination `rt`);
+                // locks are taken in sorted order so two concurrent
+                // renames can't deadlock
+                let mut names = vec![rf.clone()];
+                if rt != rf {
+                    names.push(rt.clone());
+                    names.sort();
                 }
+                let locks: Vec<_> =
+                    names.iter().map(|n| self.shared.flush_lock(n)).collect();
+                let res = {
+                    let _guards: Vec<_> = locks
+                        .iter()
+                        .map(|l| l.lock().expect("flush lock poisoned"))
+                        .collect();
+                    self.rename_locked(&rf, &rt)
+                };
+                drop(locks);
+                for n in &names {
+                    self.shared.release_flush_lock(n);
+                }
+                res
             }
             (None, None) => self.shared.pfs.rename(from, to),
             _ => Err(Error::InvalidArg(
@@ -425,8 +892,7 @@ impl Vfs for SeaFs {
                     .readdir(Path::new(&rel))
                     .unwrap_or_default();
                 let prefix = if rel.is_empty() { String::new() } else { format!("{rel}/") };
-                let reg = self.shared.registry.lock().expect("registry poisoned");
-                for key in reg.keys() {
+                for key in self.shared.registry.keys() {
                     if let Some(rest) = key.strip_prefix(&prefix) {
                         if !rest.is_empty() && !rest.contains('/') {
                             names.push(rest.to_string());
@@ -441,15 +907,11 @@ impl Vfs for SeaFs {
     }
 
     fn sync_mgmt(&self) -> Result<()> {
-        let (ack_tx, ack_rx) = mpsc::channel();
-        self.daemon_tx
-            .lock()
-            .expect("tx poisoned")
-            .send(DaemonMsg::Drain(ack_tx))
-            .map_err(|_| Error::Runtime("flush daemon gone".into()))?;
-        ack_rx
-            .recv()
-            .map_err(|_| Error::Runtime("flush daemon gone".into()))
+        let mut p = self.shared.pending.lock().expect("pending poisoned");
+        while *p > 0 {
+            p = self.shared.idle.wait(p).expect("pending poisoned");
+        }
+        Ok(())
     }
 }
 
@@ -614,6 +1076,292 @@ mod tests {
         assert_eq!(n, 1);
         assert!(sea.device_of("inputs/a.dat").is_some());
         assert!(sea.device_of("inputs/skip.txt").is_none());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    // --- handle-based API ---------------------------------------------------
+
+    #[test]
+    fn handle_streaming_write_places_and_reads_back() {
+        let (sea, root, _) = mount(RuleSet::default(), 10 * MIB);
+        let p = Path::new("/sea/h/streamed.dat");
+        {
+            let mut f = sea.open(p, OpenMode::Write).unwrap();
+            for k in 0..4u64 {
+                f.pwrite_all(&vec![k as u8; 1024], k * 1024).unwrap();
+            }
+            assert_eq!(f.len().unwrap(), 4096);
+        }
+        assert!(sea.device_of("h/streamed.dat").is_some(), "placed locally");
+        assert_eq!(sea.size(p).unwrap(), 4096);
+        let data = sea.read(p).unwrap();
+        assert_eq!(data.len(), 4096);
+        assert!(data[..1024].iter().all(|&b| b == 0));
+        assert!(data[3072..].iter().all(|&b| b == 3));
+        // partial read through a handle
+        let mut f = sea.open(p, OpenMode::Read).unwrap();
+        let mut mid = [0u8; 8];
+        f.pread_exact(&mut mid, 2048).unwrap();
+        assert!(mid.iter().all(|&b| b == 2));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn streaming_write_defers_mgmt_until_last_close() {
+        let (sea, root, pfs) = mount(RuleSet::from_texts("**", "**", ""), 10 * MIB);
+        let p = Path::new("/sea/defer.dat");
+        let mut f = sea.open(p, OpenMode::Write).unwrap();
+        f.pwrite_all(&vec![9u8; 4096], 0).unwrap();
+        // handle still open: nothing enqueued, nothing flushed
+        sea.sync_mgmt().unwrap();
+        assert_eq!(sea.mgmt_counters(), (0, 0));
+        assert!(!pfs.exists(Path::new("defer.dat")));
+        assert!(sea.device_of("defer.dat").is_some());
+        drop(f);
+        sea.sync_mgmt().unwrap();
+        assert_eq!(sea.mgmt_counters(), (1, 1), "move ran at close");
+        assert!(pfs.exists(Path::new("defer.dat")));
+        assert!(sea.device_of("defer.dat").is_none());
+        assert_eq!(sea.read(p).unwrap(), vec![9u8; 4096]);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn handle_space_accounting_credits_on_unlink() {
+        let (sea, root, _) = mount(RuleSet::default(), 10 * MIB);
+        let before = sea.shared.accountant.total_free();
+        let p = Path::new("/sea/acc.dat");
+        {
+            let mut f = sea.open(p, OpenMode::Write).unwrap();
+            f.pwrite_all(&vec![1u8; MIB as usize], 0).unwrap();
+            f.set_len(MIB / 2).unwrap(); // shrink credits the ledger
+        }
+        assert_eq!(sea.size(p).unwrap(), MIB / 2);
+        assert_eq!(sea.shared.accountant.total_free(), before - MIB / 2);
+        sea.unlink(p).unwrap();
+        assert_eq!(sea.shared.accountant.total_free(), before);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn rename_moves_flushed_pfs_copy_too() {
+        // regression: a Copy-mode flush used to leave the PFS replica
+        // under the *old* name after a rename
+        let (sea, root, pfs) = mount(RuleSet::from_texts("**", "", ""), 10 * MIB);
+        let a = Path::new("/sea/out/a.dat");
+        let b = Path::new("/sea/out/b.dat");
+        sea.write(a, b"payload").unwrap();
+        sea.sync_mgmt().unwrap();
+        assert!(pfs.exists(Path::new("out/a.dat")), "flushed before rename");
+        sea.rename(a, b).unwrap();
+        assert!(!pfs.exists(Path::new("out/a.dat")), "old PFS name gone");
+        assert!(pfs.exists(Path::new("out/b.dat")), "PFS copy follows rename");
+        assert!(sea.device_of("out/b.dat").is_some());
+        assert!(sea.device_of("out/a.dat").is_none());
+        assert_eq!(sea.read(b).unwrap(), b"payload");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn rename_of_unflushed_file_keeps_pending_mgmt() {
+        let (sea, root, pfs) = mount(RuleSet::from_texts("**", "", ""), 10 * MIB);
+        // write+rename before draining: the flush must follow the new name
+        sea.write(Path::new("/sea/tmp.dat"), b"bytes").unwrap();
+        sea.rename(Path::new("/sea/tmp.dat"), Path::new("/sea/kept.dat")).unwrap();
+        sea.sync_mgmt().unwrap();
+        assert!(pfs.exists(Path::new("kept.dat")), "flushed under new name");
+        assert!(!pfs.exists(Path::new("tmp.dat")));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn overwrite_supersedes_pending_flush() {
+        // regression for the write-vs-flush race: the daemon must never
+        // persist a half-overwritten entry; the final PFS bytes are the
+        // final write's bytes
+        let (sea, root, pfs) = mount(RuleSet::from_texts("**", "", ""), 10 * MIB);
+        let p = Path::new("/sea/race.dat");
+        for round in 0..10u8 {
+            sea.write(p, &vec![round; 64 * 1024]).unwrap();
+            sea.write(p, &vec![round ^ 0xFF; 64 * 1024]).unwrap();
+            sea.sync_mgmt().unwrap();
+            let got = pfs.read(Path::new("race.dat")).unwrap();
+            assert_eq!(got, vec![round ^ 0xFF; 64 * 1024], "round {round}");
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn concurrent_handle_writers_flush_pool_drains() {
+        let (sea, root, pfs) = mount(RuleSet::from_texts("**", "**", ""), 10 * MIB);
+        let sea = Arc::new(sea);
+        const THREADS: usize = 8;
+        const FILES: usize = 8;
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let sea = sea.clone();
+                scope.spawn(move || {
+                    for i in 0..FILES {
+                        let p = PathBuf::from(format!("/sea/w{t}/f{i}.dat"));
+                        let mut f = sea.open(&p, OpenMode::Write).unwrap();
+                        for k in 0..4u64 {
+                            f.pwrite_all(&vec![(t * FILES + i) as u8; 4096], k * 4096)
+                                .unwrap();
+                        }
+                    }
+                });
+            }
+        });
+        sea.sync_mgmt().unwrap();
+        let (fl, ev) = sea.mgmt_counters();
+        assert_eq!(fl, (THREADS * FILES) as u64);
+        assert_eq!(ev, (THREADS * FILES) as u64);
+        for t in 0..THREADS {
+            for i in 0..FILES {
+                let rel = format!("w{t}/f{i}.dat");
+                assert!(sea.device_of(&rel).is_none(), "{rel} evicted");
+                let got = pfs.read(Path::new(&rel)).unwrap();
+                assert_eq!(got, vec![(t * FILES + i) as u8; 4 * 4096], "{rel}");
+            }
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn concurrent_open_read_during_flush_and_evict() {
+        // readers racing the flush pool must always see either the local
+        // or the PFS copy, never an error
+        let (sea, root, _) = mount(RuleSet::from_texts("**", "**", ""), 10 * MIB);
+        let sea = Arc::new(sea);
+        let p = Path::new("/sea/hot.dat");
+        sea.write(p, &vec![4u8; 32 * 1024]).unwrap();
+        std::thread::scope(|scope| {
+            let reader = {
+                let sea = sea.clone();
+                scope.spawn(move || {
+                    for _ in 0..200 {
+                        let data = sea.read(Path::new("/sea/hot.dat")).unwrap();
+                        assert_eq!(data.len(), 32 * 1024);
+                        assert!(data.iter().all(|&b| b == 4));
+                    }
+                })
+            };
+            let _ = reader;
+        });
+        sea.sync_mgmt().unwrap();
+        assert_eq!(sea.read(p).unwrap(), vec![4u8; 32 * 1024]);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn readwrite_handle_updates_in_place() {
+        let (sea, root, pfs) = mount(RuleSet::from_texts("**", "", ""), 10 * MIB);
+        let p = Path::new("/sea/upd.dat");
+        sea.write(p, b"aaaaaaaa").unwrap();
+        sea.sync_mgmt().unwrap();
+        assert_eq!(pfs.read(Path::new("upd.dat")).unwrap(), b"aaaaaaaa");
+        {
+            let mut f = sea.open(p, OpenMode::ReadWrite).unwrap();
+            f.pwrite_all(b"BB", 3).unwrap();
+        }
+        sea.sync_mgmt().unwrap();
+        // re-opened for write => re-flushed with the patched bytes
+        assert_eq!(sea.read(p).unwrap(), b"aaaBBaaa");
+        assert_eq!(pfs.read(Path::new("upd.dat")).unwrap(), b"aaaBBaaa");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn concurrent_writers_share_entry_and_mgmt_runs_once() {
+        // regression: a ReadWrite open bumps the shared entry's
+        // generation; the first handle's close must still decrement the
+        // writer count or management never fires
+        let (sea, root, pfs) = mount(RuleSet::from_texts("**", "**", ""), 10 * MIB);
+        let p = Path::new("/sea/two.dat");
+        let mut a = sea.open(p, OpenMode::Write).unwrap();
+        a.pwrite_all(b"aaaa", 0).unwrap();
+        let mut b = sea.open(p, OpenMode::ReadWrite).unwrap();
+        b.pwrite_all(b"bb", 4).unwrap();
+        drop(a); // not the last writer: nothing enqueued yet
+        sea.sync_mgmt().unwrap();
+        assert_eq!(sea.mgmt_counters(), (0, 0));
+        drop(b); // last close fires the move
+        sea.sync_mgmt().unwrap();
+        assert_eq!(sea.mgmt_counters(), (1, 1));
+        assert_eq!(pfs.read(Path::new("two.dat")).unwrap(), b"aaaabb");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn stale_writer_does_not_corrupt_superseding_placement() {
+        // regression: a handle orphaned by an overwrite (drop_local
+        // replaced its entry) must not inflate the new entry's size or
+        // the device ledger
+        let (sea, root, pfs) = mount(RuleSet::from_texts("**", "", ""), 10 * MIB);
+        let before = sea.shared.accountant.total_free();
+        let p = Path::new("/sea/stale.dat");
+        let mut a = sea.open(p, OpenMode::Write).unwrap();
+        a.pwrite_all(&vec![1u8; 1024], 0).unwrap();
+        // supersede the placement while the old handle is still open
+        sea.write(p, b"fresh").unwrap();
+        // the stale handle writes to its orphaned inode, nothing else
+        a.pwrite_all(&vec![2u8; 4096], 0).unwrap();
+        assert_eq!(sea.size(p).unwrap(), 5);
+        drop(a); // must not enqueue mgmt for the superseded entry
+        sea.sync_mgmt().unwrap();
+        assert_eq!(sea.mgmt_counters(), (1, 0), "one flush, for the overwrite");
+        assert_eq!(sea.read(p).unwrap(), b"fresh");
+        assert_eq!(pfs.read(Path::new("stale.dat")).unwrap(), b"fresh");
+        assert_eq!(sea.shared.accountant.total_free(), before - 5);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn rename_with_open_writer_is_refused() {
+        // an open writer handle keys its registry updates by path, so a
+        // rename under it is refused rather than stranding its count
+        let (sea, root, _) = mount(RuleSet::default(), 10 * MIB);
+        let a = Path::new("/sea/busy.dat");
+        let b = Path::new("/sea/moved.dat");
+        let mut f = sea.open(a, OpenMode::Write).unwrap();
+        f.pwrite_all(b"x", 0).unwrap();
+        assert!(matches!(sea.rename(a, b), Err(Error::InvalidArg(_))));
+        drop(f);
+        sea.rename(a, b).unwrap();
+        assert!(sea.exists(b) && !sea.exists(a));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn rename_over_existing_destination_reclaims_its_space() {
+        // regression: replacing a destination entry must credit its
+        // bytes back to the ledger and drop its local copy
+        let (sea, root, _) = mount(RuleSet::default(), 10 * MIB);
+        let before = sea.shared.accountant.total_free();
+        let a = Path::new("/sea/src.dat");
+        let b = Path::new("/sea/dst.dat");
+        sea.write(b, &vec![1u8; MIB as usize]).unwrap();
+        sea.write(a, b"new").unwrap();
+        sea.rename(a, b).unwrap();
+        assert_eq!(sea.read(b).unwrap(), b"new");
+        assert!(!sea.exists(a));
+        assert_eq!(sea.shared.accountant.total_free(), before - 3);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn unlink_racing_flush_leaves_no_pfs_copy() {
+        // regression: unlink must serialise with in-flight flush jobs or
+        // a completing flush resurrects the deleted file on the PFS
+        let (sea, root, pfs) = mount(RuleSet::from_texts("**", "**", ""), 10 * MIB);
+        for i in 0..20 {
+            let p = PathBuf::from(format!("/sea/u{i}.dat"));
+            sea.write(&p, &vec![9u8; 32 * 1024]).unwrap(); // enqueues a move
+            sea.unlink(&p).unwrap(); // races the flush pool
+            sea.sync_mgmt().unwrap();
+            assert!(!sea.exists(&p), "u{i} resurrected locally");
+            assert!(!pfs.exists(Path::new(&format!("u{i}.dat"))), "u{i} on pfs");
+        }
         let _ = std::fs::remove_dir_all(&root);
     }
 }

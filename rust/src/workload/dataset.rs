@@ -86,6 +86,32 @@ pub fn generate_varied_block(path: &Path, elems: usize, seed: u64) -> Result<()>
     fs::write(path, &buf).map_err(|e| Error::io(path, e))
 }
 
+/// Decode little-endian f32 bytes into `out` (length-checked: `raw`
+/// must be exactly `4 * out.len()` bytes). Shared by the streaming
+/// pipeline paths so stride buffers are reused instead of reallocated.
+pub fn bytes_to_f32_into(raw: &[u8], out: &mut [f32]) -> Result<()> {
+    if raw.len() != out.len() * 4 {
+        return Err(Error::Integrity(format!(
+            "stride has {} bytes, expected {}",
+            raw.len(),
+            out.len() * 4
+        )));
+    }
+    for (c, v) in raw.chunks_exact(4).zip(out.iter_mut()) {
+        *v = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+    Ok(())
+}
+
+/// Encode f32s little-endian into `out` (`out` must be `4 * data.len()`
+/// bytes). Panics on length mismatch — callers own both buffers.
+pub fn f32_to_bytes_into(data: &[f32], out: &mut [u8]) {
+    assert_eq!(out.len(), data.len() * 4, "encode buffer length mismatch");
+    for (v, c) in data.iter().zip(out.chunks_exact_mut(4)) {
+        c.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
 /// Read a block file as f32s (length-checked against `elems`).
 pub fn read_block(path: &Path, elems: usize) -> Result<Vec<f32>> {
     let bytes = fs::read(path).map_err(|e| Error::io(path, e))?;
@@ -166,6 +192,18 @@ mod tests {
         fs::write(&p, [0u8; 10]).unwrap();
         assert!(read_block(&p, 4).is_err());
         let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn f32_byte_conversions_round_trip() {
+        let vals: Vec<f32> = (0..64).map(|i| i as f32 - 32.0).collect();
+        let mut raw = vec![0u8; 64 * 4];
+        f32_to_bytes_into(&vals, &mut raw);
+        let mut back = vec![0f32; 64];
+        bytes_to_f32_into(&raw, &mut back).unwrap();
+        assert_eq!(vals, back);
+        // length mismatch is an integrity error
+        assert!(bytes_to_f32_into(&raw[..8], &mut back).is_err());
     }
 
     #[test]

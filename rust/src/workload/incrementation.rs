@@ -15,11 +15,14 @@
 //! `*_final.dat` so the Sea in-memory rule `**_final.dat` (flush + evict
 //! last iteration only, §3.5.1) can match them.
 
+use std::path::Path;
 use std::sync::Arc;
 
+use crate::error::{Error, Result};
 use crate::placement::FileTable;
 use crate::sim::app::Instr;
 use crate::sim::stack::FileId;
+use crate::vfs::{OpenMode, Vfs};
 
 /// Parameters of one incrementation run.
 #[derive(Debug, Clone)]
@@ -79,6 +82,83 @@ impl IncrementationSpec {
             self.iterations,
         )
     }
+}
+
+/// Fixed-stride streaming plan over one block file.
+///
+/// Chunks stream through a buffer of exactly one stride: peak memory is
+/// `stride_bytes()`, never the whole block, which is what lets the
+/// real-bytes pipeline process blocks far larger than RAM-per-worker
+/// (the regime where the paper's Table 2 wins materialize).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StridePlan {
+    /// f32 elements per stride (the bounded buffer size).
+    pub stride_elems: usize,
+    /// f32 elements in the whole block.
+    pub block_elems: usize,
+}
+
+impl StridePlan {
+    /// Plan a block of `block_elems` in strides of `stride_elems`
+    /// (which must divide the block evenly).
+    pub fn new(block_elems: usize, stride_elems: usize) -> Result<StridePlan> {
+        if stride_elems == 0 || block_elems == 0 || block_elems % stride_elems != 0 {
+            return Err(Error::InvalidArg(format!(
+                "stride {stride_elems} must be nonzero and divide block {block_elems}"
+            )));
+        }
+        Ok(StridePlan { stride_elems, block_elems })
+    }
+
+    /// Number of strides in the block.
+    pub fn strides(&self) -> usize {
+        self.block_elems / self.stride_elems
+    }
+
+    /// Bytes per stride (f32).
+    pub fn stride_bytes(&self) -> usize {
+        self.stride_elems * 4
+    }
+
+    /// Bytes in the whole block.
+    pub fn block_bytes(&self) -> u64 {
+        (self.block_elems * 4) as u64
+    }
+
+    /// Byte offset of stride `k`.
+    pub fn offset(&self, k: usize) -> u64 {
+        (k * self.stride_bytes()) as u64
+    }
+}
+
+/// Stream `src` through `f` into `dst`, one stride at a time, over any
+/// [`Vfs`]: every stride is one `pread` + one `pwrite` at the same
+/// offset, so peak buffer memory is a single stride. `f` receives the
+/// stride index and its f32s, mutating them in place. Returns total
+/// bytes processed.
+pub fn stream_block<F>(
+    vfs: &dyn Vfs,
+    src: &Path,
+    dst: &Path,
+    plan: &StridePlan,
+    mut f: F,
+) -> Result<u64>
+where
+    F: FnMut(usize, &mut [f32]) -> Result<()>,
+{
+    let mut src_f = vfs.open(src, OpenMode::Read)?;
+    let mut dst_f = vfs.open(dst, OpenMode::Write)?;
+    let mut raw = vec![0u8; plan.stride_bytes()];
+    let mut elems = vec![0f32; plan.stride_elems];
+    for k in 0..plan.strides() {
+        let off = plan.offset(k);
+        src_f.pread_exact(&mut raw, off)?;
+        super::dataset::bytes_to_f32_into(&raw, &mut elems)?;
+        f(k, &mut elems)?;
+        super::dataset::f32_to_bytes_into(&elems, &mut raw);
+        dst_f.pwrite_all(&raw, off)?;
+    }
+    Ok(plan.block_bytes())
 }
 
 /// Simulation programs: per-process instruction lists plus the input
@@ -212,6 +292,125 @@ mod tests {
             .filter(|i| matches!(i, Instr::Read(_)))
             .count();
         assert_eq!(reads, 6, "only the input reads remain");
+    }
+
+    #[test]
+    fn stride_plan_validates_and_addresses() {
+        assert!(StridePlan::new(0, 4).is_err());
+        assert!(StridePlan::new(8, 0).is_err());
+        assert!(StridePlan::new(10, 4).is_err(), "must divide evenly");
+        let p = StridePlan::new(8192, 1024).unwrap();
+        assert_eq!(p.strides(), 8);
+        assert_eq!(p.stride_bytes(), 4096);
+        assert_eq!(p.block_bytes(), 32768);
+        assert_eq!(p.offset(3), 3 * 4096);
+    }
+
+    #[test]
+    fn stream_block_peak_buffer_is_one_stride() {
+        use std::path::Path;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use crate::error::Result;
+        use crate::vfs::{OpenMode, RealFs, Vfs, VfsFile};
+
+        /// Vfs decorator recording the largest single I/O request, which
+        /// bounds the streaming path's peak buffer memory.
+        struct SpyFs {
+            inner: RealFs,
+            max_req: Arc<AtomicUsize>,
+        }
+        struct SpyFile {
+            inner: Box<dyn VfsFile>,
+            max_req: Arc<AtomicUsize>,
+        }
+        impl VfsFile for SpyFile {
+            fn pread(&mut self, buf: &mut [u8], off: u64) -> Result<usize> {
+                self.max_req.fetch_max(buf.len(), Ordering::Relaxed);
+                self.inner.pread(buf, off)
+            }
+            fn pwrite(&mut self, data: &[u8], off: u64) -> Result<usize> {
+                self.max_req.fetch_max(data.len(), Ordering::Relaxed);
+                self.inner.pwrite(data, off)
+            }
+            fn set_len(&mut self, len: u64) -> Result<()> {
+                self.inner.set_len(len)
+            }
+            fn fsync(&mut self) -> Result<()> {
+                self.inner.fsync()
+            }
+            fn len(&self) -> Result<u64> {
+                self.inner.len()
+            }
+        }
+        impl Vfs for SpyFs {
+            fn open(&self, path: &Path, mode: OpenMode) -> Result<Box<dyn VfsFile>> {
+                Ok(Box::new(SpyFile {
+                    inner: self.inner.open(path, mode)?,
+                    max_req: self.max_req.clone(),
+                }))
+            }
+            fn unlink(&self, path: &Path) -> Result<()> {
+                self.inner.unlink(path)
+            }
+            fn exists(&self, path: &Path) -> bool {
+                self.inner.exists(path)
+            }
+            fn size(&self, path: &Path) -> Result<u64> {
+                self.inner.size(path)
+            }
+            fn rename(&self, from: &Path, to: &Path) -> Result<()> {
+                self.inner.rename(from, to)
+            }
+            fn readdir(&self, path: &Path) -> Result<Vec<String>> {
+                self.inner.readdir(path)
+            }
+        }
+
+        let dir = std::env::temp_dir().join(format!(
+            "sea_stream_{}_{}",
+            std::process::id(),
+            line!()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let max_req = Arc::new(AtomicUsize::new(0));
+        let vfs = SpyFs {
+            inner: RealFs::new(&dir).unwrap(),
+            max_req: max_req.clone(),
+        };
+        // an 8-stride block: 8192 elements processed 1024 at a time
+        let plan = StridePlan::new(8192, 1024).unwrap();
+        let input: Vec<f32> = (0..8192).map(|i| (i % 97) as f32).collect();
+        let mut raw = vec![0u8; input.len() * 4];
+        crate::workload::dataset::f32_to_bytes_into(&input, &mut raw);
+        vfs.write(Path::new("src.dat"), &raw).unwrap();
+        max_req.store(0, Ordering::Relaxed); // ignore the setup write
+
+        let mut seen = 0usize;
+        let bytes = stream_block(
+            &vfs,
+            Path::new("src.dat"),
+            Path::new("dst.dat"),
+            &plan,
+            |k, chunk| {
+                assert_eq!(chunk.len(), plan.stride_elems);
+                seen = seen.max(k + 1);
+                for v in chunk.iter_mut() {
+                    *v += 1.0;
+                }
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(bytes, plan.block_bytes());
+        assert_eq!(seen, plan.strides(), "every stride visited");
+        // peak request (and therefore peak buffer) is exactly one stride
+        assert_eq!(max_req.load(Ordering::Relaxed), plan.stride_bytes());
+
+        let out_raw = vfs.read(Path::new("dst.dat")).unwrap();
+        let mut out = vec![0f32; 8192];
+        crate::workload::dataset::bytes_to_f32_into(&out_raw, &mut out).unwrap();
+        assert!(out.iter().zip(&input).all(|(o, i)| *o == i + 1.0));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

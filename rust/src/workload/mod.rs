@@ -11,4 +11,4 @@
 pub mod dataset;
 pub mod incrementation;
 
-pub use incrementation::{IncrementationSpec, SimPrograms};
+pub use incrementation::{stream_block, IncrementationSpec, SimPrograms, StridePlan};

@@ -1,0 +1,228 @@
+//! Offline stub of the small `xla` (PJRT bindings) API surface that the
+//! `sea` runtime uses.
+//!
+//! The real dependency is the crates.io `xla` crate backed by the native
+//! `xla_extension` runtime, which cannot be vendored into this offline
+//! build. This stub keeps the whole workspace compiling and testable:
+//! manifest parsing, HLO text loading and literal plumbing all work, but
+//! [`PjRtClient::cpu`] reports a runtime error, so artifact-dependent
+//! paths fail fast (and the integration tests skip cleanly). To run real
+//! PJRT execution, point the root `Cargo.toml`'s `xla` entry at the
+//! crates.io crate instead of this path.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: carries a message, converts into `sea`'s error type via
+/// `Display` just like the real crate's error.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias (mirrors the real crate).
+pub type Result<T> = std::result::Result<T, Error>;
+
+const OFFLINE: &str = "offline xla stub: PJRT execution unavailable \
+     (swap rust/xla for the real `xla` crate to run compute)";
+
+/// Element dtypes `sea` lowers for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    /// 32-bit IEEE float (the only dtype this repo lowers).
+    F32,
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read HLO text from a file (the artifact interchange format).
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let p = path.as_ref();
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| Error::new(format!("read {}: {e}", p.display())))?;
+        Ok(HloModuleProto { text })
+    }
+
+    /// The raw HLO text.
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// An XLA computation built from an HLO module.
+pub struct XlaComputation {
+    _text: String,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _text: proto.text.clone() }
+    }
+}
+
+/// PJRT client handle. The stub cannot construct one: creation reports
+/// the offline error so callers fail fast at load time.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// CPU PJRT client — unavailable in the offline stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::new(OFFLINE))
+    }
+
+    /// Compile a computation — unreachable offline (no client exists).
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(OFFLINE))
+    }
+}
+
+/// Compiled executable handle (never constructed offline).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal arguments — unreachable offline.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(OFFLINE))
+    }
+}
+
+/// Device buffer handle (never constructed offline).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer to a host literal — unreachable offline.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(OFFLINE))
+    }
+}
+
+/// Host-side literal: shape + raw bytes. Fully functional in the stub so
+/// input plumbing (and its unit tests) work without a device.
+pub struct Literal {
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    /// Build a literal from a shape and raw (little-endian) bytes.
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = dims.iter().product();
+        if elems * 4 != data.len() {
+            return Err(Error::new(format!(
+                "shape {dims:?} wants {} bytes, got {}",
+                elems * 4,
+                data.len()
+            )));
+        }
+        Ok(Literal { bytes: data.to_vec() })
+    }
+
+    /// Decompose a tuple literal — unreachable offline (tuples only come
+    /// from device execution).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::new(OFFLINE))
+    }
+
+    /// Copy raw contents into `dst` (size-checked).
+    pub fn copy_raw_to<T: Copy>(&self, dst: &mut [T]) -> Result<()> {
+        let want = std::mem::size_of_val(dst);
+        if want != self.bytes.len() {
+            return Err(Error::new(format!(
+                "copy_raw_to: {} bytes available, {} wanted",
+                self.bytes.len(),
+                want
+            )));
+        }
+        // SAFETY: dst is a plain-old-data slice of exactly bytes.len()
+        // bytes; byte-wise copy cannot produce invalid T for the POD
+        // element types (f32) this repo uses.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.bytes.as_ptr(),
+                dst.as_mut_ptr() as *mut u8,
+                self.bytes.len(),
+            );
+        }
+        Ok(())
+    }
+
+    /// Decode the literal as a vector of `T` (size-checked).
+    pub fn to_vec<T: Copy + Default>(&self) -> Result<Vec<T>> {
+        let tsz = std::mem::size_of::<T>();
+        if tsz == 0 || self.bytes.len() % tsz != 0 {
+            return Err(Error::new(format!(
+                "to_vec: {} bytes not a multiple of element size {tsz}",
+                self.bytes.len()
+            )));
+        }
+        let mut out = vec![T::default(); self.bytes.len() / tsz];
+        self.copy_raw_to(&mut out)?;
+        Ok(out)
+    }
+
+    /// Payload size in bytes.
+    pub fn size_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let vals = [1.5f32, -2.0, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let l = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3, 1], &bytes)
+            .unwrap();
+        assert_eq!(l.size_bytes(), 12);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vals);
+        let mut dst = [0f32; 3];
+        l.copy_raw_to(&mut dst).unwrap();
+        assert_eq!(dst, vals);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &[0u8; 8])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn client_reports_offline() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("offline xla stub"));
+    }
+}
