@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use sea::placement::{MgmtMode, RuleSet};
 use sea::util::MIB;
-use sea::vfs::{RealFs, SeaFs, SeaFsConfig, Vfs};
+use sea::vfs::{DeviceSpec, RealFs, SeaFs, SeaFsConfig, SeaTuning, Vfs};
 
 fn main() -> sea::Result<()> {
     let work = std::env::temp_dir().join("sea_flush_modes");
@@ -54,14 +54,15 @@ fn main() -> sea::Result<()> {
     let sea = SeaFs::mount(SeaFsConfig {
         mountpoint: PathBuf::from("/sea"),
         devices: vec![
-            (work.join("tier0_shm"), 0, 64 * MIB),
-            (work.join("tier1_disk"), 1, 256 * MIB),
+            DeviceSpec::dir(work.join("tier0_shm"), 0, 64 * MIB)?,
+            DeviceSpec::dir(work.join("tier1_disk"), 1, 256 * MIB)?,
         ],
         pfs: pfs.clone(),
         max_file_size: MIB,
         parallel_procs: 2,
         rules,
         seed: 5,
+        tuning: SeaTuning::default(),
     })?;
 
     let n = sea.prefetch_dir("inputs")?;

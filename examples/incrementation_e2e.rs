@@ -25,7 +25,7 @@ use sea::placement::RuleSet;
 use sea::runtime::Engine;
 use sea::util::csv::{f, Csv};
 use sea::util::{fmt_bytes, MIB};
-use sea::vfs::{RateLimitedFs, RealFs, SeaFs, SeaFsConfig, Vfs};
+use sea::vfs::{DeviceSpec, RateLimitedFs, RealFs, SeaFs, SeaFsConfig, SeaTuning, Vfs};
 use sea::workload::{dataset, IncrementationSpec};
 
 fn env_usize(name: &str, default: usize) -> usize {
@@ -74,15 +74,16 @@ fn main() -> sea::Result<()> {
         Ok(Arc::new(SeaFs::mount(SeaFsConfig {
             mountpoint: PathBuf::from("/sea"),
             devices: vec![
-                (shm.clone(), 0, 1024 * MIB),
-                (work.join("disk0"), 1, 8192 * MIB),
-                (work.join("disk1"), 1, 8192 * MIB),
+                DeviceSpec::dir(shm.clone(), 0, 1024 * MIB)?,
+                DeviceSpec::dir(work.join("disk0"), 1, 8192 * MIB)?,
+                DeviceSpec::dir(work.join("disk1"), 1, 8192 * MIB)?,
             ],
             pfs: pfs(work)?,
             max_file_size: ds.block_bytes(),
             parallel_procs: workers as u64,
             rules,
             seed: 3,
+            tuning: SeaTuning::default(),
         })?))
     };
 
@@ -97,6 +98,7 @@ fn main() -> sea::Result<()> {
             read_back: true,
             verify: true,
             cleanup_intermediate: true,
+            max_open_outputs: 0,
         })
     };
 

@@ -14,7 +14,7 @@ use sea::coordinator::{run_pipeline, PipelineCfg};
 use sea::placement::RuleSet;
 use sea::runtime::Engine;
 use sea::util::{fmt_bytes, MIB};
-use sea::vfs::{RateLimitedFs, RealFs, SeaFs, SeaFsConfig, Vfs};
+use sea::vfs::{DeviceSpec, RateLimitedFs, RealFs, SeaFs, SeaFsConfig, SeaTuning, Vfs};
 use sea::workload::{dataset, IncrementationSpec};
 
 fn main() -> sea::Result<()> {
@@ -53,6 +53,7 @@ fn main() -> sea::Result<()> {
         read_back: true,
         verify: true,
         cleanup_intermediate: true,
+        max_open_outputs: 0,
     })?;
     println!("direct PFS : {:.2}s", direct.makespan);
 
@@ -60,14 +61,15 @@ fn main() -> sea::Result<()> {
     let sea = SeaFs::mount(SeaFsConfig {
         mountpoint: PathBuf::from("/sea"),
         devices: vec![
-            (PathBuf::from("/dev/shm/sea_quickstart"), 0, 512 * MIB),
-            (work.join("disk0"), 1, 4096 * MIB),
+            DeviceSpec::dir(PathBuf::from("/dev/shm/sea_quickstart"), 0, 512 * MIB)?,
+            DeviceSpec::dir(work.join("disk0"), 1, 4096 * MIB)?,
         ],
         pfs: pfs()?,
         max_file_size: ds.block_bytes(),
         parallel_procs: 2,
         rules: RuleSet::in_memory(IncrementationSpec::final_glob()),
         seed: 7,
+        tuning: SeaTuning::default(),
     })?;
     let report = run_pipeline(&PipelineCfg {
         engine: engine.clone(),
@@ -79,6 +81,7 @@ fn main() -> sea::Result<()> {
         read_back: true,
         verify: true,
         cleanup_intermediate: true,
+        max_open_outputs: 0,
     })?;
     println!("sea        : {:.2}s", report.makespan);
     println!("speedup    : {:.2}x", direct.makespan / report.makespan);

@@ -14,7 +14,9 @@ use std::sync::Arc;
 use sea::bench::Harness;
 use sea::placement::RuleSet;
 use sea::util::{KIB, MIB};
-use sea::vfs::{OpenMode, RealFs, SeaFs, SeaFsConfig, Vfs, VfsFile};
+use sea::vfs::{
+    DeviceSpec, OpenMode, RealFs, SeaFs, SeaFsConfig, SeaTuning, StripedFs, Vfs, VfsFile,
+};
 
 fn main() {
     let work = std::env::temp_dir().join("sea_bench_vfs");
@@ -25,12 +27,13 @@ fn main() {
     let pfs = Arc::new(RealFs::new(work.join("pfs")).expect("pfs"));
     let sea = SeaFs::mount(SeaFsConfig {
         mountpoint: PathBuf::from("/sea"),
-        devices: vec![(work.join("dev0"), 0, 4096 * MIB)],
+        devices: vec![DeviceSpec::dir(work.join("dev0"), 0, 4096 * MIB).expect("dev")],
         pfs,
         max_file_size: MIB,
         parallel_procs: 4,
         rules: RuleSet::default(),
         seed: 1,
+        tuning: SeaTuning::default(),
     })
     .expect("mount");
 
@@ -109,12 +112,13 @@ fn main() {
         let pfs = Arc::new(RealFs::new(root.join("pfs")).expect("pfs"));
         let mount = SeaFs::mount(SeaFsConfig {
             mountpoint: PathBuf::from("/sea"),
-            devices: vec![(root.join("dev0"), 0, 1024 * MIB)],
+            devices: vec![DeviceSpec::dir(root.join("dev0"), 0, 1024 * MIB).expect("dev")],
             pfs,
             max_file_size: MIB,
             parallel_procs: 4,
             rules: RuleSet::from_texts("**", "**", ""), // move everything
             seed: rep + 1,
+            tuning: SeaTuning::default(),
         })
         .expect("mount");
         let mount = Arc::new(mount);
@@ -137,6 +141,85 @@ fn main() {
         assert_eq!((fl, ev), (64, 64));
         let _ = std::fs::remove_dir_all(&root);
     });
+
+    // flush-pool scaling: workers × per-member concurrency over a
+    // 4-member striped PFS (each member individually rate-limited, like
+    // OSTs); measures time for the pool to drain a batch of Move-mode
+    // files and emits BENCH_flush_scaling.json for curve tooling
+    const MEMBERS: usize = 4;
+    const SCALE_FILES: usize = 32;
+    const SCALE_KIB: u64 = 256;
+    let mut grid: Vec<(usize, usize, f64, Vec<usize>)> = Vec::new();
+    for &workers in &[1usize, 2, 4, 8] {
+        for &per_member in &[1usize, 2, 4] {
+            let root = work.join(format!("scale_w{workers}_m{per_member}"));
+            let members: Vec<Arc<dyn Vfs>> = (0..MEMBERS)
+                .map(|i| {
+                    Arc::new(sea::vfs::RateLimitedFs::new(
+                        RealFs::new(root.join(format!("ost{i}"))).expect("ost"),
+                        1e9,
+                        16.0 * MIB as f64, // per-member write cap
+                    )) as Arc<dyn Vfs>
+                })
+                .collect();
+            let pfs: Arc<dyn Vfs> = Arc::new(StripedFs::new(members).expect("striped"));
+            let mount = SeaFs::mount(SeaFsConfig {
+                mountpoint: PathBuf::from("/sea"),
+                devices: vec![DeviceSpec::dir(root.join("dev0"), 0, 1024 * MIB).expect("dev")],
+                pfs,
+                max_file_size: MIB,
+                parallel_procs: 4,
+                rules: RuleSet::from_texts("**", "**", ""), // move everything
+                seed: 42,
+                tuning: SeaTuning {
+                    flush_workers: workers,
+                    registry_shards: 16,
+                    per_member_concurrency: per_member,
+                },
+            })
+            .expect("mount");
+            let payload = vec![1u8; (SCALE_KIB * KIB) as usize];
+            let t0 = std::time::Instant::now();
+            for i in 0..SCALE_FILES {
+                let p = PathBuf::from(format!("/sea/s/f{i:02}.dat"));
+                let mut fh = mount.open(&p, OpenMode::Write).expect("open");
+                fh.pwrite_all(&payload, 0).expect("write");
+            }
+            mount.sync_mgmt().expect("drain");
+            let drain_s = t0.elapsed().as_secs_f64();
+            let (fl, ev) = mount.mgmt_counters();
+            assert_eq!((fl, ev), (SCALE_FILES as u64, SCALE_FILES as u64));
+            let peaks = mount.flush_member_peaks().unwrap_or_default();
+            assert!(peaks.iter().all(|&p| p <= per_member), "gate violated: {peaks:?}");
+            h.record(
+                &format!("flush_scaling_w{workers}_m{per_member}"),
+                vec![drain_s],
+                format!("member peaks {peaks:?}"),
+            );
+            grid.push((workers, per_member, drain_s, peaks));
+            let _ = std::fs::remove_dir_all(&root);
+        }
+    }
+    let mut json = String::from("{\n  \"target\": \"vfs/flush_scaling\",\n");
+    json.push_str(&format!(
+        "  \"members\": {MEMBERS},\n  \"files\": {SCALE_FILES},\n  \"file_kib\": {SCALE_KIB},\n  \"grid\": [\n"
+    ));
+    for (i, (w, m, s, peaks)) in grid.iter().enumerate() {
+        let peaks_json = peaks
+            .iter()
+            .map(|p| p.to_string())
+            .collect::<Vec<_>>()
+            .join(", ");
+        json.push_str(&format!(
+            "    {{\"workers\": {w}, \"per_member\": {m}, \"drain_s\": {s:.6}, \"member_peaks\": [{peaks_json}]}}{}\n",
+            if i + 1 == grid.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_flush_scaling.json", &json) {
+        Ok(()) => println!("wrote BENCH_flush_scaling.json ({} combos)", grid.len()),
+        Err(e) => eprintln!("bench: could not write BENCH_flush_scaling.json: {e}"),
+    }
 
     let results = h.finish();
     // derive the per-op interception overhead from the 4k pair

@@ -15,7 +15,7 @@ use crate::runtime::Engine;
 use crate::sim::spec::ClusterSpec;
 use crate::util::bytes::fmt_bw;
 use crate::util::{fmt_bytes, MIB};
-use crate::vfs::{RateLimitedFs, RealFs, SeaFs, SeaFsConfig, Vfs};
+use crate::vfs::{DeviceSpec, RateLimitedFs, RealFs, SeaFs, SeaFsConfig, SeaTuning, Vfs};
 use crate::workload::{dataset, IncrementationSpec};
 
 fn load_spec(args: &Args) -> Result<ClusterSpec> {
@@ -273,7 +273,10 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
         println!(
             "sea run [--artifacts artifacts/] [--work /tmp/sea_run] [--blocks N]\n\
              \x20       [--iterations N] [--workers N] [--mode sea|direct|both]\n\
-             \x20       [--pfs-read-mibs N] [--pfs-write-mibs N] [--flush-all]"
+             \x20       [--pfs-read-mibs N] [--pfs-write-mibs N] [--flush-all]\n\
+             \x20       [--config cfg.toml]  # [sea] tuning section\n\
+             \x20       [--flush-workers N] [--registry-shards N]\n\
+             \x20       [--per-member-concurrency N]  # override the config"
         );
         return Ok(0);
     }
@@ -286,6 +289,19 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
     let pfs_w = args.f64_or("pfs-write-mibs", 120.0)? * MIB as f64;
     let mode = args.str_or("mode", "both");
     let flush_all = args.has("flush-all");
+    // tuning: defaults <- [sea] section of --config <- explicit flags
+    let base_tuning = match args.get("config") {
+        Some(path) => {
+            config::tuning_from_doc(&config::Doc::load(std::path::Path::new(path))?)
+        }
+        None => SeaTuning::default(),
+    };
+    let tuning = SeaTuning {
+        flush_workers: args.usize_or("flush-workers", base_tuning.flush_workers)?,
+        registry_shards: args.usize_or("registry-shards", base_tuning.registry_shards)?,
+        per_member_concurrency: args
+            .usize_or("per-member-concurrency", base_tuning.per_member_concurrency)?,
+    };
 
     let engine = Arc::new(Engine::load(&artifacts)?);
     let elems = engine.chunk_elems();
@@ -313,6 +329,7 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
             read_back: true,
             verify: true,
             cleanup_intermediate: true,
+            max_open_outputs: 0,
         })?;
         println!(
             "direct-pfs : {:.2}s  ({} read, {} written, {} pjrt calls)",
@@ -337,15 +354,16 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
         let sea = SeaFs::mount(SeaFsConfig {
             mountpoint: PathBuf::from("/sea"),
             devices: vec![
-                (PathBuf::from("/dev/shm/sea_run_tier0"), 0, 2 * 1024 * MIB),
-                (work.join("tier1_disk0"), 1, 8 * 1024 * MIB),
-                (work.join("tier1_disk1"), 1, 8 * 1024 * MIB),
+                DeviceSpec::dir(PathBuf::from("/dev/shm/sea_run_tier0"), 0, 2 * 1024 * MIB)?,
+                DeviceSpec::dir(work.join("tier1_disk0"), 1, 8 * 1024 * MIB)?,
+                DeviceSpec::dir(work.join("tier1_disk1"), 1, 8 * 1024 * MIB)?,
             ],
             pfs,
             max_file_size: ds.block_bytes(),
             parallel_procs: workers as u64,
             rules,
             seed: 11,
+            tuning,
         })?;
         let r = run_pipeline(&PipelineCfg {
             engine: engine.clone(),
@@ -357,6 +375,7 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
             read_back: true,
             verify: true,
             cleanup_intermediate: true,
+            max_open_outputs: 0,
         })?;
         println!(
             "sea        : {:.2}s  ({} read, {} written, {} pjrt calls)",

@@ -1,5 +1,6 @@
 //! Configuration: a TOML-subset parser (offline serde/toml substitute)
-//! plus typed loaders for cluster and Sea-mount configuration.
+//! plus typed loaders for cluster specs ([`load_cluster_spec`]) and
+//! Sea-mount tuning (`[sea]` → [`tuning_from_doc`]).
 //!
 //! Supported syntax: `[section]` and `[section.sub]` headers, `key =
 //! value` with string/float/integer/bool/size values (`"x"`, `1.5`, `42`,
@@ -9,6 +10,8 @@
 
 mod cluster;
 mod parse;
+mod sea;
 
 pub use cluster::{load_cluster_spec, spec_from_doc};
 pub use parse::{Doc, Value};
+pub use sea::tuning_from_doc;

@@ -1,0 +1,45 @@
+//! Typed Sea-mount tuning from a config document.
+//!
+//! The `[sea]` section carries the knobs that used to be compile-time
+//! constants (`FLUSH_WORKERS`, `REGISTRY_SHARDS`) plus the striped-PFS
+//! scheduling cap; missing keys keep the defaults, so an empty file IS
+//! the default mount.
+
+use crate::config::parse::Doc;
+use crate::vfs::SeaTuning;
+
+/// Build a [`SeaTuning`] from a parsed document.
+pub fn tuning_from_doc(d: &Doc) -> SeaTuning {
+    let dflt = SeaTuning::default();
+    SeaTuning {
+        flush_workers: d.usize_or("sea.flush_workers", dflt.flush_workers),
+        registry_shards: d.usize_or("sea.registry_shards", dflt.registry_shards),
+        per_member_concurrency: d.usize_or(
+            "sea.per_member_concurrency",
+            dflt.per_member_concurrency,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_doc_is_the_default_tuning() {
+        let d = Doc::parse("").unwrap();
+        assert_eq!(tuning_from_doc(&d), SeaTuning::default());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let d = Doc::parse(
+            "[sea]\nflush_workers = 8\nregistry_shards = 32\nper_member_concurrency = 1\n",
+        )
+        .unwrap();
+        let t = tuning_from_doc(&d);
+        assert_eq!(t.flush_workers, 8);
+        assert_eq!(t.registry_shards, 32);
+        assert_eq!(t.per_member_concurrency, 1);
+    }
+}

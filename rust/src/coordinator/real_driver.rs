@@ -43,17 +43,24 @@ pub struct PipelineCfg {
     /// Worker threads.
     pub workers: usize,
     /// Re-read each iteration's file before the next (Algorithm 1's
-    /// task-per-iteration structure). When `false`, each worker holds
-    /// one open output handle *per iteration* simultaneously (no
-    /// intermediate reads), so `workers × iterations` must stay well
-    /// under the process fd limit.
+    /// task-per-iteration structure). When `false`, iterations are
+    /// processed in groups of [`PipelineCfg::max_open_outputs`] handles
+    /// (each group seeds from the previous group's last file), so the
+    /// per-worker fd ceiling is `max_open_outputs + 1` regardless of
+    /// `iterations`.
     pub read_back: bool,
     /// Verify on-device stats after every step and fail on corruption.
     pub verify: bool,
     /// Delete intermediate files after their successor is written
     /// (keeps small fast tiers usable on the test box).
     pub cleanup_intermediate: bool,
+    /// No-read-back fd budget: max simultaneously-open output handles
+    /// per worker (`0` = default 16).
+    pub max_open_outputs: usize,
 }
+
+/// Default for [`PipelineCfg::max_open_outputs`].
+const DEFAULT_MAX_OPEN_OUTPUTS: usize = 16;
 
 /// Measured results of a real pipeline run.
 #[derive(Debug, Clone)]
@@ -131,6 +138,11 @@ pub fn run_pipeline(cfg: &PipelineCfg) -> Result<PipelineReport> {
             let verify = cfg.verify;
             let read_back = cfg.read_back;
             let cleanup = cfg.cleanup_intermediate;
+            let fd_budget = if cfg.max_open_outputs == 0 {
+                DEFAULT_MAX_OPEN_OUTPUTS
+            } else {
+                cfg.max_open_outputs
+            };
             handles.push(scope.spawn(move || {
                 loop {
                     let b = {
@@ -143,7 +155,7 @@ pub fn run_pipeline(cfg: &PipelineCfg) -> Result<PipelineReport> {
                     let tb = Instant::now();
                     let res = process_block(
                         b, engine.as_ref(), vfs.as_ref(), dataset, spec, prefix,
-                        read_back, verify, cleanup,
+                        read_back, verify, cleanup, fd_budget,
                         &bytes_read, &bytes_written,
                     );
                     block_times.lock().expect("times poisoned")[b] =
@@ -207,6 +219,7 @@ fn process_block(
     read_back: bool,
     verify: bool,
     cleanup: bool,
+    fd_budget: usize,
     bytes_read: &AtomicU64,
     bytes_written: &AtomicU64,
 ) -> Result<()> {
@@ -246,34 +259,32 @@ fn process_block(
             }
         }
     } else {
-        // single task holding each stride in memory across iterations:
-        // one pass over the input, writing every iteration's file at the
-        // stride's offset (no intermediate read-backs, no D_m reads)
-        let mut outs: Vec<Box<dyn VfsFile>> = (1..=spec.iterations)
-            .map(|i| vfs.open(&derived_path(prefix, spec, b, i), OpenMode::Write))
-            .collect::<Result<_>>()?;
-        let mut src = vfs.open(&input_rel, OpenMode::Read)?;
-        let mut raw = vec![0u8; plan.stride_bytes()];
-        let mut chunk = vec![0f32; stride_elems];
-        for k in 0..plan.strides() {
-            let off = plan.offset(k);
-            src.pread_exact(&mut raw, off)?;
-            bytes_read.fetch_add(raw.len() as u64, Ordering::Relaxed);
-            bytes_to_f32_into(&raw, &mut chunk)?;
-            for (idx, out) in outs.iter_mut().enumerate() {
-                let i = idx + 1;
-                let stats = engine.step(&mut chunk)?;
+        // single task holding each stride in memory across iteration
+        // groups: one pass over the source per group, writing every
+        // iteration's file at the stride's offset (no intermediate
+        // read-backs, no D_m reads within a group), with at most
+        // `fd_budget + 1` handles open at once
+        let outs: Vec<PathBuf> = (1..=spec.iterations)
+            .map(|i| derived_path(prefix, spec, b, i))
+            .collect();
+        stream_iteration_groups(
+            vfs,
+            &input_rel,
+            &outs,
+            &plan,
+            fd_budget,
+            |i, chunk| {
+                let stats = engine.step(chunk)?;
                 if verify {
                     stats
                         .certify_uniform(base + i as f32, stride_elems)
                         .map_err(|e| Error::Integrity(format!("block {b} iter {i}: {e}")))?;
                 }
-                f32_to_bytes_into(&chunk, &mut raw);
-                out.pwrite_all(&raw, off)?;
-                bytes_written.fetch_add(raw.len() as u64, Ordering::Relaxed);
-            }
-        }
-        drop(outs); // close writers: Sea's deferred mgmt fires here
+                Ok(())
+            },
+            bytes_read,
+            bytes_written,
+        )?;
         if cleanup {
             for i in 1..spec.iterations {
                 let _ = vfs.unlink(&derived_path(prefix, spec, b, i));
@@ -281,4 +292,198 @@ fn process_block(
         }
     }
     Ok(())
+}
+
+/// Stream `outs.len()` derived iteration files from `input`, holding at
+/// most `budget` output handles (plus one source) open at a time.
+///
+/// Iterations are processed in groups of `budget`: within a group each
+/// source stride is read once and every group member's `step` output is
+/// written at the stride's offset. The last handle of a group is kept
+/// open as the next group's source — it is both still write-pinned (so
+/// deferred-mgmt backends like Sea can't evict it mid-read) and the
+/// bytes of the iteration the next group resumes from. `step(i, chunk)`
+/// advances the chunk from iteration `i-1` to `i` in place (1-based).
+#[allow(clippy::too_many_arguments)]
+fn stream_iteration_groups(
+    vfs: &dyn Vfs,
+    input: &Path,
+    outs: &[PathBuf],
+    plan: &StridePlan,
+    budget: usize,
+    mut step: impl FnMut(usize, &mut [f32]) -> Result<()>,
+    bytes_read: &AtomicU64,
+    bytes_written: &AtomicU64,
+) -> Result<()> {
+    let budget = budget.max(1);
+    let mut raw = vec![0u8; plan.stride_bytes()];
+    let mut chunk = vec![0f32; plan.stride_elems];
+    let mut carry: Option<Box<dyn VfsFile>> = None;
+    let mut start = 0usize; // 0-based index into `outs`
+    while start < outs.len() {
+        let end = (start + budget).min(outs.len());
+        let mut group: Vec<Box<dyn VfsFile>> = outs[start..end]
+            .iter()
+            .map(|p| vfs.open(p, OpenMode::Write))
+            .collect::<Result<_>>()?;
+        let mut src: Box<dyn VfsFile> = match carry.take() {
+            Some(h) => h, // previous group's last output, still open
+            None => vfs.open(input, OpenMode::Read)?,
+        };
+        for k in 0..plan.strides() {
+            let off = plan.offset(k);
+            src.pread_exact(&mut raw, off)?;
+            bytes_read.fetch_add(raw.len() as u64, Ordering::Relaxed);
+            bytes_to_f32_into(&raw, &mut chunk)?;
+            for (idx, out) in group.iter_mut().enumerate() {
+                step(start + idx + 1, &mut chunk)?;
+                f32_to_bytes_into(&chunk, &mut raw);
+                out.pwrite_all(&raw, off)?;
+                bytes_written.fetch_add(raw.len() as u64, Ordering::Relaxed);
+            }
+        }
+        drop(src);
+        if end < outs.len() {
+            // keep the boundary file's handle: next group reads from it
+            carry = group.pop();
+        }
+        drop(group); // close writers: Sea's deferred mgmt fires here
+        start = end;
+    }
+    drop(carry);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vfs::RealFs;
+    use crate::workload::dataset::f32_to_bytes_into as to_bytes;
+    use std::sync::atomic::AtomicUsize;
+
+    /// Vfs decorator counting concurrently-open handles (the fd ceiling).
+    struct CountingVfs {
+        inner: RealFs,
+        open_now: Arc<AtomicUsize>,
+        peak: Arc<AtomicUsize>,
+    }
+
+    struct CountingFile {
+        inner: Box<dyn VfsFile>,
+        open_now: Arc<AtomicUsize>,
+    }
+
+    impl Drop for CountingFile {
+        fn drop(&mut self) {
+            self.open_now.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    impl VfsFile for CountingFile {
+        fn pread(&mut self, buf: &mut [u8], off: u64) -> Result<usize> {
+            self.inner.pread(buf, off)
+        }
+        fn pwrite(&mut self, data: &[u8], off: u64) -> Result<usize> {
+            self.inner.pwrite(data, off)
+        }
+        fn set_len(&mut self, len: u64) -> Result<()> {
+            self.inner.set_len(len)
+        }
+        fn fsync(&mut self) -> Result<()> {
+            self.inner.fsync()
+        }
+        fn len(&self) -> Result<u64> {
+            self.inner.len()
+        }
+    }
+
+    impl Vfs for CountingVfs {
+        fn open(&self, path: &Path, mode: OpenMode) -> Result<Box<dyn VfsFile>> {
+            let inner = self.inner.open(path, mode)?;
+            let now = self.open_now.fetch_add(1, Ordering::Relaxed) + 1;
+            self.peak.fetch_max(now, Ordering::Relaxed);
+            Ok(Box::new(CountingFile { inner, open_now: self.open_now.clone() }))
+        }
+        fn unlink(&self, path: &Path) -> Result<()> {
+            self.inner.unlink(path)
+        }
+        fn exists(&self, path: &Path) -> bool {
+            self.inner.exists(path)
+        }
+        fn size(&self, path: &Path) -> Result<u64> {
+            self.inner.size(path)
+        }
+        fn rename(&self, from: &Path, to: &Path) -> Result<()> {
+            self.inner.rename(from, to)
+        }
+        fn readdir(&self, path: &Path) -> Result<Vec<String>> {
+            self.inner.readdir(path)
+        }
+    }
+
+    use std::path::Path;
+
+    #[test]
+    fn no_read_back_streaming_respects_fd_budget() {
+        // regression for the known limit: the no-read-back path used to
+        // hold one fd open per iteration; with a budget of 4 the ceiling
+        // must stay at budget + 1 (outputs + the group source) even for
+        // 40 iterations
+        let dir = std::env::temp_dir()
+            .join(format!("sea_fdbudget_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let vfs = CountingVfs {
+            inner: RealFs::new(&dir).unwrap(),
+            open_now: Arc::new(AtomicUsize::new(0)),
+            peak: Arc::new(AtomicUsize::new(0)),
+        };
+        // 64-element input block, 16-element strides, base value 5.0
+        let elems = 64usize;
+        let base = 5.0f32;
+        let input = PathBuf::from("inputs/block.dat");
+        let mut raw = vec![0u8; elems * 4];
+        to_bytes(&vec![base; elems], &mut raw);
+        vfs.write(&input, &raw).unwrap();
+
+        let iterations = 40usize;
+        let budget = 4usize;
+        let outs: Vec<PathBuf> =
+            (1..=iterations).map(|i| PathBuf::from(format!("out/iter{i:02}.dat"))).collect();
+        let plan = StridePlan::new(elems, 16).unwrap();
+        let br = AtomicU64::new(0);
+        let bw = AtomicU64::new(0);
+        stream_iteration_groups(
+            &vfs,
+            &input,
+            &outs,
+            &plan,
+            budget,
+            |_i, chunk| {
+                for x in chunk.iter_mut() {
+                    *x += 1.0;
+                }
+                Ok(())
+            },
+            &br,
+            &bw,
+        )
+        .unwrap();
+
+        let peak = vfs.peak.load(Ordering::Relaxed);
+        assert!(peak <= budget + 1, "fd ceiling exceeded: peak {peak}");
+        assert_eq!(vfs.open_now.load(Ordering::Relaxed), 0, "all handles closed");
+        // every iteration file holds base + i across all strides
+        for (idx, p) in outs.iter().enumerate() {
+            let got = vfs.read(p).unwrap();
+            assert_eq!(got.len(), elems * 4);
+            for (e, quad) in got.chunks(4).enumerate() {
+                let v = f32::from_le_bytes([quad[0], quad[1], quad[2], quad[3]]);
+                assert_eq!(v, base + (idx + 1) as f32, "iter {} elem {e}", idx + 1);
+            }
+        }
+        // group-boundary re-reads: 40 iterations / budget 4 = 10 sources
+        assert_eq!(br.load(Ordering::Relaxed), (elems * 4 * 10) as u64);
+        assert_eq!(bw.load(Ordering::Relaxed), (elems * 4 * iterations) as u64);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }

@@ -3,64 +3,108 @@
 //! Real-mode worker threads and the (single-threaded) simulator share
 //! this type; a plain mutex keeps the arithmetic exact — contention is
 //! negligible next to actual I/O.
+//!
+//! Since the backend-stack refactor the accountant keeps a full
+//! [`LedgerLine`] per device (free, used, cumulative debits/credits)
+//! rather than a bare free counter, so every credit and debit is
+//! attributable to the backend it targeted (`SeaFs::ledger` surfaces
+//! the lines next to each device's name and backend).
 
 use std::sync::Mutex;
 
 use crate::hierarchy::{DeviceRef, Hierarchy};
 
-/// Free-space ledger over a [`Hierarchy`]'s devices.
+/// One device's ledger state.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LedgerLine {
+    /// Bytes currently free.
+    pub free: u64,
+    /// Bytes currently debited (placed files, reservations).
+    pub used: u64,
+    /// Cumulative bytes ever debited (placement traffic).
+    pub debits: u64,
+    /// Cumulative bytes ever credited back (evictions, shrinks, spills).
+    pub credits: u64,
+}
+
+/// Per-device space ledger over a [`Hierarchy`]'s devices.
 #[derive(Debug)]
 pub struct SpaceAccountant {
-    free: Mutex<Vec<u64>>,
+    lines: Mutex<Vec<LedgerLine>>,
 }
 
 impl SpaceAccountant {
     /// All devices start with their full capacity free.
     pub fn new(h: &Hierarchy) -> SpaceAccountant {
         SpaceAccountant {
-            free: Mutex::new(h.iter().map(|(_, d)| d.capacity).collect()),
+            lines: Mutex::new(
+                h.iter()
+                    .map(|(_, d)| LedgerLine { free: d.capacity, ..LedgerLine::default() })
+                    .collect(),
+            ),
         }
     }
 
     /// Current free bytes of `d`.
     pub fn free(&self, d: DeviceRef) -> u64 {
-        self.free.lock().expect("accountant poisoned")[d]
+        self.lines.lock().expect("accountant poisoned")[d].free
+    }
+
+    /// Bytes currently debited from `d`.
+    pub fn used(&self, d: DeviceRef) -> u64 {
+        self.lines.lock().expect("accountant poisoned")[d].used
     }
 
     /// Attempt to debit `bytes` from `d` **iff** at least `floor` bytes
     /// are free (the `p·F` eligibility rule). Returns success.
     pub fn try_debit(&self, d: DeviceRef, bytes: u64, floor: u64) -> bool {
-        let mut f = self.free.lock().expect("accountant poisoned");
-        if f[d] >= floor && f[d] >= bytes {
-            f[d] -= bytes;
+        let mut lines = self.lines.lock().expect("accountant poisoned");
+        let l = &mut lines[d];
+        if l.free >= floor && l.free >= bytes {
+            l.free -= bytes;
+            l.used += bytes;
+            l.debits += bytes;
             true
         } else {
             false
         }
     }
 
-    /// Credit `bytes` back to `d` (eviction / deletion), saturating at
-    /// the ledger's running total (over-credit is a caller bug, but we
-    /// saturate rather than wrap).
+    /// Credit `bytes` back to `d` (eviction / deletion / spill),
+    /// saturating at the ledger's running totals (over-credit is a
+    /// caller bug, but we saturate rather than wrap).
     pub fn credit(&self, d: DeviceRef, bytes: u64) {
-        let mut f = self.free.lock().expect("accountant poisoned");
-        f[d] = f[d].saturating_add(bytes);
+        let mut lines = self.lines.lock().expect("accountant poisoned");
+        let l = &mut lines[d];
+        l.free = l.free.saturating_add(bytes);
+        l.used = l.used.saturating_sub(bytes);
+        l.credits += bytes;
     }
 
     /// Largest free block across devices (diagnostics for NoSpace errors).
     pub fn largest_free(&self) -> u64 {
-        self.free
+        self.lines
             .lock()
             .expect("accountant poisoned")
             .iter()
-            .copied()
+            .map(|l| l.free)
             .max()
             .unwrap_or(0)
     }
 
     /// Total free bytes.
     pub fn total_free(&self) -> u64 {
-        self.free.lock().expect("accountant poisoned").iter().sum()
+        self.lines
+            .lock()
+            .expect("accountant poisoned")
+            .iter()
+            .map(|l| l.free)
+            .sum()
+    }
+
+    /// Snapshot of every device's ledger line, indexed by [`DeviceRef`].
+    pub fn lines(&self) -> Vec<LedgerLine> {
+        self.lines.lock().expect("accountant poisoned").clone()
     }
 }
 
@@ -85,6 +129,7 @@ mod tests {
         // now 6 MiB free < 8 MiB floor: rejected even though 4 fits
         assert!(!acc.try_debit(0, 4 * MIB, 8 * MIB));
         assert_eq!(acc.free(0), 6 * MIB);
+        assert_eq!(acc.used(0), 4 * MIB);
     }
 
     #[test]
@@ -94,6 +139,7 @@ mod tests {
         assert!(acc.try_debit(1, 50 * MIB, 0));
         acc.credit(1, 50 * MIB);
         assert_eq!(acc.free(1), 100 * MIB);
+        assert_eq!(acc.used(1), 0);
     }
 
     #[test]
@@ -102,6 +148,22 @@ mod tests {
         let acc = SpaceAccountant::new(&h);
         assert_eq!(acc.total_free(), 110 * MIB);
         assert_eq!(acc.largest_free(), 100 * MIB);
+    }
+
+    #[test]
+    fn ledger_lines_record_cumulative_traffic() {
+        let h = h2();
+        let acc = SpaceAccountant::new(&h);
+        assert!(acc.try_debit(0, 3 * MIB, 0));
+        assert!(acc.try_debit(0, 2 * MIB, 0));
+        acc.credit(0, 4 * MIB);
+        let lines = acc.lines();
+        assert_eq!(lines[0].free, 9 * MIB);
+        assert_eq!(lines[0].used, MIB);
+        assert_eq!(lines[0].debits, 5 * MIB);
+        assert_eq!(lines[0].credits, 4 * MIB);
+        // device 1 untouched
+        assert_eq!(lines[1], LedgerLine { free: 100 * MIB, ..LedgerLine::default() });
     }
 
     #[test]
@@ -126,5 +188,6 @@ mod tests {
         let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert_eq!(total, 1000, "exactly capacity granted");
         assert_eq!(acc.free(0), 0);
+        assert_eq!(acc.used(0), 1000);
     }
 }

@@ -3,8 +3,13 @@
 //!
 //! The hierarchy is *abstract*: a device is an index with a tier rank and
 //! a capacity. The simulator maps indices to [`crate::sim::Location`]s and
-//! the real-bytes VFS maps them to directories, so the same selection and
-//! accounting code drives both (DESIGN.md S8/S9).
+//! the real-bytes VFS maps them to **storage backends** — since the
+//! backend-stack refactor a device may carry an `Arc<dyn Vfs>` handle
+//! ([`Hierarchy::add_backed`]), so `SeaFs` talks to every placement
+//! target (tmpfs dir, local disk, striped PFS stand-in) through the same
+//! [`crate::vfs::Vfs`] abstraction instead of raw `std::fs` paths. The
+//! simulator keeps using backend-less devices ([`Hierarchy::add`]); the
+//! same selection and accounting code drives both (DESIGN.md S8/S9).
 //!
 //! Selection rule, as in the paper:
 //! * walk tiers from fastest to slowest;
@@ -16,18 +21,28 @@
 //!   write the file to it" from those two user-provided numbers;
 //! * the chosen device is debited the actual file size; if no device in
 //!   any tier is eligible the caller falls back to the PFS.
+//!
+//! Accounting flows through the [`SpaceAccountant`]'s per-device ledger
+//! ([`LedgerLine`]): every debit and credit is recorded against the
+//! device it targets, so diagnostics (and `SeaFs::ledger`) can report
+//! occupancy and cumulative traffic per backend.
 
 mod accountant;
 mod select;
 
-pub use accountant::SpaceAccountant;
+pub use accountant::{LedgerLine, SpaceAccountant};
 pub use select::{select_device, SelectCfg};
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::vfs::Vfs;
 
 /// Index of a device within a [`Hierarchy`].
 pub type DeviceRef = usize;
 
 /// Static description of one device.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct DeviceInfo {
     /// Tier rank: 0 = fastest. Devices with equal rank are peers.
     pub tier: u8,
@@ -35,6 +50,20 @@ pub struct DeviceInfo {
     pub capacity: u64,
     /// Display name (diagnostics / reports).
     pub name: String,
+    /// Storage backend the device's bytes live on (real-bytes mounts);
+    /// `None` for abstract devices (simulator).
+    pub backend: Option<Arc<dyn Vfs>>,
+}
+
+impl fmt::Debug for DeviceInfo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("DeviceInfo")
+            .field("tier", &self.tier)
+            .field("capacity", &self.capacity)
+            .field("name", &self.name)
+            .field("backend", &self.backend.as_ref().map(|_| "<vfs>"))
+            .finish()
+    }
 }
 
 /// An ordered set of devices forming the Sea hierarchy for one node.
@@ -49,15 +78,42 @@ impl Hierarchy {
         Hierarchy::default()
     }
 
-    /// Add a device; returns its [`DeviceRef`].
+    /// Add an abstract (backend-less) device; returns its [`DeviceRef`].
     pub fn add(&mut self, tier: u8, capacity: u64, name: impl Into<String>) -> DeviceRef {
-        self.devices.push(DeviceInfo { tier, capacity, name: name.into() });
+        self.devices.push(DeviceInfo {
+            tier,
+            capacity,
+            name: name.into(),
+            backend: None,
+        });
+        self.devices.len() - 1
+    }
+
+    /// Add a device whose bytes live on a [`Vfs`] backend.
+    pub fn add_backed(
+        &mut self,
+        tier: u8,
+        capacity: u64,
+        name: impl Into<String>,
+        backend: Arc<dyn Vfs>,
+    ) -> DeviceRef {
+        self.devices.push(DeviceInfo {
+            tier,
+            capacity,
+            name: name.into(),
+            backend: Some(backend),
+        });
         self.devices.len() - 1
     }
 
     /// Device metadata.
     pub fn info(&self, d: DeviceRef) -> &DeviceInfo {
         &self.devices[d]
+    }
+
+    /// The device's storage backend, if it has one.
+    pub fn backend(&self, d: DeviceRef) -> Option<&Arc<dyn Vfs>> {
+        self.devices[d].backend.as_ref()
     }
 
     /// Number of devices.
@@ -98,6 +154,8 @@ impl Hierarchy {
 mod tests {
     use super::*;
     use crate::util::GIB;
+    use crate::vfs::RealFs;
+    use crate::vfs::testutil::scratch;
 
     #[test]
     fn tiers_sorted_and_deduped() {
@@ -109,5 +167,24 @@ mod tests {
         assert_eq!(h.tier_devices(1).len(), 2);
         assert_eq!(h.info(1).name, "tmpfs");
         assert_eq!(h.len(), 3);
+        assert!(h.backend(0).is_none(), "abstract devices carry no backend");
+    }
+
+    #[test]
+    fn backed_devices_expose_their_vfs() {
+        let dir = scratch("hier_backed");
+        let mut h = Hierarchy::new();
+        let fs: Arc<dyn Vfs> = Arc::new(RealFs::new(&dir).unwrap());
+        let d = h.add_backed(0, GIB, "tmpfs", fs);
+        assert!(h.backend(d).is_some());
+        // the handle is usable as a plain Vfs
+        h.backend(d)
+            .unwrap()
+            .write(std::path::Path::new("probe"), b"x")
+            .unwrap();
+        assert!(h.backend(d).unwrap().exists(std::path::Path::new("probe")));
+        // Debug doesn't choke on the non-Debug trait object
+        assert!(format!("{h:?}").contains("tmpfs"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

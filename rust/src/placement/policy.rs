@@ -3,7 +3,10 @@
 //!
 //! The real-bytes VFS uses the same [`Hierarchy`]/[`SpaceAccountant`]/
 //! [`RuleSet`] machinery (module `vfs::sea`); only the device mapping
-//! differs (directories instead of [`Location`]s).
+//! differs (the simulator binds devices to [`Location`]s, the VFS binds
+//! them to `Vfs` backends via `Hierarchy::add_backed`). Both flavours
+//! account through the same per-device ledger, so occupancy diagnostics
+//! ([`SeaPolicy::device_usage`]) read identically on either side.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -97,6 +100,18 @@ impl SeaPolicy {
     /// Free bytes on a node's fastest tier (diagnostics).
     pub fn tmpfs_free(&self, node: usize) -> u64 {
         self.nodes[node].accountant.free(0)
+    }
+
+    /// Per-device `(name, used, free)` on one node, from the ledger —
+    /// lets experiments report tier occupancy without poking the
+    /// accountant directly.
+    pub fn device_usage(&self, node: usize) -> Vec<(String, u64, u64)> {
+        let nd = &self.nodes[node];
+        nd.hierarchy
+            .iter()
+            .zip(nd.accountant.lines())
+            .map(|((_, info), l)| (info.name.clone(), l.used, l.free))
+            .collect()
     }
 }
 
@@ -237,6 +252,21 @@ mod tests {
         p.on_freed(Location::Tmpfs { node: 0 }, 4 * MIB);
         let f2 = table.intern("again");
         assert_eq!(p.place(&mut st, 0, f2, MIB), Location::Tmpfs { node: 0 });
+    }
+
+    #[test]
+    fn device_usage_tracks_the_ledger() {
+        let (mut p, table) = policy(RuleSet::default());
+        let (_sim, stack) = stack_state();
+        let mut st = stack.state.borrow_mut();
+        let f = table.intern("u0");
+        let loc = p.place(&mut st, 0, f, MIB);
+        assert_eq!(loc, Location::Tmpfs { node: 0 });
+        let usage = p.device_usage(0);
+        assert_eq!(usage.len(), 3, "tmpfs + 2 disks");
+        assert_eq!(usage[0], ("n0.tmpfs".to_string(), MIB, 9 * MIB));
+        p.on_freed(loc, MIB);
+        assert_eq!(p.device_usage(0)[0].1, 0, "freed space leaves the ledger");
     }
 
     #[test]

@@ -26,10 +26,20 @@
 //! * [`rate::RateLimitedFs`] — a decorator imposing read/write bandwidth
 //!   caps with **per-request** byte accounting (stands in for a loaded
 //!   PFS on this single machine);
+//! * [`striped::StripedFs`] — shards files across N member `Vfs` roots
+//!   by path hash (stand-in for a Lustre deployment striped across
+//!   OSTs); exposes its member topology via [`Vfs::shard_count`] /
+//!   [`Vfs::shard_of`] so flush schedulers can respect per-member
+//!   concurrency limits;
 //! * [`sea::SeaFs`] — **the paper's library**: mountpoint translation to
-//!   the fastest eligible device directory at `open`, open-handle
+//!   the fastest eligible device *backend* at `open` (every placement
+//!   target, device tiers and the PFS alike, is a `Vfs`), open-handle
 //!   tracking, and rule-driven flush/evict via a multi-worker flush pool
-//!   over a sharded registry, plus prefetch support.
+//!   over a sharded registry, plus prefetch support and mid-stream PFS
+//!   spill when a device fills under a writer.
+//!
+//! Decorators compose: a `SeaFs` mounted over
+//! `RateLimitedFs<StripedFs>` emulates a loaded, OST-striped Lustre.
 //!
 //! A separate `cdylib` (`sea-interpose`) provides the literal
 //! `LD_PRELOAD` mechanism for unmodified binaries; it reuses the same
@@ -39,10 +49,12 @@
 pub mod rate;
 pub mod real;
 pub mod sea;
+pub mod striped;
 
 pub use rate::RateLimitedFs;
 pub use real::RealFs;
-pub use sea::{SeaFs, SeaFsConfig};
+pub use sea::{DeviceSpec, SeaFs, SeaFsConfig, SeaTuning};
+pub use striped::StripedFs;
 
 use std::path::Path;
 
@@ -57,6 +69,11 @@ pub enum OpenMode {
     Write,
     /// Create if missing, keep existing contents, read/write.
     ReadWrite,
+    /// Create if missing, keep existing contents; every write lands at
+    /// the current end-of-file and the caller's offset is ignored
+    /// (POSIX `O_APPEND`). Backends must resolve the offset per request
+    /// so concurrent appenders never interleave within one write.
+    Append,
 }
 
 impl OpenMode {
@@ -68,6 +85,11 @@ impl OpenMode {
     /// Does this mode truncate an existing file?
     pub fn truncates(self) -> bool {
         matches!(self, OpenMode::Write)
+    }
+
+    /// Do writes ignore the caller's offset and land at end-of-file?
+    pub fn appends(self) -> bool {
+        matches!(self, OpenMode::Append)
     }
 }
 
@@ -164,6 +186,21 @@ pub trait Vfs: Send + Sync {
     /// No-op for backends without daemons.
     fn sync_mgmt(&self) -> Result<()> {
         Ok(())
+    }
+
+    /// Number of independent storage shards (e.g. striped-PFS members /
+    /// OSTs) behind this backend, or `None` for monolithic backends.
+    /// Decorators should delegate so topology survives wrapping.
+    fn shard_count(&self) -> Option<usize> {
+        None
+    }
+
+    /// Which shard `path` maps to (stable for a given path), when the
+    /// backend is sharded. Schedulers use this to cap in-flight work
+    /// per shard.
+    fn shard_of(&self, path: &Path) -> Option<usize> {
+        let _ = path;
+        None
     }
 
     /// Read the entire file at `path` (convenience over [`Vfs::open`]).

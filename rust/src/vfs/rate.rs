@@ -150,6 +150,20 @@ impl<F: Vfs> Vfs for RateLimitedFs<F> {
     fn readdir(&self, path: &Path) -> Result<Vec<String>> {
         self.inner.readdir(path)
     }
+
+    fn sync_mgmt(&self) -> Result<()> {
+        self.inner.sync_mgmt()
+    }
+
+    // shard topology survives the decorator, so a rate-limited striped
+    // PFS still exposes its members to OST-aware flush scheduling
+    fn shard_count(&self) -> Option<usize> {
+        self.inner.shard_count()
+    }
+
+    fn shard_of(&self, path: &Path) -> Option<usize> {
+        self.inner.shard_of(path)
+    }
 }
 
 #[cfg(test)]

@@ -39,11 +39,14 @@ impl RealFs {
 pub struct RealFile {
     path: PathBuf,
     file: fs::File,
+    /// `O_APPEND` handle: writes go through the kernel's atomic
+    /// end-of-file placement instead of `write_at`.
+    append: bool,
 }
 
 impl RealFile {
     /// Open `path` (already fully resolved — no root translation) in
-    /// `mode`. Used by [`RealFs`] and by `SeaFs` for device-local files.
+    /// `mode`. Used by [`RealFs`] for files under its root.
     pub(crate) fn open_at(path: PathBuf, mode: OpenMode) -> Result<RealFile> {
         if mode.writable() {
             if let Some(dir) = path.parent() {
@@ -60,12 +63,15 @@ impl RealFile {
             OpenMode::ReadWrite => {
                 opts.write(true).create(true);
             }
+            OpenMode::Append => {
+                opts.append(true).create(true);
+            }
         }
         let file = opts.open(&path).map_err(|e| match e.kind() {
             std::io::ErrorKind::NotFound => Error::NotFound(path.clone()),
             _ => Error::io(&path, e),
         })?;
-        Ok(RealFile { path, file })
+        Ok(RealFile { path, file, append: mode.appends() })
     }
 }
 
@@ -75,6 +81,15 @@ impl VfsFile for RealFile {
     }
 
     fn pwrite(&mut self, data: &[u8], off: u64) -> Result<usize> {
+        if self.append {
+            // the kernel serialises concurrent appends: each write_all
+            // lands contiguously at the file's current end
+            use std::io::Write;
+            (&self.file)
+                .write_all(data)
+                .map_err(|e| Error::io(&self.path, e))?;
+            return Ok(data.len());
+        }
         self.file
             .write_all_at(data, off)
             .map_err(|e| Error::io(&self.path, e))?;
@@ -272,6 +287,28 @@ mod tests {
         assert_eq!(fs_.read(p).unwrap(), b"01XY45");
         let mut f = fs_.open(p, OpenMode::Write).unwrap();
         assert_eq!(f.len().unwrap(), 0, "Write truncates");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn append_mode_ignores_offsets_and_lands_at_eof() {
+        let dir = scratch("realfs_append");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let p = Path::new("log.txt");
+        fs_.write(p, b"head;").unwrap();
+        {
+            let mut a = fs_.open(p, OpenMode::Append).unwrap();
+            let mut b = fs_.open(p, OpenMode::Append).unwrap();
+            // offsets are ignored: everything appends
+            a.pwrite_all(b"a1;", 0).unwrap();
+            b.pwrite_all(b"b1;", 0).unwrap();
+            a.pwrite_all(b"a2;", 999).unwrap();
+            // append handles still read at explicit offsets
+            let mut head = [0u8; 5];
+            a.pread_exact(&mut head, 0).unwrap();
+            assert_eq!(&head, b"head;");
+        }
+        assert_eq!(fs_.read(p).unwrap(), b"head;a1;b1;a2;");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,32 +1,52 @@
-//! [`SeaFs`] — the paper's library, real-bytes flavour.
+//! [`SeaFs`] — the paper's library, real-bytes flavour, over a stack of
+//! pluggable [`Vfs`] backends.
 //!
-//! A Sea mount wraps a *long-term* backend (the "PFS": any [`Vfs`],
-//! typically rate-limited to emulate a loaded Lustre) plus an ordered set
-//! of fast device directories (tmpfs `/dev/shm`, local disk dirs).
-//! Every path under the logical mountpoint is translated to the fastest
-//! eligible device (the same `hierarchy` selection the simulator uses);
-//! paths outside the mountpoint pass through to the PFS untouched —
-//! exactly the interception semantics of the paper's glibc wrappers.
+//! A Sea mount wraps a *long-term* backend (the "PFS": any [`Vfs`] —
+//! a plain directory, a [`crate::vfs::StripedFs`] standing in for an
+//! OST-striped Lustre, optionally rate-limited to emulate load) plus an
+//! ordered set of fast **device backends** ([`DeviceSpec`]: tmpfs
+//! `/dev/shm`, local disk dirs — each itself a [`Vfs`]). Every path
+//! under the logical mountpoint is translated to the fastest eligible
+//! device (the same `hierarchy` selection the simulator uses); paths
+//! outside the mountpoint pass through to the PFS untouched — exactly
+//! the interception semantics of the paper's glibc wrappers. Because
+//! every placement target is a `Vfs`, decorators compose anywhere in
+//! the stack (a throttled striped PFS is
+//! `RateLimitedFs<StripedFs>`).
 //!
 //! Placement happens at [`Vfs::open`]: a writer handle reserves a device
-//! slot, debits space as the file grows, and only when the **last**
-//! writer handle closes is the file handed to memory management. The
-//! Table 1 modes (Copy → replicate to PFS; Move → replicate then drop
-//! local; Remove → drop without persisting) are applied asynchronously by
-//! a **flush pool** of worker threads (a multi-worker generalisation of
-//! the paper's §5.1 daemon) so several files flush to the PFS in
-//! parallel. File metadata lives in an N-way **sharded registry** (one
+//! slot and debits the [`crate::hierarchy::SpaceAccountant`]'s
+//! per-device ledger as the file grows. When a streaming writer
+//! outgrows its device, the handle **spills mid-stream**: under the
+//! per-file flush lock the partial file migrates to the PFS backend
+//! (epoch/generation-checked, writer counts preserved), the device
+//! ledger is credited, and the write continues on the PFS instead of
+//! failing with `NoSpace`. Only when the **last** writer handle closes
+//! is the file handed to memory management. The Table 1 modes (Copy →
+//! replicate to PFS; Move → replicate then drop local; Remove → drop
+//! without persisting) are applied asynchronously by a **flush pool**
+//! of worker threads (a multi-worker generalisation of the paper's §5.1
+//! daemon) so several files flush to the PFS in parallel. When the PFS
+//! advertises shard topology ([`Vfs::shard_count`], e.g. a striped
+//! backend), the pool is **OST-aware**: at most
+//! [`SeaTuning::per_member_concurrency`] flushes are in flight per
+//! member. File metadata lives in an N-way **sharded registry** (one
 //! mutex per shard) so concurrent open/read/close traffic on different
-//! files never serialises on a single global lock.
+//! files never serialises on a single global lock. Worker and shard
+//! counts are [`SeaTuning`] knobs (`SeaFsConfig::tuning`).
 //!
 //! Flush jobs carry the registry entry's *generation*: a racing
 //! overwrite bumps the generation, so a stale job is discarded instead of
 //! flushing half-overwritten bytes, and per-file flush serialisation
 //! keeps two generations of the same file from interleaving on the PFS.
+//!
+//! [`OpenMode::Append`] handles resolve every write's offset from the
+//! registry entry under its shard lock, so concurrent appenders reserve
+//! disjoint ranges and their positioned writes can never interleave
+//! within a record.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
-use std::fs;
 use std::hash::{Hash, Hasher};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -37,23 +57,90 @@ use crate::error::{Error, Result};
 use crate::hierarchy::{select_device, DeviceRef, Hierarchy, SelectCfg, SpaceAccountant};
 use crate::placement::rules::{MgmtMode, RuleSet};
 use crate::util::Rng;
-use crate::vfs::real::RealFile;
-use crate::vfs::{OpenMode, Vfs, VfsFile};
+use crate::vfs::{OpenMode, RealFs, Vfs, VfsFile};
 
-/// Registry shards: enough to keep 2× typical worker counts from
-/// colliding, small enough that readdir's full sweep stays cheap.
-const REGISTRY_SHARDS: usize = 16;
+/// Default registry shard count: enough to keep 2× typical worker
+/// counts from colliding, small enough that readdir's full sweep stays
+/// cheap.
+const DEFAULT_REGISTRY_SHARDS: usize = 16;
 
-/// Flush pool size (the paper used a single daemon; parallel flushing
-/// overlaps several PFS transfers).
-const FLUSH_WORKERS: usize = 4;
+/// Default flush pool size (the paper used a single daemon; parallel
+/// flushing overlaps several PFS transfers).
+const DEFAULT_FLUSH_WORKERS: usize = 4;
+
+/// Default in-flight flush cap per striped-PFS member.
+const DEFAULT_PER_MEMBER_CONCURRENCY: usize = 2;
+
+/// Copy buffer for mid-stream spills.
+const SPILL_CHUNK: usize = 1 << 20;
+
+/// One fast placement target: a [`Vfs`] backend with a tier rank and a
+/// byte budget.
+#[derive(Clone)]
+pub struct DeviceSpec {
+    /// Where the device's bytes live.
+    pub backend: Arc<dyn Vfs>,
+    /// Tier rank: 0 = fastest.
+    pub tier: u8,
+    /// Usable capacity in bytes (the ledger's budget, not probed).
+    pub capacity: u64,
+    /// Display name (diagnostics / `device_of`).
+    pub name: String,
+}
+
+impl DeviceSpec {
+    /// The common case: a local directory as a [`RealFs`] backend, named
+    /// after its path.
+    pub fn dir(path: impl Into<PathBuf>, tier: u8, capacity: u64) -> Result<DeviceSpec> {
+        let path = path.into();
+        let name = path.to_string_lossy().into_owned();
+        Ok(DeviceSpec {
+            backend: Arc::new(RealFs::new(path)?),
+            tier,
+            capacity,
+            name,
+        })
+    }
+
+    /// Any [`Vfs`] as a device backend.
+    pub fn backed(
+        backend: Arc<dyn Vfs>,
+        tier: u8,
+        capacity: u64,
+        name: impl Into<String>,
+    ) -> DeviceSpec {
+        DeviceSpec { backend, tier, capacity, name: name.into() }
+    }
+}
+
+/// Tuning knobs for a Sea mount (formerly compile-time constants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeaTuning {
+    /// Flush pool worker threads (min 1).
+    pub flush_workers: usize,
+    /// Registry shard count (min 1).
+    pub registry_shards: usize,
+    /// Max in-flight flushes per striped-PFS member; 0 disables the
+    /// gate. Ignored when the PFS reports no shard topology.
+    pub per_member_concurrency: usize,
+}
+
+impl Default for SeaTuning {
+    fn default() -> SeaTuning {
+        SeaTuning {
+            flush_workers: DEFAULT_FLUSH_WORKERS,
+            registry_shards: DEFAULT_REGISTRY_SHARDS,
+            per_member_concurrency: DEFAULT_PER_MEMBER_CONCURRENCY,
+        }
+    }
+}
 
 /// Configuration of a real Sea mount.
 pub struct SeaFsConfig {
     /// Logical mountpoint prefix (e.g. `/sea`).
     pub mountpoint: PathBuf,
-    /// Fast device directories: (directory, tier rank, capacity bytes).
-    pub devices: Vec<(PathBuf, u8, u64)>,
+    /// Fast device backends, each with tier rank and capacity.
+    pub devices: Vec<DeviceSpec>,
     /// Long-term storage backend.
     pub pfs: Arc<dyn Vfs>,
     /// Max file size `F` declared by the user.
@@ -64,16 +151,40 @@ pub struct SeaFsConfig {
     pub rules: RuleSet,
     /// PRNG seed for same-tier shuffling.
     pub seed: u64,
+    /// Pool / registry / scheduling knobs.
+    pub tuning: SeaTuning,
+}
+
+/// One device's ledger joined with its hierarchy metadata (diagnostics).
+#[derive(Debug, Clone)]
+pub struct DeviceLedger {
+    /// Device display name.
+    pub name: String,
+    /// Tier rank.
+    pub tier: u8,
+    /// Configured capacity.
+    pub capacity: u64,
+    /// Bytes currently free.
+    pub free: u64,
+    /// Bytes currently placed.
+    pub used: u64,
+    /// Cumulative bytes ever debited.
+    pub debits: u64,
+    /// Cumulative bytes ever credited back.
+    pub credits: u64,
 }
 
 #[derive(Debug, Clone)]
 struct Entry {
-    dev: DeviceRef,
+    /// Device holding the local copy, or `None` once a mid-stream spill
+    /// relocated the (still-open) file to the PFS.
+    dev: Option<DeviceRef>,
     size: u64,
     flushed: bool,
-    /// Content version: bumped on every (re)placement or writer open;
-    /// flush jobs carry the generation they were enqueued for and stand
-    /// down when it no longer matches (a newer write superseded them).
+    /// Content version: bumped on every (re)placement, writer open, or
+    /// spill; flush jobs carry the generation they were enqueued for and
+    /// stand down when it no longer matches (a newer write superseded
+    /// them).
     generation: u64,
     /// Entry identity: assigned when the entry is inserted and never
     /// changed in place. Handles record the epoch of the entry their
@@ -149,6 +260,13 @@ impl Registry {
         m.get_mut(key).map(f)
     }
 
+    /// Run `f` with `key`'s whole shard map locked — one critical
+    /// section for create-or-join decisions (append opens).
+    fn with_shard<R>(&self, key: &str, f: impl FnOnce(&mut HashMap<String, Entry>) -> R) -> R {
+        let mut m = self.shard(key).lock().expect("registry poisoned");
+        f(&mut m)
+    }
+
     /// Snapshot of every key across all shards.
     fn keys(&self) -> Vec<String> {
         let mut out = Vec::new();
@@ -159,10 +277,48 @@ impl Registry {
     }
 }
 
+/// OST-aware flush gate: at most `per_member` in-flight flushes per
+/// striped-PFS member.
+struct PfsSlots {
+    per_member: usize,
+    members: usize,
+    /// (current in-flight, observed peak) per member.
+    state: Mutex<(Vec<usize>, Vec<usize>)>,
+    freed: Condvar,
+}
+
+impl PfsSlots {
+    fn acquire(&self, member: usize) -> SlotGuard<'_> {
+        let mut st = self.state.lock().expect("pfs slots poisoned");
+        while st.0[member] >= self.per_member {
+            st = self.freed.wait(st).expect("pfs slots poisoned");
+        }
+        st.0[member] += 1;
+        if st.0[member] > st.1[member] {
+            st.1[member] = st.0[member];
+        }
+        SlotGuard { slots: self, member }
+    }
+}
+
+struct SlotGuard<'a> {
+    slots: &'a PfsSlots,
+    member: usize,
+}
+
+impl Drop for SlotGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.slots.state.lock().expect("pfs slots poisoned");
+        st.0[self.member] = st.0[self.member].saturating_sub(1);
+        drop(st);
+        self.slots.freed.notify_all();
+    }
+}
+
 struct Shared {
+    /// Devices with their backends ([`Hierarchy::add_backed`]).
     hierarchy: Hierarchy,
     accountant: SpaceAccountant,
-    device_dirs: Vec<PathBuf>,
     registry: Registry,
     pfs: Arc<dyn Vfs>,
     rules: RuleSet,
@@ -178,11 +334,13 @@ struct Shared {
     /// Per-file flush serialisation (two generations of the same file
     /// must not interleave their PFS writes).
     flush_locks: Mutex<HashMap<String, Arc<Mutex<()>>>>,
+    /// Per-member in-flight flush gate, when the PFS is sharded.
+    pfs_slots: Option<PfsSlots>,
 }
 
 impl Shared {
-    fn local_path(&self, dev: DeviceRef, rel: &str) -> PathBuf {
-        self.device_dirs[dev].join(rel)
+    fn backend(&self, dev: DeviceRef) -> &Arc<dyn Vfs> {
+        self.hierarchy.backend(dev).expect("sea device carries a backend")
     }
 
     fn next_gen(&self) -> u64 {
@@ -220,6 +378,14 @@ impl Shared {
             }
         }
     }
+
+    /// Acquire the PFS member slot for `rel`, when the gate is active.
+    fn pfs_slot(&self, rel: &str) -> Option<SlotGuard<'_>> {
+        self.pfs_slots.as_ref().map(|s| {
+            let m = self.pfs.shard_of(Path::new(rel)).unwrap_or(0) % s.members;
+            s.acquire(m)
+        })
+    }
 }
 
 /// The real-bytes Sea mount.
@@ -232,7 +398,8 @@ pub struct SeaFs {
 }
 
 impl SeaFs {
-    /// Mount: builds the hierarchy, spawns the flush pool.
+    /// Mount: builds the hierarchy over the device backends, spawns the
+    /// flush pool, and arms the per-member gate when the PFS is sharded.
     pub fn mount(cfg: SeaFsConfig) -> Result<SeaFs> {
         if cfg.devices.is_empty() {
             return Err(Error::Config(
@@ -240,19 +407,24 @@ impl SeaFs {
             ));
         }
         let mut hierarchy = Hierarchy::new();
-        let mut device_dirs = Vec::new();
-        for (dir, tier, cap) in &cfg.devices {
-            fs::create_dir_all(dir).map_err(|e| Error::io(dir, e))?;
-            hierarchy.add(*tier, *cap, dir.to_string_lossy().into_owned());
-            device_dirs.push(dir.clone());
+        for d in &cfg.devices {
+            hierarchy.add_backed(d.tier, d.capacity, d.name.clone(), d.backend.clone());
         }
         let accountant = SpaceAccountant::new(&hierarchy);
+        let pfs_slots = match (cfg.pfs.shard_count(), cfg.tuning.per_member_concurrency) {
+            (Some(members), per_member) if members > 0 && per_member > 0 => Some(PfsSlots {
+                per_member,
+                members,
+                state: Mutex::new((vec![0; members], vec![0; members])),
+                freed: Condvar::new(),
+            }),
+            _ => None,
+        };
         let (tx, rx) = mpsc::channel::<Job>();
         let shared = Arc::new(Shared {
             hierarchy,
             accountant,
-            device_dirs,
-            registry: Registry::new(REGISTRY_SHARDS),
+            registry: Registry::new(cfg.tuning.registry_shards),
             pfs: cfg.pfs,
             rules: cfg.rules,
             counters: Mutex::new((0, 0)),
@@ -261,10 +433,12 @@ impl SeaFs {
             pending: Mutex::new(0),
             idle: Condvar::new(),
             flush_locks: Mutex::new(HashMap::new()),
+            pfs_slots,
         });
         let rx = Arc::new(Mutex::new(rx));
-        let mut workers = Vec::with_capacity(FLUSH_WORKERS);
-        for w in 0..FLUSH_WORKERS {
+        let nworkers = cfg.tuning.flush_workers.max(1);
+        let mut workers = Vec::with_capacity(nworkers);
+        for w in 0..nworkers {
             let sh = shared.clone();
             let rx = rx.clone();
             let h = std::thread::Builder::new()
@@ -292,17 +466,48 @@ impl SeaFs {
             .map(|r| r.to_string_lossy().into_owned())
     }
 
-    /// Where a mount-relative file currently lives (diagnostics).
+    /// Where a mount-relative file currently lives (diagnostics);
+    /// `None` when it is not on a fast device (unknown, or spilled /
+    /// flushed to the PFS).
     pub fn device_of(&self, rel: &str) -> Option<String> {
         self.shared
             .registry
             .get(rel)
-            .map(|e| self.shared.hierarchy.info(e.dev).name.clone())
+            .and_then(|e| e.dev)
+            .map(|d| self.shared.hierarchy.info(d).name.clone())
     }
 
     /// (flushes, evictions) executed by the flush pool so far.
     pub fn mgmt_counters(&self) -> (u64, u64) {
         *self.shared.counters.lock().expect("counters poisoned")
+    }
+
+    /// Per-device ledger lines joined with device metadata.
+    pub fn ledger(&self) -> Vec<DeviceLedger> {
+        let lines = self.shared.accountant.lines();
+        self.shared
+            .hierarchy
+            .iter()
+            .zip(lines)
+            .map(|((_, info), l)| DeviceLedger {
+                name: info.name.clone(),
+                tier: info.tier,
+                capacity: info.capacity,
+                free: l.free,
+                used: l.used,
+                debits: l.debits,
+                credits: l.credits,
+            })
+            .collect()
+    }
+
+    /// Peak in-flight flushes observed per PFS member, when the
+    /// OST-aware gate is active (diagnostics / benchmarks).
+    pub fn flush_member_peaks(&self) -> Option<Vec<usize>> {
+        self.shared
+            .pfs_slots
+            .as_ref()
+            .map(|s| s.state.lock().expect("pfs slots poisoned").1.clone())
     }
 
     /// Prefetch: copy every PFS file under `dir` (mount-relative)
@@ -324,10 +529,10 @@ impl SeaFs {
     }
 
     /// Core whole-file placement: write `data` to the fastest eligible
-    /// device. Returns the chosen device and registry generation, or
-    /// `None` when it fell through to the PFS. `already_flushed` marks
-    /// prefetched inputs (they came *from* the PFS, so eviction is
-    /// always safe).
+    /// device's backend. Returns the chosen device and registry
+    /// generation, or `None` when it fell through to the PFS.
+    /// `already_flushed` marks prefetched inputs (they came *from* the
+    /// PFS, so eviction is always safe).
     fn place_and_write(
         &self,
         rel: &str,
@@ -348,16 +553,17 @@ impl SeaFs {
         drop(rng);
         match pick {
             Some(dev) => {
-                let p = sh.local_path(dev, rel);
-                if let Some(d) = p.parent() {
-                    fs::create_dir_all(d).map_err(|e| Error::io(d, e))?;
+                if let Err(e) = sh.backend(dev).write(Path::new(rel), data) {
+                    // placement reserved the bytes; a failed backend
+                    // write must give them back
+                    sh.accountant.credit(dev, data.len() as u64);
+                    return Err(e);
                 }
-                fs::write(&p, data).map_err(|e| Error::io(&p, e))?;
                 let gen = sh.next_gen();
                 sh.registry.insert(
                     rel.to_string(),
                     Entry {
-                        dev,
+                        dev: Some(dev),
                         size: data.len() as u64,
                         flushed: already_flushed,
                         generation: gen,
@@ -378,41 +584,41 @@ impl SeaFs {
     /// debit space as the file grows, defer mgmt to the last close.
     ///
     /// Eligibility at open uses the declared `p·F` floor; a stream that
-    /// then outgrows the device fails that `pwrite` with `NoSpace`
-    /// rather than spilling mid-file to the PFS (whole-file `write`
-    /// does fall through — it knows its size up front). Mid-stream
-    /// spill is a tracked follow-on (ROADMAP "VFS layers").
+    /// then outgrows its device spills mid-stream to the PFS (see
+    /// [`SeaFile::spill`]) and continues instead of failing.
     fn open_writer(&self, rel: &str, mode: OpenMode) -> Result<Box<dyn VfsFile>> {
         let sh = &self.shared;
         if mode == OpenMode::ReadWrite {
-            // update an existing local copy in place: the entry (and its
+            // update an existing copy in place: the entry (and its
             // epoch) is shared with any other open writers
             let gen = sh.next_gen();
             let found = sh.registry.update(rel, |e| {
                 e.writers += 1;
-                e.flushed = false; // contents are about to change
                 e.generation = gen;
+                if e.dev.is_some() {
+                    e.flushed = false; // contents are about to change
+                }
                 (e.dev, e.epoch)
             });
             if let Some((dev, epoch)) = found {
-                let local = sh.local_path(dev, rel);
-                match RealFile::open_at(local, OpenMode::ReadWrite) {
+                let opened = match dev {
+                    Some(d) => sh.backend(d).open(Path::new(rel), OpenMode::ReadWrite),
+                    // spilled mid-stream: the live copy is on the PFS
+                    None => sh.pfs.open(Path::new(rel), OpenMode::ReadWrite),
+                };
+                match opened {
                     Ok(file) => {
                         return Ok(Box::new(SeaFile {
                             shared: sh.clone(),
                             rel: rel.to_string(),
                             dev,
                             epoch,
+                            append: false,
                             file,
                         }))
                     }
                     Err(e) => {
-                        // roll the writer count back so mgmt isn't pinned
-                        sh.registry.update(rel, |en| {
-                            if en.epoch == epoch {
-                                en.writers = en.writers.saturating_sub(1);
-                            }
-                        });
+                        rollback_join(sh, rel, epoch);
                         return Err(e);
                     }
                 }
@@ -431,13 +637,12 @@ impl SeaFs {
         drop(rng);
         match pick {
             Some(dev) => {
-                let p = sh.local_path(dev, rel);
-                let file = RealFile::open_at(p, OpenMode::Write)?;
+                let file = sh.backend(dev).open(Path::new(rel), OpenMode::Write)?;
                 let gen = sh.next_gen();
                 sh.registry.insert(
                     rel.to_string(),
                     Entry {
-                        dev,
+                        dev: Some(dev),
                         size: 0,
                         flushed: false,
                         generation: gen,
@@ -448,12 +653,103 @@ impl SeaFs {
                 Ok(Box::new(SeaFile {
                     shared: sh.clone(),
                     rel: rel.to_string(),
-                    dev,
+                    dev: Some(dev),
                     epoch: gen,
+                    append: false,
                     file,
                 }))
             }
             None => sh.pfs.open(Path::new(rel), OpenMode::Write),
+        }
+    }
+
+    /// Open an append handle. Unlike `Write`/`ReadWrite`, concurrent
+    /// appenders must *never* orphan each other, so create-vs-join is
+    /// decided (and the backend file created) in a single shard-lock
+    /// critical section.
+    fn open_append(&self, rel: &str) -> Result<Box<dyn VfsFile>> {
+        let sh = &self.shared;
+        // pre-select in case we create; size 0 means nothing is debited,
+        // so there is nothing to roll back if we end up joining
+        let mut rng = self.rng.lock().expect("rng poisoned");
+        let pick = select_device(&sh.hierarchy, &sh.accountant, &self.select, 0, &mut rng);
+        drop(rng);
+        enum How {
+            Join(Option<DeviceRef>, u64),
+            Created(DeviceRef, u64, Box<dyn VfsFile>),
+            Pfs,
+            Fail(Error),
+        }
+        let how = sh.registry.with_shard(rel, |m| match m.get_mut(rel) {
+            Some(e) => {
+                e.writers += 1;
+                e.generation = sh.next_gen();
+                if e.dev.is_some() {
+                    e.flushed = false;
+                }
+                How::Join(e.dev, e.epoch)
+            }
+            None => {
+                if sh.pfs.exists(Path::new(rel)) {
+                    return How::Pfs;
+                }
+                let Some(dev) = pick else { return How::Pfs };
+                // create the backend file here, under the shard lock:
+                // a joiner arriving next already finds the entry and can
+                // never be truncated by a racing creator
+                match sh.backend(dev).open(Path::new(rel), OpenMode::Write) {
+                    Ok(file) => {
+                        let gen = sh.next_gen();
+                        m.insert(
+                            rel.to_string(),
+                            Entry {
+                                dev: Some(dev),
+                                size: 0,
+                                flushed: false,
+                                generation: gen,
+                                epoch: gen,
+                                writers: 1,
+                            },
+                        );
+                        How::Created(dev, gen, file)
+                    }
+                    Err(e) => How::Fail(e),
+                }
+            }
+        });
+        match how {
+            How::Join(dev, epoch) => {
+                let opened = match dev {
+                    Some(d) => sh.backend(d).open(Path::new(rel), OpenMode::ReadWrite),
+                    None => sh.pfs.open(Path::new(rel), OpenMode::ReadWrite),
+                };
+                match opened {
+                    Ok(file) => Ok(Box::new(SeaFile {
+                        shared: sh.clone(),
+                        rel: rel.to_string(),
+                        dev,
+                        epoch,
+                        append: true,
+                        file,
+                    })),
+                    Err(e) => {
+                        rollback_join(sh, rel, epoch);
+                        Err(e)
+                    }
+                }
+            }
+            How::Created(dev, gen, file) => Ok(Box::new(SeaFile {
+                shared: sh.clone(),
+                rel: rel.to_string(),
+                dev: Some(dev),
+                epoch: gen,
+                append: true,
+                file,
+            })),
+            // no local entry: append to the PFS-resident file (the PFS
+            // backend provides its own append atomicity)
+            How::Pfs => sh.pfs.open(Path::new(rel), OpenMode::Append),
+            How::Fail(e) => Err(e),
         }
     }
 
@@ -487,15 +783,14 @@ impl SeaFs {
                 self.drop_local(rt)?;
                 let (dev, flushed, gen) = (e.dev, e.flushed, e.generation);
                 self.shared.registry.insert(rt.to_string(), e);
-                let pf = self.shared.local_path(dev, rf);
-                let pt = self.shared.local_path(dev, rt);
-                if let Some(d) = pt.parent() {
-                    fs::create_dir_all(d).map_err(|e| Error::io(d, e))?;
+                if let Some(d) = dev {
+                    self.shared
+                        .backend(d)
+                        .rename(Path::new(rf), Path::new(rt))?;
                 }
-                fs::rename(&pf, &pt).map_err(|e| Error::io(&pf, e))?;
                 if flushed && self.shared.pfs.exists(Path::new(rf)) {
-                    // a Copy-mode flush left a PFS replica under the old
-                    // name — move it along too
+                    // a Copy-mode flush (or a spill) left a PFS copy
+                    // under the old name — move it along too
                     self.shared.pfs.rename(Path::new(rf), Path::new(rt))?;
                 } else if !flushed {
                     // pending mgmt enqueued under the old name was
@@ -522,58 +817,203 @@ impl SeaFs {
         let sh = &self.shared;
         let old = sh.registry.remove(rel);
         if let Some(e) = old {
-            let p = sh.local_path(e.dev, rel);
-            match fs::remove_file(&p) {
-                Ok(()) => {}
-                Err(err) if err.kind() == std::io::ErrorKind::NotFound => {}
-                Err(err) => return Err(Error::io(&p, err)),
+            if let Some(d) = e.dev {
+                match sh.backend(d).unlink(Path::new(rel)) {
+                    Ok(()) | Err(Error::NotFound(_)) => {}
+                    Err(err) => return Err(err),
+                }
+                sh.accountant.credit(d, e.size);
             }
-            sh.accountant.credit(e.dev, e.size);
+            // dev == None (spilled): the bytes live on the PFS and the
+            // ledger was credited at spill time — nothing local to drop
         }
         Ok(())
     }
 }
 
-/// Writer handle on a device-local file: grows the registry entry (and
-/// the space ledger) as bytes land, and triggers deferred management
-/// when the last writer closes.
+/// Undo a failed writer join: drop the writer count and, when that
+/// leaves the entry idle, re-enqueue management. The join already
+/// bumped the generation (cancelling any queued job) and cleared
+/// `flushed`, and the failed open returns no handle whose close would
+/// re-enqueue — without this the file would be stranded on its device,
+/// never flushed and never evicted.
+fn rollback_join(sh: &Arc<Shared>, rel: &str, epoch: u64) {
+    let regen = sh
+        .registry
+        .update(rel, |en| {
+            if en.epoch != epoch {
+                return None;
+            }
+            en.writers = en.writers.saturating_sub(1);
+            if en.writers == 0 && en.dev.is_some() {
+                Some(en.generation)
+            } else {
+                None
+            }
+        })
+        .flatten();
+    if let Some(gen) = regen {
+        let mode = sh.rules.mode_for(rel);
+        sh.enqueue_mgmt(mode, rel, gen);
+    }
+}
+
+/// What a writer handle should do next, decided under the shard lock.
+enum Step {
+    /// Reservation done (or not needed): write at this offset.
+    Go(u64),
+    /// Entry replaced or gone and the handle is appending: write at the
+    /// orphaned inode's own end (resolved lazily — it needs an fstat).
+    Orphan,
+    /// Device exhausted: migrate the partial file to the PFS, retry.
+    Spill,
+    /// Another handle spilled this entry: reopen on the PFS, retry.
+    Reopen,
+}
+
+/// Writer handle on a placed file: grows the registry entry (and the
+/// space ledger) as bytes land, spills to the PFS when its device
+/// fills, and triggers deferred management when the last writer closes.
 struct SeaFile {
     shared: Arc<Shared>,
     rel: String,
-    dev: DeviceRef,
+    /// Device this handle currently writes to; `None` once it follows a
+    /// spill onto the PFS.
+    dev: Option<DeviceRef>,
     /// Epoch of the entry this handle's writer count lives in; a
     /// mismatch means the entry was replaced (`drop_local`) and this
     /// handle's file is an orphaned inode — writes still land there,
     /// but registry and ledger must not be touched.
     epoch: u64,
-    file: RealFile,
+    /// Append handle: offsets are resolved from the entry's size under
+    /// the shard lock; the caller's offset is ignored.
+    append: bool,
+    file: Box<dyn VfsFile>,
 }
 
 impl SeaFile {
-    /// Reserve registry/ledger space up to `end` bytes. Size update and
-    /// ledger debit happen together under the entry's shard lock, so a
-    /// failed reservation never has to roll back a size a concurrent
-    /// handle may have extended in the meantime. On exhaustion this is a
-    /// hard error (no mid-stream PFS spill — see `open_writer`).
-    fn reserve_to(&self, end: u64) -> Result<()> {
-        let sh = &self.shared;
+    /// Resolve the write offset (`off = None` for append) and reserve
+    /// registry/ledger space for `len` bytes, atomically under the
+    /// entry's shard lock. Size update and ledger debit happen
+    /// together, so a failed reservation never has to roll back a size
+    /// a concurrent handle extended in the meantime.
+    fn reserve(&mut self, off: Option<u64>, len: u64) -> Result<Step> {
+        // superseded handles write to their orphaned inode without
+        // accounting; an orphaned *appender* resolves its offset lazily
+        // (fstat) so the hot join path pays no extra syscall
+        let orphan_step = || match off {
+            Some(o) => Step::Go(o),
+            None => Step::Orphan,
+        };
+        let epoch = self.epoch;
+        let on_pfs = self.dev.is_none();
+        let sh = self.shared.clone();
         sh.registry
-            .update(&self.rel, |e| {
-                if e.epoch != self.epoch || end <= e.size {
-                    return Ok(()); // superseded or already reserved
+            .update(&self.rel, |e| -> Result<Step> {
+                if e.epoch != epoch {
+                    return Ok(orphan_step());
                 }
-                let d = end - e.size;
-                if !sh.accountant.try_debit(self.dev, d, 0) {
-                    return Err(Error::NoSpace {
-                        path: PathBuf::from(&self.rel),
-                        needed: d,
-                        largest_free: sh.accountant.largest_free(),
-                    });
+                match e.dev {
+                    None if !on_pfs => Ok(Step::Reopen),
+                    None => {
+                        // entry lives on the PFS: unbounded, track size
+                        let off = off.unwrap_or(e.size);
+                        let end = off + len;
+                        if end > e.size {
+                            e.size = end;
+                        }
+                        Ok(Step::Go(off))
+                    }
+                    Some(d) => {
+                        let off = off.unwrap_or(e.size);
+                        let end = off + len;
+                        if end <= e.size {
+                            return Ok(Step::Go(off)); // already reserved
+                        }
+                        let need = end - e.size;
+                        if !sh.accountant.try_debit(d, need, 0) {
+                            return Ok(Step::Spill);
+                        }
+                        e.size = end;
+                        Ok(Step::Go(off))
+                    }
                 }
-                e.size = end;
-                Ok(())
             })
-            .unwrap_or(Ok(()))
+            .unwrap_or_else(|| Ok(orphan_step()))
+    }
+
+    /// Mid-stream spill: migrate the partial file from its device to
+    /// the PFS and switch this handle over. Runs under the per-file
+    /// flush lock (serialising with the flush pool, unlink and rename)
+    /// and performs the copy + entry flip in the shard-lock critical
+    /// section, so the entry cannot be replaced or flushed mid-copy.
+    /// Writer counts are preserved: sibling handles keep their epoch
+    /// and observe the relocation on their next reservation
+    /// ([`Step::Reopen`]).
+    fn spill(&mut self) -> Result<()> {
+        let sh = self.shared.clone();
+        let lk = sh.flush_lock(&self.rel);
+        let migrated = {
+            let _guard = lk.lock().expect("flush lock poisoned");
+            let epoch = self.epoch;
+            let rel = self.rel.clone();
+            let file = &mut self.file;
+            sh.registry
+                .update(&rel, |e| -> Result<Option<Box<dyn VfsFile>>> {
+                    if e.epoch != epoch {
+                        return Ok(None); // replaced under us
+                    }
+                    let Some(dev) = e.dev else {
+                        return Ok(None); // a sibling already spilled
+                    };
+                    let mut out = sh.pfs.open(Path::new(&rel), OpenMode::Write)?;
+                    let mut buf = vec![0u8; SPILL_CHUNK];
+                    let mut done = 0u64;
+                    while done < e.size {
+                        let want = ((e.size - done) as usize).min(buf.len());
+                        let n = file.pread(&mut buf[..want], done)?;
+                        if n == 0 {
+                            break; // reserved-but-unwritten sparse tail
+                        }
+                        out.pwrite_all(&buf[..n], done)?;
+                        done += n as u64;
+                    }
+                    // zero-fill any sparse tail up to the reserved size
+                    out.set_len(e.size)?;
+                    let _ = sh.backend(dev).unlink(Path::new(&rel));
+                    sh.accountant.credit(dev, e.size);
+                    e.dev = None;
+                    e.flushed = true; // the PFS copy IS the file now
+                    e.generation = sh.next_gen(); // stand down stale jobs
+                    Ok(Some(out))
+                })
+                .unwrap_or(Ok(None))
+        };
+        // drop our Arc before releasing, or the map entry (strong count
+        // still >= 2) is never reclaimed and leaks per spilled file
+        drop(lk);
+        sh.release_flush_lock(&self.rel);
+        match migrated? {
+            Some(out) => {
+                self.file = out;
+                self.dev = None;
+                Ok(())
+            }
+            // superseded or already spilled: the retry loop re-reserves
+            // and takes the orphan / reopen path as appropriate
+            None => Ok(()),
+        }
+    }
+
+    /// Follow a sibling handle's spill: swap this handle's file for a
+    /// PFS one.
+    fn reopen_on_pfs(&mut self) -> Result<()> {
+        self.file = self
+            .shared
+            .pfs
+            .open(Path::new(&self.rel), OpenMode::ReadWrite)?;
+        self.dev = None;
+        Ok(())
     }
 }
 
@@ -586,36 +1026,60 @@ impl VfsFile for SeaFile {
         if data.is_empty() {
             return Ok(0);
         }
-        self.reserve_to(off + data.len() as u64)?;
-        self.file.pwrite(data, off)
+        let want = if self.append { None } else { Some(off) };
+        loop {
+            match self.reserve(want, data.len() as u64)? {
+                Step::Go(at) => return self.file.pwrite(data, at),
+                Step::Orphan => {
+                    let at = self.file.len()?;
+                    return self.file.pwrite(data, at);
+                }
+                Step::Spill => self.spill()?,
+                Step::Reopen => self.reopen_on_pfs()?,
+            }
+        }
     }
 
     fn set_len(&mut self, len: u64) -> Result<()> {
-        let sh = &self.shared;
-        // size update and ledger adjustment are atomic under the shard
-        // lock, like reserve_to
-        sh.registry
-            .update(&self.rel, |e| {
-                if e.epoch != self.epoch {
-                    return Ok(()); // superseded: no accounting
-                }
-                if len > e.size {
-                    let d = len - e.size;
-                    if !sh.accountant.try_debit(self.dev, d, 0) {
-                        return Err(Error::NoSpace {
-                            path: PathBuf::from(&self.rel),
-                            needed: d,
-                            largest_free: sh.accountant.largest_free(),
-                        });
+        loop {
+            let epoch = self.epoch;
+            let on_pfs = self.dev.is_none();
+            let sh = self.shared.clone();
+            // size update and ledger adjustment are atomic under the
+            // shard lock, like reserve
+            let step = sh
+                .registry
+                .update(&self.rel, |e| -> Result<Step> {
+                    if e.epoch != epoch {
+                        return Ok(Step::Go(0)); // superseded: no accounting
                     }
-                } else {
-                    sh.accountant.credit(self.dev, e.size - len);
-                }
-                e.size = len;
-                Ok(())
-            })
-            .unwrap_or(Ok(()))?;
-        self.file.set_len(len)
+                    match e.dev {
+                        None if !on_pfs => Ok(Step::Reopen),
+                        None => {
+                            e.size = len;
+                            Ok(Step::Go(0))
+                        }
+                        Some(d) => {
+                            if len > e.size {
+                                let need = len - e.size;
+                                if !sh.accountant.try_debit(d, need, 0) {
+                                    return Ok(Step::Spill);
+                                }
+                            } else {
+                                sh.accountant.credit(d, e.size - len);
+                            }
+                            e.size = len;
+                            Ok(Step::Go(0))
+                        }
+                    }
+                })
+                .unwrap_or(Ok(Step::Go(0)))?;
+            match step {
+                Step::Go(_) | Step::Orphan => return self.file.set_len(len),
+                Step::Spill => self.spill()?,
+                Step::Reopen => self.reopen_on_pfs()?,
+            }
+        }
     }
 
     fn fsync(&mut self) -> Result<()> {
@@ -645,15 +1109,39 @@ impl Drop for SeaFile {
                 }
                 e.writers = e.writers.saturating_sub(1);
                 if e.writers == 0 {
-                    Some(e.generation)
+                    Some((e.generation, e.dev))
                 } else {
                     None
                 }
             })
             .flatten();
-        if let Some(gen) = mgmt {
-            let mode = sh.rules.mode_for(&self.rel);
-            sh.enqueue_mgmt(mode, &self.rel, gen);
+        match mgmt {
+            Some((gen, Some(_dev))) => {
+                let mode = sh.rules.mode_for(&self.rel);
+                sh.enqueue_mgmt(mode, &self.rel, gen);
+            }
+            Some((_gen, None)) => {
+                // spilled mid-stream: the file already lives durably on
+                // the PFS — retire the entry instead of flushing. A
+                // Remove-mode file was never meant to be persisted, so
+                // drop its PFS copy too (under the per-file flush lock,
+                // like unlink, so it can't race a flush of a successor).
+                let lk = sh.flush_lock(&self.rel);
+                {
+                    let _guard = lk.lock().expect("flush lock poisoned");
+                    let retired = sh.registry.remove_if(&self.rel, |e| {
+                        e.epoch == self.epoch && e.writers == 0 && e.dev.is_none()
+                    });
+                    if retired.is_some()
+                        && matches!(sh.rules.mode_for(&self.rel), MgmtMode::Remove)
+                    {
+                        let _ = sh.pfs.unlink(Path::new(&self.rel));
+                    }
+                }
+                drop(lk);
+                sh.release_flush_lock(&self.rel);
+            }
+            None => {}
         }
     }
 }
@@ -692,17 +1180,24 @@ fn run_job(sh: &Shared, job: &Job) {
     if entry.generation != job.gen || entry.writers > 0 {
         return;
     }
-    let local = sh.local_path(entry.dev, &job.rel);
+    // A spilled entry already lives on the PFS: nothing to flush or
+    // evict (the last close retires it).
+    let Some(dev) = entry.dev else { return };
     let flush = matches!(job.mode, MgmtMode::Copy | MgmtMode::Move);
     let evict = matches!(job.mode, MgmtMode::Remove | MgmtMode::Move);
     if flush && !entry.flushed {
-        let Ok(data) = fs::read(&local) else { return };
+        let Ok(data) = sh.backend(dev).read(Path::new(&job.rel)) else { return };
         // a racing overwrite may have dropped and recreated the local
         // file mid-read: only flush bytes whose size matches the entry
         if data.len() as u64 != entry.size {
             return;
         }
-        if sh.pfs.write(Path::new(&job.rel), &data).is_err() {
+        // OST-aware gate: cap in-flight flushes per PFS member
+        let wrote = {
+            let _slot = sh.pfs_slot(&job.rel);
+            sh.pfs.write(Path::new(&job.rel), &data).is_ok()
+        };
+        if !wrote {
             return;
         }
         let confirmed = sh
@@ -731,9 +1226,11 @@ fn run_job(sh: &Shared, job: &Job) {
                 && (matches!(job.mode, MgmtMode::Remove) || e.flushed)
         });
         if let Some(e) = removed {
-            let _ = fs::remove_file(sh.local_path(e.dev, &job.rel));
-            sh.accountant.credit(e.dev, e.size);
-            sh.counters.lock().expect("counters poisoned").1 += 1;
+            if let Some(d) = e.dev {
+                let _ = sh.backend(d).unlink(Path::new(&job.rel));
+                sh.accountant.credit(d, e.size);
+                sh.counters.lock().expect("counters poisoned").1 += 1;
+            }
         }
     }
 }
@@ -754,20 +1251,25 @@ impl Vfs for SeaFs {
             None => self.shared.pfs.open(path, mode),
             Some(rel) => match mode {
                 OpenMode::Read => match self.shared.registry.get(&rel) {
-                    Some(e) => {
-                        let p = self.shared.local_path(e.dev, &rel);
-                        match RealFile::open_at(p, OpenMode::Read) {
-                            Ok(f) => Ok(Box::new(f)),
-                            // evicted between lookup and open: the flush
-                            // that preceded eviction put a PFS copy there
-                            Err(Error::NotFound(_)) => {
-                                self.shared.pfs.open(Path::new(&rel), OpenMode::Read)
+                    Some(e) => match e.dev {
+                        Some(d) => {
+                            match self.shared.backend(d).open(Path::new(&rel), OpenMode::Read) {
+                                Ok(f) => Ok(f),
+                                // evicted between lookup and open: the
+                                // flush that preceded eviction put a PFS
+                                // copy there
+                                Err(Error::NotFound(_)) => {
+                                    self.shared.pfs.open(Path::new(&rel), OpenMode::Read)
+                                }
+                                Err(e) => Err(e),
                             }
-                            Err(e) => Err(e),
                         }
-                    }
+                        // spilled: the live copy is on the PFS
+                        None => self.shared.pfs.open(Path::new(&rel), OpenMode::Read),
+                    },
                     None => self.shared.pfs.open(Path::new(&rel), OpenMode::Read),
                 },
+                OpenMode::Append => self.open_append(&rel),
                 OpenMode::Write | OpenMode::ReadWrite => self.open_writer(&rel, mode),
             },
         }
@@ -777,18 +1279,16 @@ impl Vfs for SeaFs {
         match self.rel_of(path) {
             None => self.shared.pfs.read(path),
             Some(rel) => match self.shared.registry.get(&rel) {
-                Some(e) => {
-                    let p = self.shared.local_path(e.dev, &rel);
-                    match fs::read(&p) {
-                        Ok(d) => Ok(d),
+                Some(e) => match e.dev {
+                    Some(d) => match self.shared.backend(d).read(Path::new(&rel)) {
+                        Ok(data) => Ok(data),
                         // evicted between lookup and read: fall through
                         // to the flushed PFS copy
-                        Err(err) if err.kind() == std::io::ErrorKind::NotFound => {
-                            self.shared.pfs.read(Path::new(&rel))
-                        }
-                        Err(err) => Err(Error::io(&p, err)),
-                    }
-                }
+                        Err(Error::NotFound(_)) => self.shared.pfs.read(Path::new(&rel)),
+                        Err(err) => Err(err),
+                    },
+                    None => self.shared.pfs.read(Path::new(&rel)),
+                },
                 None => self.shared.pfs.read(Path::new(&rel)),
             },
         }
@@ -921,24 +1421,40 @@ mod tests {
     use crate::util::MIB;
     use crate::vfs::real::RealFs;
     use crate::vfs::testutil::scratch;
+    use crate::vfs::{RateLimitedFs, StripedFs};
 
-    fn mount(rules: RuleSet, tmpfs_cap: u64) -> (SeaFs, PathBuf, Arc<RealFs>) {
-        let root = scratch("seafs");
-        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
-        let sea = SeaFs::mount(SeaFsConfig {
+    fn mount_cfg(root: &Path, pfs: Arc<dyn Vfs>, rules: RuleSet, tmpfs_cap: u64) -> SeaFs {
+        SeaFs::mount(SeaFsConfig {
             mountpoint: PathBuf::from("/sea"),
             devices: vec![
-                (root.join("tmpfs"), 0, tmpfs_cap),
-                (root.join("disk0"), 1, 100 * MIB),
-                (root.join("disk1"), 1, 100 * MIB),
+                DeviceSpec::dir(root.join("tmpfs"), 0, tmpfs_cap).unwrap(),
+                DeviceSpec::dir(root.join("disk0"), 1, 100 * MIB).unwrap(),
+                DeviceSpec::dir(root.join("disk1"), 1, 100 * MIB).unwrap(),
             ],
-            pfs: pfs.clone(),
+            pfs,
             max_file_size: MIB,
             parallel_procs: 2,
             rules,
             seed: 7,
+            tuning: SeaTuning::default(),
         })
-        .unwrap();
+        .unwrap()
+    }
+
+    fn mount(rules: RuleSet, tmpfs_cap: u64) -> (SeaFs, PathBuf, Arc<RealFs>) {
+        let root = scratch("seafs");
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
+        let sea = mount_cfg(&root, pfs.clone(), rules, tmpfs_cap);
+        (sea, root, pfs)
+    }
+
+    /// The acceptance stack: SeaFs over a rate-limited striped PFS.
+    fn mount_striped(rules: RuleSet, tmpfs_cap: u64) -> (SeaFs, PathBuf, Arc<dyn Vfs>) {
+        let root = scratch("seafs_striped");
+        let dirs: Vec<PathBuf> = (0..3).map(|i| root.join(format!("pfs_ost{i}"))).collect();
+        let striped = StripedFs::from_dirs(dirs).unwrap();
+        let pfs: Arc<dyn Vfs> = Arc::new(RateLimitedFs::new(striped, 4e9, 4e9));
+        let sea = mount_cfg(&root, pfs.clone(), rules, tmpfs_cap);
         (sea, root, pfs)
     }
 
@@ -1362,6 +1878,324 @@ mod tests {
             assert!(!sea.exists(&p), "u{i} resurrected locally");
             assert!(!pfs.exists(Path::new(&format!("u{i}.dat"))), "u{i} on pfs");
         }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    // --- striped PFS backend stack ------------------------------------------
+
+    #[test]
+    fn striped_pfs_overwrite_and_rename_races() {
+        // the same write-vs-flush and rename scenarios, with the PFS a
+        // rate-limited striped backend (acceptance for the backend stack)
+        let (sea, root, pfs) = mount_striped(RuleSet::from_texts("**", "", ""), 10 * MIB);
+        let p = Path::new("/sea/race.dat");
+        for round in 0..6u8 {
+            sea.write(p, &vec![round; 64 * 1024]).unwrap();
+            sea.write(p, &vec![round ^ 0xFF; 64 * 1024]).unwrap();
+            sea.sync_mgmt().unwrap();
+            let got = pfs.read(Path::new("race.dat")).unwrap();
+            assert_eq!(got, vec![round ^ 0xFF; 64 * 1024], "round {round}");
+        }
+        // rename moves the flushed PFS copy, possibly across members
+        let a = Path::new("/sea/out/a.dat");
+        let b = Path::new("/sea/out/b.dat");
+        sea.write(a, b"payload").unwrap();
+        sea.sync_mgmt().unwrap();
+        assert!(pfs.exists(Path::new("out/a.dat")));
+        sea.rename(a, b).unwrap();
+        assert!(!pfs.exists(Path::new("out/a.dat")), "old PFS name gone");
+        assert!(pfs.exists(Path::new("out/b.dat")), "PFS copy follows rename");
+        assert_eq!(sea.read(b).unwrap(), b"payload");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn striped_pfs_unlink_racing_flush() {
+        let (sea, root, pfs) = mount_striped(RuleSet::from_texts("**", "**", ""), 10 * MIB);
+        for i in 0..20 {
+            let p = PathBuf::from(format!("/sea/u{i}.dat"));
+            sea.write(&p, &vec![9u8; 32 * 1024]).unwrap();
+            sea.unlink(&p).unwrap();
+            sea.sync_mgmt().unwrap();
+            assert!(!sea.exists(&p), "u{i} resurrected locally");
+            assert!(!pfs.exists(Path::new(&format!("u{i}.dat"))), "u{i} on pfs");
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn striped_pfs_flush_pool_respects_member_gate() {
+        // 8 workers, 2 members, 1 slot each: everything drains, and the
+        // observed in-flight peak never exceeds the per-member cap
+        let root = scratch("seafs_gate");
+        let dirs: Vec<PathBuf> = (0..2).map(|i| root.join(format!("ost{i}"))).collect();
+        let pfs: Arc<dyn Vfs> = Arc::new(StripedFs::from_dirs(dirs).unwrap());
+        let sea = SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(root.join("dev0"), 0, 100 * MIB).unwrap()],
+            pfs: pfs.clone(),
+            max_file_size: MIB,
+            parallel_procs: 2,
+            rules: RuleSet::from_texts("**", "**", ""),
+            seed: 3,
+            tuning: SeaTuning {
+                flush_workers: 8,
+                registry_shards: 8,
+                per_member_concurrency: 1,
+            },
+        })
+        .unwrap();
+        for i in 0..32 {
+            let p = PathBuf::from(format!("/sea/g/f{i:02}.dat"));
+            let mut f = sea.open(&p, OpenMode::Write).unwrap();
+            f.pwrite_all(&vec![i as u8; 16 * 1024], 0).unwrap();
+        }
+        sea.sync_mgmt().unwrap();
+        assert_eq!(sea.mgmt_counters(), (32, 32));
+        for i in 0..32 {
+            let rel = format!("g/f{i:02}.dat");
+            assert_eq!(pfs.read(Path::new(&rel)).unwrap(), vec![i as u8; 16 * 1024]);
+        }
+        let peaks = sea.flush_member_peaks().expect("gate active");
+        assert_eq!(peaks.len(), 2);
+        assert!(peaks.iter().all(|&pk| pk <= 1), "peaks {peaks:?}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    // --- mid-stream spill ----------------------------------------------------
+
+    fn tiny_device_mount(root: &Path, pfs: Arc<dyn Vfs>) -> SeaFs {
+        SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(root.join("tiny"), 0, 2 * MIB).unwrap()],
+            pfs,
+            max_file_size: MIB,
+            parallel_procs: 1,
+            rules: RuleSet::from_texts("**", "**", ""),
+            seed: 1,
+            tuning: SeaTuning::default(),
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn pwrite_past_device_capacity_spills_to_pfs() {
+        // acceptance: a stream that outgrows its device completes via
+        // spill instead of returning NoSpace
+        let root = scratch("seafs_spill");
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
+        let sea = tiny_device_mount(&root, pfs.clone());
+        let before = sea.shared.accountant.total_free();
+        let p = Path::new("/sea/grow.dat");
+        let quarter = MIB as usize / 4;
+        {
+            let mut f = sea.open(p, OpenMode::Write).unwrap();
+            // 4 MiB streamed in 256 KiB chunks outgrows the 2 MiB device
+            for k in 0..16u64 {
+                f.pwrite_all(&vec![k as u8; quarter], k * quarter as u64).unwrap();
+            }
+            // the handle keeps working after the migration
+            let mut probe = [0u8; 4];
+            f.pread_exact(&mut probe, 15 * quarter as u64).unwrap();
+            assert_eq!(probe, [15u8; 4]);
+            assert_eq!(f.len().unwrap(), 4 * MIB);
+        }
+        sea.sync_mgmt().unwrap();
+        // migrated: off-device, on the PFS, ledger fully credited
+        assert!(sea.device_of("grow.dat").is_none());
+        assert!(pfs.exists(Path::new("grow.dat")));
+        assert_eq!(
+            sea.shared.accountant.total_free(),
+            before,
+            "spill credits the device ledger"
+        );
+        // byte-exact content through the mount
+        let data = sea.read(p).unwrap();
+        assert_eq!(data.len(), 4 * MIB as usize);
+        for (k, chunk) in data.chunks(quarter).enumerate() {
+            assert!(chunk.iter().all(|&b| b == k as u8), "chunk {k}");
+        }
+        // no stranded writer count: the name unlinks and rewrites freely
+        sea.unlink(p).unwrap();
+        assert!(!sea.exists(p));
+        sea.write(p, b"fresh").unwrap();
+        assert_eq!(sea.read(p).unwrap(), b"fresh");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn sibling_writer_follows_spill_to_pfs() {
+        // two handles share the entry; one spills, the other's next
+        // write must land on the PFS copy, not the orphaned device inode
+        let root = scratch("seafs_spill2");
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
+        let sea = tiny_device_mount(&root, pfs.clone());
+        let p = Path::new("/sea/shared.dat");
+        let mut a = sea.open(p, OpenMode::Write).unwrap();
+        a.pwrite_all(&vec![1u8; MIB as usize], 0).unwrap();
+        let mut b = sea.open(p, OpenMode::ReadWrite).unwrap();
+        // b outgrows the 2 MiB device: spill migrates a's bytes too
+        b.pwrite_all(&vec![2u8; 2 * MIB as usize], MIB).unwrap();
+        assert!(sea.device_of("shared.dat").is_none(), "spilled");
+        // a's next write follows the relocation onto the PFS copy
+        a.pwrite_all(&vec![3u8; 4], 0).unwrap();
+        drop(a);
+        drop(b);
+        sea.sync_mgmt().unwrap();
+        let data = sea.read(p).unwrap();
+        assert_eq!(data.len(), 3 * MIB as usize);
+        assert_eq!(&data[..4], &[3u8; 4]);
+        assert!(data[4..MIB as usize].iter().all(|&v| v == 1));
+        assert!(data[MIB as usize..].iter().all(|&v| v == 2));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn remove_mode_spill_does_not_persist() {
+        // a Remove-mode scratch file that spills must not leak onto the
+        // PFS once its last writer closes
+        let root = scratch("seafs_spill_rm");
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
+        let sea = SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(root.join("tiny"), 0, 2 * MIB).unwrap()],
+            pfs: pfs.clone(),
+            max_file_size: MIB,
+            parallel_procs: 1,
+            rules: RuleSet::from_texts("", "**", ""), // remove everything
+            seed: 1,
+            tuning: SeaTuning::default(),
+        })
+        .unwrap();
+        let p = Path::new("/sea/scratch.dat");
+        {
+            let mut f = sea.open(p, OpenMode::Write).unwrap();
+            f.pwrite_all(&vec![7u8; 3 * MIB as usize], 0).unwrap(); // spills
+            assert!(pfs.exists(Path::new("scratch.dat")), "spilled to the PFS");
+        }
+        sea.sync_mgmt().unwrap();
+        assert!(!pfs.exists(Path::new("scratch.dat")), "Remove mode: not persisted");
+        assert!(!sea.exists(p));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn spill_over_striped_pfs_round_trips() {
+        // spill targets the striped backend stack, not just a plain dir
+        let root = scratch("seafs_spill3");
+        let dirs: Vec<PathBuf> = (0..3).map(|i| root.join(format!("ost{i}"))).collect();
+        let striped = StripedFs::from_dirs(dirs).unwrap();
+        let pfs: Arc<dyn Vfs> = Arc::new(RateLimitedFs::new(striped, 4e9, 4e9));
+        let sea = tiny_device_mount(&root, pfs.clone());
+        let p = Path::new("/sea/big.dat");
+        {
+            let mut f = sea.open(p, OpenMode::Write).unwrap();
+            for k in 0..12u64 {
+                f.pwrite_all(&vec![k as u8; MIB as usize / 4], k * MIB / 4).unwrap();
+            }
+        }
+        assert_eq!(sea.size(p).unwrap(), 3 * MIB);
+        assert!(pfs.exists(Path::new("big.dat")));
+        let data = sea.read(p).unwrap();
+        assert_eq!(data.len(), 3 * MIB as usize);
+        assert!(data[..MIB as usize / 4].iter().all(|&v| v == 0));
+        assert!(data[11 * MIB as usize / 4..].iter().all(|&v| v == 11));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    // --- append mode ---------------------------------------------------------
+
+    #[test]
+    fn append_handle_extends_and_ignores_offsets() {
+        let (sea, root, _) = mount(RuleSet::default(), 10 * MIB);
+        let p = Path::new("/sea/log.txt");
+        {
+            let mut f = sea.open(p, OpenMode::Append).unwrap();
+            f.pwrite_all(b"one;", 0).unwrap();
+            f.pwrite_all(b"two;", 999).unwrap(); // offset ignored
+        }
+        {
+            // re-opening appends after the existing bytes
+            let mut f = sea.open(p, OpenMode::Append).unwrap();
+            f.pwrite_all(b"three;", 0).unwrap();
+        }
+        assert_eq!(sea.read(p).unwrap(), b"one;two;three;");
+        assert_eq!(sea.size(p).unwrap(), 14);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn concurrent_appenders_never_interleave_records() {
+        // the O_APPEND satellite: offsets resolved per request under the
+        // registry shard lock => every record lands contiguously
+        let (sea, root, _) = mount(RuleSet::default(), 10 * MIB);
+        let sea = Arc::new(sea);
+        const REC: usize = 64;
+        const PER: usize = 50;
+        const THREADS: usize = 8;
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let sea = sea.clone();
+                scope.spawn(move || {
+                    let mut f = sea
+                        .open(Path::new("/sea/applog.bin"), OpenMode::Append)
+                        .unwrap();
+                    for _ in 0..PER {
+                        f.pwrite_all(&[t as u8 + 1; REC], 0).unwrap();
+                    }
+                });
+            }
+        });
+        sea.sync_mgmt().unwrap();
+        let data = sea.read(Path::new("/sea/applog.bin")).unwrap();
+        assert_eq!(data.len(), REC * PER * THREADS, "no lost records");
+        let mut counts = [0usize; THREADS + 1];
+        for rec in data.chunks(REC) {
+            assert!(
+                rec.iter().all(|&v| v == rec[0]),
+                "interleaved record near byte {}",
+                rec[0]
+            );
+            counts[rec[0] as usize] += 1;
+        }
+        for (t, &c) in counts.iter().enumerate().skip(1) {
+            assert_eq!(c, PER, "thread {t} records");
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn append_to_pfs_resident_file_appends_there() {
+        let (sea, root, pfs) = mount(RuleSet::default(), 10 * MIB);
+        pfs.write(Path::new("pre.log"), b"head;").unwrap();
+        {
+            let mut f = sea.open(Path::new("/sea/pre.log"), OpenMode::Append).unwrap();
+            f.pwrite_all(b"tail;", 0).unwrap();
+        }
+        assert_eq!(pfs.read(Path::new("pre.log")).unwrap(), b"head;tail;");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    // --- ledger diagnostics --------------------------------------------------
+
+    #[test]
+    fn ledger_reports_per_device_traffic() {
+        let (sea, root, _) = mount(RuleSet::from_texts("**", "**", ""), 10 * MIB);
+        sea.write(Path::new("/sea/l.dat"), &vec![0u8; MIB as usize]).unwrap();
+        sea.sync_mgmt().unwrap(); // move: flushed then evicted
+        let ledger = sea.ledger();
+        assert_eq!(ledger.len(), 3);
+        let tmpfs = &ledger[0];
+        assert_eq!(tmpfs.tier, 0);
+        assert!(tmpfs.name.contains("tmpfs"));
+        assert_eq!(tmpfs.capacity, 10 * MIB);
+        assert_eq!(tmpfs.debits, MIB, "placement debited");
+        assert_eq!(tmpfs.credits, MIB, "eviction credited");
+        assert_eq!(tmpfs.used, 0);
+        assert_eq!(tmpfs.free, 10 * MIB);
+        // disks untouched
+        assert_eq!(ledger[1].debits, 0);
+        assert_eq!(ledger[2].debits, 0);
         let _ = std::fs::remove_dir_all(&root);
     }
 }

@@ -1,0 +1,301 @@
+//! [`StripedFs`] — a [`Vfs`] that shards files across N member backends.
+//!
+//! Real Lustre deployments stripe across OSTs, each with its own
+//! bandwidth and concurrency limits; the paper treats "the PFS" as one
+//! opaque pool. `StripedFs` is the stand-in that puts the members back:
+//! every file maps to exactly one member by a stable hash of its path
+//! (file-granularity striping — one file never spans members, matching
+//! `stripe_count=1` Lustre, the common default for many-file workloads).
+//!
+//! Members are themselves `Vfs` backends, so they can be plain
+//! [`crate::vfs::RealFs`] directories, rate-limited decorators (per-OST
+//! bandwidth caps), or anything else. The member topology is exposed
+//! through [`Vfs::shard_count`] / [`Vfs::shard_of`], which survive
+//! wrapping in [`crate::vfs::RateLimitedFs`]; `SeaFs`'s flush pool uses
+//! it to cap in-flight flushes per member (OST-aware scheduling).
+//!
+//! `rename` between members streams the bytes through bounded buffers
+//! and then unlinks the source — the only cross-member operation.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::vfs::{OpenMode, Vfs, VfsFile};
+
+/// Copy buffer for cross-member renames.
+const COPY_CHUNK: usize = 1 << 20;
+
+/// FNV-1a, hand-rolled: the member mapping is *durable* (it decides
+/// where bytes live on disk), so it must not depend on
+/// `DefaultHasher`'s algorithm, which is explicitly unstable across
+/// Rust releases.
+fn fnv1a(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// A file-granularity striped backend over N member [`Vfs`] roots.
+pub struct StripedFs {
+    members: Vec<Arc<dyn Vfs>>,
+}
+
+impl StripedFs {
+    /// Build from member backends (at least one).
+    pub fn new(members: Vec<Arc<dyn Vfs>>) -> Result<StripedFs> {
+        if members.is_empty() {
+            return Err(Error::Config("striped fs requires at least one member".into()));
+        }
+        Ok(StripedFs { members })
+    }
+
+    /// Convenience: one [`crate::vfs::RealFs`] member per directory.
+    pub fn from_dirs<P: Into<std::path::PathBuf>>(dirs: Vec<P>) -> Result<StripedFs> {
+        let mut members: Vec<Arc<dyn Vfs>> = Vec::new();
+        for d in dirs {
+            members.push(Arc::new(crate::vfs::RealFs::new(d)?));
+        }
+        StripedFs::new(members)
+    }
+
+    /// Number of members.
+    pub fn member_count(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Stable member index for `path` (leading slashes are ignored so
+    /// `/x/y` and `x/y` land on the same member). FNV-1a keeps the
+    /// mapping identical across builds and Rust versions — files placed
+    /// by one binary stay findable by the next.
+    pub fn member_of(&self, path: &Path) -> usize {
+        let key = path.to_string_lossy();
+        let key = key.trim_start_matches('/');
+        (fnv1a(key) as usize) % self.members.len()
+    }
+
+    fn member(&self, path: &Path) -> &Arc<dyn Vfs> {
+        &self.members[self.member_of(path)]
+    }
+}
+
+impl Vfs for StripedFs {
+    fn open(&self, path: &Path, mode: OpenMode) -> Result<Box<dyn VfsFile>> {
+        self.member(path).open(path, mode)
+    }
+
+    fn read(&self, path: &Path) -> Result<Vec<u8>> {
+        self.member(path).read(path)
+    }
+
+    fn write(&self, path: &Path, data: &[u8]) -> Result<()> {
+        self.member(path).write(path, data)
+    }
+
+    fn unlink(&self, path: &Path) -> Result<()> {
+        self.member(path).unlink(path)
+    }
+
+    fn exists(&self, path: &Path) -> bool {
+        self.member(path).exists(path)
+    }
+
+    fn size(&self, path: &Path) -> Result<u64> {
+        self.member(path).size(path)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> Result<()> {
+        let (mf, mt) = (self.member_of(from), self.member_of(to));
+        if mf == mt {
+            return self.members[mf].rename(from, to);
+        }
+        // cross-member: stream-copy, then unlink the source only once
+        // the copy is complete
+        let copy = (|| -> Result<()> {
+            let mut src = self.members[mf].open(from, OpenMode::Read)?;
+            let mut dst = self.members[mt].open(to, OpenMode::Write)?;
+            let mut buf = vec![0u8; COPY_CHUNK];
+            let mut off = 0u64;
+            loop {
+                let n = src.pread(&mut buf, off)?;
+                if n == 0 {
+                    return Ok(());
+                }
+                dst.pwrite_all(&buf[..n], off)?;
+                off += n as u64;
+            }
+        })();
+        if let Err(e) = copy {
+            // don't leave a truncated destination behind: a later read
+            // falling through to it would see silent corruption
+            let _ = self.members[mt].unlink(to);
+            return Err(e);
+        }
+        self.members[mf].unlink(from)
+    }
+
+    fn readdir(&self, path: &Path) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        let mut first_err = None;
+        let mut any_ok = false;
+        for m in &self.members {
+            match m.readdir(path) {
+                Ok(mut n) => {
+                    any_ok = true;
+                    names.append(&mut n);
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if !any_ok {
+            return Err(first_err.expect("at least one member"));
+        }
+        names.sort();
+        names.dedup();
+        Ok(names)
+    }
+
+    fn sync_mgmt(&self) -> Result<()> {
+        for m in &self.members {
+            m.sync_mgmt()?;
+        }
+        Ok(())
+    }
+
+    fn shard_count(&self) -> Option<usize> {
+        Some(self.members.len())
+    }
+
+    fn shard_of(&self, path: &Path) -> Option<usize> {
+        Some(self.member_of(path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vfs::real::RealFs;
+    use crate::vfs::testutil::scratch;
+    use std::path::PathBuf;
+
+    fn striped(n: usize) -> (StripedFs, PathBuf) {
+        let root = scratch("striped");
+        let dirs: Vec<PathBuf> = (0..n).map(|i| root.join(format!("ost{i}"))).collect();
+        (StripedFs::from_dirs(dirs).unwrap(), root)
+    }
+
+    #[test]
+    fn round_trip_and_member_stability() {
+        let (fs_, root) = striped(4);
+        for i in 0..32 {
+            let p = PathBuf::from(format!("d/f{i}.dat"));
+            fs_.write(&p, format!("payload-{i}").as_bytes()).unwrap();
+            assert!(fs_.exists(&p));
+            assert_eq!(fs_.read(&p).unwrap(), format!("payload-{i}").as_bytes());
+            assert_eq!(fs_.size(&p).unwrap(), format!("payload-{i}").len() as u64);
+            // the mapping is stable and slash-insensitive
+            assert_eq!(fs_.member_of(&p), fs_.member_of(&PathBuf::from(format!("/d/f{i}.dat"))));
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn files_spread_across_members() {
+        let (fs_, root) = striped(4);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..64 {
+            seen.insert(fs_.member_of(&PathBuf::from(format!("x/{i}.dat"))));
+        }
+        assert_eq!(seen.len(), 4, "64 hashed paths should hit all 4 members");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn rename_crosses_members_when_hashes_differ() {
+        let (fs_, root) = striped(3);
+        // find two names that land on different members
+        let from = PathBuf::from("a.dat");
+        let mut to = None;
+        for i in 0..64 {
+            let cand = PathBuf::from(format!("b{i}.dat"));
+            if fs_.member_of(&cand) != fs_.member_of(&from) {
+                to = Some(cand);
+                break;
+            }
+        }
+        let to = to.expect("some name must hash elsewhere");
+        let payload = vec![7u8; 3 * COPY_CHUNK / 2]; // force a multi-chunk copy
+        fs_.write(&from, &payload).unwrap();
+        fs_.rename(&from, &to).unwrap();
+        assert!(!fs_.exists(&from));
+        assert_eq!(fs_.read(&to).unwrap(), payload);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn readdir_merges_members() {
+        let (fs_, root) = striped(4);
+        for i in 0..16 {
+            fs_.write(&PathBuf::from(format!("dir/f{i:02}")), b"1").unwrap();
+        }
+        let names = fs_.readdir(Path::new("dir")).unwrap();
+        assert_eq!(names.len(), 16);
+        assert_eq!(names[0], "f00");
+        assert_eq!(names[15], "f15");
+        // a directory no member has errors out
+        assert!(fs_.readdir(Path::new("missing")).is_err());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn shard_introspection_exposed_and_survives_rate_limit() {
+        let (fs_, root) = striped(4);
+        assert_eq!(fs_.shard_count(), Some(4));
+        let p = Path::new("q.dat");
+        let m = fs_.shard_of(p);
+        assert!(m.unwrap() < 4);
+        let wrapped = crate::vfs::RateLimitedFs::new(fs_, 1e9, 1e9);
+        assert_eq!(wrapped.shard_count(), Some(4));
+        assert_eq!(wrapped.shard_of(p), m);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn empty_members_rejected() {
+        assert!(StripedFs::new(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn member_hash_is_pinned() {
+        // the mapping is durable on-disk state: pin the FNV-1a value so
+        // an accidental algorithm change can't strand existing files
+        assert_eq!(fnv1a("inputs/block_0001.dat"), 0x9195_4b05_3a28_ce5b);
+        let (fs_, root) = striped(4);
+        assert_eq!(fs_.member_of(Path::new("inputs/block_0001.dat")), 3);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn positioned_handles_work_through_members() {
+        let (fs_, root) = striped(2);
+        let p = Path::new("h.dat");
+        {
+            let mut f = fs_.open(p, OpenMode::Write).unwrap();
+            f.pwrite_all(b"BBBB", 4).unwrap();
+            f.pwrite_all(b"AAAA", 0).unwrap();
+        }
+        assert_eq!(fs_.read(p).unwrap(), b"AAAABBBB");
+        let mut f = fs_.open(p, OpenMode::Read).unwrap();
+        let mut buf = [0u8; 4];
+        f.pread_exact(&mut buf, 2).unwrap();
+        assert_eq!(&buf, b"AABB");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

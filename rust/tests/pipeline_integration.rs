@@ -12,7 +12,7 @@ use sea::coordinator::{run_pipeline, PipelineCfg};
 use sea::placement::RuleSet;
 use sea::runtime::Engine;
 use sea::util::MIB;
-use sea::vfs::{RateLimitedFs, RealFs, SeaFs, SeaFsConfig, Vfs};
+use sea::vfs::{DeviceSpec, RateLimitedFs, RealFs, SeaFs, SeaFsConfig, SeaTuning, Vfs};
 use sea::workload::{dataset, IncrementationSpec};
 
 /// The compiled engine, or `None` when artifacts/PJRT are unavailable
@@ -58,6 +58,7 @@ fn pipeline_through_plain_dir_verifies_integrity() {
         read_back: true,
         verify: true,
         cleanup_intermediate: false,
+        max_open_outputs: 0,
     })
     .expect("pipeline");
     assert_eq!(r.blocks, 3);
@@ -94,14 +95,15 @@ fn pipeline_through_sea_mount_places_and_flushes() {
         SeaFs::mount(SeaFsConfig {
             mountpoint: PathBuf::from("/sea"),
             devices: vec![
-                (work.join("t0"), 0, 64 * MIB),
-                (work.join("t1"), 1, 512 * MIB),
+                DeviceSpec::dir(work.join("t0"), 0, 64 * MIB).unwrap(),
+                DeviceSpec::dir(work.join("t1"), 1, 512 * MIB).unwrap(),
             ],
             pfs: pfs.clone(),
             max_file_size: ds.block_bytes(),
             parallel_procs: 2,
             rules: RuleSet::in_memory(IncrementationSpec::final_glob()),
             seed: 9,
+            tuning: SeaTuning::default(),
         })
         .unwrap(),
     );
@@ -115,6 +117,7 @@ fn pipeline_through_sea_mount_places_and_flushes() {
         read_back: true,
         verify: true,
         cleanup_intermediate: false,
+        max_open_outputs: 0,
     })
     .expect("pipeline");
     assert_eq!(r.pjrt_calls, 4 * 3);
@@ -167,17 +170,19 @@ fn sea_beats_throttled_pfs_on_data_intensive_runs() {
         read_back: true,
         verify: true,
         cleanup_intermediate: true,
+        max_open_outputs: 0,
     })
     .expect("direct");
     let sea = Arc::new(
         SeaFs::mount(SeaFsConfig {
             mountpoint: PathBuf::from("/sea"),
-            devices: vec![(work.join("t0"), 0, 2048 * MIB)],
+            devices: vec![DeviceSpec::dir(work.join("t0"), 0, 2048 * MIB).unwrap()],
             pfs: mk_pfs(),
             max_file_size: ds.block_bytes(),
             parallel_procs: 2,
             rules: RuleSet::in_memory(IncrementationSpec::final_glob()),
             seed: 2,
+            tuning: SeaTuning::default(),
         })
         .unwrap(),
     );
@@ -191,6 +196,7 @@ fn sea_beats_throttled_pfs_on_data_intensive_runs() {
         read_back: true,
         verify: true,
         cleanup_intermediate: true,
+        max_open_outputs: 0,
     })
     .expect("sea");
     let speedup = direct.makespan / sea_run.makespan;
@@ -225,6 +231,7 @@ fn corruption_is_detected_by_on_device_stats() {
         read_back: true,
         verify: true,
         cleanup_intermediate: true,
+        max_open_outputs: 0,
     });
     assert!(err.is_err(), "corruption must fail the integrity check");
     let msg = format!("{}", err.err().unwrap());

@@ -68,6 +68,53 @@ fn prop_selection_prefers_fastest_eligible_tier() {
 }
 
 #[test]
+fn prop_ledger_conserves_capacity() {
+    check("free + used = capacity; debits - credits = used", Config::default(), |g| {
+        let mut h = Hierarchy::new();
+        let cap = g.u64(10..1000) * MIB;
+        h.add(0, cap, "d");
+        let acc = SpaceAccountant::new(&h);
+        let mut outstanding: Vec<u64> = Vec::new();
+        for _ in 0..g.usize(1..100) {
+            let sz = g.u64(1..10) * MIB;
+            if acc.try_debit(0, sz, 0) {
+                outstanding.push(sz);
+            }
+            if g.bool(0.4) {
+                if let Some(s) = outstanding.pop() {
+                    acc.credit(0, s);
+                }
+            }
+            let l = acc.lines()[0];
+            assert_eq!(l.free + l.used, cap, "capacity conserved");
+            assert_eq!(l.debits - l.credits, l.used, "traffic sums to occupancy");
+        }
+    });
+}
+
+#[test]
+fn prop_striped_member_mapping_stable() {
+    use sea::vfs::StripedFs;
+    use std::path::PathBuf;
+    let root = std::env::temp_dir().join(format!("sea_prop_striped_{}", std::process::id()));
+    let dirs: Vec<PathBuf> = (0..5).map(|i| root.join(format!("m{i}"))).collect();
+    let a = StripedFs::from_dirs(dirs.clone()).unwrap();
+    let b = StripedFs::from_dirs(dirs).unwrap();
+    check(
+        "member mapping is bounded, slash-insensitive, instance-independent",
+        Config::default(),
+        |g| {
+            let p = format!("d{}/f{}.dat", g.usize(0..10), g.usize(0..100_000));
+            let m = a.member_of(&PathBuf::from(&p));
+            assert!(m < 5);
+            assert_eq!(m, a.member_of(&PathBuf::from(format!("/{p}"))));
+            assert_eq!(m, b.member_of(&PathBuf::from(&p)));
+        },
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
 fn prop_credit_debit_roundtrip() {
     check("credit restores exactly", Config::default(), |g| {
         let mut h = Hierarchy::new();
