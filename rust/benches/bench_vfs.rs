@@ -12,7 +12,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use sea::bench::Harness;
-use sea::placement::RuleSet;
+use sea::placement::{EngineKind, RuleSet};
 use sea::util::{KIB, MIB};
 use sea::vfs::{
     DeviceSpec, OpenMode, RealFs, SeaFs, SeaFsConfig, SeaTuning, StripedFs, Vfs, VfsFile,
@@ -175,6 +175,7 @@ fn main() {
                     flush_workers: workers,
                     registry_shards: 16,
                     per_member_concurrency: per_member,
+                    ..SeaTuning::default()
                 },
             })
             .expect("mount");
@@ -219,6 +220,92 @@ fn main() {
     match std::fs::write("BENCH_flush_scaling.json", &json) {
         Ok(()) => println!("wrote BENCH_flush_scaling.json ({} combos)", grid.len()),
         Err(e) => eprintln!("bench: could not write BENCH_flush_scaling.json: {e}"),
+    }
+
+    // engine comparison: a hot streaming writer over a small device with
+    // cold resident files — the paper engine spills the writer itself;
+    // the temperature engine spills the cold residents (the writer stays
+    // on the fast device) and promotes them back once space frees.
+    // Emits BENCH_engine_compare.json.
+    let mut engine_rows: Vec<(&str, f64, sea::vfs::MgmtCounters)> = Vec::new();
+    for kind in [EngineKind::Paper, EngineKind::Temperature] {
+        let root = work.join(format!("engine_{}", kind.name()));
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).expect("pfs"));
+        let mount = SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(root.join("dev0"), 0, 8 * MIB).expect("dev")],
+            pfs,
+            max_file_size: MIB,
+            parallel_procs: 4,
+            rules: RuleSet::default(), // keep-all: residency managed by pressure
+            seed: 7,
+            tuning: SeaTuning { engine: kind, ..SeaTuning::default() },
+        })
+        .expect("mount");
+        let t0 = std::time::Instant::now();
+        for i in 0..4u8 {
+            mount
+                .write(Path::new(&format!("/sea/cold{i}.dat")), &vec![i; MIB as usize])
+                .expect("cold");
+        }
+        {
+            let mut f = mount
+                .open(Path::new("/sea/hot.dat"), OpenMode::Write)
+                .expect("hot");
+            let chunk = vec![9u8; 256 * KIB as usize];
+            for k in 0..32u64 {
+                f.pwrite_all(&chunk, k * 256 * KIB).expect("stream");
+            }
+        }
+        for i in 0..4u8 {
+            // re-heat the spilled/resident cold files
+            let _ = mount.read(Path::new(&format!("/sea/cold{i}.dat"))).expect("reheat");
+        }
+        mount.unlink(Path::new("/sea/hot.dat")).expect("unlink");
+        mount.sync_mgmt().expect("drain");
+        let elapsed = t0.elapsed().as_secs_f64();
+        let c = mount.counters();
+        match kind {
+            EngineKind::Paper => {
+                assert!(
+                    c.self_spills >= 1 && c.victim_spills == 0 && c.promotions == 0,
+                    "paper engine spills the writer: {c:?}"
+                );
+            }
+            EngineKind::Temperature => {
+                assert!(c.victim_spills >= 1, "temperature picks victims: {c:?}");
+                assert!(c.promotions >= 1, "freed space promotes: {c:?}");
+            }
+        }
+        h.record(
+            &format!("engine_compare_{}", kind.name()),
+            vec![elapsed],
+            format!(
+                "spills self {} victim {} promotions {}",
+                c.self_spills, c.victim_spills, c.promotions
+            ),
+        );
+        engine_rows.push((kind.name(), elapsed, c));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+    let mut ejson = String::from("{\n  \"target\": \"vfs/engine_compare\",\n  \"engines\": [\n");
+    for (i, (name, s, c)) in engine_rows.iter().enumerate() {
+        ejson.push_str(&format!(
+            "    {{\"engine\": \"{name}\", \"elapsed_s\": {s:.6}, \"flushes\": {}, \
+             \"evictions\": {}, \"self_spills\": {}, \"victim_spills\": {}, \
+             \"promotions\": {}}}{}\n",
+            c.flushes,
+            c.evictions,
+            c.self_spills,
+            c.victim_spills,
+            c.promotions,
+            if i + 1 == engine_rows.len() { "" } else { "," }
+        ));
+    }
+    ejson.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_engine_compare.json", &ejson) {
+        Ok(()) => println!("wrote BENCH_engine_compare.json ({} engines)", engine_rows.len()),
+        Err(e) => eprintln!("bench: could not write BENCH_engine_compare.json: {e}"),
     }
 
     let results = h.finish();

@@ -9,14 +9,51 @@ use crate::coordinator::{run_pipeline, ExperimentCfg, Mode, PipelineCfg};
 use crate::coordinator::run_experiment as run_sim_experiment;
 use crate::error::{Error, Result};
 use crate::model::{lustre_bounds, sea_bounds, ModelParams};
-use crate::placement::RuleSet;
+use crate::placement::{EngineKind, RuleSet};
 use crate::report::{self, describe_run, Scale};
 use crate::runtime::Engine;
 use crate::sim::spec::ClusterSpec;
 use crate::util::bytes::fmt_bw;
 use crate::util::{fmt_bytes, MIB};
-use crate::vfs::{DeviceSpec, RateLimitedFs, RealFs, SeaFs, SeaFsConfig, SeaTuning, Vfs};
+use crate::vfs::{
+    DeviceLedger, DeviceSpec, MgmtCounters, RateLimitedFs, RealFs, SeaFs, SeaFsConfig, SeaTuning,
+    Vfs,
+};
 use crate::workload::{dataset, IncrementationSpec};
+
+/// The `sea run` / `sea stat` device layout over a work root: a tmpfs
+/// tier-0 plus two tier-1 disk dirs. One builder keeps the two
+/// commands reporting on the same mount shape.
+fn work_layout(work: &std::path::Path) -> Result<Vec<DeviceSpec>> {
+    Ok(vec![
+        DeviceSpec::dir(PathBuf::from("/dev/shm/sea_run_tier0"), 0, 2 * 1024 * MIB)?,
+        DeviceSpec::dir(work.join("tier1_disk0"), 1, 8 * 1024 * MIB)?,
+        DeviceSpec::dir(work.join("tier1_disk1"), 1, 8 * 1024 * MIB)?,
+    ])
+}
+
+/// Mount tuning: defaults <- `[sea]` section of `--config` <- explicit
+/// flags (`--flush-workers`, `--registry-shards`,
+/// `--per-member-concurrency`, `--engine`).
+fn tuning_from_args(args: &Args) -> Result<SeaTuning> {
+    let base = match args.get("config") {
+        Some(path) => config::tuning_from_doc(&config::Doc::load(std::path::Path::new(path))?)?,
+        None => SeaTuning::default(),
+    };
+    let engine = match args.get("engine") {
+        None => base.engine,
+        Some(s) => EngineKind::parse(s).ok_or_else(|| {
+            Error::InvalidArg(format!("--engine {s:?}: expected paper | temperature"))
+        })?,
+    };
+    Ok(SeaTuning {
+        flush_workers: args.usize_or("flush-workers", base.flush_workers)?,
+        registry_shards: args.usize_or("registry-shards", base.registry_shards)?,
+        per_member_concurrency: args
+            .usize_or("per-member-concurrency", base.per_member_concurrency)?,
+        engine,
+    })
+}
 
 fn load_spec(args: &Args) -> Result<ClusterSpec> {
     match args.get("cluster") {
@@ -276,7 +313,8 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
              \x20       [--pfs-read-mibs N] [--pfs-write-mibs N] [--flush-all]\n\
              \x20       [--config cfg.toml]  # [sea] tuning section\n\
              \x20       [--flush-workers N] [--registry-shards N]\n\
-             \x20       [--per-member-concurrency N]  # override the config"
+             \x20       [--per-member-concurrency N]  # override the config\n\
+             \x20       [--engine paper|temperature]  # placement engine"
         );
         return Ok(0);
     }
@@ -289,19 +327,7 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
     let pfs_w = args.f64_or("pfs-write-mibs", 120.0)? * MIB as f64;
     let mode = args.str_or("mode", "both");
     let flush_all = args.has("flush-all");
-    // tuning: defaults <- [sea] section of --config <- explicit flags
-    let base_tuning = match args.get("config") {
-        Some(path) => {
-            config::tuning_from_doc(&config::Doc::load(std::path::Path::new(path))?)
-        }
-        None => SeaTuning::default(),
-    };
-    let tuning = SeaTuning {
-        flush_workers: args.usize_or("flush-workers", base_tuning.flush_workers)?,
-        registry_shards: args.usize_or("registry-shards", base_tuning.registry_shards)?,
-        per_member_concurrency: args
-            .usize_or("per-member-concurrency", base_tuning.per_member_concurrency)?,
-    };
+    let tuning = tuning_from_args(args)?;
 
     let engine = Arc::new(Engine::load(&artifacts)?);
     let elems = engine.chunk_elems();
@@ -353,11 +379,7 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
         };
         let sea = SeaFs::mount(SeaFsConfig {
             mountpoint: PathBuf::from("/sea"),
-            devices: vec![
-                DeviceSpec::dir(PathBuf::from("/dev/shm/sea_run_tier0"), 0, 2 * 1024 * MIB)?,
-                DeviceSpec::dir(work.join("tier1_disk0"), 1, 8 * 1024 * MIB)?,
-                DeviceSpec::dir(work.join("tier1_disk1"), 1, 8 * 1024 * MIB)?,
-            ],
+            devices: work_layout(&work)?,
             pfs,
             max_file_size: ds.block_bytes(),
             parallel_procs: workers as u64,
@@ -365,6 +387,7 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
             seed: 11,
             tuning,
         })?;
+        let engine_name = sea.engine_name();
         let r = run_pipeline(&PipelineCfg {
             engine: engine.clone(),
             vfs: Arc::new(sea),
@@ -378,11 +401,12 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
             max_open_outputs: 0,
         })?;
         println!(
-            "sea        : {:.2}s  ({} read, {} written, {} pjrt calls)",
+            "sea        : {:.2}s  ({} read, {} written, {} pjrt calls, {} engine)",
             r.makespan,
             fmt_bytes(r.bytes_read),
             fmt_bytes(r.bytes_written),
-            r.pjrt_calls
+            r.pjrt_calls,
+            engine_name
         );
         results.push(("sea".into(), r.makespan));
         let _ = std::fs::remove_dir_all("/dev/shm/sea_run_tier0");
@@ -393,5 +417,130 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
     Ok(0)
 }
 
+/// Render a mount's per-device ledger lines and management counters
+/// (the `sea stat` body).
+fn format_stat(engine: &str, ledger: &[DeviceLedger], c: MgmtCounters) -> String {
+    let mut out = format!("engine : {engine}\n");
+    out.push_str(&format!(
+        "{:<28} {:>4} {:>10} {:>10} {:>10} {:>11} {:>11}\n",
+        "device", "tier", "capacity", "used", "free", "debits", "credits"
+    ));
+    for l in ledger {
+        out.push_str(&format!(
+            "{:<28} {:>4} {:>10} {:>10} {:>10} {:>11} {:>11}\n",
+            l.name,
+            l.tier,
+            fmt_bytes(l.capacity),
+            fmt_bytes(l.used),
+            fmt_bytes(l.free),
+            fmt_bytes(l.debits),
+            fmt_bytes(l.credits),
+        ));
+    }
+    out.push_str(&format!(
+        "mgmt   : {} flushes, {} evictions, {} self-spills, {} victim-spills, \
+         {} promotions, {} prefetched\n",
+        c.flushes, c.evictions, c.self_spills, c.victim_spills, c.promotions, c.prefetched
+    ));
+    out
+}
+
+/// `sea stat` — mount a Sea work root (the `sea run` layout: rule
+/// dot-files under the work dir, PFS under `work/pfs`) and print its
+/// per-device ledger and management counters. The mount-time prefetch
+/// pass runs first, so a populated `.sea_prefetchlist` shows up as
+/// debits and a `prefetched` count.
+///
+/// The mount is ephemeral and in-process: ledgers reflect *this*
+/// invocation only (device dirs are not scanned for leftovers from
+/// earlier runs), and running it concurrently with `sea run` on the
+/// same work root shares the tier-0 `/dev/shm` directory.
+pub fn run_stat(args: &mut Args) -> Result<i32> {
+    if args.has("help") {
+        println!(
+            "sea stat [--work /tmp/sea_run] [--max-file-size 617MiB] [--procs N]\n\
+             \x20        [--config cfg.toml] [--engine paper|temperature]\n\
+             \x20        [--flush-workers N] [--registry-shards N]\n\
+             \x20        [--per-member-concurrency N]"
+        );
+        return Ok(0);
+    }
+    let work = PathBuf::from(args.str_or("work", "/tmp/sea_run"));
+    let tuning = tuning_from_args(args)?;
+    let rules = RuleSet::load_dir(&work)?;
+    let pfs: Arc<dyn Vfs> = Arc::new(RealFs::new(work.join("pfs"))?);
+    let sea = SeaFs::mount(SeaFsConfig {
+        mountpoint: PathBuf::from("/sea"),
+        devices: work_layout(&work)?,
+        pfs,
+        max_file_size: args.bytes_or("max-file-size", 617 * MIB)?,
+        parallel_procs: args.usize_or("procs", 2)? as u64,
+        rules,
+        seed: 11,
+        tuning,
+    })?;
+    sea.sync_mgmt()?;
+    print!("{}", format_stat(sea.engine_name(), &sea.ledger(), sea.counters()));
+    Ok(0)
+}
+
 // keep the dispatcher's expected names
 pub use run_experiment_cmd as run_experiment;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_stat_renders_ledger_and_counters() {
+        let ledger = vec![
+            DeviceLedger {
+                name: "/dev/shm/tier0".into(),
+                tier: 0,
+                capacity: 4 * MIB,
+                free: 3 * MIB,
+                used: MIB,
+                debits: 2 * MIB,
+                credits: MIB,
+            },
+            DeviceLedger {
+                name: "disk0".into(),
+                tier: 1,
+                capacity: 100 * MIB,
+                free: 100 * MIB,
+                used: 0,
+                debits: 0,
+                credits: 0,
+            },
+        ];
+        let counters = MgmtCounters {
+            flushes: 3,
+            evictions: 2,
+            self_spills: 1,
+            victim_spills: 4,
+            promotions: 5,
+            prefetched: 6,
+        };
+        let s = format_stat("temperature", &ledger, counters);
+        assert!(s.contains("engine : temperature"), "{s}");
+        assert!(s.contains("/dev/shm/tier0"), "{s}");
+        assert!(s.contains("disk0"), "{s}");
+        assert!(s.contains("3 flushes"), "{s}");
+        assert!(s.contains("4 victim-spills"), "{s}");
+        assert!(s.contains("5 promotions"), "{s}");
+        assert!(s.contains("6 prefetched"), "{s}");
+        assert_eq!(s.lines().count(), 1 + 1 + 2 + 1, "header + table + footer");
+    }
+
+    #[test]
+    fn tuning_from_args_parses_engine_flag() {
+        let argv: Vec<String> =
+            ["--engine", "temperature", "--flush-workers", "2"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv);
+        let t = tuning_from_args(&args).unwrap();
+        assert_eq!(t.engine, EngineKind::Temperature);
+        assert_eq!(t.flush_workers, 2);
+        let argv: Vec<String> = ["--engine", "bogus"].iter().map(|s| s.to_string()).collect();
+        assert!(tuning_from_args(&Args::parse(&argv)).is_err());
+    }
+}

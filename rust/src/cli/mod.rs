@@ -16,6 +16,7 @@ USAGE:
 
 COMMANDS:
     run            run the incrementation pipeline on REAL files through a Sea mount
+    stat           mount a Sea work root and print per-device ledgers + mgmt counters
     sim            run one simulated experiment on the paper-scale cluster
     experiment     regenerate a paper figure/table (fig2a|fig2b|fig2c|fig2d|fig3|table2)
     model          evaluate the analytic performance model (Eqs 1-11)
@@ -38,6 +39,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
     };
     match cmd.as_str() {
         "run" => commands::run_real(&mut args),
+        "stat" => commands::run_stat(&mut args),
         "sim" => commands::run_sim(&mut args),
         "experiment" => commands::run_experiment(&mut args),
         "model" => commands::run_model(&mut args),

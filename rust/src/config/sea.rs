@@ -2,23 +2,35 @@
 //!
 //! The `[sea]` section carries the knobs that used to be compile-time
 //! constants (`FLUSH_WORKERS`, `REGISTRY_SHARDS`) plus the striped-PFS
-//! scheduling cap; missing keys keep the defaults, so an empty file IS
-//! the default mount.
+//! scheduling cap and the placement-engine selector (`engine = "paper"
+//! | "temperature"`); missing keys keep the defaults, so an empty file
+//! IS the default mount. An *unrecognized* engine token is a hard
+//! error, matching the `--engine` CLI flag — silently benchmarking the
+//! wrong policy is worse than failing.
 
 use crate::config::parse::Doc;
+use crate::error::{Error, Result};
+use crate::placement::EngineKind;
 use crate::vfs::SeaTuning;
 
 /// Build a [`SeaTuning`] from a parsed document.
-pub fn tuning_from_doc(d: &Doc) -> SeaTuning {
+pub fn tuning_from_doc(d: &Doc) -> Result<SeaTuning> {
     let dflt = SeaTuning::default();
-    SeaTuning {
+    let engine_tok = d.str_or("sea.engine", dflt.engine.name());
+    let engine = EngineKind::parse(&engine_tok).ok_or_else(|| {
+        Error::Config(format!(
+            "[sea] engine = {engine_tok:?}: expected \"paper\" | \"temperature\""
+        ))
+    })?;
+    Ok(SeaTuning {
         flush_workers: d.usize_or("sea.flush_workers", dflt.flush_workers),
         registry_shards: d.usize_or("sea.registry_shards", dflt.registry_shards),
         per_member_concurrency: d.usize_or(
             "sea.per_member_concurrency",
             dflt.per_member_concurrency,
         ),
-    }
+        engine,
+    })
 }
 
 #[cfg(test)]
@@ -28,18 +40,26 @@ mod tests {
     #[test]
     fn empty_doc_is_the_default_tuning() {
         let d = Doc::parse("").unwrap();
-        assert_eq!(tuning_from_doc(&d), SeaTuning::default());
+        assert_eq!(tuning_from_doc(&d).unwrap(), SeaTuning::default());
     }
 
     #[test]
     fn overrides_apply() {
         let d = Doc::parse(
-            "[sea]\nflush_workers = 8\nregistry_shards = 32\nper_member_concurrency = 1\n",
+            "[sea]\nflush_workers = 8\nregistry_shards = 32\nper_member_concurrency = 1\n\
+             engine = \"temperature\"\n",
         )
         .unwrap();
-        let t = tuning_from_doc(&d);
+        let t = tuning_from_doc(&d).unwrap();
         assert_eq!(t.flush_workers, 8);
         assert_eq!(t.registry_shards, 32);
         assert_eq!(t.per_member_concurrency, 1);
+        assert_eq!(t.engine, EngineKind::Temperature);
+    }
+
+    #[test]
+    fn unknown_engine_token_is_rejected() {
+        let d = Doc::parse("[sea]\nengine = \"bogus\"\n").unwrap();
+        assert!(matches!(tuning_from_doc(&d), Err(Error::Config(_))));
     }
 }

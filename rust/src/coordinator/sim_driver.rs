@@ -1,4 +1,9 @@
 //! Simulated-experiment driver: one call = one point on a paper figure.
+//!
+//! Placement flows through the [`crate::placement::PlacementEngine`]
+//! adapters ([`SeaPolicy`] over a `PaperEngine`, [`LustrePolicy`] over
+//! the PFS-only baseline), so the simulator exercises the same policy
+//! code path as the real-bytes VFS.
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -94,7 +99,7 @@ pub fn run_experiment(cfg: &ExperimentCfg) -> Result<SimReport> {
     }
 
     let placer: Rc<RefCell<dyn SimPlacer>> = match &cfg.mode {
-        Mode::Lustre => Rc::new(RefCell::new(LustrePolicy)),
+        Mode::Lustre => Rc::new(RefCell::new(LustrePolicy::new())),
         sea_mode => {
             let rules = match sea_mode {
                 Mode::SeaInMemory => RuleSet::in_memory(IncrementationSpec::final_glob()),

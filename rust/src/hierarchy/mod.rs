@@ -11,6 +11,11 @@
 //! simulator keeps using backend-less devices ([`Hierarchy::add`]); the
 //! same selection and accounting code drives both (DESIGN.md S8/S9).
 //!
+//! Since the engine refactor neither side calls [`select_device`]
+//! directly: both drive a [`crate::placement::PlacementEngine`] (the
+//! `paper` engine wraps this module's selection rule verbatim) and the
+//! engine debits the accountant on every pick.
+//!
 //! Selection rule, as in the paper:
 //! * walk tiers from fastest to slowest;
 //! * within a tier, visit devices in *randomly shuffled* order ("selected

@@ -13,9 +13,16 @@
 //! * [`vfs`] — the interception layer: a `Vfs` trait with real
 //!   (`std::fs`) and simulated backends, and `SeaFs` implementing the
 //!   paper's mountpoint translation on top of any backend.
-//! * [`hierarchy`] + [`placement`] — storage tiers, space accounting and
-//!   the `.sea_flushlist` / `.sea_evictlist` / `.sea_prefetchlist`
-//!   memory-management modes of Table 1.
+//! * [`hierarchy`] + [`placement`] — storage tiers, space accounting,
+//!   and the **`PlacementEngine`** decision surface: typed lifecycle
+//!   hooks (`place`, `on_access`, `on_close`, `on_pressure`,
+//!   `on_freed`) returning typed decisions (flush / evict / spill-self
+//!   / spill-victim / promote). Two engines ship — `paper` (the
+//!   `.sea_flushlist` / `.sea_evictlist` / `.sea_prefetchlist` Table 1
+//!   policy, verbatim) and `temperature` (recency/size heat: coldest
+//!   resident spills first, hot spilled files promote back) — selected
+//!   via `[sea] engine = "..."` TOML or `sea run --engine`; simulator
+//!   and real-bytes VFS drive the same engines.
 //! * [`sim`] — a fluid-flow discrete-event cluster simulator (Lustre with
 //!   MDS/OSS/OST, per-node page cache with dirty-ratio writeback, local
 //!   disks, NICs) standing in for the paper's physical testbed.

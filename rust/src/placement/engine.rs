@@ -1,0 +1,700 @@
+//! The placement decision surface: [`PlacementEngine`].
+//!
+//! Historically the repo carried two disjoint implementations of the
+//! paper's placement policy: the simulator's `SimPlacer` flavour and the
+//! ad-hoc `select_device` + `RuleSet::mode_for` calls hardwired into the
+//! real-bytes `SeaFs`. This module turns the decision surface into one
+//! first-class trait with typed lifecycle hooks:
+//!
+//! * [`PlacementEngine::place`] — device pick for a new file
+//!   ([`PlaceCtx`] → [`Placement`]), debiting the ledger on success;
+//! * [`PlacementEngine::on_access`] / [`PlacementEngine::on_close`] —
+//!   access-history bookkeeping and Table 1 management at last close;
+//! * [`PlacementEngine::on_pressure`] — what to do when a streaming
+//!   writer exhausts its device ([`PressureCtx`] → spill the writer
+//!   itself, or spill colder *victim* residents instead);
+//! * [`PlacementEngine::on_freed`] — react to reclaimed space (e.g.
+//!   promote hot spilled files back onto fast tiers).
+//!
+//! Hooks return typed [`Decision`]s instead of bare `Option<DeviceRef>`
+//! / `MgmtMode`, so both the simulator adapters
+//! ([`crate::placement::policy`]) and the VFS ([`crate::vfs::SeaFs`])
+//! execute the *same* policy code path.
+//!
+//! Shipped engines:
+//!
+//! * [`PaperEngine`] — bit-for-bit reproduction of the paper's §3.1.2
+//!   `p·F` selection and Table 1 modes (spill-self under pressure, no
+//!   promotion);
+//! * [`TemperatureEngine`] — tracks per-file recency/size heat, spills
+//!   the **coldest resident file** instead of the active writer, and
+//!   promotes hot spilled files back when space frees (the HSM
+//!   follow-up direction, arXiv:2404.11556);
+//! * [`PfsOnlyEngine`] — the plain-PFS (Lustre) baseline.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::hierarchy::{select_device, DeviceRef, Hierarchy, SelectCfg, SpaceAccountant};
+use crate::placement::rules::{MgmtMode, RuleSet};
+use crate::util::Rng;
+
+/// Which shipped engine a mount should build (`[sea] engine = "..."`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// [`PaperEngine`]: the paper's policy, verbatim.
+    #[default]
+    Paper,
+    /// [`TemperatureEngine`]: heat-driven victims and promotion.
+    Temperature,
+}
+
+impl EngineKind {
+    /// Parse a config/CLI token.
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s {
+            "paper" => Some(EngineKind::Paper),
+            "temperature" | "temp" => Some(EngineKind::Temperature),
+            _ => None,
+        }
+    }
+
+    /// Canonical token.
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Paper => "paper",
+            EngineKind::Temperature => "temperature",
+        }
+    }
+}
+
+/// What the engine sees of the device hierarchy when deciding.
+pub struct EngineCtx<'a> {
+    /// Device tiers.
+    pub hierarchy: &'a Hierarchy,
+    /// Per-device ledger (placement debits go through here).
+    pub accountant: &'a SpaceAccountant,
+}
+
+/// Where a new file should live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// On a fast device (already debited for `PlaceCtx::size` bytes).
+    Device(DeviceRef),
+    /// Fall through to the PFS (unbounded last resort).
+    Pfs,
+}
+
+/// Context for one placement decision.
+pub struct PlaceCtx<'a> {
+    /// Mount-relative path.
+    pub rel: &'a str,
+    /// Bytes known up front; 0 for streaming opens (space is then
+    /// debited incrementally as the handle grows the file).
+    pub size: u64,
+    /// Mount-time prefetch pass: the bytes already live on the PFS, the
+    /// placement is a pure cache fill.
+    pub prefetch: bool,
+}
+
+/// How a file was touched (heat bookkeeping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    /// Opened or read for reading.
+    Read,
+    /// Opened for writing (join of an existing entry).
+    Write,
+}
+
+/// Context at (last) close of a file.
+pub struct CloseCtx<'a> {
+    /// Mount-relative path.
+    pub rel: &'a str,
+    /// Device holding the local copy; `None` when the file spilled to
+    /// (or always lived on) the PFS.
+    pub dev: Option<DeviceRef>,
+    /// Final size in bytes (0 when unknown).
+    pub size: u64,
+}
+
+/// One closed, device-resident file: a spill-victim candidate.
+#[derive(Debug, Clone)]
+pub struct Resident {
+    /// Mount-relative path.
+    pub rel: String,
+    /// Device holding it.
+    pub dev: DeviceRef,
+    /// Bytes it occupies (= ledger debit).
+    pub size: u64,
+}
+
+/// Context when a streaming writer exhausts its device.
+pub struct PressureCtx<'a> {
+    /// The writer that ran out of space.
+    pub rel: &'a str,
+    /// Its device.
+    pub dev: DeviceRef,
+    /// Additional bytes its pending write needs.
+    pub need: u64,
+    /// Closed resident files (no open writers) across fast devices.
+    pub residents: &'a [Resident],
+}
+
+/// A typed policy decision.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Decision {
+    /// Replicate `rel` to the PFS, keep the local copy (Table 1 Copy;
+    /// Copy + Evict together are Move).
+    Flush {
+        /// Mount-relative path.
+        rel: String,
+    },
+    /// Drop `rel`'s local copy (Table 1 Remove; after a Flush, Move).
+    Evict {
+        /// Mount-relative path.
+        rel: String,
+    },
+    /// Under pressure: migrate the asking writer itself to the PFS.
+    SpillSelf,
+    /// Under pressure: persist-and-drop a colder resident file instead,
+    /// so the active writer stays on its device.
+    SpillVictim {
+        /// Mount-relative path of the victim.
+        rel: String,
+    },
+    /// Pull a PFS-resident file back onto a fast tier.
+    Promote {
+        /// Mount-relative path.
+        rel: String,
+        /// Target tier rank (0 = fastest).
+        tier: u8,
+    },
+}
+
+/// One placement brain shared by the simulator and the real-bytes VFS.
+///
+/// Implementations must be internally synchronised (`SeaFs` calls hooks
+/// from writer threads and flush-pool workers concurrently).
+pub trait PlacementEngine: Send + Sync {
+    /// Pick where a new file goes. A `Device` pick has already debited
+    /// `p.size` bytes from the ledger.
+    fn place(&self, ctx: EngineCtx<'_>, p: PlaceCtx<'_>) -> Placement;
+
+    /// A file was read or re-opened for writing (heat bookkeeping).
+    fn on_access(&self, rel: &str, access: Access) {
+        let _ = (rel, access);
+    }
+
+    /// The last writer handle closed: return the management decisions
+    /// (Table 1) for the file.
+    fn on_close(&self, c: CloseCtx<'_>) -> Vec<Decision>;
+
+    /// A writer exhausted its device: decide who spills.
+    fn on_pressure(&self, ctx: EngineCtx<'_>, p: PressureCtx<'_>) -> Vec<Decision>;
+
+    /// `size` bytes were credited back to `dev` (evict / unlink / spill
+    /// / shrink): optionally react, e.g. with `Promote` decisions.
+    fn on_freed(&self, ctx: EngineCtx<'_>, dev: DeviceRef, size: u64) -> Vec<Decision>;
+
+    /// Does `on_pressure` consult [`PressureCtx::residents`]? When
+    /// `false` the executor skips the full-registry snapshot on the
+    /// write hot path.
+    fn wants_residents(&self) -> bool {
+        false
+    }
+
+    /// Called by the executor right before a queued `Promote` decision
+    /// runs; returning `false` vetoes it. Engines that emit promotions
+    /// should consume the candidate *here* rather than at emission
+    /// time, so an intervening write-open or re-placement cancels a
+    /// queued promote instead of installing a stale device copy over a
+    /// live PFS file.
+    fn approve_promote(&self, rel: &str) -> bool {
+        let _ = rel;
+        true
+    }
+
+    /// Should `rel` be pulled off the PFS at mount time?
+    fn wants_prefetch(&self, rel: &str) -> bool {
+        let _ = rel;
+        false
+    }
+
+    /// Display name (diagnostics / benches).
+    fn name(&self) -> &'static str;
+}
+
+/// Build a shipped engine by kind.
+pub fn build_engine(
+    kind: EngineKind,
+    select: SelectCfg,
+    rules: RuleSet,
+    seed: u64,
+) -> Arc<dyn PlacementEngine> {
+    match kind {
+        EngineKind::Paper => Arc::new(PaperEngine::new(select, rules, seed)),
+        EngineKind::Temperature => Arc::new(TemperatureEngine::new(select, rules, seed)),
+    }
+}
+
+/// Which of a decision list's `Flush`/`Evict` decisions target `rel`
+/// itself: the `(flush, evict)` pair both executors (the VFS flush
+/// pool and the simulator adapter) dispatch on.
+pub fn flush_evict_flags(rel: &str, decisions: &[Decision]) -> (bool, bool) {
+    let mut flush = false;
+    let mut evict = false;
+    for d in decisions {
+        match d {
+            Decision::Flush { rel: r } if r == rel => flush = true,
+            Decision::Evict { rel: r } if r == rel => evict = true,
+            _ => {}
+        }
+    }
+    (flush, evict)
+}
+
+/// Table 1, expressed as typed decisions.
+fn table1_decisions(rules: &RuleSet, rel: &str) -> Vec<Decision> {
+    match rules.mode_for(rel) {
+        MgmtMode::Copy => vec![Decision::Flush { rel: rel.to_string() }],
+        MgmtMode::Remove => vec![Decision::Evict { rel: rel.to_string() }],
+        MgmtMode::Move => vec![
+            Decision::Flush { rel: rel.to_string() },
+            Decision::Evict { rel: rel.to_string() },
+        ],
+        MgmtMode::Keep => Vec::new(),
+    }
+}
+
+/// The paper's policy, verbatim: `p·F` fastest-eligible selection,
+/// Table 1 management at close, spill-self under pressure, no reaction
+/// to freed space.
+pub struct PaperEngine {
+    select: SelectCfg,
+    rules: RuleSet,
+    rng: Mutex<Rng>,
+}
+
+impl PaperEngine {
+    /// Engine over the declared `p·F` config and rule lists.
+    pub fn new(select: SelectCfg, rules: RuleSet, seed: u64) -> PaperEngine {
+        PaperEngine { select, rules, rng: Mutex::new(Rng::new(seed)) }
+    }
+}
+
+impl PlacementEngine for PaperEngine {
+    fn place(&self, ctx: EngineCtx<'_>, p: PlaceCtx<'_>) -> Placement {
+        let mut rng = self.rng.lock().expect("engine rng poisoned");
+        match select_device(ctx.hierarchy, ctx.accountant, &self.select, p.size, &mut rng) {
+            Some(d) => Placement::Device(d),
+            None => Placement::Pfs,
+        }
+    }
+
+    fn on_close(&self, c: CloseCtx<'_>) -> Vec<Decision> {
+        table1_decisions(&self.rules, c.rel)
+    }
+
+    fn on_pressure(&self, _ctx: EngineCtx<'_>, _p: PressureCtx<'_>) -> Vec<Decision> {
+        vec![Decision::SpillSelf]
+    }
+
+    fn on_freed(&self, _ctx: EngineCtx<'_>, _dev: DeviceRef, _size: u64) -> Vec<Decision> {
+        Vec::new()
+    }
+
+    fn wants_prefetch(&self, rel: &str) -> bool {
+        self.rules.prefetch.matches(rel)
+    }
+
+    fn name(&self) -> &'static str {
+        "paper"
+    }
+}
+
+/// The plain-PFS baseline: everything goes to long-term storage, no
+/// management ever runs.
+#[derive(Debug, Default)]
+pub struct PfsOnlyEngine;
+
+impl PlacementEngine for PfsOnlyEngine {
+    fn place(&self, _ctx: EngineCtx<'_>, _p: PlaceCtx<'_>) -> Placement {
+        Placement::Pfs
+    }
+
+    fn on_close(&self, _c: CloseCtx<'_>) -> Vec<Decision> {
+        Vec::new()
+    }
+
+    fn on_pressure(&self, _ctx: EngineCtx<'_>, _p: PressureCtx<'_>) -> Vec<Decision> {
+        vec![Decision::SpillSelf]
+    }
+
+    fn on_freed(&self, _ctx: EngineCtx<'_>, _dev: DeviceRef, _size: u64) -> Vec<Decision> {
+        Vec::new()
+    }
+
+    fn name(&self) -> &'static str {
+        "pfs-only"
+    }
+}
+
+/// A spilled / PFS-resident file remembered for possible promotion.
+#[derive(Debug, Clone, Copy)]
+struct Spilled {
+    /// Last known size (0 = unknown, writer still open).
+    size: u64,
+    /// Logical tick at which it was spilled. A file only becomes a
+    /// promotion candidate once it is accessed *after* this tick —
+    /// otherwise the `on_freed` fired by the spill's own ledger credit
+    /// would immediately promote the victim back, stealing the space
+    /// the spill just freed.
+    tick: u64,
+}
+
+#[derive(Default)]
+struct TempState {
+    /// rel → logical tick of its most recent touch (recency heat;
+    /// absent = never touched = coldest).
+    heat: HashMap<String, u64>,
+    /// Spilled / PFS-resident files eligible for promotion.
+    spilled: HashMap<String, Spilled>,
+}
+
+/// Heat-map size bound: when exceeded, the coldest half is pruned so a
+/// churning workload (millions of lifetime-unique paths) cannot grow
+/// the map without bound.
+const MAX_HEAT_ENTRIES: usize = 65_536;
+
+impl TempState {
+    fn touch(&mut self, rel: &str, tick: u64) {
+        self.heat.insert(rel.to_string(), tick);
+        if self.heat.len() > MAX_HEAT_ENTRIES {
+            // amortized O(1) per touch: each prune halves the map.
+            // Spilled promotion candidates keep their heat so their
+            // ordering stays meaningful; pruned files simply read as
+            // cold (tick 0) again.
+            let mut ticks: Vec<u64> = self.heat.values().copied().collect();
+            ticks.sort_unstable();
+            let cutoff = ticks[ticks.len() / 2];
+            let spilled = &self.spilled;
+            self.heat
+                .retain(|rel, t| *t > cutoff || spilled.contains_key(rel));
+        }
+    }
+
+    fn heat_tick(&self, rel: &str) -> u64 {
+        self.heat.get(rel).copied().unwrap_or(0)
+    }
+}
+
+/// Max `Promote` decisions emitted per `on_freed` call (keeps one large
+/// free from flooding the flush pool with promote jobs).
+const MAX_PROMOTES_PER_FREE: usize = 8;
+
+/// Heat-driven placement: the paper's selection rule for placement, but
+/// under pressure the **coldest resident file** is persisted and
+/// dropped (the active writer keeps streaming to its fast device), and
+/// when space frees the hottest spilled files are promoted back.
+pub struct TemperatureEngine {
+    select: SelectCfg,
+    rules: RuleSet,
+    rng: Mutex<Rng>,
+    clock: AtomicU64,
+    state: Mutex<TempState>,
+}
+
+impl TemperatureEngine {
+    /// Engine over the declared `p·F` config and rule lists.
+    pub fn new(select: SelectCfg, rules: RuleSet, seed: u64) -> TemperatureEngine {
+        TemperatureEngine {
+            select,
+            rules,
+            rng: Mutex::new(Rng::new(seed)),
+            clock: AtomicU64::new(0),
+            state: Mutex::new(TempState::default()),
+        }
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Fastest tier with a device that can hold `size` bytes right now.
+    fn tier_with_room(&self, ctx: &EngineCtx<'_>, size: u64) -> Option<u8> {
+        for tier in ctx.hierarchy.tiers() {
+            for d in ctx.hierarchy.tier_devices(tier) {
+                if ctx.accountant.free(d) >= size {
+                    return Some(tier);
+                }
+            }
+        }
+        None
+    }
+}
+
+impl PlacementEngine for TemperatureEngine {
+    fn place(&self, ctx: EngineCtx<'_>, p: PlaceCtx<'_>) -> Placement {
+        let tick = self.tick();
+        {
+            let mut st = self.state.lock().expect("temp state poisoned");
+            st.touch(p.rel, tick);
+            // a (re)placement supersedes any pending promotion
+            st.spilled.remove(p.rel);
+        }
+        let mut rng = self.rng.lock().expect("engine rng poisoned");
+        match select_device(ctx.hierarchy, ctx.accountant, &self.select, p.size, &mut rng) {
+            Some(d) => Placement::Device(d),
+            None => Placement::Pfs,
+        }
+    }
+
+    fn on_access(&self, rel: &str, access: Access) {
+        let tick = self.tick();
+        let mut st = self.state.lock().expect("temp state poisoned");
+        st.touch(rel, tick);
+        if access == Access::Write {
+            // a write-open (possibly through a raw PFS handle the VFS
+            // does not track) supersedes any pending promotion:
+            // promoting now would install a stale shadow copy
+            st.spilled.remove(rel);
+        }
+    }
+
+    fn on_close(&self, c: CloseCtx<'_>) -> Vec<Decision> {
+        let tick = self.tick();
+        {
+            let mut st = self.state.lock().expect("temp state poisoned");
+            st.touch(c.rel, tick);
+            if c.dev.is_none() {
+                // spilled mid-stream: now a promotion candidate with a
+                // known final size (but only once re-accessed)
+                st.spilled
+                    .insert(c.rel.to_string(), Spilled { size: c.size, tick });
+            }
+        }
+        table1_decisions(&self.rules, c.rel)
+    }
+
+    fn on_pressure(&self, ctx: EngineCtx<'_>, p: PressureCtx<'_>) -> Vec<Decision> {
+        let tick = self.tick();
+        let mut st = self.state.lock().expect("temp state poisoned");
+        // the active writer is hot by definition
+        st.touch(p.rel, tick);
+        let mut cands: Vec<&Resident> = p
+            .residents
+            .iter()
+            .filter(|r| r.dev == p.dev && r.rel != p.rel)
+            .collect();
+        // coldest first; ties broken towards the larger file (more
+        // space reclaimed per migration)
+        cands.sort_by_key(|r| (st.heat_tick(&r.rel), std::cmp::Reverse(r.size)));
+        let free = ctx.accountant.free(p.dev);
+        let mut freed = 0u64;
+        let mut out = Vec::new();
+        for r in cands {
+            if free + freed >= p.need {
+                break;
+            }
+            out.push(Decision::SpillVictim { rel: r.rel.clone() });
+            freed += r.size;
+        }
+        if free + freed < p.need {
+            // victims alone cannot satisfy the write: spill the writer
+            // itself (its size is recorded at close)
+            st.spilled
+                .insert(p.rel.to_string(), Spilled { size: 0, tick });
+            return vec![Decision::SpillSelf];
+        }
+        for d in &out {
+            if let Decision::SpillVictim { rel } = d {
+                let size = p
+                    .residents
+                    .iter()
+                    .find(|r| &r.rel == rel)
+                    .map_or(0, |r| r.size);
+                st.spilled.insert(rel.clone(), Spilled { size, tick });
+            }
+        }
+        out
+    }
+
+    fn on_freed(&self, ctx: EngineCtx<'_>, _dev: DeviceRef, _size: u64) -> Vec<Decision> {
+        let mut st = self.state.lock().expect("temp state poisoned");
+        if st.spilled.is_empty() {
+            return Vec::new();
+        }
+        // candidates: spilled files with a known size that have been
+        // accessed since their spill (hot again), hottest first
+        let mut cands: Vec<(String, u64, u64)> = st
+            .spilled
+            .iter()
+            .filter(|(rel, s)| s.size > 0 && st.heat_tick(rel) > s.tick)
+            .map(|(rel, s)| (rel.clone(), s.size, st.heat_tick(rel)))
+            .collect();
+        cands.sort_by_key(|(_, _, tick)| std::cmp::Reverse(*tick));
+        let mut out = Vec::new();
+        for (rel, size, _) in cands {
+            if out.len() >= MAX_PROMOTES_PER_FREE {
+                break;
+            }
+            if let Some(tier) = self.tier_with_room(&ctx, size) {
+                // the candidate stays in `spilled` until the executor
+                // calls `approve_promote` — an intervening write-open
+                // or re-placement cancels the queued decision
+                out.push(Decision::Promote { rel, tier });
+            }
+        }
+        out
+    }
+
+    fn wants_residents(&self) -> bool {
+        true
+    }
+
+    fn approve_promote(&self, rel: &str) -> bool {
+        // one-shot: consuming the candidate here means a second queued
+        // promote for the same file, or one queued before the file was
+        // written again, is vetoed
+        self.state
+            .lock()
+            .expect("temp state poisoned")
+            .spilled
+            .remove(rel)
+            .is_some()
+    }
+
+    fn wants_prefetch(&self, rel: &str) -> bool {
+        self.rules.prefetch.matches(rel)
+    }
+
+    fn name(&self) -> &'static str {
+        "temperature"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::MIB;
+
+    fn hierarchy() -> (Hierarchy, SpaceAccountant) {
+        let mut h = Hierarchy::new();
+        h.add(0, 4 * MIB, "tmpfs");
+        h.add(1, 100 * MIB, "disk");
+        let acc = SpaceAccountant::new(&h);
+        (h, acc)
+    }
+
+    fn select() -> SelectCfg {
+        SelectCfg { max_file_size: MIB, parallel_procs: 1 }
+    }
+
+    #[test]
+    fn engine_kind_parses_and_round_trips() {
+        assert_eq!(EngineKind::parse("paper"), Some(EngineKind::Paper));
+        assert_eq!(EngineKind::parse("temperature"), Some(EngineKind::Temperature));
+        assert_eq!(EngineKind::parse("temp"), Some(EngineKind::Temperature));
+        assert_eq!(EngineKind::parse("nope"), None);
+        for k in [EngineKind::Paper, EngineKind::Temperature] {
+            assert_eq!(EngineKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(EngineKind::default(), EngineKind::Paper);
+    }
+
+    #[test]
+    fn paper_engine_places_like_select_device_and_spills_self() {
+        let (h, acc) = hierarchy();
+        let eng = PaperEngine::new(select(), RuleSet::from_texts("**", "**", ""), 9);
+        let ctx = EngineCtx { hierarchy: &h, accountant: &acc };
+        match eng.place(ctx, PlaceCtx { rel: "a", size: MIB, prefetch: false }) {
+            Placement::Device(d) => assert_eq!(h.info(d).name, "tmpfs"),
+            Placement::Pfs => panic!("tmpfs has room"),
+        }
+        let ds = eng.on_close(CloseCtx { rel: "a", dev: Some(0), size: MIB });
+        assert_eq!(
+            ds,
+            vec![
+                Decision::Flush { rel: "a".into() },
+                Decision::Evict { rel: "a".into() }
+            ]
+        );
+        let ctx = EngineCtx { hierarchy: &h, accountant: &acc };
+        let ds = eng.on_pressure(
+            ctx,
+            PressureCtx { rel: "a", dev: 0, need: MIB, residents: &[] },
+        );
+        assert_eq!(ds, vec![Decision::SpillSelf]);
+        let ctx = EngineCtx { hierarchy: &h, accountant: &acc };
+        assert!(eng.on_freed(ctx, 0, MIB).is_empty());
+        assert!(!eng.wants_residents(), "paper never inspects residents");
+        assert!(eng.approve_promote("anything"), "default approval is a no-op");
+    }
+
+    #[test]
+    fn temperature_engine_picks_coldest_victim() {
+        let (h, acc) = hierarchy();
+        let eng = TemperatureEngine::new(select(), RuleSet::default(), 9);
+        // heat order: cold (never touched) < warm < hot (the writer)
+        eng.on_access("warm.dat", Access::Read);
+        let residents = vec![
+            Resident { rel: "cold.dat".into(), dev: 0, size: MIB },
+            Resident { rel: "warm.dat".into(), dev: 0, size: MIB },
+        ];
+        // fill the device so free == 0
+        assert!(acc.try_debit(0, 4 * MIB, 0));
+        let ds = eng.on_pressure(
+            EngineCtx { hierarchy: &h, accountant: &acc },
+            PressureCtx { rel: "hot.dat", dev: 0, need: MIB, residents: &residents },
+        );
+        assert_eq!(ds, vec![Decision::SpillVictim { rel: "cold.dat".into() }]);
+        // victims cannot satisfy a huge need: the writer spills itself
+        let ds = eng.on_pressure(
+            EngineCtx { hierarchy: &h, accountant: &acc },
+            PressureCtx { rel: "hot.dat", dev: 0, need: 100 * MIB, residents: &residents },
+        );
+        assert_eq!(ds, vec![Decision::SpillSelf]);
+    }
+
+    #[test]
+    fn temperature_engine_promotes_hot_spilled_files_on_free() {
+        let (h, acc) = hierarchy();
+        let eng = TemperatureEngine::new(select(), RuleSet::default(), 9);
+        // two spilled files with known sizes; only "b" is re-accessed
+        eng.on_close(CloseCtx { rel: "a.dat", dev: None, size: MIB });
+        eng.on_close(CloseCtx { rel: "b.dat", dev: None, size: MIB });
+        eng.on_access("b.dat", Access::Read);
+        let ds = eng.on_freed(EngineCtx { hierarchy: &h, accountant: &acc }, 0, 2 * MIB);
+        assert_eq!(
+            ds,
+            vec![Decision::Promote { rel: "b.dat".into(), tier: 0 }],
+            "only the re-accessed file promotes; a.dat stays cold on the PFS"
+        );
+        // the executor consumes the candidate at approval time, once
+        assert!(eng.approve_promote("b.dat"));
+        assert!(!eng.approve_promote("b.dat"), "approval is one-shot");
+        let ds = eng.on_freed(EngineCtx { hierarchy: &h, accountant: &acc }, 0, MIB);
+        assert!(ds.is_empty(), "approved candidate no longer re-emits");
+        // once a.dat heats up again it promotes too
+        eng.on_access("a.dat", Access::Read);
+        let ds = eng.on_freed(EngineCtx { hierarchy: &h, accountant: &acc }, 0, MIB);
+        assert_eq!(ds, vec![Decision::Promote { rel: "a.dat".into(), tier: 0 }]);
+        // a write-open between emission and execution vetoes the promote
+        eng.on_access("a.dat", Access::Write);
+        assert!(!eng.approve_promote("a.dat"), "write-open cancels the queued promote");
+    }
+
+    #[test]
+    fn pfs_only_engine_never_uses_devices() {
+        let (h, acc) = hierarchy();
+        let eng = PfsOnlyEngine;
+        let p = eng.place(
+            EngineCtx { hierarchy: &h, accountant: &acc },
+            PlaceCtx { rel: "x", size: MIB, prefetch: false },
+        );
+        assert_eq!(p, Placement::Pfs);
+        assert!(eng.on_close(CloseCtx { rel: "x", dev: None, size: MIB }).is_empty());
+        assert_eq!(acc.free(0), 4 * MIB, "nothing debited");
+    }
+}

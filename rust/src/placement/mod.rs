@@ -5,16 +5,26 @@
 //! * [`rules`] — `.sea_flushlist` / `.sea_evictlist` / `.sea_prefetchlist`
 //!   parsing and the Copy/Remove/Move/Keep mode table;
 //! * [`table`] — path ⇄ id interning shared by policies and workloads;
-//! * [`policy`] — [`SeaPolicy`] (hierarchy placement + rule actions) and
-//!   the [`LustrePolicy`] baseline, as simulator placers. The real-bytes
-//!   counterpart lives in `vfs::sea` and shares everything but the device
-//!   mapping.
+//! * [`engine`] — **the placement decision surface**: the
+//!   [`PlacementEngine`] trait (typed `place` / `on_close` /
+//!   `on_pressure` / `on_freed` lifecycle hooks returning [`Decision`]s)
+//!   and the shipped engines — [`PaperEngine`] (the paper's `p·F` +
+//!   Table 1 policy, verbatim) and [`TemperatureEngine`]
+//!   (recency/size-heat victims and promotion);
+//! * [`policy`] — [`SeaPolicy`] / [`LustrePolicy`], the simulator-side
+//!   adapters over the same engines. The real-bytes counterpart lives
+//!   in `vfs::sea` and drives an `Arc<dyn PlacementEngine>` end to end.
 
+pub mod engine;
 pub mod glob;
 pub mod policy;
 pub mod rules;
 pub mod table;
 
+pub use engine::{
+    build_engine, Access, CloseCtx, Decision, EngineCtx, EngineKind, PaperEngine, PfsOnlyEngine,
+    PlaceCtx, Placement, PlacementEngine, PressureCtx, Resident, TemperatureEngine,
+};
 pub use glob::glob_match;
 pub use policy::{LustrePolicy, SeaPolicy};
 pub use rules::{MgmtMode, PatternList, RuleSet};

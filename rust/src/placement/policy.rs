@@ -1,32 +1,73 @@
-//! Placement policies: Sea's hierarchy policy and the plain-Lustre
-//! baseline, as [`SimPlacer`]s for the simulator.
+//! Simulator placement policies, as thin **adapters** over the shared
+//! [`PlacementEngine`] API.
 //!
-//! The real-bytes VFS uses the same [`Hierarchy`]/[`SpaceAccountant`]/
-//! [`RuleSet`] machinery (module `vfs::sea`); only the device mapping
-//! differs (the simulator binds devices to [`Location`]s, the VFS binds
-//! them to `Vfs` backends via `Hierarchy::add_backed`). Both flavours
-//! account through the same per-device ledger, so occupancy diagnostics
-//! ([`SeaPolicy::device_usage`]) read identically on either side.
+//! Since the engine refactor the simulator no longer carries its own
+//! copy of the paper's policy: [`SeaPolicy`] drives a
+//! [`crate::placement::engine::PaperEngine`] (one engine instance — and
+//! one shuffle RNG stream — shared across nodes, exactly like the
+//! pre-refactor implementation) and [`LustrePolicy`] drives the
+//! [`PfsOnlyEngine`] baseline. The real-bytes VFS (`vfs::sea`) drives
+//! the *same* engines, so simulation and real bytes share one policy
+//! code path. The adapters map [`Placement`] picks onto simulator
+//! [`Location`]s and typed [`Decision`]s onto [`MgmtAction`]s; decisions
+//! the simulator cannot execute (`Promote`, spill variants) are dropped
+//! here — the simulator has no pressure or promotion machinery.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::hierarchy::{select_device, DeviceRef, Hierarchy, SelectCfg, SpaceAccountant};
-use crate::placement::rules::{MgmtMode, RuleSet};
+use crate::hierarchy::{DeviceRef, Hierarchy, SelectCfg, SpaceAccountant};
+use crate::placement::engine::{
+    flush_evict_flags, CloseCtx, Decision, EngineCtx, PaperEngine, PfsOnlyEngine, PlaceCtx,
+    Placement, PlacementEngine,
+};
+use crate::placement::rules::RuleSet;
 use crate::placement::table::FileTable;
 use crate::sim::app::{MgmtAction, SimPlacer};
 use crate::sim::spec::ClusterSpec;
 use crate::sim::stack::{FileId, StackState};
 use crate::sim::topology::Location;
-use crate::util::Rng;
+
+/// Map close decisions onto the simulator's management actions.
+fn actions_from_decisions(file: FileId, rel: &str, decisions: &[Decision]) -> Vec<MgmtAction> {
+    match flush_evict_flags(rel, decisions) {
+        (true, true) => vec![MgmtAction::FlushEvict(file)],
+        (true, false) => vec![MgmtAction::Flush(file)],
+        (false, true) => vec![MgmtAction::Evict(file)],
+        (false, false) => Vec::new(),
+    }
+}
 
 /// Baseline: every file goes straight to Lustre; no management actions.
-#[derive(Debug, Default)]
-pub struct LustrePolicy;
+pub struct LustrePolicy {
+    /// Empty hierarchy (the baseline declares no fast devices).
+    hierarchy: Hierarchy,
+    accountant: SpaceAccountant,
+    engine: PfsOnlyEngine,
+}
+
+impl Default for LustrePolicy {
+    fn default() -> LustrePolicy {
+        let hierarchy = Hierarchy::new();
+        let accountant = SpaceAccountant::new(&hierarchy);
+        LustrePolicy { hierarchy, accountant, engine: PfsOnlyEngine }
+    }
+}
+
+impl LustrePolicy {
+    /// The baseline adapter.
+    pub fn new() -> LustrePolicy {
+        LustrePolicy::default()
+    }
+}
 
 impl SimPlacer for LustrePolicy {
-    fn place(&mut self, _st: &mut StackState, _node: usize, _f: FileId, _s: u64) -> Location {
-        Location::Lustre
+    fn place(&mut self, _st: &mut StackState, _node: usize, _f: FileId, size: u64) -> Location {
+        let ctx = EngineCtx { hierarchy: &self.hierarchy, accountant: &self.accountant };
+        match self.engine.place(ctx, PlaceCtx { rel: "", size, prefetch: false }) {
+            Placement::Pfs => Location::Lustre,
+            Placement::Device(_) => unreachable!("pfs-only engine never picks a device"),
+        }
     }
     fn on_write_complete(&mut self, _file: FileId) -> Vec<MgmtAction> {
         Vec::new()
@@ -46,15 +87,15 @@ struct NodeDevices {
 
 /// Sea's placement policy over the simulated cluster.
 ///
-/// Owns per-node hierarchies (tmpfs tier 0, local disks tier 1), the
-/// `p·F` reservation config, and the rule lists that decide Table 1
-/// actions after each write.
+/// Owns per-node hierarchies (tmpfs tier 0, local disks tier 1) and one
+/// shared [`PaperEngine`] carrying the `p·F` reservation config and the
+/// rule lists that decide Table 1 actions after each write.
 pub struct SeaPolicy {
     nodes: Vec<NodeDevices>,
-    cfg: SelectCfg,
-    rules: RuleSet,
+    engine: Arc<dyn PlacementEngine>,
     table: Arc<FileTable>,
-    rng: Rng,
+    /// Last placement per file (location + size), for close contexts.
+    last_placed: HashMap<FileId, (Location, u64)>,
     /// Statistics: placements per tier name.
     pub placed: HashMap<&'static str, u64>,
     /// Statistics: placements that fell back to Lustre.
@@ -62,13 +103,24 @@ pub struct SeaPolicy {
 }
 
 impl SeaPolicy {
-    /// Build the per-node hierarchies from a cluster spec.
+    /// Build the per-node hierarchies from a cluster spec, over a
+    /// [`PaperEngine`] (the paper's policy).
     pub fn new(
         spec: &ClusterSpec,
         cfg: SelectCfg,
         rules: RuleSet,
         table: Arc<FileTable>,
         seed: u64,
+    ) -> SeaPolicy {
+        let engine: Arc<dyn PlacementEngine> = Arc::new(PaperEngine::new(cfg, rules, seed));
+        SeaPolicy::with_engine(spec, engine, table)
+    }
+
+    /// Build the adapter over any [`PlacementEngine`].
+    pub fn with_engine(
+        spec: &ClusterSpec,
+        engine: Arc<dyn PlacementEngine>,
+        table: Arc<FileTable>,
     ) -> SeaPolicy {
         let mut nodes = Vec::with_capacity(spec.nodes);
         for n in 0..spec.nodes {
@@ -88,10 +140,9 @@ impl SeaPolicy {
         }
         SeaPolicy {
             nodes,
-            cfg,
-            rules,
+            engine,
             table,
-            rng: Rng::new(seed),
+            last_placed: HashMap::new(),
             placed: HashMap::new(),
             fallbacks: 0,
         }
@@ -116,30 +167,51 @@ impl SeaPolicy {
 }
 
 impl SimPlacer for SeaPolicy {
-    fn place(&mut self, _st: &mut StackState, node: usize, _file: FileId, size: u64) -> Location {
-        let nd = &self.nodes[node];
-        match select_device(&nd.hierarchy, &nd.accountant, &self.cfg, size, &mut self.rng) {
-            Some(d) => {
-                let loc = nd.loc_of[d];
-                *self.placed.entry(loc.tier_name()).or_default() += 1;
-                loc
+    fn place(&mut self, _st: &mut StackState, node: usize, file: FileId, size: u64) -> Location {
+        let path = self.table.path(file);
+        let loc = {
+            let nd = &self.nodes[node];
+            let ctx = EngineCtx { hierarchy: &nd.hierarchy, accountant: &nd.accountant };
+            match self
+                .engine
+                .place(ctx, PlaceCtx { rel: &path, size, prefetch: false })
+            {
+                Placement::Device(d) => Some(nd.loc_of[d]),
+                Placement::Pfs => None,
+            }
+        };
+        let loc = match loc {
+            Some(l) => {
+                *self.placed.entry(l.tier_name()).or_default() += 1;
+                l
             }
             None => {
                 self.fallbacks += 1;
                 *self.placed.entry("lustre").or_default() += 1;
                 Location::Lustre
             }
-        }
+        };
+        self.last_placed.insert(file, (loc, size));
+        loc
     }
 
     fn on_write_complete(&mut self, file: FileId) -> Vec<MgmtAction> {
         let path = self.table.path(file);
-        match self.rules.mode_for(&path) {
-            MgmtMode::Copy => vec![MgmtAction::Flush(file)],
-            MgmtMode::Move => vec![MgmtAction::FlushEvict(file)],
-            MgmtMode::Remove => vec![MgmtAction::Evict(file)],
-            MgmtMode::Keep => Vec::new(),
-        }
+        // drain the record: each completion is its last consumer (a
+        // re-written file re-inserts at its next place()), so the map
+        // never grows with the run
+        let (loc, size) = self
+            .last_placed
+            .remove(&file)
+            .unwrap_or((Location::Lustre, 0));
+        let dev = match loc {
+            Location::Tmpfs { node } | Location::Disk { node, .. } => {
+                self.nodes[node].dev_of.get(&loc).copied()
+            }
+            Location::Lustre => None,
+        };
+        let decisions = self.engine.on_close(CloseCtx { rel: &path, dev, size });
+        actions_from_decisions(file, &path, &decisions)
     }
 
     fn on_freed(&mut self, loc: Location, size: u64) {
@@ -150,6 +222,10 @@ impl SimPlacer for SeaPolicy {
         let nd = &self.nodes[node];
         if let Some(&d) = nd.dev_of.get(&loc) {
             nd.accountant.credit(d, size);
+            // the simulator has no promotion machinery: the engine is
+            // informed (heat bookkeeping) but its decisions are dropped
+            let ctx = EngineCtx { hierarchy: &nd.hierarchy, accountant: &nd.accountant };
+            let _ = self.engine.on_freed(ctx, d, size);
         }
     }
 }
@@ -271,10 +347,52 @@ mod tests {
 
     #[test]
     fn lustre_policy_places_everything_on_lustre() {
-        let mut p = LustrePolicy;
+        let mut p = LustrePolicy::new();
         let (_sim, stack) = stack_state();
         let mut st = stack.state.borrow_mut();
         assert_eq!(p.place(&mut st, 0, 1, GIB), Location::Lustre);
         assert!(p.on_write_complete(1).is_empty());
+    }
+
+    #[test]
+    fn close_context_carries_the_placed_device() {
+        // the adapter feeds the engine truthful close contexts: a file
+        // placed on tmpfs closes with its device, a fallback with None —
+        // observable through an engine that records them
+        use std::sync::Mutex;
+        struct Recording(Mutex<Vec<(String, Option<DeviceRef>, u64)>>);
+        impl PlacementEngine for Recording {
+            fn place(&self, _c: EngineCtx<'_>, _p: PlaceCtx<'_>) -> Placement {
+                Placement::Device(0)
+            }
+            fn on_close(&self, c: CloseCtx<'_>) -> Vec<Decision> {
+                self.0
+                    .lock()
+                    .unwrap()
+                    .push((c.rel.to_string(), c.dev, c.size));
+                Vec::new()
+            }
+            fn on_pressure(&self, _c: EngineCtx<'_>, _p: PressureCtx<'_>) -> Vec<Decision> {
+                vec![Decision::SpillSelf]
+            }
+            fn on_freed(&self, _c: EngineCtx<'_>, _d: DeviceRef, _s: u64) -> Vec<Decision> {
+                Vec::new()
+            }
+            fn name(&self) -> &'static str {
+                "recording"
+            }
+        }
+        use crate::placement::engine::PressureCtx;
+        let table = Arc::new(FileTable::new());
+        let rec = Arc::new(Recording(Mutex::new(Vec::new())));
+        let mut p = SeaPolicy::with_engine(&spec(), rec.clone(), table.clone());
+        let (_sim, stack) = stack_state();
+        let mut st = stack.state.borrow_mut();
+        let f = table.intern("ctx/file.dat");
+        let loc = p.place(&mut st, 1, f, MIB);
+        assert_eq!(loc, Location::Tmpfs { node: 1 });
+        p.on_write_complete(f);
+        let seen = rec.0.lock().unwrap().clone();
+        assert_eq!(seen, vec![("ctx/file.dat".to_string(), Some(0), MIB)]);
     }
 }

@@ -31,12 +31,15 @@
 //!   OSTs); exposes its member topology via [`Vfs::shard_count`] /
 //!   [`Vfs::shard_of`] so flush schedulers can respect per-member
 //!   concurrency limits;
-//! * [`sea::SeaFs`] — **the paper's library**: mountpoint translation to
-//!   the fastest eligible device *backend* at `open` (every placement
-//!   target, device tiers and the PFS alike, is a `Vfs`), open-handle
-//!   tracking, and rule-driven flush/evict via a multi-worker flush pool
-//!   over a sharded registry, plus prefetch support and mid-stream PFS
-//!   spill when a device fills under a writer.
+//! * [`sea::SeaFs`] — **the paper's library**: mountpoint translation at
+//!   `open` (every placement target, device tiers and the PFS alike, is
+//!   a `Vfs`), open-handle tracking, and a multi-worker flush pool over
+//!   a sharded registry. Every decision — device pick, Table 1
+//!   management at last close, spill-victim choice under device
+//!   pressure, promotion when space frees, mount-time prefetch — flows
+//!   through one [`crate::placement::PlacementEngine`]
+//!   (`SeaTuning::engine` selects `paper` or `temperature`), the same
+//!   trait the simulator policies drive.
 //!
 //! Decorators compose: a `SeaFs` mounted over
 //! `RateLimitedFs<StripedFs>` emulates a loaded, OST-striped Lustre.
@@ -53,7 +56,7 @@ pub mod striped;
 
 pub use rate::RateLimitedFs;
 pub use real::RealFs;
-pub use sea::{DeviceSpec, SeaFs, SeaFsConfig, SeaTuning};
+pub use sea::{DeviceLedger, DeviceSpec, MgmtCounters, SeaFs, SeaFsConfig, SeaTuning};
 pub use striped::StripedFs;
 
 use std::path::Path;

@@ -14,19 +14,30 @@
 //! the stack (a throttled striped PFS is
 //! `RateLimitedFs<StripedFs>`).
 //!
+//! Every decision flows through one [`PlacementEngine`]
+//! (`SeaTuning::engine`): the device pick at [`Vfs::open`], the Table 1
+//! management at last close, who spills when a device fills, and what
+//! gets promoted back when space frees. The shipped `paper` engine
+//! reproduces the paper's policy verbatim; the `temperature` engine
+//! tracks per-file heat, spills the *coldest resident* file instead of
+//! the active writer, and promotes hot spilled files back.
+//!
 //! Placement happens at [`Vfs::open`]: a writer handle reserves a device
 //! slot and debits the [`crate::hierarchy::SpaceAccountant`]'s
 //! per-device ledger as the file grows. When a streaming writer
-//! outgrows its device, the handle **spills mid-stream**: under the
-//! per-file flush lock the partial file migrates to the PFS backend
-//! (epoch/generation-checked, writer counts preserved), the device
-//! ledger is credited, and the write continues on the PFS instead of
-//! failing with `NoSpace`. Only when the **last** writer handle closes
-//! is the file handed to memory management. The Table 1 modes (Copy →
-//! replicate to PFS; Move → replicate then drop local; Remove → drop
-//! without persisting) are applied asynchronously by a **flush pool**
-//! of worker threads (a multi-worker generalisation of the paper's §5.1
-//! daemon) so several files flush to the PFS in parallel. When the PFS
+//! outgrows its device, the engine's `on_pressure` hook decides: either
+//! a cold victim is persisted-and-dropped so the writer stays, or the
+//! handle **spills mid-stream** — under the per-file flush lock the
+//! partial file migrates to the PFS backend (epoch/generation-checked,
+//! writer counts preserved, sibling writes detected via per-entry
+//! write serials and re-copied before the flip), the device ledger is
+//! credited, and the write continues on the PFS instead of failing
+//! with `NoSpace`. Only when the **last** writer handle closes is the
+//! file handed to memory management. The engine's close decisions
+//! (flush / evict, Table 1) are applied asynchronously by a **flush
+//! pool** of worker threads (a multi-worker generalisation of the
+//! paper's §5.1 daemon) so several files flush to the PFS in parallel;
+//! the same pool executes promotions. When the PFS
 //! advertises shard topology ([`Vfs::shard_count`], e.g. a striped
 //! backend), the pool is **OST-aware**: at most
 //! [`SeaTuning::per_member_concurrency`] flushes are in flight per
@@ -54,9 +65,12 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
-use crate::hierarchy::{select_device, DeviceRef, Hierarchy, SelectCfg, SpaceAccountant};
-use crate::placement::rules::{MgmtMode, RuleSet};
-use crate::util::Rng;
+use crate::hierarchy::{DeviceRef, Hierarchy, SelectCfg, SpaceAccountant};
+use crate::placement::engine::{
+    build_engine, flush_evict_flags, Access, CloseCtx, Decision, EngineCtx, EngineKind, PlaceCtx,
+    Placement, PlacementEngine, PressureCtx, Resident,
+};
+use crate::placement::rules::RuleSet;
 use crate::vfs::{OpenMode, RealFs, Vfs, VfsFile};
 
 /// Default registry shard count: enough to keep 2× typical worker
@@ -123,6 +137,9 @@ pub struct SeaTuning {
     /// Max in-flight flushes per striped-PFS member; 0 disables the
     /// gate. Ignored when the PFS reports no shard topology.
     pub per_member_concurrency: usize,
+    /// Which [`PlacementEngine`] the mount drives (`[sea] engine = ...`,
+    /// `sea run --engine ...`).
+    pub engine: EngineKind,
 }
 
 impl Default for SeaTuning {
@@ -131,6 +148,7 @@ impl Default for SeaTuning {
             flush_workers: DEFAULT_FLUSH_WORKERS,
             registry_shards: DEFAULT_REGISTRY_SHARDS,
             per_member_concurrency: DEFAULT_PER_MEMBER_CONCURRENCY,
+            engine: EngineKind::Paper,
         }
     }
 }
@@ -174,6 +192,25 @@ pub struct DeviceLedger {
     pub credits: u64,
 }
 
+/// Cumulative management/placement activity of a mount (diagnostics,
+/// `sea stat`, benches).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MgmtCounters {
+    /// Files replicated to the PFS by the flush pool.
+    pub flushes: u64,
+    /// Local copies dropped by the flush pool (incl. victim spills).
+    pub evictions: u64,
+    /// Mid-stream migrations of the active writer to the PFS.
+    pub self_spills: u64,
+    /// Cold resident files persisted-and-dropped under pressure so an
+    /// active writer could stay on its device.
+    pub victim_spills: u64,
+    /// PFS-resident files pulled back onto a fast tier.
+    pub promotions: u64,
+    /// Files pulled in by the mount-time prefetch pass.
+    pub prefetched: u64,
+}
+
 #[derive(Debug, Clone)]
 struct Entry {
     /// Device holding the local copy, or `None` once a mid-stream spill
@@ -195,13 +232,60 @@ struct Entry {
     epoch: u64,
     /// Open writer handles; management is deferred until this drops to 0.
     writers: u32,
+    /// Device writes reserved under the shard lock whose backend I/O has
+    /// not completed yet. A spill must drain this to 0 before it flips.
+    pending: u32,
+    /// Per-entry write serial: bumped when a device write completes.
+    /// A spill snapshots it before its bulk copy; a mismatch at flip
+    /// time means sibling writes landed mid-copy and must be re-copied.
+    serial: u64,
+    /// Spill phase 1 armed: completing writes log their ranges into
+    /// `recopy` so the spill can re-copy them before the flip.
+    recopy_armed: bool,
+    /// Spill phase 2: new reservations are refused ([`Step::Busy`])
+    /// until the entry flips to the PFS.
+    migrating: bool,
+    /// `(offset, len)` of writes completed since arming.
+    recopy: Vec<(u64, u64)>,
 }
 
-/// One unit of deferred memory management.
-struct Job {
-    mode: MgmtMode,
-    rel: String,
-    gen: u64,
+impl Entry {
+    fn new(dev: Option<DeviceRef>, size: u64, flushed: bool, gen: u64, writers: u32) -> Entry {
+        Entry {
+            dev,
+            size,
+            flushed,
+            generation: gen,
+            epoch: gen,
+            writers,
+            pending: 0,
+            serial: 0,
+            recopy_armed: false,
+            migrating: false,
+            recopy: Vec::new(),
+        }
+    }
+}
+
+/// One unit of deferred background work for the flush pool.
+enum Job {
+    /// Table 1 management at last close: flush and/or evict `rel`.
+    Mgmt {
+        rel: String,
+        gen: u64,
+        flush: bool,
+        evict: bool,
+    },
+    /// Pull a PFS-resident file back onto a fast tier.
+    Promote { rel: String, tier: u8 },
+}
+
+impl Job {
+    fn rel(&self) -> &str {
+        match self {
+            Job::Mgmt { rel, .. } | Job::Promote { rel, .. } => rel,
+        }
+    }
 }
 
 /// N-way sharded `rel -> Entry` map: per-shard mutexes instead of one
@@ -321,9 +405,11 @@ struct Shared {
     accountant: SpaceAccountant,
     registry: Registry,
     pfs: Arc<dyn Vfs>,
-    rules: RuleSet,
-    /// Mgmt statistics: (flushes, evictions).
-    counters: Mutex<(u64, u64)>,
+    /// The one placement brain: every device pick, mgmt decision, spill
+    /// victim and promotion flows through it.
+    engine: Arc<dyn PlacementEngine>,
+    /// Mgmt statistics.
+    counters: Mutex<MgmtCounters>,
     /// Monotonic generation source for registry entries.
     generations: AtomicU64,
     /// Flush-pool inbox; `None` once the mount is dropped.
@@ -347,20 +433,115 @@ impl Shared {
         self.generations.fetch_add(1, Ordering::Relaxed) + 1
     }
 
-    /// Hand `rel` to the flush pool (no-op for `Keep`).
-    fn enqueue_mgmt(&self, mode: MgmtMode, rel: &str, gen: u64) {
-        if matches!(mode, MgmtMode::Keep) {
-            return;
-        }
+    /// The engine's view of this mount's devices.
+    fn ectx(&self) -> EngineCtx<'_> {
+        EngineCtx { hierarchy: &self.hierarchy, accountant: &self.accountant }
+    }
+
+    /// Hand a job to the flush pool.
+    fn enqueue(&self, job: Job) {
         let tx = self.tx.lock().expect("tx poisoned");
         if let Some(tx) = tx.as_ref() {
             *self.pending.lock().expect("pending poisoned") += 1;
-            let sent = tx.send(Job { mode, rel: rel.to_string(), gen }).is_ok();
-            if !sent {
+            if tx.send(job).is_err() {
                 *self.pending.lock().expect("pending poisoned") -= 1;
                 self.idle.notify_all();
             }
         }
+    }
+
+    /// Enqueue the engine's close decisions for `rel` (no-op when the
+    /// engine decided Keep).
+    fn enqueue_close(&self, rel: &str, gen: u64, decisions: &[Decision]) {
+        let (flush, evict) = flush_evict_flags(rel, decisions);
+        if flush || evict {
+            self.enqueue(Job::Mgmt { rel: rel.to_string(), gen, flush, evict });
+        }
+        for d in decisions {
+            if let Decision::Promote { rel, tier } = d {
+                self.enqueue(Job::Promote { rel: rel.clone(), tier: *tier });
+            }
+        }
+    }
+
+    /// Tell the engine `size` bytes came free on `dev`; execute any
+    /// promotion decisions asynchronously on the flush pool.
+    fn notify_freed(&self, dev: DeviceRef, size: u64) {
+        for d in self.engine.on_freed(self.ectx(), dev, size) {
+            if let Decision::Promote { rel, tier } = d {
+                self.enqueue(Job::Promote { rel, tier });
+            }
+        }
+    }
+
+    /// Credit the ledger and notify the engine in one step.
+    fn credit_and_notify(&self, dev: DeviceRef, size: u64) {
+        self.accountant.credit(dev, size);
+        self.notify_freed(dev, size);
+    }
+
+    /// Insert a freshly placed entry, reclaiming whatever entry raced
+    /// in between the caller's `drop_local` and now (a concurrent
+    /// promotion, or another writer's placement): the loser's ledger
+    /// debit is credited back and its device file removed — unless it
+    /// lives on the very path the caller just wrote.
+    fn insert_placed(&self, rel: &str, entry: Entry) {
+        let new_dev = entry.dev;
+        let prev = self
+            .registry
+            .with_shard(rel, |m| m.insert(rel.to_string(), entry));
+        if let Some(p) = prev {
+            if let Some(d) = p.dev {
+                if Some(d) != new_dev {
+                    let _ = self.backend(d).unlink(Path::new(rel));
+                }
+                self.credit_and_notify(d, p.size);
+            }
+        }
+    }
+
+    /// Snapshot of closed, device-resident files: the engine's
+    /// spill-victim candidates.
+    fn residents(&self) -> Vec<Resident> {
+        let mut out = Vec::new();
+        for shard in &self.registry.shards {
+            let m = shard.lock().expect("registry poisoned");
+            for (rel, e) in m.iter() {
+                if e.writers == 0 && !e.migrating && !e.recopy_armed {
+                    if let Some(dev) = e.dev {
+                        out.push(Resident { rel: rel.clone(), dev, size: e.size });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Persist-and-drop a closed resident file *now* (an engine
+    /// `SpillVictim` decision): the victim's bytes move to the PFS and
+    /// its device space is credited, so the pressured writer can stay.
+    /// Returns whether the victim's device copy is gone.
+    fn spill_victim(&self, rel: &str) -> bool {
+        let lk = self.flush_lock(rel);
+        let evicted = {
+            let _guard = lk.lock().expect("flush lock poisoned");
+            match self.registry.get(rel) {
+                Some(e) if e.writers == 0 && e.dev.is_some() => {
+                    run_mgmt(self, rel, e.generation, true, true);
+                    match self.registry.get(rel) {
+                        Some(e2) => e2.dev.is_none(),
+                        None => true,
+                    }
+                }
+                _ => false,
+            }
+        };
+        drop(lk);
+        self.release_flush_lock(rel);
+        if evicted {
+            self.counters.lock().expect("counters poisoned").victim_spills += 1;
+        }
+        evicted
     }
 
     fn flush_lock(&self, rel: &str) -> Arc<Mutex<()>> {
@@ -392,14 +573,14 @@ impl Shared {
 pub struct SeaFs {
     mountpoint: PathBuf,
     shared: Arc<Shared>,
-    select: SelectCfg,
-    rng: Mutex<Rng>,
     workers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl SeaFs {
-    /// Mount: builds the hierarchy over the device backends, spawns the
-    /// flush pool, and arms the per-member gate when the PFS is sharded.
+    /// Mount: builds the hierarchy over the device backends, constructs
+    /// the [`PlacementEngine`] (`tuning.engine`), spawns the flush pool,
+    /// arms the per-member gate when the PFS is sharded, and runs the
+    /// mount-time prefetch pass when `.sea_prefetchlist` names inputs.
     pub fn mount(cfg: SeaFsConfig) -> Result<SeaFs> {
         if cfg.devices.is_empty() {
             return Err(Error::Config(
@@ -420,14 +601,20 @@ impl SeaFs {
             }),
             _ => None,
         };
+        let select = SelectCfg {
+            max_file_size: cfg.max_file_size,
+            parallel_procs: cfg.parallel_procs,
+        };
+        let has_prefetch = !cfg.rules.prefetch.is_empty();
+        let engine = build_engine(cfg.tuning.engine, select, cfg.rules, cfg.seed);
         let (tx, rx) = mpsc::channel::<Job>();
         let shared = Arc::new(Shared {
             hierarchy,
             accountant,
             registry: Registry::new(cfg.tuning.registry_shards),
             pfs: cfg.pfs,
-            rules: cfg.rules,
-            counters: Mutex::new((0, 0)),
+            engine,
+            counters: Mutex::new(MgmtCounters::default()),
             generations: AtomicU64::new(0),
             tx: Mutex::new(Some(tx)),
             pending: Mutex::new(0),
@@ -447,16 +634,15 @@ impl SeaFs {
                 .map_err(|e| Error::io("<thread>", e))?;
             workers.push(h);
         }
-        Ok(SeaFs {
+        let sea = SeaFs {
             mountpoint: cfg.mountpoint,
             shared,
-            select: SelectCfg {
-                max_file_size: cfg.max_file_size,
-                parallel_procs: cfg.parallel_procs,
-            },
-            rng: Mutex::new(Rng::new(cfg.seed)),
             workers: Mutex::new(workers),
-        })
+        };
+        if has_prefetch {
+            sea.prefetch_pass();
+        }
+        Ok(sea)
     }
 
     /// Mount-relative form of `path`, or `None` when outside the mount.
@@ -479,7 +665,19 @@ impl SeaFs {
 
     /// (flushes, evictions) executed by the flush pool so far.
     pub fn mgmt_counters(&self) -> (u64, u64) {
+        let c = self.shared.counters.lock().expect("counters poisoned");
+        (c.flushes, c.evictions)
+    }
+
+    /// Full management/placement counters (spills, promotions,
+    /// prefetches included).
+    pub fn counters(&self) -> MgmtCounters {
         *self.shared.counters.lock().expect("counters poisoned")
+    }
+
+    /// Display name of the mount's placement engine.
+    pub fn engine_name(&self) -> &'static str {
+        self.shared.engine.name()
     }
 
     /// Per-device ledger lines joined with device metadata.
@@ -510,29 +708,75 @@ impl SeaFs {
             .map(|s| s.state.lock().expect("pfs slots poisoned").1.clone())
     }
 
-    /// Prefetch: copy every PFS file under `dir` (mount-relative)
-    /// matching the `.sea_prefetchlist` into fast devices.
+    /// Prefetch: recursively copy every PFS file under `dir`
+    /// (mount-relative) the engine wants prefetched
+    /// (`.sea_prefetchlist`) into fast devices. I/O errors on matched
+    /// files propagate — a caller can tell "nothing matched" from
+    /// "the PFS is failing".
     pub fn prefetch_dir(&self, dir: &str) -> Result<usize> {
-        let names = self.shared.pfs.readdir(Path::new(dir))?;
-        let mut n = 0;
-        for name in names {
-            let rel = if dir.is_empty() { name.clone() } else { format!("{dir}/{name}") };
-            if !self.shared.rules.prefetch.matches(&rel) {
-                continue;
-            }
-            let data = self.shared.pfs.read(Path::new(&rel))?;
-            if self.place_and_write(&rel, &data, true)?.is_some() {
-                n += 1;
+        self.prefetch_walk(dir, true)
+    }
+
+    /// Mount-time prefetch pass: walk the whole PFS tree. Best-effort
+    /// (`strict = false`): unreadable entries are skipped, a mount
+    /// never fails on prefetch.
+    fn prefetch_pass(&self) -> usize {
+        let n = self.prefetch_walk("", false).unwrap_or(0);
+        if n > 0 {
+            self.shared.counters.lock().expect("counters poisoned").prefetched += n as u64;
+        }
+        n
+    }
+
+    /// Shared prefetch walker: pull every engine-matched file under
+    /// `root` into the fastest eligible tier (ledger-debited, marked
+    /// flushed — the bytes came *from* the PFS, so eviction is always
+    /// safe). `strict` propagates I/O errors (the explicit
+    /// [`SeaFs::prefetch_dir`] API); lenient mode skips them (the
+    /// mount-time pass).
+    fn prefetch_walk(&self, root: &str, strict: bool) -> Result<usize> {
+        let sh = &self.shared;
+        let mut n = 0usize;
+        let mut stack = vec![root.to_string()];
+        while let Some(dir) = stack.pop() {
+            let names = match sh.pfs.readdir(Path::new(&dir)) {
+                Ok(names) => names,
+                // the root must be listable in strict mode; deeper
+                // failures (entry vanished mid-scan) are skipped
+                Err(e) if strict && dir == root => return Err(e),
+                Err(_) => continue,
+            };
+            for name in names {
+                let rel = if dir.is_empty() { name } else { format!("{dir}/{name}") };
+                // directories list their children; files refuse readdir
+                if sh.pfs.readdir(Path::new(&rel)).is_ok() {
+                    stack.push(rel);
+                    continue;
+                }
+                if !sh.engine.wants_prefetch(&rel) || sh.registry.contains(&rel) {
+                    continue;
+                }
+                match sh.pfs.read(Path::new(&rel)) {
+                    Ok(data) => match self.place_and_write(&rel, &data, true) {
+                        Ok(Some(_)) => n += 1,
+                        Ok(None) => {}
+                        Err(e) if strict => return Err(e),
+                        Err(_) => {}
+                    },
+                    Err(Error::NotFound(_)) => {} // vanished mid-scan
+                    Err(e) if strict => return Err(e),
+                    Err(_) => {}
+                }
             }
         }
         Ok(n)
     }
 
-    /// Core whole-file placement: write `data` to the fastest eligible
-    /// device's backend. Returns the chosen device and registry
-    /// generation, or `None` when it fell through to the PFS.
-    /// `already_flushed` marks prefetched inputs (they came *from* the
-    /// PFS, so eviction is always safe).
+    /// Core whole-file placement: write `data` to the device the engine
+    /// picks. Returns the chosen device and registry generation, or
+    /// `None` when it fell through to the PFS. `already_flushed` marks
+    /// prefetched inputs (they came *from* the PFS, so eviction is
+    /// always safe).
     fn place_and_write(
         &self,
         rel: &str,
@@ -542,17 +786,12 @@ impl SeaFs {
         let sh = &self.shared;
         // overwrite: free the previous local copy first
         self.drop_local(rel)?;
-        let mut rng = self.rng.lock().expect("rng poisoned");
-        let pick = select_device(
-            &sh.hierarchy,
-            &sh.accountant,
-            &self.select,
-            data.len() as u64,
-            &mut rng,
+        let pick = sh.engine.place(
+            sh.ectx(),
+            PlaceCtx { rel, size: data.len() as u64, prefetch: already_flushed },
         );
-        drop(rng);
         match pick {
-            Some(dev) => {
+            Placement::Device(dev) => {
                 if let Err(e) = sh.backend(dev).write(Path::new(rel), data) {
                     // placement reserved the bytes; a failed backend
                     // write must give them back
@@ -560,20 +799,13 @@ impl SeaFs {
                     return Err(e);
                 }
                 let gen = sh.next_gen();
-                sh.registry.insert(
-                    rel.to_string(),
-                    Entry {
-                        dev: Some(dev),
-                        size: data.len() as u64,
-                        flushed: already_flushed,
-                        generation: gen,
-                        epoch: gen,
-                        writers: 0,
-                    },
+                sh.insert_placed(
+                    rel,
+                    Entry::new(Some(dev), data.len() as u64, already_flushed, gen, 0),
                 );
                 Ok(Some((dev, gen)))
             }
-            None => {
+            Placement::Pfs => {
                 sh.pfs.write(Path::new(rel), data)?;
                 Ok(None)
             }
@@ -608,6 +840,7 @@ impl SeaFs {
                 };
                 match opened {
                     Ok(file) => {
+                        sh.engine.on_access(rel, Access::Write);
                         return Ok(Box::new(SeaFile {
                             shared: sh.clone(),
                             rel: rel.to_string(),
@@ -615,7 +848,7 @@ impl SeaFs {
                             epoch,
                             append: false,
                             file,
-                        }))
+                        }));
                     }
                     Err(e) => {
                         rollback_join(sh, rel, epoch);
@@ -625,31 +858,22 @@ impl SeaFs {
             }
             if sh.pfs.exists(Path::new(rel)) {
                 // no local copy: update the PFS-resident file in place
+                sh.engine.on_access(rel, Access::Write);
                 return sh.pfs.open(Path::new(rel), mode);
             }
             // brand-new file: fall through to placement
         }
         self.drop_local(rel)?;
-        let mut rng = self.rng.lock().expect("rng poisoned");
         // eligibility uses the p·F floor; actual bytes are debited as
         // the handle grows the file
-        let pick = select_device(&sh.hierarchy, &sh.accountant, &self.select, 0, &mut rng);
-        drop(rng);
+        let pick = sh
+            .engine
+            .place(sh.ectx(), PlaceCtx { rel, size: 0, prefetch: false });
         match pick {
-            Some(dev) => {
+            Placement::Device(dev) => {
                 let file = sh.backend(dev).open(Path::new(rel), OpenMode::Write)?;
                 let gen = sh.next_gen();
-                sh.registry.insert(
-                    rel.to_string(),
-                    Entry {
-                        dev: Some(dev),
-                        size: 0,
-                        flushed: false,
-                        generation: gen,
-                        epoch: gen,
-                        writers: 1,
-                    },
-                );
+                sh.insert_placed(rel, Entry::new(Some(dev), 0, false, gen, 1));
                 Ok(Box::new(SeaFile {
                     shared: sh.clone(),
                     rel: rel.to_string(),
@@ -659,7 +883,7 @@ impl SeaFs {
                     file,
                 }))
             }
-            None => sh.pfs.open(Path::new(rel), OpenMode::Write),
+            Placement::Pfs => sh.pfs.open(Path::new(rel), OpenMode::Write),
         }
     }
 
@@ -671,9 +895,13 @@ impl SeaFs {
         let sh = &self.shared;
         // pre-select in case we create; size 0 means nothing is debited,
         // so there is nothing to roll back if we end up joining
-        let mut rng = self.rng.lock().expect("rng poisoned");
-        let pick = select_device(&sh.hierarchy, &sh.accountant, &self.select, 0, &mut rng);
-        drop(rng);
+        let pick = match sh
+            .engine
+            .place(sh.ectx(), PlaceCtx { rel, size: 0, prefetch: false })
+        {
+            Placement::Device(d) => Some(d),
+            Placement::Pfs => None,
+        };
         enum How {
             Join(Option<DeviceRef>, u64),
             Created(DeviceRef, u64, Box<dyn VfsFile>),
@@ -700,17 +928,7 @@ impl SeaFs {
                 match sh.backend(dev).open(Path::new(rel), OpenMode::Write) {
                     Ok(file) => {
                         let gen = sh.next_gen();
-                        m.insert(
-                            rel.to_string(),
-                            Entry {
-                                dev: Some(dev),
-                                size: 0,
-                                flushed: false,
-                                generation: gen,
-                                epoch: gen,
-                                writers: 1,
-                            },
-                        );
+                        m.insert(rel.to_string(), Entry::new(Some(dev), 0, false, gen, 1));
                         How::Created(dev, gen, file)
                     }
                     Err(e) => How::Fail(e),
@@ -724,14 +942,17 @@ impl SeaFs {
                     None => sh.pfs.open(Path::new(rel), OpenMode::ReadWrite),
                 };
                 match opened {
-                    Ok(file) => Ok(Box::new(SeaFile {
-                        shared: sh.clone(),
-                        rel: rel.to_string(),
-                        dev,
-                        epoch,
-                        append: true,
-                        file,
-                    })),
+                    Ok(file) => {
+                        sh.engine.on_access(rel, Access::Write);
+                        Ok(Box::new(SeaFile {
+                            shared: sh.clone(),
+                            rel: rel.to_string(),
+                            dev,
+                            epoch,
+                            append: true,
+                            file,
+                        }))
+                    }
                     Err(e) => {
                         rollback_join(sh, rel, epoch);
                         Err(e)
@@ -781,7 +1002,7 @@ impl SeaFs {
                 // local copy (crediting its space) before the insert, or
                 // the old entry's bytes leak from the ledger forever
                 self.drop_local(rt)?;
-                let (dev, flushed, gen) = (e.dev, e.flushed, e.generation);
+                let (dev, flushed, gen, size) = (e.dev, e.flushed, e.generation, e.size);
                 self.shared.registry.insert(rt.to_string(), e);
                 if let Some(d) = dev {
                     self.shared
@@ -795,8 +1016,11 @@ impl SeaFs {
                 } else if !flushed {
                     // pending mgmt enqueued under the old name was
                     // dropped with the key; re-enqueue for the new
-                    let mode = self.shared.rules.mode_for(rt);
-                    self.shared.enqueue_mgmt(mode, rt, gen);
+                    let decisions = self
+                        .shared
+                        .engine
+                        .on_close(CloseCtx { rel: rt, dev, size });
+                    self.shared.enqueue_close(rt, gen, &decisions);
                 }
                 Ok(())
             }
@@ -822,7 +1046,7 @@ impl SeaFs {
                     Ok(()) | Err(Error::NotFound(_)) => {}
                     Err(err) => return Err(err),
                 }
-                sh.accountant.credit(d, e.size);
+                sh.credit_and_notify(d, e.size);
             }
             // dev == None (spilled): the bytes live on the PFS and the
             // ledger was credited at spill time — nothing local to drop
@@ -846,15 +1070,15 @@ fn rollback_join(sh: &Arc<Shared>, rel: &str, epoch: u64) {
             }
             en.writers = en.writers.saturating_sub(1);
             if en.writers == 0 && en.dev.is_some() {
-                Some(en.generation)
+                Some((en.generation, en.dev, en.size))
             } else {
                 None
             }
         })
         .flatten();
-    if let Some(gen) = regen {
-        let mode = sh.rules.mode_for(rel);
-        sh.enqueue_mgmt(mode, rel, gen);
+    if let Some((gen, dev, size)) = regen {
+        let decisions = sh.engine.on_close(CloseCtx { rel, dev, size });
+        sh.enqueue_close(rel, gen, &decisions);
     }
 }
 
@@ -862,13 +1086,24 @@ fn rollback_join(sh: &Arc<Shared>, rel: &str, epoch: u64) {
 enum Step {
     /// Reservation done (or not needed): write at this offset.
     Go(u64),
+    /// Like [`Step::Go`], but the write targets the device copy: the
+    /// entry's `pending` count was incremented and the handle must call
+    /// `complete_device_write` once the backend I/O returns (write
+    /// serials — a concurrent spill drains and re-copies these).
+    GoTracked(u64),
     /// Entry replaced or gone and the handle is appending: write at the
     /// orphaned inode's own end (resolved lazily — it needs an fstat).
     Orphan,
-    /// Device exhausted: migrate the partial file to the PFS, retry.
-    Spill,
+    /// Device exhausted: ask the engine for pressure relief (spill a
+    /// victim, or the writer itself), then retry.
+    Spill {
+        /// Additional bytes the reservation needed.
+        need: u64,
+    },
     /// Another handle spilled this entry: reopen on the PFS, retry.
     Reopen,
+    /// A spill of this entry is flipping right now: yield and retry.
+    Busy,
 }
 
 /// Writer handle on a placed file: grows the registry entry (and the
@@ -925,28 +1160,93 @@ impl SeaFile {
                         Ok(Step::Go(off))
                     }
                     Some(d) => {
+                        if e.migrating {
+                            return Ok(Step::Busy);
+                        }
                         let off = off.unwrap_or(e.size);
                         let end = off + len;
-                        if end <= e.size {
-                            return Ok(Step::Go(off)); // already reserved
+                        if end > e.size {
+                            let need = end - e.size;
+                            if !sh.accountant.try_debit(d, need, 0) {
+                                return Ok(Step::Spill { need });
+                            }
+                            e.size = end;
                         }
-                        let need = end - e.size;
-                        if !sh.accountant.try_debit(d, need, 0) {
-                            return Ok(Step::Spill);
-                        }
-                        e.size = end;
-                        Ok(Step::Go(off))
+                        e.pending += 1;
+                        Ok(Step::GoTracked(off))
                     }
                 }
             })
             .unwrap_or_else(|| Ok(orphan_step()))
     }
 
+    /// Record a completed device write: drops the in-flight count,
+    /// bumps the entry's write serial, and — when a spill has armed its
+    /// log — remembers the range so the spill re-copies it before the
+    /// flip. Called after the backend I/O returns (success or not: on
+    /// error the device copy is still the source of truth, so a
+    /// conservative re-copy is harmless).
+    fn complete_device_write(&self, off: u64, len: u64) {
+        let epoch = self.epoch;
+        let _ = self.shared.registry.update(&self.rel, |e| {
+            if e.epoch != epoch {
+                return;
+            }
+            e.pending = e.pending.saturating_sub(1);
+            e.serial += 1;
+            if e.recopy_armed {
+                e.recopy.push((off, len));
+            }
+        });
+    }
+
+    /// Device exhausted: let the engine decide who makes room. Victim
+    /// spills free space so this writer can stay on its device; when
+    /// the engine (or a failed victim round) says so, the writer itself
+    /// migrates to the PFS.
+    fn relieve_pressure(&mut self, need: u64) -> Result<()> {
+        let sh = self.shared.clone();
+        let Some(dev) = self.dev else {
+            return Ok(()); // already following a spill: retry reserves
+        };
+        // the registry-wide snapshot is only paid for engines that
+        // actually pick victims (the paper engine always spills self)
+        let residents = if sh.engine.wants_residents() {
+            sh.residents()
+        } else {
+            Vec::new()
+        };
+        let decisions = sh.engine.on_pressure(
+            sh.ectx(),
+            PressureCtx { rel: &self.rel, dev, need, residents: &residents },
+        );
+        let mut spill_self = decisions.is_empty();
+        let mut progressed = false;
+        for d in &decisions {
+            match d {
+                Decision::SpillSelf => spill_self = true,
+                Decision::SpillVictim { rel } if *rel != self.rel => {
+                    if sh.spill_victim(rel) {
+                        progressed = true;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if spill_self || !progressed {
+            // no victim made room: guarantee progress by migrating
+            self.spill()?;
+        }
+        Ok(())
+    }
+
     /// Mid-stream spill: migrate the partial file from its device to
     /// the PFS and switch this handle over. Runs under the per-file
-    /// flush lock (serialising with the flush pool, unlink and rename)
-    /// and performs the copy + entry flip in the shard-lock critical
-    /// section, so the entry cannot be replaced or flushed mid-copy.
+    /// flush lock (serialising with the flush pool, unlink, rename and
+    /// other spills). The bulk copy runs **outside** the shard lock
+    /// (the shard stays live for unrelated files); per-handle write
+    /// serials detect sibling writes that land mid-copy so their ranges
+    /// are re-copied before the flip (see [`SeaFile::migrate_to_pfs`]).
     /// Writer counts are preserved: sibling handles keep their epoch
     /// and observe the relocation on their next reservation
     /// ([`Step::Reopen`]).
@@ -955,53 +1255,172 @@ impl SeaFile {
         let lk = sh.flush_lock(&self.rel);
         let migrated = {
             let _guard = lk.lock().expect("flush lock poisoned");
-            let epoch = self.epoch;
-            let rel = self.rel.clone();
-            let file = &mut self.file;
-            sh.registry
-                .update(&rel, |e| -> Result<Option<Box<dyn VfsFile>>> {
-                    if e.epoch != epoch {
-                        return Ok(None); // replaced under us
-                    }
-                    let Some(dev) = e.dev else {
-                        return Ok(None); // a sibling already spilled
-                    };
-                    let mut out = sh.pfs.open(Path::new(&rel), OpenMode::Write)?;
-                    let mut buf = vec![0u8; SPILL_CHUNK];
-                    let mut done = 0u64;
-                    while done < e.size {
-                        let want = ((e.size - done) as usize).min(buf.len());
-                        let n = file.pread(&mut buf[..want], done)?;
-                        if n == 0 {
-                            break; // reserved-but-unwritten sparse tail
-                        }
-                        out.pwrite_all(&buf[..n], done)?;
-                        done += n as u64;
-                    }
-                    // zero-fill any sparse tail up to the reserved size
-                    out.set_len(e.size)?;
-                    let _ = sh.backend(dev).unlink(Path::new(&rel));
-                    sh.accountant.credit(dev, e.size);
-                    e.dev = None;
-                    e.flushed = true; // the PFS copy IS the file now
-                    e.generation = sh.next_gen(); // stand down stale jobs
-                    Ok(Some(out))
-                })
-                .unwrap_or(Ok(None))
+            self.migrate_to_pfs()
         };
         // drop our Arc before releasing, or the map entry (strong count
         // still >= 2) is never reclaimed and leaks per spilled file
         drop(lk);
         sh.release_flush_lock(&self.rel);
         match migrated? {
-            Some(out) => {
+            Some((out, dev, size)) => {
                 self.file = out;
                 self.dev = None;
+                sh.counters.lock().expect("counters poisoned").self_spills += 1;
+                sh.notify_freed(dev, size);
                 Ok(())
             }
             // superseded or already spilled: the retry loop re-reserves
             // and takes the orphan / reopen path as appropriate
             None => Ok(()),
+        }
+    }
+
+    /// Spill body; caller holds the per-file flush lock. Four phases:
+    ///
+    /// 1. **Arm** (shard lock): start logging completed write ranges
+    ///    into the entry's `recopy` list, snapshot size and serial.
+    /// 2. **Bulk copy** (no shard lock): stream the device copy to the
+    ///    PFS; siblings keep writing, their completions are logged.
+    /// 3. **Block** (shard lock): set `migrating` — new reservations
+    ///    get [`Step::Busy`].
+    /// 4. **Drain + flip** (shard lock): wait for in-flight writes to
+    ///    complete, re-copy every logged range (serial mismatch =
+    ///    sibling write landed mid-copy), then flip the entry to the
+    ///    PFS, crediting the device.
+    ///
+    /// Returns the PFS handle plus `(device, bytes)` credited, or
+    /// `None` when superseded (entry replaced or already spilled).
+    fn migrate_to_pfs(&mut self) -> Result<Option<(Box<dyn VfsFile>, DeviceRef, u64)>> {
+        let sh = self.shared.clone();
+        let epoch = self.epoch;
+        let rel = self.rel.clone();
+        // phase 1: arm the write-serial log
+        let armed = sh
+            .registry
+            .update(&rel, |e| {
+                if e.epoch != epoch || e.migrating || e.recopy_armed {
+                    return None;
+                }
+                let dev = e.dev?;
+                e.recopy_armed = true;
+                e.recopy.clear();
+                Some((dev, e.size, e.serial))
+            })
+            .flatten();
+        let Some((dev, size0, serial0)) = armed else {
+            return Ok(None);
+        };
+        // phase 2: bulk copy without the shard lock
+        let mut out = match sh.pfs.open(Path::new(&rel), OpenMode::Write) {
+            Ok(f) => f,
+            Err(err) => {
+                disarm_spill(&sh, &rel, epoch);
+                return Err(err);
+            }
+        };
+        let mut buf = vec![0u8; SPILL_CHUNK];
+        let mut done = 0u64;
+        while done < size0 {
+            let want = ((size0 - done) as usize).min(buf.len());
+            let n = match self.file.pread(&mut buf[..want], done) {
+                Ok(n) => n,
+                Err(err) => {
+                    disarm_spill(&sh, &rel, epoch);
+                    return Err(err);
+                }
+            };
+            if n == 0 {
+                break; // reserved-but-unwritten sparse tail
+            }
+            if let Err(err) = out.pwrite_all(&buf[..n], done) {
+                disarm_spill(&sh, &rel, epoch);
+                return Err(err);
+            }
+            done += n as u64;
+        }
+        // phase 3: stop new reservations
+        let alive = sh
+            .registry
+            .update(&rel, |e| {
+                if e.epoch != epoch {
+                    return false;
+                }
+                e.migrating = true;
+                true
+            })
+            .unwrap_or(false);
+        if !alive {
+            // replaced mid-copy; the flags died with the old entry
+            return Ok(None);
+        }
+        // phase 4: drain in-flight writes, re-copy their ranges, flip
+        enum Flip {
+            Wait,
+            Gone,
+            Done(u64),
+        }
+        loop {
+            let file = &mut self.file;
+            let out_ref = &mut out;
+            let buf_ref = &mut buf;
+            let res = sh.registry.update(&rel, |e| -> Result<Flip> {
+                if e.epoch != epoch {
+                    return Ok(Flip::Gone);
+                }
+                if e.pending > 0 {
+                    return Ok(Flip::Wait);
+                }
+                debug_assert_eq!(
+                    e.serial,
+                    serial0 + e.recopy.len() as u64,
+                    "every completion since arming must be logged"
+                );
+                if e.serial != serial0 {
+                    // sibling writes landed during the bulk copy:
+                    // re-copy exactly the affected ranges
+                    for &(off, rlen) in e.recopy.iter() {
+                        if off >= e.size {
+                            continue;
+                        }
+                        let end = (off + rlen.min(e.size - off)).min(e.size);
+                        let mut at = off;
+                        while at < end {
+                            let want = ((end - at) as usize).min(buf_ref.len());
+                            let n = file.pread(&mut buf_ref[..want], at)?;
+                            if n == 0 {
+                                break;
+                            }
+                            out_ref.pwrite_all(&buf_ref[..n], at)?;
+                            at += n as u64;
+                        }
+                    }
+                }
+                // zero-fill any sparse tail up to the reserved size
+                out_ref.set_len(e.size)?;
+                let _ = sh.backend(dev).unlink(Path::new(&rel));
+                sh.accountant.credit(dev, e.size);
+                let freed = e.size;
+                e.dev = None;
+                e.flushed = true; // the PFS copy IS the file now
+                e.generation = sh.next_gen(); // stand down stale jobs
+                e.migrating = false;
+                e.recopy_armed = false;
+                e.recopy.clear();
+                Ok(Flip::Done(freed))
+            });
+            match res {
+                None => return Ok(None), // entry vanished
+                Some(Ok(Flip::Gone)) => return Ok(None),
+                Some(Ok(Flip::Wait)) => {
+                    // in-flight sibling writes still draining
+                    std::thread::sleep(std::time::Duration::from_micros(50));
+                }
+                Some(Ok(Flip::Done(freed))) => return Ok(Some((out, dev, freed))),
+                Some(Err(err)) => {
+                    disarm_spill(&sh, &rel, epoch);
+                    return Err(err);
+                }
+            }
         }
     }
 
@@ -1017,6 +1436,19 @@ impl SeaFile {
     }
 }
 
+/// Abort a spill attempt: clear the migration flags so writers resume
+/// normally (the entry stays device-resident).
+fn disarm_spill(sh: &Shared, rel: &str, epoch: u64) {
+    let _ = sh.registry.update(rel, |e| {
+        if e.epoch == epoch {
+            e.recopy_armed = false;
+            e.migrating = false;
+            e.recopy.clear();
+        }
+    });
+}
+
+
 impl VfsFile for SeaFile {
     fn pread(&mut self, buf: &mut [u8], off: u64) -> Result<usize> {
         self.file.pread(buf, off)
@@ -1030,12 +1462,23 @@ impl VfsFile for SeaFile {
         loop {
             match self.reserve(want, data.len() as u64)? {
                 Step::Go(at) => return self.file.pwrite(data, at),
+                Step::GoTracked(at) => {
+                    let r = self.file.pwrite(data, at);
+                    self.complete_device_write(at, data.len() as u64);
+                    return r;
+                }
                 Step::Orphan => {
                     let at = self.file.len()?;
                     return self.file.pwrite(data, at);
                 }
-                Step::Spill => self.spill()?,
+                Step::Spill { need } => self.relieve_pressure(need)?,
                 Step::Reopen => self.reopen_on_pfs()?,
+                Step::Busy => {
+                    // a spill of this entry is mid-flight (possibly a
+                    // long bulk copy): back off instead of burning a
+                    // core on yield_now
+                    std::thread::sleep(std::time::Duration::from_micros(50));
+                }
             }
         }
     }
@@ -1045,6 +1488,7 @@ impl VfsFile for SeaFile {
             let epoch = self.epoch;
             let on_pfs = self.dev.is_none();
             let sh = self.shared.clone();
+            let mut freed: Option<(DeviceRef, u64)> = None;
             // size update and ledger adjustment are atomic under the
             // shard lock, like reserve
             let step = sh
@@ -1060,24 +1504,49 @@ impl VfsFile for SeaFile {
                             Ok(Step::Go(0))
                         }
                         Some(d) => {
+                            // truncation affects the whole file: refuse
+                            // to interleave with a spill's copy phases
+                            if e.migrating || e.recopy_armed {
+                                return Ok(Step::Busy);
+                            }
                             if len > e.size {
                                 let need = len - e.size;
                                 if !sh.accountant.try_debit(d, need, 0) {
-                                    return Ok(Step::Spill);
+                                    return Ok(Step::Spill { need });
                                 }
                             } else {
                                 sh.accountant.credit(d, e.size - len);
+                                freed = Some((d, e.size - len));
                             }
                             e.size = len;
-                            Ok(Step::Go(0))
+                            e.pending += 1;
+                            Ok(Step::GoTracked(0))
                         }
                     }
                 })
                 .unwrap_or(Ok(Step::Go(0)))?;
+            if let Some((d, n)) = freed {
+                if n > 0 {
+                    sh.notify_freed(d, n);
+                }
+            }
             match step {
                 Step::Go(_) | Step::Orphan => return self.file.set_len(len),
-                Step::Spill => self.spill()?,
+                Step::GoTracked(_) => {
+                    let r = self.file.set_len(len);
+                    // a truncate has no single range: log a whole-file
+                    // re-copy in case a spill armed mid-flight
+                    self.complete_device_write(0, u64::MAX);
+                    return r;
+                }
+                Step::Spill { need } => self.relieve_pressure(need)?,
                 Step::Reopen => self.reopen_on_pfs()?,
+                Step::Busy => {
+                    // a spill of this entry is mid-flight (possibly a
+                    // long bulk copy): back off instead of burning a
+                    // core on yield_now
+                    std::thread::sleep(std::time::Duration::from_micros(50));
+                }
             }
         }
     }
@@ -1109,32 +1578,37 @@ impl Drop for SeaFile {
                 }
                 e.writers = e.writers.saturating_sub(1);
                 if e.writers == 0 {
-                    Some((e.generation, e.dev))
+                    Some((e.generation, e.dev, e.size))
                 } else {
                     None
                 }
             })
             .flatten();
         match mgmt {
-            Some((gen, Some(_dev))) => {
-                let mode = sh.rules.mode_for(&self.rel);
-                sh.enqueue_mgmt(mode, &self.rel, gen);
+            Some((gen, Some(dev), size)) => {
+                let decisions = sh
+                    .engine
+                    .on_close(CloseCtx { rel: &self.rel, dev: Some(dev), size });
+                sh.enqueue_close(&self.rel, gen, &decisions);
             }
-            Some((_gen, None)) => {
+            Some((_gen, None, size)) => {
                 // spilled mid-stream: the file already lives durably on
-                // the PFS — retire the entry instead of flushing. A
-                // Remove-mode file was never meant to be persisted, so
-                // drop its PFS copy too (under the per-file flush lock,
-                // like unlink, so it can't race a flush of a successor).
+                // the PFS — retire the entry instead of flushing. An
+                // evict-without-flush (Remove-mode) file was never meant
+                // to be persisted, so drop its PFS copy too (under the
+                // per-file flush lock, like unlink, so it can't race a
+                // flush of a successor).
+                let decisions = sh
+                    .engine
+                    .on_close(CloseCtx { rel: &self.rel, dev: None, size });
+                let (flush, evict) = flush_evict_flags(&self.rel, &decisions);
                 let lk = sh.flush_lock(&self.rel);
                 {
                     let _guard = lk.lock().expect("flush lock poisoned");
                     let retired = sh.registry.remove_if(&self.rel, |e| {
                         e.epoch == self.epoch && e.writers == 0 && e.dev.is_none()
                     });
-                    if retired.is_some()
-                        && matches!(sh.rules.mode_for(&self.rel), MgmtMode::Remove)
-                    {
+                    if retired.is_some() && evict && !flush {
                         let _ = sh.pfs.unlink(Path::new(&self.rel));
                     }
                 }
@@ -1164,29 +1638,33 @@ fn flush_worker(sh: Arc<Shared>, rx: Arc<Mutex<mpsc::Receiver<Job>>>) {
 
 fn process_job(sh: &Shared, job: &Job) {
     // serialise per file so two generations never interleave on the PFS
-    let lk = sh.flush_lock(&job.rel);
+    let rel = job.rel().to_string();
+    let lk = sh.flush_lock(&rel);
     {
         let _file_guard = lk.lock().expect("flush lock poisoned");
-        run_job(sh, job);
+        match job {
+            Job::Mgmt { rel, gen, flush, evict } => run_mgmt(sh, rel, *gen, *flush, *evict),
+            Job::Promote { rel, tier } => run_promote(sh, rel, *tier),
+        }
     }
     drop(lk);
-    sh.release_flush_lock(&job.rel);
+    sh.release_flush_lock(&rel);
 }
 
-fn run_job(sh: &Shared, job: &Job) {
-    let Some(entry) = sh.registry.get(&job.rel) else { return };
+/// Execute a close-time management decision (flush and/or evict);
+/// caller holds `rel`'s per-file flush lock.
+fn run_mgmt(sh: &Shared, rel: &str, gen: u64, flush: bool, evict: bool) {
+    let Some(entry) = sh.registry.get(rel) else { return };
     // A newer write superseded this job (it enqueued its own), or a
     // writer handle is still open (its close will re-enqueue): stand down.
-    if entry.generation != job.gen || entry.writers > 0 {
+    if entry.generation != gen || entry.writers > 0 {
         return;
     }
     // A spilled entry already lives on the PFS: nothing to flush or
     // evict (the last close retires it).
     let Some(dev) = entry.dev else { return };
-    let flush = matches!(job.mode, MgmtMode::Copy | MgmtMode::Move);
-    let evict = matches!(job.mode, MgmtMode::Remove | MgmtMode::Move);
     if flush && !entry.flushed {
-        let Ok(data) = sh.backend(dev).read(Path::new(&job.rel)) else { return };
+        let Ok(data) = sh.backend(dev).read(Path::new(rel)) else { return };
         // a racing overwrite may have dropped and recreated the local
         // file mid-read: only flush bytes whose size matches the entry
         if data.len() as u64 != entry.size {
@@ -1194,16 +1672,16 @@ fn run_job(sh: &Shared, job: &Job) {
         }
         // OST-aware gate: cap in-flight flushes per PFS member
         let wrote = {
-            let _slot = sh.pfs_slot(&job.rel);
-            sh.pfs.write(Path::new(&job.rel), &data).is_ok()
+            let _slot = sh.pfs_slot(rel);
+            sh.pfs.write(Path::new(rel), &data).is_ok()
         };
         if !wrote {
             return;
         }
         let confirmed = sh
             .registry
-            .update(&job.rel, |e| {
-                if e.generation == job.gen {
+            .update(rel, |e| {
+                if e.generation == gen {
                     e.flushed = true;
                     true
                 } else {
@@ -1214,24 +1692,71 @@ fn run_job(sh: &Shared, job: &Job) {
         if !confirmed {
             return; // superseded mid-flush: don't count, don't evict
         }
-        sh.counters.lock().expect("counters poisoned").0 += 1;
+        sh.counters.lock().expect("counters poisoned").flushes += 1;
     }
     if evict {
-        // Remove-mode files are dropped unconditionally (the user
-        // declared them disposable); Move-mode files must have been
-        // flushed first. Either way the generation must still match.
-        let removed = sh.registry.remove_if(&job.rel, |e| {
-            e.generation == job.gen
-                && e.writers == 0
-                && (matches!(job.mode, MgmtMode::Remove) || e.flushed)
+        // Evict-without-flush files are dropped unconditionally (the
+        // user declared them disposable); flush-then-evict (Move) files
+        // must have been flushed first. Either way the generation must
+        // still match.
+        let removed = sh.registry.remove_if(rel, |e| {
+            e.generation == gen && e.writers == 0 && (!flush || e.flushed)
         });
         if let Some(e) = removed {
             if let Some(d) = e.dev {
-                let _ = sh.backend(d).unlink(Path::new(&job.rel));
-                sh.accountant.credit(d, e.size);
-                sh.counters.lock().expect("counters poisoned").1 += 1;
+                let _ = sh.backend(d).unlink(Path::new(rel));
+                sh.counters.lock().expect("counters poisoned").evictions += 1;
+                sh.credit_and_notify(d, e.size);
             }
         }
+    }
+}
+
+/// Execute a `Promote` decision: pull a PFS-resident file back onto a
+/// device of the requested tier; caller holds `rel`'s per-file flush
+/// lock. Best-effort — if the file re-acquired a local copy, vanished,
+/// or the tier filled up in the meantime, the promotion is dropped.
+fn run_promote(sh: &Shared, rel: &str, tier: u8) {
+    if !sh.engine.approve_promote(rel) {
+        return; // superseded (write-open / re-place) since emission
+    }
+    if sh.registry.contains(rel) {
+        return; // already resident
+    }
+    let Ok(data) = sh.pfs.read(Path::new(rel)) else { return };
+    let size = data.len() as u64;
+    for d in sh.hierarchy.tier_devices(tier) {
+        if sh.hierarchy.backend(d).is_none() {
+            continue;
+        }
+        // promotion is an opportunistic cache fill: it must fit, but
+        // the p·F reservation floor does not apply
+        if !sh.accountant.try_debit(d, size, size) {
+            continue;
+        }
+        if sh.backend(d).write(Path::new(rel), &data).is_err() {
+            sh.accountant.credit(d, size);
+            continue;
+        }
+        let gen = sh.next_gen();
+        // the PFS copy remains authoritative-equal: the entry starts
+        // flushed, so a later evict never re-copies it
+        let inserted = sh.registry.with_shard(rel, |m| {
+            if m.contains_key(rel) {
+                false
+            } else {
+                m.insert(rel.to_string(), Entry::new(Some(d), size, true, gen, 0));
+                true
+            }
+        });
+        if inserted {
+            sh.counters.lock().expect("counters poisoned").promotions += 1;
+        } else {
+            // a writer re-created the file while we copied: roll back
+            let _ = sh.backend(d).unlink(Path::new(rel));
+            sh.accountant.credit(d, size);
+        }
+        return;
     }
 }
 
@@ -1250,25 +1775,32 @@ impl Vfs for SeaFs {
         match self.rel_of(path) {
             None => self.shared.pfs.open(path, mode),
             Some(rel) => match mode {
-                OpenMode::Read => match self.shared.registry.get(&rel) {
-                    Some(e) => match e.dev {
-                        Some(d) => {
-                            match self.shared.backend(d).open(Path::new(&rel), OpenMode::Read) {
-                                Ok(f) => Ok(f),
-                                // evicted between lookup and open: the
-                                // flush that preceded eviction put a PFS
-                                // copy there
-                                Err(Error::NotFound(_)) => {
-                                    self.shared.pfs.open(Path::new(&rel), OpenMode::Read)
+                OpenMode::Read => {
+                    self.shared.engine.on_access(&rel, Access::Read);
+                    match self.shared.registry.get(&rel) {
+                        Some(e) => match e.dev {
+                            Some(d) => {
+                                match self
+                                    .shared
+                                    .backend(d)
+                                    .open(Path::new(&rel), OpenMode::Read)
+                                {
+                                    Ok(f) => Ok(f),
+                                    // evicted between lookup and open:
+                                    // the flush that preceded eviction
+                                    // put a PFS copy there
+                                    Err(Error::NotFound(_)) => {
+                                        self.shared.pfs.open(Path::new(&rel), OpenMode::Read)
+                                    }
+                                    Err(e) => Err(e),
                                 }
-                                Err(e) => Err(e),
                             }
-                        }
-                        // spilled: the live copy is on the PFS
+                            // spilled: the live copy is on the PFS
+                            None => self.shared.pfs.open(Path::new(&rel), OpenMode::Read),
+                        },
                         None => self.shared.pfs.open(Path::new(&rel), OpenMode::Read),
-                    },
-                    None => self.shared.pfs.open(Path::new(&rel), OpenMode::Read),
-                },
+                    }
+                }
                 OpenMode::Append => self.open_append(&rel),
                 OpenMode::Write | OpenMode::ReadWrite => self.open_writer(&rel, mode),
             },
@@ -1278,19 +1810,22 @@ impl Vfs for SeaFs {
     fn read(&self, path: &Path) -> Result<Vec<u8>> {
         match self.rel_of(path) {
             None => self.shared.pfs.read(path),
-            Some(rel) => match self.shared.registry.get(&rel) {
-                Some(e) => match e.dev {
-                    Some(d) => match self.shared.backend(d).read(Path::new(&rel)) {
-                        Ok(data) => Ok(data),
-                        // evicted between lookup and read: fall through
-                        // to the flushed PFS copy
-                        Err(Error::NotFound(_)) => self.shared.pfs.read(Path::new(&rel)),
-                        Err(err) => Err(err),
+            Some(rel) => {
+                self.shared.engine.on_access(&rel, Access::Read);
+                match self.shared.registry.get(&rel) {
+                    Some(e) => match e.dev {
+                        Some(d) => match self.shared.backend(d).read(Path::new(&rel)) {
+                            Ok(data) => Ok(data),
+                            // evicted between lookup and read: fall
+                            // through to the flushed PFS copy
+                            Err(Error::NotFound(_)) => self.shared.pfs.read(Path::new(&rel)),
+                            Err(err) => Err(err),
+                        },
+                        None => self.shared.pfs.read(Path::new(&rel)),
                     },
                     None => self.shared.pfs.read(Path::new(&rel)),
-                },
-                None => self.shared.pfs.read(Path::new(&rel)),
-            },
+                }
+            }
         }
     }
 
@@ -1298,9 +1833,13 @@ impl Vfs for SeaFs {
         match self.rel_of(path) {
             None => self.shared.pfs.write(path, data),
             Some(rel) => {
-                if let Some((_dev, gen)) = self.place_and_write(&rel, data, false)? {
-                    let mode = self.shared.rules.mode_for(&rel);
-                    self.shared.enqueue_mgmt(mode, &rel, gen);
+                if let Some((dev, gen)) = self.place_and_write(&rel, data, false)? {
+                    let decisions = self.shared.engine.on_close(CloseCtx {
+                        rel: &rel,
+                        dev: Some(dev),
+                        size: data.len() as u64,
+                    });
+                    self.shared.enqueue_close(&rel, gen, &decisions);
                 }
                 Ok(())
             }
@@ -1942,6 +2481,7 @@ mod tests {
                 flush_workers: 8,
                 registry_shards: 8,
                 per_member_concurrency: 1,
+                ..SeaTuning::default()
             },
         })
         .unwrap();
@@ -2196,6 +2736,144 @@ mod tests {
         // disks untouched
         assert_eq!(ledger[1].debits, 0);
         assert_eq!(ledger[2].debits, 0);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    // --- placement engines ---------------------------------------------------
+
+    #[test]
+    fn temperature_engine_spills_cold_victim_and_promotes_back() {
+        // acceptance: under pressure the TemperatureEngine persists and
+        // drops the coldest *resident* file — the active writer stays on
+        // its device — and promotes it back once space frees
+        let root = scratch("seafs_temp");
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
+        let sea = SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(root.join("tiny"), 0, 2 * MIB).unwrap()],
+            pfs: pfs.clone(),
+            max_file_size: MIB,
+            parallel_procs: 1,
+            rules: RuleSet::default(), // Keep everything
+            seed: 1,
+            tuning: SeaTuning { engine: EngineKind::Temperature, ..SeaTuning::default() },
+        })
+        .unwrap();
+        assert_eq!(sea.engine_name(), "temperature");
+        // a cold resident file fills half the device
+        sea.write(Path::new("/sea/cold.dat"), &vec![7u8; MIB as usize]).unwrap();
+        assert!(sea.device_of("cold.dat").is_some());
+        // a hot writer outgrows the remaining space
+        {
+            let mut f = sea.open(Path::new("/sea/hot.dat"), OpenMode::Write).unwrap();
+            let quarter = MIB as usize / 4;
+            for k in 0..8u64 {
+                f.pwrite_all(&vec![k as u8; quarter], k * quarter as u64).unwrap();
+            }
+            assert!(sea.device_of("hot.dat").is_some(), "active writer stays on-device");
+            assert!(sea.device_of("cold.dat").is_none(), "cold resident spilled");
+            assert!(pfs.exists(Path::new("cold.dat")), "victim persisted to the PFS");
+        }
+        sea.sync_mgmt().unwrap();
+        let c = sea.counters();
+        assert_eq!(c.victim_spills, 1, "one victim spill");
+        assert_eq!(c.self_spills, 0, "the writer never migrated");
+        // the victim reads back through the mount (from the PFS) —
+        // which also re-heats it, making it a promotion candidate
+        assert_eq!(sea.read(Path::new("/sea/cold.dat")).unwrap(), vec![7u8; MIB as usize]);
+        // free the device: the hot spilled file is promoted back
+        sea.unlink(Path::new("/sea/hot.dat")).unwrap();
+        sea.sync_mgmt().unwrap();
+        assert!(sea.device_of("cold.dat").is_some(), "promoted back to a fast tier");
+        assert_eq!(sea.counters().promotions, 1);
+        assert_eq!(sea.read(Path::new("/sea/cold.dat")).unwrap(), vec![7u8; MIB as usize]);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn paper_engine_reports_its_name_and_never_promotes() {
+        let (sea, root, _) = mount(RuleSet::from_texts("**", "**", ""), 10 * MIB);
+        assert_eq!(sea.engine_name(), "paper");
+        sea.write(Path::new("/sea/a.dat"), &vec![1u8; MIB as usize]).unwrap();
+        sea.sync_mgmt().unwrap(); // move: flush + evict frees space
+        let c = sea.counters();
+        assert_eq!((c.flushes, c.evictions), (1, 1));
+        assert_eq!(c.promotions, 0, "paper engine never promotes");
+        assert_eq!(c.victim_spills, 0);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    // --- spill hardening (write serials) -------------------------------------
+
+    #[test]
+    fn spill_preserves_racing_sibling_writes() {
+        // regression: a sibling's positioned write landing between the
+        // spill's bulk copy and the registry flip must be detected (the
+        // entry's write serial) and its range re-copied before the flip
+        let root = scratch("seafs_spill_race");
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
+        let sea = tiny_device_mount(&root, pfs.clone());
+        let p = Path::new("/sea/race.dat");
+        let mut a = sea.open(p, OpenMode::Write).unwrap();
+        a.pwrite_all(&vec![0x11u8; MIB as usize], 0).unwrap();
+        let mut b = sea.open(p, OpenMode::ReadWrite).unwrap();
+        const REC: usize = 4096;
+        const STRIDE: u64 = 64 * 1024;
+        std::thread::scope(|scope| {
+            let spiller = scope.spawn(move || {
+                // outgrow the 2 MiB device: triggers the mid-stream
+                // spill while the sibling keeps writing
+                a.pwrite_all(&vec![0xAAu8; 2 * MIB as usize], MIB).unwrap();
+                drop(a);
+            });
+            // land records across the first MiB while the spill runs
+            for k in 0..16u64 {
+                b.pwrite_all(&vec![0xBBu8; REC], k * STRIDE).unwrap();
+                std::thread::yield_now();
+            }
+            spiller.join().unwrap();
+        });
+        drop(b);
+        sea.sync_mgmt().unwrap();
+        let data = sea.read(p).unwrap();
+        assert_eq!(data.len(), 3 * MIB as usize);
+        for k in 0..16u64 {
+            let off = (k * STRIDE) as usize;
+            assert!(
+                data[off..off + REC].iter().all(|&v| v == 0xBB),
+                "sibling record {k} lost across the spill"
+            );
+        }
+        assert!(data[2 * MIB as usize..].iter().all(|&v| v == 0xAA));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    // --- mount-time prefetch -------------------------------------------------
+
+    #[test]
+    fn mount_time_prefetch_pass_pulls_matching_inputs() {
+        let root = scratch("seafs_prefetch_mount");
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
+        pfs.write(Path::new("inputs/a.dat"), &vec![1u8; MIB as usize]).unwrap();
+        pfs.write(Path::new("inputs/deep/b.dat"), &vec![2u8; 1024]).unwrap();
+        pfs.write(Path::new("inputs/skip.txt"), b"no").unwrap();
+        let sea = mount_cfg(
+            &root,
+            pfs.clone(),
+            RuleSet::from_texts("", "", "inputs/**.dat"),
+            10 * MIB,
+        );
+        assert_eq!(sea.counters().prefetched, 2, "both .dat files pulled in");
+        assert!(sea.device_of("inputs/a.dat").is_some());
+        assert!(sea.device_of("inputs/deep/b.dat").is_some());
+        assert!(sea.device_of("inputs/skip.txt").is_none());
+        // the prefetched copy serves reads locally, byte-exact
+        assert_eq!(
+            sea.read(Path::new("/sea/inputs/a.dat")).unwrap(),
+            vec![1u8; MIB as usize]
+        );
+        // a later explicit pass is idempotent: already resident
+        assert_eq!(sea.prefetch_dir("inputs").unwrap(), 0);
         let _ = std::fs::remove_dir_all(&root);
     }
 }

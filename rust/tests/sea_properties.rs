@@ -6,7 +6,10 @@ use std::sync::Arc;
 
 use sea::hierarchy::{select_device, Hierarchy, SelectCfg, SpaceAccountant};
 use sea::model::{lustre_bounds, sea_bounds, sea_breakdown, ModelParams, WorkloadVolume};
-use sea::placement::{glob_match, FileTable, RuleSet};
+use sea::placement::{
+    glob_match, CloseCtx, Decision, EngineCtx, FileTable, MgmtMode, PaperEngine, PlaceCtx,
+    Placement, PlacementEngine, RuleSet,
+};
 use sea::sim::engine::{ProcId, Process, Sim, Step};
 use sea::testkit::{check, Config};
 use sea::util::{Rng, MIB};
@@ -135,6 +138,68 @@ fn prop_credit_debit_roundtrip() {
         }
         let used: u64 = outstanding.iter().sum();
         assert_eq!(acc.free(0), cap - used);
+    });
+}
+
+// --- placement engine parity -------------------------------------------------
+
+#[test]
+fn prop_paper_engine_reproduces_legacy_selection_and_modes() {
+    // acceptance: PaperEngine must be a bit-for-bit reproduction of the
+    // legacy `select_device` + `RuleSet::mode_for` dispatch, across
+    // randomized hierarchies, file sizes, and rule lists — same device
+    // picks from the same seed, same ledger trajectory, and close
+    // decisions that match Table 1 exactly.
+    check("PaperEngine ≡ select_device + mode_for", Config::default(), |g| {
+        let devices = g.usize(1..6);
+        let mut h = Hierarchy::new();
+        for d in 0..devices {
+            h.add((d % 3) as u8, g.u64(1..200) * MIB, format!("d{d}"));
+        }
+        let legacy_acc = SpaceAccountant::new(&h);
+        let engine_acc = SpaceAccountant::new(&h);
+        let cfg = SelectCfg {
+            max_file_size: g.u64(1..8) * MIB,
+            parallel_procs: g.u64(1..8),
+        };
+        let seed = g.u64(0..u64::MAX - 1);
+        let mut legacy_rng = Rng::new(seed);
+        let flush_pat = *g.pick(&["out/**", "**", "scratch/*", ""]);
+        let evict_pat = *g.pick(&["scratch/**", "**", "out/*", ""]);
+        let rules = RuleSet::from_texts(flush_pat, evict_pat, "");
+        let engine = PaperEngine::new(cfg, rules.clone(), seed);
+        for i in 0..g.usize(1..100) {
+            let dir = *g.pick(&["out", "scratch", "keep"]);
+            let rel = format!("{dir}/f{i}");
+            let size = g.u64(0..16) * MIB;
+            let legacy = select_device(&h, &legacy_acc, &cfg, size, &mut legacy_rng);
+            let via_engine = engine.place(
+                EngineCtx { hierarchy: &h, accountant: &engine_acc },
+                PlaceCtx { rel: &rel, size, prefetch: false },
+            );
+            match (legacy, via_engine) {
+                (Some(a), Placement::Device(b)) => assert_eq!(a, b, "device pick diverged"),
+                (None, Placement::Pfs) => {}
+                (a, b) => panic!("pick diverged: legacy {a:?} vs engine {b:?}"),
+            }
+            // close decisions ≡ Table 1 dispatch
+            let decisions = engine.on_close(CloseCtx { rel: &rel, dev: legacy, size });
+            let flush = decisions
+                .iter()
+                .any(|d| matches!(d, Decision::Flush { rel: r } if r == &rel));
+            let evict = decisions
+                .iter()
+                .any(|d| matches!(d, Decision::Evict { rel: r } if r == &rel));
+            let expect = match rules.mode_for(&rel) {
+                MgmtMode::Copy => (true, false),
+                MgmtMode::Remove => (false, true),
+                MgmtMode::Move => (true, true),
+                MgmtMode::Keep => (false, false),
+            };
+            assert_eq!((flush, evict), expect, "mode diverged for {rel}");
+        }
+        // identical ledger trajectory on both sides
+        assert_eq!(legacy_acc.lines(), engine_acc.lines());
     });
 }
 
