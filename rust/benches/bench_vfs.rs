@@ -3,24 +3,154 @@
 //! file systems such as FUSE". Measure the library-level analogue —
 //! SeaFs path translation + registry vs a plain RealFs — per operation,
 //! plus the handle API's partial-read path (64 KiB strides from 1 MiB
-//! blocks) and the flush pool's concurrent drain throughput.
+//! blocks), the flush pool's concurrent drain throughput, and the
+//! streaming DataMover (streamed-vs-wholefile sweep over file size ×
+//! chunk_bytes × copy_window, emitting `BENCH_datamover.json`).
+//!
+//! `SEA_BENCH_SMOKE=1` runs only the DataMover sweep at tiny sizes —
+//! the CI smoke invocation that keeps the bench harness compiling and
+//! running.
 
 mod common;
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use sea::bench::Harness;
 use sea::placement::{EngineKind, RuleSet};
 use sea::util::{KIB, MIB};
 use sea::vfs::{
-    DeviceSpec, OpenMode, RealFs, SeaFs, SeaFsConfig, SeaTuning, StripedFs, Vfs, VfsFile,
+    DataMover, DeviceSpec, MovePath, MoverCfg, MoverMetrics, OpenMode, RateLimitedFs, RealFs,
+    SeaFs, SeaFsConfig, SeaTuning, StripedFs, Vfs, VfsFile,
 };
+
+/// Streamed-vs-wholefile sweep: the same bytes moved (a) as one
+/// whole-file `Vec` (the seed's management path) and (b) through the
+/// DataMover at each (chunk_bytes × copy_window) combo, plus an
+/// OST-fan-out case over a chunk-striped PFS with per-member bandwidth
+/// caps. Emits `BENCH_datamover.json`.
+fn datamover_sweep(work: &Path, h: &mut Harness, smoke: bool) {
+    let sizes: Vec<u64> = if smoke { vec![768 * KIB] } else { vec![4 * MIB, 32 * MIB] };
+    let chunks: Vec<usize> = if smoke {
+        vec![(64 * KIB) as usize]
+    } else {
+        vec![(256 * KIB) as usize, MIB as usize]
+    };
+    let windows: Vec<usize> = if smoke { vec![2] } else { vec![1, 2, 4] };
+    let src_fs = RealFs::new(work.join("dm_src")).expect("src");
+    let dst_fs = RealFs::new(work.join("dm_dst")).expect("dst");
+    let mut rows: Vec<(u64, usize, usize, f64, f64, u64)> = Vec::new();
+    for &size in &sizes {
+        let name = format!("f{size}.dat");
+        src_fs
+            .write(Path::new(&name), &vec![0x5Au8; size as usize])
+            .expect("payload");
+        // legacy path: whole-file materialization (one Vec of `size`)
+        let t0 = Instant::now();
+        let data = src_fs.read(Path::new(&name)).expect("read");
+        dst_fs.write(Path::new("whole.dat"), &data).expect("write");
+        drop(data);
+        let whole_s = t0.elapsed().as_secs_f64();
+        for &chunk in &chunks {
+            for &window in &windows {
+                let metrics = MoverMetrics::default();
+                let mut src = src_fs.open(Path::new(&name), OpenMode::Read).expect("open");
+                let mut dst = dst_fs
+                    .open(Path::new("streamed.dat"), OpenMode::Write)
+                    .expect("open");
+                let t0 = Instant::now();
+                let n = DataMover::new(
+                    MoverCfg { chunk_bytes: chunk, copy_window: window },
+                    MovePath::Flush,
+                )
+                .with_metrics(&metrics)
+                .copy(src.as_mut(), dst.as_mut(), size)
+                .expect("copy");
+                let streamed_s = t0.elapsed().as_secs_f64();
+                assert_eq!(n, size);
+                let peak = metrics.peak_buffer_bytes();
+                assert!(
+                    peak <= (chunk * window) as u64,
+                    "window breached: peak {peak} > {chunk} x {window}"
+                );
+                h.record(
+                    &format!("datamover_{size}b_c{chunk}_w{window}"),
+                    vec![streamed_s],
+                    format!("wholefile {whole_s:.6}s, peak buffers {peak}B"),
+                );
+                rows.push((size, chunk, window, whole_s, streamed_s, peak));
+            }
+        }
+    }
+    // OST fan-out: one large file against a chunk-striped PFS whose
+    // members are individually rate-limited — stripe-aligned chunks
+    // round-robin the members, so the streamed copy aggregates their
+    // write bandwidth instead of queuing on one
+    let fan_size: u64 = if smoke { 512 * KIB } else { 8 * MIB };
+    let fan_stripe: u64 = if smoke { 64 * KIB } else { 256 * KIB };
+    let member_cap = if smoke { 1e9 } else { 64.0 * MIB as f64 };
+    let members: Vec<Arc<dyn Vfs>> = (0..4)
+        .map(|i| {
+            Arc::new(RateLimitedFs::new(
+                RealFs::new(work.join(format!("dm_ost{i}"))).expect("ost"),
+                1e9,
+                member_cap,
+            )) as Arc<dyn Vfs>
+        })
+        .collect();
+    let striped = StripedFs::striped(members, fan_stripe).expect("striped");
+    src_fs
+        .write(Path::new("fan.dat"), &vec![1u8; fan_size as usize])
+        .expect("fan payload");
+    let cfg = MoverCfg { chunk_bytes: MIB as usize, copy_window: 2 }
+        .aligned_to(striped.stripe_bytes());
+    let mut src = src_fs.open(Path::new("fan.dat"), OpenMode::Read).expect("open");
+    let mut dst = striped.open(Path::new("fan.dat"), OpenMode::Write).expect("open");
+    let t0 = Instant::now();
+    let n = DataMover::new(cfg, MovePath::Flush)
+        .copy(src.as_mut(), dst.as_mut(), fan_size)
+        .expect("fan copy");
+    let fan_s = t0.elapsed().as_secs_f64();
+    assert_eq!(n, fan_size);
+    assert_eq!(striped.read(Path::new("fan.dat")).expect("fan read").len(), fan_size as usize);
+    h.record(
+        "datamover_striped_fanout",
+        vec![fan_s],
+        format!("{fan_size}B over 4 members, stripe {fan_stripe}B"),
+    );
+    let mut json = String::from("{\n  \"target\": \"vfs/datamover\",\n  \"sweep\": [\n");
+    for (i, (size, chunk, window, whole_s, streamed_s, peak)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"file_bytes\": {size}, \"chunk_bytes\": {chunk}, \"copy_window\": {window}, \
+             \"wholefile_s\": {whole_s:.6}, \"streamed_s\": {streamed_s:.6}, \
+             \"peak_buffer_bytes\": {peak}}}{}\n",
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str(&format!(
+        "  ],\n  \"striped_fanout\": {{\"file_bytes\": {fan_size}, \"stripe_bytes\": {fan_stripe}, \
+         \"members\": 4, \"streamed_s\": {fan_s:.6}}}\n}}\n"
+    ));
+    match std::fs::write("BENCH_datamover.json", &json) {
+        Ok(()) => println!("wrote BENCH_datamover.json ({} combos + fanout)", rows.len()),
+        Err(e) => eprintln!("bench: could not write BENCH_datamover.json: {e}"),
+    }
+}
 
 fn main() {
     let work = std::env::temp_dir().join("sea_bench_vfs");
     let _ = std::fs::remove_dir_all(&work);
+    if std::env::var("SEA_BENCH_SMOKE").is_ok() {
+        // CI smoke: tiny DataMover sweep only — proves the harness
+        // still builds, runs, and emits its JSON
+        let mut h = Harness::new("vfs").with_reps(1, 1);
+        datamover_sweep(&work, &mut h, true);
+        let _ = h.finish();
+        let _ = std::fs::remove_dir_all(&work);
+        return;
+    }
     let mut h = Harness::new("vfs").with_reps(1, 5);
 
     let plain = RealFs::new(work.join("plain")).expect("plain");
@@ -307,6 +437,9 @@ fn main() {
         Ok(()) => println!("wrote BENCH_engine_compare.json ({} engines)", engine_rows.len()),
         Err(e) => eprintln!("bench: could not write BENCH_engine_compare.json: {e}"),
     }
+
+    // streamed-vs-wholefile sweep (BENCH_datamover.json)
+    datamover_sweep(&work, &mut h, false);
 
     let results = h.finish();
     // derive the per-op interception overhead from the 4k pair

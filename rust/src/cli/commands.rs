@@ -34,7 +34,8 @@ fn work_layout(work: &std::path::Path) -> Result<Vec<DeviceSpec>> {
 
 /// Mount tuning: defaults <- `[sea]` section of `--config` <- explicit
 /// flags (`--flush-workers`, `--registry-shards`,
-/// `--per-member-concurrency`, `--engine`).
+/// `--per-member-concurrency`, `--chunk-bytes`, `--copy-window`,
+/// `--engine`).
 fn tuning_from_args(args: &Args) -> Result<SeaTuning> {
     let base = match args.get("config") {
         Some(path) => config::tuning_from_doc(&config::Doc::load(std::path::Path::new(path))?)?,
@@ -51,6 +52,8 @@ fn tuning_from_args(args: &Args) -> Result<SeaTuning> {
         registry_shards: args.usize_or("registry-shards", base.registry_shards)?,
         per_member_concurrency: args
             .usize_or("per-member-concurrency", base.per_member_concurrency)?,
+        chunk_bytes: args.bytes_or("chunk-bytes", base.chunk_bytes as u64)? as usize,
+        copy_window: args.usize_or("copy-window", base.copy_window)?,
         engine,
     })
 }
@@ -314,6 +317,7 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
              \x20       [--config cfg.toml]  # [sea] tuning section\n\
              \x20       [--flush-workers N] [--registry-shards N]\n\
              \x20       [--per-member-concurrency N]  # override the config\n\
+             \x20       [--chunk-bytes 1MiB] [--copy-window N]  # DataMover streaming\n\
              \x20       [--engine paper|temperature]  # placement engine"
         );
         return Ok(0);
@@ -442,6 +446,15 @@ fn format_stat(engine: &str, ledger: &[DeviceLedger], c: MgmtCounters) -> String
          {} promotions, {} prefetched\n",
         c.flushes, c.evictions, c.self_spills, c.victim_spills, c.promotions, c.prefetched
     ));
+    out.push_str(&format!(
+        "moved  : {} flush, {} spill, {} promote, {} prefetch \
+         (peak copy buffers {})\n",
+        fmt_bytes(c.flush_bytes),
+        fmt_bytes(c.spill_bytes),
+        fmt_bytes(c.promote_bytes),
+        fmt_bytes(c.prefetch_bytes),
+        fmt_bytes(c.peak_copy_buffer_bytes),
+    ));
     out
 }
 
@@ -461,7 +474,8 @@ pub fn run_stat(args: &mut Args) -> Result<i32> {
             "sea stat [--work /tmp/sea_run] [--max-file-size 617MiB] [--procs N]\n\
              \x20        [--config cfg.toml] [--engine paper|temperature]\n\
              \x20        [--flush-workers N] [--registry-shards N]\n\
-             \x20        [--per-member-concurrency N]"
+             \x20        [--per-member-concurrency N]\n\
+             \x20        [--chunk-bytes 1MiB] [--copy-window N]"
         );
         return Ok(0);
     }
@@ -520,6 +534,11 @@ mod tests {
             victim_spills: 4,
             promotions: 5,
             prefetched: 6,
+            flush_bytes: 3 * MIB,
+            spill_bytes: 5 * MIB,
+            promote_bytes: MIB,
+            prefetch_bytes: 2 * MIB,
+            peak_copy_buffer_bytes: 2 * MIB,
         };
         let s = format_stat("temperature", &ledger, counters);
         assert!(s.contains("engine : temperature"), "{s}");
@@ -529,7 +548,13 @@ mod tests {
         assert!(s.contains("4 victim-spills"), "{s}");
         assert!(s.contains("5 promotions"), "{s}");
         assert!(s.contains("6 prefetched"), "{s}");
-        assert_eq!(s.lines().count(), 1 + 1 + 2 + 1, "header + table + footer");
+        assert!(s.contains("moved  : "), "{s}");
+        assert!(s.contains("peak copy buffers"), "{s}");
+        assert_eq!(
+            s.lines().count(),
+            1 + 1 + 2 + 1 + 1,
+            "header + table + mgmt + moved"
+        );
     }
 
     #[test]
@@ -542,5 +567,20 @@ mod tests {
         assert_eq!(t.flush_workers, 2);
         let argv: Vec<String> = ["--engine", "bogus"].iter().map(|s| s.to_string()).collect();
         assert!(tuning_from_args(&Args::parse(&argv)).is_err());
+    }
+
+    #[test]
+    fn tuning_from_args_parses_datamover_flags() {
+        let argv: Vec<String> = ["--chunk-bytes", "4MiB", "--copy-window", "3"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let t = tuning_from_args(&Args::parse(&argv)).unwrap();
+        assert_eq!(t.chunk_bytes, 4 * MIB as usize);
+        assert_eq!(t.copy_window, 3);
+        // defaults survive when the flags are absent
+        let t = tuning_from_args(&Args::parse(&[])).unwrap();
+        assert_eq!(t.chunk_bytes, SeaTuning::default().chunk_bytes);
+        assert_eq!(t.copy_window, SeaTuning::default().copy_window);
     }
 }

@@ -2,11 +2,14 @@
 //!
 //! The `[sea]` section carries the knobs that used to be compile-time
 //! constants (`FLUSH_WORKERS`, `REGISTRY_SHARDS`) plus the striped-PFS
-//! scheduling cap and the placement-engine selector (`engine = "paper"
-//! | "temperature"`); missing keys keep the defaults, so an empty file
-//! IS the default mount. An *unrecognized* engine token is a hard
-//! error, matching the `--engine` CLI flag — silently benchmarking the
-//! wrong policy is worse than failing.
+//! scheduling cap, the streamed-transfer shape (`chunk_bytes` — number
+//! or a `"4MiB"` size string — and `copy_window`, bounding every
+//! management copy at `chunk_bytes × copy_window` memory), and the
+//! placement-engine selector (`engine = "paper" | "temperature"`);
+//! missing keys keep the defaults, so an empty file IS the default
+//! mount. An *unrecognized* engine token is a hard error, matching the
+//! `--engine` CLI flag — silently benchmarking the wrong policy is
+//! worse than failing.
 
 use crate::config::parse::Doc;
 use crate::error::{Error, Result};
@@ -29,6 +32,8 @@ pub fn tuning_from_doc(d: &Doc) -> Result<SeaTuning> {
             "sea.per_member_concurrency",
             dflt.per_member_concurrency,
         ),
+        chunk_bytes: d.bytes_or("sea.chunk_bytes", dflt.chunk_bytes as u64) as usize,
+        copy_window: d.usize_or("sea.copy_window", dflt.copy_window),
         engine,
     })
 }
@@ -47,14 +52,22 @@ mod tests {
     fn overrides_apply() {
         let d = Doc::parse(
             "[sea]\nflush_workers = 8\nregistry_shards = 32\nper_member_concurrency = 1\n\
-             engine = \"temperature\"\n",
+             chunk_bytes = \"4MiB\"\ncopy_window = 3\nengine = \"temperature\"\n",
         )
         .unwrap();
         let t = tuning_from_doc(&d).unwrap();
         assert_eq!(t.flush_workers, 8);
         assert_eq!(t.registry_shards, 32);
         assert_eq!(t.per_member_concurrency, 1);
+        assert_eq!(t.chunk_bytes, 4 * 1024 * 1024, "size strings parse");
+        assert_eq!(t.copy_window, 3);
         assert_eq!(t.engine, EngineKind::Temperature);
+    }
+
+    #[test]
+    fn chunk_bytes_accepts_plain_numbers() {
+        let d = Doc::parse("[sea]\nchunk_bytes = 65536\n").unwrap();
+        assert_eq!(tuning_from_doc(&d).unwrap().chunk_bytes, 65536);
     }
 
     #[test]

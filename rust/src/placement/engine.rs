@@ -32,7 +32,9 @@
 //!   follow-up direction, arXiv:2404.11556);
 //! * [`PfsOnlyEngine`] — the plain-PFS (Lustre) baseline.
 
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -184,6 +186,19 @@ pub trait PlacementEngine: Send + Sync {
     /// A file was read or re-opened for writing (heat bookkeeping).
     fn on_access(&self, rel: &str, access: Access) {
         let _ = (rel, access);
+    }
+
+    /// `rel` was unlinked: forget any heat / promotion state. Without
+    /// this, dead paths hold heat-map slots forever and can win stale
+    /// promotion decisions.
+    fn on_removed(&self, rel: &str) {
+        let _ = rel;
+    }
+
+    /// `from` was renamed to `to`: carry heat / promotion state across
+    /// so the file keeps its temperature under its new name.
+    fn on_renamed(&self, from: &str, to: &str) {
+        let _ = (from, to);
     }
 
     /// The last writer handle closed: return the management decisions
@@ -353,8 +368,23 @@ struct Spilled {
     tick: u64,
 }
 
+/// Heat shard count: like the VFS registry's sharded entry map,
+/// per-shard mutexes keep concurrent read/open heat updates on
+/// different files from serialising on one lock (the read-path
+/// bottleneck the single `Mutex<TempState>` used to be).
+const HEAT_SHARDS: usize = 16;
+
+/// Heat-map size bound **per shard** (global bound: `HEAT_SHARDS ×`
+/// this): when exceeded, the coldest half of the shard is pruned so a
+/// churning workload (millions of lifetime-unique paths) cannot grow
+/// the map without bound.
+const MAX_HEAT_ENTRIES: usize = 65_536 / HEAT_SHARDS;
+
+/// One shard of the temperature state: the heat and spill candidates
+/// of every rel that hashes here. A rel's heat and its `spilled` entry
+/// always share a shard, so candidate scans need one lock at a time.
 #[derive(Default)]
-struct TempState {
+struct HeatShard {
     /// rel → logical tick of its most recent touch (recency heat;
     /// absent = never touched = coldest).
     heat: HashMap<String, u64>,
@@ -362,16 +392,11 @@ struct TempState {
     spilled: HashMap<String, Spilled>,
 }
 
-/// Heat-map size bound: when exceeded, the coldest half is pruned so a
-/// churning workload (millions of lifetime-unique paths) cannot grow
-/// the map without bound.
-const MAX_HEAT_ENTRIES: usize = 65_536;
-
-impl TempState {
+impl HeatShard {
     fn touch(&mut self, rel: &str, tick: u64) {
         self.heat.insert(rel.to_string(), tick);
         if self.heat.len() > MAX_HEAT_ENTRIES {
-            // amortized O(1) per touch: each prune halves the map.
+            // amortized O(1) per touch: each prune halves the shard.
             // Spilled promotion candidates keep their heat so their
             // ordering stays meaningful; pruned files simply read as
             // cold (tick 0) again.
@@ -396,13 +421,15 @@ const MAX_PROMOTES_PER_FREE: usize = 8;
 /// Heat-driven placement: the paper's selection rule for placement, but
 /// under pressure the **coldest resident file** is persisted and
 /// dropped (the active writer keeps streaming to its fast device), and
-/// when space frees the hottest spilled files are promoted back.
+/// when space frees the hottest spilled files are promoted back. Heat
+/// lives in [`HEAT_SHARDS`] independently-locked shards, so the
+/// read/open hot path never serialises on one mutex.
 pub struct TemperatureEngine {
     select: SelectCfg,
     rules: RuleSet,
     rng: Mutex<Rng>,
     clock: AtomicU64,
-    state: Mutex<TempState>,
+    shards: Vec<Mutex<HeatShard>>,
 }
 
 impl TemperatureEngine {
@@ -413,12 +440,34 @@ impl TemperatureEngine {
             rules,
             rng: Mutex::new(Rng::new(seed)),
             clock: AtomicU64::new(0),
-            state: Mutex::new(TempState::default()),
+            shards: (0..HEAT_SHARDS).map(|_| Mutex::new(HeatShard::default())).collect(),
         }
     }
 
     fn tick(&self) -> u64 {
         self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    fn shard(&self, rel: &str) -> &Mutex<HeatShard> {
+        let mut h = DefaultHasher::new();
+        rel.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    fn touch(&self, rel: &str, tick: u64) {
+        self.shard(rel).lock().expect("temp state poisoned").touch(rel, tick);
+    }
+
+    fn heat_tick(&self, rel: &str) -> u64 {
+        self.shard(rel).lock().expect("temp state poisoned").heat_tick(rel)
+    }
+
+    fn spill_insert(&self, rel: &str, s: Spilled) {
+        self.shard(rel)
+            .lock()
+            .expect("temp state poisoned")
+            .spilled
+            .insert(rel.to_string(), s);
     }
 
     /// Fastest tier with a device that can hold `size` bytes right now.
@@ -438,7 +487,7 @@ impl PlacementEngine for TemperatureEngine {
     fn place(&self, ctx: EngineCtx<'_>, p: PlaceCtx<'_>) -> Placement {
         let tick = self.tick();
         {
-            let mut st = self.state.lock().expect("temp state poisoned");
+            let mut st = self.shard(p.rel).lock().expect("temp state poisoned");
             st.touch(p.rel, tick);
             // a (re)placement supersedes any pending promotion
             st.spilled.remove(p.rel);
@@ -452,7 +501,7 @@ impl PlacementEngine for TemperatureEngine {
 
     fn on_access(&self, rel: &str, access: Access) {
         let tick = self.tick();
-        let mut st = self.state.lock().expect("temp state poisoned");
+        let mut st = self.shard(rel).lock().expect("temp state poisoned");
         st.touch(rel, tick);
         if access == Access::Write {
             // a write-open (possibly through a raw PFS handle the VFS
@@ -465,7 +514,7 @@ impl PlacementEngine for TemperatureEngine {
     fn on_close(&self, c: CloseCtx<'_>) -> Vec<Decision> {
         let tick = self.tick();
         {
-            let mut st = self.state.lock().expect("temp state poisoned");
+            let mut st = self.shard(c.rel).lock().expect("temp state poisoned");
             st.touch(c.rel, tick);
             if c.dev.is_none() {
                 // spilled mid-stream: now a promotion candidate with a
@@ -477,23 +526,48 @@ impl PlacementEngine for TemperatureEngine {
         table1_decisions(&self.rules, c.rel)
     }
 
+    fn on_removed(&self, rel: &str) {
+        let mut st = self.shard(rel).lock().expect("temp state poisoned");
+        st.heat.remove(rel);
+        st.spilled.remove(rel);
+    }
+
+    fn on_renamed(&self, from: &str, to: &str) {
+        // take `from`'s state out first, then install under `to` —
+        // never two shard locks at once
+        let (heat, spilled) = {
+            let mut st = self.shard(from).lock().expect("temp state poisoned");
+            (st.heat.remove(from), st.spilled.remove(from))
+        };
+        let mut st = self.shard(to).lock().expect("temp state poisoned");
+        // the destination's own state died with the replaced file
+        st.heat.remove(to);
+        st.spilled.remove(to);
+        if let Some(tick) = heat {
+            st.heat.insert(to.to_string(), tick);
+        }
+        if let Some(s) = spilled {
+            st.spilled.insert(to.to_string(), s);
+        }
+    }
+
     fn on_pressure(&self, ctx: EngineCtx<'_>, p: PressureCtx<'_>) -> Vec<Decision> {
         let tick = self.tick();
-        let mut st = self.state.lock().expect("temp state poisoned");
         // the active writer is hot by definition
-        st.touch(p.rel, tick);
-        let mut cands: Vec<&Resident> = p
+        self.touch(p.rel, tick);
+        let mut cands: Vec<(u64, std::cmp::Reverse<u64>, &Resident)> = p
             .residents
             .iter()
             .filter(|r| r.dev == p.dev && r.rel != p.rel)
+            .map(|r| (self.heat_tick(&r.rel), std::cmp::Reverse(r.size), r))
             .collect();
         // coldest first; ties broken towards the larger file (more
         // space reclaimed per migration)
-        cands.sort_by_key(|r| (st.heat_tick(&r.rel), std::cmp::Reverse(r.size)));
+        cands.sort_by_key(|(heat, rev_size, _)| (*heat, *rev_size));
         let free = ctx.accountant.free(p.dev);
         let mut freed = 0u64;
         let mut out = Vec::new();
-        for r in cands {
+        for (_, _, r) in &cands {
             if free + freed >= p.need {
                 break;
             }
@@ -503,8 +577,7 @@ impl PlacementEngine for TemperatureEngine {
         if free + freed < p.need {
             // victims alone cannot satisfy the write: spill the writer
             // itself (its size is recorded at close)
-            st.spilled
-                .insert(p.rel.to_string(), Spilled { size: 0, tick });
+            self.spill_insert(p.rel, Spilled { size: 0, tick });
             return vec![Decision::SpillSelf];
         }
         for d in &out {
@@ -514,25 +587,30 @@ impl PlacementEngine for TemperatureEngine {
                     .iter()
                     .find(|r| &r.rel == rel)
                     .map_or(0, |r| r.size);
-                st.spilled.insert(rel.clone(), Spilled { size, tick });
+                self.spill_insert(rel, Spilled { size, tick });
             }
         }
         out
     }
 
     fn on_freed(&self, ctx: EngineCtx<'_>, _dev: DeviceRef, _size: u64) -> Vec<Decision> {
-        let mut st = self.state.lock().expect("temp state poisoned");
-        if st.spilled.is_empty() {
-            return Vec::new();
-        }
         // candidates: spilled files with a known size that have been
-        // accessed since their spill (hot again), hottest first
-        let mut cands: Vec<(String, u64, u64)> = st
-            .spilled
-            .iter()
-            .filter(|(rel, s)| s.size > 0 && st.heat_tick(rel) > s.tick)
-            .map(|(rel, s)| (rel.clone(), s.size, st.heat_tick(rel)))
-            .collect();
+        // accessed since their spill (hot again), hottest first. A
+        // rel's heat and spill entry share a shard, so this scan takes
+        // one shard lock at a time.
+        let mut cands: Vec<(String, u64, u64)> = Vec::new();
+        for shard in &self.shards {
+            let st = shard.lock().expect("temp state poisoned");
+            if st.spilled.is_empty() {
+                continue;
+            }
+            for (rel, s) in st.spilled.iter() {
+                let heat = st.heat_tick(rel);
+                if s.size > 0 && heat > s.tick {
+                    cands.push((rel.clone(), s.size, heat));
+                }
+            }
+        }
         cands.sort_by_key(|(_, _, tick)| std::cmp::Reverse(*tick));
         let mut out = Vec::new();
         for (rel, size, _) in cands {
@@ -557,7 +635,7 @@ impl PlacementEngine for TemperatureEngine {
         // one-shot: consuming the candidate here means a second queued
         // promote for the same file, or one queued before the file was
         // written again, is vetoed
-        self.state
+        self.shard(rel)
             .lock()
             .expect("temp state poisoned")
             .spilled
@@ -683,6 +761,35 @@ mod tests {
         // a write-open between emission and execution vetoes the promote
         eng.on_access("a.dat", Access::Write);
         assert!(!eng.approve_promote("a.dat"), "write-open cancels the queued promote");
+    }
+
+    #[test]
+    fn temperature_engine_forgets_removed_files_and_follows_renames() {
+        let (h, acc) = hierarchy();
+        let eng = TemperatureEngine::new(select(), RuleSet::default(), 9);
+        // a spilled, re-heated file is a promotion candidate — until
+        // it is unlinked (ISSUE 4 satellite: dead paths must not win
+        // stale promotions or hold heat slots)
+        eng.on_close(CloseCtx { rel: "gone.dat", dev: None, size: MIB });
+        eng.on_access("gone.dat", Access::Read);
+        eng.on_removed("gone.dat");
+        let ds = eng.on_freed(EngineCtx { hierarchy: &h, accountant: &acc }, 0, MIB);
+        assert!(ds.is_empty(), "unlinked file must not promote: {ds:?}");
+        assert_eq!(eng.heat_tick("gone.dat"), 0, "heat slot released");
+        // a rename carries both heat and the promotion candidacy
+        eng.on_close(CloseCtx { rel: "old.dat", dev: None, size: MIB });
+        eng.on_access("old.dat", Access::Read);
+        eng.on_renamed("old.dat", "new.dat");
+        assert_eq!(eng.heat_tick("old.dat"), 0, "old name forgotten");
+        assert!(eng.heat_tick("new.dat") > 0, "heat follows the rename");
+        let ds = eng.on_freed(EngineCtx { hierarchy: &h, accountant: &acc }, 0, MIB);
+        assert_eq!(
+            ds,
+            vec![Decision::Promote { rel: "new.dat".into(), tier: 0 }],
+            "candidacy follows the rename"
+        );
+        assert!(!eng.approve_promote("old.dat"));
+        assert!(eng.approve_promote("new.dat"));
     }
 
     #[test]

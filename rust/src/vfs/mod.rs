@@ -49,11 +49,13 @@
 //! translation logic (offset ops like `pread`/`pwrite` ride on
 //! descriptors whose path was translated at `open`).
 
+pub mod mover;
 pub mod rate;
 pub mod real;
 pub mod sea;
 pub mod striped;
 
+pub use mover::{copy_range, DataMover, MovePath, MoverCfg, MoverMetrics};
 pub use rate::RateLimitedFs;
 pub use real::RealFs;
 pub use sea::{DeviceLedger, DeviceSpec, MgmtCounters, SeaFs, SeaFsConfig, SeaTuning};
@@ -203,6 +205,16 @@ pub trait Vfs: Send + Sync {
     /// per shard.
     fn shard_of(&self, path: &Path) -> Option<usize> {
         let _ = path;
+        None
+    }
+
+    /// Stripe unit in bytes when the backend stripes *single files*
+    /// across its shards at block granularity ([`StripedFs`] in stripe
+    /// mode); `None` for whole-file placement. Bulk-copy engines
+    /// ([`mover::DataMover`]) align their chunking to it so consecutive
+    /// chunks of one large file fan out across members. Decorators
+    /// should delegate so the hint survives wrapping.
+    fn stripe_bytes(&self) -> Option<u64> {
         None
     }
 

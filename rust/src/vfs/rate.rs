@@ -164,6 +164,10 @@ impl<F: Vfs> Vfs for RateLimitedFs<F> {
     fn shard_of(&self, path: &Path) -> Option<usize> {
         self.inner.shard_of(path)
     }
+
+    fn stripe_bytes(&self) -> Option<u64> {
+        self.inner.stripe_bytes()
+    }
 }
 
 #[cfg(test)]
@@ -291,6 +295,40 @@ mod tests {
         // (4 MiB - 1 MiB burst) / 20 MiB/s = 0.15 s
         assert!(dt_whole > 0.1, "whole dt = {dt_whole}");
         assert!(dt_chunked > 0.1, "chunked dt = {dt_chunked}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn datamover_chunks_pay_per_request_through_the_cap() {
+        // ISSUE 4 satellite: per-chunk accounting must hold for the
+        // DataMover's pipelined transfers — every chunk debits the
+        // bucket for exactly its bytes, so the streamed total respects
+        // the bandwidth cap and the read-ahead thread cannot bypass it
+        use crate::vfs::mover::{DataMover, MovePath, MoverCfg};
+        let dir = scratch("rate_mover");
+        let src_fs = RealFs::new(dir.join("src")).unwrap();
+        src_fs.write(Path::new("big.dat"), &vec![0x42u8; 4 * MIB as usize]).unwrap();
+        let dst_fs = RateLimitedFs::new(
+            RealFs::new(dir.join("dst")).unwrap(),
+            1e9,
+            20.0 * MIB as f64, // 20 MiB/s writes
+        );
+        let mut src = src_fs.open(Path::new("big.dat"), OpenMode::Read).unwrap();
+        let mut dst = dst_fs.open(Path::new("big.dat"), OpenMode::Write).unwrap();
+        let cfg = MoverCfg { chunk_bytes: 256 * KIB as usize, copy_window: 2 };
+        let t0 = Instant::now();
+        let n = DataMover::new(cfg, MovePath::Flush)
+            .copy(src.as_mut(), dst.as_mut(), 4 * MIB)
+            .unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(n, 4 * MIB);
+        drop(dst);
+        // cap floor: (4 MiB - 1 MiB burst) / 20 MiB/s = 0.15 s
+        assert!(dt > 0.1, "streamed transfer beat the cap: dt = {dt}");
+        assert_eq!(
+            dst_fs.inner().read(Path::new("big.dat")).unwrap(),
+            vec![0x42u8; 4 * MIB as usize]
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -37,7 +37,13 @@
 //! (flush / evict, Table 1) are applied asynchronously by a **flush
 //! pool** of worker threads (a multi-worker generalisation of the
 //! paper's §5.1 daemon) so several files flush to the PFS in parallel;
-//! the same pool executes promotions. When the PFS
+//! the same pool executes promotions. Every bulk transfer — flush,
+//! self-spill, victim spill, promotion, prefetch — streams through the
+//! [`crate::vfs::DataMover`] in `SeaTuning::chunk_bytes` chunks with a
+//! `copy_window`-bounded read-ahead, so peak copy memory is
+//! O(chunk × window) instead of O(file), reads overlap writes, and a
+//! chunk-striped PFS sees one large file fan out across its members.
+//! When the PFS
 //! advertises shard topology ([`Vfs::shard_count`], e.g. a striped
 //! backend), the pool is **OST-aware**: at most
 //! [`SeaTuning::per_member_concurrency`] flushes are in flight per
@@ -71,6 +77,10 @@ use crate::placement::engine::{
     Placement, PlacementEngine, PressureCtx, Resident,
 };
 use crate::placement::rules::RuleSet;
+use crate::vfs::mover::{
+    copy_range, DataMover, MovePath, MoverCfg, MoverMetrics, DEFAULT_CHUNK_BYTES,
+    DEFAULT_COPY_WINDOW,
+};
 use crate::vfs::{OpenMode, RealFs, Vfs, VfsFile};
 
 /// Default registry shard count: enough to keep 2× typical worker
@@ -84,9 +94,6 @@ const DEFAULT_FLUSH_WORKERS: usize = 4;
 
 /// Default in-flight flush cap per striped-PFS member.
 const DEFAULT_PER_MEMBER_CONCURRENCY: usize = 2;
-
-/// Copy buffer for mid-stream spills.
-const SPILL_CHUNK: usize = 1 << 20;
 
 /// One fast placement target: a [`Vfs`] backend with a tier rank and a
 /// byte budget.
@@ -137,6 +144,15 @@ pub struct SeaTuning {
     /// Max in-flight flushes per striped-PFS member; 0 disables the
     /// gate. Ignored when the PFS reports no shard topology.
     pub per_member_concurrency: usize,
+    /// Chunk size for streamed management transfers
+    /// ([`crate::vfs::DataMover`]); every flush / spill / promotion /
+    /// prefetch moves in chunks of this size instead of one
+    /// whole-file `Vec`.
+    pub chunk_bytes: usize,
+    /// Max in-flight chunk buffers per transfer (2 = double buffering:
+    /// read-ahead overlaps write-behind). Peak copy memory per
+    /// transfer is `chunk_bytes × copy_window`.
+    pub copy_window: usize,
     /// Which [`PlacementEngine`] the mount drives (`[sea] engine = ...`,
     /// `sea run --engine ...`).
     pub engine: EngineKind,
@@ -148,6 +164,8 @@ impl Default for SeaTuning {
             flush_workers: DEFAULT_FLUSH_WORKERS,
             registry_shards: DEFAULT_REGISTRY_SHARDS,
             per_member_concurrency: DEFAULT_PER_MEMBER_CONCURRENCY,
+            chunk_bytes: DEFAULT_CHUNK_BYTES,
+            copy_window: DEFAULT_COPY_WINDOW,
             engine: EngineKind::Paper,
         }
     }
@@ -209,6 +227,18 @@ pub struct MgmtCounters {
     pub promotions: u64,
     /// Files pulled in by the mount-time prefetch pass.
     pub prefetched: u64,
+    /// Bytes streamed to the PFS by close-time flushes.
+    pub flush_bytes: u64,
+    /// Bytes streamed by mid-stream self-spills and victim spills.
+    pub spill_bytes: u64,
+    /// Bytes streamed back onto fast tiers by promotions.
+    pub promote_bytes: u64,
+    /// Bytes streamed in by prefetch passes.
+    pub prefetch_bytes: u64,
+    /// High-water mark of allocated copy-buffer bytes across all
+    /// concurrent management transfers: the bounded-memory gauge (one
+    /// transfer never allocates more than `chunk_bytes × copy_window`).
+    pub peak_copy_buffer_bytes: u64,
 }
 
 #[derive(Debug, Clone)]
@@ -422,6 +452,10 @@ struct Shared {
     flush_locks: Mutex<HashMap<String, Arc<Mutex<()>>>>,
     /// Per-member in-flight flush gate, when the PFS is sharded.
     pfs_slots: Option<PfsSlots>,
+    /// Streamed-transfer tuning (chunk size, in-flight window).
+    mover_cfg: MoverCfg,
+    /// DataMover gauges: bytes per management path, peak buffer bytes.
+    mover: MoverMetrics,
 }
 
 impl Shared {
@@ -527,7 +561,8 @@ impl Shared {
             let _guard = lk.lock().expect("flush lock poisoned");
             match self.registry.get(rel) {
                 Some(e) if e.writers == 0 && e.dev.is_some() => {
-                    run_mgmt(self, rel, e.generation, true, true);
+                    // victim traffic is spill traffic in the gauges
+                    run_mgmt(self, rel, e.generation, true, true, MovePath::Spill);
                     match self.registry.get(rel) {
                         Some(e2) => e2.dev.is_none(),
                         None => true,
@@ -566,6 +601,52 @@ impl Shared {
             let m = self.pfs.shard_of(Path::new(rel)).unwrap_or(0) % s.members;
             s.acquire(m)
         })
+    }
+
+    /// A [`DataMover`] for one transfer whose destination is `dst`:
+    /// chunking is aligned to the destination's stripe unit (when it
+    /// advertises one) so consecutive chunks of a large file fan out
+    /// across striped members, and the mount's gauges observe the
+    /// transfer.
+    fn mover_to(&self, dst: &dyn Vfs, class: MovePath) -> DataMover<'_> {
+        DataMover::new(self.mover_cfg.aligned_to(dst.stripe_bytes()), class)
+            .with_metrics(&self.mover)
+    }
+
+    /// Stream exactly `size` bytes of `src` into `rel` on `dst` — the
+    /// one copy-with-rollback every streamed management transfer
+    /// (flush, victim spill, promotion, prefetch) shares. A short copy
+    /// (the source shrank mid-stream) is an error, and any failure
+    /// after the destination was opened removes the partial file: a
+    /// missing destination is detectable, a silently truncated one is
+    /// not.
+    fn stream_into(
+        &self,
+        dst: &Arc<dyn Vfs>,
+        rel: &str,
+        src: &mut dyn VfsFile,
+        size: u64,
+        class: MovePath,
+    ) -> Result<()> {
+        let res = match dst.open(Path::new(rel), OpenMode::Write) {
+            Ok(mut out) => match self.mover_to(dst.as_ref(), class).copy(src, out.as_mut(), size)
+            {
+                Ok(n) if n == size => Ok(()),
+                Ok(_) => Err(Error::io(
+                    rel,
+                    std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "source shrank mid-copy",
+                    ),
+                )),
+                Err(e) => Err(e),
+            },
+            Err(e) => return Err(e),
+        };
+        if res.is_err() {
+            let _ = dst.unlink(Path::new(rel));
+        }
+        res
     }
 }
 
@@ -621,6 +702,11 @@ impl SeaFs {
             idle: Condvar::new(),
             flush_locks: Mutex::new(HashMap::new()),
             pfs_slots,
+            mover_cfg: MoverCfg {
+                chunk_bytes: cfg.tuning.chunk_bytes.max(1),
+                copy_window: cfg.tuning.copy_window.max(1),
+            },
+            mover: MoverMetrics::default(),
         });
         let rx = Arc::new(Mutex::new(rx));
         let nworkers = cfg.tuning.flush_workers.max(1);
@@ -670,9 +756,16 @@ impl SeaFs {
     }
 
     /// Full management/placement counters (spills, promotions,
-    /// prefetches included).
+    /// prefetches and the streamed-transfer byte gauges included).
     pub fn counters(&self) -> MgmtCounters {
-        *self.shared.counters.lock().expect("counters poisoned")
+        let mut c = *self.shared.counters.lock().expect("counters poisoned");
+        let m = &self.shared.mover;
+        c.flush_bytes = m.moved(MovePath::Flush);
+        c.spill_bytes = m.moved(MovePath::Spill);
+        c.promote_bytes = m.moved(MovePath::Promote);
+        c.prefetch_bytes = m.moved(MovePath::Prefetch);
+        c.peak_copy_buffer_bytes = m.peak_buffer_bytes();
+        c
     }
 
     /// Display name of the mount's placement engine.
@@ -756,13 +849,9 @@ impl SeaFs {
                 if !sh.engine.wants_prefetch(&rel) || sh.registry.contains(&rel) {
                     continue;
                 }
-                match sh.pfs.read(Path::new(&rel)) {
-                    Ok(data) => match self.place_and_write(&rel, &data, true) {
-                        Ok(Some(_)) => n += 1,
-                        Ok(None) => {}
-                        Err(e) if strict => return Err(e),
-                        Err(_) => {}
-                    },
+                match self.place_streamed(&rel) {
+                    Ok(true) => n += 1,
+                    Ok(false) => {}
                     Err(Error::NotFound(_)) => {} // vanished mid-scan
                     Err(e) if strict => return Err(e),
                     Err(_) => {}
@@ -774,21 +863,14 @@ impl SeaFs {
 
     /// Core whole-file placement: write `data` to the device the engine
     /// picks. Returns the chosen device and registry generation, or
-    /// `None` when it fell through to the PFS. `already_flushed` marks
-    /// prefetched inputs (they came *from* the PFS, so eviction is
-    /// always safe).
-    fn place_and_write(
-        &self,
-        rel: &str,
-        data: &[u8],
-        already_flushed: bool,
-    ) -> Result<Option<(DeviceRef, u64)>> {
+    /// `None` when it fell through to the PFS.
+    fn place_and_write(&self, rel: &str, data: &[u8]) -> Result<Option<(DeviceRef, u64)>> {
         let sh = &self.shared;
         // overwrite: free the previous local copy first
         self.drop_local(rel)?;
         let pick = sh.engine.place(
             sh.ectx(),
-            PlaceCtx { rel, size: data.len() as u64, prefetch: already_flushed },
+            PlaceCtx { rel, size: data.len() as u64, prefetch: false },
         );
         match pick {
             Placement::Device(dev) => {
@@ -799,10 +881,7 @@ impl SeaFs {
                     return Err(e);
                 }
                 let gen = sh.next_gen();
-                sh.insert_placed(
-                    rel,
-                    Entry::new(Some(dev), data.len() as u64, already_flushed, gen, 0),
-                );
+                sh.insert_placed(rel, Entry::new(Some(dev), data.len() as u64, false, gen, 0));
                 Ok(Some((dev, gen)))
             }
             Placement::Pfs => {
@@ -810,6 +889,36 @@ impl SeaFs {
                 Ok(None)
             }
         }
+    }
+
+    /// Streamed prefetch placement: pull the PFS copy of `rel` into
+    /// the device the engine picks, in bounded chunks — no whole-file
+    /// `Vec`, regardless of input size. Returns whether a device
+    /// placement happened (`false`: the engine sent it to the PFS,
+    /// where the bytes already live). The entry is inserted `flushed`:
+    /// the bytes came *from* the PFS, so a later evict is always safe.
+    fn place_streamed(&self, rel: &str) -> Result<bool> {
+        let sh = &self.shared;
+        let mut src = sh.pfs.open(Path::new(rel), OpenMode::Read)?;
+        let size = src.len()?;
+        // overwrite: free any previous local copy first
+        self.drop_local(rel)?;
+        let pick = sh
+            .engine
+            .place(sh.ectx(), PlaceCtx { rel, size, prefetch: true });
+        let Placement::Device(dev) = pick else {
+            return Ok(false);
+        };
+        let backend = sh.backend(dev).clone();
+        if let Err(e) = sh.stream_into(&backend, rel, src.as_mut(), size, MovePath::Prefetch) {
+            // placement reserved the bytes; a failed copy gives them
+            // back (stream_into removed the partial device file)
+            sh.accountant.credit(dev, size);
+            return Err(e);
+        }
+        let gen = sh.next_gen();
+        sh.insert_placed(rel, Entry::new(Some(dev), size, true, gen, 0));
+        Ok(true)
     }
 
     /// Open a writer handle on a mount-relative path: place at open,
@@ -984,6 +1093,10 @@ impl SeaFs {
             self.shared.pfs.unlink(Path::new(rel))?;
         }
         if had_local || on_pfs {
+            // the path is gone: the engine forgets its heat and any
+            // queued promotion candidacy, so dead paths neither hold
+            // heat-map slots nor win stale promotions
+            self.shared.engine.on_removed(rel);
             Ok(())
         } else {
             Err(Error::NotFound(path.to_path_buf()))
@@ -1022,6 +1135,8 @@ impl SeaFs {
                         .on_close(CloseCtx { rel: rt, dev, size });
                     self.shared.enqueue_close(rt, gen, &decisions);
                 }
+                // heat / promotion candidacy follows the new name
+                self.shared.engine.on_renamed(rf, rt);
                 Ok(())
             }
             None if self.shared.registry.contains(rf) => Err(Error::InvalidArg(format!(
@@ -1031,7 +1146,9 @@ impl SeaFs {
                 self.shared.pfs.rename(Path::new(rf), Path::new(rt))?;
                 // a pre-existing local copy under the destination name
                 // would shadow the renamed PFS file on reads — drop it
-                self.drop_local(rt)
+                self.drop_local(rt)?;
+                self.shared.engine.on_renamed(rf, rt);
+                Ok(())
             }
         }
     }
@@ -1310,7 +1427,12 @@ impl SeaFile {
         let Some((dev, size0, serial0)) = armed else {
             return Ok(None);
         };
-        // phase 2: bulk copy without the shard lock
+        // phase 2: bulk copy without the shard lock, streamed through
+        // the DataMover — device read-ahead overlaps the PFS
+        // write-behind, and peak memory is chunk_bytes × copy_window
+        // however large the partial file grew. A short copy is fine:
+        // a reserved-but-unwritten sparse tail is zero-filled by the
+        // flip's set_len.
         let mut out = match sh.pfs.open(Path::new(&rel), OpenMode::Write) {
             Ok(f) => f,
             Err(err) => {
@@ -1318,25 +1440,12 @@ impl SeaFile {
                 return Err(err);
             }
         };
-        let mut buf = vec![0u8; SPILL_CHUNK];
-        let mut done = 0u64;
-        while done < size0 {
-            let want = ((size0 - done) as usize).min(buf.len());
-            let n = match self.file.pread(&mut buf[..want], done) {
-                Ok(n) => n,
-                Err(err) => {
-                    disarm_spill(&sh, &rel, epoch);
-                    return Err(err);
-                }
-            };
-            if n == 0 {
-                break; // reserved-but-unwritten sparse tail
-            }
-            if let Err(err) = out.pwrite_all(&buf[..n], done) {
-                disarm_spill(&sh, &rel, epoch);
-                return Err(err);
-            }
-            done += n as u64;
+        if let Err(err) = sh
+            .mover_to(sh.pfs.as_ref(), MovePath::Spill)
+            .copy(self.file.as_mut(), out.as_mut(), size0)
+        {
+            disarm_spill(&sh, &rel, epoch);
+            return Err(err);
         }
         // phase 3: stop new reservations
         let alive = sh
@@ -1359,10 +1468,10 @@ impl SeaFile {
             Gone,
             Done(u64),
         }
+        let chunk = sh.mover_cfg.chunk_bytes;
         loop {
             let file = &mut self.file;
             let out_ref = &mut out;
-            let buf_ref = &mut buf;
             let res = sh.registry.update(&rel, |e| -> Result<Flip> {
                 if e.epoch != epoch {
                     return Ok(Flip::Gone);
@@ -1377,22 +1486,25 @@ impl SeaFile {
                 );
                 if e.serial != serial0 {
                     // sibling writes landed during the bulk copy:
-                    // re-copy exactly the affected ranges
+                    // re-copy exactly the affected ranges (a logged
+                    // whole-file truncate is `(0, u64::MAX)` and clamps
+                    // to the entry size). Chunked, synchronous: this
+                    // runs under the shard lock, so no reader thread.
                     for &(off, rlen) in e.recopy.iter() {
                         if off >= e.size {
                             continue;
                         }
-                        let end = (off + rlen.min(e.size - off)).min(e.size);
-                        let mut at = off;
-                        while at < end {
-                            let want = ((end - at) as usize).min(buf_ref.len());
-                            let n = file.pread(&mut buf_ref[..want], at)?;
-                            if n == 0 {
-                                break;
-                            }
-                            out_ref.pwrite_all(&buf_ref[..n], at)?;
-                            at += n as u64;
-                        }
+                        let len = rlen.min(e.size - off);
+                        let n = copy_range(
+                            file.as_mut(),
+                            out_ref.as_mut(),
+                            off,
+                            len,
+                            chunk,
+                            Some(&sh.mover),
+                        )?;
+                        // recopied ranges are spill traffic too
+                        sh.mover.record(MovePath::Spill, n);
                     }
                 }
                 // zero-fill any sparse tail up to the reserved size
@@ -1643,7 +1755,9 @@ fn process_job(sh: &Shared, job: &Job) {
     {
         let _file_guard = lk.lock().expect("flush lock poisoned");
         match job {
-            Job::Mgmt { rel, gen, flush, evict } => run_mgmt(sh, rel, *gen, *flush, *evict),
+            Job::Mgmt { rel, gen, flush, evict } => {
+                run_mgmt(sh, rel, *gen, *flush, *evict, MovePath::Flush)
+            }
             Job::Promote { rel, tier } => run_promote(sh, rel, *tier),
         }
     }
@@ -1652,8 +1766,10 @@ fn process_job(sh: &Shared, job: &Job) {
 }
 
 /// Execute a close-time management decision (flush and/or evict);
-/// caller holds `rel`'s per-file flush lock.
-fn run_mgmt(sh: &Shared, rel: &str, gen: u64, flush: bool, evict: bool) {
+/// caller holds `rel`'s per-file flush lock. `class` attributes the
+/// streamed bytes in the gauges (a victim spill is a flush+evict whose
+/// traffic counts as spill).
+fn run_mgmt(sh: &Shared, rel: &str, gen: u64, flush: bool, evict: bool, class: MovePath) {
     let Some(entry) = sh.registry.get(rel) else { return };
     // A newer write superseded this job (it enqueued its own), or a
     // writer handle is still open (its close will re-enqueue): stand down.
@@ -1664,16 +1780,25 @@ fn run_mgmt(sh: &Shared, rel: &str, gen: u64, flush: bool, evict: bool) {
     // evict (the last close retires it).
     let Some(dev) = entry.dev else { return };
     if flush && !entry.flushed {
-        let Ok(data) = sh.backend(dev).read(Path::new(rel)) else { return };
+        // stream the device copy to the PFS in bounded chunks — no
+        // whole-file Vec, whatever the file size
+        let Ok(mut src) = sh.backend(dev).open(Path::new(rel), OpenMode::Read) else {
+            return;
+        };
+        let Ok(src_len) = src.len() else { return };
         // a racing overwrite may have dropped and recreated the local
-        // file mid-read: only flush bytes whose size matches the entry
-        if data.len() as u64 != entry.size {
+        // file mid-flush: only stream bytes whose size matches the entry
+        if src_len != entry.size {
             return;
         }
-        // OST-aware gate: cap in-flight flushes per PFS member
+        // OST-aware gate: cap in-flight flushes per PFS member. On
+        // failure, stream_into removes the partial destination — a
+        // stale prior replica (the entry reopened for write, so any
+        // old PFS bytes were already outdated) becomes cleanly absent
+        // instead of silently truncated.
         let wrote = {
             let _slot = sh.pfs_slot(rel);
-            sh.pfs.write(Path::new(rel), &data).is_ok()
+            sh.stream_into(&sh.pfs, rel, src.as_mut(), src_len, class).is_ok()
         };
         if !wrote {
             return;
@@ -1723,18 +1848,19 @@ fn run_promote(sh: &Shared, rel: &str, tier: u8) {
     if sh.registry.contains(rel) {
         return; // already resident
     }
-    let Ok(data) = sh.pfs.read(Path::new(rel)) else { return };
-    let size = data.len() as u64;
+    // stream the PFS copy up in bounded chunks — no whole-file Vec
+    let Ok(mut src) = sh.pfs.open(Path::new(rel), OpenMode::Read) else { return };
+    let Ok(size) = src.len() else { return };
     for d in sh.hierarchy.tier_devices(tier) {
-        if sh.hierarchy.backend(d).is_none() {
+        let Some(backend) = sh.hierarchy.backend(d) else {
             continue;
-        }
+        };
         // promotion is an opportunistic cache fill: it must fit, but
         // the p·F reservation floor does not apply
         if !sh.accountant.try_debit(d, size, size) {
             continue;
         }
-        if sh.backend(d).write(Path::new(rel), &data).is_err() {
+        if sh.stream_into(backend, rel, src.as_mut(), size, MovePath::Promote).is_err() {
             sh.accountant.credit(d, size);
             continue;
         }
@@ -1833,7 +1959,7 @@ impl Vfs for SeaFs {
         match self.rel_of(path) {
             None => self.shared.pfs.write(path, data),
             Some(rel) => {
-                if let Some((dev, gen)) = self.place_and_write(&rel, data, false)? {
+                if let Some((dev, gen)) = self.place_and_write(&rel, data)? {
                     let decisions = self.shared.engine.on_close(CloseCtx {
                         rel: &rel,
                         dev: Some(dev),
@@ -1957,7 +2083,7 @@ impl Vfs for SeaFs {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::MIB;
+    use crate::util::{KIB, MIB};
     use crate::vfs::real::RealFs;
     use crate::vfs::testutil::scratch;
     use crate::vfs::{RateLimitedFs, StripedFs};
@@ -2786,6 +2912,11 @@ mod tests {
         sea.sync_mgmt().unwrap();
         assert!(sea.device_of("cold.dat").is_some(), "promoted back to a fast tier");
         assert_eq!(sea.counters().promotions, 1);
+        assert_eq!(
+            sea.counters().promote_bytes,
+            MIB,
+            "promotion traffic streamed through the mover"
+        );
         assert_eq!(sea.read(Path::new("/sea/cold.dat")).unwrap(), vec![7u8; MIB as usize]);
         let _ = std::fs::remove_dir_all(&root);
     }
@@ -2848,6 +2979,163 @@ mod tests {
         let _ = std::fs::remove_dir_all(&root);
     }
 
+    // --- streaming DataMover (bounded-memory transfers) ----------------------
+
+    #[test]
+    fn flush_streams_bytes_and_reports_gauges() {
+        // a Move-mode flush streams through the DataMover: byte gauges
+        // report the traffic and the copy buffers stay bounded by
+        // chunk_bytes × copy_window
+        let root = scratch("seafs_gauges");
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
+        let sea = SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(root.join("d0"), 0, 10 * MIB).unwrap()],
+            pfs: pfs.clone(),
+            max_file_size: MIB,
+            parallel_procs: 1,
+            rules: RuleSet::from_texts("**", "**", ""),
+            seed: 1,
+            tuning: SeaTuning {
+                chunk_bytes: (64 * KIB) as usize,
+                copy_window: 2,
+                ..SeaTuning::default()
+            },
+        })
+        .unwrap();
+        sea.write(Path::new("/sea/g.dat"), &vec![5u8; MIB as usize]).unwrap();
+        sea.sync_mgmt().unwrap();
+        let c = sea.counters();
+        assert_eq!((c.flushes, c.evictions), (1, 1));
+        assert_eq!(c.flush_bytes, MIB, "flush traffic observed");
+        assert_eq!(c.spill_bytes, 0);
+        assert!(c.peak_copy_buffer_bytes > 0, "buffer lease observed");
+        assert!(
+            c.peak_copy_buffer_bytes <= 2 * 64 * KIB,
+            "peak {} exceeds chunk_bytes x copy_window",
+            c.peak_copy_buffer_bytes
+        );
+        assert_eq!(pfs.read(Path::new("g.dat")).unwrap(), vec![5u8; MIB as usize]);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn victim_spill_streams_with_bounded_buffers() {
+        // ISSUE 4 regression: a victim spill of a file ≫ chunk_bytes
+        // must not materialize it — peak copy-buffer bytes stay within
+        // chunk_bytes × copy_window while the bytes land intact
+        let root = scratch("seafs_victim_stream");
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
+        let sea = SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(root.join("tiny"), 0, 2 * MIB).unwrap()],
+            pfs: pfs.clone(),
+            max_file_size: MIB,
+            parallel_procs: 1,
+            rules: RuleSet::default(), // Keep: residency managed by pressure
+            seed: 1,
+            tuning: SeaTuning {
+                engine: EngineKind::Temperature,
+                chunk_bytes: (16 * KIB) as usize,
+                copy_window: 2,
+                ..SeaTuning::default()
+            },
+        })
+        .unwrap();
+        // the cold resident is 64x the chunk size
+        sea.write(Path::new("/sea/cold.dat"), &vec![7u8; MIB as usize]).unwrap();
+        {
+            let mut f = sea.open(Path::new("/sea/hot.dat"), OpenMode::Write).unwrap();
+            let quarter = MIB as usize / 4;
+            for k in 0..8u64 {
+                f.pwrite_all(&vec![k as u8; quarter], k * quarter as u64).unwrap();
+            }
+        }
+        sea.sync_mgmt().unwrap();
+        let c = sea.counters();
+        assert_eq!(c.victim_spills, 1, "cold resident spilled: {c:?}");
+        assert_eq!(c.spill_bytes, MIB, "victim traffic counts as spill");
+        assert!(
+            c.peak_copy_buffer_bytes <= 2 * 16 * KIB,
+            "peak {} exceeds chunk_bytes x copy_window",
+            c.peak_copy_buffer_bytes
+        );
+        assert_eq!(pfs.read(Path::new("cold.dat")).unwrap(), vec![7u8; MIB as usize]);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn flush_over_stripe_mode_pfs_fans_out_across_members() {
+        // chunk-striped PFS: one large file's flush lands parts on
+        // every member — single-file bandwidth aggregates across OSTs
+        const STRIPE: u64 = 256 * KIB;
+        let root = scratch("seafs_stripefan");
+        let dirs: Vec<PathBuf> = (0..4).map(|i| root.join(format!("pfs_ost{i}"))).collect();
+        let pfs: Arc<dyn Vfs> =
+            Arc::new(StripedFs::from_dirs_striped(dirs, STRIPE).unwrap());
+        let sea = SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(root.join("d0"), 0, 10 * MIB).unwrap()],
+            pfs: pfs.clone(),
+            max_file_size: MIB,
+            parallel_procs: 1,
+            rules: RuleSet::from_texts("**", "**", ""), // move everything
+            seed: 1,
+            tuning: SeaTuning::default(),
+        })
+        .unwrap();
+        let payload: Vec<u8> = (0..2 * MIB as usize).map(|k| (k / 1000) as u8).collect();
+        {
+            let mut f = sea.open(Path::new("/sea/fan.dat"), OpenMode::Write).unwrap();
+            f.pwrite_all(&payload, 0).unwrap();
+        }
+        sea.sync_mgmt().unwrap();
+        assert_eq!(sea.mgmt_counters(), (1, 1));
+        // 8 stripes over 4 members: every member holds exactly 2
+        for i in 0..4 {
+            let part = root.join(format!("pfs_ost{i}")).join("fan.dat");
+            let plen = std::fs::metadata(&part).map(|m| m.len()).unwrap_or(0);
+            assert_eq!(plen, 2 * STRIPE, "member {i} holds its share");
+        }
+        // the evicted file reads back byte-exact through the mount
+        assert_eq!(sea.read(Path::new("/sea/fan.dat")).unwrap(), payload);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn unlink_cancels_stale_promotion_of_dead_path() {
+        // ISSUE 4 satellite: the engine must forget unlinked files —
+        // a spilled-then-unlinked victim must not be promoted back
+        let root = scratch("seafs_forget");
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
+        let sea = SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(root.join("tiny"), 0, 2 * MIB).unwrap()],
+            pfs: pfs.clone(),
+            max_file_size: MIB,
+            parallel_procs: 1,
+            rules: RuleSet::default(),
+            seed: 1,
+            tuning: SeaTuning { engine: EngineKind::Temperature, ..SeaTuning::default() },
+        })
+        .unwrap();
+        sea.write(Path::new("/sea/cold.dat"), &vec![7u8; MIB as usize]).unwrap();
+        {
+            let mut f = sea.open(Path::new("/sea/hot.dat"), OpenMode::Write).unwrap();
+            f.pwrite_all(&vec![9u8; 2 * MIB as usize], 0).unwrap();
+        }
+        assert!(sea.device_of("cold.dat").is_none(), "victim spilled");
+        // re-heat the victim (promotion candidate), then kill the path
+        let _ = sea.read(Path::new("/sea/cold.dat")).unwrap();
+        sea.unlink(Path::new("/sea/cold.dat")).unwrap();
+        // freeing the device would promote the victim — but it is gone
+        sea.unlink(Path::new("/sea/hot.dat")).unwrap();
+        sea.sync_mgmt().unwrap();
+        assert_eq!(sea.counters().promotions, 0, "dead path never promotes");
+        assert!(!sea.exists(Path::new("/sea/cold.dat")));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
     // --- mount-time prefetch -------------------------------------------------
 
     #[test]
@@ -2864,6 +3152,11 @@ mod tests {
             10 * MIB,
         );
         assert_eq!(sea.counters().prefetched, 2, "both .dat files pulled in");
+        assert_eq!(
+            sea.counters().prefetch_bytes,
+            MIB + 1024,
+            "prefetch traffic streamed through the mover"
+        );
         assert!(sea.device_of("inputs/a.dat").is_some());
         assert!(sea.device_of("inputs/deep/b.dat").is_some());
         assert!(sea.device_of("inputs/skip.txt").is_none());

@@ -16,6 +16,16 @@
 //!
 //! `rename` between members streams the bytes through bounded buffers
 //! and then unlinks the source — the only cross-member operation.
+//!
+//! **Stripe mode** ([`StripedFs::striped`]) puts block-granularity
+//! striping back (`stripe_count > 1` Lustre): every file is cut into
+//! fixed `stripe_bytes` units, stripe `s` lands on member `s % N` at
+//! the RAID-0-compacted local offset `(s / N) * stripe_bytes`, so one
+//! large file spans *all* members and a chunked bulk copy
+//! ([`crate::vfs::DataMover`]) round-robins their bandwidth. The unit
+//! is advertised via [`Vfs::stripe_bytes`] so copy engines align their
+//! chunks to whole stripes. The two layouts are mount-level choices
+//! and not interchangeable on the same directory tree.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -39,18 +49,58 @@ fn fnv1a(key: &str) -> u64 {
     h
 }
 
-/// A file-granularity striped backend over N member [`Vfs`] roots.
+/// Per-member part length for a logical file of `len` bytes striped in
+/// `stripe`-byte units over `n` members: member `m` holds every stripe
+/// `s` with `s % n == m`, compacted (stripe `s` at local offset
+/// `(s / n) * stripe`).
+fn part_len(len: u64, stripe: u64, n: u64, m: u64) -> u64 {
+    let full = len / stripe;
+    let rem = len % stripe;
+    // full stripes on member m: |{ j : j*n + m < full }|
+    let fulls = if full > m { (full - m + n - 1) / n } else { 0 };
+    fulls * stripe + if rem > 0 && full % n == m { rem } else { 0 }
+}
+
+/// Inverse of [`part_len`]: the logical length implied by member `m`
+/// holding `plen` part bytes (its highest stored logical offset, plus
+/// one).
+fn logical_len(plen: u64, stripe: u64, n: u64, m: u64) -> u64 {
+    if plen == 0 {
+        return 0;
+    }
+    let last = plen - 1;
+    let local_stripe = last / stripe;
+    let intra = last % stripe;
+    (local_stripe * n + m) * stripe + intra + 1
+}
+
+/// A striped backend over N member [`Vfs`] roots: file-granularity by
+/// default, block-granularity in stripe mode.
 pub struct StripedFs {
     members: Vec<Arc<dyn Vfs>>,
+    /// `Some(unit)`: block-granularity striping; `None`: whole files.
+    stripe: Option<u64>,
 }
 
 impl StripedFs {
-    /// Build from member backends (at least one).
+    /// Build from member backends (at least one), whole-file layout.
     pub fn new(members: Vec<Arc<dyn Vfs>>) -> Result<StripedFs> {
         if members.is_empty() {
             return Err(Error::Config("striped fs requires at least one member".into()));
         }
-        Ok(StripedFs { members })
+        Ok(StripedFs { members, stripe: None })
+    }
+
+    /// Build in **stripe mode**: files are cut into `stripe_bytes`
+    /// units RAID-0'd across the members, so a single large file's
+    /// bandwidth aggregates across OSTs.
+    pub fn striped(members: Vec<Arc<dyn Vfs>>, stripe_bytes: u64) -> Result<StripedFs> {
+        if stripe_bytes == 0 {
+            return Err(Error::Config("stripe_bytes must be positive".into()));
+        }
+        let mut fs_ = StripedFs::new(members)?;
+        fs_.stripe = Some(stripe_bytes);
+        Ok(fs_)
     }
 
     /// Convenience: one [`crate::vfs::RealFs`] member per directory.
@@ -60,6 +110,56 @@ impl StripedFs {
             members.push(Arc::new(crate::vfs::RealFs::new(d)?));
         }
         StripedFs::new(members)
+    }
+
+    /// Convenience: stripe mode over one [`crate::vfs::RealFs`] member
+    /// per directory.
+    pub fn from_dirs_striped<P: Into<std::path::PathBuf>>(
+        dirs: Vec<P>,
+        stripe_bytes: u64,
+    ) -> Result<StripedFs> {
+        let mut members: Vec<Arc<dyn Vfs>> = Vec::new();
+        for d in dirs {
+            members.push(Arc::new(crate::vfs::RealFs::new(d)?));
+        }
+        StripedFs::striped(members, stripe_bytes)
+    }
+
+    /// Open a stripe-mode handle: one part handle per member. Writable
+    /// modes create every part up front (Write truncates them all);
+    /// read opens tolerate missing trailing parts (short files only
+    /// touch the first members).
+    fn open_striped(&self, path: &Path, mode: OpenMode, stripe: u64) -> Result<Box<dyn VfsFile>> {
+        let mut parts: Vec<Option<Box<dyn VfsFile>>> = Vec::with_capacity(self.members.len());
+        match mode {
+            OpenMode::Read => {
+                let mut any = false;
+                for m in &self.members {
+                    match m.open(path, OpenMode::Read) {
+                        Ok(h) => {
+                            any = true;
+                            parts.push(Some(h));
+                        }
+                        Err(Error::NotFound(_)) => parts.push(None),
+                        Err(e) => return Err(e),
+                    }
+                }
+                if !any {
+                    return Err(Error::NotFound(path.to_path_buf()));
+                }
+            }
+            OpenMode::Write | OpenMode::ReadWrite | OpenMode::Append => {
+                let inner = if mode == OpenMode::Write {
+                    OpenMode::Write
+                } else {
+                    OpenMode::ReadWrite
+                };
+                for m in &self.members {
+                    parts.push(Some(m.open(path, inner)?));
+                }
+            }
+        }
+        Ok(Box::new(StripedFile { parts, stripe, append: mode == OpenMode::Append }))
     }
 
     /// Number of members.
@@ -82,32 +182,260 @@ impl StripedFs {
     }
 }
 
+/// Handle over a stripe-mode file: positioned ops split at stripe
+/// boundaries and fan out to per-member part handles.
+struct StripedFile {
+    /// One handle per member; `None` when a read-only open found no
+    /// part there (short file: only the first members hold stripes).
+    parts: Vec<Option<Box<dyn VfsFile>>>,
+    stripe: u64,
+    /// Append emulation: the offset is resolved from the current
+    /// logical length per write (single-process semantics — stripe
+    /// parts have no shared O_APPEND cursor).
+    append: bool,
+}
+
+impl StripedFile {
+    fn n(&self) -> u64 {
+        self.parts.len() as u64
+    }
+
+    /// `(member, local offset, span)` of the stripe segment starting
+    /// at logical `off`, capped at `len` bytes.
+    fn segment(&self, off: u64, len: usize) -> (usize, u64, usize) {
+        let s = off / self.stripe;
+        let intra = off % self.stripe;
+        let member = (s % self.n()) as usize;
+        let local = (s / self.n()) * self.stripe + intra;
+        let span = (self.stripe - intra).min(len as u64) as usize;
+        (member, local, span)
+    }
+
+    fn logical_len(&self) -> Result<u64> {
+        let n = self.n();
+        let mut len = 0u64;
+        for (m, p) in self.parts.iter().enumerate() {
+            if let Some(h) = p {
+                len = len.max(logical_len(h.len()?, self.stripe, n, m as u64));
+            }
+        }
+        Ok(len)
+    }
+}
+
+impl VfsFile for StripedFile {
+    fn pread(&mut self, buf: &mut [u8], off: u64) -> Result<usize> {
+        // The reconstructed length (one len() per member) is computed
+        // lazily, only when a member segment comes back short — reads
+        // inside fully-written regions never pay the extra stats.
+        let mut flen: Option<u64> = None;
+        let mut done = 0usize;
+        while done < buf.len() {
+            let (m, local, span) = self.segment(off + done as u64, buf.len() - done);
+            let mut got = 0usize;
+            if let Some(h) = &mut self.parts[m] {
+                while got < span {
+                    let n = h.pread(&mut buf[done + got..done + span], local + got as u64)?;
+                    if n == 0 {
+                        break; // member EOF
+                    }
+                    got += n;
+                }
+            }
+            done += got;
+            if got == span {
+                continue;
+            }
+            // short member segment: a hole (a later stripe was written
+            // first — the missing bytes read as zeros) or logical EOF?
+            let end = match flen {
+                Some(l) => l,
+                None => {
+                    let l = self.logical_len()?;
+                    flen = Some(l);
+                    l
+                }
+            };
+            let pos = off + done as u64;
+            if pos >= end {
+                break; // logical EOF
+            }
+            let fill = (end - pos).min((span - got) as u64) as usize;
+            buf[done..done + fill].fill(0);
+            done += fill;
+            if got + fill < span {
+                break; // the zero-fill ran into logical EOF mid-segment
+            }
+        }
+        Ok(done)
+    }
+
+    fn pwrite(&mut self, data: &[u8], off: u64) -> Result<usize> {
+        let off = if self.append { self.logical_len()? } else { off };
+        let mut done = 0usize;
+        while done < data.len() {
+            let (m, local, span) = self.segment(off + done as u64, data.len() - done);
+            // writable opens create every part; a None here means the
+            // handle was opened read-only — error, like any other
+            // read-only handle, instead of aborting the thread
+            let Some(h) = self.parts[m].as_mut() else {
+                return Err(Error::io(
+                    "<striped-handle>",
+                    std::io::Error::new(
+                        std::io::ErrorKind::PermissionDenied,
+                        "pwrite on a read-only stripe handle",
+                    ),
+                ));
+            };
+            h.pwrite_all(&data[done..done + span], local)?;
+            done += span;
+        }
+        Ok(data.len())
+    }
+
+    fn set_len(&mut self, len: u64) -> Result<()> {
+        let (stripe, n) = (self.stripe, self.n());
+        for (m, p) in self.parts.iter_mut().enumerate() {
+            let target = part_len(len, stripe, n, m as u64);
+            match p {
+                Some(h) => h.set_len(target)?,
+                None => {
+                    if target > 0 {
+                        return Err(Error::io(
+                            "<striped-handle>",
+                            std::io::Error::new(
+                                std::io::ErrorKind::PermissionDenied,
+                                "set_len on a read-only stripe handle",
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn fsync(&mut self) -> Result<()> {
+        for p in self.parts.iter_mut().flatten() {
+            p.fsync()?;
+        }
+        Ok(())
+    }
+
+    fn len(&self) -> Result<u64> {
+        self.logical_len()
+    }
+}
+
 impl Vfs for StripedFs {
     fn open(&self, path: &Path, mode: OpenMode) -> Result<Box<dyn VfsFile>> {
-        self.member(path).open(path, mode)
+        match self.stripe {
+            None => self.member(path).open(path, mode),
+            Some(stripe) => self.open_striped(path, mode, stripe),
+        }
     }
 
-    fn read(&self, path: &Path) -> Result<Vec<u8>> {
-        self.member(path).read(path)
-    }
-
-    fn write(&self, path: &Path, data: &[u8]) -> Result<()> {
-        self.member(path).write(path, data)
-    }
+    // whole-file read/write use the trait defaults (layered over open),
+    // so both layouts share one code path
 
     fn unlink(&self, path: &Path) -> Result<()> {
-        self.member(path).unlink(path)
+        if self.stripe.is_none() {
+            return self.member(path).unlink(path);
+        }
+        let mut any = false;
+        for m in &self.members {
+            match m.unlink(path) {
+                Ok(()) => any = true,
+                Err(Error::NotFound(_)) => {}
+                Err(e) => return Err(e),
+            }
+        }
+        if any {
+            Ok(())
+        } else {
+            Err(Error::NotFound(path.to_path_buf()))
+        }
     }
 
     fn exists(&self, path: &Path) -> bool {
-        self.member(path).exists(path)
+        match self.stripe {
+            None => self.member(path).exists(path),
+            Some(_) => self.members.iter().any(|m| m.exists(path)),
+        }
     }
 
     fn size(&self, path: &Path) -> Result<u64> {
-        self.member(path).size(path)
+        let Some(stripe) = self.stripe else {
+            return self.member(path).size(path);
+        };
+        let n = self.members.len() as u64;
+        let mut found = false;
+        let mut len = 0u64;
+        for (m, member) in self.members.iter().enumerate() {
+            match member.size(path) {
+                Ok(plen) => {
+                    found = true;
+                    len = len.max(logical_len(plen, stripe, n, m as u64));
+                }
+                Err(Error::NotFound(_)) => {}
+                Err(e) => return Err(e),
+            }
+        }
+        if found {
+            Ok(len)
+        } else {
+            Err(Error::NotFound(path.to_path_buf()))
+        }
     }
 
     fn rename(&self, from: &Path, to: &Path) -> Result<()> {
+        if self.stripe.is_some() {
+            // stripe mode: parts keep their member (layout is
+            // position-based, not name-based). Phase 1 moves every
+            // source part, undoing already-moved parts if a member
+            // fails mid-loop so the source never ends up split across
+            // two names; stale destination parts are cleared only
+            // after every rename committed.
+            let have: Vec<bool> = self.members.iter().map(|m| m.exists(from)).collect();
+            if !have.iter().any(|&b| b) {
+                return Err(Error::NotFound(from.to_path_buf()));
+            }
+            for (i, m) in self.members.iter().enumerate() {
+                if !have[i] {
+                    continue;
+                }
+                if let Err(e) = m.rename(from, to) {
+                    // best-effort rollback: restore the parts renamed
+                    // so far, then drop every surviving destination
+                    // part — members already renamed-over lost theirs,
+                    // so a half-replaced destination would read as a
+                    // silently corrupt file; cleanly absent is
+                    // detectable. The source stays whole and readable.
+                    for (j, mj) in self.members.iter().enumerate() {
+                        let restored = if j < i && have[j] {
+                            mj.rename(to, from).is_ok()
+                        } else {
+                            true
+                        };
+                        // never unlink a source part stranded under the
+                        // destination name by a failed restore
+                        if restored {
+                            let _ = mj.unlink(to);
+                        }
+                    }
+                    return Err(e);
+                }
+            }
+            for (i, m) in self.members.iter().enumerate() {
+                if !have[i] {
+                    match m.unlink(to) {
+                        Ok(()) | Err(Error::NotFound(_)) => {}
+                        Err(e) => return Err(e),
+                    }
+                }
+            }
+            return Ok(());
+        }
         let (mf, mt) = (self.member_of(from), self.member_of(to));
         if mf == mt {
             return self.members[mf].rename(from, to);
@@ -174,7 +502,13 @@ impl Vfs for StripedFs {
     }
 
     fn shard_of(&self, path: &Path) -> Option<usize> {
+        // in stripe mode a file spans all members; the hash pick still
+        // spreads *scheduling* (flush-gate slots) evenly
         Some(self.member_of(path))
+    }
+
+    fn stripe_bytes(&self) -> Option<u64> {
+        self.stripe
     }
 }
 
@@ -279,6 +613,128 @@ mod tests {
         assert_eq!(fnv1a("inputs/block_0001.dat"), 0x9195_4b05_3a28_ce5b);
         let (fs_, root) = striped(4);
         assert_eq!(fs_.member_of(Path::new("inputs/block_0001.dat")), 3);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    // --- stripe mode ---------------------------------------------------------
+
+    fn stripe_mode(n: usize, stripe: u64) -> (StripedFs, PathBuf) {
+        let root = scratch("striped_blocks");
+        let dirs: Vec<PathBuf> = (0..n).map(|i| root.join(format!("ost{i}"))).collect();
+        (StripedFs::from_dirs_striped(dirs, stripe).unwrap(), root)
+    }
+
+    #[test]
+    fn stripe_part_math_round_trips() {
+        let (stripe, n) = (4096u64, 4u64);
+        for len in [0u64, 1, 4095, 4096, 4097, 3 * 4096 + 7, 16 * 4096, 17 * 4096 + 1] {
+            let parts: Vec<u64> = (0..n).map(|m| part_len(len, stripe, n, m)).collect();
+            assert_eq!(parts.iter().sum::<u64>(), len, "parts cover len {len}");
+            let back = (0..n)
+                .map(|m| logical_len(parts[m as usize], stripe, n, m))
+                .max()
+                .unwrap();
+            assert_eq!(back, len, "logical_len inverts part_len for {len}");
+        }
+    }
+
+    #[test]
+    fn stripe_mode_round_trips_and_spans_all_members() {
+        const STRIPE: u64 = 4096;
+        let (fs_, root) = stripe_mode(4, STRIPE);
+        let p = Path::new("big.dat");
+        // 6.5 stripes: every member holds at least one part
+        let payload: Vec<u8> = (0..(6 * STRIPE + STRIPE / 2) as usize)
+            .map(|k| (k / STRIPE as usize) as u8)
+            .collect();
+        {
+            let mut f = fs_.open(p, OpenMode::Write).unwrap();
+            f.pwrite_all(&payload, 0).unwrap();
+            assert_eq!(f.len().unwrap(), payload.len() as u64);
+        }
+        assert!(fs_.exists(p));
+        assert_eq!(fs_.size(p).unwrap(), payload.len() as u64);
+        assert_eq!(fs_.read(p).unwrap(), payload);
+        // the parts really are distributed: every member dir has bytes
+        for i in 0..4 {
+            let part = root.join(format!("ost{i}")).join("big.dat");
+            let plen = std::fs::metadata(&part).map(|m| m.len()).unwrap_or(0);
+            assert!(plen > 0, "member {i} holds no part");
+            assert_eq!(
+                plen,
+                part_len(payload.len() as u64, STRIPE, 4, i as u64),
+                "member {i} part length"
+            );
+        }
+        // unaligned positioned read across a stripe boundary
+        let mut f = fs_.open(p, OpenMode::Read).unwrap();
+        let mut buf = vec![0u8; 100];
+        f.pread_exact(&mut buf, STRIPE - 50).unwrap();
+        assert_eq!(&buf[..50], &payload[(STRIPE - 50) as usize..STRIPE as usize]);
+        assert_eq!(&buf[50..], &payload[STRIPE as usize..(STRIPE + 50) as usize]);
+        // shrink: every member's part truncates to its share
+        {
+            let mut f = fs_.open(p, OpenMode::ReadWrite).unwrap();
+            f.set_len(STRIPE + 10).unwrap();
+            assert_eq!(f.len().unwrap(), STRIPE + 10);
+        }
+        assert_eq!(fs_.size(p).unwrap(), STRIPE + 10);
+        assert_eq!(fs_.read(p).unwrap(), &payload[..(STRIPE + 10) as usize]);
+        // unlink removes every part
+        fs_.unlink(p).unwrap();
+        assert!(!fs_.exists(p));
+        assert!(matches!(fs_.unlink(p), Err(Error::NotFound(_))));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn stripe_mode_sparse_writes_read_back_with_zero_holes() {
+        const STRIPE: u64 = 1024;
+        let (fs_, root) = stripe_mode(4, STRIPE);
+        let p = Path::new("sparse.dat");
+        {
+            let mut f = fs_.open(p, OpenMode::Write).unwrap();
+            // write stripe 5 only: stripes 0–4 are holes, some on
+            // members whose parts stay shorter than the logical length
+            f.pwrite_all(&[7u8; 1024], 5 * STRIPE).unwrap();
+            assert_eq!(f.len().unwrap(), 6 * STRIPE);
+        }
+        let data = fs_.read(p).unwrap();
+        assert_eq!(data.len(), (6 * STRIPE) as usize);
+        assert!(data[..(5 * STRIPE) as usize].iter().all(|&b| b == 0), "holes read as zeros");
+        assert!(data[(5 * STRIPE) as usize..].iter().all(|&b| b == 7));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn stripe_mode_rename_moves_all_parts_and_clears_stale_destination() {
+        const STRIPE: u64 = 1024;
+        let (fs_, root) = stripe_mode(3, STRIPE);
+        let a = Path::new("a.dat");
+        let b = Path::new("b.dat");
+        // destination pre-exists and is *longer* than the source: stale
+        // tail parts must not survive the rename
+        fs_.write(b, &vec![9u8; (7 * STRIPE) as usize]).unwrap();
+        let payload = vec![3u8; (STRIPE + 11) as usize];
+        fs_.write(a, &payload).unwrap();
+        fs_.rename(a, b).unwrap();
+        assert!(!fs_.exists(a));
+        assert_eq!(fs_.size(b).unwrap(), payload.len() as u64);
+        assert_eq!(fs_.read(b).unwrap(), payload);
+        assert!(matches!(
+            fs_.rename(Path::new("missing"), b),
+            Err(Error::NotFound(_))
+        ));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn stripe_mode_advertises_its_unit_through_decorators() {
+        let (fs_, root) = stripe_mode(2, 8192);
+        assert_eq!(fs_.stripe_bytes(), Some(8192));
+        assert_eq!(fs_.shard_count(), Some(2));
+        let wrapped = crate::vfs::RateLimitedFs::new(fs_, 1e9, 1e9);
+        assert_eq!(wrapped.stripe_bytes(), Some(8192));
         let _ = std::fs::remove_dir_all(&root);
     }
 
