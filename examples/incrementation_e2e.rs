@@ -20,7 +20,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use sea::coordinator::{run_pipeline, PipelineCfg, PipelineReport};
+use sea::coordinator::{run_pipeline, IoMode, PipelineCfg, PipelineReport};
 use sea::placement::RuleSet;
 use sea::runtime::Engine;
 use sea::util::csv::{f, Csv};
@@ -99,6 +99,8 @@ fn main() -> sea::Result<()> {
             verify: true,
             cleanup_intermediate: true,
             max_open_outputs: 0,
+            io_mode: IoMode::Streamed,
+            page_cache: None,
         })
     };
 

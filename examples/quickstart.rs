@@ -10,7 +10,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use sea::coordinator::{run_pipeline, PipelineCfg};
+use sea::coordinator::{run_pipeline, IoMode, PipelineCfg};
 use sea::placement::RuleSet;
 use sea::runtime::Engine;
 use sea::util::{fmt_bytes, MIB};
@@ -54,6 +54,8 @@ fn main() -> sea::Result<()> {
         verify: true,
         cleanup_intermediate: true,
         max_open_outputs: 0,
+        io_mode: IoMode::Streamed,
+        page_cache: None,
     })?;
     println!("direct PFS : {:.2}s", direct.makespan);
 
@@ -82,6 +84,8 @@ fn main() -> sea::Result<()> {
         verify: true,
         cleanup_intermediate: true,
         max_open_outputs: 0,
+        io_mode: IoMode::Streamed,
+        page_cache: None,
     })?;
     println!("sea        : {:.2}s", report.makespan);
     println!("speedup    : {:.2}x", direct.makespan / report.makespan);

@@ -3,13 +3,15 @@
 //! file systems such as FUSE". Measure the library-level analogue —
 //! SeaFs path translation + registry vs a plain RealFs — per operation,
 //! plus the handle API's partial-read path (64 KiB strides from 1 MiB
-//! blocks), the flush pool's concurrent drain throughput, and the
+//! blocks), the flush pool's concurrent drain throughput, the
 //! streaming DataMover (streamed-vs-wholefile sweep over file size ×
-//! chunk_bytes × copy_window, emitting `BENCH_datamover.json`).
+//! chunk_bytes × copy_window, emitting `BENCH_datamover.json`), and
+//! the PageCache (mapped-vs-pread sweep over page size × budget on a
+//! rate-limited striped PFS, emitting `BENCH_pagecache.json`).
 //!
-//! `SEA_BENCH_SMOKE=1` runs only the DataMover sweep at tiny sizes —
-//! the CI smoke invocation that keeps the bench harness compiling and
-//! running.
+//! `SEA_BENCH_SMOKE=1` runs only the tiny DataMover + PageCache sweeps
+//! — the CI smoke invocation that keeps the bench harness compiling
+//! and running.
 
 mod common;
 
@@ -22,9 +24,128 @@ use sea::bench::Harness;
 use sea::placement::{EngineKind, RuleSet};
 use sea::util::{KIB, MIB};
 use sea::vfs::{
-    DataMover, DeviceSpec, MovePath, MoverCfg, MoverMetrics, OpenMode, RateLimitedFs, RealFs,
-    SeaFs, SeaFsConfig, SeaTuning, StripedFs, Vfs, VfsFile,
+    DataMover, DeviceSpec, MapMode, MovePath, MoverCfg, MoverMetrics, OpenMode, PageCache,
+    RateLimitedFs, RealFs, SeaFs, SeaFsConfig, SeaTuning, StripedFs, Vfs, VfsFile,
 };
+
+/// Mapped-vs-pread sweep over a rate-limited chunk-striped PFS
+/// (budget × page size grid; cold pass faults, warm pass hits). Emits
+/// `BENCH_pagecache.json`, and asserts the PageCache's bounded-memory
+/// claim: peak resident bytes never exceed the budget.
+fn pagecache_sweep(work: &Path, h: &mut Harness, smoke: bool) {
+    let file_size: u64 = if smoke { 256 * KIB } else { 8 * MIB };
+    let stripe: u64 = if smoke { 32 * KIB } else { 256 * KIB };
+    let member_cap = if smoke { 1e9 } else { 512.0 * MIB as f64 };
+    let members: Vec<Arc<dyn Vfs>> = (0..4)
+        .map(|i| {
+            Arc::new(RateLimitedFs::new(
+                RealFs::new(work.join(format!("pc_ost{i}"))).expect("ost"),
+                member_cap,
+                1e9,
+            )) as Arc<dyn Vfs>
+        })
+        .collect();
+    let pfs = StripedFs::striped(members, stripe).expect("striped");
+    let payload: Vec<u8> = (0..file_size as usize).map(|k| (k % 241) as u8).collect();
+    pfs.write(Path::new("blk.dat"), &payload).expect("payload");
+    let stride = (64 * KIB).min(file_size / 4) as usize;
+    let page_sizes: Vec<usize> = if smoke {
+        vec![(16 * KIB) as usize]
+    } else {
+        vec![(64 * KIB) as usize, (256 * KIB) as usize]
+    };
+    let budgets: Vec<u64> = if smoke {
+        vec![4 * 16 * KIB] // 4 pages — far below the file
+    } else {
+        vec![MIB, 4 * MIB]
+    };
+    let mut rows: Vec<(usize, u64, f64, f64, f64, u64, u64, u64, u64)> = Vec::new();
+    for &page in &page_sizes {
+        for &budget in &budgets {
+            // baseline: strided pread through a plain handle, two passes
+            let t0 = Instant::now();
+            {
+                let mut f = pfs.open(Path::new("blk.dat"), OpenMode::Read).expect("open");
+                let mut buf = vec![0u8; stride];
+                for _pass in 0..2 {
+                    let mut off = 0u64;
+                    while off < file_size {
+                        f.pread_exact(&mut buf, off).expect("pread");
+                        off += stride as u64;
+                    }
+                }
+            }
+            let pread_s = t0.elapsed().as_secs_f64();
+            // mapped: cold pass faults pages in, warm pass hits (or
+            // re-faults when the budget is smaller than the file)
+            let cache = Arc::new(PageCache::new(page, budget));
+            let mut f = pfs.open(Path::new("blk.dat"), OpenMode::Read).expect("open");
+            let mut view = f.map(&cache, 0, file_size, MapMode::Read).expect("map");
+            let mut buf = vec![0u8; stride];
+            let t0 = Instant::now();
+            let mut off = 0u64;
+            while off < file_size {
+                let n = view.read_at(&mut buf, off).expect("read_at");
+                assert_eq!(n, stride);
+                off += stride as u64;
+            }
+            let cold_s = t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let mut off = 0u64;
+            while off < file_size {
+                view.read_at(&mut buf, off).expect("read_at");
+                off += stride as u64;
+            }
+            let warm_s = t0.elapsed().as_secs_f64();
+            let st = cache.stats();
+            assert!(
+                st.peak_resident_bytes <= cache.budget(),
+                "peak {} exceeds budget {}",
+                st.peak_resident_bytes,
+                cache.budget()
+            );
+            h.record(
+                &format!("pagecache_p{page}_b{budget}"),
+                vec![cold_s],
+                format!(
+                    "pread {pread_s:.6}s warm {warm_s:.6}s, {} faults {} hits peak {}B",
+                    st.faults, st.hits, st.peak_resident_bytes
+                ),
+            );
+            rows.push((
+                page,
+                budget,
+                pread_s,
+                cold_s,
+                warm_s,
+                st.faults,
+                st.hits,
+                st.evictions,
+                st.peak_resident_bytes,
+            ));
+        }
+    }
+    let mut json = String::from("{\n  \"target\": \"vfs/pagecache\",\n");
+    json.push_str(&format!(
+        "  \"file_bytes\": {file_size},\n  \"stripe_bytes\": {stripe},\n  \"members\": 4,\n  \"sweep\": [\n"
+    ));
+    for (i, (page, budget, pread_s, cold_s, warm_s, faults, hits, ev, peak)) in
+        rows.iter().enumerate()
+    {
+        json.push_str(&format!(
+            "    {{\"page_bytes\": {page}, \"budget_bytes\": {budget}, \
+             \"pread_s\": {pread_s:.6}, \"mapped_cold_s\": {cold_s:.6}, \
+             \"mapped_warm_s\": {warm_s:.6}, \"faults\": {faults}, \"hits\": {hits}, \
+             \"evictions\": {ev}, \"peak_resident_bytes\": {peak}}}{}\n",
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_pagecache.json", &json) {
+        Ok(()) => println!("wrote BENCH_pagecache.json ({} combos)", rows.len()),
+        Err(e) => eprintln!("bench: could not write BENCH_pagecache.json: {e}"),
+    }
+}
 
 /// Streamed-vs-wholefile sweep: the same bytes moved (a) as one
 /// whole-file `Vec` (the seed's management path) and (b) through the
@@ -143,10 +264,11 @@ fn main() {
     let work = std::env::temp_dir().join("sea_bench_vfs");
     let _ = std::fs::remove_dir_all(&work);
     if std::env::var("SEA_BENCH_SMOKE").is_ok() {
-        // CI smoke: tiny DataMover sweep only — proves the harness
-        // still builds, runs, and emits its JSON
+        // CI smoke: tiny DataMover + PageCache sweeps only — proves the
+        // harness still builds, runs, and emits its JSON files
         let mut h = Harness::new("vfs").with_reps(1, 1);
         datamover_sweep(&work, &mut h, true);
+        pagecache_sweep(&work, &mut h, true);
         let _ = h.finish();
         let _ = std::fs::remove_dir_all(&work);
         return;
@@ -440,6 +562,10 @@ fn main() {
 
     // streamed-vs-wholefile sweep (BENCH_datamover.json)
     datamover_sweep(&work, &mut h, false);
+
+    // mapped-vs-pread sweep over the rate-limited striped PFS
+    // (BENCH_pagecache.json)
+    pagecache_sweep(&work, &mut h, false);
 
     let results = h.finish();
     // derive the per-op interception overhead from the 4k pair

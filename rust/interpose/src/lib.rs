@@ -34,6 +34,14 @@
 //!
 //! Statically-linked binaries and direct syscalls bypass the shim —
 //! the same documented limitation as the paper's library.
+//!
+//! `mmap(2)` is **not** wrapped (a stub gap): a mapping made on an
+//! already-translated descriptor works, but mapped pages bypass the
+//! shim entirely, so Sea sees none of those accesses. The library-level
+//! equivalent — `VfsFile::map` windowed views over the `vfs::pages`
+//! PageCache — covers the mapped-workload scenario for in-process
+//! consumers; wiring a real `mmap` wrapper through the shim remains
+//! open (ROADMAP).
 
 use std::ffi::{CStr, CString, OsStr};
 use std::os::raw::{c_char, c_int, c_void};

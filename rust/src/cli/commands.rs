@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use crate::cli::Args;
 use crate::config;
-use crate::coordinator::{run_pipeline, ExperimentCfg, Mode, PipelineCfg};
+use crate::coordinator::{run_pipeline, ExperimentCfg, IoMode, Mode, PipelineCfg};
 use crate::coordinator::run_experiment as run_sim_experiment;
 use crate::error::{Error, Result};
 use crate::model::{lustre_bounds, sea_bounds, ModelParams};
@@ -16,8 +16,8 @@ use crate::sim::spec::ClusterSpec;
 use crate::util::bytes::fmt_bw;
 use crate::util::{fmt_bytes, MIB};
 use crate::vfs::{
-    DeviceLedger, DeviceSpec, MgmtCounters, RateLimitedFs, RealFs, SeaFs, SeaFsConfig, SeaTuning,
-    Vfs,
+    DeviceLedger, DeviceSpec, MgmtCounters, PageCache, RateLimitedFs, RealFs, SeaFs, SeaFsConfig,
+    SeaTuning, Vfs,
 };
 use crate::workload::{dataset, IncrementationSpec};
 
@@ -35,7 +35,8 @@ fn work_layout(work: &std::path::Path) -> Result<Vec<DeviceSpec>> {
 /// Mount tuning: defaults <- `[sea]` section of `--config` <- explicit
 /// flags (`--flush-workers`, `--registry-shards`,
 /// `--per-member-concurrency`, `--chunk-bytes`, `--copy-window`,
-/// `--engine`).
+/// `--page-bytes`, `--page-budget`, `--engine`, `--heat-decay`,
+/// `--heat-freq-weight`, `--promote-headroom`).
 fn tuning_from_args(args: &Args) -> Result<SeaTuning> {
     let base = match args.get("config") {
         Some(path) => config::tuning_from_doc(&config::Doc::load(std::path::Path::new(path))?)?,
@@ -54,7 +55,13 @@ fn tuning_from_args(args: &Args) -> Result<SeaTuning> {
             .usize_or("per-member-concurrency", base.per_member_concurrency)?,
         chunk_bytes: args.bytes_or("chunk-bytes", base.chunk_bytes as u64)? as usize,
         copy_window: args.usize_or("copy-window", base.copy_window)?,
+        page_bytes: args.bytes_or("page-bytes", base.page_bytes as u64)? as usize,
+        page_budget: args.bytes_or("page-budget", base.page_budget)?,
         engine,
+        heat_decay: args.f64_or("heat-decay", base.heat_decay)?,
+        heat_freq_weight: args.f64_or("heat-freq-weight", base.heat_freq_weight)?,
+        promote_headroom_bytes: args
+            .bytes_or("promote-headroom", base.promote_headroom_bytes)?,
     })
 }
 
@@ -73,6 +80,19 @@ fn workload_from(args: &Args) -> Result<IncrementationSpec> {
     w.compute_per_iter = args.f64_or("compute", 0.0)?;
     w.read_back = !args.has("no-read-back");
     Ok(w)
+}
+
+/// One `sea run` report line for a mapped-mode run's page-cache gauges
+/// (shared by the direct and sea branches so they can never diverge).
+fn print_pagecache(s: &crate::vfs::PageCacheStats) {
+    println!(
+        "pagecache  : {} faults, {} hits, {} evictions, {} written back, peak resident {}",
+        s.faults,
+        s.hits,
+        s.evictions,
+        fmt_bytes(s.writeback_bytes),
+        fmt_bytes(s.peak_resident_bytes),
+    );
 }
 
 fn mode_from(args: &Args) -> Result<Mode> {
@@ -314,11 +334,14 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
             "sea run [--artifacts artifacts/] [--work /tmp/sea_run] [--blocks N]\n\
              \x20       [--iterations N] [--workers N] [--mode sea|direct|both]\n\
              \x20       [--pfs-read-mibs N] [--pfs-write-mibs N] [--flush-all]\n\
+             \x20       [--io-mode streamed|mmap]  # stride I/O flavour\n\
              \x20       [--config cfg.toml]  # [sea] tuning section\n\
              \x20       [--flush-workers N] [--registry-shards N]\n\
              \x20       [--per-member-concurrency N]  # override the config\n\
              \x20       [--chunk-bytes 1MiB] [--copy-window N]  # DataMover streaming\n\
-             \x20       [--engine paper|temperature]  # placement engine"
+             \x20       [--page-bytes 64KiB] [--page-budget 64MiB]  # mmap PageCache\n\
+             \x20       [--engine paper|temperature]  # placement engine\n\
+             \x20       [--heat-decay X] [--heat-freq-weight X] [--promote-headroom S]"
         );
         return Ok(0);
     }
@@ -331,6 +354,10 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
     let pfs_w = args.f64_or("pfs-write-mibs", 120.0)? * MIB as f64;
     let mode = args.str_or("mode", "both");
     let flush_all = args.has("flush-all");
+    let io_tok = args.str_or("io-mode", "streamed");
+    let io_mode = IoMode::parse(&io_tok).ok_or_else(|| {
+        Error::InvalidArg(format!("--io-mode {io_tok:?}: expected streamed | mmap"))
+    })?;
     let tuning = tuning_from_args(args)?;
 
     let engine = Arc::new(Engine::load(&artifacts)?);
@@ -349,6 +376,11 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
             pfs_r,
             pfs_w,
         ));
+        // plain backends carry no cache: build one from the same page
+        // knobs so a --mode both comparison runs both flavours with an
+        // identically-shaped cache
+        let direct_cache = (io_mode == IoMode::Mmap)
+            .then(|| Arc::new(PageCache::new(tuning.page_bytes, tuning.page_budget)));
         let r = run_pipeline(&PipelineCfg {
             engine: engine.clone(),
             vfs: pfs,
@@ -360,14 +392,20 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
             verify: true,
             cleanup_intermediate: true,
             max_open_outputs: 0,
+            io_mode,
+            page_cache: direct_cache.clone(),
         })?;
         println!(
-            "direct-pfs : {:.2}s  ({} read, {} written, {} pjrt calls)",
+            "direct-pfs : {:.2}s  ({} read, {} written, {} pjrt calls, {} io)",
             r.makespan,
             fmt_bytes(r.bytes_read),
             fmt_bytes(r.bytes_written),
-            r.pjrt_calls
+            r.pjrt_calls,
+            io_mode.name()
         );
+        if let Some(cache) = direct_cache {
+            print_pagecache(&cache.stats());
+        }
         results.push(("direct".into(), r.makespan));
     }
     if mode == "sea" || mode == "both" {
@@ -381,7 +419,7 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
         } else {
             RuleSet::in_memory(IncrementationSpec::final_glob())
         };
-        let sea = SeaFs::mount(SeaFsConfig {
+        let sea = Arc::new(SeaFs::mount(SeaFsConfig {
             mountpoint: PathBuf::from("/sea"),
             devices: work_layout(&work)?,
             pfs,
@@ -390,11 +428,12 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
             rules,
             seed: 11,
             tuning,
-        })?;
+        })?);
         let engine_name = sea.engine_name();
+        let vfs: Arc<dyn Vfs> = sea.clone();
         let r = run_pipeline(&PipelineCfg {
             engine: engine.clone(),
-            vfs: Arc::new(sea),
+            vfs,
             dataset: ds.clone(),
             mount_prefix: PathBuf::from("/sea"),
             iterations,
@@ -403,15 +442,21 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
             verify: true,
             cleanup_intermediate: true,
             max_open_outputs: 0,
+            io_mode,
+            page_cache: None, // the mount's own cache: gauges on `sea stat`
         })?;
         println!(
-            "sea        : {:.2}s  ({} read, {} written, {} pjrt calls, {} engine)",
+            "sea        : {:.2}s  ({} read, {} written, {} pjrt calls, {} engine, {} io)",
             r.makespan,
             fmt_bytes(r.bytes_read),
             fmt_bytes(r.bytes_written),
             r.pjrt_calls,
-            engine_name
+            engine_name,
+            io_mode.name()
         );
+        if io_mode == IoMode::Mmap {
+            print_pagecache(&sea.page_cache().stats());
+        }
         results.push(("sea".into(), r.makespan));
         let _ = std::fs::remove_dir_all("/dev/shm/sea_run_tier0");
     }
@@ -455,6 +500,16 @@ fn format_stat(engine: &str, ledger: &[DeviceLedger], c: MgmtCounters) -> String
         fmt_bytes(c.prefetch_bytes),
         fmt_bytes(c.peak_copy_buffer_bytes),
     ));
+    out.push_str(&format!(
+        "pages  : {} faults, {} hits, {} evictions, {} written back \
+         (resident {}, peak {})\n",
+        c.page_faults,
+        c.page_hits,
+        c.page_evictions,
+        fmt_bytes(c.page_writeback_bytes),
+        fmt_bytes(c.page_resident_bytes),
+        fmt_bytes(c.page_peak_resident_bytes),
+    ));
     out
 }
 
@@ -475,7 +530,9 @@ pub fn run_stat(args: &mut Args) -> Result<i32> {
              \x20        [--config cfg.toml] [--engine paper|temperature]\n\
              \x20        [--flush-workers N] [--registry-shards N]\n\
              \x20        [--per-member-concurrency N]\n\
-             \x20        [--chunk-bytes 1MiB] [--copy-window N]"
+             \x20        [--chunk-bytes 1MiB] [--copy-window N]\n\
+             \x20        [--page-bytes 64KiB] [--page-budget 64MiB]\n\
+             \x20        [--heat-decay X] [--heat-freq-weight X] [--promote-headroom S]"
         );
         return Ok(0);
     }
@@ -539,6 +596,12 @@ mod tests {
             promote_bytes: MIB,
             prefetch_bytes: 2 * MIB,
             peak_copy_buffer_bytes: 2 * MIB,
+            page_faults: 7,
+            page_hits: 8,
+            page_evictions: 9,
+            page_writeback_bytes: MIB,
+            page_resident_bytes: MIB / 2,
+            page_peak_resident_bytes: MIB,
         };
         let s = format_stat("temperature", &ledger, counters);
         assert!(s.contains("engine : temperature"), "{s}");
@@ -550,10 +613,11 @@ mod tests {
         assert!(s.contains("6 prefetched"), "{s}");
         assert!(s.contains("moved  : "), "{s}");
         assert!(s.contains("peak copy buffers"), "{s}");
+        assert!(s.contains("pages  : 7 faults, 8 hits, 9 evictions"), "{s}");
         assert_eq!(
             s.lines().count(),
-            1 + 1 + 2 + 1 + 1,
-            "header + table + mgmt + moved"
+            1 + 1 + 2 + 1 + 1 + 1,
+            "header + table + mgmt + moved + pages"
         );
     }
 
@@ -582,5 +646,38 @@ mod tests {
         let t = tuning_from_args(&Args::parse(&[])).unwrap();
         assert_eq!(t.chunk_bytes, SeaTuning::default().chunk_bytes);
         assert_eq!(t.copy_window, SeaTuning::default().copy_window);
+    }
+
+    #[test]
+    fn tuning_from_args_parses_pagecache_and_heat_flags() {
+        let argv: Vec<String> = [
+            "--page-bytes", "16KiB", "--page-budget", "8MiB",
+            "--heat-decay", "0.9", "--heat-freq-weight", "2",
+            "--promote-headroom", "1MiB",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let t = tuning_from_args(&Args::parse(&argv)).unwrap();
+        assert_eq!(t.page_bytes, 16 * 1024);
+        assert_eq!(t.page_budget, 8 * MIB);
+        assert_eq!(t.heat_decay, 0.9);
+        assert_eq!(t.heat_freq_weight, 2.0);
+        assert_eq!(t.promote_headroom_bytes, MIB);
+        // defaults survive when the flags are absent
+        let t = tuning_from_args(&Args::parse(&[])).unwrap();
+        assert_eq!(t.page_bytes, SeaTuning::default().page_bytes);
+        assert_eq!(t.page_budget, SeaTuning::default().page_budget);
+    }
+
+    #[test]
+    fn io_mode_tokens_parse() {
+        assert_eq!(IoMode::parse("streamed"), Some(IoMode::Streamed));
+        assert_eq!(IoMode::parse("mmap"), Some(IoMode::Mmap));
+        assert_eq!(IoMode::parse("mapped"), Some(IoMode::Mmap));
+        assert_eq!(IoMode::parse("bogus"), None);
+        for m in [IoMode::Streamed, IoMode::Mmap] {
+            assert_eq!(IoMode::parse(m.name()), Some(m));
+        }
     }
 }

@@ -4,10 +4,14 @@
 //! constants (`FLUSH_WORKERS`, `REGISTRY_SHARDS`) plus the striped-PFS
 //! scheduling cap, the streamed-transfer shape (`chunk_bytes` — number
 //! or a `"4MiB"` size string — and `copy_window`, bounding every
-//! management copy at `chunk_bytes × copy_window` memory), and the
-//! placement-engine selector (`engine = "paper" | "temperature"`);
-//! missing keys keep the defaults, so an empty file IS the default
-//! mount. An *unrecognized* engine token is a hard error, matching the
+//! management copy at `chunk_bytes × copy_window` memory), the
+//! page-cache shape for mapped I/O (`page_bytes` / `page_budget` —
+//! mapped views never hold more than `page_budget` resident bytes),
+//! the placement-engine selector (`engine = "paper" | "temperature"`),
+//! and the temperature-engine heat knobs (`heat_decay`,
+//! `heat_freq_weight`, `promote_headroom_bytes`); missing keys keep
+//! the defaults, so an empty file IS the default mount. An
+//! *unrecognized* engine token is a hard error, matching the
 //! `--engine` CLI flag — silently benchmarking the wrong policy is
 //! worse than failing.
 
@@ -34,7 +38,15 @@ pub fn tuning_from_doc(d: &Doc) -> Result<SeaTuning> {
         ),
         chunk_bytes: d.bytes_or("sea.chunk_bytes", dflt.chunk_bytes as u64) as usize,
         copy_window: d.usize_or("sea.copy_window", dflt.copy_window),
+        page_bytes: d.bytes_or("sea.page_bytes", dflt.page_bytes as u64) as usize,
+        page_budget: d.bytes_or("sea.page_budget", dflt.page_budget),
         engine,
+        heat_decay: d.f64_or("sea.heat_decay", dflt.heat_decay),
+        heat_freq_weight: d.f64_or("sea.heat_freq_weight", dflt.heat_freq_weight),
+        promote_headroom_bytes: d.bytes_or(
+            "sea.promote_headroom_bytes",
+            dflt.promote_headroom_bytes,
+        ),
     })
 }
 
@@ -52,7 +64,9 @@ mod tests {
     fn overrides_apply() {
         let d = Doc::parse(
             "[sea]\nflush_workers = 8\nregistry_shards = 32\nper_member_concurrency = 1\n\
-             chunk_bytes = \"4MiB\"\ncopy_window = 3\nengine = \"temperature\"\n",
+             chunk_bytes = \"4MiB\"\ncopy_window = 3\nengine = \"temperature\"\n\
+             page_bytes = \"16KiB\"\npage_budget = \"8MiB\"\n\
+             heat_decay = 0.9\nheat_freq_weight = 2.5\npromote_headroom_bytes = \"1MiB\"\n",
         )
         .unwrap();
         let t = tuning_from_doc(&d).unwrap();
@@ -62,6 +76,11 @@ mod tests {
         assert_eq!(t.chunk_bytes, 4 * 1024 * 1024, "size strings parse");
         assert_eq!(t.copy_window, 3);
         assert_eq!(t.engine, EngineKind::Temperature);
+        assert_eq!(t.page_bytes, 16 * 1024, "page-cache knobs parse");
+        assert_eq!(t.page_budget, 8 * 1024 * 1024);
+        assert_eq!(t.heat_decay, 0.9, "temperature knobs parse");
+        assert_eq!(t.heat_freq_weight, 2.5);
+        assert_eq!(t.promote_headroom_bytes, 1024 * 1024);
     }
 
     #[test]

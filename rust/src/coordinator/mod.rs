@@ -15,4 +15,4 @@ pub mod real_driver;
 pub mod sim_driver;
 
 pub use sim_driver::{run_experiment, ExperimentCfg, Mode, SimReport};
-pub use real_driver::{run_pipeline, PipelineCfg, PipelineReport};
+pub use real_driver::{run_pipeline, IoMode, PipelineCfg, PipelineReport};

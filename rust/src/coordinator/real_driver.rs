@@ -16,16 +16,49 @@
 //! queueing unbounded work — the same discipline the paper's Sea daemon
 //! applies to flushing.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::runtime::Engine;
+use crate::vfs::pages::{self, MapMode, PageCache};
 use crate::vfs::{OpenMode, Vfs, VfsFile};
 use crate::workload::dataset::{bytes_to_f32_into, f32_to_bytes_into, Dataset};
 use crate::workload::{stream_block, IncrementationSpec, StridePlan};
+
+/// How workers move block bytes (`sea run --io-mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IoMode {
+    /// One `pread` + one `pwrite` per stride through bounded buffers.
+    #[default]
+    Streamed,
+    /// mmap-style: strides read/write [`crate::vfs::MappedView`]s over
+    /// the block files — page faults via the VFS [`PageCache`], dirty
+    /// pages written back on `msync`. Emulates nibabel/numpy-style
+    /// consumers that map their block files.
+    Mmap,
+}
+
+impl IoMode {
+    /// Parse a CLI token.
+    pub fn parse(s: &str) -> Option<IoMode> {
+        match s {
+            "streamed" | "stream" => Some(IoMode::Streamed),
+            "mmap" | "mapped" => Some(IoMode::Mmap),
+            _ => None,
+        }
+    }
+
+    /// Canonical token.
+    pub fn name(self) -> &'static str {
+        match self {
+            IoMode::Streamed => "streamed",
+            IoMode::Mmap => "mmap",
+        }
+    }
+}
 
 /// Configuration of a real pipeline run.
 pub struct PipelineCfg {
@@ -57,6 +90,16 @@ pub struct PipelineCfg {
     /// No-read-back fd budget: max simultaneously-open output handles
     /// per worker (`0` = default 16).
     pub max_open_outputs: usize,
+    /// Stride I/O flavour: `pread`/`pwrite` streaming, or mapped views
+    /// over the [`PageCache`] (requires [`PipelineCfg::read_back`]).
+    pub io_mode: IoMode,
+    /// Explicit cache for mapped mode. `None` falls back to the
+    /// mount's own cache ([`Vfs::page_cache`] — a Sea mount's gauges
+    /// then land on `sea stat`) and finally the process-wide default.
+    /// Callers comparing backends (e.g. `sea run --mode both`) should
+    /// pass an equally-tuned cache for mounts that carry none, or the
+    /// page knobs silently differ between the runs.
+    pub page_cache: Option<Arc<PageCache>>,
 }
 
 /// Default for [`PipelineCfg::max_open_outputs`].
@@ -93,6 +136,31 @@ pub fn run_pipeline(cfg: &PipelineCfg) -> Result<PipelineReport> {
     if cfg.iterations == 0 {
         return Err(Error::InvalidArg("iterations must be >= 1".into()));
     }
+    if cfg.io_mode == IoMode::Mmap && !cfg.read_back {
+        return Err(Error::InvalidArg(
+            "--io-mode mmap models a mapped consumer re-reading each iteration; \
+             combine it with read-back (drop --no-read-back)"
+                .into(),
+        ));
+    }
+    // mapped mode faults through a PageCache: the caller's explicit
+    // one, else the mount's own (so its gauges land on `sea stat`),
+    // else the process-wide default
+    let page_cache: Option<Arc<PageCache>> = match cfg.io_mode {
+        IoMode::Mmap => Some(
+            cfg.page_cache
+                .clone()
+                .or_else(|| cfg.vfs.page_cache())
+                .unwrap_or_else(|| pages::global().clone()),
+        ),
+        IoMode::Streamed => None,
+    };
+    // dirty pages pin the budget until written back and W workers each
+    // hold a write view, so cap each view's dirty set at a 1/(4W) slice
+    // — the shared budget stays the binding memory bound
+    let wb_batch = page_cache.as_ref().map_or(0, |c| {
+        (c.budget() / (4 * cfg.workers.max(1) as u64)).max(c.page_bytes() as u64)
+    });
     let elems = cfg.dataset.elems;
     let stride_elems = cfg.engine.chunk_elems();
     if stride_elems == 0 || elems % stride_elems != 0 {
@@ -138,6 +206,7 @@ pub fn run_pipeline(cfg: &PipelineCfg) -> Result<PipelineReport> {
             let verify = cfg.verify;
             let read_back = cfg.read_back;
             let cleanup = cfg.cleanup_intermediate;
+            let page_cache = page_cache.clone();
             let fd_budget = if cfg.max_open_outputs == 0 {
                 DEFAULT_MAX_OPEN_OUTPUTS
             } else {
@@ -155,8 +224,8 @@ pub fn run_pipeline(cfg: &PipelineCfg) -> Result<PipelineReport> {
                     let tb = Instant::now();
                     let res = process_block(
                         b, engine.as_ref(), vfs.as_ref(), dataset, spec, prefix,
-                        read_back, verify, cleanup, fd_budget,
-                        &bytes_read, &bytes_written,
+                        read_back, verify, cleanup, fd_budget, page_cache.as_ref(),
+                        wb_batch, &bytes_read, &bytes_written,
                     );
                     block_times.lock().expect("times poisoned")[b] =
                         tb.elapsed().as_secs_f64();
@@ -207,7 +276,8 @@ pub fn run_pipeline(cfg: &PipelineCfg) -> Result<PipelineReport> {
 }
 
 /// Process one block, streaming strides through fixed-size buffers: the
-/// peak buffer is one engine chunk, never the whole block.
+/// peak buffer is one engine chunk, never the whole block (and, in
+/// mapped mode, never more than the page-cache budget).
 #[allow(clippy::too_many_arguments)]
 fn process_block(
     b: usize,
@@ -220,6 +290,8 @@ fn process_block(
     verify: bool,
     cleanup: bool,
     fd_budget: usize,
+    page_cache: Option<&Arc<PageCache>>,
+    wb_batch: u64,
     bytes_read: &AtomicU64,
     bytes_written: &AtomicU64,
 ) -> Result<()> {
@@ -234,7 +306,8 @@ fn process_block(
 
     if read_back {
         // task-per-iteration: each iteration re-reads its predecessor's
-        // file, one stride at a time
+        // file, one stride at a time (or one page fault at a time in
+        // mapped mode)
         for i in 1..=spec.iterations {
             let src = if i == 1 {
                 input_rel.clone()
@@ -242,7 +315,7 @@ fn process_block(
                 derived_path(prefix, spec, b, i - 1)
             };
             let dst = derived_path(prefix, spec, b, i);
-            let moved = stream_block(vfs, &src, &dst, &plan, |_k, chunk| {
+            let step = |_k: usize, chunk: &mut [f32]| {
                 let stats = engine.step(chunk)?;
                 if verify {
                     stats
@@ -250,7 +323,11 @@ fn process_block(
                         .map_err(|e| Error::Integrity(format!("block {b} iter {i}: {e}")))?;
                 }
                 Ok(())
-            })?;
+            };
+            let moved = match page_cache {
+                Some(cache) => mmap_block_step(vfs, cache, &src, &dst, &plan, wb_batch, step)?,
+                None => stream_block(vfs, &src, &dst, &plan, step)?,
+            };
             bytes_read.fetch_add(moved, Ordering::Relaxed);
             bytes_written.fetch_add(moved, Ordering::Relaxed);
             if cleanup && i > 1 {
@@ -354,6 +431,64 @@ fn stream_iteration_groups(
     Ok(())
 }
 
+/// One mapped iteration: stride bytes come off a read view of `src`
+/// and land in a write view of `dst` (sized up front — a mapping
+/// cannot grow a file), with dirty pages written back by `msync` at
+/// the end. Faults are page-granular through the shared cache, so
+/// peak I/O memory is bounded by the cache budget however large the
+/// block is. `step(k, chunk)` mutates stride `k` in place.
+fn mmap_block_step(
+    vfs: &dyn Vfs,
+    cache: &Arc<PageCache>,
+    src: &Path,
+    dst: &Path,
+    plan: &StridePlan,
+    wb_batch: u64,
+    mut step: impl FnMut(usize, &mut [f32]) -> Result<()>,
+) -> Result<u64> {
+    let mut src_f = vfs.open(src, OpenMode::Read)?;
+    let mut dst_f = vfs.open(dst, OpenMode::Write)?;
+    dst_f.set_len(plan.block_bytes())?;
+    let mut raw = vec![0u8; plan.stride_bytes()];
+    let mut elems = vec![0f32; plan.stride_elems];
+    let mut src_view = src_f.map(cache, 0, plan.block_bytes(), MapMode::Read)?;
+    let mut dst_view = dst_f.map(cache, 0, plan.block_bytes(), MapMode::Write)?;
+    for k in 0..plan.strides() {
+        let off = plan.offset(k);
+        let n = src_view.read_at(&mut raw, off)?;
+        if n != raw.len() {
+            return Err(Error::io(
+                src,
+                std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    format!("mapped stride {k}: {n}/{} bytes", raw.len()),
+                ),
+            ));
+        }
+        bytes_to_f32_into(&raw, &mut elems)?;
+        step(k, &mut elems)?;
+        f32_to_bytes_into(&elems, &mut raw);
+        // sequential scan: release the consumed source pages eagerly
+        src_view.advise_dontneed(off, raw.len() as u64);
+        // dirty pages pin the shared budget (another view's faults
+        // cannot reclaim them), so write the stride in wb_batch-sized
+        // slices and msync between slices: no view ever pins much more
+        // than its 1/(4·workers) slice of the cache
+        let batch = wb_batch.max(1) as usize;
+        let mut done = 0usize;
+        while done < raw.len() {
+            let take = (raw.len() - done).min(batch);
+            dst_view.write_at(&raw[done..done + take], off + done as u64)?;
+            if dst_view.dirty_bytes() >= batch as u64 {
+                dst_view.msync()?;
+            }
+            done += take;
+        }
+    }
+    dst_view.msync()?;
+    Ok(plan.block_bytes())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -422,6 +557,60 @@ mod tests {
     }
 
     use std::path::Path;
+
+    #[test]
+    fn mmap_block_step_matches_stream_block() {
+        // ISSUE 5: the mapped iteration path produces byte-identical
+        // outputs to the streamed one, under a budget far below the
+        // block size
+        let dir = std::env::temp_dir()
+            .join(format!("sea_mmapstep_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let vfs = RealFs::new(&dir).unwrap();
+        let elems = 4096usize; // 16 KiB block
+        let plan = StridePlan::new(elems, 256).unwrap();
+        let input: Vec<f32> = (0..elems).map(|i| (i % 89) as f32).collect();
+        let mut raw = vec![0u8; elems * 4];
+        to_bytes(&input, &mut raw);
+        vfs.write(Path::new("in.dat"), &raw).unwrap();
+
+        let bump = |_k: usize, chunk: &mut [f32]| {
+            for v in chunk.iter_mut() {
+                *v += 1.0;
+            }
+            Ok(())
+        };
+        let streamed =
+            crate::workload::stream_block(&vfs, Path::new("in.dat"), Path::new("out_s.dat"), &plan, bump)
+                .unwrap();
+        // a 2-page budget forces fault/evict churn across the block
+        let cache = Arc::new(PageCache::new(1024, 2 * 1024));
+        let mapped = mmap_block_step(
+            &vfs,
+            &cache,
+            Path::new("in.dat"),
+            Path::new("out_m.dat"),
+            &plan,
+            1024, // one-page write-back batches under the 2-page budget
+            bump,
+        )
+        .unwrap();
+        assert_eq!(streamed, mapped);
+        assert_eq!(
+            vfs.read(Path::new("out_s.dat")).unwrap(),
+            vfs.read(Path::new("out_m.dat")).unwrap(),
+            "mapped and streamed iterations produce identical bytes"
+        );
+        let st = cache.stats();
+        assert!(st.faults > 0, "mapped path faulted pages: {st:?}");
+        assert!(
+            st.peak_resident_bytes <= cache.budget(),
+            "peak {} exceeds budget {}",
+            st.peak_resident_bytes,
+            cache.budget()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 
     #[test]
     fn no_read_back_streaming_respects_fd_budget() {

@@ -71,6 +71,35 @@ impl EngineKind {
     }
 }
 
+/// Tuning of the [`TemperatureEngine`]'s heat model (`[sea]`
+/// `heat_decay` / `heat_freq_weight` / `promote_headroom_bytes`, and
+/// the matching `sea run` flags — the PR 4 ROADMAP item).
+///
+/// A file's heat is an exponentially-decayed touch count: touching at
+/// logical tick `T` sets `score = score · decay^(T - last_tick) +
+/// freq_weight`, and comparisons decay both sides to the present tick.
+/// With equal touch counts this reduces to pure recency (the historic
+/// behaviour); `freq_weight` raises how much a *history* of touches
+/// outweighs one recent touch, and `heat_decay → 0` forgets history
+/// faster.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TempTuning {
+    /// Per-tick decay of accumulated heat, in `[0, 1]`.
+    pub heat_decay: f64,
+    /// Heat added per touch (frequency weighting).
+    pub freq_weight: f64,
+    /// Extra free bytes a tier must have beyond the candidate's size
+    /// before a promotion is emitted — headroom against promote/spill
+    /// thrash on a nearly-full device.
+    pub promote_headroom: u64,
+}
+
+impl Default for TempTuning {
+    fn default() -> TempTuning {
+        TempTuning { heat_decay: 0.5, freq_weight: 1.0, promote_headroom: 0 }
+    }
+}
+
 /// What the engine sees of the device hierarchy when deciding.
 pub struct EngineCtx<'a> {
     /// Device tiers.
@@ -240,16 +269,20 @@ pub trait PlacementEngine: Send + Sync {
     fn name(&self) -> &'static str;
 }
 
-/// Build a shipped engine by kind.
+/// Build a shipped engine by kind. `temp` only affects the
+/// temperature engine; the paper engine has no tunables beyond `p·F`.
 pub fn build_engine(
     kind: EngineKind,
     select: SelectCfg,
     rules: RuleSet,
     seed: u64,
+    temp: TempTuning,
 ) -> Arc<dyn PlacementEngine> {
     match kind {
         EngineKind::Paper => Arc::new(PaperEngine::new(select, rules, seed)),
-        EngineKind::Temperature => Arc::new(TemperatureEngine::new(select, rules, seed)),
+        EngineKind::Temperature => {
+            Arc::new(TemperatureEngine::with_tuning(select, rules, seed, temp))
+        }
     }
 }
 
@@ -380,37 +413,62 @@ const HEAT_SHARDS: usize = 16;
 /// the map without bound.
 const MAX_HEAT_ENTRIES: usize = 65_536 / HEAT_SHARDS;
 
+/// One file's heat: an exponentially-decayed touch count plus the tick
+/// of the latest touch (see [`TempTuning`]).
+#[derive(Debug, Clone, Copy)]
+struct Heat {
+    /// Accumulated, decayed touch weight as of `tick`.
+    score: f64,
+    /// Logical tick of the most recent touch.
+    tick: u64,
+}
+
+impl Heat {
+    /// The score decayed forward to tick `now`.
+    fn decayed(&self, now: u64, decay: f64) -> f64 {
+        self.score * decay.powf(now.saturating_sub(self.tick) as f64)
+    }
+}
+
 /// One shard of the temperature state: the heat and spill candidates
 /// of every rel that hashes here. A rel's heat and its `spilled` entry
 /// always share a shard, so candidate scans need one lock at a time.
 #[derive(Default)]
 struct HeatShard {
-    /// rel → logical tick of its most recent touch (recency heat;
-    /// absent = never touched = coldest).
-    heat: HashMap<String, u64>,
+    /// rel → heat (absent = never touched = coldest).
+    heat: HashMap<String, Heat>,
     /// Spilled / PFS-resident files eligible for promotion.
     spilled: HashMap<String, Spilled>,
 }
 
 impl HeatShard {
-    fn touch(&mut self, rel: &str, tick: u64) {
-        self.heat.insert(rel.to_string(), tick);
+    fn touch(&mut self, rel: &str, tick: u64, tuning: &TempTuning) {
+        let h = self
+            .heat
+            .entry(rel.to_string())
+            .or_insert(Heat { score: 0.0, tick });
+        h.score = h.decayed(tick, tuning.heat_decay) + tuning.freq_weight;
+        h.tick = tick;
         if self.heat.len() > MAX_HEAT_ENTRIES {
             // amortized O(1) per touch: each prune halves the shard.
             // Spilled promotion candidates keep their heat so their
             // ordering stays meaningful; pruned files simply read as
-            // cold (tick 0) again.
-            let mut ticks: Vec<u64> = self.heat.values().copied().collect();
+            // cold (score 0, tick 0) again.
+            let mut ticks: Vec<u64> = self.heat.values().map(|h| h.tick).collect();
             ticks.sort_unstable();
             let cutoff = ticks[ticks.len() / 2];
             let spilled = &self.spilled;
             self.heat
-                .retain(|rel, t| *t > cutoff || spilled.contains_key(rel));
+                .retain(|rel, h| h.tick > cutoff || spilled.contains_key(rel));
         }
     }
 
     fn heat_tick(&self, rel: &str) -> u64 {
-        self.heat.get(rel).copied().unwrap_or(0)
+        self.heat.get(rel).map(|h| h.tick).unwrap_or(0)
+    }
+
+    fn heat_score(&self, rel: &str, now: u64, decay: f64) -> f64 {
+        self.heat.get(rel).map(|h| h.decayed(now, decay)).unwrap_or(0.0)
     }
 }
 
@@ -427,17 +485,35 @@ const MAX_PROMOTES_PER_FREE: usize = 8;
 pub struct TemperatureEngine {
     select: SelectCfg,
     rules: RuleSet,
+    tuning: TempTuning,
     rng: Mutex<Rng>,
     clock: AtomicU64,
     shards: Vec<Mutex<HeatShard>>,
 }
 
 impl TemperatureEngine {
-    /// Engine over the declared `p·F` config and rule lists.
+    /// Engine over the declared `p·F` config and rule lists, with the
+    /// default heat tuning.
     pub fn new(select: SelectCfg, rules: RuleSet, seed: u64) -> TemperatureEngine {
+        TemperatureEngine::with_tuning(select, rules, seed, TempTuning::default())
+    }
+
+    /// Engine with explicit [`TempTuning`] (decay / frequency
+    /// weighting / promotion headroom).
+    pub fn with_tuning(
+        select: SelectCfg,
+        rules: RuleSet,
+        seed: u64,
+        tuning: TempTuning,
+    ) -> TemperatureEngine {
         TemperatureEngine {
             select,
             rules,
+            tuning: TempTuning {
+                heat_decay: tuning.heat_decay.clamp(0.0, 1.0),
+                freq_weight: tuning.freq_weight.max(0.0),
+                promote_headroom: tuning.promote_headroom,
+            },
             rng: Mutex::new(Rng::new(seed)),
             clock: AtomicU64::new(0),
             shards: (0..HEAT_SHARDS).map(|_| Mutex::new(HeatShard::default())).collect(),
@@ -455,11 +531,23 @@ impl TemperatureEngine {
     }
 
     fn touch(&self, rel: &str, tick: u64) {
-        self.shard(rel).lock().expect("temp state poisoned").touch(rel, tick);
+        self.shard(rel)
+            .lock()
+            .expect("temp state poisoned")
+            .touch(rel, tick, &self.tuning);
     }
 
-    fn heat_tick(&self, rel: &str) -> u64 {
+    /// Logical tick of `rel`'s most recent touch (0 = never touched).
+    /// Diagnostics / tests; victim ordering uses the decayed score.
+    pub fn heat_tick(&self, rel: &str) -> u64 {
         self.shard(rel).lock().expect("temp state poisoned").heat_tick(rel)
+    }
+
+    fn heat_score(&self, rel: &str, now: u64) -> f64 {
+        self.shard(rel)
+            .lock()
+            .expect("temp state poisoned")
+            .heat_score(rel, now, self.tuning.heat_decay)
     }
 
     fn spill_insert(&self, rel: &str, s: Spilled) {
@@ -470,11 +558,13 @@ impl TemperatureEngine {
             .insert(rel.to_string(), s);
     }
 
-    /// Fastest tier with a device that can hold `size` bytes right now.
+    /// Fastest tier with a device that can hold `size` bytes — plus the
+    /// configured promotion headroom — right now.
     fn tier_with_room(&self, ctx: &EngineCtx<'_>, size: u64) -> Option<u8> {
+        let need = size.saturating_add(self.tuning.promote_headroom);
         for tier in ctx.hierarchy.tiers() {
             for d in ctx.hierarchy.tier_devices(tier) {
-                if ctx.accountant.free(d) >= size {
+                if ctx.accountant.free(d) >= need {
                     return Some(tier);
                 }
             }
@@ -488,7 +578,7 @@ impl PlacementEngine for TemperatureEngine {
         let tick = self.tick();
         {
             let mut st = self.shard(p.rel).lock().expect("temp state poisoned");
-            st.touch(p.rel, tick);
+            st.touch(p.rel, tick, &self.tuning);
             // a (re)placement supersedes any pending promotion
             st.spilled.remove(p.rel);
         }
@@ -502,7 +592,7 @@ impl PlacementEngine for TemperatureEngine {
     fn on_access(&self, rel: &str, access: Access) {
         let tick = self.tick();
         let mut st = self.shard(rel).lock().expect("temp state poisoned");
-        st.touch(rel, tick);
+        st.touch(rel, tick, &self.tuning);
         if access == Access::Write {
             // a write-open (possibly through a raw PFS handle the VFS
             // does not track) supersedes any pending promotion:
@@ -515,7 +605,7 @@ impl PlacementEngine for TemperatureEngine {
         let tick = self.tick();
         {
             let mut st = self.shard(c.rel).lock().expect("temp state poisoned");
-            st.touch(c.rel, tick);
+            st.touch(c.rel, tick, &self.tuning);
             if c.dev.is_none() {
                 // spilled mid-stream: now a promotion candidate with a
                 // known final size (but only once re-accessed)
@@ -543,8 +633,8 @@ impl PlacementEngine for TemperatureEngine {
         // the destination's own state died with the replaced file
         st.heat.remove(to);
         st.spilled.remove(to);
-        if let Some(tick) = heat {
-            st.heat.insert(to.to_string(), tick);
+        if let Some(h) = heat {
+            st.heat.insert(to.to_string(), h);
         }
         if let Some(s) = spilled {
             st.spilled.insert(to.to_string(), s);
@@ -555,19 +645,19 @@ impl PlacementEngine for TemperatureEngine {
         let tick = self.tick();
         // the active writer is hot by definition
         self.touch(p.rel, tick);
-        let mut cands: Vec<(u64, std::cmp::Reverse<u64>, &Resident)> = p
+        let mut cands: Vec<(f64, &Resident)> = p
             .residents
             .iter()
             .filter(|r| r.dev == p.dev && r.rel != p.rel)
-            .map(|r| (self.heat_tick(&r.rel), std::cmp::Reverse(r.size), r))
+            .map(|r| (self.heat_score(&r.rel, tick), r))
             .collect();
-        // coldest first; ties broken towards the larger file (more
-        // space reclaimed per migration)
-        cands.sort_by_key(|(heat, rev_size, _)| (*heat, *rev_size));
+        // coldest first (decayed heat score); ties broken towards the
+        // larger file (more space reclaimed per migration)
+        cands.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| b.1.size.cmp(&a.1.size)));
         let free = ctx.accountant.free(p.dev);
         let mut freed = 0u64;
         let mut out = Vec::new();
-        for (_, _, r) in &cands {
+        for (_, r) in &cands {
             if free + freed >= p.need {
                 break;
             }
@@ -595,23 +685,23 @@ impl PlacementEngine for TemperatureEngine {
 
     fn on_freed(&self, ctx: EngineCtx<'_>, _dev: DeviceRef, _size: u64) -> Vec<Decision> {
         // candidates: spilled files with a known size that have been
-        // accessed since their spill (hot again), hottest first. A
-        // rel's heat and spill entry share a shard, so this scan takes
-        // one shard lock at a time.
-        let mut cands: Vec<(String, u64, u64)> = Vec::new();
+        // accessed since their spill (hot again), hottest first by
+        // decayed score. A rel's heat and spill entry share a shard, so
+        // this scan takes one shard lock at a time.
+        let now = self.clock.load(Ordering::Relaxed);
+        let mut cands: Vec<(String, u64, f64)> = Vec::new();
         for shard in &self.shards {
             let st = shard.lock().expect("temp state poisoned");
             if st.spilled.is_empty() {
                 continue;
             }
             for (rel, s) in st.spilled.iter() {
-                let heat = st.heat_tick(rel);
-                if s.size > 0 && heat > s.tick {
-                    cands.push((rel.clone(), s.size, heat));
+                if s.size > 0 && st.heat_tick(rel) > s.tick {
+                    cands.push((rel.clone(), s.size, st.heat_score(rel, now, self.tuning.heat_decay)));
                 }
             }
         }
-        cands.sort_by_key(|(_, _, tick)| std::cmp::Reverse(*tick));
+        cands.sort_by(|a, b| b.2.total_cmp(&a.2));
         let mut out = Vec::new();
         for (rel, size, _) in cands {
             if out.len() >= MAX_PROMOTES_PER_FREE {
@@ -790,6 +880,97 @@ mod tests {
         );
         assert!(!eng.approve_promote("old.dat"));
         assert!(eng.approve_promote("new.dat"));
+    }
+
+    #[test]
+    fn frequency_weighting_lets_touch_history_beat_one_recent_touch() {
+        // ISSUE 5 satellite (open PR 4 ROADMAP item): with a slow decay
+        // a file touched many times stays hotter than a file touched
+        // once more recently — pure recency would pick the opposite
+        // victim
+        let (h, acc) = hierarchy();
+        let eng = TemperatureEngine::with_tuning(
+            select(),
+            RuleSet::default(),
+            9,
+            TempTuning { heat_decay: 0.99, freq_weight: 1.0, promote_headroom: 0 },
+        );
+        for _ in 0..5 {
+            eng.on_access("often.dat", Access::Read);
+        }
+        eng.on_access("once.dat", Access::Read); // most recent single touch
+        let residents = vec![
+            Resident { rel: "often.dat".into(), dev: 0, size: MIB },
+            Resident { rel: "once.dat".into(), dev: 0, size: MIB },
+        ];
+        assert!(acc.try_debit(0, 4 * MIB, 0));
+        let ds = eng.on_pressure(
+            EngineCtx { hierarchy: &h, accountant: &acc },
+            PressureCtx { rel: "hot.dat", dev: 0, need: MIB, residents: &residents },
+        );
+        assert_eq!(
+            ds,
+            vec![Decision::SpillVictim { rel: "once.dat".into() }],
+            "the frequently-touched file outranks the single recent touch"
+        );
+    }
+
+    #[test]
+    fn fast_decay_reduces_to_recency_ordering() {
+        // heat_decay near 0 forgets history: the most recently touched
+        // file is always the hottest, whatever the touch counts
+        let (h, acc) = hierarchy();
+        let eng = TemperatureEngine::with_tuning(
+            select(),
+            RuleSet::default(),
+            9,
+            TempTuning { heat_decay: 0.01, freq_weight: 1.0, promote_headroom: 0 },
+        );
+        for _ in 0..10 {
+            eng.on_access("often.dat", Access::Read);
+        }
+        eng.on_access("recent.dat", Access::Read);
+        // burn a few ticks so both decay from their last touch
+        for _ in 0..3 {
+            eng.on_access("other.dat", Access::Read);
+        }
+        let residents = vec![
+            Resident { rel: "often.dat".into(), dev: 0, size: MIB },
+            Resident { rel: "recent.dat".into(), dev: 0, size: MIB },
+        ];
+        assert!(acc.try_debit(0, 4 * MIB, 0));
+        let ds = eng.on_pressure(
+            EngineCtx { hierarchy: &h, accountant: &acc },
+            PressureCtx { rel: "hot.dat", dev: 0, need: MIB, residents: &residents },
+        );
+        assert_eq!(
+            ds,
+            vec![Decision::SpillVictim { rel: "often.dat".into() }],
+            "with fast decay only recency matters"
+        );
+    }
+
+    #[test]
+    fn promote_headroom_gates_promotions() {
+        // a candidate that fits exactly must NOT promote when headroom
+        // is configured: the tier needs size + headroom free
+        let (h, acc) = hierarchy();
+        let eng = TemperatureEngine::with_tuning(
+            select(),
+            RuleSet::default(),
+            9,
+            TempTuning { heat_decay: 0.5, freq_weight: 1.0, promote_headroom: 200 * MIB },
+        );
+        eng.on_close(CloseCtx { rel: "s.dat", dev: None, size: MIB });
+        eng.on_access("s.dat", Access::Read);
+        let ds = eng.on_freed(EngineCtx { hierarchy: &h, accountant: &acc }, 0, MIB);
+        assert!(ds.is_empty(), "no tier has size + headroom free: {ds:?}");
+        // the same state without headroom promotes
+        let eng = TemperatureEngine::new(select(), RuleSet::default(), 9);
+        eng.on_close(CloseCtx { rel: "s.dat", dev: None, size: MIB });
+        eng.on_access("s.dat", Access::Read);
+        let ds = eng.on_freed(EngineCtx { hierarchy: &h, accountant: &acc }, 0, MIB);
+        assert_eq!(ds, vec![Decision::Promote { rel: "s.dat".into(), tier: 0 }]);
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub mod table;
 
 pub use engine::{
     build_engine, Access, CloseCtx, Decision, EngineCtx, EngineKind, PaperEngine, PfsOnlyEngine,
-    PlaceCtx, Placement, PlacementEngine, PressureCtx, Resident, TemperatureEngine,
+    PlaceCtx, Placement, PlacementEngine, PressureCtx, Resident, TempTuning, TemperatureEngine,
 };
 pub use glob::glob_match;
 pub use policy::{LustrePolicy, SeaPolicy};

@@ -44,24 +44,39 @@
 //! Decorators compose: a `SeaFs` mounted over
 //! `RateLimitedFs<StripedFs>` emulates a loaded, OST-striped Lustre.
 //!
+//! On top of the handle API sits the **[`pages`] layer**: a
+//! process/mount-wide [`pages::PageCache`] (global byte budget, sharded
+//! LRU) serving mmap-style [`pages::MappedView`] windows over any
+//! handle — copy-on-read page fault-in via `pread`, dirty-range
+//! tracking, write-back through `pwrite` on `msync` / eviction / view
+//! drop. Every backend gets [`VfsFile::map`] for free; `SeaFs` hooks in
+//! deliberately (faults heat the placement engine, views follow
+//! mid-stream spills via [`VfsFile::map_sync`] generations, dirty
+//! write-back of spilled files lands on the PFS replica).
+//!
 //! A separate `cdylib` (`sea-interpose`) provides the literal
 //! `LD_PRELOAD` mechanism for unmodified binaries; it reuses the same
 //! translation logic (offset ops like `pread`/`pwrite` ride on
-//! descriptors whose path was translated at `open`).
+//! descriptors whose path was translated at `open`). Its `mmap(2)`
+//! wrapper is still a stub — mapped interception works at the library
+//! level only.
 
 pub mod mover;
+pub mod pages;
 pub mod rate;
 pub mod real;
 pub mod sea;
 pub mod striped;
 
 pub use mover::{copy_range, DataMover, MovePath, MoverCfg, MoverMetrics};
+pub use pages::{MapMode, MappedView, PageCache, PageCacheStats};
 pub use rate::RateLimitedFs;
 pub use real::RealFs;
 pub use sea::{DeviceLedger, DeviceSpec, MgmtCounters, SeaFs, SeaFsConfig, SeaTuning};
 pub use striped::StripedFs;
 
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
 
@@ -164,6 +179,59 @@ pub trait VfsFile: Send {
         }
         Ok(())
     }
+
+    /// Current **map generation** of this handle, refreshing the fault
+    /// source first if it moved. [`MappedView`]s compare it on every
+    /// access: a change means cached pages may be stale (the view
+    /// writes its dirty ranges back through the refreshed handle, then
+    /// re-faults clean pages lazily). Plain backends never relocate, so
+    /// the default is a constant; `SeaFs` writer handles report the
+    /// registry entry's generation and reopen on the PFS after a
+    /// mid-stream spill.
+    fn map_sync(&mut self) -> Result<u64> {
+        Ok(0)
+    }
+
+    /// Observe a page fault about to `pread` `[off, off + len)`.
+    /// Default: no-op. `SeaFs` feeds faults into
+    /// [`crate::placement::PlacementEngine::on_access`] so mapped reads
+    /// heat files exactly like handle reads.
+    fn note_map_fault(&mut self, off: u64, len: u64) {
+        let _ = (off, len);
+    }
+
+    /// Map `[off, off + len)` of this handle as an mmap-style
+    /// [`MappedView`] through `cache` (see [`pages`]). Works over any
+    /// backend — faults ride on [`VfsFile::pread`], write-back on
+    /// [`VfsFile::pwrite`]. (`Box<dyn VfsFile>` callers get the
+    /// equivalent inherent method on `dyn VfsFile`.)
+    fn map<'f>(
+        &'f mut self,
+        cache: &Arc<PageCache>,
+        off: u64,
+        len: u64,
+        mode: MapMode,
+    ) -> Result<MappedView<'f>>
+    where
+        Self: Sized,
+    {
+        MappedView::new(cache.clone(), self, off, len, mode)
+    }
+}
+
+impl dyn VfsFile {
+    /// [`VfsFile::map`] for trait objects: every `Vfs::open` handle is
+    /// a `Box<dyn VfsFile>`, and `Sized`-bounded trait defaults are not
+    /// in the vtable.
+    pub fn map<'f>(
+        &'f mut self,
+        cache: &Arc<PageCache>,
+        off: u64,
+        len: u64,
+        mode: MapMode,
+    ) -> Result<MappedView<'f>> {
+        MappedView::new(cache.clone(), self, off, len, mode)
+    }
 }
 
 /// Handle-based POSIX-ish file-system operations. Whole-file `read` /
@@ -215,6 +283,15 @@ pub trait Vfs: Send + Sync {
     /// chunks of one large file fan out across members. Decorators
     /// should delegate so the hint survives wrapping.
     fn stripe_bytes(&self) -> Option<u64> {
+        None
+    }
+
+    /// The backend's own [`PageCache`], when it carries one (`SeaFs`
+    /// builds a per-mount cache from `SeaTuning::{page_bytes,
+    /// page_budget}` so mapped-I/O gauges land on its counters).
+    /// Decorators should delegate; callers without a backend cache fall
+    /// back to [`pages::global`] or their own.
+    fn page_cache(&self) -> Option<Arc<PageCache>> {
         None
     }
 

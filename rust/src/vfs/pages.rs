@@ -1,0 +1,907 @@
+//! The **PageCache**: mmap-style windowed views over any [`VfsFile`].
+//!
+//! The paper's target applications (nibabel/numpy-style array libraries
+//! over BigBrain blocks) routinely `mmap` their block files and touch
+//! small windows of them. The VFS stack only speaks `pread`/`pwrite`
+//! handles, so a mapped workload would otherwise have to materialize
+//! whole files — defeating the bounded-memory work of the streaming
+//! DataMover. This module puts the missing layer back in user space:
+//!
+//! * [`PageCache`] — a process-wide (or per-mount) cache of fixed-size
+//!   pages with a **global byte budget**. Pages live in [`PAGE_SHARDS`]
+//!   independently-locked shards (like the Sea registry and the
+//!   temperature heat map) so concurrent views never serialise on one
+//!   mutex; eviction is approximate-LRU (coldest clean page, sweeping
+//!   shards from the faulting one).
+//! * [`MappedView`] — a window `[off, off + len)` over a [`VfsFile`]
+//!   handle. Reads **fault pages in copy-on-read** via `pread` (never
+//!   more than one page per miss); writes land in cache pages, are
+//!   tracked as **dirty byte ranges**, and are written back through the
+//!   handle's `pwrite` on [`MappedView::msync`], on view drop, and when
+//!   the budget forces the view to reclaim its own dirty pages.
+//!
+//! Peak resident memory is bounded by the cache budget however large
+//! the mapped files are: before a fault allocates a page, clean pages
+//! are evicted until the new page fits (dirty pages are pinned — they
+//! are only reclaimed through write-back, never dropped).
+//!
+//! Backends hook in through two [`VfsFile`] methods with no-op
+//! defaults:
+//!
+//! * [`VfsFile::map_sync`] returns the handle's **map generation**; a
+//!   change invalidates the view's cached pages (they transparently
+//!   re-fault) after its dirty pages were written back through the
+//!   refreshed handle. Sea *writer* handles (`Write` / `ReadWrite` /
+//!   `Append` opens) implement it against the registry entry's
+//!   generation, so a mid-stream spill relocates a live view onto the
+//!   PFS replica instead of losing dirty bytes to an orphaned device
+//!   inode.
+//! * [`VfsFile::note_map_fault`] observes every fault; Sea writer
+//!   handles feed it into
+//!   [`crate::placement::PlacementEngine::on_access`], so mapped reads
+//!   heat files for the `TemperatureEngine` exactly like handle reads.
+//!
+//! A view over a *read-opened* Sea handle uses the defaults: it pins
+//! the inode it was opened on, exactly like a real `mmap` keeps
+//! showing the mapped inode after a rename or replacement — correct
+//! for immutable inputs, and identical to what a plain `pread` reader
+//! holding that handle would see. Only writer-handle views carry the
+//! relocation-following guarantee (that is where bytes could otherwise
+//! be lost, not merely stale).
+//!
+//! Because the machinery runs on the plain handle API, `RealFs`,
+//! `RateLimitedFs` and `StripedFs` (both layouts) get mapping for free;
+//! a rate-limited backend charges each *fault* for one page, not the
+//! whole file.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::error::{Error, Result};
+use crate::vfs::VfsFile;
+
+/// Default page size: matches the workload drivers' 64 KiB strides.
+pub const DEFAULT_PAGE_BYTES: usize = 64 * 1024;
+
+/// Default global budget: small next to one BigBrain block, large
+/// enough that a strided pass keeps its working set resident.
+pub const DEFAULT_PAGE_BUDGET: u64 = 64 * 1024 * 1024;
+
+/// Page-map shard count (like the registry and the heat map).
+pub const PAGE_SHARDS: usize = 16;
+
+/// How a [`MappedView`] may be used.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapMode {
+    /// Faults only; writes through the view are refused.
+    Read,
+    /// Copy-on-read pages accept writes; dirty ranges are written back
+    /// on `msync`, view drop, and budget pressure.
+    Write,
+}
+
+/// Cumulative cache activity (merged into
+/// [`crate::vfs::MgmtCounters`] for Sea mounts, printed by `sea stat`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PageCacheStats {
+    /// Pages faulted in via `pread`.
+    pub faults: u64,
+    /// Page lookups served from cache.
+    pub hits: u64,
+    /// Clean pages dropped to make room.
+    pub evictions: u64,
+    /// Dirty bytes written back through handles.
+    pub writeback_bytes: u64,
+    /// Page bytes currently resident.
+    pub resident_bytes: u64,
+    /// High-water mark of resident page bytes — the bounded-memory
+    /// gauge (never exceeds the budget while no dirty pages pin it).
+    pub peak_resident_bytes: u64,
+}
+
+/// `(mapping id, page index)`: mapping ids are unique per view, so no
+/// two views ever contend on one page entry.
+type PageKey = (u64, u64);
+
+struct Page {
+    /// Exactly `page_bytes` long; the tail past end-of-file is zeros.
+    data: Vec<u8>,
+    /// Map generation stamped at fault; a view whose generation moved
+    /// on treats the page as a miss.
+    gen: u64,
+    /// Current position in the shard's LRU index.
+    tick: u64,
+    /// Dirty byte range within the page (`start..end`), if any. Dirty
+    /// pages are pinned: eviction skips them until written back.
+    dirty: Option<(usize, usize)>,
+}
+
+#[derive(Default)]
+struct Shard {
+    pages: HashMap<PageKey, Page>,
+    /// LRU index: tick → key (ticks are unique, from the cache clock).
+    lru: BTreeMap<u64, PageKey>,
+}
+
+/// A sharded, budgeted page store shared by any number of views.
+pub struct PageCache {
+    page_bytes: usize,
+    budget: u64,
+    shards: Vec<Mutex<Shard>>,
+    /// Serialises budget admission (evict-until-it-fits + reserve):
+    /// without it two concurrent faults could both pass the budget
+    /// check and jointly overshoot. Held only while evicting/counting,
+    /// never during fault I/O.
+    admission: Mutex<()>,
+    clock: AtomicU64,
+    ids: AtomicU64,
+    resident: AtomicU64,
+    peak_resident: AtomicU64,
+    faults: AtomicU64,
+    hits: AtomicU64,
+    evictions: AtomicU64,
+    writeback_bytes: AtomicU64,
+}
+
+impl PageCache {
+    /// A cache of `page_bytes` pages under a `budget`-byte global
+    /// ceiling. The budget is clamped to at least one page, or no
+    /// fault could ever succeed.
+    pub fn new(page_bytes: usize, budget: u64) -> PageCache {
+        let page_bytes = page_bytes.max(1);
+        PageCache {
+            page_bytes,
+            budget: budget.max(page_bytes as u64),
+            shards: (0..PAGE_SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            admission: Mutex::new(()),
+            clock: AtomicU64::new(0),
+            ids: AtomicU64::new(0),
+            resident: AtomicU64::new(0),
+            peak_resident: AtomicU64::new(0),
+            faults: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            writeback_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// The configured page size.
+    pub fn page_bytes(&self) -> usize {
+        self.page_bytes
+    }
+
+    /// The configured global byte budget.
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Snapshot of the cache gauges.
+    pub fn stats(&self) -> PageCacheStats {
+        PageCacheStats {
+            faults: self.faults.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            writeback_bytes: self.writeback_bytes.load(Ordering::Relaxed),
+            resident_bytes: self.resident.load(Ordering::Relaxed),
+            peak_resident_bytes: self.peak_resident.load(Ordering::Relaxed),
+        }
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    fn shard_of(&self, key: &PageKey) -> usize {
+        // mapping ids are sequential and page indices contiguous; mix
+        // them so one view's pages spread over the shards
+        let h = key
+            .0
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(key.1.wrapping_mul(0xff51_afd7_ed55_8ccd));
+        (h >> 32) as usize % self.shards.len()
+    }
+
+    fn grow_resident(&self) {
+        let now = self
+            .resident
+            .fetch_add(self.page_bytes as u64, Ordering::Relaxed)
+            + self.page_bytes as u64;
+        self.peak_resident.fetch_max(now, Ordering::Relaxed);
+    }
+
+    fn shrink_resident(&self, pages: u64) {
+        self.resident
+            .fetch_sub(pages * self.page_bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Drop one clean page, sweeping shards from `start`. `false` when
+    /// every resident page is dirty-pinned.
+    fn evict_one(&self, start: usize) -> bool {
+        let n = self.shards.len();
+        for k in 0..n {
+            let mut guard = self.shards[(start + k) % n].lock().expect("page shard poisoned");
+            let sh = &mut *guard;
+            let victim = sh
+                .lru
+                .iter()
+                .find(|&(_, key)| sh.pages.get(key).is_some_and(|p| p.dirty.is_none()))
+                .map(|(t, key)| (*t, *key));
+            if let Some((t, key)) = victim {
+                sh.lru.remove(&t);
+                sh.pages.remove(&key);
+                drop(guard);
+                self.shrink_resident(1);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Forget every page of mapping `id` (view drop). Dirty ranges are
+    /// assumed already written back by the caller.
+    fn purge(&self, id: u64) {
+        let mut dropped = 0u64;
+        for shard in &self.shards {
+            let mut guard = shard.lock().expect("page shard poisoned");
+            let sh = &mut *guard;
+            let ticks: Vec<u64> = sh
+                .pages
+                .iter()
+                .filter(|(key, _)| key.0 == id)
+                .map(|(_, p)| p.tick)
+                .collect();
+            if ticks.is_empty() {
+                continue;
+            }
+            dropped += ticks.len() as u64;
+            for t in &ticks {
+                if let Some(key) = sh.lru.remove(t) {
+                    sh.pages.remove(&key);
+                }
+            }
+        }
+        if dropped > 0 {
+            self.shrink_resident(dropped);
+        }
+    }
+}
+
+/// The process-wide default cache ([`DEFAULT_PAGE_BYTES`] /
+/// [`DEFAULT_PAGE_BUDGET`]); Sea mounts carry their own, tuned via
+/// `SeaTuning::{page_bytes, page_budget}`.
+pub fn global() -> &'static Arc<PageCache> {
+    static GLOBAL: OnceLock<Arc<PageCache>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Arc::new(PageCache::new(DEFAULT_PAGE_BYTES, DEFAULT_PAGE_BUDGET)))
+}
+
+/// What a page access does with the page's bytes.
+enum PageOp<'a> {
+    /// Copy `out.len()` bytes starting at `intra` out of the page.
+    Read { intra: usize, out: &'a mut [u8] },
+    /// Copy `data` into the page at `intra` and extend its dirty range.
+    Write { intra: usize, data: &'a [u8] },
+}
+
+/// An mmap-style window over a [`VfsFile`] handle.
+///
+/// The view borrows the handle for its lifetime, so the handle cannot
+/// be repositioned or closed while pages reference it — the library
+/// analogue of an mmap keeping its backing file pinned.
+pub struct MappedView<'f> {
+    cache: Arc<PageCache>,
+    file: &'f mut (dyn VfsFile + 'f),
+    id: u64,
+    base: u64,
+    len: u64,
+    mode: MapMode,
+    /// Map generation from [`VfsFile::map_sync`]; a change flushes
+    /// dirty pages through the refreshed handle and lazily re-faults
+    /// the clean ones.
+    gen: u64,
+    /// Page indices this view has dirtied (for msync / drop / budget
+    /// self-reclaim without scanning the shards).
+    dirty: BTreeSet<u64>,
+}
+
+impl<'f> MappedView<'f> {
+    /// Map `[off, off + len)` of `file` through `cache`.
+    pub fn new(
+        cache: Arc<PageCache>,
+        file: &'f mut (dyn VfsFile + 'f),
+        off: u64,
+        len: u64,
+        mode: MapMode,
+    ) -> Result<MappedView<'f>> {
+        if off.checked_add(len).is_none() {
+            return Err(Error::InvalidArg(format!(
+                "mapped window [{off}, {off} + {len}) overflows the file offset space"
+            )));
+        }
+        let gen = file.map_sync()?;
+        let id = cache.ids.fetch_add(1, Ordering::Relaxed) + 1;
+        Ok(MappedView {
+            cache,
+            file,
+            id,
+            base: off,
+            len,
+            mode,
+            gen,
+            dirty: BTreeSet::new(),
+        })
+    }
+
+    /// The view's length in bytes.
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    /// True when the view covers zero bytes.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The view's mode.
+    pub fn mode(&self) -> MapMode {
+        self.mode
+    }
+
+    /// Bytes currently pinned by this view's dirty pages (an upper
+    /// bound: whole pages). Dirty pages of one view cannot be reclaimed
+    /// by another view's faults, so a writer sharing a tight budget
+    /// should `msync` once this approaches its share.
+    pub fn dirty_bytes(&self) -> u64 {
+        self.dirty.len() as u64 * self.cache.page_bytes as u64
+    }
+
+    /// Read up to `out.len()` bytes at view-relative `off`. Like a real
+    /// mapping, bytes past end-of-file within the window read as zeros;
+    /// the count is only short at the end of the *view*.
+    pub fn read_at(&mut self, out: &mut [u8], off: u64) -> Result<usize> {
+        self.sync_generation()?;
+        if off >= self.len || out.is_empty() {
+            return Ok(0);
+        }
+        let n = (out.len() as u64).min(self.len - off) as usize;
+        let pb = self.cache.page_bytes;
+        let mut done = 0usize;
+        while done < n {
+            let fo = self.base + off + done as u64;
+            let idx = fo / pb as u64;
+            let intra = (fo % pb as u64) as usize;
+            let span = (pb - intra).min(n - done);
+            let (a, b) = (done, done + span);
+            self.page_op(idx, PageOp::Read { intra, out: &mut out[a..b] })?;
+            done += span;
+        }
+        Ok(n)
+    }
+
+    /// Write `data` at view-relative `off` into cache pages (no file
+    /// I/O until write-back). The range must lie within the view — a
+    /// mapping cannot be grown by storing past its end.
+    pub fn write_at(&mut self, data: &[u8], off: u64) -> Result<usize> {
+        if self.mode != MapMode::Write {
+            return Err(Error::InvalidArg("write through a MapMode::Read view".into()));
+        }
+        // checked: a wrapping `off + len` must not sneak past the bound
+        // in release builds and land bytes at a wrapped page index
+        let end = off.checked_add(data.len() as u64);
+        if end.is_none() || end.unwrap_or(u64::MAX) > self.len {
+            return Err(Error::InvalidArg(format!(
+                "mapped write at {off} (+{}) exceeds the {}-byte view",
+                data.len(),
+                self.len
+            )));
+        }
+        self.sync_generation()?;
+        if data.is_empty() {
+            return Ok(0);
+        }
+        let pb = self.cache.page_bytes;
+        let mut done = 0usize;
+        while done < data.len() {
+            let fo = self.base + off + done as u64;
+            let idx = fo / pb as u64;
+            let intra = (fo % pb as u64) as usize;
+            let span = (pb - intra).min(data.len() - done);
+            self.page_op(idx, PageOp::Write { intra, data: &data[done..done + span] })?;
+            self.dirty.insert(idx);
+            done += span;
+        }
+        Ok(data.len())
+    }
+
+    /// Write every dirty page back through the handle (the mapping
+    /// analogue of `msync(2)`). Pages stay resident and become clean —
+    /// and therefore evictable.
+    pub fn msync(&mut self) -> Result<()> {
+        self.sync_generation()?;
+        self.flush_dirty()
+    }
+
+    /// `madvise(MADV_DONTNEED)` analogue: release the *clean* pages
+    /// wholly contained in view-relative `[off, off + len)` right now,
+    /// instead of waiting for LRU pressure — a sequential scan frees
+    /// its wake as it goes. Like the kernel's, partial boundary pages
+    /// are left alone (a scan advancing in sub-page strides would
+    /// otherwise re-fault its boundary page once per stride), and
+    /// dirty pages are kept (their bytes only exist here until
+    /// write-back); a released page simply re-faults if touched again.
+    pub fn advise_dontneed(&mut self, off: u64, len: u64) {
+        if len == 0 || off >= self.len {
+            return;
+        }
+        let pb = self.cache.page_bytes as u64;
+        let lo = self.base + off;
+        let hi = self.base + off + len.min(self.len - off);
+        // whole pages only: first fully-covered page .. last one
+        let first = (lo + pb - 1) / pb;
+        let last_excl = hi / pb;
+        if first >= last_excl {
+            return;
+        }
+        let last = last_excl - 1;
+        let mut dropped = 0u64;
+        for idx in first..=last {
+            let key = (self.id, idx);
+            let mut guard = self.cache.shards[self.cache.shard_of(&key)]
+                .lock()
+                .expect("page shard poisoned");
+            let sh = &mut *guard;
+            if let Some(p) = sh.pages.get(&key) {
+                if p.dirty.is_none() {
+                    let t = p.tick;
+                    sh.pages.remove(&key);
+                    sh.lru.remove(&t);
+                    dropped += 1;
+                }
+            }
+        }
+        if dropped > 0 {
+            self.cache.shrink_resident(dropped);
+        }
+    }
+
+    /// Refresh the handle's map generation; on a change (e.g. a Sea
+    /// mid-stream spill relocated the file), dirty pages are written
+    /// back through the refreshed handle and clean pages are left to
+    /// re-fault lazily via the per-page generation stamp.
+    fn sync_generation(&mut self) -> Result<()> {
+        let gen = self.file.map_sync()?;
+        if gen != self.gen {
+            self.flush_dirty()?;
+            self.gen = gen;
+        }
+        Ok(())
+    }
+
+    /// Write back this view's dirty ranges via `pwrite`.
+    fn flush_dirty(&mut self) -> Result<()> {
+        if self.dirty.is_empty() {
+            return Ok(());
+        }
+        let pb = self.cache.page_bytes as u64;
+        let idxs: Vec<u64> = self.dirty.iter().copied().collect();
+        for idx in idxs {
+            let key = (self.id, idx);
+            let shard = &self.cache.shards[self.cache.shard_of(&key)];
+            // copy the dirty range out under the shard lock — the page
+            // stays dirty (and therefore eviction-pinned) until the
+            // pwrite succeeds, so a failed or interrupted write-back
+            // can never lose the only copy of the bytes. Only this
+            // view mutates its pages, so clearing the flag afterwards
+            // cannot race another writer.
+            let pending = {
+                let mut sh = shard.lock().expect("page shard poisoned");
+                sh.pages
+                    .get_mut(&key)
+                    .and_then(|p| p.dirty.map(|(a, b)| (a, p.data[a..b].to_vec())))
+            };
+            if let Some((a, seg)) = pending {
+                let file_off = idx * pb + a as u64;
+                // on error the page is still dirty and `idx` is still
+                // in the view's dirty set: a later msync (or the drop
+                // flush) retries the write-back
+                self.file.pwrite_all(&seg, file_off)?;
+                self.cache
+                    .writeback_bytes
+                    .fetch_add(seg.len() as u64, Ordering::Relaxed);
+                let mut sh = shard.lock().expect("page shard poisoned");
+                if let Some(p) = sh.pages.get_mut(&key) {
+                    p.dirty = None;
+                }
+            }
+            self.dirty.remove(&idx);
+        }
+        Ok(())
+    }
+
+    /// Serve one page access: cache hit, or fault the page in (making
+    /// room under the budget first).
+    fn page_op(&mut self, idx: u64, op: PageOp<'_>) -> Result<()> {
+        let pb = self.cache.page_bytes;
+        let key = (self.id, idx);
+        let shard_idx = self.cache.shard_of(&key);
+        // fast path: the page is resident and current
+        {
+            let mut guard = self.cache.shards[shard_idx].lock().expect("page shard poisoned");
+            let sh = &mut *guard;
+            let mut stale = false;
+            if let Some(p) = sh.pages.get_mut(&key) {
+                if p.gen == self.gen {
+                    let t = self.cache.tick();
+                    sh.lru.remove(&p.tick);
+                    p.tick = t;
+                    sh.lru.insert(t, key);
+                    apply_op(p, op);
+                    self.cache.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
+                stale = true;
+            }
+            if stale {
+                // superseded by a generation change; sync_generation
+                // already flushed dirty ranges, so dropping is safe
+                if let Some(p) = sh.pages.remove(&key) {
+                    sh.lru.remove(&p.tick);
+                }
+                drop(guard);
+                self.cache.shrink_resident(1);
+            }
+        }
+        // miss: make room under the budget and *reserve* the incoming
+        // page's bytes before faulting. Admission is serialised so two
+        // concurrent faults can't both pass the check and jointly
+        // overshoot — the counter is bumped under the same lock that
+        // evicted down to `budget - page`, so `resident` (and the peak
+        // gauge) only ever exceed the budget on the documented
+        // dirty-pinned path. Write-back of this view's own dirty pages
+        // happens with the lock *released* (backend pwrite can be slow
+        // — rate-limited, or spill-retrying under Sea), then admission
+        // is retried.
+        let cache = self.cache.clone();
+        let mut flushed_own = false;
+        // bounded patience for transient pressure: a concurrent fault
+        // holds its reservation while its pread runs, so "nothing
+        // evictable" often resolves itself in microseconds once that
+        // page lands (and becomes evictable). Only a budget pinned by
+        // *other views' dirty pages* outlasts this, and that is the one
+        // documented overshoot case.
+        let mut patience = 200u32; // ≈10 ms of 50 µs waits
+        loop {
+            let reserved = {
+                let _admission = cache.admission.lock().expect("page admission poisoned");
+                while cache.resident.load(Ordering::Relaxed) + pb as u64 > cache.budget {
+                    if !cache.evict_one(shard_idx) {
+                        break; // nothing clean left to evict
+                    }
+                }
+                if cache.resident.load(Ordering::Relaxed) + pb as u64 <= cache.budget
+                    || (flushed_own || self.dirty.is_empty()) && patience == 0
+                {
+                    cache.grow_resident();
+                    true
+                } else {
+                    false
+                }
+            };
+            if reserved {
+                break;
+            }
+            if !flushed_own && !self.dirty.is_empty() {
+                // every evictable page is gone and our own dirty pages
+                // pin the budget: write them back (outside the
+                // admission lock) so they become evictable, then retry
+                self.flush_dirty()?;
+                flushed_own = true;
+                continue;
+            }
+            // nothing left on our side: wait briefly for in-flight
+            // faults to land (their pages then evict), overshoot only
+            // when the pressure persists
+            patience = patience.saturating_sub(1);
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        }
+        // fault outside the admission lock; a failed pread returns the
+        // reservation so the budget never leaks
+        let mut data = vec![0u8; pb];
+        // a write covering the whole page needs no read-in
+        let whole_page_write = matches!(&op, PageOp::Write { intra: 0, data: d } if d.len() == pb);
+        if !whole_page_write {
+            let file_off = idx * pb as u64;
+            self.file.note_map_fault(file_off, pb as u64);
+            let mut filled = 0usize;
+            while filled < pb {
+                let n = match self.file.pread(&mut data[filled..], file_off + filled as u64) {
+                    Ok(n) => n,
+                    Err(e) => {
+                        cache.shrink_resident(1);
+                        return Err(e);
+                    }
+                };
+                if n == 0 {
+                    break; // end of file: the tail reads as zeros
+                }
+                filled += n;
+            }
+        }
+        cache.faults.fetch_add(1, Ordering::Relaxed);
+        let mut page = Page { data, gen: self.gen, tick: 0, dirty: None };
+        apply_op(&mut page, op);
+        let t = cache.tick();
+        page.tick = t;
+        {
+            let mut sh = cache.shards[shard_idx].lock().expect("page shard poisoned");
+            sh.lru.insert(t, key);
+            sh.pages.insert(key, page);
+        }
+        Ok(())
+    }
+}
+
+fn merge_range(existing: Option<(usize, usize)>, a: usize, b: usize) -> (usize, usize) {
+    match existing {
+        Some((x, y)) => (x.min(a), y.max(b)),
+        None => (a, b),
+    }
+}
+
+fn apply_op(p: &mut Page, op: PageOp<'_>) {
+    match op {
+        PageOp::Read { intra, out } => {
+            let n = out.len();
+            out.copy_from_slice(&p.data[intra..intra + n]);
+        }
+        PageOp::Write { intra, data } => {
+            p.data[intra..intra + data.len()].copy_from_slice(data);
+            p.dirty = Some(merge_range(p.dirty, intra, intra + data.len()));
+        }
+    }
+}
+
+impl Drop for MappedView<'_> {
+    fn drop(&mut self) {
+        // best-effort msync: refresh the handle (a relocated Sea file
+        // redirects the write-back), then flush. Errors are swallowed —
+        // drop has nowhere to report them; call `msync` to observe.
+        if !self.dirty.is_empty() {
+            if let Ok(gen) = self.file.map_sync() {
+                self.gen = gen;
+            }
+            let _ = self.flush_dirty();
+        }
+        self.cache.purge(self.id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vfs::real::RealFs;
+    use crate::vfs::testutil::scratch;
+    use crate::vfs::{OpenMode, Vfs};
+    use std::path::Path;
+
+    const PAGE: usize = 4096;
+
+    fn cache(pages: u64) -> Arc<PageCache> {
+        Arc::new(PageCache::new(PAGE, pages * PAGE as u64))
+    }
+
+    fn payload(len: usize, salt: usize) -> Vec<u8> {
+        (0..len).map(|k| (k.wrapping_mul(31) ^ salt) as u8).collect()
+    }
+
+    /// ISSUE 5 satellite: mapped reads are byte-identical to `pread`
+    /// across page-boundary offsets and lengths.
+    #[test]
+    fn mapped_reads_match_pread_across_page_boundaries() {
+        let dir = scratch("pages_prop");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let size = 3 * PAGE + 7;
+        let data = payload(size, 5);
+        fs_.write(Path::new("p.dat"), &data).unwrap();
+        let offsets = [0u64, PAGE as u64 - 1, PAGE as u64, PAGE as u64 + 1, (3 * PAGE + 6) as u64];
+        let lens = [1usize, 17, PAGE - 1, PAGE, PAGE + 1, 2 * PAGE + 3];
+        let cache = cache(64);
+        for &off in &offsets {
+            for &len in &lens {
+                // reference: plain pread through a fresh handle
+                let mut reference = vec![0u8; len];
+                let want = {
+                    let mut f = fs_.open(Path::new("p.dat"), OpenMode::Read).unwrap();
+                    f.pread(&mut reference, off).unwrap_or(0);
+                    (size as u64).saturating_sub(off).min(len as u64) as usize
+                };
+                let mut f = fs_.open(Path::new("p.dat"), OpenMode::Read).unwrap();
+                let mut view = f.map(&cache, 0, size as u64, MapMode::Read).unwrap();
+                let mut got = vec![0u8; len];
+                let n = view.read_at(&mut got, off).unwrap();
+                assert_eq!(n, want, "count at off {off} len {len}");
+                assert_eq!(&got[..n], &reference[..n], "bytes at off {off} len {len}");
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// ISSUE 5 acceptance: mapping a 64-page file under a 4-page budget
+    /// never materializes the file — peak residency stays within the
+    /// budget while every byte reads back identical to `pread`.
+    #[test]
+    fn budget_bounds_resident_pages_without_changing_bytes() {
+        let dir = scratch("pages_budget");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let size = 64 * PAGE;
+        let data = payload(size, 11);
+        fs_.write(Path::new("big.dat"), &data).unwrap();
+        let cache = cache(4); // budget = 4 pages << file size
+        let mut f = fs_.open(Path::new("big.dat"), OpenMode::Read).unwrap();
+        let mut view = f.map(&cache, 0, size as u64, MapMode::Read).unwrap();
+        // a strided sweep plus a re-read of the start (forces misses)
+        let mut buf = vec![0u8; PAGE / 2];
+        for pass in 0..2 {
+            for k in 0..(2 * size / buf.len()) {
+                let off = ((k * buf.len() / 2) % (size - buf.len())) as u64;
+                let n = view.read_at(&mut buf, off).unwrap();
+                assert_eq!(n, buf.len());
+                assert_eq!(
+                    &buf[..],
+                    &data[off as usize..off as usize + buf.len()],
+                    "pass {pass} read {k} at {off}"
+                );
+            }
+        }
+        let st = cache.stats();
+        assert!(st.faults > 64, "budget forced re-faults: {st:?}");
+        assert!(st.evictions > 0, "pages were evicted: {st:?}");
+        assert!(
+            st.peak_resident_bytes <= cache.budget(),
+            "peak {} exceeds budget {}",
+            st.peak_resident_bytes,
+            cache.budget()
+        );
+        drop(view);
+        assert_eq!(cache.stats().resident_bytes, 0, "view drop purges its pages");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mapped_writes_land_on_msync_and_drop() {
+        let dir = scratch("pages_write");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let size = 2 * PAGE + 100;
+        fs_.write(Path::new("w.dat"), &vec![0u8; size]).unwrap();
+        let cache = cache(8);
+        {
+            let mut f = fs_.open(Path::new("w.dat"), OpenMode::ReadWrite).unwrap();
+            let mut view = f.map(&cache, 0, size as u64, MapMode::Write).unwrap();
+            view.write_at(b"hello", 10).unwrap();
+            view.write_at(&[7u8; 200], (PAGE - 100) as u64).unwrap(); // page-crossing
+            // nothing on disk until msync
+            assert_eq!(&fs_.read(Path::new("w.dat")).unwrap()[10..15], &[0u8; 5]);
+            view.msync().unwrap();
+            let on_disk = fs_.read(Path::new("w.dat")).unwrap();
+            assert_eq!(&on_disk[10..15], b"hello");
+            assert!(on_disk[PAGE - 100..PAGE + 100].iter().all(|&b| b == 7));
+            // a post-msync write flushes on drop
+            view.write_at(b"bye", (size - 3) as u64).unwrap();
+        }
+        let on_disk = fs_.read(Path::new("w.dat")).unwrap();
+        assert_eq!(&on_disk[size - 3..], b"bye");
+        assert_eq!(on_disk.len(), size, "partial-page write-back keeps the length");
+        assert!(cache.stats().writeback_bytes >= 208);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dirty_pages_self_reclaim_under_budget_pressure() {
+        // a writer dirtying more pages than the budget holds must keep
+        // making progress: its own dirty pages are written back (and
+        // become evictable) instead of wedging the cache
+        let dir = scratch("pages_dirty");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let size = 16 * PAGE;
+        fs_.write(Path::new("d.dat"), &vec![0u8; size]).unwrap();
+        let cache = cache(2); // 2-page budget, 16 dirty pages coming
+        let expect: Vec<u8> = (0..size).map(|k| (k / PAGE + 1) as u8).collect();
+        {
+            let mut f = fs_.open(Path::new("d.dat"), OpenMode::ReadWrite).unwrap();
+            let mut view = f.map(&cache, 0, size as u64, MapMode::Write).unwrap();
+            for p in 0..16usize {
+                view.write_at(&vec![(p + 1) as u8; PAGE], (p * PAGE) as u64).unwrap();
+            }
+        }
+        assert_eq!(fs_.read(Path::new("d.dat")).unwrap(), expect);
+        let st = cache.stats();
+        assert!(
+            st.peak_resident_bytes <= cache.budget(),
+            "peak {} exceeds budget {}",
+            st.peak_resident_bytes,
+            cache.budget()
+        );
+        assert_eq!(st.writeback_bytes, size as u64);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn whole_page_writes_skip_the_read_in() {
+        let dir = scratch("pages_wpw");
+        let fs_ = RealFs::new(&dir).unwrap();
+        fs_.write(Path::new("n.dat"), &vec![0u8; 4 * PAGE]).unwrap();
+        let cache = cache(8);
+        let mut f = fs_.open(Path::new("n.dat"), OpenMode::ReadWrite).unwrap();
+        let mut view = f.map(&cache, 0, (4 * PAGE) as u64, MapMode::Write).unwrap();
+        view.write_at(&vec![9u8; PAGE], PAGE as u64).unwrap();
+        view.msync().unwrap();
+        drop(view);
+        let st = cache.stats();
+        assert_eq!(st.faults, 1, "a whole-page write allocates without pread: {st:?}");
+        assert!(fs_
+            .read(Path::new("n.dat"))
+            .unwrap()[PAGE..2 * PAGE]
+            .iter()
+            .all(|&b| b == 9));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_mode_views_refuse_writes_and_clamp_at_eof() {
+        let dir = scratch("pages_ro");
+        let fs_ = RealFs::new(&dir).unwrap();
+        fs_.write(Path::new("r.dat"), &vec![3u8; 100]).unwrap();
+        let cache = cache(4);
+        let mut f = fs_.open(Path::new("r.dat"), OpenMode::Read).unwrap();
+        // the view window is larger than the file: the tail reads zero
+        let mut view = f.map(&cache, 0, (PAGE * 2) as u64, MapMode::Read).unwrap();
+        assert!(matches!(view.write_at(b"x", 0), Err(Error::InvalidArg(_))));
+        let mut buf = vec![0xFFu8; 200];
+        let n = view.read_at(&mut buf, 50).unwrap();
+        assert_eq!(n, 200);
+        assert!(buf[..50].iter().all(|&b| b == 3));
+        assert!(buf[50..].iter().all(|&b| b == 0), "past EOF reads as zeros");
+        // reads past the view end return 0
+        assert_eq!(view.read_at(&mut buf, (PAGE * 2) as u64).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn second_pass_hits_the_cache() {
+        let dir = scratch("pages_hits");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let data = payload(4 * PAGE, 3);
+        fs_.write(Path::new("h.dat"), &data).unwrap();
+        let cache = cache(8);
+        let mut f = fs_.open(Path::new("h.dat"), OpenMode::Read).unwrap();
+        let mut view = f.map(&cache, 0, (4 * PAGE) as u64, MapMode::Read).unwrap();
+        let mut buf = vec![0u8; 4 * PAGE];
+        view.read_at(&mut buf, 0).unwrap();
+        let cold = cache.stats();
+        assert_eq!(cold.faults, 4);
+        view.read_at(&mut buf, 0).unwrap();
+        let warm = cache.stats();
+        assert_eq!(warm.faults, 4, "no re-faults within budget");
+        assert_eq!(warm.hits - cold.hits, 4);
+        assert_eq!(buf, data);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn views_of_a_base_offset_window_address_relative_bytes() {
+        let dir = scratch("pages_window");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let data = payload(4 * PAGE, 9);
+        fs_.write(Path::new("win.dat"), &data).unwrap();
+        let cache = cache(8);
+        let mut f = fs_.open(Path::new("win.dat"), OpenMode::Read).unwrap();
+        // a window starting mid-page: view offset 0 = file offset 100
+        let mut view = f.map(&cache, 100, PAGE as u64, MapMode::Read).unwrap();
+        let mut buf = vec![0u8; 64];
+        let n = view.read_at(&mut buf, 0).unwrap();
+        assert_eq!(n, 64);
+        assert_eq!(&buf[..], &data[100..164]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -116,6 +116,18 @@ impl VfsFile for RateLimitedFile {
     fn len(&self) -> Result<u64> {
         self.inner.len()
     }
+
+    // mapped views fault through pread / write back through pwrite, so
+    // per-page accounting happens above; the generation and fault hooks
+    // must still reach the wrapped handle (e.g. a Sea writer below a
+    // rate limiter)
+    fn map_sync(&mut self) -> Result<u64> {
+        self.inner.map_sync()
+    }
+
+    fn note_map_fault(&mut self, off: u64, len: u64) {
+        self.inner.note_map_fault(off, len)
+    }
 }
 
 impl<F: Vfs> Vfs for RateLimitedFs<F> {
@@ -167,6 +179,10 @@ impl<F: Vfs> Vfs for RateLimitedFs<F> {
 
     fn stripe_bytes(&self) -> Option<u64> {
         self.inner.stripe_bytes()
+    }
+
+    fn page_cache(&self) -> Option<std::sync::Arc<crate::vfs::PageCache>> {
+        self.inner.page_cache()
     }
 }
 
@@ -329,6 +345,33 @@ mod tests {
             dst_fs.inner().read(Path::new("big.dat")).unwrap(),
             vec![0x42u8; 4 * MIB as usize]
         );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mapped_faults_pay_only_their_pages() {
+        // ISSUE 5: a mapped view over a rate-limited backend charges the
+        // bucket per *fault* (one page), never the whole file — the same
+        // guarantee the partial-read test gives for plain pread
+        use crate::vfs::pages::{MapMode, PageCache};
+        use std::sync::Arc;
+        let dir = scratch("rate_map");
+        let fs_ = RateLimitedFs::new(
+            RealFs::new(&dir).unwrap(),
+            20.0 * MIB as f64, // 20 MiB/s reads
+            1e9,
+        );
+        fs_.write(Path::new("big.dat"), &vec![0u8; 8 * MIB as usize]).unwrap();
+        let cache = Arc::new(PageCache::new(64 * KIB as usize, MIB));
+        let mut f = fs_.open(Path::new("big.dat"), OpenMode::Read).unwrap();
+        let mut view = f.map(&cache, 0, 8 * MIB, MapMode::Read).unwrap();
+        // one 4 KiB read faults one 64 KiB page: within burst => instant
+        let mut buf = vec![0u8; 4 * KIB as usize];
+        let t0 = Instant::now();
+        view.read_at(&mut buf, MIB).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt < 0.2, "one-page fault cost whole-file time: {dt}s");
+        assert_eq!(cache.stats().faults, 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

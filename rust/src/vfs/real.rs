@@ -313,6 +313,28 @@ mod tests {
     }
 
     #[test]
+    fn concrete_handles_map_through_the_trait_default() {
+        // ISSUE 5: `VfsFile::map` has a `Self: Sized` default, so a
+        // concrete RealFile maps without going through `dyn VfsFile`
+        use crate::vfs::pages::{MapMode, PageCache};
+        use std::sync::Arc;
+        let dir = scratch("realfs_map");
+        let fs_ = RealFs::new(&dir).unwrap();
+        fs_.write(Path::new("m.dat"), b"mapped-bytes").unwrap();
+        let cache = Arc::new(PageCache::new(4096, 16 * 4096));
+        let mut f = RealFile::open_at(dir.join("m.dat"), OpenMode::ReadWrite).unwrap();
+        {
+            let mut view = VfsFile::map(&mut f, &cache, 0, 12, MapMode::Write).unwrap();
+            let mut buf = [0u8; 6];
+            view.read_at(&mut buf, 0).unwrap();
+            assert_eq!(&buf, b"mapped");
+            view.write_at(b"MAPPED", 0).unwrap();
+        }
+        assert_eq!(fs_.read(Path::new("m.dat")).unwrap(), b"MAPPED-bytes");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn whole_file_defaults_match_fast_paths() {
         let dir = scratch("realfs_dflt");
         let fs_ = RealFs::new(&dir).unwrap();

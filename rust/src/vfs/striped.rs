@@ -739,6 +739,40 @@ mod tests {
     }
 
     #[test]
+    fn mapped_views_read_stripe_mode_files_byte_exact() {
+        // ISSUE 5: the PageCache layer rides the handle API, so a page
+        // fault spanning stripe boundaries reassembles member parts
+        // transparently — no stripe awareness in the mapping layer
+        use crate::vfs::pages::{MapMode, PageCache};
+        const STRIPE: u64 = 1024;
+        let (fs_, root) = stripe_mode(4, STRIPE);
+        let p = Path::new("mapped.dat");
+        let payload: Vec<u8> = (0..(6 * STRIPE + STRIPE / 2) as usize)
+            .map(|k| (k % 251) as u8)
+            .collect();
+        fs_.write(p, &payload).unwrap();
+        // page size deliberately misaligned with the stripe unit
+        let cache = Arc::new(PageCache::new(1536, 4 * 1536));
+        let mut f = fs_.open(p, OpenMode::Read).unwrap();
+        let mut view = f
+            .map(&cache, 0, payload.len() as u64, MapMode::Read)
+            .unwrap();
+        let mut got = vec![0u8; payload.len()];
+        let n = view.read_at(&mut got, 0).unwrap();
+        assert_eq!(n, payload.len());
+        assert_eq!(got, payload);
+        // an unaligned window crossing members
+        let mut mid = vec![0u8; 200];
+        view.read_at(&mut mid, STRIPE - 100).unwrap();
+        assert_eq!(
+            &mid[..],
+            &payload[(STRIPE - 100) as usize..(STRIPE + 100) as usize]
+        );
+        assert!(cache.stats().peak_resident_bytes <= cache.budget());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
     fn positioned_handles_work_through_members() {
         let (fs_, root) = striped(2);
         let p = Path::new("h.dat");

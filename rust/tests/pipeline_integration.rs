@@ -8,7 +8,7 @@
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, OnceLock};
 
-use sea::coordinator::{run_pipeline, PipelineCfg};
+use sea::coordinator::{run_pipeline, IoMode, PipelineCfg};
 use sea::placement::RuleSet;
 use sea::runtime::Engine;
 use sea::util::MIB;
@@ -59,6 +59,8 @@ fn pipeline_through_plain_dir_verifies_integrity() {
         verify: true,
         cleanup_intermediate: false,
         max_open_outputs: 0,
+        io_mode: IoMode::Streamed,
+        page_cache: None,
     })
     .expect("pipeline");
     assert_eq!(r.blocks, 3);
@@ -118,6 +120,8 @@ fn pipeline_through_sea_mount_places_and_flushes() {
         verify: true,
         cleanup_intermediate: false,
         max_open_outputs: 0,
+        io_mode: IoMode::Streamed,
+        page_cache: None,
     })
     .expect("pipeline");
     assert_eq!(r.pjrt_calls, 4 * 3);
@@ -147,6 +151,65 @@ fn pipeline_through_sea_mount_places_and_flushes() {
 }
 
 #[test]
+fn pipeline_mapped_io_over_sea_mount_matches_streamed() {
+    // ISSUE 5: --io-mode mmap end to end — same integrity-verified
+    // results as the streamed path, with faults visible on the mount's
+    // page-cache gauges and residency bounded by the budget
+    let Some(engine) = engine() else { return };
+    let work = scratch("mmap");
+    let ds = small_dataset(&work, 3, engine.chunk_elems());
+    let pfs: Arc<dyn Vfs> = Arc::new(RealFs::new(work.join("pfs")).unwrap());
+    let sea = Arc::new(
+        SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(work.join("t0"), 0, 512 * MIB).unwrap()],
+            pfs,
+            max_file_size: ds.block_bytes(),
+            parallel_procs: 2,
+            rules: RuleSet::in_memory(IncrementationSpec::final_glob()),
+            seed: 9,
+            tuning: SeaTuning {
+                // a budget far below blocks x workers proves mapped mode
+                // never materializes whole files
+                page_bytes: 64 * 1024,
+                page_budget: 4 * MIB,
+                ..SeaTuning::default()
+            },
+        })
+        .unwrap(),
+    );
+    let r = run_pipeline(&PipelineCfg {
+        engine: engine.clone(),
+        vfs: sea.clone(),
+        dataset: ds.clone(),
+        mount_prefix: PathBuf::from("/sea"),
+        iterations: 3,
+        workers: 2,
+        read_back: true,
+        verify: true, // on-device stats certify every mapped stride
+        cleanup_intermediate: false,
+        max_open_outputs: 0,
+        io_mode: IoMode::Mmap,
+        page_cache: None, // use the mount's cache: gauges land on counters()
+    })
+    .expect("mapped pipeline");
+    assert_eq!(r.pjrt_calls, 3 * 3);
+    let c = sea.counters();
+    assert!(c.page_faults > 0, "mapped I/O faulted through the mount cache: {c:?}");
+    assert!(
+        c.page_peak_resident_bytes <= 4 * MIB,
+        "peak resident {} exceeds the page budget",
+        c.page_peak_resident_bytes
+    );
+    // final files flushed to the PFS as usual
+    let direct = RealFs::new(work.join("pfs")).unwrap();
+    for b in 0..3 {
+        assert!(direct.exists(Path::new(&format!("derived/block_{b:04}_final.dat"))));
+    }
+    let _ = std::fs::remove_dir_all(&work);
+}
+
+#[test]
 fn sea_beats_throttled_pfs_on_data_intensive_runs() {
     let Some(engine) = engine() else { return };
     let work = scratch("race");
@@ -171,6 +234,8 @@ fn sea_beats_throttled_pfs_on_data_intensive_runs() {
         verify: true,
         cleanup_intermediate: true,
         max_open_outputs: 0,
+        io_mode: IoMode::Streamed,
+        page_cache: None,
     })
     .expect("direct");
     let sea = Arc::new(
@@ -197,6 +262,8 @@ fn sea_beats_throttled_pfs_on_data_intensive_runs() {
         verify: true,
         cleanup_intermediate: true,
         max_open_outputs: 0,
+        io_mode: IoMode::Streamed,
+        page_cache: None,
     })
     .expect("sea");
     let speedup = direct.makespan / sea_run.makespan;
@@ -232,6 +299,8 @@ fn corruption_is_detected_by_on_device_stats() {
         verify: true,
         cleanup_intermediate: true,
         max_open_outputs: 0,
+        io_mode: IoMode::Streamed,
+        page_cache: None,
     });
     assert!(err.is_err(), "corruption must fail the integrity check");
     let msg = format!("{}", err.err().unwrap());
