@@ -29,9 +29,12 @@ use sea::vfs::{
 };
 
 /// Mapped-vs-pread sweep over a rate-limited chunk-striped PFS
-/// (budget × page size grid; cold pass faults, warm pass hits). Emits
-/// `BENCH_pagecache.json`, and asserts the PageCache's bounded-memory
-/// claim: peak resident bytes never exceed the budget.
+/// (budget × page size grid; cold pass faults, warm pass hits), plus a
+/// multi-view scenario: V concurrent views of one file share frames,
+/// so the fault count stays flat in V while later views ride
+/// `shared_hits`. Emits `BENCH_pagecache.json`, and asserts the
+/// PageCache's bounded-memory claim: peak resident bytes never exceed
+/// the budget.
 fn pagecache_sweep(work: &Path, h: &mut Harness, smoke: bool) {
     let file_size: u64 = if smoke { 256 * KIB } else { 8 * MIB };
     let stripe: u64 = if smoke { 32 * KIB } else { 256 * KIB };
@@ -125,6 +128,50 @@ fn pagecache_sweep(work: &Path, h: &mut Harness, smoke: bool) {
             ));
         }
     }
+    // multi-view scenario (ISSUE 6): V handles of one file mapped
+    // through one cache. Frames are shared by file identity, so the
+    // fault count must stay flat in V — every page faults once, and
+    // each later view's pass is all shared hits.
+    let mv_page = if smoke { (16 * KIB) as usize } else { (64 * KIB) as usize };
+    let mut mv_rows: Vec<(usize, f64, u64, u64, u64, u64)> = Vec::new();
+    for &nviews in &[1usize, 2, 4] {
+        let cache = Arc::new(PageCache::new(mv_page, 4 * file_size)); // roomy budget
+        let mut handles: Vec<Box<dyn VfsFile>> = (0..nviews)
+            .map(|_| pfs.open(Path::new("blk.dat"), OpenMode::Read).expect("open"))
+            .collect();
+        let mut views = Vec::new();
+        for f in handles.iter_mut() {
+            views.push(f.map(&cache, 0, file_size, MapMode::Read).expect("map"));
+        }
+        let mut buf = vec![0u8; stride];
+        let t0 = Instant::now();
+        for view in views.iter_mut() {
+            let mut off = 0u64;
+            while off < file_size {
+                view.read_at(&mut buf, off).expect("read_at");
+                off += stride as u64;
+            }
+        }
+        let passes_s = t0.elapsed().as_secs_f64();
+        let st = cache.stats();
+        let pages = (file_size + mv_page as u64 - 1) / mv_page as u64;
+        assert_eq!(
+            st.faults, pages,
+            "fault count grew with the view count (frames not shared)"
+        );
+        if nviews > 1 {
+            assert!(st.shared_hits > 0, "later views hit the first view's frames");
+        }
+        h.record(
+            &format!("pagecache_multiview_v{nviews}"),
+            vec![passes_s],
+            format!(
+                "{} faults {} shared_hits {} deduped",
+                st.faults, st.shared_hits, st.frames_deduped
+            ),
+        );
+        mv_rows.push((nviews, passes_s, st.faults, st.hits, st.shared_hits, st.frames_deduped));
+    }
     let mut json = String::from("{\n  \"target\": \"vfs/pagecache\",\n");
     json.push_str(&format!(
         "  \"file_bytes\": {file_size},\n  \"stripe_bytes\": {stripe},\n  \"members\": 4,\n  \"sweep\": [\n"
@@ -138,6 +185,14 @@ fn pagecache_sweep(work: &Path, h: &mut Harness, smoke: bool) {
              \"mapped_warm_s\": {warm_s:.6}, \"faults\": {faults}, \"hits\": {hits}, \
              \"evictions\": {ev}, \"peak_resident_bytes\": {peak}}}{}\n",
             if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str(&format!("  ],\n  \"multiview_page_bytes\": {mv_page},\n  \"multiview\": [\n"));
+    for (i, (v, s, faults, hits, shared, deduped)) in mv_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"views\": {v}, \"passes_s\": {s:.6}, \"faults\": {faults}, \
+             \"hits\": {hits}, \"shared_hits\": {shared}, \"frames_deduped\": {deduped}}}{}\n",
+            if i + 1 == mv_rows.len() { "" } else { "," }
         ));
     }
     json.push_str("  ]\n}\n");

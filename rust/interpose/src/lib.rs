@@ -21,7 +21,8 @@
 //! Wrapped symbols: `open`, `open64`, `openat`, `creat`, `creat64`,
 //! `fopen`, `fopen64`, `stat`, `lstat`, `access`, `unlink`, `mkdir`,
 //! `rename` (both arguments), `opendir`, `remove`, `truncate`,
-//! `truncate64`, `chdir`.
+//! `truncate64`, `chdir`, plus the mapping family below (`mmap`,
+//! `mmap64`, `msync`, `munmap`).
 //!
 //! Offset-addressed I/O (`pread`/`pwrite`/`pread64`/`pwrite64`,
 //! `lseek`/`lseek64`) is also interposed: these operate on descriptors
@@ -35,17 +36,33 @@
 //! Statically-linked binaries and direct syscalls bypass the shim —
 //! the same documented limitation as the paper's library.
 //!
-//! `mmap(2)` is **not** wrapped (a stub gap): a mapping made on an
-//! already-translated descriptor works, but mapped pages bypass the
-//! shim entirely, so Sea sees none of those accesses. The library-level
-//! equivalent — `VfsFile::map` windowed views over the `vfs::pages`
-//! PageCache — covers the mapped-workload scenario for in-process
-//! consumers; wiring a real `mmap` wrapper through the shim remains
-//! open (ROADMAP).
+//! `mmap(2)` **is** wrapped: a non-executable mapping of a regular
+//! file under `SEA_TARGET` (i.e. an fd the shim translated at `open`)
+//! is *emulated* instead of forwarded — the shim carves an anonymous
+//! region, fills it from a process-wide page pool keyed by
+//! `(device, inode, 64 KiB page)` (the out-of-process analogue of the
+//! library's shared `vfs::pages` frame pool: two mappings of one file
+//! fill from the same pooled pages, faulting each page once), and
+//! hands the region to the caller. `MAP_PRIVATE` read-only mappings
+//! are sealed with `mprotect`; writable `MAP_SHARED` mappings keep a
+//! duplicated descriptor and write the whole region back on
+//! `msync`/`munmap`, invalidating the file's pooled pages. Everything
+//! else — anonymous, `MAP_FIXED`, executable, non-Sea fds — forwards
+//! straight to the kernel (`SEA_MMAP=0` disables the emulation
+//! entirely). Remaining gaps: partial `munmap` of an emulated region
+//! tears down the whole region, write-back granularity is the full
+//! mapping, and pages filled before a *kernel-side* writer changed the
+//! file are only invalidated by a shim-side write-back.
+//!
+//! * `SEA_MMAP`        — set to `0` to forward every `mmap` untouched.
+//! * `SEA_MMAP_BUDGET` — pool budget in bytes (default 64 MiB).
 
+use std::cell::Cell;
+use std::collections::{HashMap, VecDeque};
 use std::ffi::{CStr, CString, OsStr};
 use std::os::raw::{c_char, c_int, c_void};
 use std::os::unix::ffi::OsStrExt;
+use std::sync::{Mutex, OnceLock};
 
 // --- env + translation ------------------------------------------------------
 
@@ -354,9 +371,413 @@ pub unsafe extern "C" fn opendir(path: *const c_char) -> *mut libc::DIR {
     }
 }
 
+// --- mmap interposition ------------------------------------------------------
+//
+// The shim-side analogue of the library's shared PageCache: emulated
+// mappings of Sea-translated descriptors fill from one process-wide
+// pool keyed by (device, inode, page), so two mappings of a file fault
+// each page once. Forwards go through raw syscalls, not the dlsym'd
+// symbol: malloc itself allocates with anonymous mmap (and frees with
+// munmap), so the forward path must not allocate or re-enter the
+// symbol resolver.
+
+/// Pool page size: matches the library's `DEFAULT_PAGE_BYTES`.
+const MMAP_POOL_PAGE: usize = 64 * 1024;
+
+/// Default pool budget (bytes), overridable via `SEA_MMAP_BUDGET`.
+const MMAP_POOL_BUDGET: usize = 64 * 1024 * 1024;
+
+struct MmapPool {
+    /// `(device, inode, page index)` → page bytes (zero-padded tail).
+    pages: HashMap<(u64, u64, u64), Vec<u8>>,
+    /// FIFO eviction order (simple and allocation-light; the pool is a
+    /// fill accelerator, not a correctness structure).
+    fifo: VecDeque<(u64, u64, u64)>,
+    budget_pages: usize,
+    hits: u64,
+    faults: u64,
+}
+
+fn pool() -> &'static Mutex<MmapPool> {
+    static POOL: OnceLock<Mutex<MmapPool>> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let budget = std::env::var_os("SEA_MMAP_BUDGET")
+            .and_then(|v| v.to_str().and_then(|s| s.parse::<usize>().ok()))
+            .unwrap_or(MMAP_POOL_BUDGET);
+        Mutex::new(MmapPool {
+            pages: HashMap::new(),
+            fifo: VecDeque::new(),
+            budget_pages: (budget / MMAP_POOL_PAGE).max(1),
+            hits: 0,
+            faults: 0,
+        })
+    })
+}
+
+/// Cumulative pool gauges `(hits, faults)` — pages served from the
+/// shared pool vs. preads that filled a page.
+pub fn mmap_pool_counters() -> (u64, u64) {
+    let p = pool().lock().unwrap_or_else(|e| e.into_inner());
+    (p.hits, p.faults)
+}
+
+/// One emulated mapping.
+#[derive(Clone, Copy)]
+struct MapInfo {
+    len: usize,
+    /// File offset the region mirrors (mmap's `offset` argument).
+    offset: u64,
+    /// Writable `MAP_SHARED` emulation: `(dup'd fd, device, inode)`
+    /// for write-back; `None` for private mappings (no write-back).
+    wb: Option<(c_int, u64, u64)>,
+}
+
+fn maps() -> &'static Mutex<HashMap<usize, MapInfo>> {
+    static MAPS: OnceLock<Mutex<HashMap<usize, MapInfo>>> = OnceLock::new();
+    MAPS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+std::thread_local! {
+    /// Re-entrancy guard: while the shim itself allocates (pool fill,
+    /// map-table insert), malloc may legitimately call mmap/munmap —
+    /// those inner calls must forward raw instead of taking the same
+    /// locks again.
+    static IN_SHIM: Cell<bool> = const { Cell::new(false) };
+}
+
+unsafe fn sys_mmap(
+    addr: *mut c_void,
+    len: libc::size_t,
+    prot: c_int,
+    flags: c_int,
+    fd: c_int,
+    offset: i64,
+) -> *mut c_void {
+    libc::syscall(libc::SYS_mmap, addr, len, prot, flags, fd, offset) as *mut c_void
+}
+
+unsafe fn sys_munmap(addr: *mut c_void, len: libc::size_t) -> c_int {
+    libc::syscall(libc::SYS_munmap, addr, len) as c_int
+}
+
+unsafe fn sys_msync(addr: *mut c_void, len: libc::size_t, flags: c_int) -> c_int {
+    libc::syscall(libc::SYS_msync, addr, len, flags) as c_int
+}
+
+/// Should this mapping be emulated? Yes when the emulation is enabled,
+/// `fd` is a regular file living under `SEA_TARGET` (a path the shim
+/// translated at `open`), and the protection/flags are a shape the
+/// emulation preserves: non-executable, and either private or
+/// writable-shared. Returns the file's `(device, inode)`.
+unsafe fn sea_mappable(fd: c_int, flags: c_int, prot: c_int) -> Option<(u64, u64)> {
+    if std::env::var_os("SEA_MMAP").is_some_and(|v| v == "0") {
+        return None;
+    }
+    if prot & libc::PROT_EXEC != 0 {
+        return None; // never emulate code mappings (dlopen et al.)
+    }
+    let shared = flags & libc::MAP_SHARED != 0;
+    let writable = prot & libc::PROT_WRITE != 0;
+    if shared && !writable {
+        return None; // read-only shared: the kernel mapping is fine
+    }
+    let mut st: libc::stat = std::mem::zeroed();
+    if libc::fstat(fd, &mut st) != 0 || st.st_mode & libc::S_IFMT != libc::S_IFREG {
+        return None;
+    }
+    // resolve the descriptor back to its path: only Sea-translated
+    // files (under SEA_TARGET) go through the pool
+    let link = format!("/proc/self/fd/{fd}\0");
+    let mut buf = [0u8; libc::PATH_MAX as usize];
+    let n = libc::readlink(
+        link.as_ptr() as *const c_char,
+        buf.as_mut_ptr() as *mut c_char,
+        buf.len(),
+    );
+    if n <= 0 {
+        return None;
+    }
+    let path = &buf[..n as usize];
+    let target = env_or("SEA_TARGET", "/tmp/sea_target");
+    if !path.starts_with(&target) {
+        return None;
+    }
+    let rest = &path[target.len()..];
+    if !(rest.is_empty() || rest[0] == b'/') {
+        return None;
+    }
+    Some((st.st_dev as u64, st.st_ino as u64))
+}
+
+/// Copy `[offset, offset + out.len())` of `fd` into `out` through the
+/// shared page pool: pooled pages are memcpy'd, missing ones are
+/// pread (outside the pool lock) and inserted under the FIFO budget.
+unsafe fn fill_from_pool(out: &mut [u8], fd: c_int, offset: u64, dev: u64, ino: u64) -> bool {
+    let pb = MMAP_POOL_PAGE as u64;
+    let mut done = 0usize;
+    while done < out.len() {
+        let fo = offset + done as u64;
+        let idx = fo / pb;
+        let intra = (fo % pb) as usize;
+        let span = (MMAP_POOL_PAGE - intra).min(out.len() - done);
+        let key = (dev, ino, idx);
+        let pooled = {
+            let mut p = pool().lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(page) = p.pages.get(&key) {
+                out[done..done + span].copy_from_slice(&page[intra..intra + span]);
+                p.hits += 1;
+                true
+            } else {
+                false
+            }
+        };
+        if !pooled {
+            let mut page = vec![0u8; MMAP_POOL_PAGE];
+            let mut filled = 0usize;
+            while filled < MMAP_POOL_PAGE {
+                let n = libc::pread(
+                    fd,
+                    page[filled..].as_mut_ptr() as *mut c_void,
+                    MMAP_POOL_PAGE - filled,
+                    (idx * pb + filled as u64) as libc::off_t,
+                );
+                if n < 0 {
+                    return false;
+                }
+                if n == 0 {
+                    break; // past EOF: the tail stays zero
+                }
+                filled += n as usize;
+            }
+            out[done..done + span].copy_from_slice(&page[intra..intra + span]);
+            let mut p = pool().lock().unwrap_or_else(|e| e.into_inner());
+            p.faults += 1;
+            if !p.pages.contains_key(&key) {
+                while p.pages.len() >= p.budget_pages {
+                    match p.fifo.pop_front() {
+                        Some(old) => {
+                            p.pages.remove(&old);
+                        }
+                        None => break,
+                    }
+                }
+                p.fifo.push_back(key);
+                p.pages.insert(key, page);
+            }
+        }
+        done += span;
+    }
+    true
+}
+
+/// Build an emulated mapping: an anonymous region filled through the
+/// pool, standing in for `[offset, offset + len)` of the file.
+unsafe fn emulate_map(
+    len: libc::size_t,
+    prot: c_int,
+    flags: c_int,
+    fd: c_int,
+    offset: u64,
+    dev: u64,
+    ino: u64,
+) -> *mut c_void {
+    let region = sys_mmap(
+        std::ptr::null_mut(),
+        len,
+        libc::PROT_READ | libc::PROT_WRITE,
+        libc::MAP_PRIVATE | libc::MAP_ANONYMOUS,
+        -1,
+        0,
+    );
+    if region == libc::MAP_FAILED {
+        return region;
+    }
+    let out = std::slice::from_raw_parts_mut(region as *mut u8, len);
+    if !fill_from_pool(out, fd, offset, dev, ino) {
+        sys_munmap(region, len);
+        *libc::__errno_location() = libc::EIO;
+        return libc::MAP_FAILED;
+    }
+    let wb = if flags & libc::MAP_SHARED != 0 {
+        // writable shared mapping: keep a descriptor of our own (the
+        // caller may close theirs) for msync/munmap write-back
+        let dup = libc::fcntl(fd, libc::F_DUPFD_CLOEXEC, 0);
+        if dup < 0 {
+            sys_munmap(region, len);
+            return libc::MAP_FAILED; // fcntl left errno
+        }
+        Some((dup, dev, ino))
+    } else {
+        if prot & libc::PROT_WRITE == 0 {
+            // seal the private read-only mapping now that it is filled
+            libc::mprotect(region, len, prot);
+        }
+        None
+    };
+    maps()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .insert(region as usize, MapInfo { len, offset, wb });
+    region
+}
+
+/// `msync`/`munmap` back half for emulated regions: whole-range
+/// write-back through the duplicated descriptor (writable shared
+/// mappings), pool invalidation for the written file, and — on unmap —
+/// region teardown. `None` when `addr` is not an emulated region.
+unsafe fn emulated_sync(addr: *mut c_void, unmap: bool) -> Option<c_int> {
+    let info = {
+        let mut m = maps().lock().unwrap_or_else(|e| e.into_inner());
+        if unmap {
+            m.remove(&(addr as usize))
+        } else {
+            m.get(&(addr as usize)).copied()
+        }
+    }?;
+    let mut ret = 0;
+    if let Some((fd, dev, ino)) = info.wb {
+        let base = addr as *const u8;
+        let mut done = 0usize;
+        while done < info.len {
+            let n = libc::pwrite(
+                fd,
+                base.add(done) as *const c_void,
+                info.len - done,
+                (info.offset + done as u64) as libc::off_t,
+            );
+            if n <= 0 {
+                ret = -1;
+                break;
+            }
+            done += n as usize;
+        }
+        // the file changed under every pooled page of it: drop them so
+        // later mappings re-read instead of serving pre-write bytes
+        let mut p = pool().lock().unwrap_or_else(|e| e.into_inner());
+        p.fifo.retain(|k| k.0 != dev || k.1 != ino);
+        p.pages.retain(|k, _| k.0 != dev || k.1 != ino);
+        drop(p);
+        if unmap {
+            libc::close(fd);
+        }
+    }
+    if unmap {
+        let r = sys_munmap(addr, info.len);
+        if r != 0 {
+            ret = r;
+        }
+    }
+    Some(ret)
+}
+
+/// `mmap`: emulate Sea-file mappings through the shared pool, forward
+/// everything else raw.
+///
+/// # Safety
+/// C ABI; arguments per the libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn mmap(
+    addr: *mut c_void,
+    len: libc::size_t,
+    prot: c_int,
+    flags: c_int,
+    fd: c_int,
+    offset: libc::off_t,
+) -> *mut c_void {
+    // the allocator's own requests (anonymous), placement-constrained
+    // ones (MAP_FIXED*) and re-entrant calls forward before the shim
+    // allocates anything
+    if fd < 0
+        || len == 0
+        || flags & libc::MAP_ANONYMOUS != 0
+        || flags & (libc::MAP_FIXED | libc::MAP_FIXED_NOREPLACE) != 0
+        || IN_SHIM.with(|g| g.get())
+    {
+        return sys_mmap(addr, len, prot, flags, fd, offset as i64);
+    }
+    IN_SHIM.with(|g| g.set(true));
+    let ret = match sea_mappable(fd, flags, prot) {
+        Some((dev, ino)) => emulate_map(len, prot, flags, fd, offset as u64, dev, ino),
+        None => sys_mmap(addr, len, prot, flags, fd, offset as i64),
+    };
+    IN_SHIM.with(|g| g.set(false));
+    ret
+}
+
+/// `mmap64`: identical to [`mmap`] with a 64-bit offset.
+///
+/// # Safety
+/// C ABI; arguments per the libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn mmap64(
+    addr: *mut c_void,
+    len: libc::size_t,
+    prot: c_int,
+    flags: c_int,
+    fd: c_int,
+    offset: libc::off64_t,
+) -> *mut c_void {
+    if fd < 0
+        || len == 0
+        || flags & libc::MAP_ANONYMOUS != 0
+        || flags & (libc::MAP_FIXED | libc::MAP_FIXED_NOREPLACE) != 0
+        || IN_SHIM.with(|g| g.get())
+    {
+        return sys_mmap(addr, len, prot, flags, fd, offset);
+    }
+    IN_SHIM.with(|g| g.set(true));
+    let ret = match sea_mappable(fd, flags, prot) {
+        Some((dev, ino)) => emulate_map(len, prot, flags, fd, offset as u64, dev, ino),
+        None => sys_mmap(addr, len, prot, flags, fd, offset),
+    };
+    IN_SHIM.with(|g| g.set(false));
+    ret
+}
+
+/// `msync`: write an emulated region back through its duplicated
+/// descriptor; forward kernel mappings raw.
+///
+/// # Safety
+/// C ABI; arguments per the libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn msync(addr: *mut c_void, len: libc::size_t, flags: c_int) -> c_int {
+    if !IN_SHIM.with(|g| g.get()) {
+        IN_SHIM.with(|g| g.set(true));
+        let handled = emulated_sync(addr, false);
+        IN_SHIM.with(|g| g.set(false));
+        if let Some(r) = handled {
+            return r;
+        }
+    }
+    sys_msync(addr, len, flags)
+}
+
+/// `munmap`: tear down an emulated region (write-back first when it is
+/// a writable shared one); forward kernel mappings — including the
+/// allocator's own frees — raw.
+///
+/// # Safety
+/// C ABI; arguments per the libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn munmap(addr: *mut c_void, len: libc::size_t) -> c_int {
+    if !IN_SHIM.with(|g| g.get()) {
+        IN_SHIM.with(|g| g.set(true));
+        let handled = emulated_sync(addr, true);
+        IN_SHIM.with(|g| g.set(false));
+        if let Some(r) = handled {
+            return r;
+        }
+    }
+    sys_munmap(addr, len)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// `translate` and the mmap gate both read `SEA_MOUNT`/`SEA_TARGET`
+    /// from the environment — tests that set them must not interleave.
+    static ENV_LOCK: Mutex<()> = Mutex::new(());
 
     fn t(mount: &str, target: &str, path: &str) -> Option<String> {
         std::env::set_var("SEA_MOUNT", mount);
@@ -367,6 +788,7 @@ mod tests {
 
     #[test]
     fn prefix_translation() {
+        let _env = ENV_LOCK.lock().unwrap();
         assert_eq!(
             t("/sea", "/data", "/sea/x/y.dat").as_deref(),
             Some("/data/x/y.dat")
@@ -374,5 +796,108 @@ mod tests {
         assert_eq!(t("/sea", "/data", "/sea").as_deref(), Some("/data"));
         assert_eq!(t("/sea", "/data", "/seaside/x"), None);
         assert_eq!(t("/sea", "/data", "/other/x"), None);
+    }
+
+    fn scratch_target(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("sea_shim_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::env::set_var("SEA_MOUNT", "/sea");
+        std::env::set_var("SEA_TARGET", &dir);
+        std::env::remove_var("SEA_MMAP");
+        dir
+    }
+
+    fn c_path(p: &std::path::Path) -> CString {
+        CString::new(p.as_os_str().as_bytes()).unwrap()
+    }
+
+    #[test]
+    fn private_read_mappings_fill_from_the_shared_pool() {
+        let _env = ENV_LOCK.lock().unwrap();
+        let dir = scratch_target("mmap_ro");
+        let path = dir.join("m.dat");
+        let data: Vec<u8> = (0..200_000usize).map(|k| (k.wrapping_mul(31) % 251) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let c = c_path(&path);
+        unsafe {
+            let fd = libc::open(c.as_ptr(), libc::O_RDONLY);
+            assert!(fd >= 0);
+            let (h0, f0) = mmap_pool_counters();
+            let a = mmap(std::ptr::null_mut(), data.len(), libc::PROT_READ, libc::MAP_PRIVATE, fd, 0);
+            assert_ne!(a, libc::MAP_FAILED, "emulated mapping failed");
+            assert_eq!(std::slice::from_raw_parts(a as *const u8, data.len()), &data[..]);
+            let (_, f1) = mmap_pool_counters();
+            assert!(f1 > f0, "first mapping pread pool pages in");
+            // a second mapping of the same file fills from the pool:
+            // no new faults, only hits
+            let b = mmap(std::ptr::null_mut(), data.len(), libc::PROT_READ, libc::MAP_PRIVATE, fd, 0);
+            assert_ne!(b, libc::MAP_FAILED);
+            assert_eq!(std::slice::from_raw_parts(b as *const u8, data.len()), &data[..]);
+            let (h2, f2) = mmap_pool_counters();
+            assert_eq!(f2, f1, "second mapping faulted nothing");
+            assert!(h2 > h0, "second mapping hit pooled pages");
+            assert_eq!(munmap(a, data.len()), 0);
+            assert_eq!(munmap(b, data.len()), 0);
+            libc::close(fd);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shared_writable_mappings_write_back_on_msync_and_munmap() {
+        let _env = ENV_LOCK.lock().unwrap();
+        let dir = scratch_target("mmap_rw");
+        let path = dir.join("w.dat");
+        std::fs::write(&path, vec![0u8; 8192]).unwrap();
+        let c = c_path(&path);
+        unsafe {
+            let fd = libc::open(c.as_ptr(), libc::O_RDWR);
+            assert!(fd >= 0);
+            let a = mmap(
+                std::ptr::null_mut(),
+                8192,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED,
+                fd,
+                0,
+            );
+            assert_ne!(a, libc::MAP_FAILED, "emulated writable mapping failed");
+            let buf = std::slice::from_raw_parts_mut(a as *mut u8, 8192);
+            buf[100..105].copy_from_slice(b"hello");
+            // stores live only in the region until msync
+            assert_eq!(&std::fs::read(&path).unwrap()[100..105], &[0u8; 5]);
+            assert_eq!(msync(a, 8192, libc::MS_SYNC), 0);
+            assert_eq!(&std::fs::read(&path).unwrap()[100..105], b"hello");
+            // a post-msync store reaches the file via the unmap flush
+            buf[0] = 9;
+            assert_eq!(munmap(a, 8192), 0);
+            libc::close(fd);
+        }
+        assert_eq!(std::fs::read(&path).unwrap()[0], 9, "munmap wrote the region back");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn non_sea_fds_forward_to_the_kernel_mapping_path() {
+        let _env = ENV_LOCK.lock().unwrap();
+        let dir = scratch_target("mmap_fwd");
+        // point SEA_TARGET elsewhere so the file is NOT Sea-managed
+        std::env::set_var("SEA_TARGET", dir.join("elsewhere"));
+        let path = dir.join("plain.dat");
+        std::fs::write(&path, vec![7u8; 4096]).unwrap();
+        let c = c_path(&path);
+        unsafe {
+            let fd = libc::open(c.as_ptr(), libc::O_RDONLY);
+            assert!(fd >= 0);
+            let (h0, f0) = mmap_pool_counters();
+            let a = mmap(std::ptr::null_mut(), 4096, libc::PROT_READ, libc::MAP_PRIVATE, fd, 0);
+            assert_ne!(a, libc::MAP_FAILED);
+            assert!(std::slice::from_raw_parts(a as *const u8, 4096).iter().all(|&b| b == 7));
+            assert_eq!((h0, f0), mmap_pool_counters(), "pool untouched by a kernel mapping");
+            assert_eq!(munmap(a, 4096), 0);
+            libc::close(fd);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -86,9 +86,12 @@ fn workload_from(args: &Args) -> Result<IncrementationSpec> {
 /// (shared by the direct and sea branches so they can never diverge).
 fn print_pagecache(s: &crate::vfs::PageCacheStats) {
     println!(
-        "pagecache  : {} faults, {} hits, {} evictions, {} written back, peak resident {}",
+        "pagecache  : {} faults, {} hits ({} shared), {} deduped, {} evictions, \
+         {} written back, peak resident {}",
         s.faults,
         s.hits,
+        s.shared_hits,
+        s.frames_deduped,
         s.evictions,
         fmt_bytes(s.writeback_bytes),
         fmt_bytes(s.peak_resident_bytes),
@@ -501,10 +504,12 @@ fn format_stat(engine: &str, ledger: &[DeviceLedger], c: MgmtCounters) -> String
         fmt_bytes(c.peak_copy_buffer_bytes),
     ));
     out.push_str(&format!(
-        "pages  : {} faults, {} hits, {} evictions, {} written back \
-         (resident {}, peak {})\n",
+        "pages  : {} faults, {} hits ({} shared), {} deduped, {} evictions, \
+         {} written back (resident {}, peak {})\n",
         c.page_faults,
         c.page_hits,
+        c.page_shared_hits,
+        c.page_frames_deduped,
         c.page_evictions,
         fmt_bytes(c.page_writeback_bytes),
         fmt_bytes(c.page_resident_bytes),
@@ -598,6 +603,8 @@ mod tests {
             peak_copy_buffer_bytes: 2 * MIB,
             page_faults: 7,
             page_hits: 8,
+            page_shared_hits: 5,
+            page_frames_deduped: 1,
             page_evictions: 9,
             page_writeback_bytes: MIB,
             page_resident_bytes: MIB / 2,
@@ -613,7 +620,7 @@ mod tests {
         assert!(s.contains("6 prefetched"), "{s}");
         assert!(s.contains("moved  : "), "{s}");
         assert!(s.contains("peak copy buffers"), "{s}");
-        assert!(s.contains("pages  : 7 faults, 8 hits, 9 evictions"), "{s}");
+        assert!(s.contains("pages  : 7 faults, 8 hits (5 shared), 1 deduped, 9 evictions"), "{s}");
         assert_eq!(
             s.lines().count(),
             1 + 1 + 2 + 1 + 1 + 1,

@@ -44,22 +44,32 @@
 //! Decorators compose: a `SeaFs` mounted over
 //! `RateLimitedFs<StripedFs>` emulates a loaded, OST-striped Lustre.
 //!
-//! On top of the handle API sits the **[`pages`] layer**: a
-//! process/mount-wide [`pages::PageCache`] (global byte budget, sharded
-//! LRU) serving mmap-style [`pages::MappedView`] windows over any
-//! handle — copy-on-read page fault-in via `pread`, dirty-range
-//! tracking, write-back through `pwrite` on `msync` / eviction / view
-//! drop. Every backend gets [`VfsFile::map`] for free; `SeaFs` hooks in
-//! deliberately (faults heat the placement engine, views follow
-//! mid-stream spills via [`VfsFile::map_sync`] generations, dirty
+//! On top of the handle API sits the **[`pages`] layer** — the shared
+//! page cache: a process/mount-wide [`pages::PageCache`] (global byte
+//! budget, sharded LRU) serving mmap-style [`pages::MappedView`]
+//! windows over any handle — copy-on-read page fault-in via `pread`,
+//! dirty-range tracking, write-back through `pwrite` on `msync` /
+//! eviction / view drop. Frames are keyed by `(file identity, map
+//! generation, page index)`: [`VfsFile::map_identity`] names the file,
+//! so every view of it (any handle, any window) faults a page once and
+//! hits the same frame thereafter; dirty bytes stored through one view
+//! are visible to sibling readers before write-back; write-back
+//! happens once; and a [`VfsFile::map_sync`] generation bump (a Sea
+//! mid-stream spill) orphans all of an identity's stale frames at
+//! once. Every backend gets [`VfsFile::map`] for free; `SeaFs` hooks
+//! in deliberately (faults heat the placement engine on reader and
+//! writer handles alike, views follow mid-stream spills, dirty
 //! write-back of spilled files lands on the PFS replica).
 //!
 //! A separate `cdylib` (`sea-interpose`) provides the literal
 //! `LD_PRELOAD` mechanism for unmodified binaries; it reuses the same
 //! translation logic (offset ops like `pread`/`pwrite` ride on
-//! descriptors whose path was translated at `open`). Its `mmap(2)`
-//! wrapper is still a stub — mapped interception works at the library
-//! level only.
+//! descriptors whose path was translated at `open`) and carries its
+//! own user-space mapping path: `mmap(MAP_PRIVATE|PROT_READ)` and
+//! writable `MAP_SHARED` on translated descriptors are emulated over a
+//! shim-global `(device, inode, page)` frame pool with write-back on
+//! `msync`/`munmap` — see the `sea-interpose` crate docs for exact
+//! coverage and remaining gaps.
 
 pub mod mover;
 pub mod pages;
@@ -198,6 +208,20 @@ pub trait VfsFile: Send {
     /// heat files exactly like handle reads.
     fn note_map_fault(&mut self, off: u64, len: u64) {
         let _ = (off, len);
+    }
+
+    /// A stable identity for the *file* this handle addresses, shared
+    /// by every handle open on the same file, or `None` when the
+    /// backend cannot name one. [`MappedView`]s key cache frames by
+    /// it: handles reporting the same identity share frames — a fault
+    /// through one view is a hit for every sibling (see [`pages`]) —
+    /// while `None` falls back to a private per-view namespace.
+    /// Backends derive it from coordinates that survive reopens but
+    /// never outlive the file: device + inode for `RealFs`, instance +
+    /// path for stripe-mode `StripedFs`, mount + path + registry epoch
+    /// for `SeaFs`.
+    fn map_identity(&self) -> Option<u64> {
+        None
     }
 
     /// Map `[off, off + len)` of this handle as an mmap-style

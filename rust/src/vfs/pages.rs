@@ -25,7 +25,23 @@
 //! are evicted until the new page fits (dirty pages are pinned — they
 //! are only reclaimed through write-back, never dropped).
 //!
-//! Backends hook in through two [`VfsFile`] methods with no-op
+//! **Frames are shared across views.** Pages are keyed by
+//! `(file identity, map generation, page index)`, where the identity
+//! comes from [`VfsFile::map_identity`]: every view of one file — any
+//! handle, any window — faults a given page once; later views hit the
+//! same frame ([`PageCacheStats::shared_hits`]), and two views racing
+//! to fault one page collapse onto a single frame at insert
+//! ([`PageCacheStats::frames_deduped`]). Writes are coherent: a dirty
+//! range stored through one view is immediately visible to every
+//! reader of the frame, and write-back happens once (the first flusher
+//! clears the frame's dirty range; sibling flushers find it clean and
+//! skip). A [`VfsFile::map_sync`] generation bump re-keys the whole
+//! identity — every stale frame is orphaned at once (spill
+//! invalidation), to be collected by LRU eviction and by the purge at
+//! last unmap. Handles without an identity fall back to a private
+//! per-view key namespace and behave exactly as before.
+//!
+//! Backends hook in through three [`VfsFile`] methods with no-op
 //! defaults:
 //!
 //! * [`VfsFile::map_sync`] returns the handle's **map generation**; a
@@ -36,18 +52,14 @@
 //!   generation, so a mid-stream spill relocates a live view onto the
 //!   PFS replica instead of losing dirty bytes to an orphaned device
 //!   inode.
-//! * [`VfsFile::note_map_fault`] observes every fault; Sea writer
-//!   handles feed it into
+//! * [`VfsFile::note_map_fault`] observes every fault; Sea handles —
+//!   reader and writer alike — feed it into
 //!   [`crate::placement::PlacementEngine::on_access`], so mapped reads
 //!   heat files for the `TemperatureEngine` exactly like handle reads.
-//!
-//! A view over a *read-opened* Sea handle uses the defaults: it pins
-//! the inode it was opened on, exactly like a real `mmap` keeps
-//! showing the mapped inode after a rename or replacement — correct
-//! for immutable inputs, and identical to what a plain `pread` reader
-//! holding that handle would see. Only writer-handle views carry the
-//! relocation-following guarantee (that is where bytes could otherwise
-//! be lost, not merely stale).
+//! * [`VfsFile::map_identity`] names the *file* behind the handle
+//!   (device/inode for `RealFs`, mount + path + entry epoch for
+//!   `SeaFs`); handles agreeing on it share frames. `None` keys pages
+//!   privately per view.
 //!
 //! Because the machinery runs on the plain handle API, `RealFs`,
 //! `RateLimitedFs` and `StripedFs` (both layouts) get mapping for free;
@@ -93,6 +105,12 @@ pub struct PageCacheStats {
     pub evictions: u64,
     /// Dirty bytes written back through handles.
     pub writeback_bytes: u64,
+    /// Hits served to a view other than the one that faulted the frame
+    /// in — cross-view frame sharing at work.
+    pub shared_hits: u64,
+    /// Duplicate concurrent faults collapsed at insert: the losing
+    /// faulter dropped its copy and adopted the winner's frame.
+    pub frames_deduped: u64,
     /// Page bytes currently resident.
     pub resident_bytes: u64,
     /// High-water mark of resident page bytes — the bounded-memory
@@ -100,16 +118,20 @@ pub struct PageCacheStats {
     pub peak_resident_bytes: u64,
 }
 
-/// `(mapping id, page index)`: mapping ids are unique per view, so no
-/// two views ever contend on one page entry.
-type PageKey = (u64, u64);
+/// `(file identity, map generation, page index)`: views of one file
+/// share frames — the identity comes from [`VfsFile::map_identity`]
+/// (shifted into an even namespace), or a private per-view odd
+/// fallback when the backend cannot name the file. A `map_sync`
+/// generation bump re-keys the whole identity, orphaning every stale
+/// frame at once.
+type PageKey = (u64, u64, u64);
 
 struct Page {
     /// Exactly `page_bytes` long; the tail past end-of-file is zeros.
     data: Vec<u8>,
-    /// Map generation stamped at fault; a view whose generation moved
-    /// on treats the page as a miss.
-    gen: u64,
+    /// View id that faulted the frame in; a hit from any *other* view
+    /// counts as [`PageCacheStats::shared_hits`].
+    owner: u64,
     /// Current position in the shard's LRU index.
     tick: u64,
     /// Dirty byte range within the page (`start..end`), if any. Dirty
@@ -134,6 +156,10 @@ pub struct PageCache {
     /// check and jointly overshoot. Held only while evicting/counting,
     /// never during fault I/O.
     admission: Mutex<()>,
+    /// Live-view refcount per identity: frames persist across sibling
+    /// views and are purged only when the *last* view of an identity
+    /// unmaps (private identities trivially count one view).
+    maps: Mutex<HashMap<u64, usize>>,
     clock: AtomicU64,
     ids: AtomicU64,
     resident: AtomicU64,
@@ -142,6 +168,8 @@ pub struct PageCache {
     hits: AtomicU64,
     evictions: AtomicU64,
     writeback_bytes: AtomicU64,
+    shared_hits: AtomicU64,
+    frames_deduped: AtomicU64,
 }
 
 impl PageCache {
@@ -155,6 +183,7 @@ impl PageCache {
             budget: budget.max(page_bytes as u64),
             shards: (0..PAGE_SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
             admission: Mutex::new(()),
+            maps: Mutex::new(HashMap::new()),
             clock: AtomicU64::new(0),
             ids: AtomicU64::new(0),
             resident: AtomicU64::new(0),
@@ -163,6 +192,8 @@ impl PageCache {
             hits: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             writeback_bytes: AtomicU64::new(0),
+            shared_hits: AtomicU64::new(0),
+            frames_deduped: AtomicU64::new(0),
         }
     }
 
@@ -183,6 +214,8 @@ impl PageCache {
             hits: self.hits.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             writeback_bytes: self.writeback_bytes.load(Ordering::Relaxed),
+            shared_hits: self.shared_hits.load(Ordering::Relaxed),
+            frames_deduped: self.frames_deduped.load(Ordering::Relaxed),
             resident_bytes: self.resident.load(Ordering::Relaxed),
             peak_resident_bytes: self.peak_resident.load(Ordering::Relaxed),
         }
@@ -193,12 +226,13 @@ impl PageCache {
     }
 
     fn shard_of(&self, key: &PageKey) -> usize {
-        // mapping ids are sequential and page indices contiguous; mix
-        // them so one view's pages spread over the shards
+        // page indices are contiguous and generations small; mix all
+        // three coordinates so one file's pages spread over the shards
         let h = key
             .0
             .wrapping_mul(0x9e37_79b9_7f4a_7c15)
-            .wrapping_add(key.1.wrapping_mul(0xff51_afd7_ed55_8ccd));
+            .wrapping_add(key.1.wrapping_mul(0xc2b2_ae3d_27d4_eb4f))
+            .wrapping_add(key.2.wrapping_mul(0xff51_afd7_ed55_8ccd));
         (h >> 32) as usize % self.shards.len()
     }
 
@@ -239,9 +273,10 @@ impl PageCache {
         false
     }
 
-    /// Forget every page of mapping `id` (view drop). Dirty ranges are
-    /// assumed already written back by the caller.
-    fn purge(&self, id: u64) {
+    /// Forget every frame of identity `ident`, across all generations
+    /// (last unmap). Dirty ranges are assumed already written back by
+    /// the caller.
+    fn purge(&self, ident: u64) {
         let mut dropped = 0u64;
         for shard in &self.shards {
             let mut guard = shard.lock().expect("page shard poisoned");
@@ -249,7 +284,7 @@ impl PageCache {
             let ticks: Vec<u64> = sh
                 .pages
                 .iter()
-                .filter(|(key, _)| key.0 == id)
+                .filter(|(key, _)| key.0 == ident)
                 .map(|(_, p)| p.tick)
                 .collect();
             if ticks.is_empty() {
@@ -276,6 +311,25 @@ pub fn global() -> &'static Arc<PageCache> {
     GLOBAL.get_or_init(|| Arc::new(PageCache::new(DEFAULT_PAGE_BYTES, DEFAULT_PAGE_BUDGET)))
 }
 
+/// FNV-1a over a sequence of byte strings — the house hash for
+/// [`VfsFile::map_identity`] implementations. Backends mix a stable
+/// per-source nonce (mount/instance) with the file's coordinates
+/// (device + inode, or path + epoch) so identities agree across
+/// handles of one file but never across distinct sources.
+pub(crate) fn identity_hash(parts: &[&[u8]]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for part in parts {
+        for &b in *part {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        // length separator, so ("ab", "c") never equals ("a", "bc")
+        h ^= part.len() as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// What a page access does with the page's bytes.
 enum PageOp<'a> {
     /// Copy `out.len()` bytes starting at `intra` out of the page.
@@ -292,16 +346,26 @@ enum PageOp<'a> {
 pub struct MappedView<'f> {
     cache: Arc<PageCache>,
     file: &'f mut (dyn VfsFile + 'f),
+    /// Unique per view — the frame-ownership tag behind
+    /// [`PageCacheStats::shared_hits`].
     id: u64,
+    /// Frame-key namespace: the handle's [`VfsFile::map_identity`]
+    /// shifted even (shared with every sibling view of the file), or
+    /// this view's id shifted odd (private fallback).
+    ident: u64,
     base: u64,
     len: u64,
     mode: MapMode,
     /// Map generation from [`VfsFile::map_sync`]; a change flushes
-    /// dirty pages through the refreshed handle and lazily re-faults
-    /// the clean ones.
+    /// dirty pages through the refreshed handle, then moves the view
+    /// onto the new generation's key space — the old generation's
+    /// frames are orphaned wholesale and age out via LRU / last-unmap
+    /// purge.
     gen: u64,
     /// Page indices this view has dirtied (for msync / drop / budget
-    /// self-reclaim without scanning the shards).
+    /// self-reclaim without scanning the shards). Always refers to
+    /// `(ident, gen)` keys: dirty pages are flushed before the view
+    /// adopts a new generation.
     dirty: BTreeSet<u64>,
 }
 
@@ -321,10 +385,23 @@ impl<'f> MappedView<'f> {
         }
         let gen = file.map_sync()?;
         let id = cache.ids.fetch_add(1, Ordering::Relaxed) + 1;
+        let ident = match file.map_identity() {
+            // shared namespace (even): every view of this file lands
+            // on the same frame keys
+            Some(h) => h << 1,
+            // no identity: a private namespace (odd) that can never
+            // collide with a shared one
+            None => (id << 1) | 1,
+        };
+        {
+            let mut maps = cache.maps.lock().expect("page maps poisoned");
+            *maps.entry(ident).or_insert(0) += 1;
+        }
         Ok(MappedView {
             cache,
             file,
             id,
+            ident,
             base: off,
             len,
             mode,
@@ -446,7 +523,7 @@ impl<'f> MappedView<'f> {
         let last = last_excl - 1;
         let mut dropped = 0u64;
         for idx in first..=last {
-            let key = (self.id, idx);
+            let key = (self.ident, self.gen, idx);
             let mut guard = self.cache.shards[self.cache.shard_of(&key)]
                 .lock()
                 .expect("page shard poisoned");
@@ -467,8 +544,12 @@ impl<'f> MappedView<'f> {
 
     /// Refresh the handle's map generation; on a change (e.g. a Sea
     /// mid-stream spill relocated the file), dirty pages are written
-    /// back through the refreshed handle and clean pages are left to
-    /// re-fault lazily via the per-page generation stamp.
+    /// back through the refreshed handle — at the *old* generation's
+    /// keys, where they live — and only then does the view adopt the
+    /// new generation. The generation sits in the frame key, so the
+    /// bump orphans every stale frame of this identity at once: no
+    /// view, this one or a sibling, can resurrect device bytes through
+    /// them; they age out via LRU eviction and the last-unmap purge.
     fn sync_generation(&mut self) -> Result<()> {
         let gen = self.file.map_sync()?;
         if gen != self.gen {
@@ -486,21 +567,22 @@ impl<'f> MappedView<'f> {
         let pb = self.cache.page_bytes as u64;
         let idxs: Vec<u64> = self.dirty.iter().copied().collect();
         for idx in idxs {
-            let key = (self.id, idx);
+            let key = (self.ident, self.gen, idx);
             let shard = &self.cache.shards[self.cache.shard_of(&key)];
             // copy the dirty range out under the shard lock — the page
             // stays dirty (and therefore eviction-pinned) until the
             // pwrite succeeds, so a failed or interrupted write-back
-            // can never lose the only copy of the bytes. Only this
-            // view mutates its pages, so clearing the flag afterwards
-            // cannot race another writer.
+            // can never lose the only copy of the bytes. Frames are
+            // shared: the first flusher writes the merged range and
+            // clears the flag; a sibling that also dirtied the page
+            // finds it clean and skips — write-back happens once.
             let pending = {
                 let mut sh = shard.lock().expect("page shard poisoned");
                 sh.pages
                     .get_mut(&key)
-                    .and_then(|p| p.dirty.map(|(a, b)| (a, p.data[a..b].to_vec())))
+                    .and_then(|p| p.dirty.map(|(a, b)| (a, b, p.data[a..b].to_vec())))
             };
-            if let Some((a, seg)) = pending {
+            if let Some((a, b, seg)) = pending {
                 let file_off = idx * pb + a as u64;
                 // on error the page is still dirty and `idx` is still
                 // in the view's dirty set: a later msync (or the drop
@@ -511,7 +593,12 @@ impl<'f> MappedView<'f> {
                     .fetch_add(seg.len() as u64, Ordering::Relaxed);
                 let mut sh = shard.lock().expect("page shard poisoned");
                 if let Some(p) = sh.pages.get_mut(&key) {
-                    p.dirty = None;
+                    // clear only what we wrote; a concurrent store that
+                    // extended the range keeps the frame dirty for its
+                    // own flusher
+                    if p.dirty == Some((a, b)) {
+                        p.dirty = None;
+                    }
                 }
             }
             self.dirty.remove(&idx);
@@ -519,37 +606,30 @@ impl<'f> MappedView<'f> {
         Ok(())
     }
 
-    /// Serve one page access: cache hit, or fault the page in (making
-    /// room under the budget first).
+    /// Serve one page access: cache hit (on any sibling view's frame),
+    /// or fault the page in (making room under the budget first).
     fn page_op(&mut self, idx: u64, op: PageOp<'_>) -> Result<()> {
         let pb = self.cache.page_bytes;
-        let key = (self.id, idx);
+        let key = (self.ident, self.gen, idx);
         let shard_idx = self.cache.shard_of(&key);
-        // fast path: the page is resident and current
+        // fast path: the frame is resident — faulted by this view or
+        // by any sibling of the same identity + generation. Stale
+        // generations never reach this probe: the bump moved the view
+        // onto fresh keys, so orphaned frames are simply unreachable.
         {
             let mut guard = self.cache.shards[shard_idx].lock().expect("page shard poisoned");
             let sh = &mut *guard;
-            let mut stale = false;
             if let Some(p) = sh.pages.get_mut(&key) {
-                if p.gen == self.gen {
-                    let t = self.cache.tick();
-                    sh.lru.remove(&p.tick);
-                    p.tick = t;
-                    sh.lru.insert(t, key);
-                    apply_op(p, op);
-                    self.cache.hits.fetch_add(1, Ordering::Relaxed);
-                    return Ok(());
+                let t = self.cache.tick();
+                sh.lru.remove(&p.tick);
+                p.tick = t;
+                sh.lru.insert(t, key);
+                if p.owner != self.id {
+                    self.cache.shared_hits.fetch_add(1, Ordering::Relaxed);
                 }
-                stale = true;
-            }
-            if stale {
-                // superseded by a generation change; sync_generation
-                // already flushed dirty ranges, so dropping is safe
-                if let Some(p) = sh.pages.remove(&key) {
-                    sh.lru.remove(&p.tick);
-                }
-                drop(guard);
-                self.cache.shrink_resident(1);
+                apply_op(p, op);
+                self.cache.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(());
             }
         }
         // miss: make room under the budget and *reserve* the incoming
@@ -629,12 +709,28 @@ impl<'f> MappedView<'f> {
             }
         }
         cache.faults.fetch_add(1, Ordering::Relaxed);
-        let mut page = Page { data, gen: self.gen, tick: 0, dirty: None };
-        apply_op(&mut page, op);
-        let t = cache.tick();
-        page.tick = t;
+        let mut page = Page { data, owner: self.id, tick: 0, dirty: None };
         {
-            let mut sh = cache.shards[shard_idx].lock().expect("page shard poisoned");
+            let mut guard = cache.shards[shard_idx].lock().expect("page shard poisoned");
+            let sh = &mut *guard;
+            if let Some(winner) = sh.pages.get_mut(&key) {
+                // a sibling view faulted the same page while our pread
+                // ran: keep the installed frame (it may already carry
+                // dirty bytes), apply our op to it, drop our copy and
+                // return the budget reservation
+                let t = cache.tick();
+                sh.lru.remove(&winner.tick);
+                winner.tick = t;
+                sh.lru.insert(t, key);
+                apply_op(winner, op);
+                drop(guard);
+                cache.shrink_resident(1);
+                cache.frames_deduped.fetch_add(1, Ordering::Relaxed);
+                return Ok(());
+            }
+            apply_op(&mut page, op);
+            let t = cache.tick();
+            page.tick = t;
             sh.lru.insert(t, key);
             sh.pages.insert(key, page);
         }
@@ -665,15 +761,32 @@ fn apply_op(p: &mut Page, op: PageOp<'_>) {
 impl Drop for MappedView<'_> {
     fn drop(&mut self) {
         // best-effort msync: refresh the handle (a relocated Sea file
-        // redirects the write-back), then flush. Errors are swallowed —
-        // drop has nowhere to report them; call `msync` to observe.
+        // redirects the write-back) but keep `self.gen` — the dirty
+        // frames live at the pre-refresh generation's keys. Errors are
+        // swallowed — drop has nowhere to report them; call `msync` to
+        // observe.
         if !self.dirty.is_empty() {
-            if let Ok(gen) = self.file.map_sync() {
-                self.gen = gen;
-            }
+            let _ = self.file.map_sync();
             let _ = self.flush_dirty();
         }
-        self.cache.purge(self.id);
+        // frames persist while sibling views live; the last view of an
+        // identity to unmap purges every generation's frames
+        let last = {
+            let mut maps = self.cache.maps.lock().expect("page maps poisoned");
+            match maps.get_mut(&self.ident) {
+                Some(n) if *n > 1 => {
+                    *n -= 1;
+                    false
+                }
+                _ => {
+                    maps.remove(&self.ident);
+                    true
+                }
+            }
+        };
+        if last {
+            self.cache.purge(self.ident);
+        }
     }
 }
 
@@ -886,6 +999,167 @@ mod tests {
         assert_eq!(warm.hits - cold.hits, 4);
         assert_eq!(buf, data);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// ISSUE 6 tentpole: two views of one file share frames — the
+    /// second view's pass is all hits on the first view's frames, no
+    /// re-faults — and frames persist until the *last* view unmaps.
+    #[test]
+    fn two_views_share_frames_and_fault_once() {
+        let dir = scratch("pages_share");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let data = payload(4 * PAGE, 21);
+        fs_.write(Path::new("s.dat"), &data).unwrap();
+        let cache = cache(16);
+        let mut fa = fs_.open(Path::new("s.dat"), OpenMode::Read).unwrap();
+        let mut fb = fs_.open(Path::new("s.dat"), OpenMode::Read).unwrap();
+        let mut va = fa.map(&cache, 0, (4 * PAGE) as u64, MapMode::Read).unwrap();
+        let mut vb = fb.map(&cache, 0, (4 * PAGE) as u64, MapMode::Read).unwrap();
+        let mut buf = vec![0u8; 4 * PAGE];
+        va.read_at(&mut buf, 0).unwrap();
+        assert_eq!(buf, data);
+        assert_eq!(cache.stats().faults, 4);
+        buf.fill(0);
+        vb.read_at(&mut buf, 0).unwrap();
+        assert_eq!(buf, data);
+        let st = cache.stats();
+        assert_eq!(st.faults, 4, "second view re-used the first view's frames: {st:?}");
+        assert_eq!(st.shared_hits, 4, "hits on another view's frames: {st:?}");
+        drop(va);
+        assert!(
+            cache.stats().resident_bytes > 0,
+            "frames persist while a sibling view lives"
+        );
+        drop(vb);
+        assert_eq!(cache.stats().resident_bytes, 0, "last unmap purges the identity");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// ISSUE 6 satellite: a write through view A is read back through
+    /// view B from the same frame — no re-fault — and write-back of
+    /// the shared dirty range happens once.
+    #[test]
+    fn writes_are_coherent_across_views_and_flush_once() {
+        let dir = scratch("pages_coherent");
+        let fs_ = RealFs::new(&dir).unwrap();
+        fs_.write(Path::new("c.dat"), &vec![0u8; 2 * PAGE]).unwrap();
+        let cache = cache(8);
+        let mut fa = fs_.open(Path::new("c.dat"), OpenMode::ReadWrite).unwrap();
+        let mut fb = fs_.open(Path::new("c.dat"), OpenMode::ReadWrite).unwrap();
+        let mut va = fa.map(&cache, 0, (2 * PAGE) as u64, MapMode::Write).unwrap();
+        let mut vb = fb.map(&cache, 0, (2 * PAGE) as u64, MapMode::Write).unwrap();
+        va.write_at(b"coherent", 100).unwrap();
+        let after_write = cache.stats().faults;
+        let mut got = [0u8; 8];
+        vb.read_at(&mut got, 100).unwrap();
+        assert_eq!(&got, b"coherent", "B sees A's not-yet-written-back bytes");
+        assert_eq!(cache.stats().faults, after_write, "B hit A's frame, no re-fault");
+        // nothing reached the file yet
+        assert_eq!(&fs_.read(Path::new("c.dat")).unwrap()[100..108], &[0u8; 8]);
+        // B extends the shared dirty range, then both flush: the first
+        // flusher writes the merged range, the second finds it clean
+        vb.write_at(b"!", 108).unwrap();
+        va.msync().unwrap();
+        let wb = cache.stats().writeback_bytes;
+        vb.msync().unwrap();
+        assert_eq!(cache.stats().writeback_bytes, wb, "second flusher skipped a clean frame");
+        let on_disk = fs_.read(Path::new("c.dat")).unwrap();
+        assert_eq!(&on_disk[100..109], b"coherent!");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// ISSUE 6 satellite (race-checked under TSan in CI): concurrent
+    /// views fault each page effectively once — duplicate concurrent
+    /// faults collapse onto one frame at insert (`frames_deduped`), so
+    /// installed frames never exceed the page count.
+    #[test]
+    fn concurrent_views_fault_each_page_at_most_once() {
+        let dir = scratch("pages_race");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let data = payload(8 * PAGE, 13);
+        fs_.write(Path::new("r.dat"), &data).unwrap();
+        let cache = cache(32);
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let cache = cache.clone();
+                let fs_ = &fs_;
+                let data = &data;
+                s.spawn(move || {
+                    let mut f = fs_.open(Path::new("r.dat"), OpenMode::Read).unwrap();
+                    let mut view = f.map(&cache, 0, (8 * PAGE) as u64, MapMode::Read).unwrap();
+                    let mut buf = vec![0u8; PAGE];
+                    for p in 0..8usize {
+                        let n = view.read_at(&mut buf, (p * PAGE) as u64).unwrap();
+                        assert_eq!(n, PAGE);
+                        assert_eq!(&buf[..], &data[p * PAGE..(p + 1) * PAGE]);
+                    }
+                });
+            }
+        });
+        let st = cache.stats();
+        assert_eq!(st.hits + st.faults, 16, "every access is a hit or a fault: {st:?}");
+        assert_eq!(
+            st.faults - st.frames_deduped,
+            8,
+            "one installed frame per page across both views: {st:?}"
+        );
+        assert_eq!(cache.stats().resident_bytes, 0, "both views unmapped");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// An in-memory handle with no `map_identity`: each view keeps a
+    /// private frame namespace (the PR 5 behaviour).
+    struct AnonFile(Vec<u8>);
+
+    impl VfsFile for AnonFile {
+        fn pread(&mut self, buf: &mut [u8], off: u64) -> crate::error::Result<usize> {
+            let off = off as usize;
+            if off >= self.0.len() {
+                return Ok(0);
+            }
+            let n = buf.len().min(self.0.len() - off);
+            buf[..n].copy_from_slice(&self.0[off..off + n]);
+            Ok(n)
+        }
+        fn pwrite(&mut self, data: &[u8], off: u64) -> crate::error::Result<usize> {
+            let end = off as usize + data.len();
+            if self.0.len() < end {
+                self.0.resize(end, 0);
+            }
+            self.0[off as usize..end].copy_from_slice(data);
+            Ok(data.len())
+        }
+        fn set_len(&mut self, len: u64) -> crate::error::Result<()> {
+            self.0.resize(len as usize, 0);
+            Ok(())
+        }
+        fn fsync(&mut self) -> crate::error::Result<()> {
+            Ok(())
+        }
+        fn len(&self) -> crate::error::Result<u64> {
+            Ok(self.0.len() as u64)
+        }
+    }
+
+    #[test]
+    fn identityless_handles_fall_back_to_private_frames() {
+        let cache = cache(16);
+        let bytes = payload(2 * PAGE, 17);
+        let mut fa = AnonFile(bytes.clone());
+        let mut fb = AnonFile(bytes.clone());
+        let mut va =
+            (&mut fa as &mut dyn VfsFile).map(&cache, 0, (2 * PAGE) as u64, MapMode::Read).unwrap();
+        let mut vb =
+            (&mut fb as &mut dyn VfsFile).map(&cache, 0, (2 * PAGE) as u64, MapMode::Read).unwrap();
+        let mut buf = vec![0u8; 2 * PAGE];
+        va.read_at(&mut buf, 0).unwrap();
+        vb.read_at(&mut buf, 0).unwrap();
+        let st = cache.stats();
+        assert_eq!(st.faults, 4, "no identity, no sharing: {st:?}");
+        assert_eq!(st.shared_hits, 0);
+        va.read_at(&mut buf, 0).unwrap();
+        vb.read_at(&mut buf, 0).unwrap();
+        assert_eq!(cache.stats().hits, 4, "each view still hits its own frames");
     }
 
     #[test]

@@ -118,15 +118,19 @@ impl VfsFile for RateLimitedFile {
     }
 
     // mapped views fault through pread / write back through pwrite, so
-    // per-page accounting happens above; the generation and fault hooks
-    // must still reach the wrapped handle (e.g. a Sea writer below a
-    // rate limiter)
+    // per-page accounting happens above; the generation, fault and
+    // identity hooks must still reach the wrapped handle (e.g. a Sea
+    // writer below a rate limiter)
     fn map_sync(&mut self) -> Result<u64> {
         self.inner.map_sync()
     }
 
     fn note_map_fault(&mut self, off: u64, len: u64) {
         self.inner.note_map_fault(off, len)
+    }
+
+    fn map_identity(&self) -> Option<u64> {
+        self.inner.map_identity()
     }
 }
 

@@ -110,6 +110,17 @@ impl VfsFile for RealFile {
             .map(|m| m.len())
             .map_err(|e| Error::io(&self.path, e))
     }
+
+    fn map_identity(&self) -> Option<u64> {
+        // device + inode name the file across every handle (and across
+        // renames), exactly like the kernel page cache keys mappings
+        use std::os::unix::fs::MetadataExt;
+        let md = self.file.metadata().ok()?;
+        Some(crate::vfs::pages::identity_hash(&[
+            &md.dev().to_le_bytes(),
+            &md.ino().to_le_bytes(),
+        ]))
+    }
 }
 
 impl Vfs for RealFs {

@@ -283,6 +283,11 @@ pub struct MgmtCounters {
     pub page_evictions: u64,
     /// Dirty mapped bytes written back through handles.
     pub page_writeback_bytes: u64,
+    /// Page hits served to a view other than the one that faulted the
+    /// frame in — cross-view frame sharing at work.
+    pub page_shared_hits: u64,
+    /// Duplicate concurrent page faults collapsed onto one frame.
+    pub page_frames_deduped: u64,
     /// Page bytes resident right now.
     pub page_resident_bytes: u64,
     /// High-water mark of resident page bytes: the mapped-I/O
@@ -853,6 +858,8 @@ impl SeaFs {
         c.page_hits = p.hits;
         c.page_evictions = p.evictions;
         c.page_writeback_bytes = p.writeback_bytes;
+        c.page_shared_hits = p.shared_hits;
+        c.page_frames_deduped = p.frames_deduped;
         c.page_resident_bytes = p.resident_bytes;
         c.page_peak_resident_bytes = p.peak_resident_bytes;
         c
@@ -1052,6 +1059,7 @@ impl SeaFs {
                             dev,
                             epoch,
                             append: false,
+                            reader: false,
                             file,
                         }));
                     }
@@ -1085,6 +1093,7 @@ impl SeaFs {
                     dev: Some(dev),
                     epoch: gen,
                     append: false,
+                    reader: false,
                     file,
                 }))
             }
@@ -1155,6 +1164,7 @@ impl SeaFs {
                             dev,
                             epoch,
                             append: true,
+                            reader: false,
                             file,
                         }))
                     }
@@ -1170,6 +1180,7 @@ impl SeaFs {
                 dev: Some(dev),
                 epoch: gen,
                 append: true,
+                reader: false,
                 file,
             })),
             // no local entry: append to the PFS-resident file (the PFS
@@ -1319,23 +1330,31 @@ enum Step {
     Busy,
 }
 
-/// Writer handle on a placed file: grows the registry entry (and the
-/// space ledger) as bytes land, spills to the PFS when its device
-/// fills, and triggers deferred management when the last writer closes.
+/// Handle on a placed file. Writers grow the registry entry (and the
+/// space ledger) as bytes land, spill to the PFS when their device
+/// fills, and trigger deferred management when the last writer closes.
+/// Read opens get the same wrapper in `reader` mode: no writer count,
+/// no accounting — but preads heat the placement engine, and the
+/// registry hooks (`map_sync` / `map_identity`) let read views follow
+/// a spill and share page frames with every other handle of the file.
 struct SeaFile {
     shared: Arc<Shared>,
     rel: String,
-    /// Device this handle currently writes to; `None` once it follows a
-    /// spill onto the PFS.
+    /// Device this handle currently targets; `None` once it follows a
+    /// spill onto the PFS (or was opened against the PFS copy).
     dev: Option<DeviceRef>,
-    /// Epoch of the entry this handle's writer count lives in; a
-    /// mismatch means the entry was replaced (`drop_local`) and this
-    /// handle's file is an orphaned inode — writes still land there,
-    /// but registry and ledger must not be touched.
+    /// Epoch of the entry this handle belongs to (for writers, where
+    /// its writer count lives); a mismatch means the entry was replaced
+    /// (`drop_local`) and this handle's file is an orphaned inode —
+    /// I/O still lands there, but registry and ledger must not be
+    /// touched. Readers of an untracked (PFS-only) file carry epoch 0.
     epoch: u64,
     /// Append handle: offsets are resolved from the entry's size under
     /// the shard lock; the caller's offset is ignored.
     append: bool,
+    /// Read-only handle: writes are refused, close-time management and
+    /// the writer count are skipped entirely.
+    reader: bool,
     file: Box<dyn VfsFile>,
 }
 
@@ -1633,12 +1652,10 @@ impl SeaFile {
     }
 
     /// Follow a sibling handle's spill: swap this handle's file for a
-    /// PFS one.
+    /// PFS one (readers reopen read-only).
     fn reopen_on_pfs(&mut self) -> Result<()> {
-        self.file = self
-            .shared
-            .pfs
-            .open(Path::new(&self.rel), OpenMode::ReadWrite)?;
+        let mode = if self.reader { OpenMode::Read } else { OpenMode::ReadWrite };
+        self.file = self.shared.pfs.open(Path::new(&self.rel), mode)?;
         self.dev = None;
         Ok(())
     }
@@ -1659,10 +1676,22 @@ fn disarm_spill(sh: &Shared, rel: &str, epoch: u64) {
 
 impl VfsFile for SeaFile {
     fn pread(&mut self, buf: &mut [u8], off: u64) -> Result<usize> {
+        if self.reader {
+            // reads heat the file for the TemperatureEngine just like
+            // writes do — a hot reader must outlive a cold writer in
+            // victim elections (writer handles already heat on pwrite)
+            self.shared.engine.on_access(&self.rel, Access::Read);
+        }
         self.file.pread(buf, off)
     }
 
     fn pwrite(&mut self, data: &[u8], off: u64) -> Result<usize> {
+        if self.reader {
+            return Err(Error::InvalidArg(format!(
+                "{:?}: write through a read-only sea handle",
+                self.rel
+            )));
+        }
         if data.is_empty() {
             return Ok(0);
         }
@@ -1692,6 +1721,12 @@ impl VfsFile for SeaFile {
     }
 
     fn set_len(&mut self, len: u64) -> Result<()> {
+        if self.reader {
+            return Err(Error::InvalidArg(format!(
+                "{:?}: truncate through a read-only sea handle",
+                self.rel
+            )));
+        }
         loop {
             let epoch = self.epoch;
             let on_pfs = self.dev.is_none();
@@ -1767,13 +1802,13 @@ impl VfsFile for SeaFile {
         self.file.len()
     }
 
-    /// The deliberate PageCache hook: mapped views over a Sea writer
-    /// handle follow the registry. The returned generation bumps on
-    /// every (re)placement and spill, so a view invalidates (and
-    /// transparently re-faults) its pages instead of serving stale
-    /// device bytes; when a sibling's mid-stream spill relocated the
-    /// file, the handle is re-pointed at the PFS replica *before* the
-    /// view writes dirty pages back or faults fresh ones.
+    /// The deliberate PageCache hook: mapped views over a Sea handle —
+    /// reader and writer alike — follow the registry. The returned
+    /// generation bumps on every (re)placement and spill, so a view
+    /// invalidates (and transparently re-faults) its pages instead of
+    /// serving stale device bytes; when a sibling's mid-stream spill
+    /// relocated the file, the handle is re-pointed at the PFS replica
+    /// *before* the view writes dirty pages back or faults fresh ones.
     fn map_sync(&mut self) -> Result<u64> {
         let epoch = self.epoch;
         let state = self
@@ -1808,10 +1843,29 @@ impl VfsFile for SeaFile {
         let _ = (off, len);
         self.shared.engine.on_access(&self.rel, Access::Read);
     }
+
+    /// Frame-sharing identity: mount (the `Shared` allocation is as
+    /// unique and stable as the mount itself) + path + entry epoch.
+    /// Every handle of one placed file agrees on it whatever inode it
+    /// currently targets, so views share frames across readers,
+    /// writers and spill relocations; the epoch keeps a superseded
+    /// handle (orphaned inode) from sharing frames with a recreated
+    /// file of the same name.
+    fn map_identity(&self) -> Option<u64> {
+        let mount = Arc::as_ptr(&self.shared) as u64;
+        Some(crate::vfs::pages::identity_hash(&[
+            &mount.to_le_bytes(),
+            self.rel.as_bytes(),
+            &self.epoch.to_le_bytes(),
+        ]))
+    }
 }
 
 impl Drop for SeaFile {
     fn drop(&mut self) {
+        if self.reader {
+            return; // readers hold no writer count, owe no management
+        }
         let sh = &self.shared;
         // Membership is by entry identity (epoch), not content
         // generation: a concurrent in-place writer bumps the generation
@@ -2042,7 +2096,12 @@ impl Vfs for SeaFs {
             Some(rel) => match mode {
                 OpenMode::Read => {
                     self.shared.engine.on_access(&rel, Access::Read);
-                    match self.shared.registry.get(&rel) {
+                    // wrap the backend handle in a reader-mode SeaFile:
+                    // preads keep heating the engine, and the registry
+                    // hooks (map_sync / map_identity) let read views
+                    // follow a spill and share frames with writers —
+                    // instead of pinning a raw inode across relocation
+                    let (file, dev, epoch) = match self.shared.registry.get(&rel) {
                         Some(e) => match e.dev {
                             Some(d) => {
                                 match self
@@ -2050,21 +2109,39 @@ impl Vfs for SeaFs {
                                     .backend(d)
                                     .open(Path::new(&rel), OpenMode::Read)
                                 {
-                                    Ok(f) => Ok(f),
+                                    Ok(f) => (f, Some(d), e.epoch),
                                     // evicted between lookup and open:
                                     // the flush that preceded eviction
                                     // put a PFS copy there
-                                    Err(Error::NotFound(_)) => {
-                                        self.shared.pfs.open(Path::new(&rel), OpenMode::Read)
-                                    }
-                                    Err(e) => Err(e),
+                                    Err(Error::NotFound(_)) => (
+                                        self.shared.pfs.open(Path::new(&rel), OpenMode::Read)?,
+                                        None,
+                                        e.epoch,
+                                    ),
+                                    Err(err) => return Err(err),
                                 }
                             }
                             // spilled: the live copy is on the PFS
-                            None => self.shared.pfs.open(Path::new(&rel), OpenMode::Read),
+                            None => (
+                                self.shared.pfs.open(Path::new(&rel), OpenMode::Read)?,
+                                None,
+                                e.epoch,
+                            ),
                         },
-                        None => self.shared.pfs.open(Path::new(&rel), OpenMode::Read),
-                    }
+                        // untracked: a PFS-resident file (epoch 0)
+                        None => {
+                            (self.shared.pfs.open(Path::new(&rel), OpenMode::Read)?, None, 0)
+                        }
+                    };
+                    Ok(Box::new(SeaFile {
+                        shared: self.shared.clone(),
+                        rel,
+                        dev,
+                        epoch,
+                        append: false,
+                        reader: true,
+                        file,
+                    }))
                 }
                 OpenMode::Append => self.open_append(&rel),
                 OpenMode::Write | OpenMode::ReadWrite => self.open_writer(&rel, mode),
@@ -2075,21 +2152,27 @@ impl Vfs for SeaFs {
     fn read(&self, path: &Path) -> Result<Vec<u8>> {
         match self.rel_of(path) {
             None => self.shared.pfs.read(path),
-            Some(rel) => {
-                self.shared.engine.on_access(&rel, Access::Read);
-                match self.shared.registry.get(&rel) {
-                    Some(e) => match e.dev {
-                        Some(d) => match self.shared.backend(d).read(Path::new(&rel)) {
-                            Ok(data) => Ok(data),
-                            // evicted between lookup and read: fall
-                            // through to the flushed PFS copy
-                            Err(Error::NotFound(_)) => self.shared.pfs.read(Path::new(&rel)),
-                            Err(err) => Err(err),
-                        },
-                        None => self.shared.pfs.read(Path::new(&rel)),
-                    },
-                    None => self.shared.pfs.read(Path::new(&rel)),
+            Some(_) => {
+                // stream through the handle path in mover-sized chunks:
+                // the backend never materializes the file in a second
+                // whole-file buffer on top of the returned Vec, and the
+                // read rides the reader handle's heat + spill-follow
+                let mut f = self.open(path, OpenMode::Read)?;
+                let len = f.len()? as usize;
+                let chunk = self.shared.mover_cfg.chunk_bytes.max(1);
+                let mut out = vec![0u8; len];
+                let mut done = 0usize;
+                while done < len {
+                    let want = chunk.min(len - done);
+                    let n = f.pread(&mut out[done..done + want], done as u64)?;
+                    if n == 0 {
+                        // the file shrank mid-read: return what exists
+                        out.truncate(done);
+                        break;
+                    }
+                    done += n;
                 }
+                Ok(out)
             }
         }
     }
@@ -3413,6 +3496,124 @@ mod tests {
         assert!(
             sea.device_of("warm.dat").is_some(),
             "map-heated file stayed resident"
+        );
+        sea.sync_mgmt().unwrap();
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn spill_invalidates_frames_of_every_view() {
+        // ISSUE 6: frames are keyed (identity, generation, page) and
+        // shared across views — a reader view hits the writer view's
+        // frames without re-faulting, and a mid-stream spill's
+        // generation bump orphans *both* views' frames at once:
+        // neither resurrects device bytes
+        use crate::vfs::pages::{MapMode, PageCache};
+        let root = scratch("seafs_map_spill_all");
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
+        let sea = tiny_device_mount(&root, pfs.clone());
+        let p = Path::new("/sea/all.dat");
+        let cache: Arc<PageCache> = sea.page_cache();
+        let mut a = sea.open(p, OpenMode::Write).unwrap();
+        a.pwrite_all(&vec![0x11u8; MIB as usize], 0).unwrap();
+        let mut r = sea.open(p, OpenMode::Read).unwrap();
+        let mut b = sea.open(p, OpenMode::ReadWrite).unwrap();
+        {
+            let mut va = a.map(&cache, 0, MIB, MapMode::Read).unwrap();
+            let mut vr = r.map(&cache, 0, MIB, MapMode::Read).unwrap();
+            let mut buf = [0u8; 4096];
+            va.read_at(&mut buf, 0).unwrap();
+            assert!(buf.iter().all(|&v| v == 0x11));
+            let pre = sea.counters();
+            vr.read_at(&mut buf, 0).unwrap();
+            assert!(buf.iter().all(|&v| v == 0x11));
+            let post = sea.counters();
+            assert_eq!(
+                post.page_faults, pre.page_faults,
+                "the reader view hit the writer view's frame"
+            );
+            assert!(
+                post.page_shared_hits > pre.page_shared_hits,
+                "cross-view hit counted"
+            );
+            // the sibling outgrows the 2 MiB device: the entry spills
+            // mid-stream and only the PFS replica carries this write
+            b.pwrite_all(&vec![0xAAu8; 2 * MIB as usize], MIB).unwrap();
+            assert!(sea.device_of("all.dat").is_none(), "spilled");
+            b.pwrite_all(&[0x99u8; 4096], 0).unwrap();
+            // both views re-fault through their relocated handles; the
+            // first re-fault installs one fresh frame the sibling hits
+            let before = sea.counters();
+            va.read_at(&mut buf, 0).unwrap();
+            assert!(
+                buf.iter().all(|&v| v == 0x99),
+                "writer view served stale device bytes after the spill"
+            );
+            vr.read_at(&mut buf, 0).unwrap();
+            assert!(
+                buf.iter().all(|&v| v == 0x99),
+                "reader view served stale device bytes after the spill"
+            );
+            let after = sea.counters();
+            assert_eq!(
+                after.page_faults,
+                before.page_faults + 1,
+                "one re-fault covers both views"
+            );
+        }
+        drop(a);
+        drop(r);
+        drop(b);
+        sea.sync_mgmt().unwrap();
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn cold_writer_loses_victim_election_to_a_hot_reader() {
+        // ISSUE 6 satellite: read-only handles heat the engine on
+        // pread — a file that is only ever *read* outheats its cold
+        // sibling, which then loses the victim election under pressure
+        let root = scratch("seafs_reader_heat");
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
+        let sea = SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(root.join("dev"), 0, 4 * MIB).unwrap()],
+            pfs: pfs.clone(),
+            max_file_size: MIB,
+            parallel_procs: 1,
+            rules: RuleSet::default(), // Keep: residency managed by pressure
+            seed: 1,
+            tuning: SeaTuning { engine: EngineKind::Temperature, ..SeaTuning::default() },
+        })
+        .unwrap();
+        sea.write(Path::new("/sea/cold.dat"), &vec![1u8; MIB as usize]).unwrap();
+        sea.write(Path::new("/sea/warm.dat"), &vec![2u8; MIB as usize]).unwrap();
+        // heat warm.dat through a plain read-only handle — no mapped
+        // views involved, preads alone must feed on_access
+        {
+            let mut r = sea.open(Path::new("/sea/warm.dat"), OpenMode::Read).unwrap();
+            let mut buf = vec![0u8; 64 * KIB as usize];
+            for k in 0..8u64 {
+                r.pread_exact(&mut buf, k * 128 * KIB).unwrap();
+            }
+            assert!(
+                matches!(r.pwrite(b"x", 0), Err(Error::InvalidArg(_))),
+                "read-only sea handles refuse writes"
+            );
+        }
+        // a hot writer outgrows the device: the engine must pick the
+        // never-read (colder) file as the victim
+        {
+            let mut f = sea.open(Path::new("/sea/hot.dat"), OpenMode::Write).unwrap();
+            let quarter = MIB as usize / 4;
+            for k in 0..10u64 {
+                f.pwrite_all(&vec![9u8; quarter], k * quarter as u64).unwrap();
+            }
+        }
+        assert!(sea.device_of("cold.dat").is_none(), "never-read file spilled");
+        assert!(
+            sea.device_of("warm.dat").is_some(),
+            "read-heated file stayed resident"
         );
         sea.sync_mgmt().unwrap();
         let _ = std::fs::remove_dir_all(&root);

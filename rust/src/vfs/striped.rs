@@ -80,15 +80,22 @@ pub struct StripedFs {
     members: Vec<Arc<dyn Vfs>>,
     /// `Some(unit)`: block-granularity striping; `None`: whole files.
     stripe: Option<u64>,
+    /// Per-instance salt for stripe-handle [`VfsFile::map_identity`]:
+    /// handles of one file on one mount share frames, while two
+    /// `StripedFs` instances over different directories can never
+    /// collide on a path name alone.
+    nonce: u64,
 }
 
 impl StripedFs {
     /// Build from member backends (at least one), whole-file layout.
     pub fn new(members: Vec<Arc<dyn Vfs>>) -> Result<StripedFs> {
+        static NONCE: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
         if members.is_empty() {
             return Err(Error::Config("striped fs requires at least one member".into()));
         }
-        Ok(StripedFs { members, stripe: None })
+        let nonce = NONCE.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(StripedFs { members, stripe: None, nonce })
     }
 
     /// Build in **stripe mode**: files are cut into `stripe_bytes`
@@ -159,7 +166,15 @@ impl StripedFs {
                 }
             }
         }
-        Ok(Box::new(StripedFile { parts, stripe, append: mode == OpenMode::Append }))
+        // identity = instance nonce + normalized path: every stripe
+        // handle of one file on this mount shares page-cache frames
+        // (whole-file mode inherits the member handle's identity)
+        let key = path.to_string_lossy();
+        let ident = crate::vfs::pages::identity_hash(&[
+            &self.nonce.to_le_bytes(),
+            key.trim_start_matches('/').as_bytes(),
+        ]);
+        Ok(Box::new(StripedFile { parts, stripe, append: mode == OpenMode::Append, ident }))
     }
 
     /// Number of members.
@@ -193,6 +208,9 @@ struct StripedFile {
     /// logical length per write (single-process semantics — stripe
     /// parts have no shared O_APPEND cursor).
     append: bool,
+    /// [`VfsFile::map_identity`]: instance nonce + path hash, shared by
+    /// every handle of this file on the owning mount.
+    ident: u64,
 }
 
 impl StripedFile {
@@ -324,6 +342,10 @@ impl VfsFile for StripedFile {
 
     fn len(&self) -> Result<u64> {
         self.logical_len()
+    }
+
+    fn map_identity(&self) -> Option<u64> {
+        Some(self.ident)
     }
 }
 
@@ -769,6 +791,31 @@ mod tests {
             &payload[(STRIPE - 100) as usize..(STRIPE + 100) as usize]
         );
         assert!(cache.stats().peak_resident_bytes <= cache.budget());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn stripe_handles_share_page_frames() {
+        // ISSUE 6: stripe-mode handles carry a mount-scoped identity,
+        // so two views of one striped file share page-cache frames
+        use crate::vfs::pages::{MapMode, PageCache};
+        const STRIPE: u64 = 1024;
+        let (fs_, root) = stripe_mode(2, STRIPE);
+        let p = Path::new("share.dat");
+        let payload = vec![5u8; 4 * 1536];
+        fs_.write(p, &payload).unwrap();
+        let cache = Arc::new(PageCache::new(1536, 32 * 1536));
+        let mut fa = fs_.open(p, OpenMode::Read).unwrap();
+        let mut fb = fs_.open(p, OpenMode::Read).unwrap();
+        let mut va = fa.map(&cache, 0, payload.len() as u64, MapMode::Read).unwrap();
+        let mut vb = fb.map(&cache, 0, payload.len() as u64, MapMode::Read).unwrap();
+        let mut buf = vec![0u8; payload.len()];
+        va.read_at(&mut buf, 0).unwrap();
+        let faults = cache.stats().faults;
+        vb.read_at(&mut buf, 0).unwrap();
+        let st = cache.stats();
+        assert_eq!(st.faults, faults, "second stripe view hit shared frames: {st:?}");
+        assert!(st.shared_hits > 0, "{st:?}");
         let _ = std::fs::remove_dir_all(&root);
     }
 
