@@ -45,14 +45,22 @@
 //! fill from the same pooled pages, faulting each page once), and
 //! hands the region to the caller. `MAP_PRIVATE` read-only mappings
 //! are sealed with `mprotect`; writable `MAP_SHARED` mappings keep a
-//! duplicated descriptor and write the whole region back on
-//! `msync`/`munmap`, invalidating the file's pooled pages. Everything
-//! else — anonymous, `MAP_FIXED`, executable, non-Sea fds — forwards
-//! straight to the kernel (`SEA_MMAP=0` disables the emulation
-//! entirely). Remaining gaps: partial `munmap` of an emulated region
-//! tears down the whole region, write-back granularity is the full
-//! mapping, and pages filled before a *kernel-side* writer changed the
-//! file are only invalidated by a shim-side write-back.
+//! duplicated descriptor plus a snapshot of the fill, and on
+//! `msync`/`munmap` write back only the byte ranges that differ from
+//! the snapshot (per 64 KiB page), invalidating the file's pooled
+//! pages when anything was written — a mapping that is only ever read
+//! writes nothing, and concurrent updates to the file through other
+//! descriptors or processes survive outside the dirtied ranges.
+//! Everything else — anonymous, `MAP_FIXED`, executable, non-Sea fds
+//! — forwards straight to the kernel (`SEA_MMAP=0` disables the
+//! emulation entirely). Remaining gaps: partial `munmap` of an
+//! emulated region tears down the whole region; the snapshot doubles
+//! the memory of a writable shared mapping; a concurrent external
+//! write landing *inside* a byte range this mapping also dirtied is
+//! still clobbered at sync (deferred-write semantics, vs. real
+//! `MAP_SHARED`'s store-granularity merge); and pages filled before a
+//! *kernel-side* writer changed the file are only invalidated by a
+//! shim-side write-back.
 //!
 //! * `SEA_MMAP`        — set to `0` to forward every `mmap` untouched.
 //! * `SEA_MMAP_BUDGET` — pool budget in bytes (default 64 MiB).
@@ -422,14 +430,31 @@ pub fn mmap_pool_counters() -> (u64, u64) {
 }
 
 /// One emulated mapping.
-#[derive(Clone, Copy)]
 struct MapInfo {
     len: usize,
     /// File offset the region mirrors (mmap's `offset` argument).
     offset: u64,
-    /// Writable `MAP_SHARED` emulation: `(dup'd fd, device, inode)`
-    /// for write-back; `None` for private mappings (no write-back).
-    wb: Option<(c_int, u64, u64)>,
+    /// Writable `MAP_SHARED` emulation state; `None` for private
+    /// mappings (no write-back).
+    wb: Option<WriteBack>,
+}
+
+/// Write-back state of a writable `MAP_SHARED` emulated region.
+struct WriteBack {
+    /// Duplicated descriptor (the caller may close theirs).
+    fd: c_int,
+    dev: u64,
+    ino: u64,
+    /// The region's bytes as of the fill, refreshed after every
+    /// write-back: `msync`/`munmap` diff the live region against it
+    /// and pwrite only the byte ranges the caller actually changed.
+    /// Without the diff the sync would rewrite the entire region —
+    /// clobbering any concurrent update made to the file through
+    /// another descriptor, process, or mapping with this region's
+    /// stale snapshot, and rewriting the whole file even for a
+    /// mapping that was only ever read. Costs one extra copy of the
+    /// region per writable shared mapping.
+    snapshot: Vec<u8>,
 }
 
 fn maps() -> &'static Mutex<HashMap<usize, MapInfo>> {
@@ -600,13 +625,14 @@ unsafe fn emulate_map(
     }
     let wb = if flags & libc::MAP_SHARED != 0 {
         // writable shared mapping: keep a descriptor of our own (the
-        // caller may close theirs) for msync/munmap write-back
+        // caller may close theirs) for msync/munmap write-back, and a
+        // snapshot of the fill as the write-back diff base
         let dup = libc::fcntl(fd, libc::F_DUPFD_CLOEXEC, 0);
         if dup < 0 {
             sys_munmap(region, len);
             return libc::MAP_FAILED; // fcntl left errno
         }
-        Some((dup, dev, ino))
+        Some(WriteBack { fd: dup, dev, ino, snapshot: out.to_vec() })
     } else {
         if prot & libc::PROT_WRITE == 0 {
             // seal the private read-only mapping now that it is filled
@@ -621,44 +647,76 @@ unsafe fn emulate_map(
     region
 }
 
-/// `msync`/`munmap` back half for emulated regions: whole-range
-/// write-back through the duplicated descriptor (writable shared
-/// mappings), pool invalidation for the written file, and — on unmap —
+/// Write all of `buf` to `fd` at `off`, raw; `false` on any error.
+unsafe fn pwrite_all_raw(fd: c_int, buf: &[u8], off: u64) -> bool {
+    let mut done = 0usize;
+    while done < buf.len() {
+        let n = libc::pwrite(
+            fd,
+            buf[done..].as_ptr() as *const c_void,
+            buf.len() - done,
+            (off + done as u64) as libc::off_t,
+        );
+        if n <= 0 {
+            return false;
+        }
+        done += n as usize;
+    }
+    true
+}
+
+/// `msync`/`munmap` back half for emulated regions: diff the live
+/// region against the fill snapshot and pwrite only the changed byte
+/// range of each pool page through the duplicated descriptor
+/// (writable shared mappings — a region the caller never stored to
+/// writes nothing back, so concurrent updates to the file through
+/// other descriptors/processes survive outside the dirtied ranges),
+/// pool invalidation when anything was written, and — on unmap —
 /// region teardown. `None` when `addr` is not an emulated region.
+/// The maps lock is held across the write-back: concurrent syncs of
+/// one region cannot interleave diff passes, and re-entrant allocator
+/// mmap/munmap calls forward raw under `IN_SHIM` without touching the
+/// table (the pool lock only ever nests *inside* the maps lock).
 unsafe fn emulated_sync(addr: *mut c_void, unmap: bool) -> Option<c_int> {
-    let info = {
-        let mut m = maps().lock().unwrap_or_else(|e| e.into_inner());
-        if unmap {
-            m.remove(&(addr as usize))
-        } else {
-            m.get(&(addr as usize)).copied()
-        }
-    }?;
+    let mut m = maps().lock().unwrap_or_else(|e| e.into_inner());
+    let mut info = m.remove(&(addr as usize))?;
     let mut ret = 0;
-    if let Some((fd, dev, ino)) = info.wb {
-        let base = addr as *const u8;
-        let mut done = 0usize;
-        while done < info.len {
-            let n = libc::pwrite(
-                fd,
-                base.add(done) as *const c_void,
-                info.len - done,
-                (info.offset + done as u64) as libc::off_t,
-            );
-            if n <= 0 {
-                ret = -1;
-                break;
+    if let Some(wb) = info.wb.as_mut() {
+        let region = std::slice::from_raw_parts(addr as *const u8, info.len);
+        let mut wrote = false;
+        let mut lo = 0usize;
+        while lo < info.len {
+            let hi = (lo + MMAP_POOL_PAGE).min(info.len);
+            let (cur, old) = (&region[lo..hi], &wb.snapshot[lo..hi]);
+            if cur != old {
+                // narrow to the changed byte range of this page
+                let a = cur.iter().zip(old).position(|(c, o)| c != o).unwrap_or(0);
+                let b = cur
+                    .iter()
+                    .zip(old)
+                    .rposition(|(c, o)| c != o)
+                    .map_or(cur.len(), |k| k + 1);
+                if !pwrite_all_raw(wb.fd, &cur[a..b], info.offset + (lo + a) as u64) {
+                    // snapshot stays stale for this range, so a later
+                    // msync (or the unmap flush) retries the write
+                    ret = -1;
+                    break;
+                }
+                wb.snapshot[lo + a..lo + b].copy_from_slice(&cur[a..b]);
+                wrote = true;
             }
-            done += n as usize;
+            lo = hi;
         }
-        // the file changed under every pooled page of it: drop them so
-        // later mappings re-read instead of serving pre-write bytes
-        let mut p = pool().lock().unwrap_or_else(|e| e.into_inner());
-        p.fifo.retain(|k| k.0 != dev || k.1 != ino);
-        p.pages.retain(|k, _| k.0 != dev || k.1 != ino);
-        drop(p);
+        if wrote {
+            // the file changed under its pooled pages: drop them so
+            // later mappings re-read instead of serving pre-write bytes
+            let (dev, ino) = (wb.dev, wb.ino);
+            let mut p = pool().lock().unwrap_or_else(|e| e.into_inner());
+            p.fifo.retain(|k| k.0 != dev || k.1 != ino);
+            p.pages.retain(|k, _| k.0 != dev || k.1 != ino);
+        }
         if unmap {
-            libc::close(fd);
+            libc::close(wb.fd);
         }
     }
     if unmap {
@@ -666,6 +724,8 @@ unsafe fn emulated_sync(addr: *mut c_void, unmap: bool) -> Option<c_int> {
         if r != 0 {
             ret = r;
         }
+    } else {
+        m.insert(addr as usize, info);
     }
     Some(ret)
 }
@@ -875,6 +935,52 @@ mod tests {
             libc::close(fd);
         }
         assert_eq!(std::fs::read(&path).unwrap()[0], 9, "munmap wrote the region back");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unmodified_shared_mappings_do_not_clobber_external_writes() {
+        // review regression: write-back diffs against the fill
+        // snapshot — a writable MAP_SHARED region the caller never
+        // stored to (or only partly dirtied) must not rewrite the
+        // whole file at sync, or it would revert concurrent updates
+        // made through other descriptors to the mapping's stale bytes
+        let _env = ENV_LOCK.lock().unwrap();
+        let dir = scratch_target("mmap_noclobber");
+        let path = dir.join("nc.dat");
+        std::fs::write(&path, vec![0u8; 2 * MMAP_POOL_PAGE]).unwrap();
+        let c = c_path(&path);
+        unsafe {
+            let fd = libc::open(c.as_ptr(), libc::O_RDWR);
+            assert!(fd >= 0);
+            let a = mmap(
+                std::ptr::null_mut(),
+                2 * MMAP_POOL_PAGE,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED,
+                fd,
+                0,
+            );
+            assert_ne!(a, libc::MAP_FAILED, "emulated writable mapping failed");
+            // dirty a few bytes in page 0 only; page 1 stays pristine
+            let buf = std::slice::from_raw_parts_mut(a as *mut u8, 2 * MMAP_POOL_PAGE);
+            buf[10..13].copy_from_slice(b"map");
+            // meanwhile the file is updated through a plain descriptor:
+            // one byte the mapping never touched, in the pristine page
+            let external_off = MMAP_POOL_PAGE + 50;
+            let mut on_disk = std::fs::read(&path).unwrap();
+            on_disk[external_off] = 0xEE;
+            std::fs::write(&path, &on_disk).unwrap();
+            assert_eq!(munmap(a, 2 * MMAP_POOL_PAGE), 0);
+            libc::close(fd);
+        }
+        let after = std::fs::read(&path).unwrap();
+        assert_eq!(&after[10..13], b"map", "dirtied bytes were written back");
+        assert_eq!(
+            after[MMAP_POOL_PAGE + 50],
+            0xEE,
+            "external write outside the dirtied ranges survived the sync"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -219,8 +219,11 @@ pub trait VfsFile: Send {
     /// Backends derive it from coordinates that survive reopens but
     /// never outlive the file: device + inode for `RealFs`, instance +
     /// path for stripe-mode `StripedFs`, mount + path + registry epoch
-    /// for `SeaFs`.
-    fn map_identity(&self) -> Option<u64> {
+    /// for `SeaFs` — folded through the 128-bit
+    /// [`pages::identity_hash`], wide enough that two distinct files
+    /// colliding onto one frame key (silent cross-file corruption) is
+    /// not a practical event.
+    fn map_identity(&self) -> Option<u128> {
         None
     }
 

@@ -34,8 +34,10 @@
 //! ([`PageCacheStats::frames_deduped`]). Writes are coherent: a dirty
 //! range stored through one view is immediately visible to every
 //! reader of the frame, and write-back happens once (the first flusher
-//! clears the frame's dirty range; sibling flushers find it clean and
-//! skip). A [`VfsFile::map_sync`] generation bump re-keys the whole
+//! clears the frame's dirty range — guarded by a per-frame write
+//! stamp, so a store racing with the flush keeps the frame dirty for
+//! its own flusher; siblings that find it clean skip). A
+//! [`VfsFile::map_sync`] generation bump re-keys the whole
 //! identity — every stale frame is orphaned at once (spill
 //! invalidation), to be collected by LRU eviction and by the purge at
 //! last unmap. Handles without an identity fall back to a private
@@ -120,11 +122,12 @@ pub struct PageCacheStats {
 
 /// `(file identity, map generation, page index)`: views of one file
 /// share frames — the identity comes from [`VfsFile::map_identity`]
-/// (shifted into an even namespace), or a private per-view odd
-/// fallback when the backend cannot name the file. A `map_sync`
-/// generation bump re-keys the whole identity, orphaning every stale
-/// frame at once.
-type PageKey = (u64, u64, u64);
+/// (a 128-bit digest, shifted into an even namespace; wide enough
+/// that two distinct files aliasing onto one frame key is not a
+/// practical event), or a private per-view odd fallback when the
+/// backend cannot name the file. A `map_sync` generation bump re-keys
+/// the whole identity, orphaning every stale frame at once.
+type PageKey = (u128, u64, u64);
 
 struct Page {
     /// Exactly `page_bytes` long; the tail past end-of-file is zeros.
@@ -137,6 +140,14 @@ struct Page {
     /// Dirty byte range within the page (`start..end`), if any. Dirty
     /// pages are pinned: eviction skips them until written back.
     dirty: Option<(usize, usize)>,
+    /// Stamp of the last store into the frame (drawn from the cache
+    /// clock, so it never repeats). Flushers snapshot it with the
+    /// dirty range and clear the range only if it is unchanged after
+    /// the `pwrite`: a concurrent store strictly *inside* the
+    /// snapshot range leaves the merged range identical but must
+    /// still keep the frame dirty, or its bytes would never be
+    /// written back.
+    seq: u64,
 }
 
 #[derive(Default)]
@@ -159,7 +170,7 @@ pub struct PageCache {
     /// Live-view refcount per identity: frames persist across sibling
     /// views and are purged only when the *last* view of an identity
     /// unmaps (private identities trivially count one view).
-    maps: Mutex<HashMap<u64, usize>>,
+    maps: Mutex<HashMap<u128, usize>>,
     clock: AtomicU64,
     ids: AtomicU64,
     resident: AtomicU64,
@@ -226,10 +237,11 @@ impl PageCache {
     }
 
     fn shard_of(&self, key: &PageKey) -> usize {
-        // page indices are contiguous and generations small; mix all
-        // three coordinates so one file's pages spread over the shards
-        let h = key
-            .0
+        // page indices are contiguous and generations small; fold the
+        // 128-bit identity and mix all three coordinates so one file's
+        // pages spread over the shards
+        let ident = (key.0 as u64) ^ ((key.0 >> 64) as u64);
+        let h = ident
             .wrapping_mul(0x9e37_79b9_7f4a_7c15)
             .wrapping_add(key.1.wrapping_mul(0xc2b2_ae3d_27d4_eb4f))
             .wrapping_add(key.2.wrapping_mul(0xff51_afd7_ed55_8ccd));
@@ -275,8 +287,10 @@ impl PageCache {
 
     /// Forget every frame of identity `ident`, across all generations
     /// (last unmap). Dirty ranges are assumed already written back by
-    /// the caller.
-    fn purge(&self, ident: u64) {
+    /// the caller, and the caller must hold the `maps` lock so no new
+    /// view of the identity can register (and fault frames this purge
+    /// would then drop) while the sweep runs.
+    fn purge(&self, ident: u128) {
         let mut dropped = 0u64;
         for shard in &self.shards {
             let mut guard = shard.lock().expect("page shard poisoned");
@@ -311,21 +325,27 @@ pub fn global() -> &'static Arc<PageCache> {
     GLOBAL.get_or_init(|| Arc::new(PageCache::new(DEFAULT_PAGE_BYTES, DEFAULT_PAGE_BUDGET)))
 }
 
-/// FNV-1a over a sequence of byte strings — the house hash for
-/// [`VfsFile::map_identity`] implementations. Backends mix a stable
-/// per-source nonce (mount/instance) with the file's coordinates
-/// (device + inode, or path + epoch) so identities agree across
-/// handles of one file but never across distinct sources.
-pub(crate) fn identity_hash(parts: &[&[u8]]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
+/// 128-bit FNV-1a over a sequence of byte strings — the house hash
+/// for [`VfsFile::map_identity`] implementations. Backends mix a
+/// stable per-source nonce (mount/instance) with the file's
+/// coordinates (device + inode, or path + epoch) so identities agree
+/// across handles of one file but never across distinct sources. The
+/// width matters: frame keys are built from this digest, so a
+/// collision would silently serve one file's bytes to readers of
+/// another — at 128 bits (127 after the namespace shift) that is not
+/// a practical event, where a folded 64-bit key would leave a
+/// small-but-silent corruption path.
+pub(crate) fn identity_hash(parts: &[&[u8]]) -> u128 {
+    const PRIME: u128 = 0x0000_0000_0100_0000_0000_0000_0000_013b;
+    let mut h = 0x6c62_272e_07bb_0142_62b8_2175_6295_c58du128;
     for part in parts {
         for &b in *part {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            h ^= b as u128;
+            h = h.wrapping_mul(PRIME);
         }
         // length separator, so ("ab", "c") never equals ("a", "bc")
-        h ^= part.len() as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        h ^= part.len() as u128;
+        h = h.wrapping_mul(PRIME);
     }
     h
 }
@@ -349,10 +369,11 @@ pub struct MappedView<'f> {
     /// Unique per view — the frame-ownership tag behind
     /// [`PageCacheStats::shared_hits`].
     id: u64,
-    /// Frame-key namespace: the handle's [`VfsFile::map_identity`]
-    /// shifted even (shared with every sibling view of the file), or
-    /// this view's id shifted odd (private fallback).
-    ident: u64,
+    /// Frame-key namespace: the handle's 128-bit
+    /// [`VfsFile::map_identity`] shifted even (shared with every
+    /// sibling view of the file), or this view's id shifted odd
+    /// (private fallback).
+    ident: u128,
     base: u64,
     len: u64,
     mode: MapMode,
@@ -391,7 +412,7 @@ impl<'f> MappedView<'f> {
             Some(h) => h << 1,
             // no identity: a private namespace (odd) that can never
             // collide with a shared one
-            None => (id << 1) | 1,
+            None => ((id as u128) << 1) | 1,
         };
         {
             let mut maps = cache.maps.lock().expect("page maps poisoned");
@@ -580,9 +601,9 @@ impl<'f> MappedView<'f> {
                 let mut sh = shard.lock().expect("page shard poisoned");
                 sh.pages
                     .get_mut(&key)
-                    .and_then(|p| p.dirty.map(|(a, b)| (a, b, p.data[a..b].to_vec())))
+                    .and_then(|p| p.dirty.map(|(a, b)| (a, b, p.seq, p.data[a..b].to_vec())))
             };
-            if let Some((a, b, seg)) = pending {
+            if let Some((a, b, seq, seg)) = pending {
                 let file_off = idx * pb + a as u64;
                 // on error the page is still dirty and `idx` is still
                 // in the view's dirty set: a later msync (or the drop
@@ -593,10 +614,16 @@ impl<'f> MappedView<'f> {
                     .fetch_add(seg.len() as u64, Ordering::Relaxed);
                 let mut sh = shard.lock().expect("page shard poisoned");
                 if let Some(p) = sh.pages.get_mut(&key) {
-                    // clear only what we wrote; a concurrent store that
-                    // extended the range keeps the frame dirty for its
-                    // own flusher
-                    if p.dirty == Some((a, b)) {
+                    // clear only if no store landed since the
+                    // snapshot. Comparing the *range* is not enough: a
+                    // sibling's write strictly inside [a, b) changes
+                    // the bytes but not the merged range, and clearing
+                    // the flag then would make the sibling's own flush
+                    // skip — those bytes would never reach the file.
+                    // The stamp comes from the cache clock, so a
+                    // clean→evict→re-fault→re-dirty cycle between our
+                    // two lock sections can never reproduce it either.
+                    if p.seq == seq {
                         p.dirty = None;
                     }
                 }
@@ -627,7 +654,7 @@ impl<'f> MappedView<'f> {
                 if p.owner != self.id {
                     self.cache.shared_hits.fetch_add(1, Ordering::Relaxed);
                 }
-                apply_op(p, op);
+                apply_op(p, op, t);
                 self.cache.hits.fetch_add(1, Ordering::Relaxed);
                 return Ok(());
             }
@@ -709,7 +736,7 @@ impl<'f> MappedView<'f> {
             }
         }
         cache.faults.fetch_add(1, Ordering::Relaxed);
-        let mut page = Page { data, owner: self.id, tick: 0, dirty: None };
+        let mut page = Page { data, owner: self.id, tick: 0, dirty: None, seq: 0 };
         {
             let mut guard = cache.shards[shard_idx].lock().expect("page shard poisoned");
             let sh = &mut *guard;
@@ -722,14 +749,14 @@ impl<'f> MappedView<'f> {
                 sh.lru.remove(&winner.tick);
                 winner.tick = t;
                 sh.lru.insert(t, key);
-                apply_op(winner, op);
+                apply_op(winner, op, t);
                 drop(guard);
                 cache.shrink_resident(1);
                 cache.frames_deduped.fetch_add(1, Ordering::Relaxed);
                 return Ok(());
             }
-            apply_op(&mut page, op);
             let t = cache.tick();
+            apply_op(&mut page, op, t);
             page.tick = t;
             sh.lru.insert(t, key);
             sh.pages.insert(key, page);
@@ -745,7 +772,11 @@ fn merge_range(existing: Option<(usize, usize)>, a: usize, b: usize) -> (usize, 
     }
 }
 
-fn apply_op(p: &mut Page, op: PageOp<'_>) {
+/// Apply one access to a frame (under its shard lock). `stamp` is the
+/// caller's cache-clock tick: stores record it in [`Page::seq`] so a
+/// flusher can tell "no write landed since my snapshot" apart from "a
+/// write landed inside the range I just flushed".
+fn apply_op(p: &mut Page, op: PageOp<'_>, stamp: u64) {
     match op {
         PageOp::Read { intra, out } => {
             let n = out.len();
@@ -754,6 +785,7 @@ fn apply_op(p: &mut Page, op: PageOp<'_>) {
         PageOp::Write { intra, data } => {
             p.data[intra..intra + data.len()].copy_from_slice(data);
             p.dirty = Some(merge_range(p.dirty, intra, intra + data.len()));
+            p.seq = stamp;
         }
     }
 }
@@ -770,22 +802,24 @@ impl Drop for MappedView<'_> {
             let _ = self.flush_dirty();
         }
         // frames persist while sibling views live; the last view of an
-        // identity to unmap purges every generation's frames
-        let last = {
-            let mut maps = self.cache.maps.lock().expect("page maps poisoned");
-            match maps.get_mut(&self.ident) {
-                Some(n) if *n > 1 => {
-                    *n -= 1;
-                    false
-                }
-                _ => {
-                    maps.remove(&self.ident);
-                    true
-                }
+        // identity to unmap purges every generation's frames. The maps
+        // lock is held ACROSS the purge: a racing new view of the same
+        // identity either registers before the refcount check (then we
+        // are not last and skip the purge) or blocks in
+        // `MappedView::new` until the purge finishes — it can never
+        // register and fault fresh (possibly dirty) frames in between
+        // for a stale purge to drop. Safe lock order: `maps` is only
+        // ever taken without a shard lock held, and `purge` takes the
+        // shard locks one at a time underneath it.
+        let mut maps = self.cache.maps.lock().expect("page maps poisoned");
+        match maps.get_mut(&self.ident) {
+            Some(n) if *n > 1 => {
+                *n -= 1;
             }
-        };
-        if last {
-            self.cache.purge(self.ident);
+            _ => {
+                maps.remove(&self.ident);
+                self.cache.purge(self.ident);
+            }
         }
     }
 }
@@ -1105,6 +1139,105 @@ mod tests {
         );
         assert_eq!(cache.stats().resident_bytes, 0, "both views unmapped");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Review regression (high): a store landing strictly *inside* a
+    /// flusher's snapshotted dirty range — after the snapshot, while
+    /// the pwrite runs unlocked — leaves the merged range unchanged.
+    /// The range-equality guard alone would clear the flag and the
+    /// storing view's own msync would then skip the "clean" frame,
+    /// silently losing the bytes; the per-frame write stamp keeps the
+    /// frame dirty for the storing view's flusher.
+    #[test]
+    fn store_inside_inflight_flush_range_is_not_lost() {
+        use std::sync::mpsc::{channel, Receiver, Sender};
+
+        /// Two handles over one buffer, agreeing on an identity; one
+        /// can park inside `pwrite` so the test can interleave a
+        /// sibling store with a write-back deterministically.
+        struct SharedFile {
+            data: Arc<Mutex<Vec<u8>>>,
+            // park-once plumbing: signal entry, then wait for release
+            entered: Option<Sender<()>>,
+            release: Option<Receiver<()>>,
+        }
+
+        impl VfsFile for SharedFile {
+            fn pread(&mut self, buf: &mut [u8], off: u64) -> crate::error::Result<usize> {
+                let d = self.data.lock().unwrap();
+                let off = off as usize;
+                if off >= d.len() {
+                    return Ok(0);
+                }
+                let n = buf.len().min(d.len() - off);
+                buf[..n].copy_from_slice(&d[off..off + n]);
+                Ok(n)
+            }
+            fn pwrite(&mut self, data: &[u8], off: u64) -> crate::error::Result<usize> {
+                if let (Some(tx), Some(rx)) = (self.entered.take(), self.release.take()) {
+                    // flusher parked mid-write-back, snapshot taken
+                    tx.send(()).unwrap();
+                    rx.recv().unwrap();
+                }
+                let mut d = self.data.lock().unwrap();
+                let end = off as usize + data.len();
+                if d.len() < end {
+                    d.resize(end, 0);
+                }
+                d[off as usize..end].copy_from_slice(data);
+                Ok(data.len())
+            }
+            fn set_len(&mut self, len: u64) -> crate::error::Result<()> {
+                self.data.lock().unwrap().resize(len as usize, 0);
+                Ok(())
+            }
+            fn fsync(&mut self) -> crate::error::Result<()> {
+                Ok(())
+            }
+            fn len(&self) -> crate::error::Result<u64> {
+                Ok(self.data.lock().unwrap().len() as u64)
+            }
+            fn map_identity(&self) -> Option<u128> {
+                Some(7)
+            }
+        }
+
+        let data = Arc::new(Mutex::new(vec![0u8; PAGE]));
+        let (entered_tx, entered_rx) = channel();
+        let (release_tx, release_rx) = channel();
+        let mut fa = SharedFile {
+            data: data.clone(),
+            entered: Some(entered_tx),
+            release: Some(release_rx),
+        };
+        let mut fb = SharedFile { data: data.clone(), entered: None, release: None };
+        let cache = cache(8);
+        std::thread::scope(|s| {
+            let cache_a = cache.clone();
+            s.spawn(move || {
+                let mut va = (&mut fa as &mut dyn VfsFile)
+                    .map(&cache_a, 0, PAGE as u64, MapMode::Write)
+                    .unwrap();
+                va.write_at(b"AAAAAAAA", 0).unwrap();
+                // snapshots dirty (0, 8), then parks inside pwrite
+                va.msync().unwrap();
+            });
+            entered_rx.recv().unwrap();
+            // A's flusher holds its snapshot; store *inside* [0, 8) —
+            // the merged dirty range stays (0, 8), only the stamp moves
+            let mut vb = (&mut fb as &mut dyn VfsFile)
+                .map(&cache, 0, PAGE as u64, MapMode::Write)
+                .unwrap();
+            vb.write_at(b"BB", 3).unwrap();
+            release_tx.send(()).unwrap();
+            // B's bytes must survive A's completed flush
+            vb.msync().unwrap();
+        });
+        assert_eq!(
+            &data.lock().unwrap()[..8],
+            b"AAABBAAA",
+            "a store inside an in-flight flush range reaches the file"
+        );
     }
 
     /// An in-memory handle with no `map_identity`: each view keeps a

@@ -129,7 +129,7 @@ impl VfsFile for RateLimitedFile {
         self.inner.note_map_fault(off, len)
     }
 
-    fn map_identity(&self) -> Option<u64> {
+    fn map_identity(&self) -> Option<u128> {
         self.inner.map_identity()
     }
 }

@@ -111,7 +111,7 @@ impl VfsFile for RealFile {
             .map_err(|e| Error::io(&self.path, e))
     }
 
-    fn map_identity(&self) -> Option<u64> {
+    fn map_identity(&self) -> Option<u128> {
         // device + inode name the file across every handle (and across
         // renames), exactly like the kernel page cache keys mappings
         use std::os::unix::fs::MetadataExt;

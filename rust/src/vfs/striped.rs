@@ -210,7 +210,7 @@ struct StripedFile {
     append: bool,
     /// [`VfsFile::map_identity`]: instance nonce + path hash, shared by
     /// every handle of this file on the owning mount.
-    ident: u64,
+    ident: u128,
 }
 
 impl StripedFile {
@@ -344,7 +344,7 @@ impl VfsFile for StripedFile {
         self.logical_len()
     }
 
-    fn map_identity(&self) -> Option<u64> {
+    fn map_identity(&self) -> Option<u128> {
         Some(self.ident)
     }
 }
