@@ -1060,6 +1060,7 @@ impl SeaFs {
                             epoch,
                             append: false,
                             reader: false,
+                            quiet: false,
                             file,
                         }));
                     }
@@ -1094,6 +1095,7 @@ impl SeaFs {
                     epoch: gen,
                     append: false,
                     reader: false,
+                    quiet: false,
                     file,
                 }))
             }
@@ -1165,6 +1167,7 @@ impl SeaFs {
                             epoch,
                             append: true,
                             reader: false,
+                            quiet: false,
                             file,
                         }))
                     }
@@ -1181,6 +1184,7 @@ impl SeaFs {
                 epoch: gen,
                 append: true,
                 reader: false,
+                quiet: false,
                 file,
             })),
             // no local entry: append to the PFS-resident file (the PFS
@@ -1188,6 +1192,50 @@ impl SeaFs {
             How::Pfs => sh.pfs.open(Path::new(rel), OpenMode::Append),
             How::Fail(e) => Err(e),
         }
+    }
+
+    /// Open a reader-mode [`SeaFile`] for `rel`: preads refuse writes,
+    /// skip writer accounting, and the registry hooks (`map_sync` /
+    /// `map_identity`) let read views follow a spill and share frames.
+    /// Heats the engine once at open; `quiet` additionally suppresses
+    /// the per-`pread` heat — used by the chunked whole-file
+    /// [`Vfs::read`] so one `read()` call counts exactly one access
+    /// however many chunks it streams.
+    fn open_reader(&self, rel: String, quiet: bool) -> Result<SeaFile> {
+        self.shared.engine.on_access(&rel, Access::Read);
+        let (file, dev, epoch) = match self.shared.registry.get(&rel) {
+            Some(e) => match e.dev {
+                Some(d) => {
+                    match self.shared.backend(d).open(Path::new(&rel), OpenMode::Read) {
+                        Ok(f) => (f, Some(d), e.epoch),
+                        // evicted between lookup and open: the flush
+                        // that preceded eviction put a PFS copy there
+                        Err(Error::NotFound(_)) => (
+                            self.shared.pfs.open(Path::new(&rel), OpenMode::Read)?,
+                            None,
+                            e.epoch,
+                        ),
+                        Err(err) => return Err(err),
+                    }
+                }
+                // spilled: the live copy is on the PFS
+                None => {
+                    (self.shared.pfs.open(Path::new(&rel), OpenMode::Read)?, None, e.epoch)
+                }
+            },
+            // untracked: a PFS-resident file (epoch 0)
+            None => (self.shared.pfs.open(Path::new(&rel), OpenMode::Read)?, None, 0),
+        };
+        Ok(SeaFile {
+            shared: self.shared.clone(),
+            rel,
+            dev,
+            epoch,
+            append: false,
+            reader: true,
+            quiet,
+            file,
+        })
     }
 
     /// `unlink` body; caller holds the per-file flush lock for `rel`.
@@ -1355,6 +1403,14 @@ struct SeaFile {
     /// Read-only handle: writes are refused, close-time management and
     /// the writer count are skipped entirely.
     reader: bool,
+    /// Suppress per-`pread` heat. The whole-file [`Vfs::read`]
+    /// convenience streams through a reader handle in
+    /// `chunk_bytes`-sized preads; heating on every chunk would make
+    /// one `read()` of a large file count `size / chunk_bytes`
+    /// accesses — inflating heat in proportion to file size and
+    /// skewing `TemperatureEngine` victim elections — so that path
+    /// heats once at open and quiets the per-chunk heat.
+    quiet: bool,
     file: Box<dyn VfsFile>,
 }
 
@@ -1676,10 +1732,12 @@ fn disarm_spill(sh: &Shared, rel: &str, epoch: u64) {
 
 impl VfsFile for SeaFile {
     fn pread(&mut self, buf: &mut [u8], off: u64) -> Result<usize> {
-        if self.reader {
+        if self.reader && !self.quiet {
             // reads heat the file for the TemperatureEngine just like
             // writes do — a hot reader must outlive a cold writer in
-            // victim elections (writer handles already heat on pwrite)
+            // victim elections (writer handles already heat on pwrite).
+            // `quiet` readers (the chunked whole-file `Vfs::read`)
+            // heated once at open instead of once per chunk.
             self.shared.engine.on_access(&self.rel, Access::Read);
         }
         self.file.pread(buf, off)
@@ -1851,7 +1909,7 @@ impl VfsFile for SeaFile {
     /// writers and spill relocations; the epoch keeps a superseded
     /// handle (orphaned inode) from sharing frames with a recreated
     /// file of the same name.
-    fn map_identity(&self) -> Option<u64> {
+    fn map_identity(&self) -> Option<u128> {
         let mount = Arc::as_ptr(&self.shared) as u64;
         Some(crate::vfs::pages::identity_hash(&[
             &mount.to_le_bytes(),
@@ -2094,55 +2152,12 @@ impl Vfs for SeaFs {
         match self.rel_of(path) {
             None => self.shared.pfs.open(path, mode),
             Some(rel) => match mode {
-                OpenMode::Read => {
-                    self.shared.engine.on_access(&rel, Access::Read);
-                    // wrap the backend handle in a reader-mode SeaFile:
-                    // preads keep heating the engine, and the registry
-                    // hooks (map_sync / map_identity) let read views
-                    // follow a spill and share frames with writers —
-                    // instead of pinning a raw inode across relocation
-                    let (file, dev, epoch) = match self.shared.registry.get(&rel) {
-                        Some(e) => match e.dev {
-                            Some(d) => {
-                                match self
-                                    .shared
-                                    .backend(d)
-                                    .open(Path::new(&rel), OpenMode::Read)
-                                {
-                                    Ok(f) => (f, Some(d), e.epoch),
-                                    // evicted between lookup and open:
-                                    // the flush that preceded eviction
-                                    // put a PFS copy there
-                                    Err(Error::NotFound(_)) => (
-                                        self.shared.pfs.open(Path::new(&rel), OpenMode::Read)?,
-                                        None,
-                                        e.epoch,
-                                    ),
-                                    Err(err) => return Err(err),
-                                }
-                            }
-                            // spilled: the live copy is on the PFS
-                            None => (
-                                self.shared.pfs.open(Path::new(&rel), OpenMode::Read)?,
-                                None,
-                                e.epoch,
-                            ),
-                        },
-                        // untracked: a PFS-resident file (epoch 0)
-                        None => {
-                            (self.shared.pfs.open(Path::new(&rel), OpenMode::Read)?, None, 0)
-                        }
-                    };
-                    Ok(Box::new(SeaFile {
-                        shared: self.shared.clone(),
-                        rel,
-                        dev,
-                        epoch,
-                        append: false,
-                        reader: true,
-                        file,
-                    }))
-                }
+                // wrap the backend handle in a reader-mode SeaFile:
+                // preads keep heating the engine, and the registry
+                // hooks (map_sync / map_identity) let read views
+                // follow a spill and share frames with writers —
+                // instead of pinning a raw inode across relocation
+                OpenMode::Read => Ok(Box::new(self.open_reader(rel, false)?)),
                 OpenMode::Append => self.open_append(&rel),
                 OpenMode::Write | OpenMode::ReadWrite => self.open_writer(&rel, mode),
             },
@@ -2152,12 +2167,15 @@ impl Vfs for SeaFs {
     fn read(&self, path: &Path) -> Result<Vec<u8>> {
         match self.rel_of(path) {
             None => self.shared.pfs.read(path),
-            Some(_) => {
+            Some(rel) => {
                 // stream through the handle path in mover-sized chunks:
                 // the backend never materializes the file in a second
-                // whole-file buffer on top of the returned Vec, and the
-                // read rides the reader handle's heat + spill-follow
-                let mut f = self.open(path, OpenMode::Read)?;
+                // whole-file buffer on top of the returned Vec. The
+                // reader is `quiet`: the open heats the engine once, so
+                // one read() counts one access regardless of how many
+                // chunks it streams (per-chunk heat would inflate heat
+                // in proportion to file size)
+                let mut f = self.open_reader(rel, true)?;
                 let len = f.len()? as usize;
                 let chunk = self.shared.mover_cfg.chunk_bytes.max(1);
                 let mut out = vec![0u8; len];
@@ -3614,6 +3632,69 @@ mod tests {
         assert!(
             sea.device_of("warm.dat").is_some(),
             "read-heated file stayed resident"
+        );
+        sea.sync_mgmt().unwrap();
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn whole_file_read_counts_one_access() {
+        // review regression: `SeaFs::read` streams in chunk_bytes-sized
+        // preads through a *quiet* reader handle — one read() call must
+        // heat the engine exactly once, not once per chunk, or a single
+        // bulk read of a large file would outheat a deliberately
+        // re-read sibling and steal its victim election
+        let root = scratch("seafs_read_one_access");
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
+        let sea = SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(root.join("dev"), 0, 4 * MIB).unwrap()],
+            pfs: pfs.clone(),
+            max_file_size: MIB,
+            parallel_procs: 1,
+            rules: RuleSet::default(),
+            seed: 1,
+            tuning: SeaTuning {
+                engine: EngineKind::Temperature,
+                // near-1 decay: heat ≈ touch count, so the election
+                // cleanly separates one access (quiet read) from the
+                // 16-per-chunk accounting this test guards against
+                heat_decay: 0.99,
+                chunk_bytes: (64 * KIB) as usize,
+                ..SeaTuning::default()
+            },
+        })
+        .unwrap();
+        sea.write(Path::new("/sea/bulk.dat"), &vec![1u8; MIB as usize]).unwrap();
+        sea.write(Path::new("/sea/warm.dat"), &vec![2u8; MIB as usize]).unwrap();
+        // warm.dat: a handful of deliberate handle reads
+        {
+            let mut r = sea.open(Path::new("/sea/warm.dat"), OpenMode::Read).unwrap();
+            let mut buf = vec![0u8; 64 * KIB as usize];
+            for k in 0..4u64 {
+                r.pread_exact(&mut buf, k * 128 * KIB).unwrap();
+            }
+        }
+        // bulk.dat: ONE whole-file read, streamed as 16 chunks
+        let got = sea.read(Path::new("/sea/bulk.dat")).unwrap();
+        assert_eq!(got.len(), MIB as usize);
+        assert!(got.iter().all(|&b| b == 1));
+        // pressure: a hot writer outgrows the device; the victim must
+        // be the single-access bulk file, not the re-read warm one
+        {
+            let mut f = sea.open(Path::new("/sea/hot.dat"), OpenMode::Write).unwrap();
+            let quarter = MIB as usize / 4;
+            for k in 0..10u64 {
+                f.pwrite_all(&vec![9u8; quarter], k * quarter as u64).unwrap();
+            }
+        }
+        assert!(
+            sea.device_of("bulk.dat").is_none(),
+            "one whole-file read left bulk.dat coldest: it spilled"
+        );
+        assert!(
+            sea.device_of("warm.dat").is_some(),
+            "the re-read file out-heated a single bulk read and stayed"
         );
         sea.sync_mgmt().unwrap();
         let _ = std::fs::remove_dir_all(&root);
