@@ -5,13 +5,15 @@
 //! plus the handle API's partial-read path (64 KiB strides from 1 MiB
 //! blocks), the flush pool's concurrent drain throughput, the
 //! streaming DataMover (streamed-vs-wholefile sweep over file size ×
-//! chunk_bytes × copy_window, emitting `BENCH_datamover.json`), and
-//! the PageCache (mapped-vs-pread sweep over page size × budget on a
-//! rate-limited striped PFS, emitting `BENCH_pagecache.json`).
+//! chunk_bytes × copy_window, emitting `BENCH_datamover.json`), the
+//! PageCache (mapped-vs-pread sweep over page size × budget on a
+//! rate-limited striped PFS, emitting `BENCH_pagecache.json`), and the
+//! cold-tier codec stage (on/off × corpus × chunk size, emitting
+//! `BENCH_compress.json`).
 //!
-//! `SEA_BENCH_SMOKE=1` runs only the tiny DataMover + PageCache sweeps
-//! — the CI smoke invocation that keeps the bench harness compiling
-//! and running.
+//! `SEA_BENCH_SMOKE=1` runs only the tiny DataMover + PageCache +
+//! compress sweeps — the CI smoke invocation that keeps the bench
+//! harness compiling and running.
 
 mod common;
 
@@ -24,8 +26,9 @@ use sea::bench::Harness;
 use sea::placement::{EngineKind, RuleSet};
 use sea::util::{KIB, MIB};
 use sea::vfs::{
-    DataMover, DeviceSpec, MapMode, MovePath, MoverCfg, MoverMetrics, OpenMode, PageCache,
-    RateLimitedFs, RealFs, SeaFs, SeaFsConfig, SeaTuning, StripedFs, Vfs, VfsFile,
+    compress, CodecMode, CompressedReader, DataMover, DeviceSpec, MapMode, MovePath, MoverCfg,
+    MoverMetrics, OpenMode, PageCache, RateLimitedFs, RealFs, SeaFs, SeaFsConfig, SeaTuning,
+    StripedFs, Vfs, VfsFile,
 };
 
 /// Mapped-vs-pread sweep over a rate-limited chunk-striped PFS
@@ -238,7 +241,7 @@ fn datamover_sweep(work: &Path, h: &mut Harness, smoke: bool) {
                     .expect("open");
                 let t0 = Instant::now();
                 let n = DataMover::new(
-                    MoverCfg { chunk_bytes: chunk, copy_window: window },
+                    MoverCfg { chunk_bytes: chunk, copy_window: window, ..MoverCfg::default() },
                     MovePath::Flush,
                 )
                 .with_metrics(&metrics)
@@ -280,7 +283,7 @@ fn datamover_sweep(work: &Path, h: &mut Harness, smoke: bool) {
     src_fs
         .write(Path::new("fan.dat"), &vec![1u8; fan_size as usize])
         .expect("fan payload");
-    let cfg = MoverCfg { chunk_bytes: MIB as usize, copy_window: 2 }
+    let cfg = MoverCfg { chunk_bytes: MIB as usize, copy_window: 2, ..MoverCfg::default() }
         .aligned_to(striped.stripe_bytes());
     let mut src = src_fs.open(Path::new("fan.dat"), OpenMode::Read).expect("open");
     let mut dst = striped.open(Path::new("fan.dat"), OpenMode::Write).expect("open");
@@ -315,6 +318,135 @@ fn datamover_sweep(work: &Path, h: &mut Harness, smoke: bool) {
     }
 }
 
+/// Codec-stage sweep: the same bytes moved with the codec off and on
+/// (level 1 / 3), over a compressible and an incompressible corpus,
+/// into a rate-limited chunk-striped PFS — the shape a flush or spill
+/// sees. Measures wall time and physical bytes written, verifies every
+/// destination reads back byte-identical (decoding through the frame
+/// index when a container was written), and emits `BENCH_compress.json`.
+fn compress_sweep(work: &Path, h: &mut Harness, smoke: bool) {
+    let size: u64 = if smoke { 768 * KIB } else { 8 * MIB };
+    let chunks: Vec<usize> = if smoke {
+        vec![(64 * KIB) as usize]
+    } else {
+        vec![(256 * KIB) as usize, MIB as usize]
+    };
+    let codecs: Vec<(&str, CodecMode)> = if smoke {
+        vec![
+            ("off", CodecMode::Off),
+            ("lz_l1", CodecMode::Encode { level: 1, min_ratio_pct: 100 }),
+        ]
+    } else {
+        vec![
+            ("off", CodecMode::Off),
+            ("lz_l1", CodecMode::Encode { level: 1, min_ratio_pct: 100 }),
+            ("lz_l3", CodecMode::Encode { level: 3, min_ratio_pct: 100 }),
+        ]
+    };
+    let src_fs = RealFs::new(work.join("cz_src")).expect("src");
+    let stripe: u64 = if smoke { 64 * KIB } else { 256 * KIB };
+    let member_cap = if smoke { 1e9 } else { 128.0 * MIB as f64 };
+    let members: Vec<Arc<dyn Vfs>> = (0..4)
+        .map(|i| {
+            Arc::new(RateLimitedFs::new(
+                RealFs::new(work.join(format!("cz_ost{i}"))).expect("ost"),
+                1e9,
+                member_cap,
+            )) as Arc<dyn Vfs>
+        })
+        .collect();
+    let dst_fs = StripedFs::striped(members, stripe).expect("striped");
+    // banded bytes squeeze hard; an LCG stream does not compress at all
+    let mut lcg = 0x9E37_79B9u64;
+    let corpora: Vec<(&str, Vec<u8>)> = vec![
+        ("compressible", (0..size as usize).map(|k| (k / 1024) as u8).collect()),
+        (
+            "incompressible",
+            (0..size as usize)
+                .map(|_| {
+                    lcg = lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                    (lcg >> 33) as u8
+                })
+                .collect(),
+        ),
+    ];
+    let mut rows: Vec<(String, usize, String, f64, u64)> = Vec::new();
+    for (label, data) in &corpora {
+        let name = format!("{label}.dat");
+        src_fs.write(Path::new(&name), data).expect("payload");
+        for &chunk in &chunks {
+            for (cname, codec) in &codecs {
+                let out = format!("{label}_{cname}_c{chunk}.dat");
+                let metrics = MoverMetrics::default();
+                let mut src = src_fs.open(Path::new(&name), OpenMode::Read).expect("open");
+                let mut dst = dst_fs.open(Path::new(&out), OpenMode::Write).expect("open");
+                let cfg = MoverCfg { chunk_bytes: chunk, copy_window: 2, codec: *codec }
+                    .aligned_to(dst_fs.stripe_bytes());
+                let t0 = Instant::now();
+                let (n, phys) = DataMover::new(cfg, MovePath::Flush)
+                    .with_metrics(&metrics)
+                    .copy_counted(src.as_mut(), dst.as_mut(), size)
+                    .expect("copy");
+                let wall_s = t0.elapsed().as_secs_f64();
+                assert_eq!(n, size);
+                // every destination reads back byte-identical
+                let mut f = dst_fs.open(Path::new(&out), OpenMode::Read).expect("open");
+                let mut reader: Box<dyn VfsFile> =
+                    match compress::probe(f.as_mut()).expect("probe") {
+                        Some(meta) => Box::new(CompressedReader::new(f, meta)),
+                        None => f,
+                    };
+                let mut got = vec![0u8; size as usize];
+                let mut done = 0usize;
+                while done < got.len() {
+                    let r = reader.pread(&mut got[done..], done as u64).expect("pread");
+                    assert!(r > 0, "read stalled at {done}");
+                    done += r;
+                }
+                assert_eq!(&got, data, "{out} corrupted");
+                match codec {
+                    CodecMode::Off => assert_eq!(phys, size),
+                    CodecMode::Encode { .. } => {
+                        // worst case: store frames + index + trailer
+                        // (cfg.chunk_bytes: aligned_to may have widened it)
+                        let fchunk = cfg.chunk_bytes as u64;
+                        let frames = (size.max(1) + fchunk - 1) / fchunk;
+                        assert!(
+                            phys <= size + frames * (13 + 16) + 44,
+                            "{out}: passthrough overhead {phys} vs {size}"
+                        );
+                        if *label == "compressible" {
+                            assert!(phys < size / 2, "{out}: no shrink ({phys})");
+                        }
+                    }
+                }
+                h.record(
+                    &format!("compress_{label}_{cname}_c{chunk}"),
+                    vec![wall_s],
+                    format!("{size}B logical, {phys}B physical"),
+                );
+                rows.push((label.to_string(), chunk, cname.to_string(), wall_s, phys));
+            }
+        }
+    }
+    let mut json = String::from("{\n  \"target\": \"vfs/compress\",\n");
+    json.push_str(&format!(
+        "  \"file_bytes\": {size},\n  \"stripe_bytes\": {stripe},\n  \"members\": 4,\n  \"sweep\": [\n"
+    ));
+    for (i, (label, chunk, cname, wall_s, phys)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"corpus\": \"{label}\", \"chunk_bytes\": {chunk}, \"codec\": \"{cname}\", \
+             \"wall_s\": {wall_s:.6}, \"logical_bytes\": {size}, \"physical_bytes\": {phys}}}{}\n",
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_compress.json", &json) {
+        Ok(()) => println!("wrote BENCH_compress.json ({} combos)", rows.len()),
+        Err(e) => eprintln!("bench: could not write BENCH_compress.json: {e}"),
+    }
+}
+
 fn main() {
     let work = std::env::temp_dir().join("sea_bench_vfs");
     let _ = std::fs::remove_dir_all(&work);
@@ -324,6 +456,7 @@ fn main() {
         let mut h = Harness::new("vfs").with_reps(1, 1);
         datamover_sweep(&work, &mut h, true);
         pagecache_sweep(&work, &mut h, true);
+        compress_sweep(&work, &mut h, true);
         let _ = h.finish();
         let _ = std::fs::remove_dir_all(&work);
         return;
@@ -621,6 +754,10 @@ fn main() {
     // mapped-vs-pread sweep over the rate-limited striped PFS
     // (BENCH_pagecache.json)
     pagecache_sweep(&work, &mut h, false);
+
+    // codec on/off over compressible + incompressible corpora
+    // (BENCH_compress.json)
+    compress_sweep(&work, &mut h, false);
 
     let results = h.finish();
     // derive the per-op interception overhead from the 4k pair

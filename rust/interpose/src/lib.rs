@@ -53,8 +53,11 @@
 //! descriptors or processes survive outside the dirtied ranges.
 //! Everything else — anonymous, `MAP_FIXED`, executable, non-Sea fds
 //! — forwards straight to the kernel (`SEA_MMAP=0` disables the
-//! emulation entirely). Remaining gaps: partial `munmap` of an
-//! emulated region tears down the whole region; the snapshot doubles
+//! emulation entirely). Partial `munmap` of an emulated region is
+//! honored: the released sub-range is flushed and returned to the
+//! kernel, and the bookkeeping is trimmed (a middle cut splits the
+//! region in two, each half with its own descriptor and snapshot
+//! slice). Remaining gaps: the snapshot doubles
 //! the memory of a writable shared mapping; a concurrent external
 //! write landing *inside* a byte range this mapping also dirtied is
 //! still clobbered at sync (deferred-write semantics, vs. real
@@ -665,67 +668,179 @@ unsafe fn pwrite_all_raw(fd: c_int, buf: &[u8], off: u64) -> bool {
     true
 }
 
-/// `msync`/`munmap` back half for emulated regions: diff the live
-/// region against the fill snapshot and pwrite only the changed byte
-/// range of each pool page through the duplicated descriptor
-/// (writable shared mappings — a region the caller never stored to
-/// writes nothing back, so concurrent updates to the file through
-/// other descriptors/processes survive outside the dirtied ranges),
-/// pool invalidation when anything was written, and — on unmap —
-/// region teardown. `None` when `addr` is not an emulated region.
-/// The maps lock is held across the write-back: concurrent syncs of
-/// one region cannot interleave diff passes, and re-entrant allocator
-/// mmap/munmap calls forward raw under `IN_SHIM` without touching the
-/// table (the pool lock only ever nests *inside* the maps lock).
-unsafe fn emulated_sync(addr: *mut c_void, unmap: bool) -> Option<c_int> {
+/// Diff `[lo0, hi0)` of the live emulated region at `base` against its
+/// fill snapshot and pwrite only the changed byte range of each pool
+/// page through the duplicated descriptor (writable shared mappings —
+/// a range the caller never stored to writes nothing back, so
+/// concurrent updates to the file through other descriptors/processes
+/// survive outside the dirtied ranges), invalidating the file's pooled
+/// pages when anything was written. On a write error the snapshot
+/// stays stale for that range, so a later msync (or the unmap flush)
+/// retries the write; returns -1 then, 0 otherwise. Private mappings
+/// are a no-op. Caller holds the maps lock.
+unsafe fn write_back_range(base: usize, info: &mut MapInfo, lo0: usize, hi0: usize) -> c_int {
+    let Some(wb) = info.wb.as_mut() else { return 0 };
+    let region = std::slice::from_raw_parts(base as *const u8, info.len);
+    let mut ret = 0;
+    let mut wrote = false;
+    let mut lo = lo0;
+    while lo < hi0 {
+        let hi = (lo + MMAP_POOL_PAGE).min(hi0);
+        let (cur, old) = (&region[lo..hi], &wb.snapshot[lo..hi]);
+        if cur != old {
+            // narrow to the changed byte range of this page
+            let a = cur.iter().zip(old).position(|(c, o)| c != o).unwrap_or(0);
+            let b = cur
+                .iter()
+                .zip(old)
+                .rposition(|(c, o)| c != o)
+                .map_or(cur.len(), |k| k + 1);
+            if !pwrite_all_raw(wb.fd, &cur[a..b], info.offset + (lo + a) as u64) {
+                ret = -1;
+                break;
+            }
+            wb.snapshot[lo + a..lo + b].copy_from_slice(&cur[a..b]);
+            wrote = true;
+        }
+        lo = hi;
+    }
+    if wrote {
+        // the file changed under its pooled pages: drop them so
+        // later mappings re-read instead of serving pre-write bytes
+        let (dev, ino) = (wb.dev, wb.ino);
+        let mut p = pool().lock().unwrap_or_else(|e| e.into_inner());
+        p.fifo.retain(|k| k.0 != dev || k.1 != ino);
+        p.pages.retain(|k, _| k.0 != dev || k.1 != ino);
+    }
+    ret
+}
+
+/// `msync` back half for emulated regions: write the whole region's
+/// dirty ranges back ([`write_back_range`]). `None` when `addr` is not
+/// an emulated region. The maps lock is held across the write-back:
+/// concurrent syncs of one region cannot interleave diff passes, and
+/// re-entrant allocator mmap/munmap calls forward raw under `IN_SHIM`
+/// without touching the table (the pool lock only ever nests *inside*
+/// the maps lock).
+unsafe fn emulated_sync(addr: *mut c_void) -> Option<c_int> {
     let mut m = maps().lock().unwrap_or_else(|e| e.into_inner());
     let mut info = m.remove(&(addr as usize))?;
-    let mut ret = 0;
-    if let Some(wb) = info.wb.as_mut() {
-        let region = std::slice::from_raw_parts(addr as *const u8, info.len);
-        let mut wrote = false;
-        let mut lo = 0usize;
-        while lo < info.len {
-            let hi = (lo + MMAP_POOL_PAGE).min(info.len);
-            let (cur, old) = (&region[lo..hi], &wb.snapshot[lo..hi]);
-            if cur != old {
-                // narrow to the changed byte range of this page
-                let a = cur.iter().zip(old).position(|(c, o)| c != o).unwrap_or(0);
-                let b = cur
-                    .iter()
-                    .zip(old)
-                    .rposition(|(c, o)| c != o)
-                    .map_or(cur.len(), |k| k + 1);
-                if !pwrite_all_raw(wb.fd, &cur[a..b], info.offset + (lo + a) as u64) {
-                    // snapshot stays stale for this range, so a later
-                    // msync (or the unmap flush) retries the write
-                    ret = -1;
-                    break;
-                }
-                wb.snapshot[lo + a..lo + b].copy_from_slice(&cur[a..b]);
-                wrote = true;
-            }
-            lo = hi;
-        }
-        if wrote {
-            // the file changed under its pooled pages: drop them so
-            // later mappings re-read instead of serving pre-write bytes
-            let (dev, ino) = (wb.dev, wb.ino);
-            let mut p = pool().lock().unwrap_or_else(|e| e.into_inner());
-            p.fifo.retain(|k| k.0 != dev || k.1 != ino);
-            p.pages.retain(|k, _| k.0 != dev || k.1 != ino);
-        }
-        if unmap {
+    let ret = write_back_range(addr as usize, &mut info, 0, info.len);
+    m.insert(addr as usize, info);
+    Some(ret)
+}
+
+/// `munmap` back half for emulated regions, sub-ranges included: flush
+/// only the dirty pages inside `[addr, addr + len)` (page-granular,
+/// like the kernel), release exactly those pages, and trim the
+/// bookkeeping — a prefix cut re-keys the region, a suffix cut shrinks
+/// it, a middle cut splits it in two (the right half gets its own
+/// duplicated descriptor and snapshot tail, acquired *before* anything
+/// is released so a failure leaves the region intact, like the
+/// kernel's own ENOMEM on a VMA split). `None` when the range is not
+/// inside an emulated region.
+unsafe fn emulated_unmap(addr: *mut c_void, len: libc::size_t) -> Option<c_int> {
+    if len == 0 {
+        return None; // kernel's EINVAL path
+    }
+    let a = addr as usize;
+    let page = libc::sysconf(libc::_SC_PAGESIZE).max(1) as usize;
+    let mut m = maps().lock().unwrap_or_else(|e| e.into_inner());
+    let base = m
+        .iter()
+        .find(|(b, i)| **b <= a && a < **b + i.len)
+        .map(|(b, _)| *b)?;
+    if a % page != 0 {
+        *libc::__errno_location() = libc::EINVAL;
+        return Some(-1);
+    }
+    let mut info = m.remove(&base).expect("region found above");
+    let total = info.len;
+    let lo = a - base;
+    // munmap lengths round up to page granularity; a range running
+    // past the region end clamps to it (the kernel would release any
+    // following mappings too — the emulation never places one there)
+    let hi = match len.checked_add(page - 1) {
+        Some(l) => a.saturating_add(l & !(page - 1)).min(base + total) - base,
+        None => total,
+    };
+    // flush only the dirty pages inside the released range
+    let mut ret = write_back_range(base, &mut info, lo, hi);
+    if lo == 0 && hi == total {
+        // full teardown
+        if let Some(wb) = info.wb.as_ref() {
             libc::close(wb.fd);
         }
-    }
-    if unmap {
-        let r = sys_munmap(addr, info.len);
+        let r = sys_munmap(base as *mut c_void, total);
         if r != 0 {
             ret = r;
         }
+        return Some(ret);
+    }
+    // a middle cut needs a second descriptor for the right half —
+    // acquire it before releasing anything
+    let right_fd = if lo > 0 && hi < total {
+        match info.wb.as_ref() {
+            None => None,
+            Some(wb) => {
+                let dup = libc::fcntl(wb.fd, libc::F_DUPFD_CLOEXEC, 0);
+                if dup < 0 {
+                    m.insert(base, info);
+                    return Some(-1); // fcntl left errno
+                }
+                Some(dup)
+            }
+        }
     } else {
-        m.insert(addr as usize, info);
+        None
+    };
+    let r = sys_munmap((base + lo) as *mut c_void, hi - lo);
+    if r != 0 {
+        // nothing was released: keep the bookkeeping intact
+        if let Some(fd) = right_fd {
+            libc::close(fd);
+        }
+        m.insert(base, info);
+        return Some(r);
+    }
+    if lo == 0 {
+        // prefix cut: the region now starts (and mirrors the file) at
+        // `hi` bytes further in
+        if let Some(wb) = info.wb.as_mut() {
+            wb.snapshot.drain(..hi);
+        }
+        info.len = total - hi;
+        info.offset += hi as u64;
+        m.insert(base + hi, info);
+    } else if hi == total {
+        // suffix cut: shrink in place
+        if let Some(wb) = info.wb.as_mut() {
+            wb.snapshot.truncate(lo);
+        }
+        info.len = lo;
+        m.insert(base, info);
+    } else {
+        // middle cut: left keeps the original descriptor, right gets
+        // the duplicate and the snapshot tail
+        let mut left = info;
+        let right_wb = match (left.wb.as_mut(), right_fd) {
+            (Some(wb), Some(fd)) => {
+                let tail = wb.snapshot.split_off(hi);
+                Some(WriteBack { fd, dev: wb.dev, ino: wb.ino, snapshot: tail })
+            }
+            _ => None,
+        };
+        let right = MapInfo {
+            len: total - hi,
+            offset: left.offset + hi as u64,
+            wb: right_wb,
+        };
+        if let Some(wb) = left.wb.as_mut() {
+            wb.snapshot.truncate(lo);
+        }
+        left.len = lo;
+        m.insert(base, left);
+        m.insert(base + hi, right);
     }
     Some(ret)
 }
@@ -803,7 +918,7 @@ pub unsafe extern "C" fn mmap64(
 pub unsafe extern "C" fn msync(addr: *mut c_void, len: libc::size_t, flags: c_int) -> c_int {
     if !IN_SHIM.with(|g| g.get()) {
         IN_SHIM.with(|g| g.set(true));
-        let handled = emulated_sync(addr, false);
+        let handled = emulated_sync(addr);
         IN_SHIM.with(|g| g.set(false));
         if let Some(r) = handled {
             return r;
@@ -812,9 +927,11 @@ pub unsafe extern "C" fn msync(addr: *mut c_void, len: libc::size_t, flags: c_in
     sys_msync(addr, len, flags)
 }
 
-/// `munmap`: tear down an emulated region (write-back first when it is
-/// a writable shared one); forward kernel mappings — including the
-/// allocator's own frees — raw.
+/// `munmap`: release an emulated region or any sub-range of one
+/// (write-back of the released range first when it is a writable
+/// shared mapping, then a prefix/suffix/middle trim of the
+/// bookkeeping); forward kernel mappings — including the allocator's
+/// own frees — raw.
 ///
 /// # Safety
 /// C ABI; arguments per the libc contract.
@@ -822,7 +939,7 @@ pub unsafe extern "C" fn msync(addr: *mut c_void, len: libc::size_t, flags: c_in
 pub unsafe extern "C" fn munmap(addr: *mut c_void, len: libc::size_t) -> c_int {
     if !IN_SHIM.with(|g| g.get()) {
         IN_SHIM.with(|g| g.set(true));
-        let handled = emulated_sync(addr, true);
+        let handled = emulated_unmap(addr, len);
         IN_SHIM.with(|g| g.set(false));
         if let Some(r) = handled {
             return r;
@@ -981,6 +1098,107 @@ mod tests {
             0xEE,
             "external write outside the dirtied ranges survived the sync"
         );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn partial_munmap_flushes_only_the_released_range() {
+        // satellite regression: munmap of a sub-range must flush the
+        // dirty pages inside that range only, hand the pages back to
+        // the kernel, and keep tracking the surviving remainder
+        let _env = ENV_LOCK.lock().unwrap();
+        let dir = scratch_target("mmap_partial");
+        let path = dir.join("p.dat");
+        std::fs::write(&path, vec![0u8; 2 * MMAP_POOL_PAGE]).unwrap();
+        let c = c_path(&path);
+        unsafe {
+            let fd = libc::open(c.as_ptr(), libc::O_RDWR);
+            assert!(fd >= 0);
+            let a = mmap(
+                std::ptr::null_mut(),
+                2 * MMAP_POOL_PAGE,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED,
+                fd,
+                0,
+            );
+            assert_ne!(a, libc::MAP_FAILED, "emulated writable mapping failed");
+            let buf = std::slice::from_raw_parts_mut(a as *mut u8, 2 * MMAP_POOL_PAGE);
+            buf[10..14].copy_from_slice(b"head");
+            buf[MMAP_POOL_PAGE + 10..MMAP_POOL_PAGE + 14].copy_from_slice(b"tail");
+            // release only the first half (a prefix cut)
+            assert_eq!(munmap(a, MMAP_POOL_PAGE), 0);
+            let disk = std::fs::read(&path).unwrap();
+            assert_eq!(&disk[10..14], b"head", "released prefix flushed");
+            assert_eq!(
+                &disk[MMAP_POOL_PAGE + 10..MMAP_POOL_PAGE + 14],
+                &[0u8; 4],
+                "surviving half is not flushed by the prefix unmap"
+            );
+            // the survivor is still live, still tracked at its new
+            // base, and its stores land at the right file offset
+            let rest = std::slice::from_raw_parts_mut(
+                (a as usize + MMAP_POOL_PAGE) as *mut u8,
+                MMAP_POOL_PAGE,
+            );
+            rest[20..24].copy_from_slice(b"more");
+            libc::close(fd); // write-back runs on the duplicated fd
+            assert_eq!(
+                munmap((a as usize + MMAP_POOL_PAGE) as *mut c_void, MMAP_POOL_PAGE),
+                0
+            );
+        }
+        let disk = std::fs::read(&path).unwrap();
+        assert_eq!(&disk[MMAP_POOL_PAGE + 10..MMAP_POOL_PAGE + 14], b"tail");
+        assert_eq!(&disk[MMAP_POOL_PAGE + 20..MMAP_POOL_PAGE + 24], b"more");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn middle_munmap_splits_the_region_in_two() {
+        let _env = ENV_LOCK.lock().unwrap();
+        let dir = scratch_target("mmap_split");
+        let path = dir.join("s.dat");
+        std::fs::write(&path, vec![0u8; 3 * MMAP_POOL_PAGE]).unwrap();
+        let c = c_path(&path);
+        unsafe {
+            let fd = libc::open(c.as_ptr(), libc::O_RDWR);
+            assert!(fd >= 0);
+            let a = mmap(
+                std::ptr::null_mut(),
+                3 * MMAP_POOL_PAGE,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED,
+                fd,
+                0,
+            );
+            assert_ne!(a, libc::MAP_FAILED, "emulated writable mapping failed");
+            let buf = std::slice::from_raw_parts_mut(a as *mut u8, 3 * MMAP_POOL_PAGE);
+            buf[5..9].copy_from_slice(b"left");
+            buf[MMAP_POOL_PAGE + 5..MMAP_POOL_PAGE + 8].copy_from_slice(b"mid");
+            buf[2 * MMAP_POOL_PAGE + 5..2 * MMAP_POOL_PAGE + 9].copy_from_slice(b"rght");
+            // cut the middle page out: it flushes, the halves do not
+            assert_eq!(
+                munmap((a as usize + MMAP_POOL_PAGE) as *mut c_void, MMAP_POOL_PAGE),
+                0
+            );
+            let disk = std::fs::read(&path).unwrap();
+            assert_eq!(&disk[MMAP_POOL_PAGE + 5..MMAP_POOL_PAGE + 8], b"mid");
+            assert_eq!(&disk[5..9], &[0u8; 4], "left half not flushed by the cut");
+            assert_eq!(&disk[2 * MMAP_POOL_PAGE + 5..2 * MMAP_POOL_PAGE + 9], &[0u8; 4]);
+            // both survivors sync independently: the left at the old
+            // base, the right at its new base through a duplicated fd
+            assert_eq!(msync(a, MMAP_POOL_PAGE, libc::MS_SYNC), 0);
+            assert_eq!(&std::fs::read(&path).unwrap()[5..9], b"left");
+            let right = (a as usize + 2 * MMAP_POOL_PAGE) as *mut c_void;
+            assert_eq!(munmap(right, MMAP_POOL_PAGE), 0);
+            assert_eq!(
+                &std::fs::read(&path).unwrap()[2 * MMAP_POOL_PAGE + 5..2 * MMAP_POOL_PAGE + 9],
+                b"rght"
+            );
+            assert_eq!(munmap(a, MMAP_POOL_PAGE), 0);
+            libc::close(fd);
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

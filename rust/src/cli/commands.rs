@@ -36,7 +36,8 @@ fn work_layout(work: &std::path::Path) -> Result<Vec<DeviceSpec>> {
 /// flags (`--flush-workers`, `--registry-shards`,
 /// `--per-member-concurrency`, `--chunk-bytes`, `--copy-window`,
 /// `--page-bytes`, `--page-budget`, `--engine`, `--heat-decay`,
-/// `--heat-freq-weight`, `--promote-headroom`).
+/// `--heat-freq-weight`, `--promote-headroom`, `--compress`,
+/// `--compress-level`, `--compress-min-ratio`).
 fn tuning_from_args(args: &Args) -> Result<SeaTuning> {
     let base = match args.get("config") {
         Some(path) => config::tuning_from_doc(&config::Doc::load(std::path::Path::new(path))?)?,
@@ -62,6 +63,10 @@ fn tuning_from_args(args: &Args) -> Result<SeaTuning> {
         heat_freq_weight: args.f64_or("heat-freq-weight", base.heat_freq_weight)?,
         promote_headroom_bytes: args
             .bytes_or("promote-headroom", base.promote_headroom_bytes)?,
+        compress: base.compress || args.has("compress"),
+        compress_level: args.usize_or("compress-level", base.compress_level as usize)?
+            as u8,
+        compress_min_ratio: args.f64_or("compress-min-ratio", base.compress_min_ratio)?,
     })
 }
 
@@ -344,7 +349,9 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
              \x20       [--chunk-bytes 1MiB] [--copy-window N]  # DataMover streaming\n\
              \x20       [--page-bytes 64KiB] [--page-budget 64MiB]  # mmap PageCache\n\
              \x20       [--engine paper|temperature]  # placement engine\n\
-             \x20       [--heat-decay X] [--heat-freq-weight X] [--promote-headroom S]"
+             \x20       [--heat-decay X] [--heat-freq-weight X] [--promote-headroom S]\n\
+             \x20       [--compress] [--compress-level 1..9] [--compress-min-ratio X]\n\
+             \x20       # encode cold-tier flushes/spills (see vfs::compress)"
         );
         return Ok(0);
     }
@@ -472,14 +479,23 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
 /// Render a mount's per-device ledger lines and management counters
 /// (the `sea stat` body).
 fn format_stat(engine: &str, ledger: &[DeviceLedger], c: MgmtCounters) -> String {
+    // `logical / physical (ratio)`: what the device's residents decode
+    // to over what they actually store — 1.00x everywhere unless a
+    // codec ran (see `vfs::compress`)
+    let stored = |logical: u64, physical: u64| {
+        let ratio =
+            if physical > 0 { logical as f64 / physical as f64 } else { 1.0 };
+        format!("{} / {} ({:.2}x)", fmt_bytes(logical), fmt_bytes(physical), ratio)
+    };
     let mut out = format!("engine : {engine}\n");
     out.push_str(&format!(
-        "{:<28} {:>4} {:>10} {:>10} {:>10} {:>11} {:>11}\n",
-        "device", "tier", "capacity", "used", "free", "debits", "credits"
+        "{:<28} {:>4} {:>10} {:>10} {:>10} {:>11} {:>11}  {}\n",
+        "device", "tier", "capacity", "used", "free", "debits", "credits",
+        "logical / physical"
     ));
     for l in ledger {
         out.push_str(&format!(
-            "{:<28} {:>4} {:>10} {:>10} {:>10} {:>11} {:>11}\n",
+            "{:<28} {:>4} {:>10} {:>10} {:>10} {:>11} {:>11}  {}\n",
             l.name,
             l.tier,
             fmt_bytes(l.capacity),
@@ -487,6 +503,7 @@ fn format_stat(engine: &str, ledger: &[DeviceLedger], c: MgmtCounters) -> String
             fmt_bytes(l.free),
             fmt_bytes(l.debits),
             fmt_bytes(l.credits),
+            stored(l.logical, l.used),
         ));
     }
     out.push_str(&format!(
@@ -495,12 +512,12 @@ fn format_stat(engine: &str, ledger: &[DeviceLedger], c: MgmtCounters) -> String
         c.flushes, c.evictions, c.self_spills, c.victim_spills, c.promotions, c.prefetched
     ));
     out.push_str(&format!(
-        "moved  : {} flush, {} spill, {} promote, {} prefetch \
+        "moved  : flush {}, spill {}, promote {}, prefetch {} \
          (peak copy buffers {})\n",
-        fmt_bytes(c.flush_bytes),
-        fmt_bytes(c.spill_bytes),
-        fmt_bytes(c.promote_bytes),
-        fmt_bytes(c.prefetch_bytes),
+        stored(c.flush_bytes, c.flush_physical_bytes),
+        stored(c.spill_bytes, c.spill_physical_bytes),
+        stored(c.promote_bytes, c.promote_physical_bytes),
+        stored(c.prefetch_bytes, c.prefetch_physical_bytes),
         fmt_bytes(c.peak_copy_buffer_bytes),
     ));
     out.push_str(&format!(
@@ -537,7 +554,8 @@ pub fn run_stat(args: &mut Args) -> Result<i32> {
              \x20        [--per-member-concurrency N]\n\
              \x20        [--chunk-bytes 1MiB] [--copy-window N]\n\
              \x20        [--page-bytes 64KiB] [--page-budget 64MiB]\n\
-             \x20        [--heat-decay X] [--heat-freq-weight X] [--promote-headroom S]"
+             \x20        [--heat-decay X] [--heat-freq-weight X] [--promote-headroom S]\n\
+             \x20        [--compress] [--compress-level 1..9] [--compress-min-ratio X]"
         );
         return Ok(0);
     }
@@ -578,6 +596,7 @@ mod tests {
                 used: MIB,
                 debits: 2 * MIB,
                 credits: MIB,
+                logical: 2 * MIB, // compressed residents: 2x ratio
             },
             DeviceLedger {
                 name: "disk0".into(),
@@ -587,6 +606,7 @@ mod tests {
                 used: 0,
                 debits: 0,
                 credits: 0,
+                logical: 0,
             },
         ];
         let counters = MgmtCounters {
@@ -600,6 +620,10 @@ mod tests {
             spill_bytes: 5 * MIB,
             promote_bytes: MIB,
             prefetch_bytes: 2 * MIB,
+            flush_physical_bytes: MIB, // the codec shrank flushes 3x
+            spill_physical_bytes: 5 * MIB,
+            promote_physical_bytes: MIB,
+            prefetch_physical_bytes: 2 * MIB,
             peak_copy_buffer_bytes: 2 * MIB,
             page_faults: 7,
             page_hits: 8,
@@ -620,6 +644,13 @@ mod tests {
         assert!(s.contains("6 prefetched"), "{s}");
         assert!(s.contains("moved  : "), "{s}");
         assert!(s.contains("peak copy buffers"), "{s}");
+        // ledger lines carry logical / physical (ratio)
+        assert!(s.contains("logical / physical"), "{s}");
+        assert!(s.contains("2.0 MiB / 1.0 MiB (2.00x)"), "{s}");
+        assert!(s.contains("0 B / 0 B (1.00x)"), "{s}");
+        // the moved line shows both columns per path
+        assert!(s.contains("flush 3.0 MiB / 1.0 MiB (3.00x)"), "{s}");
+        assert!(s.contains("spill 5.0 MiB / 5.0 MiB (1.00x)"), "{s}");
         assert!(s.contains("pages  : 7 faults, 8 hits (5 shared), 1 deduped, 9 evictions"), "{s}");
         assert_eq!(
             s.lines().count(),
@@ -638,6 +669,23 @@ mod tests {
         assert_eq!(t.flush_workers, 2);
         let argv: Vec<String> = ["--engine", "bogus"].iter().map(|s| s.to_string()).collect();
         assert!(tuning_from_args(&Args::parse(&argv)).is_err());
+    }
+
+    #[test]
+    fn tuning_from_args_parses_compress_flags() {
+        let argv: Vec<String> =
+            ["--compress", "--compress-level", "7", "--compress-min-ratio", "0.9"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let t = tuning_from_args(&Args::parse(&argv)).unwrap();
+        assert!(t.compress);
+        assert_eq!(t.compress_level, 7);
+        assert_eq!(t.compress_min_ratio, 0.9);
+        // off by default
+        let t = tuning_from_args(&Args::parse(&[])).unwrap();
+        assert!(!t.compress);
+        assert_eq!(t.compress_level, 3);
     }
 
     #[test]

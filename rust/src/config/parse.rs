@@ -158,6 +158,11 @@ impl Doc {
         self.get(key).and_then(Value::as_bytes).unwrap_or(default)
     }
 
+    /// Bool with default.
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
     /// String with default.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key)
@@ -213,6 +218,9 @@ sweep = [1, 2, 4, 8]
         let d = Doc::parse("").unwrap();
         assert_eq!(d.usize_or("none", 7), 7);
         assert_eq!(d.str_or("none", "dflt"), "dflt");
+        assert!(d.bool_or("none", true));
+        let d = Doc::parse("flag = false\n").unwrap();
+        assert!(!d.bool_or("flag", true));
     }
 
     #[test]

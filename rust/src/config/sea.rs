@@ -8,8 +8,10 @@
 //! page-cache shape for mapped I/O (`page_bytes` / `page_budget` —
 //! mapped views never hold more than `page_budget` resident bytes),
 //! the placement-engine selector (`engine = "paper" | "temperature"`),
-//! and the temperature-engine heat knobs (`heat_decay`,
-//! `heat_freq_weight`, `promote_headroom_bytes`); missing keys keep
+//! the temperature-engine heat knobs (`heat_decay`,
+//! `heat_freq_weight`, `promote_headroom_bytes`), and the cold-tier
+//! codec stage (`compress`, `compress_level`, `compress_min_ratio` —
+//! see [`crate::vfs::compress`]); missing keys keep
 //! the defaults, so an empty file IS the default mount. An
 //! *unrecognized* engine token is a hard error, matching the
 //! `--engine` CLI flag — silently benchmarking the wrong policy is
@@ -47,6 +49,10 @@ pub fn tuning_from_doc(d: &Doc) -> Result<SeaTuning> {
             "sea.promote_headroom_bytes",
             dflt.promote_headroom_bytes,
         ),
+        compress: d.bool_or("sea.compress", dflt.compress),
+        compress_level: d.usize_or("sea.compress_level", dflt.compress_level as usize)
+            as u8,
+        compress_min_ratio: d.f64_or("sea.compress_min_ratio", dflt.compress_min_ratio),
     })
 }
 
@@ -66,7 +72,8 @@ mod tests {
             "[sea]\nflush_workers = 8\nregistry_shards = 32\nper_member_concurrency = 1\n\
              chunk_bytes = \"4MiB\"\ncopy_window = 3\nengine = \"temperature\"\n\
              page_bytes = \"16KiB\"\npage_budget = \"8MiB\"\n\
-             heat_decay = 0.9\nheat_freq_weight = 2.5\npromote_headroom_bytes = \"1MiB\"\n",
+             heat_decay = 0.9\nheat_freq_weight = 2.5\npromote_headroom_bytes = \"1MiB\"\n\
+             compress = true\ncompress_level = 6\ncompress_min_ratio = 0.8\n",
         )
         .unwrap();
         let t = tuning_from_doc(&d).unwrap();
@@ -81,6 +88,9 @@ mod tests {
         assert_eq!(t.heat_decay, 0.9, "temperature knobs parse");
         assert_eq!(t.heat_freq_weight, 2.5);
         assert_eq!(t.promote_headroom_bytes, 1024 * 1024);
+        assert!(t.compress, "codec knobs parse");
+        assert_eq!(t.compress_level, 6);
+        assert_eq!(t.compress_min_ratio, 0.8);
     }
 
     #[test]

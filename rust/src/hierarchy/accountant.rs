@@ -9,6 +9,23 @@
 //! rather than a bare free counter, so every credit and debit is
 //! attributable to the backend it targeted (`SeaFs::ledger` surfaces
 //! the lines next to each device's name and backend).
+//!
+//! # Logical vs physical bytes
+//!
+//! With transparent cold-tier compression (`crate::vfs::compress`) a
+//! file has two sizes: the **logical** bytes applications wrote and
+//! read back, and the **physical** bytes the device actually stores
+//! after the codec ran. The ledger's space arithmetic — `free`, `used`,
+//! `debits`, `credits`, the `try_debit` floor rule — is always
+//! **physical**: capacity is a physical resource, and a compressed
+//! replica only consumes what it stores. The [`LedgerLine::logical`]
+//! column tracks the logical bytes those physical debits represent, so
+//! `sea stat` can show `logical / physical` per device and the
+//! placement engine can weigh how "cheap to keep" a device's residents
+//! are. On devices that never see the codec (fast tiers, raw spills)
+//! the two columns move in lock-step via the plain
+//! [`SpaceAccountant::try_debit`] / [`SpaceAccountant::credit`], which
+//! debit the same amount from both.
 
 use std::sync::Mutex;
 
@@ -25,6 +42,9 @@ pub struct LedgerLine {
     pub debits: u64,
     /// Cumulative bytes ever credited back (evictions, shrinks, spills).
     pub credits: u64,
+    /// Logical bytes the current physical `used` represents (equal to
+    /// `used` unless the device stores compressed replicas).
+    pub logical: u64,
 }
 
 /// Per-device space ledger over a [`Hierarchy`]'s devices.
@@ -56,14 +76,30 @@ impl SpaceAccountant {
     }
 
     /// Attempt to debit `bytes` from `d` **iff** at least `floor` bytes
-    /// are free (the `p·F` eligibility rule). Returns success.
+    /// are free (the `p·F` eligibility rule). Returns success. Logical
+    /// and physical move in lock-step — uncompressed placement.
     pub fn try_debit(&self, d: DeviceRef, bytes: u64, floor: u64) -> bool {
+        self.try_debit_split(d, bytes, bytes, floor)
+    }
+
+    /// [`SpaceAccountant::try_debit`] for a compressed placement:
+    /// space arithmetic (free/used/debits and the floor rule) uses
+    /// `physical` bytes, while the [`LedgerLine::logical`] column
+    /// grows by `logical`.
+    pub fn try_debit_split(
+        &self,
+        d: DeviceRef,
+        logical: u64,
+        physical: u64,
+        floor: u64,
+    ) -> bool {
         let mut lines = self.lines.lock().expect("accountant poisoned");
         let l = &mut lines[d];
-        if l.free >= floor && l.free >= bytes {
-            l.free -= bytes;
-            l.used += bytes;
-            l.debits += bytes;
+        if l.free >= floor && l.free >= physical {
+            l.free -= physical;
+            l.used += physical;
+            l.debits += physical;
+            l.logical += logical;
             true
         } else {
             false
@@ -72,13 +108,22 @@ impl SpaceAccountant {
 
     /// Credit `bytes` back to `d` (eviction / deletion / spill),
     /// saturating at the ledger's running totals (over-credit is a
-    /// caller bug, but we saturate rather than wrap).
+    /// caller bug, but we saturate rather than wrap). Logical and
+    /// physical move in lock-step — uncompressed placement.
     pub fn credit(&self, d: DeviceRef, bytes: u64) {
+        self.credit_split(d, bytes, bytes)
+    }
+
+    /// [`SpaceAccountant::credit`] for a compressed placement: frees
+    /// `physical` bytes of space, retires `logical` bytes from the
+    /// logical column.
+    pub fn credit_split(&self, d: DeviceRef, logical: u64, physical: u64) {
         let mut lines = self.lines.lock().expect("accountant poisoned");
         let l = &mut lines[d];
-        l.free = l.free.saturating_add(bytes);
-        l.used = l.used.saturating_sub(bytes);
-        l.credits += bytes;
+        l.free = l.free.saturating_add(physical);
+        l.used = l.used.saturating_sub(physical);
+        l.credits += physical;
+        l.logical = l.logical.saturating_sub(logical);
     }
 
     /// Largest free block across devices (diagnostics for NoSpace errors).
@@ -162,8 +207,34 @@ mod tests {
         assert_eq!(lines[0].used, MIB);
         assert_eq!(lines[0].debits, 5 * MIB);
         assert_eq!(lines[0].credits, 4 * MIB);
+        // uncompressed traffic: logical tracks used exactly
+        assert_eq!(lines[0].logical, lines[0].used);
         // device 1 untouched
         assert_eq!(lines[1], LedgerLine { free: 100 * MIB, ..LedgerLine::default() });
+    }
+
+    #[test]
+    fn split_debits_account_logical_and_physical_separately() {
+        let h = h2();
+        let acc = SpaceAccountant::new(&h);
+        // a 10 MiB file compressed to 4 MiB: space moves by 4,
+        // logical by 10
+        assert!(acc.try_debit_split(1, 10 * MIB, 4 * MIB, 0));
+        let l = acc.lines()[1];
+        assert_eq!(l.free, 96 * MIB);
+        assert_eq!(l.used, 4 * MIB);
+        assert_eq!(l.debits, 4 * MIB);
+        assert_eq!(l.logical, 10 * MIB);
+        // the floor rule is physical: 94 MiB floor still admits 4 MiB
+        assert!(acc.try_debit_split(1, 8 * MIB, 2 * MIB, 94 * MIB));
+        // retiring the replica restores both columns
+        acc.credit_split(1, 10 * MIB, 4 * MIB);
+        acc.credit_split(1, 8 * MIB, 2 * MIB);
+        let l = acc.lines()[1];
+        assert_eq!(l.free, 100 * MIB);
+        assert_eq!(l.used, 0);
+        assert_eq!(l.logical, 0);
+        assert_eq!(l.credits, 6 * MIB);
     }
 
     #[test]

@@ -158,6 +158,12 @@ pub struct Resident {
     pub dev: DeviceRef,
     /// Bytes it occupies (= ledger debit).
     pub size: u64,
+    /// Physical bytes its *cold* (PFS) replica occupies, when one is
+    /// already known to exist — `size` otherwise. A compressed replica
+    /// makes a resident "cheap to keep cold": spilling it frees `size`
+    /// device bytes while consuming only `physical` PFS bytes, so
+    /// victim election may prefer it on a heat tie.
+    pub physical: u64,
 }
 
 /// Context when a streaming writer exhausts its device.
@@ -649,9 +655,22 @@ impl PlacementEngine for TemperatureEngine {
             .residents
             .iter()
             .filter(|r| r.dev == p.dev && r.rel != p.rel)
-            .map(|r| (self.heat_score(&r.rel, tick), r))
+            .map(|r| {
+                // weigh heat by how expensive the resident is to keep
+                // cold: a compressed PFS replica (physical < size)
+                // scales its effective heat down, so between two files
+                // of similar warmth the cheap-to-keep one is spilled
+                // first — it costs the cold tier less and frees the
+                // same device bytes.
+                let keep_cost = if r.size > 0 {
+                    (r.physical as f64 / r.size as f64).clamp(0.05, 1.0)
+                } else {
+                    1.0
+                };
+                (self.heat_score(&r.rel, tick) * keep_cost, r)
+            })
             .collect();
-        // coldest first (decayed heat score); ties broken towards the
+        // coldest (cost-weighted) first; ties broken towards the
         // larger file (more space reclaimed per migration)
         cands.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| b.1.size.cmp(&a.1.size)));
         let free = ctx.accountant.free(p.dev);
@@ -807,8 +826,8 @@ mod tests {
         // heat order: cold (never touched) < warm < hot (the writer)
         eng.on_access("warm.dat", Access::Read);
         let residents = vec![
-            Resident { rel: "cold.dat".into(), dev: 0, size: MIB },
-            Resident { rel: "warm.dat".into(), dev: 0, size: MIB },
+            Resident { rel: "cold.dat".into(), dev: 0, size: MIB, physical: MIB },
+            Resident { rel: "warm.dat".into(), dev: 0, size: MIB, physical: MIB },
         ];
         // fill the device so free == 0
         assert!(acc.try_debit(0, 4 * MIB, 0));
@@ -823,6 +842,31 @@ mod tests {
             PressureCtx { rel: "hot.dat", dev: 0, need: 100 * MIB, residents: &residents },
         );
         assert_eq!(ds, vec![Decision::SpillSelf]);
+    }
+
+    #[test]
+    fn compressed_residents_are_cheaper_to_keep_and_spill_first() {
+        // two equally-warm residents; "packed.dat" already has a
+        // well-compressed PFS replica (physical << size), so its
+        // cost-weighted heat is lower and it wins the victim election
+        let (h, acc) = hierarchy();
+        let eng = TemperatureEngine::new(select(), RuleSet::default(), 9);
+        eng.on_access("plain.dat", Access::Read);
+        eng.on_access("packed.dat", Access::Read);
+        let residents = vec![
+            Resident { rel: "plain.dat".into(), dev: 0, size: MIB, physical: MIB },
+            Resident { rel: "packed.dat".into(), dev: 0, size: MIB, physical: MIB / 4 },
+        ];
+        assert!(acc.try_debit(0, 4 * MIB, 0));
+        let ds = eng.on_pressure(
+            EngineCtx { hierarchy: &h, accountant: &acc },
+            PressureCtx { rel: "hot.dat", dev: 0, need: MIB, residents: &residents },
+        );
+        assert_eq!(
+            ds,
+            vec![Decision::SpillVictim { rel: "packed.dat".into() }],
+            "the cheap-to-keep compressed resident spills first"
+        );
     }
 
     #[test]
@@ -900,8 +944,8 @@ mod tests {
         }
         eng.on_access("once.dat", Access::Read); // most recent single touch
         let residents = vec![
-            Resident { rel: "often.dat".into(), dev: 0, size: MIB },
-            Resident { rel: "once.dat".into(), dev: 0, size: MIB },
+            Resident { rel: "often.dat".into(), dev: 0, size: MIB, physical: MIB },
+            Resident { rel: "once.dat".into(), dev: 0, size: MIB, physical: MIB },
         ];
         assert!(acc.try_debit(0, 4 * MIB, 0));
         let ds = eng.on_pressure(
@@ -935,8 +979,8 @@ mod tests {
             eng.on_access("other.dat", Access::Read);
         }
         let residents = vec![
-            Resident { rel: "often.dat".into(), dev: 0, size: MIB },
-            Resident { rel: "recent.dat".into(), dev: 0, size: MIB },
+            Resident { rel: "often.dat".into(), dev: 0, size: MIB, physical: MIB },
+            Resident { rel: "recent.dat".into(), dev: 0, size: MIB, physical: MIB },
         ];
         assert!(acc.try_debit(0, 4 * MIB, 0));
         let ds = eng.on_pressure(

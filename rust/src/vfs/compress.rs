@@ -1,0 +1,966 @@
+//! Transparent cold-tier compression: the block codec and the framed
+//! on-disk container management transfers write to the PFS.
+//!
+//! The paper's thesis is that bytes moved between tiers dominate
+//! end-to-end cost; the slow edge of this stack is the (rate-limited,
+//! striped) PFS, so the [`crate::vfs::DataMover`] can compress chunks
+//! *before* they cross that edge (`MoverCfg::codec`,
+//! `SeaTuning::compress`). Like the hand-rolled error/rand/serde
+//! substitutes elsewhere in the crate, the codec is written here from
+//! scratch — no external crates.
+//!
+//! # Container format
+//!
+//! A compressed replica is a sequence of self-describing **frames**
+//! (one per mover chunk), followed by a **frame index** and a fixed
+//! **trailer**:
+//!
+//! ```text
+//! [frame 0][frame 1]...[frame N-1][index: N x 16 B][trailer: 44 B]
+//!
+//! frame   = codec id (1 B) | logical len (4 B LE) | physical len
+//!           (4 B LE) | checksum of the logical bytes (4 B LE)
+//!           | payload (physical len bytes)
+//! index   = per frame: physical offset (8 B LE) | logical len (4 B LE)
+//!           | physical len (4 B LE)
+//! trailer = index offset (8) | frame count (8) | logical length (8)
+//!           | chunk size (8) | index checksum (4) | MAGIC (8)
+//! ```
+//!
+//! Every frame holds exactly `chunk` logical bytes except the last, so
+//! a logical offset maps to its frame by division — [`CompressedReader`]
+//! `pread`s into a replica by seeking to the right frame and
+//! decompressing only it, never the whole file. The trailer carries the
+//! **logical length**, so the file is self-describing even after its
+//! registry entry is evicted: `Vfs::size` and read paths report logical
+//! bytes while the bytes on the PFS stay physical.
+//!
+//! # Codec
+//!
+//! [`Lz`] is an LZ77 byte-oriented block codec (LZ4-flavoured framing:
+//! token nibbles for literal/match lengths with 255-run extensions,
+//! 16-bit match offsets, minimum match 4). `compress_bounded` gives up
+//! as soon as the output would exceed the caller's budget, which is how
+//! the **incompressible passthrough** works: a chunk that does not beat
+//! `min_ratio` is stored raw ([`CODEC_STORE`]), so the worst-case
+//! overhead of a compressed replica is one 13-byte header per chunk
+//! plus the index/trailer. Corrupted or truncated frames surface as
+//! [`Error::Integrity`] — never a panic or a silent short read.
+
+use crate::error::{Error, Result};
+use crate::vfs::VfsFile;
+
+/// Frame header bytes: codec id + logical len + physical len + checksum.
+pub const FRAME_HDR: usize = 13;
+/// Bytes per frame-index entry: physical offset + logical + physical.
+pub const INDEX_ENTRY: usize = 16;
+/// Fixed trailer at the end of every compressed replica.
+pub const TRAILER_LEN: usize = 44;
+/// Trailer magic (`"SEACOMPZ"`, little-endian).
+pub const MAGIC: u64 = u64::from_le_bytes(*b"SEACOMPZ");
+
+/// Frame payload is stored raw (the incompressible passthrough).
+pub const CODEC_STORE: u8 = 0;
+/// Frame payload is [`Lz`]-compressed.
+pub const CODEC_LZ: u8 = 1;
+
+const MIN_MATCH: usize = 4;
+const MAX_OFFSET: usize = 65_535;
+/// Matches never extend into the last bytes of a block, so the final
+/// sequence is always literal-only and the decoder needs no wild-copy
+/// guard (the same rule LZ4 uses).
+const END_MARGIN: usize = 5;
+const HASH_BITS: u32 = 14;
+
+/// FNV-1a over `data` (integrity, not cryptography: it catches the
+/// truncations and bit-rot a storage path produces).
+pub fn checksum(data: &[u8]) -> u32 {
+    let mut h = 0x811c_9dc5u32;
+    for &b in data {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// A block codec: compresses one mover chunk into one frame payload.
+///
+/// Implementations are identified by a stable one-byte id stored in
+/// every frame header, so replicas written by one codec stay readable
+/// after the default changes.
+pub trait Codec: Send + Sync {
+    /// The id written into frame headers.
+    fn id(&self) -> u8;
+
+    /// Append a compressed form of `src` to `dst`, giving up (and
+    /// returning `false`) as soon as `dst` would exceed `limit` bytes —
+    /// the ratio gate for the store-raw passthrough.
+    fn compress_bounded(&self, src: &[u8], dst: &mut Vec<u8>, limit: usize) -> bool;
+
+    /// Decompress `src` into exactly `logical` bytes appended to a
+    /// cleared `dst`. Malformed input is [`Error::Integrity`].
+    fn decompress(&self, src: &[u8], logical: usize, dst: &mut Vec<u8>) -> Result<()>;
+}
+
+/// The hand-rolled LZ77 block codec (see the module doc for the wire
+/// format). `level` trades search effort for ratio: it bounds how many
+/// hash-chain candidates each position examines.
+#[derive(Debug, Clone, Copy)]
+pub struct Lz {
+    level: u8,
+}
+
+impl Lz {
+    /// A codec searching `level * 4` match candidates per position
+    /// (`level` clamped to 1..=9; 1 keeps only a single-slot hash
+    /// table and is the fast greedy mode).
+    pub fn new(level: u8) -> Lz {
+        Lz { level: level.clamp(1, 9) }
+    }
+}
+
+impl Default for Lz {
+    fn default() -> Lz {
+        Lz::new(3)
+    }
+}
+
+#[inline]
+fn load4(s: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes([s[i], s[i + 1], s[i + 2], s[i + 3]])
+}
+
+#[inline]
+fn hash4(v: u32) -> usize {
+    (v.wrapping_mul(2_654_435_761) >> (32 - HASH_BITS)) as usize
+}
+
+/// Append one sequence (literal run + optional back-reference) to
+/// `dst`; `false` when it would push `dst` past `limit`.
+fn emit_seq(
+    dst: &mut Vec<u8>,
+    lits: &[u8],
+    mat: Option<(usize, usize)>,
+    limit: usize,
+) -> bool {
+    if lits.is_empty() && mat.is_none() {
+        return true;
+    }
+    let lit_ext = if lits.len() >= 15 { (lits.len() - 15) / 255 + 1 } else { 0 };
+    let mat_bytes = match mat {
+        Some((_, len)) => {
+            let ml = len - MIN_MATCH;
+            2 + if ml >= 15 { (ml - 15) / 255 + 1 } else { 0 }
+        }
+        None => 0,
+    };
+    if dst.len() + 1 + lit_ext + lits.len() + mat_bytes > limit {
+        return false;
+    }
+    let lit_nib = lits.len().min(15) as u8;
+    let mat_nib = match mat {
+        Some((_, len)) => (len - MIN_MATCH).min(15) as u8,
+        None => 0,
+    };
+    dst.push((lit_nib << 4) | mat_nib);
+    if lits.len() >= 15 {
+        let mut rem = lits.len() - 15;
+        while rem >= 255 {
+            dst.push(255);
+            rem -= 255;
+        }
+        dst.push(rem as u8);
+    }
+    dst.extend_from_slice(lits);
+    if let Some((off, len)) = mat {
+        dst.extend_from_slice(&(off as u16).to_le_bytes());
+        let mut rem = len - MIN_MATCH;
+        if rem >= 15 {
+            rem -= 15;
+            while rem >= 255 {
+                dst.push(255);
+                rem -= 255;
+            }
+            dst.push(rem as u8);
+        }
+    }
+    true
+}
+
+impl Codec for Lz {
+    fn id(&self) -> u8 {
+        CODEC_LZ
+    }
+
+    fn compress_bounded(&self, src: &[u8], dst: &mut Vec<u8>, limit: usize) -> bool {
+        let n = src.len();
+        if n < MIN_MATCH + END_MARGIN {
+            return emit_seq(dst, src, None, limit);
+        }
+        let match_zone = n - END_MARGIN;
+        let mut head = vec![u32::MAX; 1 << HASH_BITS];
+        // level 1 keeps no chain: only the newest position per bucket
+        let mut prev = if self.level > 1 { vec![u32::MAX; n] } else { Vec::new() };
+        let depth = self.level as usize * 4;
+        let mut i = 0usize;
+        let mut anchor = 0usize;
+        while i + MIN_MATCH <= match_zone {
+            let h = hash4(load4(src, i));
+            let mut cand = head[h];
+            let mut best_len = 0usize;
+            let mut best_off = 0usize;
+            let mut probes = depth;
+            while cand != u32::MAX && probes > 0 {
+                let c = cand as usize;
+                if i - c > MAX_OFFSET {
+                    break; // chain positions only get older
+                }
+                if load4(src, c) == load4(src, i) {
+                    let max_len = match_zone - i;
+                    let mut l = MIN_MATCH.min(max_len);
+                    if src[c..c + l] == src[i..i + l] {
+                        while l < max_len && src[c + l] == src[i + l] {
+                            l += 1;
+                        }
+                        if l >= MIN_MATCH && l > best_len {
+                            best_len = l;
+                            best_off = i - c;
+                        }
+                    }
+                }
+                cand = if prev.is_empty() { u32::MAX } else { prev[c] };
+                probes -= 1;
+            }
+            if best_len >= MIN_MATCH {
+                if !emit_seq(dst, &src[anchor..i], Some((best_off, best_len)), limit) {
+                    return false;
+                }
+                let end = i + best_len;
+                // index the covered region so later matches reach into it
+                while i < end && i + MIN_MATCH <= match_zone {
+                    let h2 = hash4(load4(src, i));
+                    if !prev.is_empty() {
+                        prev[i] = head[h2];
+                    }
+                    head[h2] = i as u32;
+                    i += 1;
+                }
+                i = end;
+                anchor = end;
+            } else {
+                if !prev.is_empty() {
+                    prev[i] = head[h];
+                }
+                head[h] = i as u32;
+                i += 1;
+            }
+        }
+        emit_seq(dst, &src[anchor..], None, limit)
+    }
+
+    fn decompress(&self, src: &[u8], logical: usize, dst: &mut Vec<u8>) -> Result<()> {
+        let bad = |m: &str| Error::Integrity(format!("lz frame: {m}"));
+        dst.clear();
+        dst.reserve(logical);
+        let mut ip = 0usize;
+        while dst.len() < logical {
+            let Some(&token) = src.get(ip) else {
+                return Err(bad("truncated stream"));
+            };
+            ip += 1;
+            let mut lit = (token >> 4) as usize;
+            if lit == 15 {
+                loop {
+                    let Some(&b) = src.get(ip) else {
+                        return Err(bad("truncated literal length"));
+                    };
+                    ip += 1;
+                    lit += b as usize;
+                    if b != 255 {
+                        break;
+                    }
+                }
+            }
+            if lit > 0 {
+                if ip + lit > src.len() {
+                    return Err(bad("literal run past input"));
+                }
+                if dst.len() + lit > logical {
+                    return Err(bad("literal run past logical size"));
+                }
+                dst.extend_from_slice(&src[ip..ip + lit]);
+                ip += lit;
+            }
+            if dst.len() == logical {
+                if token & 0x0F != 0 {
+                    return Err(bad("match after logical end"));
+                }
+                break; // terminal literal-only sequence omits the match
+            }
+            if ip + 2 > src.len() {
+                return Err(bad("truncated match offset"));
+            }
+            let off = u16::from_le_bytes([src[ip], src[ip + 1]]) as usize;
+            ip += 2;
+            if off == 0 || off > dst.len() {
+                return Err(bad("match offset out of range"));
+            }
+            let mut mlen = (token & 0x0F) as usize;
+            if mlen == 15 {
+                loop {
+                    let Some(&b) = src.get(ip) else {
+                        return Err(bad("truncated match length"));
+                    };
+                    ip += 1;
+                    mlen += b as usize;
+                    if b != 255 {
+                        break;
+                    }
+                }
+            }
+            let mlen = mlen + MIN_MATCH;
+            if dst.len() + mlen > logical {
+                return Err(bad("match run past logical size"));
+            }
+            // byte-by-byte: overlapping matches (off < mlen) are the
+            // RLE case and must see their own freshly written bytes
+            let start = dst.len() - off;
+            for k in 0..mlen {
+                let b = dst[start + k];
+                dst.push(b);
+            }
+        }
+        if ip != src.len() {
+            return Err(bad("trailing bytes after stream"));
+        }
+        Ok(())
+    }
+}
+
+/// The decoder for a frame's codec id, or `None` for an id this build
+/// does not know.
+pub fn decoder_for(id: u8) -> Option<&'static dyn Codec> {
+    static LZ: Lz = Lz { level: 1 }; // level only affects encoding
+    match id {
+        CODEC_LZ => Some(&LZ),
+        _ => None,
+    }
+}
+
+/// One parsed frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHdr {
+    /// Codec id ([`CODEC_STORE`] / [`CODEC_LZ`]).
+    pub codec: u8,
+    /// Logical (decompressed) bytes of this frame.
+    pub logical: u32,
+    /// Physical payload bytes following the header.
+    pub physical: u32,
+    /// Checksum of the logical bytes.
+    pub checksum: u32,
+}
+
+impl FrameHdr {
+    /// Parse the 13 header bytes.
+    pub fn parse(b: &[u8; FRAME_HDR]) -> FrameHdr {
+        FrameHdr {
+            codec: b[0],
+            logical: u32::from_le_bytes([b[1], b[2], b[3], b[4]]),
+            physical: u32::from_le_bytes([b[5], b[6], b[7], b[8]]),
+            checksum: u32::from_le_bytes([b[9], b[10], b[11], b[12]]),
+        }
+    }
+}
+
+/// Encode one mover chunk into a framed `out` (cleared first): header
+/// plus either a compressed payload or — when compression cannot beat
+/// `min_ratio_pct` percent of the logical size — the raw bytes
+/// ([`CODEC_STORE`] passthrough, worst case one header of overhead).
+pub fn encode_frame(codec: &dyn Codec, chunk: &[u8], min_ratio_pct: u16, out: &mut Vec<u8>) {
+    out.clear();
+    out.extend_from_slice(&[0u8; FRAME_HDR]);
+    // keep the compressed form only when strictly under the gate
+    let gate = ((chunk.len() as u128 * min_ratio_pct as u128) / 100) as usize;
+    let fit = gate > 0 && codec.compress_bounded(chunk, out, FRAME_HDR + gate - 1);
+    let (id, physical) = if fit {
+        (codec.id(), out.len() - FRAME_HDR)
+    } else {
+        out.truncate(FRAME_HDR);
+        out.extend_from_slice(chunk);
+        (CODEC_STORE, chunk.len())
+    };
+    out[0] = id;
+    out[1..5].copy_from_slice(&(chunk.len() as u32).to_le_bytes());
+    out[5..9].copy_from_slice(&(physical as u32).to_le_bytes());
+    out[9..13].copy_from_slice(&checksum(chunk).to_le_bytes());
+}
+
+/// Decode one frame given its parsed header and payload, into a
+/// cleared `out`; verifies the checksum of the logical bytes.
+pub fn decode_frame(hdr: &FrameHdr, payload: &[u8], out: &mut Vec<u8>) -> Result<()> {
+    if payload.len() != hdr.physical as usize {
+        return Err(Error::Integrity(format!(
+            "frame payload is {} B, header says {}",
+            payload.len(),
+            hdr.physical
+        )));
+    }
+    match hdr.codec {
+        CODEC_STORE => {
+            if hdr.physical != hdr.logical {
+                return Err(Error::Integrity(
+                    "stored frame: physical != logical".into(),
+                ));
+            }
+            out.clear();
+            out.extend_from_slice(payload);
+        }
+        id => {
+            let codec = decoder_for(id).ok_or_else(|| {
+                Error::Integrity(format!("unknown codec id {id} in frame header"))
+            })?;
+            codec.decompress(payload, hdr.logical as usize, out)?;
+        }
+    }
+    if checksum(out) != hdr.checksum {
+        return Err(Error::Integrity("frame checksum mismatch".into()));
+    }
+    Ok(())
+}
+
+/// One frame's index entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameInfo {
+    /// Physical offset of the frame header in the replica.
+    pub phys_off: u64,
+    /// Logical bytes the frame decodes to.
+    pub logical: u32,
+    /// Physical payload bytes (header excluded).
+    pub physical: u32,
+}
+
+/// Parsed shape of a compressed replica (from its index + trailer).
+#[derive(Debug, Clone)]
+pub struct Meta {
+    /// Logical (decompressed) length of the whole file.
+    pub logical_len: u64,
+    /// Logical bytes per frame (all frames but the last).
+    pub chunk: u64,
+    /// Per-frame index, in file order.
+    pub frames: Vec<FrameInfo>,
+}
+
+/// Accumulates the frame index while an encoder appends frames, then
+/// renders the index + trailer bytes.
+#[derive(Debug, Default)]
+pub struct IndexBuilder {
+    entries: Vec<u8>,
+    count: u64,
+    logical: u64,
+}
+
+impl IndexBuilder {
+    /// An empty index.
+    pub fn new() -> IndexBuilder {
+        IndexBuilder::default()
+    }
+
+    /// Record one appended frame.
+    pub fn push(&mut self, phys_off: u64, logical: u32, physical: u32) {
+        self.entries.extend_from_slice(&phys_off.to_le_bytes());
+        self.entries.extend_from_slice(&logical.to_le_bytes());
+        self.entries.extend_from_slice(&physical.to_le_bytes());
+        self.count += 1;
+        self.logical += logical as u64;
+    }
+
+    /// Logical bytes indexed so far.
+    pub fn logical(&self) -> u64 {
+        self.logical
+    }
+
+    /// Render the index + trailer to append after the last frame at
+    /// physical offset `index_off`.
+    pub fn finish(self, chunk: u64, index_off: u64) -> Vec<u8> {
+        let mut out = self.entries;
+        let ck = checksum(&out[..]);
+        out.extend_from_slice(&index_off.to_le_bytes());
+        out.extend_from_slice(&self.count.to_le_bytes());
+        out.extend_from_slice(&self.logical.to_le_bytes());
+        out.extend_from_slice(&chunk.to_le_bytes());
+        out.extend_from_slice(&ck.to_le_bytes());
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out
+    }
+}
+
+/// Write a whole compressed replica of `data` through `dst` (frames of
+/// `chunk` logical bytes, index, trailer); returns physical bytes
+/// written. The streaming paths live in the `DataMover`; this helper
+/// serves tests and small in-place rewrites.
+pub fn write_compressed(
+    dst: &mut dyn VfsFile,
+    data: &[u8],
+    chunk: usize,
+    codec: &dyn Codec,
+    min_ratio_pct: u16,
+) -> Result<u64> {
+    let chunk = chunk.max(1);
+    let mut index = IndexBuilder::new();
+    let mut off = 0u64;
+    let mut frame = Vec::new();
+    for piece in data.chunks(chunk) {
+        encode_frame(codec, piece, min_ratio_pct, &mut frame);
+        dst.pwrite_all(&frame, off)?;
+        index.push(off, piece.len() as u32, (frame.len() - FRAME_HDR) as u32);
+        off += frame.len() as u64;
+    }
+    let tail = index.finish(chunk as u64, off);
+    dst.pwrite_all(&tail, off)?;
+    Ok(off + tail.len() as u64)
+}
+
+fn read_u64(b: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(b[at..at + 8].try_into().expect("8 bytes"))
+}
+
+fn read_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(b[at..at + 4].try_into().expect("4 bytes"))
+}
+
+/// Cheap trailer-only probe: `Some(logical length)` when `file` is a
+/// compressed replica, `None` when it is a plain file. Magic mismatch
+/// is `None` (not an error — most files are plain); a matching magic
+/// with an inconsistent trailer is [`Error::Integrity`].
+pub fn logical_len(file: &mut dyn VfsFile) -> Result<Option<u64>> {
+    Ok(trailer(file)?.map(|t| t.logical_len))
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Trailer {
+    index_off: u64,
+    frame_count: u64,
+    logical_len: u64,
+    chunk: u64,
+    index_ck: u32,
+    file_len: u64,
+}
+
+fn trailer(file: &mut dyn VfsFile) -> Result<Option<Trailer>> {
+    let file_len = file.len()?;
+    if file_len < TRAILER_LEN as u64 {
+        return Ok(None);
+    }
+    let mut b = [0u8; TRAILER_LEN];
+    file.pread_exact(&mut b, file_len - TRAILER_LEN as u64)?;
+    if read_u64(&b, 36) != MAGIC {
+        return Ok(None);
+    }
+    let t = Trailer {
+        index_off: read_u64(&b, 0),
+        frame_count: read_u64(&b, 8),
+        logical_len: read_u64(&b, 16),
+        chunk: read_u64(&b, 24),
+        index_ck: read_u32(&b, 32),
+        file_len,
+    };
+    let bad = |m: &str| Error::Integrity(format!("compressed trailer: {m}"));
+    if t.chunk == 0 {
+        return Err(bad("zero chunk size"));
+    }
+    let index_bytes = t
+        .frame_count
+        .checked_mul(INDEX_ENTRY as u64)
+        .ok_or_else(|| bad("frame count overflows"))?;
+    if t.index_off
+        .checked_add(index_bytes)
+        .and_then(|v| v.checked_add(TRAILER_LEN as u64))
+        != Some(file_len)
+    {
+        return Err(bad("index does not tile the file"));
+    }
+    let want_frames = t
+        .logical_len
+        .checked_add(t.chunk - 1)
+        .ok_or_else(|| bad("logical length overflows"))?
+        / t.chunk;
+    if t.frame_count != want_frames {
+        return Err(bad("frame count disagrees with logical length"));
+    }
+    Ok(Some(t))
+}
+
+/// Full probe: parse and verify the frame index. `Ok(None)` for plain
+/// files, `Ok(Some(meta))` for a well-formed compressed replica,
+/// [`Error::Integrity`] for a replica whose trailer or index is
+/// corrupt.
+pub fn probe(file: &mut dyn VfsFile) -> Result<Option<Meta>> {
+    let Some(t) = trailer(file)? else {
+        return Ok(None);
+    };
+    let bad = |m: &str| Error::Integrity(format!("compressed index: {m}"));
+    let index_bytes = (t.frame_count * INDEX_ENTRY as u64) as usize;
+    let mut raw = vec![0u8; index_bytes];
+    file.pread_exact(&mut raw, t.index_off)?;
+    if checksum(&raw) != t.index_ck {
+        return Err(bad("checksum mismatch"));
+    }
+    let mut frames = Vec::with_capacity(t.frame_count as usize);
+    let mut logical_sum = 0u64;
+    let mut next_off = 0u64;
+    for (i, e) in raw.chunks_exact(INDEX_ENTRY).enumerate() {
+        let f = FrameInfo {
+            phys_off: read_u64(e, 0),
+            logical: read_u32(e, 8),
+            physical: read_u32(e, 12),
+        };
+        if f.phys_off != next_off {
+            return Err(bad("frames do not tile the data region"));
+        }
+        if f.logical == 0 || f.logical as u64 > t.chunk {
+            return Err(bad("frame logical length out of range"));
+        }
+        let last = i as u64 == t.frame_count - 1;
+        if !last && f.logical as u64 != t.chunk {
+            return Err(bad("interior frame is not chunk-sized"));
+        }
+        next_off = f.phys_off + (FRAME_HDR as u64 + f.physical as u64);
+        logical_sum += f.logical as u64;
+        frames.push(f);
+    }
+    if next_off != t.index_off {
+        return Err(bad("data region does not meet the index"));
+    }
+    if logical_sum != t.logical_len {
+        return Err(bad("frame logical lengths disagree with the trailer"));
+    }
+    Ok(Some(Meta { logical_len: t.logical_len, chunk: t.chunk, frames }))
+}
+
+/// A seekable logical view over a compressed replica: `pread(off)`
+/// locates `off / chunk` in the frame index, decompresses that frame
+/// only (with a one-frame cache for sequential streams), and serves
+/// logical bytes. `len()` is the logical length. Writes are refused —
+/// replicas are rewritten whole by the management paths.
+pub struct CompressedReader {
+    inner: Box<dyn VfsFile>,
+    meta: Meta,
+    /// `(frame index, logical bytes)` of the last decoded frame.
+    cached: Option<(usize, Vec<u8>)>,
+    payload: Vec<u8>,
+}
+
+impl CompressedReader {
+    /// Wrap an open replica whose shape was read by [`probe`].
+    pub fn new(inner: Box<dyn VfsFile>, meta: Meta) -> CompressedReader {
+        CompressedReader { inner, meta, cached: None, payload: Vec::new() }
+    }
+
+    /// The replica's parsed shape.
+    pub fn meta(&self) -> &Meta {
+        &self.meta
+    }
+
+    fn load_frame(&mut self, fi: usize) -> Result<()> {
+        if matches!(self.cached, Some((idx, _)) if idx == fi) {
+            return Ok(());
+        }
+        let info = self.meta.frames[fi];
+        let mut hdr_raw = [0u8; FRAME_HDR];
+        self.inner.pread_exact(&mut hdr_raw, info.phys_off)?;
+        let hdr = FrameHdr::parse(&hdr_raw);
+        if hdr.logical != info.logical || hdr.physical != info.physical {
+            return Err(Error::Integrity(format!(
+                "frame {fi}: header disagrees with the index"
+            )));
+        }
+        self.payload.resize(hdr.physical as usize, 0);
+        self.inner.pread_exact(&mut self.payload, info.phys_off + FRAME_HDR as u64)?;
+        let mut out = match self.cached.take() {
+            Some((_, buf)) => buf,
+            None => Vec::new(),
+        };
+        decode_frame(&hdr, &self.payload, &mut out)?;
+        self.cached = Some((fi, out));
+        Ok(())
+    }
+}
+
+impl VfsFile for CompressedReader {
+    fn pread(&mut self, buf: &mut [u8], off: u64) -> Result<usize> {
+        if buf.is_empty() || off >= self.meta.logical_len {
+            return Ok(0);
+        }
+        let fi = (off / self.meta.chunk) as usize;
+        self.load_frame(fi)?;
+        let (_, data) = self.cached.as_ref().expect("frame just loaded");
+        let within = (off - fi as u64 * self.meta.chunk) as usize;
+        let n = buf.len().min(data.len() - within);
+        buf[..n].copy_from_slice(&data[within..within + n]);
+        Ok(n)
+    }
+
+    fn pwrite(&mut self, _data: &[u8], _off: u64) -> Result<usize> {
+        Err(Error::InvalidArg(
+            "write through a compressed-replica reader".into(),
+        ))
+    }
+
+    fn set_len(&mut self, _len: u64) -> Result<()> {
+        Err(Error::InvalidArg(
+            "truncate through a compressed-replica reader".into(),
+        ))
+    }
+
+    fn fsync(&mut self) -> Result<()> {
+        self.inner.fsync()
+    }
+
+    fn len(&self) -> Result<u64> {
+        Ok(self.meta.logical_len)
+    }
+
+    fn map_sync(&mut self) -> Result<u64> {
+        self.inner.map_sync()
+    }
+
+    fn note_map_fault(&mut self, off: u64, len: u64) {
+        self.inner.note_map_fault(off, len);
+    }
+
+    fn map_identity(&self) -> Option<u128> {
+        self.inner.map_identity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vfs::testutil::scratch;
+    use crate::vfs::{OpenMode, RealFs, Vfs};
+    use std::path::PathBuf;
+
+    const CHUNK: usize = 4096;
+
+    /// A deterministic pseudo-random byte stream (no rand crate).
+    fn noise(len: usize, mut seed: u64) -> Vec<u8> {
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            seed = seed
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            out.push((seed >> 33) as u8);
+        }
+        out
+    }
+
+    /// Repetitive, text-like corpus that compresses well.
+    fn prose(len: usize) -> Vec<u8> {
+        let line = b"the quick brown fox jumps over the lazy dog 0123456789\n";
+        line.iter().copied().cycle().take(len).collect()
+    }
+
+    fn codec_roundtrip(codec: &Lz, data: &[u8]) {
+        let mut comp = Vec::new();
+        // an unbounded budget: always completes
+        assert!(codec.compress_bounded(data, &mut comp, usize::MAX));
+        let mut back = Vec::new();
+        codec.decompress(&comp, data.len(), &mut back).unwrap();
+        assert_eq!(back, data, "codec round trip ({} B)", data.len());
+    }
+
+    #[test]
+    fn codec_roundtrips_every_size_class() {
+        for level in [1u8, 3, 9] {
+            let lz = Lz::new(level);
+            codec_roundtrip(&lz, b"");
+            codec_roundtrip(&lz, b"x");
+            codec_roundtrip(&lz, &prose(CHUNK - 1));
+            codec_roundtrip(&lz, &prose(CHUNK));
+            codec_roundtrip(&lz, &prose(CHUNK + 1));
+            codec_roundtrip(&lz, &noise(CHUNK, 7));
+            codec_roundtrip(&lz, &vec![0u8; 3 * CHUNK]); // extreme RLE
+            codec_roundtrip(&lz, &prose(3 * CHUNK + 17)); // multi-frame sized
+        }
+    }
+
+    #[test]
+    fn compressible_corpus_actually_shrinks() {
+        let lz = Lz::default();
+        let data = prose(CHUNK);
+        let mut comp = Vec::new();
+        assert!(lz.compress_bounded(&data, &mut comp, usize::MAX));
+        assert!(
+            comp.len() < data.len() / 2,
+            "prose should at least halve: {} -> {}",
+            data.len(),
+            comp.len()
+        );
+    }
+
+    #[test]
+    fn incompressible_chunks_fall_back_to_store() {
+        let data = noise(CHUNK, 99);
+        let mut frame = Vec::new();
+        encode_frame(&Lz::default(), &data, 100, &mut frame);
+        assert_eq!(frame[0], CODEC_STORE, "noise stores raw");
+        assert_eq!(frame.len(), FRAME_HDR + CHUNK, "one header of overhead");
+        let hdr = FrameHdr::parse(frame[..FRAME_HDR].try_into().unwrap());
+        let mut back = Vec::new();
+        decode_frame(&hdr, &frame[FRAME_HDR..], &mut back).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn min_ratio_gate_stores_marginal_chunks() {
+        let data = prose(CHUNK);
+        // prose compresses to well under half; a 10% gate still refuses it
+        let mut frame = Vec::new();
+        encode_frame(&Lz::default(), &data, 1, &mut frame);
+        assert_eq!(frame[0], CODEC_STORE, "1% gate is unreachable");
+        encode_frame(&Lz::default(), &data, 100, &mut frame);
+        assert_eq!(frame[0], CODEC_LZ, "default gate keeps the win");
+        assert!(frame.len() < FRAME_HDR + CHUNK);
+    }
+
+    #[test]
+    fn corrupted_frames_surface_typed_errors() {
+        let data = prose(CHUNK);
+        let mut frame = Vec::new();
+        encode_frame(&Lz::default(), &data, 100, &mut frame);
+        let hdr = FrameHdr::parse(frame[..FRAME_HDR].try_into().unwrap());
+        let mut out = Vec::new();
+        // flip a payload byte: checksum or structure must catch it
+        for at in [FRAME_HDR, FRAME_HDR + 1, frame.len() - 1] {
+            let mut bent = frame.clone();
+            bent[at] ^= 0x5A;
+            assert!(
+                matches!(
+                    decode_frame(&hdr, &bent[FRAME_HDR..], &mut out),
+                    Err(Error::Integrity(_))
+                ),
+                "flip at {at}"
+            );
+        }
+        // truncated payload
+        assert!(matches!(
+            decode_frame(&hdr, &frame[FRAME_HDR..frame.len() - 1], &mut out),
+            Err(Error::Integrity(_))
+        ));
+        // unknown codec id
+        let mut wild = hdr;
+        wild.codec = 0x7F;
+        assert!(matches!(
+            decode_frame(&wild, &frame[FRAME_HDR..], &mut out),
+            Err(Error::Integrity(_))
+        ));
+    }
+
+    #[test]
+    fn container_roundtrip_and_seek() {
+        let dir = scratch("compress_container");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let data = prose(3 * CHUNK + 17);
+        let p = PathBuf::from("replica.z");
+        {
+            let mut f = fs_.open(&p, OpenMode::Write).unwrap();
+            let phys =
+                write_compressed(f.as_mut(), &data, CHUNK, &Lz::default(), 100).unwrap();
+            assert_eq!(phys, f.len().unwrap());
+            assert!(phys < data.len() as u64, "prose replica shrinks");
+        }
+        let mut f = fs_.open(&p, OpenMode::Read).unwrap();
+        let meta = probe(f.as_mut()).unwrap().expect("magic present");
+        assert_eq!(meta.logical_len, data.len() as u64);
+        assert_eq!(meta.frames.len(), 4);
+        let mut r = CompressedReader::new(f, meta);
+        assert_eq!(r.len().unwrap(), data.len() as u64);
+        // seeked reads hit one frame, never the whole file
+        let mut mid = vec![0u8; 64];
+        r.pread_exact(&mut mid, (2 * CHUNK + 100) as u64).unwrap();
+        assert_eq!(&mid[..], &data[2 * CHUNK + 100..2 * CHUNK + 164]);
+        // cross-frame read via pread_exact's loop
+        let mut span = vec![0u8; 200];
+        r.pread_exact(&mut span, (CHUNK - 100) as u64).unwrap();
+        assert_eq!(&span[..], &data[CHUNK - 100..CHUNK + 100]);
+        // whole-file stream
+        let mut all = vec![0u8; data.len()];
+        r.pread_exact(&mut all, 0).unwrap();
+        assert_eq!(all, data);
+        // past-eof reads return 0
+        let mut none = [0u8; 8];
+        assert_eq!(r.pread(&mut none, data.len() as u64).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_container_roundtrips() {
+        let dir = scratch("compress_empty");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let p = PathBuf::from("empty.z");
+        {
+            let mut f = fs_.open(&p, OpenMode::Write).unwrap();
+            write_compressed(f.as_mut(), b"", CHUNK, &Lz::default(), 100).unwrap();
+        }
+        let mut f = fs_.open(&p, OpenMode::Read).unwrap();
+        assert_eq!(logical_len(f.as_mut()).unwrap(), Some(0));
+        let meta = probe(f.as_mut()).unwrap().unwrap();
+        assert_eq!(meta.frames.len(), 0);
+        let mut r = CompressedReader::new(f, meta);
+        let mut buf = [0u8; 4];
+        assert_eq!(r.pread(&mut buf, 0).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn plain_files_probe_as_none() {
+        let dir = scratch("compress_plain");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let p = PathBuf::from("plain.dat");
+        fs_.write(&p, &noise(2 * CHUNK, 3)).unwrap();
+        let mut f = fs_.open(&p, OpenMode::Read).unwrap();
+        assert!(probe(f.as_mut()).unwrap().is_none());
+        assert_eq!(logical_len(f.as_mut()).unwrap(), None);
+        // too-short files can't even hold a trailer
+        fs_.write(&p, b"tiny").unwrap();
+        let mut f = fs_.open(&p, OpenMode::Read).unwrap();
+        assert!(probe(f.as_mut()).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_container_is_a_typed_error() {
+        let dir = scratch("compress_corrupt");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let data = prose(2 * CHUNK);
+        let p = PathBuf::from("replica.z");
+        let phys = {
+            let mut f = fs_.open(&p, OpenMode::Write).unwrap();
+            write_compressed(f.as_mut(), &data, CHUNK, &Lz::default(), 100).unwrap()
+        };
+        // bend one index byte: probe must fail, not misread
+        {
+            let mut f = fs_.open(&p, OpenMode::ReadWrite).unwrap();
+            let at = phys - TRAILER_LEN as u64 - 10;
+            let mut b = [0u8; 1];
+            f.pread_exact(&mut b, at).unwrap();
+            f.pwrite_all(&[b[0] ^ 0xFF], at).unwrap();
+        }
+        let mut f = fs_.open(&p, OpenMode::Read).unwrap();
+        assert!(matches!(probe(f.as_mut()), Err(Error::Integrity(_))));
+        // truncate mid-index: trailer geometry no longer tiles
+        {
+            let mut f = fs_.open(&p, OpenMode::ReadWrite).unwrap();
+            let cut = phys - TRAILER_LEN as u64 - 1;
+            let mut tail = vec![0u8; TRAILER_LEN];
+            f.pread_exact(&mut tail, phys - TRAILER_LEN as u64).unwrap();
+            f.set_len(cut).unwrap();
+            f.pwrite_all(&tail, cut - TRAILER_LEN as u64 + 1).unwrap();
+            let keep = cut + 1;
+            f.set_len(keep).unwrap();
+        }
+        let mut f = fs_.open(&p, OpenMode::Read).unwrap();
+        assert!(matches!(probe(f.as_mut()), Err(Error::Integrity(_))));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

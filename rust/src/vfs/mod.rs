@@ -61,6 +61,20 @@
 //! writer handles alike, views follow mid-stream spills, dirty
 //! write-back of spilled files lands on the PFS replica).
 //!
+//! Below the handle API sits the **[`compress`] layer** — transparent
+//! cold-tier compression: an LZ-style block codec (hand-rolled, no
+//! external crates) that the [`mover::DataMover`] can run in its
+//! read-ahead thread on Flush/Spill transfers
+//! ([`mover::CodecMode::Encode`], `SeaTuning::compress`). Cold PFS
+//! replicas become framed containers (per-chunk header: codec id,
+//! logical/physical lengths, checksum; per-file frame index + trailer)
+//! and reads back come through a seekable
+//! [`compress::CompressedReader`] that decompresses only the frames a
+//! `pread` touches. Sizes split into *logical* (what `len()`/`size`/
+//! readdir and every read path report) and *physical* (what the space
+//! ledger debits and the PFS actually stores); incompressible chunks
+//! are stored raw, so the worst case is one 13-byte header per chunk.
+//!
 //! A separate `cdylib` (`sea-interpose`) provides the literal
 //! `LD_PRELOAD` mechanism for unmodified binaries; it reuses the same
 //! translation logic (offset ops like `pread`/`pwrite` ride on
@@ -71,6 +85,7 @@
 //! `msync`/`munmap` — see the `sea-interpose` crate docs for exact
 //! coverage and remaining gaps.
 
+pub mod compress;
 pub mod mover;
 pub mod pages;
 pub mod rate;
@@ -78,7 +93,8 @@ pub mod real;
 pub mod sea;
 pub mod striped;
 
-pub use mover::{copy_range, DataMover, MovePath, MoverCfg, MoverMetrics};
+pub use compress::{Codec, CompressedReader, Lz};
+pub use mover::{copy_range, CodecMode, DataMover, MovePath, MoverCfg, MoverMetrics};
 pub use pages::{MapMode, MappedView, PageCache, PageCacheStats};
 pub use rate::RateLimitedFs;
 pub use real::RealFs;

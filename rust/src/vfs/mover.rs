@@ -27,11 +27,25 @@
 //! high-water mark of allocated copy-buffer bytes, so the
 //! bounded-memory claim is observable (`sea stat`,
 //! [`crate::vfs::MgmtCounters`]).
+//!
+//! With [`MoverCfg::codec`] set to [`CodecMode::Encode`], the reader
+//! thread additionally compresses each chunk into a
+//! [`crate::vfs::compress`] frame before handing it to the writer —
+//! compression overlaps the destination writes exactly like the
+//! read-ahead does, and the buffer budget stays one read buffer plus
+//! `copy_window - 1` frame buffers. Decompression needs no mover mode:
+//! compressed sources are wrapped in a
+//! [`crate::vfs::compress::CompressedReader`], so the reader thread's
+//! `pread`s decompress in the read-ahead thread on Promote /
+//! read-through paths. [`MoverMetrics`] then tracks *logical* bytes on
+//! the per-path gauges and *physical* (post-codec) bytes on the
+//! physical gauges.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 
 use crate::error::{Error, Result};
+use crate::vfs::compress::{encode_frame, IndexBuilder, Lz, FRAME_HDR};
 use crate::vfs::VfsFile;
 
 /// Default chunk size for streamed transfers: large enough to amortize
@@ -43,6 +57,28 @@ pub const DEFAULT_CHUNK_BYTES: usize = 1 << 20;
 /// read ahead while the previous one is written behind.
 pub const DEFAULT_COPY_WINDOW: usize = 2;
 
+/// What the mover does to chunks on their way to the destination.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodecMode {
+    /// Plain byte-for-byte copy.
+    Off,
+    /// Compress each chunk into a [`crate::vfs::compress`] frame in
+    /// the read-ahead thread; the destination becomes a framed
+    /// compressed replica (frames + index + trailer). There is no
+    /// decode mode — compressed *sources* are wrapped in a
+    /// [`crate::vfs::compress::CompressedReader`] instead, so the
+    /// read-ahead thread decompresses on its `pread`s.
+    Encode {
+        /// [`Lz`] search effort, 1..=9.
+        level: u8,
+        /// Keep a compressed chunk only when its physical size is
+        /// strictly under `min_ratio_pct` percent of the logical size;
+        /// otherwise store raw (100 = store unless it actually
+        /// shrinks).
+        min_ratio_pct: u16,
+    },
+}
+
 /// Tuning for streamed transfers (`[sea] chunk_bytes` / `copy_window`,
 /// `sea run --chunk-bytes / --copy-window`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,6 +88,8 @@ pub struct MoverCfg {
     /// Max chunk buffers in flight per transfer (min 1; 1 disables
     /// read-ahead and degenerates to a synchronous chunked loop).
     pub copy_window: usize,
+    /// Per-chunk codec stage (default [`CodecMode::Off`]).
+    pub codec: CodecMode,
 }
 
 impl Default for MoverCfg {
@@ -59,6 +97,7 @@ impl Default for MoverCfg {
         MoverCfg {
             chunk_bytes: DEFAULT_CHUNK_BYTES,
             copy_window: DEFAULT_COPY_WINDOW,
+            codec: CodecMode::Off,
         }
     }
 }
@@ -106,6 +145,15 @@ pub struct MoverMetrics {
     spill_bytes: AtomicU64,
     promote_bytes: AtomicU64,
     prefetch_bytes: AtomicU64,
+    /// Post-codec bytes that actually crossed the tier edge, per path.
+    /// Equal to the logical gauges when no codec is involved; smaller
+    /// on compressed Flush/Spill (bytes written), and the compressed
+    /// replica's size on Promote/Prefetch reads through a
+    /// `CompressedReader`.
+    flush_physical: AtomicU64,
+    spill_physical: AtomicU64,
+    promote_physical: AtomicU64,
+    prefetch_physical: AtomicU64,
     /// Copy-buffer bytes currently allocated across live transfers.
     buffer_bytes: AtomicU64,
     /// High-water mark of `buffer_bytes`.
@@ -121,6 +169,25 @@ impl MoverMetrics {
     /// Bytes moved on `path` so far.
     pub fn moved(&self, path: MovePath) -> u64 {
         self.gauge(path).load(Ordering::Relaxed)
+    }
+
+    /// Record `bytes` of post-codec traffic on `path`.
+    pub fn record_physical(&self, path: MovePath, bytes: u64) {
+        self.physical_gauge(path).fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Post-codec bytes moved on `path` so far.
+    pub fn moved_physical(&self, path: MovePath) -> u64 {
+        self.physical_gauge(path).load(Ordering::Relaxed)
+    }
+
+    fn physical_gauge(&self, path: MovePath) -> &AtomicU64 {
+        match path {
+            MovePath::Flush => &self.flush_physical,
+            MovePath::Spill => &self.spill_physical,
+            MovePath::Promote => &self.promote_physical,
+            MovePath::Prefetch => &self.prefetch_physical,
+        }
     }
 
     /// High-water mark of allocated copy-buffer bytes across all
@@ -213,12 +280,17 @@ pub struct DataMover<'a> {
     cfg: MoverCfg,
     class: MovePath,
     metrics: Option<&'a MoverMetrics>,
+    /// Known physical size of the source's backing bytes, when the
+    /// caller reads through a decoding wrapper (a `CompressedReader`):
+    /// the physical gauges then record what actually crossed the slow
+    /// edge instead of the logical byte count.
+    physical_hint: Option<u64>,
 }
 
 impl<'a> DataMover<'a> {
     /// A mover for one transfer on the given management path.
     pub fn new(cfg: MoverCfg, class: MovePath) -> DataMover<'a> {
-        DataMover { cfg, class, metrics: None }
+        DataMover { cfg, class, metrics: None, physical_hint: None }
     }
 
     /// Attach per-mount gauges.
@@ -227,17 +299,41 @@ impl<'a> DataMover<'a> {
         self
     }
 
+    /// Declare the physical size behind a decoding source wrapper (see
+    /// `physical_hint`).
+    pub fn with_physical(mut self, bytes: u64) -> DataMover<'a> {
+        self.physical_hint = Some(bytes);
+        self
+    }
+
     /// Copy the first `len` bytes of `src` into `dst` (offset 0 on
-    /// both sides). Returns the bytes actually copied; a short count
+    /// both sides). Returns the *logical* bytes copied; a short count
     /// means the source ended early (racing truncation or a sparse
     /// reserved-but-unwritten tail) — callers decide whether that is
     /// fatal. Peak buffer memory is `chunk_bytes × copy_window`.
+    ///
+    /// In [`CodecMode::Encode`] the destination becomes a framed
+    /// compressed replica; its index + trailer are only written when
+    /// the full `len` bytes arrived, so a short encoded copy leaves a
+    /// probe-invalid destination (callers on management paths already
+    /// treat short as fatal and unlink).
     pub fn copy(
         &self,
         src: &mut dyn VfsFile,
         dst: &mut dyn VfsFile,
         len: u64,
     ) -> Result<u64> {
+        self.copy_counted(src, dst, len).map(|(logical, _)| logical)
+    }
+
+    /// [`DataMover::copy`], also returning the physical bytes written
+    /// to (or, with a physical hint, read from) the slow side.
+    pub fn copy_counted(
+        &self,
+        src: &mut dyn VfsFile,
+        dst: &mut dyn VfsFile,
+        len: u64,
+    ) -> Result<(u64, u64)> {
         let chunk = self.cfg.chunk_bytes.max(1);
         let window = self.cfg.copy_window.max(1);
         let nchunks = if len == 0 {
@@ -245,16 +341,190 @@ impl<'a> DataMover<'a> {
         } else {
             (len + chunk as u64 - 1) / chunk as u64
         };
-        let done = if window == 1 || nchunks <= 1 {
-            // single chunk or no read-ahead budget: plain bounded loop
-            copy_range(src, dst, 0, len, chunk, self.metrics)?
-        } else {
-            self.copy_pipelined(src, dst, len, chunk, window.min(nchunks as usize))?
+        let (done, physical) = match self.cfg.codec {
+            CodecMode::Off => {
+                let done = if window == 1 || nchunks <= 1 {
+                    // single chunk or no read-ahead budget: plain loop
+                    copy_range(src, dst, 0, len, chunk, self.metrics)?
+                } else {
+                    self.copy_pipelined(src, dst, len, chunk, window.min(nchunks as usize))?
+                };
+                // the hint describes the whole source: only meaningful
+                // when the transfer completed
+                let physical = match self.physical_hint {
+                    Some(p) if done == len => p,
+                    _ => done,
+                };
+                (done, physical)
+            }
+            CodecMode::Encode { level, min_ratio_pct } => {
+                let codec = Lz::new(level);
+                if window == 1 || nchunks <= 1 {
+                    self.copy_encoded_sync(src, dst, len, chunk, &codec, min_ratio_pct)?
+                } else {
+                    self.copy_encoded_pipelined(
+                        src,
+                        dst,
+                        len,
+                        chunk,
+                        window.min(nchunks as usize).max(2),
+                        &codec,
+                        min_ratio_pct,
+                    )?
+                }
+            }
         };
         if let Some(m) = self.metrics {
             m.record(self.class, done);
+            m.record_physical(self.class, physical);
         }
-        Ok(done)
+        Ok((done, physical))
+    }
+
+    /// Encoded copy without a reader thread: read chunk, frame it,
+    /// append. One read buffer + one frame buffer.
+    fn copy_encoded_sync(
+        &self,
+        src: &mut dyn VfsFile,
+        dst: &mut dyn VfsFile,
+        len: u64,
+        chunk: usize,
+        codec: &Lz,
+        min_ratio_pct: u16,
+    ) -> Result<(u64, u64)> {
+        let _lease = BufferLease::new(self.metrics, (2 * chunk + FRAME_HDR) as u64);
+        let mut read_buf = vec![0u8; chunk];
+        let mut frame = Vec::with_capacity(chunk + FRAME_HDR);
+        let mut index = IndexBuilder::new();
+        let mut done = 0u64;
+        let mut phys = 0u64;
+        while done < len {
+            let want = ((len - done) as usize).min(chunk);
+            let mut filled = 0usize;
+            while filled < want {
+                let n = src.pread(&mut read_buf[filled..want], done + filled as u64)?;
+                if n == 0 {
+                    break; // EOF: racing truncation / sparse tail
+                }
+                filled += n;
+            }
+            if filled == 0 {
+                break;
+            }
+            encode_frame(codec, &read_buf[..filled], min_ratio_pct, &mut frame);
+            dst.pwrite_all(&frame, phys)?;
+            index.push(phys, filled as u32, (frame.len() - FRAME_HDR) as u32);
+            phys += frame.len() as u64;
+            done += filled as u64;
+            if filled < want {
+                break;
+            }
+        }
+        if done == len {
+            let tail = index.finish(chunk as u64, phys);
+            dst.pwrite_all(&tail, phys)?;
+            phys += tail.len() as u64;
+        }
+        Ok((done, phys))
+    }
+
+    /// Pipelined encoded copy: the reader thread preads a chunk and
+    /// compresses it into a recycled frame buffer while this thread
+    /// appends completed frames and builds the index. Buffers: one
+    /// read buffer + `window - 1` frame buffers, so the budget stays
+    /// within `chunk_bytes × copy_window` (plus a frame header each).
+    #[allow(clippy::too_many_arguments)]
+    fn copy_encoded_pipelined(
+        &self,
+        src: &mut dyn VfsFile,
+        dst: &mut dyn VfsFile,
+        len: u64,
+        chunk: usize,
+        window: usize,
+        codec: &Lz,
+        min_ratio_pct: u16,
+    ) -> Result<(u64, u64)> {
+        let nbufs = window - 1;
+        let _lease =
+            BufferLease::new(self.metrics, (chunk + nbufs * (chunk + FRAME_HDR)) as u64);
+        std::thread::scope(|scope| -> Result<(u64, u64)> {
+            let (data_tx, data_rx) = mpsc::sync_channel::<(Vec<u8>, usize)>(nbufs);
+            let (free_tx, free_rx) = mpsc::channel::<Vec<u8>>();
+            for _ in 0..nbufs {
+                free_tx
+                    .send(Vec::with_capacity(chunk + FRAME_HDR))
+                    .expect("free receiver alive");
+            }
+            let reader = scope.spawn(move || -> Result<()> {
+                let mut read_buf = vec![0u8; chunk];
+                let mut off = 0u64;
+                while off < len {
+                    // a recycled frame buffer, or the writer bailed
+                    let Ok(mut frame) = free_rx.recv() else { return Ok(()) };
+                    let want = ((len - off) as usize).min(chunk);
+                    let mut filled = 0usize;
+                    while filled < want {
+                        let n =
+                            src.pread(&mut read_buf[filled..want], off + filled as u64)?;
+                        if n == 0 {
+                            break; // EOF: racing truncation / sparse tail
+                        }
+                        filled += n;
+                    }
+                    if filled == 0 {
+                        return Ok(());
+                    }
+                    encode_frame(codec, &read_buf[..filled], min_ratio_pct, &mut frame);
+                    let short = filled < want;
+                    if data_tx.send((frame, filled)).is_err() {
+                        return Ok(()); // writer bailed
+                    }
+                    off += filled as u64;
+                    if short {
+                        return Ok(());
+                    }
+                }
+                Ok(())
+            });
+            let mut index = IndexBuilder::new();
+            let mut done = 0u64;
+            let mut phys = 0u64;
+            let mut werr: Option<Error> = None;
+            while let Ok((frame, logical)) = data_rx.recv() {
+                if let Err(e) = dst.pwrite_all(&frame, phys) {
+                    werr = Some(e);
+                    break;
+                }
+                index.push(phys, logical as u32, (frame.len() - FRAME_HDR) as u32);
+                phys += frame.len() as u64;
+                done += logical as u64;
+                let _ = free_tx.send(frame); // reader may already be done
+            }
+            drop(free_tx);
+            drop(data_rx);
+            match reader.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => return Err(werr.unwrap_or(e)),
+                Err(_) => {
+                    return Err(Error::io(
+                        "<datamover>",
+                        std::io::Error::new(
+                            std::io::ErrorKind::Other,
+                            "datamover reader thread panicked",
+                        ),
+                    ))
+                }
+            }
+            if let Some(e) = werr {
+                return Err(e);
+            }
+            if done == len {
+                let tail = index.finish(chunk as u64, phys);
+                dst.pwrite_all(&tail, phys)?;
+                phys += tail.len() as u64;
+            }
+            Ok((done, phys))
+        })
     }
 
     /// Pipelined body: a scoped reader thread preads chunks ahead into
@@ -367,7 +637,8 @@ mod tests {
                 let dst_p = PathBuf::from(format!("dst{i}_w{window}.dat"));
                 let mut src = fs_.open(&src_p, OpenMode::Read).unwrap();
                 let mut dst = fs_.open(&dst_p, OpenMode::Write).unwrap();
-                let cfg = MoverCfg { chunk_bytes: CHUNK, copy_window: window };
+                let cfg =
+                    MoverCfg { chunk_bytes: CHUNK, copy_window: window, ..MoverCfg::default() };
                 let n = DataMover::new(cfg, MovePath::Flush)
                     .copy(src.as_mut(), dst.as_mut(), size as u64)
                     .unwrap();
@@ -392,7 +663,7 @@ mod tests {
         let metrics = MoverMetrics::default();
         let mut src = fs_.open(&p, OpenMode::Read).unwrap();
         let mut dst = fs_.open(&PathBuf::from("out.dat"), OpenMode::Write).unwrap();
-        let cfg = MoverCfg { chunk_bytes: CHUNK, copy_window: 2 };
+        let cfg = MoverCfg { chunk_bytes: CHUNK, copy_window: 2, ..MoverCfg::default() };
         let n = DataMover::new(cfg, MovePath::Spill)
             .with_metrics(&metrics)
             .copy(src.as_mut(), dst.as_mut(), MIB)
@@ -444,12 +715,182 @@ mod tests {
 
     #[test]
     fn chunk_size_aligns_to_the_destination_stripe() {
-        let base = MoverCfg { chunk_bytes: 1_000_000, copy_window: 2 };
+        let base =
+            MoverCfg { chunk_bytes: 1_000_000, copy_window: 2, ..MoverCfg::default() };
         assert_eq!(base.aligned_to(None).chunk_bytes, 1_000_000);
         // snaps down to a whole number of stripes
         assert_eq!(base.aligned_to(Some(262_144)).chunk_bytes, 786_432);
         // a chunk below one stripe is a memory budget — never grown
-        let small = MoverCfg { chunk_bytes: 4096, copy_window: 2 };
+        let small = MoverCfg { chunk_bytes: 4096, copy_window: 2, ..MoverCfg::default() };
         assert_eq!(small.aligned_to(Some(262_144)).chunk_bytes, 4096);
+        // alignment never disturbs the codec stage
+        let enc = MoverCfg {
+            codec: CodecMode::Encode { level: 3, min_ratio_pct: 100 },
+            ..base
+        };
+        assert_eq!(enc.aligned_to(Some(262_144)).codec, enc.codec);
+    }
+
+    use crate::vfs::compress::{self, CompressedReader};
+
+    fn encode_cfg(window: usize) -> MoverCfg {
+        MoverCfg {
+            chunk_bytes: CHUNK,
+            copy_window: window,
+            codec: CodecMode::Encode { level: 3, min_ratio_pct: 100 },
+        }
+    }
+
+    /// Deterministic incompressible bytes (no rand crate).
+    fn noise(len: usize, mut seed: u64) -> Vec<u8> {
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            seed = seed
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            out.push((seed >> 33) as u8);
+        }
+        out
+    }
+
+    #[test]
+    fn encoded_copy_roundtrips_at_every_boundary_size() {
+        let dir = scratch("mover_encode");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let line = b"sea moves bytes between tiers so you do not have to\n";
+        let sizes = [0usize, 1, CHUNK - 1, CHUNK, CHUNK + 1, 3 * CHUNK + 7];
+        for (i, &size) in sizes.iter().enumerate() {
+            let payload: Vec<u8> = line.iter().copied().cycle().take(size).collect();
+            let src_p = PathBuf::from(format!("src{i}.dat"));
+            fs_.write(&src_p, &payload).unwrap();
+            for window in [1usize, 2, 3] {
+                let dst_p = PathBuf::from(format!("dst{i}_w{window}.z"));
+                let mut src = fs_.open(&src_p, OpenMode::Read).unwrap();
+                let mut dst = fs_.open(&dst_p, OpenMode::Write).unwrap();
+                let metrics = MoverMetrics::default();
+                let (logical, phys) = DataMover::new(encode_cfg(window), MovePath::Flush)
+                    .with_metrics(&metrics)
+                    .copy_counted(src.as_mut(), dst.as_mut(), size as u64)
+                    .unwrap();
+                assert_eq!(logical, size as u64, "size {size} window {window}");
+                drop(dst);
+                assert_eq!(metrics.moved(MovePath::Flush), size as u64);
+                assert_eq!(metrics.moved_physical(MovePath::Flush), phys);
+                let mut f = fs_.open(&dst_p, OpenMode::Read).unwrap();
+                assert_eq!(phys, f.len().unwrap(), "container is exactly phys bytes");
+                let meta = compress::probe(f.as_mut())
+                    .unwrap()
+                    .expect("encoded dst has the magic");
+                assert_eq!(meta.logical_len, size as u64);
+                let mut r = CompressedReader::new(f, meta);
+                let mut back = vec![0u8; size];
+                r.pread_exact(&mut back, 0).unwrap();
+                assert_eq!(back, payload, "size {size} window {window}");
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn encoded_copy_shrinks_prose_and_caps_noise_overhead() {
+        let dir = scratch("mover_encode_ratio");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let size = 8 * CHUNK;
+        let prose: Vec<u8> = b"all work and no play makes sea a dull library\n"
+            .iter()
+            .copied()
+            .cycle()
+            .take(size)
+            .collect();
+        for (name, payload) in [("prose", prose), ("noise", noise(size, 42))] {
+            let src_p = PathBuf::from(format!("{name}.dat"));
+            let dst_p = PathBuf::from(format!("{name}.z"));
+            fs_.write(&src_p, &payload).unwrap();
+            let mut src = fs_.open(&src_p, OpenMode::Read).unwrap();
+            let mut dst = fs_.open(&dst_p, OpenMode::Write).unwrap();
+            let (logical, phys) = DataMover::new(encode_cfg(3), MovePath::Spill)
+                .copy_counted(src.as_mut(), dst.as_mut(), size as u64)
+                .unwrap();
+            assert_eq!(logical, size as u64);
+            if name == "prose" {
+                assert!(phys < logical / 2, "prose at least halves: {phys}");
+            } else {
+                // raw passthrough: one header per chunk + index/trailer
+                let cap = size
+                    + 8 * (compress::FRAME_HDR + compress::INDEX_ENTRY)
+                    + compress::TRAILER_LEN;
+                assert!(phys <= cap as u64, "noise overhead {phys} > {cap}");
+            }
+            drop(dst);
+            let mut f = fs_.open(&dst_p, OpenMode::Read).unwrap();
+            let meta = compress::probe(f.as_mut()).unwrap().unwrap();
+            let mut r = CompressedReader::new(f, meta);
+            let mut back = vec![0u8; size];
+            r.pread_exact(&mut back, 0).unwrap();
+            assert_eq!(back, payload, "{name} read-back");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// TSan target: concurrent encoded transfers share one metrics
+    /// block (the compress-in-mover parallel path).
+    #[test]
+    fn parallel_encoded_copies_share_metrics_safely() {
+        let dir = scratch("mover_encode_par");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let size = 2 * CHUNK + 13;
+        let metrics = MoverMetrics::default();
+        std::thread::scope(|scope| {
+            for t in 0..4usize {
+                let fs_ = &fs_;
+                let metrics = &metrics;
+                scope.spawn(move || {
+                    let payload: Vec<u8> =
+                        (0..size).map(|k| ((k * 131 + t * 17) % 251) as u8).collect();
+                    let src_p = PathBuf::from(format!("par{t}.dat"));
+                    let dst_p = PathBuf::from(format!("par{t}.z"));
+                    fs_.write(&src_p, &payload).unwrap();
+                    let mut src = fs_.open(&src_p, OpenMode::Read).unwrap();
+                    let mut dst = fs_.open(&dst_p, OpenMode::Write).unwrap();
+                    let (logical, _) = DataMover::new(encode_cfg(2), MovePath::Flush)
+                        .with_metrics(metrics)
+                        .copy_counted(src.as_mut(), dst.as_mut(), size as u64)
+                        .unwrap();
+                    assert_eq!(logical, size as u64);
+                    drop(dst);
+                    let mut f = fs_.open(&dst_p, OpenMode::Read).unwrap();
+                    let meta = compress::probe(f.as_mut()).unwrap().unwrap();
+                    let mut r = CompressedReader::new(f, meta);
+                    let mut back = vec![0u8; size];
+                    r.pread_exact(&mut back, 0).unwrap();
+                    assert_eq!(back, payload);
+                });
+            }
+        });
+        assert_eq!(metrics.moved(MovePath::Flush), 4 * size as u64);
+        assert!(metrics.moved_physical(MovePath::Flush) > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn physical_hint_is_recorded_for_decode_through_reads() {
+        let dir = scratch("mover_hint");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let p = PathBuf::from("src.dat");
+        fs_.write(&p, &vec![7u8; CHUNK]).unwrap();
+        let metrics = MoverMetrics::default();
+        let mut src = fs_.open(&p, OpenMode::Read).unwrap();
+        let mut dst = fs_.open(&PathBuf::from("dst.dat"), OpenMode::Write).unwrap();
+        let cfg = MoverCfg { chunk_bytes: CHUNK, copy_window: 2, ..MoverCfg::default() };
+        let (logical, phys) = DataMover::new(cfg, MovePath::Promote)
+            .with_metrics(&metrics)
+            .with_physical(100)
+            .copy_counted(src.as_mut(), dst.as_mut(), CHUNK as u64)
+            .unwrap();
+        assert_eq!(logical, CHUNK as u64);
+        assert_eq!(phys, 100, "hint wins when the transfer completed");
+        assert_eq!(metrics.moved(MovePath::Promote), CHUNK as u64);
+        assert_eq!(metrics.moved_physical(MovePath::Promote), 100);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -335,7 +335,8 @@ mod tests {
         );
         let mut src = src_fs.open(Path::new("big.dat"), OpenMode::Read).unwrap();
         let mut dst = dst_fs.open(Path::new("big.dat"), OpenMode::Write).unwrap();
-        let cfg = MoverCfg { chunk_bytes: 256 * KIB as usize, copy_window: 2 };
+        let cfg =
+            MoverCfg { chunk_bytes: 256 * KIB as usize, copy_window: 2, ..MoverCfg::default() };
         let t0 = Instant::now();
         let n = DataMover::new(cfg, MovePath::Flush)
             .copy(src.as_mut(), dst.as_mut(), 4 * MIB)

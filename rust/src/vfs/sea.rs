@@ -61,6 +61,21 @@
 //! registry entry under its shard lock, so concurrent appenders reserve
 //! disjoint ranges and their positioned writes can never interleave
 //! within a record.
+//!
+//! With [`SeaTuning::compress`] on, flush and spill transfers encode
+//! through the [`crate::vfs::compress`] codec stage inside the
+//! DataMover's read-ahead thread, so cold PFS replicas are framed
+//! containers that store fewer physical bytes (incompressible chunks
+//! pass through raw). The split is strictly logical-over-physical:
+//! `len()`/`size()`/`read()` and every reader handle see the bytes the
+//! application wrote (compressed replicas open through a seekable
+//! [`CompressedReader`]), the registry keeps logical sizes plus the
+//! replica's physical footprint (`Entry::pfs_physical`), the ledger
+//! and [`MgmtCounters`] carry both columns, and promotion debits
+//! logical bytes because fast tiers always hold decoded copies.
+//! In-place PFS writers (`ReadWrite`/`Append` on spilled or untracked
+//! files) first rewrite the replica raw — a framed container never
+//! takes a positioned write.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
@@ -77,8 +92,9 @@ use crate::placement::engine::{
     Placement, PlacementEngine, PressureCtx, Resident, TempTuning,
 };
 use crate::placement::rules::RuleSet;
+use crate::vfs::compress::{self, CompressedReader};
 use crate::vfs::mover::{
-    copy_range, DataMover, MovePath, MoverCfg, MoverMetrics, DEFAULT_CHUNK_BYTES,
+    copy_range, CodecMode, DataMover, MovePath, MoverCfg, MoverMetrics, DEFAULT_CHUNK_BYTES,
     DEFAULT_COPY_WINDOW,
 };
 use crate::vfs::pages::{PageCache, DEFAULT_PAGE_BUDGET, DEFAULT_PAGE_BYTES};
@@ -175,6 +191,20 @@ pub struct SeaTuning {
     /// the `TemperatureEngine` promotes it back
     /// ([`TempTuning::promote_headroom`]).
     pub promote_headroom_bytes: u64,
+    /// Compress management transfers bound for the PFS (flushes and
+    /// spills) through the [`crate::vfs::compress`] codec stage in the
+    /// DataMover; reads back decompress transparently and report
+    /// logical sizes (`[sea] compress`, `sea run --compress`).
+    pub compress: bool,
+    /// Codec search effort, 1 (fast) ..= 9 (best ratio)
+    /// (`[sea] compress_level`, `sea run --compress-level`).
+    pub compress_level: u8,
+    /// Keep a compressed chunk only when `physical < min_ratio ×
+    /// logical`; chunks that do not beat the gate are stored raw
+    /// (worst case one frame header per chunk). 1.0 = keep any
+    /// actual shrink (`[sea] compress_min_ratio`,
+    /// `sea run --compress-min-ratio`).
+    pub compress_min_ratio: f64,
 }
 
 impl Default for SeaTuning {
@@ -192,6 +222,9 @@ impl Default for SeaTuning {
             heat_decay: temp.heat_decay,
             heat_freq_weight: temp.freq_weight,
             promote_headroom_bytes: temp.promote_headroom,
+            compress: false,
+            compress_level: 3,
+            compress_min_ratio: 1.0,
         }
     }
 }
@@ -203,6 +236,19 @@ impl SeaTuning {
             heat_decay: self.heat_decay,
             freq_weight: self.heat_freq_weight,
             promote_headroom: self.promote_headroom_bytes,
+        }
+    }
+
+    /// The mover codec stage these knobs select.
+    pub fn codec_mode(&self) -> CodecMode {
+        if self.compress {
+            CodecMode::Encode {
+                level: self.compress_level.clamp(1, 9),
+                min_ratio_pct: (self.compress_min_ratio.clamp(0.01, 1.0) * 100.0)
+                    .round() as u16,
+            }
+        } else {
+            CodecMode::Off
         }
     }
 }
@@ -244,6 +290,9 @@ pub struct DeviceLedger {
     pub debits: u64,
     /// Cumulative bytes ever credited back.
     pub credits: u64,
+    /// Logical bytes the current `used` (physical) represents —
+    /// larger than `used` when the device stores compressed replicas.
+    pub logical: u64,
 }
 
 /// Cumulative management/placement activity of a mount (diagnostics,
@@ -263,14 +312,26 @@ pub struct MgmtCounters {
     pub promotions: u64,
     /// Files pulled in by the mount-time prefetch pass.
     pub prefetched: u64,
-    /// Bytes streamed to the PFS by close-time flushes.
+    /// Bytes streamed to the PFS by close-time flushes (logical —
+    /// what the application wrote).
     pub flush_bytes: u64,
-    /// Bytes streamed by mid-stream self-spills and victim spills.
+    /// Bytes streamed by mid-stream self-spills and victim spills
+    /// (logical).
     pub spill_bytes: u64,
-    /// Bytes streamed back onto fast tiers by promotions.
+    /// Bytes streamed back onto fast tiers by promotions (logical).
     pub promote_bytes: u64,
-    /// Bytes streamed in by prefetch passes.
+    /// Bytes streamed in by prefetch passes (logical).
     pub prefetch_bytes: u64,
+    /// Post-codec bytes flushes actually wrote to the PFS (equals
+    /// `flush_bytes` with compression off; the codec's bytes-out
+    /// gauge when on).
+    pub flush_physical_bytes: u64,
+    /// Post-codec bytes spills actually wrote to the PFS.
+    pub spill_physical_bytes: u64,
+    /// Physical PFS bytes promotions read through the decoder.
+    pub promote_physical_bytes: u64,
+    /// Physical PFS bytes prefetches read through the decoder.
+    pub prefetch_physical_bytes: u64,
     /// High-water mark of allocated copy-buffer bytes across all
     /// concurrent management transfers: the bounded-memory gauge (one
     /// transfer never allocates more than `chunk_bytes × copy_window`).
@@ -332,6 +393,11 @@ struct Entry {
     migrating: bool,
     /// `(offset, len)` of writes completed since arming.
     recopy: Vec<(u64, u64)>,
+    /// Physical size of the file's *compressed* PFS replica, when one
+    /// exists (`None` = no replica or a raw one). `size` stays
+    /// logical; this is what the replica costs the PFS and what a
+    /// promotion will actually read.
+    pfs_physical: Option<u64>,
 }
 
 impl Entry {
@@ -348,7 +414,13 @@ impl Entry {
             recopy_armed: false,
             migrating: false,
             recopy: Vec::new(),
+            pfs_physical: None,
         }
+    }
+
+    fn with_pfs_physical(mut self, physical: Option<u64>) -> Entry {
+        self.pfs_physical = physical;
+        self
     }
 }
 
@@ -509,6 +581,11 @@ struct Shared {
     pfs_slots: Option<PfsSlots>,
     /// Streamed-transfer tuning (chunk size, in-flight window).
     mover_cfg: MoverCfg,
+    /// Codec stage for PFS-bound transfers (`SeaTuning::compress`):
+    /// [`CodecMode::Encode`] makes every flush / spill write a framed
+    /// compressed replica; reads back come through a
+    /// [`CompressedReader`].
+    codec: CodecMode,
     /// DataMover gauges: bytes per management path, peak buffer bytes.
     mover: MoverMetrics,
     /// The mount's page cache for mapped views ([`VfsFile::map`]):
@@ -601,7 +678,14 @@ impl Shared {
             for (rel, e) in m.iter() {
                 if e.writers == 0 && !e.migrating && !e.recopy_armed {
                     if let Some(dev) = e.dev {
-                        out.push(Resident { rel: rel.clone(), dev, size: e.size });
+                        out.push(Resident {
+                            rel: rel.clone(),
+                            dev,
+                            size: e.size,
+                            // a known compressed replica makes this
+                            // resident cheap to keep cold
+                            physical: e.pfs_physical.unwrap_or(e.size),
+                        });
                     }
                 }
             }
@@ -690,13 +774,17 @@ impl Shared {
             .with_metrics(&self.mover)
     }
 
-    /// Stream exactly `size` bytes of `src` into `rel` on `dst` — the
-    /// one copy-with-rollback every streamed management transfer
-    /// (flush, victim spill, promotion, prefetch) shares. A short copy
-    /// (the source shrank mid-stream) is an error, and any failure
-    /// after the destination was opened removes the partial file: a
-    /// missing destination is detectable, a silently truncated one is
-    /// not.
+    /// Stream exactly `size` logical bytes of `src` into `rel` on
+    /// `dst` — the one copy-with-rollback every streamed management
+    /// transfer (flush, victim spill, promotion, prefetch) shares.
+    /// Returns the physical bytes written. On PFS-bound paths (Flush /
+    /// Spill) the mount's codec stage engages, so the destination
+    /// becomes a framed compressed replica; `src_physical` lets a
+    /// decode-through source (a [`CompressedReader`]) report the true
+    /// physical PFS traffic. A short copy (the source shrank
+    /// mid-stream) is an error, and any failure after the destination
+    /// was opened removes the partial file: a missing destination is
+    /// detectable, a silently truncated (or trailer-less) one is not.
     fn stream_into(
         &self,
         dst: &Arc<dyn Vfs>,
@@ -704,26 +792,119 @@ impl Shared {
         src: &mut dyn VfsFile,
         size: u64,
         class: MovePath,
-    ) -> Result<()> {
+        src_physical: Option<u64>,
+    ) -> Result<u64> {
+        let mut cfg = self.mover_cfg.aligned_to(dst.stripe_bytes());
+        if matches!(class, MovePath::Flush | MovePath::Spill) {
+            cfg.codec = self.codec;
+        }
         let res = match dst.open(Path::new(rel), OpenMode::Write) {
-            Ok(mut out) => match self.mover_to(dst.as_ref(), class).copy(src, out.as_mut(), size)
-            {
-                Ok(n) if n == size => Ok(()),
-                Ok(_) => Err(Error::io(
-                    rel,
-                    std::io::Error::new(
-                        std::io::ErrorKind::UnexpectedEof,
-                        "source shrank mid-copy",
-                    ),
-                )),
-                Err(e) => Err(e),
-            },
+            Ok(mut out) => {
+                let mut mover = DataMover::new(cfg, class).with_metrics(&self.mover);
+                if let Some(p) = src_physical {
+                    mover = mover.with_physical(p);
+                }
+                match mover.copy_counted(src, out.as_mut(), size) {
+                    Ok((n, phys)) if n == size => Ok(phys),
+                    Ok(_) => Err(Error::io(
+                        rel,
+                        std::io::Error::new(
+                            std::io::ErrorKind::UnexpectedEof,
+                            "source shrank mid-copy",
+                        ),
+                    )),
+                    Err(e) => Err(e),
+                }
+            }
             Err(e) => return Err(e),
         };
         if res.is_err() {
             let _ = dst.unlink(Path::new(rel));
         }
         res
+    }
+
+    /// Whether PFS-bound transfers encode (the mount's codec is on).
+    fn encodes_pfs(&self) -> bool {
+        self.codec != CodecMode::Off
+    }
+
+    /// Open `rel`'s PFS copy for reading as a *logical* byte stream:
+    /// compressed replicas come back wrapped in a [`CompressedReader`]
+    /// (seekable per-frame decode), plain files come back as-is.
+    fn open_pfs_reader(&self, rel: &str) -> Result<Box<dyn VfsFile>> {
+        let mut f = self.pfs.open(Path::new(rel), OpenMode::Read)?;
+        match compress::probe(f.as_mut())? {
+            Some(meta) => Ok(Box::new(CompressedReader::new(f, meta))),
+            None => Ok(f),
+        }
+    }
+
+    /// Logical size of `rel`'s PFS copy: a compressed replica reports
+    /// the bytes it decodes to, a plain file its on-disk length —
+    /// `size()`/`len()` never leak the container's physical framing.
+    fn pfs_logical_size(&self, rel: &str) -> Result<u64> {
+        let mut f = self.pfs.open(Path::new(rel), OpenMode::Read)?;
+        match compress::logical_len(f.as_mut())? {
+            Some(n) => Ok(n),
+            None => f.len(),
+        }
+    }
+
+    /// [`Shared::open_pfs_reader`], also reporting the logical length
+    /// and — when the replica is compressed — its physical size.
+    fn open_pfs_source(&self, rel: &str) -> Result<(Box<dyn VfsFile>, u64, Option<u64>)> {
+        let mut f = self.pfs.open(Path::new(rel), OpenMode::Read)?;
+        let physical = f.len()?;
+        match compress::probe(f.as_mut())? {
+            Some(meta) => {
+                let logical = meta.logical_len;
+                Ok((Box::new(CompressedReader::new(f, meta)), logical, Some(physical)))
+            }
+            None => Ok((f, physical, None)),
+        }
+    }
+
+    /// Rewrite `rel`'s PFS replica as plain bytes when (and only when)
+    /// it is currently compressed — the escape hatch for in-place PFS
+    /// writers (`ReadWrite` / `Append` on an untracked or spilled
+    /// file), which patch arbitrary offsets and would silently corrupt
+    /// a framed replica. Decodes into a temp name, then renames over.
+    fn materialize_raw_on_pfs(&self, rel: &str) -> Result<()> {
+        let mut f = self.pfs.open(Path::new(rel), OpenMode::Read)?;
+        let Some(meta) = compress::probe(f.as_mut())? else {
+            return Ok(()); // already plain
+        };
+        let logical = meta.logical_len;
+        let mut reader = CompressedReader::new(f, meta);
+        let tmp = format!("{rel}.sea_raw_tmp");
+        {
+            let mut out = self.pfs.open(Path::new(&tmp), OpenMode::Write)?;
+            let n = copy_range(
+                &mut reader,
+                out.as_mut(),
+                0,
+                logical,
+                self.mover_cfg.chunk_bytes,
+                Some(&self.mover),
+            )?;
+            if n != logical {
+                let _ = self.pfs.unlink(Path::new(&tmp));
+                return Err(Error::io(
+                    rel,
+                    std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "compressed replica ended early during rewrite",
+                    ),
+                ));
+            }
+        }
+        drop(reader);
+        if let Err(e) = self.pfs.rename(Path::new(&tmp), Path::new(rel)) {
+            let _ = self.pfs.unlink(Path::new(&tmp));
+            return Err(e);
+        }
+        Ok(())
     }
 }
 
@@ -788,7 +969,9 @@ impl SeaFs {
             mover_cfg: MoverCfg {
                 chunk_bytes: cfg.tuning.chunk_bytes.max(1),
                 copy_window: cfg.tuning.copy_window.max(1),
+                codec: CodecMode::Off,
             },
+            codec: cfg.tuning.codec_mode(),
             mover: MoverMetrics::default(),
             pages: Arc::new(PageCache::new(
                 cfg.tuning.page_bytes,
@@ -852,6 +1035,10 @@ impl SeaFs {
         c.spill_bytes = m.moved(MovePath::Spill);
         c.promote_bytes = m.moved(MovePath::Promote);
         c.prefetch_bytes = m.moved(MovePath::Prefetch);
+        c.flush_physical_bytes = m.moved_physical(MovePath::Flush);
+        c.spill_physical_bytes = m.moved_physical(MovePath::Spill);
+        c.promote_physical_bytes = m.moved_physical(MovePath::Promote);
+        c.prefetch_physical_bytes = m.moved_physical(MovePath::Prefetch);
         c.peak_copy_buffer_bytes = m.peak_buffer_bytes();
         let p = self.shared.pages.stats();
         c.page_faults = p.faults;
@@ -891,6 +1078,7 @@ impl SeaFs {
                 used: l.used,
                 debits: l.debits,
                 credits: l.credits,
+                logical: l.logical,
             })
             .collect()
     }
@@ -1002,8 +1190,9 @@ impl SeaFs {
     /// the bytes came *from* the PFS, so a later evict is always safe.
     fn place_streamed(&self, rel: &str) -> Result<bool> {
         let sh = &self.shared;
-        let mut src = sh.pfs.open(Path::new(rel), OpenMode::Read)?;
-        let size = src.len()?;
+        // decode-through source: `size` is logical, what the device
+        // placement costs; `phys` what the PFS replica stores
+        let (mut src, size, phys) = sh.open_pfs_source(rel)?;
         // overwrite: free any previous local copy first
         self.drop_local(rel)?;
         let pick = sh
@@ -1013,14 +1202,19 @@ impl SeaFs {
             return Ok(false);
         };
         let backend = sh.backend(dev).clone();
-        if let Err(e) = sh.stream_into(&backend, rel, src.as_mut(), size, MovePath::Prefetch) {
+        if let Err(e) =
+            sh.stream_into(&backend, rel, src.as_mut(), size, MovePath::Prefetch, phys)
+        {
             // placement reserved the bytes; a failed copy gives them
             // back (stream_into removed the partial device file)
             sh.accountant.credit(dev, size);
             return Err(e);
         }
         let gen = sh.next_gen();
-        sh.insert_placed(rel, Entry::new(Some(dev), size, true, gen, 0));
+        sh.insert_placed(
+            rel,
+            Entry::new(Some(dev), size, true, gen, 0).with_pfs_physical(phys),
+        );
         Ok(true)
     }
 
@@ -1041,6 +1235,7 @@ impl SeaFs {
                 e.generation = gen;
                 if e.dev.is_some() {
                     e.flushed = false; // contents are about to change
+                    e.pfs_physical = None; // any PFS replica is stale
                 }
                 (e.dev, e.epoch)
             });
@@ -1071,7 +1266,13 @@ impl SeaFs {
                 }
             }
             if sh.pfs.exists(Path::new(rel)) {
-                // no local copy: update the PFS-resident file in place
+                // no local copy: update the PFS-resident file in place.
+                // In-place writers patch arbitrary offsets, so a
+                // compressed replica must be rewritten raw first
+                // (no-op for plain files; replicas outlive the mount
+                // that compressed them, so this never gates on the
+                // current codec setting).
+                sh.materialize_raw_on_pfs(rel)?;
                 sh.engine.on_access(rel, Access::Write);
                 return sh.pfs.open(Path::new(rel), mode);
             }
@@ -1130,6 +1331,7 @@ impl SeaFs {
                 e.generation = sh.next_gen();
                 if e.dev.is_some() {
                     e.flushed = false;
+                    e.pfs_physical = None; // any PFS replica is stale
                 }
                 How::Join(e.dev, e.epoch)
             }
@@ -1188,8 +1390,14 @@ impl SeaFs {
                 file,
             })),
             // no local entry: append to the PFS-resident file (the PFS
-            // backend provides its own append atomicity)
-            How::Pfs => sh.pfs.open(Path::new(rel), OpenMode::Append),
+            // backend provides its own append atomicity). A compressed
+            // replica cannot take in-place appends — rewrite it raw.
+            How::Pfs => {
+                if sh.pfs.exists(Path::new(rel)) {
+                    sh.materialize_raw_on_pfs(rel)?;
+                }
+                sh.pfs.open(Path::new(rel), OpenMode::Append)
+            }
             How::Fail(e) => Err(e),
         }
     }
@@ -1210,21 +1418,20 @@ impl SeaFs {
                         Ok(f) => (f, Some(d), e.epoch),
                         // evicted between lookup and open: the flush
                         // that preceded eviction put a PFS copy there
-                        Err(Error::NotFound(_)) => (
-                            self.shared.pfs.open(Path::new(&rel), OpenMode::Read)?,
-                            None,
-                            e.epoch,
-                        ),
+                        Err(Error::NotFound(_)) => {
+                            (self.shared.open_pfs_reader(&rel)?, None, e.epoch)
+                        }
                         Err(err) => return Err(err),
                     }
                 }
                 // spilled: the live copy is on the PFS
-                None => {
-                    (self.shared.pfs.open(Path::new(&rel), OpenMode::Read)?, None, e.epoch)
-                }
+                None => (self.shared.open_pfs_reader(&rel)?, None, e.epoch),
             },
-            // untracked: a PFS-resident file (epoch 0)
-            None => (self.shared.pfs.open(Path::new(&rel), OpenMode::Read)?, None, 0),
+            // untracked: a PFS-resident file (epoch 0). `open_pfs_reader`
+            // probes for a compressed container and, when it finds one,
+            // returns a seekable decoding view — reads always see
+            // logical bytes, whichever codec wrote the replica.
+            None => (self.shared.open_pfs_reader(&rel)?, None, 0),
         };
         Ok(SeaFile {
             shared: self.shared.clone(),
@@ -1675,7 +1882,9 @@ impl SeaFile {
                             Some(&sh.mover),
                         )?;
                         // recopied ranges are spill traffic too
+                        // (raw copy: logical and physical are equal)
                         sh.mover.record(MovePath::Spill, n);
+                        sh.mover.record_physical(MovePath::Spill, n);
                     }
                 }
                 // zero-fill any sparse tail up to the reserved size
@@ -1685,6 +1894,7 @@ impl SeaFile {
                 let freed = e.size;
                 e.dev = None;
                 e.flushed = true; // the PFS copy IS the file now
+                e.pfs_physical = None; // self-spills always land raw
                 e.generation = sh.next_gen(); // stand down stale jobs
                 e.migrating = false;
                 e.recopy_armed = false;
@@ -2049,16 +2259,20 @@ fn run_mgmt(sh: &Shared, rel: &str, gen: u64, flush: bool, evict: bool, class: M
         // silently truncated.
         let wrote = {
             let _slots = sh.pfs_slots_for(rel, src_len);
-            sh.stream_into(&sh.pfs, rel, src.as_mut(), src_len, class).is_ok()
+            sh.stream_into(&sh.pfs, rel, src.as_mut(), src_len, class, None)
         };
-        if !wrote {
-            return;
-        }
+        let Ok(physical) = wrote else { return };
+        // remember the replica's physical footprint iff the codec ran
+        // (it shrank the copy or at least framed it); a raw replica
+        // reports None so readers skip the probe
+        let pfs_physical =
+            if sh.encodes_pfs() && physical != src_len { Some(physical) } else { None };
         let confirmed = sh
             .registry
             .update(rel, |e| {
                 if e.generation == gen {
                     e.flushed = true;
+                    e.pfs_physical = pfs_physical;
                     true
                 } else {
                     false
@@ -2099,9 +2313,11 @@ fn run_promote(sh: &Shared, rel: &str, tier: u8) {
     if sh.registry.contains(rel) {
         return; // already resident
     }
-    // stream the PFS copy up in bounded chunks — no whole-file Vec
-    let Ok(mut src) = sh.pfs.open(Path::new(rel), OpenMode::Read) else { return };
-    let Ok(size) = src.len() else { return };
+    // stream the PFS copy up in bounded chunks — no whole-file Vec.
+    // A compressed replica arrives wrapped in a decoding reader, so
+    // `size` is the file's logical length and the promoted device copy
+    // is raw logical bytes (fast tiers never hold framed replicas).
+    let Ok((mut src, size, phys)) = sh.open_pfs_source(rel) else { return };
     for d in sh.hierarchy.tier_devices(tier) {
         let Some(backend) = sh.hierarchy.backend(d) else {
             continue;
@@ -2111,7 +2327,10 @@ fn run_promote(sh: &Shared, rel: &str, tier: u8) {
         if !sh.accountant.try_debit(d, size, size) {
             continue;
         }
-        if sh.stream_into(backend, rel, src.as_mut(), size, MovePath::Promote).is_err() {
+        if sh
+            .stream_into(backend, rel, src.as_mut(), size, MovePath::Promote, phys)
+            .is_err()
+        {
             sh.accountant.credit(d, size);
             continue;
         }
@@ -2122,7 +2341,12 @@ fn run_promote(sh: &Shared, rel: &str, tier: u8) {
             if m.contains_key(rel) {
                 false
             } else {
-                m.insert(rel.to_string(), Entry::new(Some(d), size, true, gen, 0));
+                // the replica (possibly compressed) stays authoritative,
+                // so the entry keeps its physical footprint on record
+                m.insert(
+                    rel.to_string(),
+                    Entry::new(Some(d), size, true, gen, 0).with_pfs_physical(phys),
+                );
                 true
             }
         });
@@ -2246,8 +2470,11 @@ impl Vfs for SeaFs {
         match self.rel_of(path) {
             None => self.shared.pfs.size(path),
             Some(rel) => match self.shared.registry.get(&rel) {
+                // registry sizes are logical by construction
                 Some(e) => Ok(e.size),
-                None => self.shared.pfs.size(Path::new(&rel)),
+                // untracked PFS residents may be compressed replicas:
+                // report what they decode to, not the container length
+                None => self.shared.pfs_logical_size(&rel),
             },
         }
     }
@@ -3795,6 +4022,177 @@ mod tests {
         );
         // a later explicit pass is idempotent: already resident
         assert_eq!(sea.prefetch_dir("inputs").unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    // --- transparent cold-tier compression -----------------------------------
+
+    /// Compressible payload whose bytes depend on position — constant
+    /// data would mask frame-ordering and offset-mapping bugs.
+    fn banded(len: usize) -> Vec<u8> {
+        (0..len).map(|i| (i / 4096) as u8).collect()
+    }
+
+    #[test]
+    fn compressed_flush_shrinks_replica_but_every_surface_stays_logical() {
+        let root = scratch("seafs_compress_flush");
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
+        let sea = SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(root.join("tmpfs"), 0, 10 * MIB).unwrap()],
+            pfs: pfs.clone(),
+            max_file_size: MIB,
+            parallel_procs: 1,
+            rules: RuleSet::from_texts("**", "**", ""), // move everything
+            seed: 1,
+            tuning: SeaTuning {
+                compress: true,
+                chunk_bytes: 128 * KIB as usize, // multi-frame container
+                ..SeaTuning::default()
+            },
+        })
+        .unwrap();
+        let data = banded(MIB as usize);
+        let p = Path::new("/sea/out/cold.dat");
+        sea.write(p, &data).unwrap();
+        sea.sync_mgmt().unwrap(); // move: flush then evict
+        assert!(sea.device_of("out/cold.dat").is_none(), "evicted");
+        // the PFS replica is a framed container, physically smaller...
+        let physical = pfs.size(Path::new("out/cold.dat")).unwrap();
+        assert!(physical < MIB / 2, "compressible corpus shrank: {physical}");
+        // ...while stat, read and readdir-side sizes stay logical
+        assert_eq!(sea.size(p).unwrap(), MIB);
+        assert_eq!(sea.read(p).unwrap(), data);
+        // the gauges carry both columns: logical moved, physical stored
+        let c = sea.counters();
+        assert_eq!(c.flush_bytes, MIB);
+        assert_eq!(c.flush_physical_bytes, physical);
+        // a positioned read decodes exactly the frames it needs —
+        // straddle a frame boundary on purpose
+        let mut f = sea.open(p, OpenMode::Read).unwrap();
+        assert_eq!(f.len().unwrap(), MIB);
+        let off = 700 * KIB as usize;
+        let mut got = vec![0u8; 64 * KIB as usize];
+        let mut done = 0usize;
+        while done < got.len() {
+            let n = f.pread(&mut got[done..], (off + done) as u64).unwrap();
+            assert!(n > 0, "pread stalled at {done}");
+            done += n;
+        }
+        assert_eq!(got, data[off..off + got.len()]);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn compressed_spill_stat_promote_round_trip_is_byte_identical() {
+        // satellite: flush → stat → promote over a compressed replica.
+        // The victim spill encodes, stat reports logical bytes while
+        // spilled, and the promotion decodes back onto the fast tier.
+        let root = scratch("seafs_compress_promote");
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
+        let sea = SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(root.join("tiny"), 0, 2 * MIB).unwrap()],
+            pfs: pfs.clone(),
+            max_file_size: MIB,
+            parallel_procs: 1,
+            rules: RuleSet::default(), // Keep everything
+            seed: 1,
+            tuning: SeaTuning {
+                engine: EngineKind::Temperature,
+                compress: true,
+                chunk_bytes: 128 * KIB as usize,
+                ..SeaTuning::default()
+            },
+        })
+        .unwrap();
+        let data = banded(MIB as usize);
+        sea.write(Path::new("/sea/cold.dat"), &data).unwrap();
+        // a hot writer outgrows the remaining space: the cold resident
+        // is victim-spilled through the encoding mover
+        {
+            let mut f = sea.open(Path::new("/sea/hot.dat"), OpenMode::Write).unwrap();
+            let quarter = MIB as usize / 4;
+            for k in 0..8u64 {
+                f.pwrite_all(&vec![k as u8; quarter], k * quarter as u64).unwrap();
+            }
+            assert!(sea.device_of("cold.dat").is_none(), "cold resident spilled");
+        }
+        sea.sync_mgmt().unwrap();
+        let physical = pfs.size(Path::new("cold.dat")).unwrap();
+        assert!(physical < MIB / 2, "spilled replica is compressed: {physical}");
+        let c = sea.counters();
+        assert_eq!(c.victim_spills, 1);
+        assert!(
+            c.spill_physical_bytes < c.spill_bytes,
+            "spill moved fewer physical than logical bytes: {} vs {}",
+            c.spill_physical_bytes,
+            c.spill_bytes
+        );
+        // stat while spilled: logical, never the container length
+        assert_eq!(sea.size(Path::new("/sea/cold.dat")).unwrap(), MIB);
+        // reading re-heats the victim (decoding transparently) ...
+        assert_eq!(sea.read(Path::new("/sea/cold.dat")).unwrap(), data);
+        // ... and freeing the device promotes it back
+        sea.unlink(Path::new("/sea/hot.dat")).unwrap();
+        sea.sync_mgmt().unwrap();
+        assert!(sea.device_of("cold.dat").is_some(), "promoted back");
+        let c = sea.counters();
+        assert_eq!(c.promotions, 1);
+        assert_eq!(c.promote_bytes, MIB, "promotion streams logical bytes");
+        assert_eq!(
+            c.promote_physical_bytes, physical,
+            "promotion read the compressed container"
+        );
+        // the promoted device copy is raw logical bytes
+        let dev_copy = std::fs::metadata(root.join("tiny").join("cold.dat")).unwrap();
+        assert_eq!(dev_copy.len(), MIB);
+        assert_eq!(sea.read(Path::new("/sea/cold.dat")).unwrap(), data);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn in_place_writers_rewrite_compressed_replicas_raw_first() {
+        // ReadWrite / Append on an evicted (untracked) compressed
+        // replica must not patch the framed container: the mount
+        // rewrites it raw, then lets the writer at it.
+        let root = scratch("seafs_compress_rw");
+        let pfs = Arc::new(RealFs::new(root.join("pfs")).unwrap());
+        let sea = SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(root.join("tmpfs"), 0, 10 * MIB).unwrap()],
+            pfs: pfs.clone(),
+            max_file_size: MIB,
+            parallel_procs: 1,
+            rules: RuleSet::from_texts("**", "**", ""), // move everything
+            seed: 1,
+            tuning: SeaTuning {
+                compress: true,
+                chunk_bytes: 128 * KIB as usize,
+                ..SeaTuning::default()
+            },
+        })
+        .unwrap();
+        let mut data = banded(512 * KIB as usize);
+        let p = Path::new("/sea/patch.dat");
+        sea.write(p, &data).unwrap();
+        sea.sync_mgmt().unwrap(); // move: the PFS copy is compressed
+        assert!(pfs.size(Path::new("patch.dat")).unwrap() < data.len() as u64 / 2);
+        {
+            let mut f = sea.open(p, OpenMode::ReadWrite).unwrap();
+            f.pwrite_all(b"PATCH", 300_000).unwrap();
+        }
+        data[300_000..300_005].copy_from_slice(b"PATCH");
+        // the replica is plain bytes now, patched, and byte-identical
+        assert_eq!(pfs.size(Path::new("patch.dat")).unwrap(), data.len() as u64);
+        assert_eq!(sea.read(p).unwrap(), data);
+        // an append extends at the logical end
+        {
+            let mut f = sea.open(p, OpenMode::Append).unwrap();
+            f.pwrite_all(b"TAIL", 0).unwrap();
+        }
+        data.extend_from_slice(b"TAIL");
+        assert_eq!(sea.read(p).unwrap(), data);
         let _ = std::fs::remove_dir_all(&root);
     }
 }
