@@ -7,13 +7,15 @@
 //! streaming DataMover (streamed-vs-wholefile sweep over file size ×
 //! chunk_bytes × copy_window, emitting `BENCH_datamover.json`), the
 //! PageCache (mapped-vs-pread sweep over page size × budget on a
-//! rate-limited striped PFS, emitting `BENCH_pagecache.json`), and the
+//! rate-limited striped PFS, emitting `BENCH_pagecache.json`), the
 //! cold-tier codec stage (on/off × corpus × chunk size, emitting
-//! `BENCH_compress.json`).
+//! `BENCH_compress.json`), and the service transport (the same mount
+//! pread in-process and through a `sea serve` daemon over a Unix
+//! socket, emitting `BENCH_remote.json`).
 //!
 //! `SEA_BENCH_SMOKE=1` runs only the tiny DataMover + PageCache +
-//! compress sweeps — the CI smoke invocation that keeps the bench
-//! harness compiling and running.
+//! compress + remote sweeps — the CI smoke invocation that keeps the
+//! bench harness compiling and running.
 
 mod common;
 
@@ -24,11 +26,12 @@ use std::time::Instant;
 
 use sea::bench::Harness;
 use sea::placement::{EngineKind, RuleSet};
+use sea::serve::{ServeCfg, Server};
 use sea::util::{KIB, MIB};
 use sea::vfs::{
     compress, CodecMode, CompressedReader, DataMover, DeviceSpec, MapMode, MovePath, MoverCfg,
-    MoverMetrics, OpenMode, PageCache, RateLimitedFs, RealFs, SeaFs, SeaFsConfig, SeaTuning,
-    StripedFs, Vfs, VfsFile,
+    MoverMetrics, OpenMode, PageCache, RateLimitedFs, RealFs, RemoteFs, SeaFs, SeaFsConfig,
+    SeaTuning, StripedFs, Vfs, VfsFile,
 };
 
 /// Mapped-vs-pread sweep over a rate-limited chunk-striped PFS
@@ -447,16 +450,100 @@ fn compress_sweep(work: &Path, h: &mut Harness, smoke: bool) {
     }
 }
 
+/// Service-transport sweep: one Sea mount pread two ways — in-process
+/// (library calls) and through a `sea serve` daemon over a Unix domain
+/// socket (`RemoteFs`, the wire protocol's production path). Same
+/// offsets, same sizes {4 KiB, 64 KiB, 1 MiB}; the delta is the
+/// per-operation cost of framing + socket round trip. Emits
+/// `BENCH_remote.json`.
+fn remote_sweep(work: &Path, h: &mut Harness, smoke: bool) {
+    let root = work.join("remote");
+    let file_size: u64 = 2 * MIB;
+    let reps: usize = if smoke { 8 } else { 64 };
+    let pfs = Arc::new(RealFs::new(root.join("pfs")).expect("pfs"));
+    let sea = Arc::new(
+        SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(root.join("dev0"), 0, 64 * MIB).expect("dev")],
+            pfs,
+            max_file_size: MIB,
+            parallel_procs: 1,
+            rules: RuleSet::default(),
+            seed: 3,
+            tuning: SeaTuning::default(),
+        })
+        .expect("mount"),
+    );
+    let payload: Vec<u8> = (0..file_size as usize).map(|k| (k % 251) as u8).collect();
+    sea.write(Path::new("/sea/served.dat"), &payload).expect("payload");
+
+    let sock = root.join("bench.sock");
+    let server = Server::spawn(sea.clone(), ServeCfg::new(&sock)).expect("serve");
+    let remote = RemoteFs::connect(&sock).expect("connect");
+
+    let sizes: [u64; 3] = [4 * KIB, 64 * KIB, MIB];
+    let mut rows: Vec<(u64, f64, f64)> = Vec::new();
+    for &size in &sizes {
+        let mut buf = vec![0u8; size as usize];
+        let span = file_size - size; // keep every pread in-bounds
+        // in-process: straight through the library
+        let mut f = sea.open(Path::new("/sea/served.dat"), OpenMode::Read).expect("open");
+        let t0 = Instant::now();
+        for i in 0..reps {
+            let off = (i as u64 * size) % (span + 1);
+            f.pread_exact(&mut buf, off).expect("local pread");
+        }
+        let local_s = t0.elapsed().as_secs_f64();
+        // remote: identical preads through the wire protocol
+        let mut rf = remote
+            .open(Path::new("/sea/served.dat"), OpenMode::Read)
+            .expect("remote open");
+        let t0 = Instant::now();
+        for i in 0..reps {
+            let off = (i as u64 * size) % (span + 1);
+            rf.pread_exact(&mut buf, off).expect("remote pread");
+        }
+        let remote_s = t0.elapsed().as_secs_f64();
+        h.record(
+            &format!("remote_pread_{size}b"),
+            vec![remote_s],
+            format!("inprocess {local_s:.6}s over {reps} preads"),
+        );
+        rows.push((size, local_s, remote_s));
+    }
+    drop(remote);
+    server.shutdown().expect("shutdown");
+
+    let mut json = String::from("{\n  \"target\": \"serve/remote\",\n");
+    json.push_str(&format!(
+        "  \"file_bytes\": {file_size},\n  \"preads_per_size\": {reps},\n  \"sweep\": [\n"
+    ));
+    for (i, (size, local_s, remote_s)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"pread_bytes\": {size}, \"inprocess_s\": {local_s:.6}, \
+             \"remote_s\": {remote_s:.6}}}{}\n",
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_remote.json", &json) {
+        Ok(()) => println!("wrote BENCH_remote.json ({} sizes)", rows.len()),
+        Err(e) => eprintln!("bench: could not write BENCH_remote.json: {e}"),
+    }
+}
+
 fn main() {
     let work = std::env::temp_dir().join("sea_bench_vfs");
     let _ = std::fs::remove_dir_all(&work);
     if std::env::var("SEA_BENCH_SMOKE").is_ok() {
-        // CI smoke: tiny DataMover + PageCache sweeps only — proves the
-        // harness still builds, runs, and emits its JSON files
+        // CI smoke: tiny DataMover + PageCache + codec + remote sweeps
+        // only — proves the harness still builds, runs, and emits its
+        // JSON files
         let mut h = Harness::new("vfs").with_reps(1, 1);
         datamover_sweep(&work, &mut h, true);
         pagecache_sweep(&work, &mut h, true);
         compress_sweep(&work, &mut h, true);
+        remote_sweep(&work, &mut h, true);
         let _ = h.finish();
         let _ = std::fs::remove_dir_all(&work);
         return;
@@ -758,6 +845,9 @@ fn main() {
     // codec on/off over compressible + incompressible corpora
     // (BENCH_compress.json)
     compress_sweep(&work, &mut h, false);
+
+    // in-process vs served-over-a-socket preads (BENCH_remote.json)
+    remote_sweep(&work, &mut h, false);
 
     let results = h.finish();
     // derive the per-op interception overhead from the 4k pair

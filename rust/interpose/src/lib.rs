@@ -9,14 +9,37 @@
 //! `dlsym(RTLD_NEXT)`.
 //!
 //! Policy (device selection, flush/evict rules) lives in the `sea`
-//! library; keeping the shim to pure prefix translation keeps it tiny,
-//! dependency-free and safe to inject into arbitrary binaries — the demo
+//! library; keeping the shim to pure prefix translation keeps it tiny
+//! and safe to inject into arbitrary binaries — the demo
 //! (`examples/interpose_demo.rs`) points `SEA_TARGET` at a directory the
 //! library manages.
+//!
+//! ## Remote transport (`SEA_SOCKET`)
+//!
+//! When `SEA_SOCKET` names a `sea serve` Unix socket, intercepted calls
+//! on `SEA_MOUNT` paths are routed through the Sea service wire
+//! protocol instead of prefix translation: `open` asks the daemon for a
+//! handle (reserving a real descriptor number via `/dev/null` so the
+//! virtual fd can never collide with a kernel one), and
+//! `read`/`write`/`pread`/`pwrite`/`lseek`/`ftruncate`/`fsync`/
+//! `fstat`/`close` on that fd become protocol round trips, as do
+//! `stat`/`access`/`unlink`/`rename`/`truncate` on mount paths. Every
+//! daemon response piggybacks the file's map generation; a bump
+//! (another client's write spilled the file to a different device)
+//! purges the file's pooled mmap pages, so one process's spill
+//! invalidates every other client's emulated mappings at their next
+//! fill. Mappings of remote fds are always emulated (there is no local
+//! file to hand the kernel); writable `MAP_SHARED` regions write back
+//! through an independently opened daemon handle. Gaps, by design:
+//! `fopen`/`opendir`/`mkdir` on mount paths keep local translation,
+//! `dup` of a remote fd is not tracked, and remote *read-only* shared
+//! mappings are point-in-time snapshots.
 //!
 //! Environment:
 //! * `SEA_MOUNT`  — logical mountpoint prefix (default `/sea`).
 //! * `SEA_TARGET` — directory that backs the mountpoint.
+//! * `SEA_SOCKET` — `sea serve` socket; routes mount paths through the
+//!   daemon instead of translating them.
 //!
 //! Wrapped symbols: `open`, `open64`, `openat`, `creat`, `creat64`,
 //! `fopen`, `fopen64`, `stat`, `lstat`, `access`, `unlink`, `mkdir`,
@@ -73,7 +96,10 @@ use std::collections::{HashMap, VecDeque};
 use std::ffi::{CStr, CString, OsStr};
 use std::os::raw::{c_char, c_int, c_void};
 use std::os::unix::ffi::OsStrExt;
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use sea::error::Error as SeaError;
+use sea::vfs::{OpenMode, RemoteFile, RemoteFs, RetryCfg, Vfs, VfsFile};
 
 // --- env + translation ------------------------------------------------------
 
@@ -83,22 +109,27 @@ fn env_or(name: &str, default: &str) -> Vec<u8> {
         .unwrap_or_else(|| default.as_bytes().to_vec())
 }
 
-/// Translate `path` if it lies under `SEA_MOUNT`; returns the rewritten
-/// C string (kept alive by the caller's scope).
-fn translate(path: &CStr) -> Option<CString> {
+/// Is `path` the `SEA_MOUNT` prefix itself or a child of it?
+fn under_mount(bytes: &[u8]) -> bool {
     let mount = env_or("SEA_MOUNT", "/sea");
-    let target = env_or("SEA_TARGET", "/tmp/sea_target");
-    let bytes = path.to_bytes();
     if !bytes.starts_with(&mount) {
-        return None;
+        return false;
     }
     // exact prefix or prefix + '/'
     let rest = &bytes[mount.len()..];
-    if !(rest.is_empty() || rest[0] == b'/') {
+    rest.is_empty() || rest[0] == b'/'
+}
+
+/// Translate `path` if it lies under `SEA_MOUNT`; returns the rewritten
+/// C string (kept alive by the caller's scope).
+fn translate(path: &CStr) -> Option<CString> {
+    let bytes = path.to_bytes();
+    if !under_mount(bytes) {
         return None;
     }
-    let mut out = target;
-    out.extend_from_slice(rest);
+    let mount = env_or("SEA_MOUNT", "/sea");
+    let mut out = env_or("SEA_TARGET", "/tmp/sea_target");
+    out.extend_from_slice(&bytes[mount.len()..]);
     CString::new(out).ok()
 }
 
@@ -149,57 +180,886 @@ macro_rules! wrap_path_fn {
     };
 }
 
-/// Wrap an fd-based function: no path to translate (the descriptor's
-/// path was rewritten at `open`), just forward through the shim.
-macro_rules! wrap_fd_fn {
-    ($name:ident, $cname:literal, ($($arg:ident : $argty:ty),*), $ret:ty, $errno_ret:expr) => {
-        /// glibc interposer: forward an fd-granular call to libc (the
-        /// descriptor was opened through the translating `open` wrapper).
-        ///
-        /// # Safety
-        /// Called by arbitrary C code with C ABI invariants; pointer
-        /// arguments must be valid per the libc contract.
-        #[no_mangle]
-        pub unsafe extern "C" fn $name(fd: c_int $(, $arg: $argty)*) -> $ret {
-            type Fn = unsafe extern "C" fn(c_int $(, $argty)*) -> $ret;
-            let Some(real) = real!($cname, Fn) else { return no_sym($errno_ret); };
-            real(fd $(, $arg)*)
-        }
-    };
+// path functions with no remote-transport meaning keep the pure
+// translation macro; the open/stat/unlink families below are written
+// out by hand so they can try the SEA_SOCKET route first
+wrap_path_fn!(mkdir, b"mkdir\0", (mode: libc::mode_t), c_int, -1);
+wrap_path_fn!(chdir, b"chdir\0", (), c_int, -1);
+
+// --- remote transport (SEA_SOCKET) ------------------------------------------
+//
+// With a `sea serve` daemon on the other end of `SEA_SOCKET`, mount
+// paths stop being *translated* and start being *served*: the daemon
+// owns the one SeaFs (registry, ledger, page cache), and every client
+// process's intercepted calls become wire-protocol round trips. The
+// descriptor table below maps real fd numbers (reserved on /dev/null)
+// to daemon handles; per-entry mutexes keep the table lock itself off
+// the socket's critical path, so an in-process daemon thread passing
+// through these wrappers can never deadlock against a client call.
+
+/// Remote routing is live only when the env var is present.
+fn remote_enabled() -> bool {
+    std::env::var_os("SEA_SOCKET").is_some()
 }
 
-// open/creat family (mode passed through variadically-safe fixed arg)
-wrap_path_fn!(open, b"open\0", (flags: c_int, mode: libc::mode_t), c_int, -1);
-wrap_path_fn!(open64, b"open64\0", (flags: c_int, mode: libc::mode_t), c_int, -1);
-wrap_path_fn!(creat, b"creat\0", (mode: libc::mode_t), c_int, -1);
-wrap_path_fn!(creat64, b"creat64\0", (mode: libc::mode_t), c_int, -1);
-wrap_path_fn!(unlink, b"unlink\0", (), c_int, -1);
-wrap_path_fn!(mkdir, b"mkdir\0", (mode: libc::mode_t), c_int, -1);
-wrap_path_fn!(truncate, b"truncate\0", (len: libc::off_t), c_int, -1);
-wrap_path_fn!(truncate64, b"truncate64\0", (len: libc::off64_t), c_int, -1);
-wrap_path_fn!(chdir, b"chdir\0", (), c_int, -1);
-wrap_path_fn!(remove, b"remove\0", (), c_int, -1);
-wrap_path_fn!(access, b"access\0", (mode: c_int), c_int, -1);
+/// Process-wide daemon client, dialed on first use. A changed
+/// `SEA_SOCKET` re-dials (tests); a failed dial is not cached, so a
+/// daemon that comes up later is still reachable.
+fn remote_client() -> Option<Arc<RemoteFs>> {
+    let sock = std::env::var_os("SEA_SOCKET")?;
+    static CLIENT: OnceLock<Mutex<Option<Arc<RemoteFs>>>> = OnceLock::new();
+    let cell = CLIENT.get_or_init(|| Mutex::new(None));
+    let mut g = cell.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(c) = g.as_ref() {
+        if c.socket() == std::path::Path::new(&sock) {
+            return Some(c.clone());
+        }
+    }
+    // snappier than the library default: a shim open should fail fast
+    // when no daemon is listening, not stall the host program
+    let retry = RetryCfg {
+        attempts: 3,
+        base: std::time::Duration::from_millis(20),
+        cap: std::time::Duration::from_millis(200),
+    };
+    match RemoteFs::connect_with(std::path::PathBuf::from(&sock), retry) {
+        Ok(fs) => {
+            let fs = Arc::new(fs);
+            *g = Some(fs.clone());
+            Some(fs)
+        }
+        Err(_) => {
+            *g = None;
+            None
+        }
+    }
+}
 
-// offset-addressed I/O on already-translated descriptors: the same
-// request granularity as the library's `VfsFile::pread`/`pwrite`
-wrap_fd_fn!(pread, b"pread\0",
-    (buf: *mut c_void, count: libc::size_t, offset: libc::off_t),
-    libc::ssize_t, -1);
-wrap_fd_fn!(pread64, b"pread64\0",
-    (buf: *mut c_void, count: libc::size_t, offset: libc::off64_t),
-    libc::ssize_t, -1);
-wrap_fd_fn!(pwrite, b"pwrite\0",
-    (buf: *const c_void, count: libc::size_t, offset: libc::off_t),
-    libc::ssize_t, -1);
-wrap_fd_fn!(pwrite64, b"pwrite64\0",
-    (buf: *const c_void, count: libc::size_t, offset: libc::off64_t),
-    libc::ssize_t, -1);
-wrap_fd_fn!(lseek, b"lseek\0", (offset: libc::off_t, whence: c_int), libc::off_t, -1);
-wrap_fd_fn!(lseek64, b"lseek64\0",
-    (offset: libc::off64_t, whence: c_int), libc::off64_t, -1);
-wrap_fd_fn!(ftruncate, b"ftruncate\0", (len: libc::off_t), c_int, -1);
-wrap_fd_fn!(ftruncate64, b"ftruncate64\0", (len: libc::off64_t), c_int, -1);
+/// One daemon-backed descriptor: the wire handle plus the cursor
+/// (`read`/`write`/`lseek` need one) and the last observed map
+/// generation for pool invalidation.
+struct RemoteFd {
+    file: RemoteFile,
+    pos: u64,
+    path: Vec<u8>,
+    gen: u64,
+}
+
+/// fd → daemon handle. Entries are `Arc<Mutex<..>>` so the table lock
+/// is only ever held for a lookup, never across socket I/O.
+fn remote_fds() -> &'static Mutex<HashMap<c_int, Arc<Mutex<RemoteFd>>>> {
+    static FDS: OnceLock<Mutex<HashMap<c_int, Arc<Mutex<RemoteFd>>>>> = OnceLock::new();
+    FDS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Set errno from safe code (closures passed into the routing helpers).
+fn set_errno(code: c_int) {
+    unsafe { *libc::__errno_location() = code };
+}
+
+/// Map a sea error onto the errno the equivalent syscall would set.
+fn set_sea_errno(e: &SeaError) {
+    set_errno(match e {
+        SeaError::NotFound(_) => libc::ENOENT,
+        SeaError::NoSpace { .. } => libc::ENOSPC,
+        SeaError::OutsideMount(_) => libc::EACCES,
+        SeaError::InvalidArg(_) => libc::EINVAL,
+        _ => libc::EIO,
+    });
+}
+
+/// `open(2)` flags → the library's handle mode. `O_WRONLY` without
+/// `O_TRUNC` maps to `ReadWrite`: positioned writes must preserve the
+/// existing bytes even though the caller never reads.
+fn mode_from_flags(flags: c_int) -> OpenMode {
+    if flags & libc::O_APPEND != 0 {
+        OpenMode::Append
+    } else if flags & libc::O_ACCMODE == libc::O_RDONLY {
+        OpenMode::Read
+    } else if flags & libc::O_TRUNC != 0 {
+        OpenMode::Write
+    } else {
+        OpenMode::ReadWrite
+    }
+}
+
+/// Pool key for a remote file: the daemon-reported frame-sharing
+/// identity when it names one, else a hash of the logical path (two
+/// FNV-1a streams with different bases).
+fn remote_pool_key(r: &RemoteFd) -> (u64, u64) {
+    if let Some(id) = r.file.identity() {
+        return ((id >> 64) as u64, id as u64);
+    }
+    let mut a: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut b: u64 = 0x8422_2325_cbf2_9ce4;
+    for &x in &r.path {
+        a = (a ^ x as u64).wrapping_mul(0x100_0000_01b3);
+        b = (b ^ x as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    (a, b)
+}
+
+/// Observe the piggybacked daemon map generation: a bump means another
+/// client's write spilled the file to a different device — purge its
+/// pooled pages so later mapping fills re-read through the daemon
+/// instead of serving pre-spill bytes.
+fn note_remote_gen(r: &mut RemoteFd) {
+    let g = r.file.generation();
+    if g == r.gen {
+        return;
+    }
+    r.gen = g;
+    let (hi, lo) = remote_pool_key(r);
+    let mut p = pool().lock().unwrap_or_else(|e| e.into_inner());
+    p.fifo.retain(|k| k.0 != hi || k.1 != lo);
+    p.pages.retain(|k, _| k.0 != hi || k.1 != lo);
+}
+
+/// Run `f` against the remote entry for `fd` with the re-entrancy
+/// guard held (the entry's socket I/O re-enters `read`/`write` below,
+/// which must forward raw). `None` = not a remote fd; fall through.
+unsafe fn with_remote_fd<R>(fd: c_int, f: impl FnOnce(&mut RemoteFd) -> R) -> Option<R> {
+    if !remote_enabled() || IN_SHIM.with(|g| g.get()) {
+        return None;
+    }
+    let entry = {
+        let m = remote_fds().lock().unwrap_or_else(|e| e.into_inner());
+        m.get(&fd).cloned()
+    }?;
+    IN_SHIM.with(|g| g.set(true));
+    let out = {
+        let mut e = entry.lock().unwrap_or_else(|e| e.into_inner());
+        f(&mut e)
+    };
+    IN_SHIM.with(|g| g.set(false));
+    Some(out)
+}
+
+/// Route a path-addressed call through the daemon when `SEA_SOCKET` is
+/// set and `path` lies under `SEA_MOUNT`; `None` falls through to the
+/// local translation path.
+unsafe fn remote_path_op(
+    path: *const c_char,
+    f: impl FnOnce(&RemoteFs, &std::path::Path) -> c_int,
+) -> Option<c_int> {
+    if path.is_null() || !remote_enabled() || IN_SHIM.with(|g| g.get()) {
+        return None;
+    }
+    let bytes = CStr::from_ptr(path).to_bytes();
+    if !under_mount(bytes) {
+        return None;
+    }
+    IN_SHIM.with(|g| g.set(true));
+    let ret = match remote_client() {
+        Some(fs) => f(&fs, std::path::Path::new(OsStr::from_bytes(bytes))),
+        None => {
+            *libc::__errno_location() = libc::ECONNREFUSED;
+            -1
+        }
+    };
+    IN_SHIM.with(|g| g.set(false));
+    Some(ret)
+}
+
+/// Reserve a real descriptor number (on /dev/null) so a virtual remote
+/// fd can never collide with one the kernel hands out later.
+fn reserve_fd_slot() -> c_int {
+    unsafe {
+        libc::open(
+            b"/dev/null\0".as_ptr() as *const c_char,
+            libc::O_RDONLY | libc::O_CLOEXEC,
+        )
+    }
+}
+
+/// The remote half of the `open` family: ask the daemon for a handle
+/// and pin a real descriptor number to it.
+unsafe fn remote_open(path: *const c_char, flags: c_int) -> Option<c_int> {
+    remote_path_op(path, |fs, p| match fs.open_remote(p, mode_from_flags(flags)) {
+        Ok(file) => {
+            let placeholder = reserve_fd_slot();
+            if placeholder < 0 {
+                return -1; // open(2) left errno
+            }
+            let gen = file.generation();
+            let entry = Arc::new(Mutex::new(RemoteFd {
+                file,
+                pos: 0,
+                path: p.as_os_str().as_bytes().to_vec(),
+                gen,
+            }));
+            remote_fds()
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .insert(placeholder, entry);
+            placeholder
+        }
+        Err(e) => {
+            set_sea_errno(&e);
+            -1
+        }
+    })
+}
+
+fn remote_pread_at(r: &mut RemoteFd, buf: *mut u8, count: usize, off: u64) -> libc::ssize_t {
+    if count == 0 {
+        return 0;
+    }
+    // safe-fn wrapper over the caller's (validated) libc buffer so the
+    // routing closures stay free of lexical unsafety
+    let out = unsafe { std::slice::from_raw_parts_mut(buf, count) };
+    match r.file.pread(out, off) {
+        Ok(n) => {
+            note_remote_gen(r);
+            n as libc::ssize_t
+        }
+        Err(e) => {
+            set_sea_errno(&e);
+            -1
+        }
+    }
+}
+
+fn remote_pwrite_at(r: &mut RemoteFd, buf: *const u8, count: usize, off: u64) -> libc::ssize_t {
+    if count == 0 {
+        return 0;
+    }
+    let data = unsafe { std::slice::from_raw_parts(buf, count) };
+    // the wire clamps to one frame; a short count back is valid POSIX
+    match r.file.pwrite(data, off) {
+        Ok(n) => {
+            note_remote_gen(r);
+            n as libc::ssize_t
+        }
+        Err(e) => {
+            set_sea_errno(&e);
+            -1
+        }
+    }
+}
+
+/// Fill a zeroed stat buffer as a regular file of `len` bytes (the
+/// daemon's answer has no kernel inode behind it). The `allow` keeps
+/// the expansion valid in both safe and already-unsafe contexts.
+macro_rules! fill_remote_stat {
+    ($buf:expr, $len:expr) => {{
+        #[allow(unused_unsafe)]
+        unsafe {
+            std::ptr::write_bytes($buf, 0, 1);
+            let st = &mut *$buf;
+            st.st_mode = libc::S_IFREG | 0o644;
+            st.st_nlink = 1;
+            st.st_size = $len as _;
+            st.st_blksize = 4096;
+            st.st_blocks = $len.div_ceil(512) as _;
+            st.st_uid = libc::getuid();
+            st.st_gid = libc::getgid();
+        }
+    }};
+}
+
+/// glibc interposer: route Sea-mounted paths to the daemon
+/// (`SEA_SOCKET`) or translate the prefix, then forward to libc.
+///
+/// # Safety
+/// Called by arbitrary C code with C ABI invariants; `path` must be a
+/// valid NUL-terminated string (as libc requires).
+#[no_mangle]
+pub unsafe extern "C" fn open(path: *const c_char, flags: c_int, mode: libc::mode_t) -> c_int {
+    if let Some(fd) = remote_open(path, flags) {
+        return fd;
+    }
+    type Fn = unsafe extern "C" fn(*const c_char, c_int, libc::mode_t) -> c_int;
+    let Some(real) = real!(b"open\0", Fn) else { return no_sym(-1) };
+    if path.is_null() {
+        return real(path, flags, mode);
+    }
+    match translate(CStr::from_ptr(path)) {
+        Some(t) => real(t.as_ptr(), flags, mode),
+        None => real(path, flags, mode),
+    }
+}
+
+/// `open64`: identical to [`open`].
+///
+/// # Safety
+/// C ABI; `path` must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn open64(path: *const c_char, flags: c_int, mode: libc::mode_t) -> c_int {
+    if let Some(fd) = remote_open(path, flags) {
+        return fd;
+    }
+    type Fn = unsafe extern "C" fn(*const c_char, c_int, libc::mode_t) -> c_int;
+    let Some(real) = real!(b"open64\0", Fn) else { return no_sym(-1) };
+    if path.is_null() {
+        return real(path, flags, mode);
+    }
+    match translate(CStr::from_ptr(path)) {
+        Some(t) => real(t.as_ptr(), flags, mode),
+        None => real(path, flags, mode),
+    }
+}
+
+/// `creat` ≡ `open(path, O_WRONLY|O_CREAT|O_TRUNC, mode)`.
+///
+/// # Safety
+/// C ABI; `path` must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn creat(path: *const c_char, mode: libc::mode_t) -> c_int {
+    if let Some(fd) = remote_open(path, libc::O_WRONLY | libc::O_CREAT | libc::O_TRUNC) {
+        return fd;
+    }
+    type Fn = unsafe extern "C" fn(*const c_char, libc::mode_t) -> c_int;
+    let Some(real) = real!(b"creat\0", Fn) else { return no_sym(-1) };
+    if path.is_null() {
+        return real(path, mode);
+    }
+    match translate(CStr::from_ptr(path)) {
+        Some(t) => real(t.as_ptr(), mode),
+        None => real(path, mode),
+    }
+}
+
+/// `creat64`: identical to [`creat`].
+///
+/// # Safety
+/// C ABI; `path` must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn creat64(path: *const c_char, mode: libc::mode_t) -> c_int {
+    if let Some(fd) = remote_open(path, libc::O_WRONLY | libc::O_CREAT | libc::O_TRUNC) {
+        return fd;
+    }
+    type Fn = unsafe extern "C" fn(*const c_char, libc::mode_t) -> c_int;
+    let Some(real) = real!(b"creat64\0", Fn) else { return no_sym(-1) };
+    if path.is_null() {
+        return real(path, mode);
+    }
+    match translate(CStr::from_ptr(path)) {
+        Some(t) => real(t.as_ptr(), mode),
+        None => real(path, mode),
+    }
+}
+
+/// `unlink`: remote mount paths unlink through the daemon's registry.
+///
+/// # Safety
+/// C ABI; `path` must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn unlink(path: *const c_char) -> c_int {
+    if let Some(r) = remote_path_op(path, |fs, p| match fs.unlink(p) {
+        Ok(()) => 0,
+        Err(e) => {
+            set_sea_errno(&e);
+            -1
+        }
+    }) {
+        return r;
+    }
+    type Fn = unsafe extern "C" fn(*const c_char) -> c_int;
+    let Some(real) = real!(b"unlink\0", Fn) else { return no_sym(-1) };
+    if path.is_null() {
+        return real(path);
+    }
+    match translate(CStr::from_ptr(path)) {
+        Some(t) => real(t.as_ptr()),
+        None => real(path),
+    }
+}
+
+/// `remove`: for files this is `unlink`; route the same way.
+///
+/// # Safety
+/// C ABI; `path` must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn remove(path: *const c_char) -> c_int {
+    if let Some(r) = remote_path_op(path, |fs, p| match fs.unlink(p) {
+        Ok(()) => 0,
+        Err(e) => {
+            set_sea_errno(&e);
+            -1
+        }
+    }) {
+        return r;
+    }
+    type Fn = unsafe extern "C" fn(*const c_char) -> c_int;
+    let Some(real) = real!(b"remove\0", Fn) else { return no_sym(-1) };
+    if path.is_null() {
+        return real(path);
+    }
+    match translate(CStr::from_ptr(path)) {
+        Some(t) => real(t.as_ptr()),
+        None => real(path),
+    }
+}
+
+/// `access`: the daemon has no permission model — existence answers
+/// every probe mode.
+///
+/// # Safety
+/// C ABI; `path` must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn access(path: *const c_char, amode: c_int) -> c_int {
+    if let Some(r) = remote_path_op(path, |fs, p| {
+        if fs.exists(p) {
+            0
+        } else {
+            set_errno(libc::ENOENT);
+            -1
+        }
+    }) {
+        return r;
+    }
+    type Fn = unsafe extern "C" fn(*const c_char, c_int) -> c_int;
+    let Some(real) = real!(b"access\0", Fn) else { return no_sym(-1) };
+    if path.is_null() {
+        return real(path, amode);
+    }
+    match translate(CStr::from_ptr(path)) {
+        Some(t) => real(t.as_ptr(), amode),
+        None => real(path, amode),
+    }
+}
+
+/// `truncate`: a remote path resolves to open + set_len + close.
+///
+/// # Safety
+/// C ABI; `path` must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn truncate(path: *const c_char, len: libc::off_t) -> c_int {
+    if let Some(r) = remote_truncate(path, len as i64) {
+        return r;
+    }
+    type Fn = unsafe extern "C" fn(*const c_char, libc::off_t) -> c_int;
+    let Some(real) = real!(b"truncate\0", Fn) else { return no_sym(-1) };
+    if path.is_null() {
+        return real(path, len);
+    }
+    match translate(CStr::from_ptr(path)) {
+        Some(t) => real(t.as_ptr(), len),
+        None => real(path, len),
+    }
+}
+
+/// `truncate64`: identical to [`truncate`].
+///
+/// # Safety
+/// C ABI; `path` must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn truncate64(path: *const c_char, len: libc::off64_t) -> c_int {
+    if let Some(r) = remote_truncate(path, len) {
+        return r;
+    }
+    type Fn = unsafe extern "C" fn(*const c_char, libc::off64_t) -> c_int;
+    let Some(real) = real!(b"truncate64\0", Fn) else { return no_sym(-1) };
+    if path.is_null() {
+        return real(path, len);
+    }
+    match translate(CStr::from_ptr(path)) {
+        Some(t) => real(t.as_ptr(), len),
+        None => real(path, len),
+    }
+}
+
+/// Remote `rename`: both names under the mount route as one protocol
+/// op; a mixed pair is a cross-device link (`EXDEV`), exactly like a
+/// rename across real file systems.
+unsafe fn remote_rename(from: *const c_char, to: *const c_char) -> Option<c_int> {
+    if from.is_null() || to.is_null() || !remote_enabled() || IN_SHIM.with(|g| g.get()) {
+        return None;
+    }
+    let fb = CStr::from_ptr(from).to_bytes();
+    let tb = CStr::from_ptr(to).to_bytes();
+    let (fu, tu) = (under_mount(fb), under_mount(tb));
+    if !fu && !tu {
+        return None;
+    }
+    IN_SHIM.with(|g| g.set(true));
+    let ret = if fu != tu {
+        set_errno(libc::EXDEV);
+        -1
+    } else {
+        match remote_client() {
+            None => {
+                set_errno(libc::ECONNREFUSED);
+                -1
+            }
+            Some(fs) => {
+                let f = std::path::Path::new(OsStr::from_bytes(fb));
+                let t = std::path::Path::new(OsStr::from_bytes(tb));
+                match fs.rename(f, t) {
+                    Ok(()) => 0,
+                    Err(e) => {
+                        set_sea_errno(&e);
+                        -1
+                    }
+                }
+            }
+        }
+    };
+    IN_SHIM.with(|g| g.set(false));
+    Some(ret)
+}
+
+unsafe fn remote_truncate(path: *const c_char, len: i64) -> Option<c_int> {
+    remote_path_op(path, |fs, p| {
+        if len < 0 {
+            set_errno(libc::EINVAL);
+            return -1;
+        }
+        match fs
+            .open(p, OpenMode::ReadWrite)
+            .and_then(|mut f| f.set_len(len as u64))
+        {
+            Ok(()) => 0,
+            Err(e) => {
+                set_sea_errno(&e);
+                -1
+            }
+        }
+    })
+}
+
+/// `pread`: remote fds round-trip the daemon, everything else forwards
+/// (the descriptor's path was translated at `open`).
+///
+/// # Safety
+/// C ABI; pointer arguments must be valid per the libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn pread(
+    fd: c_int,
+    buf: *mut c_void,
+    count: libc::size_t,
+    offset: libc::off_t,
+) -> libc::ssize_t {
+    if let Some(r) = with_remote_fd(fd, |r| remote_pread_at(r, buf as *mut u8, count, offset as u64))
+    {
+        return r;
+    }
+    type Fn = unsafe extern "C" fn(c_int, *mut c_void, libc::size_t, libc::off_t) -> libc::ssize_t;
+    let Some(real) = real!(b"pread\0", Fn) else { return no_sym(-1) };
+    real(fd, buf, count, offset)
+}
+
+/// `pread64`: identical to [`pread`].
+///
+/// # Safety
+/// C ABI; pointer arguments must be valid per the libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn pread64(
+    fd: c_int,
+    buf: *mut c_void,
+    count: libc::size_t,
+    offset: libc::off64_t,
+) -> libc::ssize_t {
+    if let Some(r) = with_remote_fd(fd, |r| remote_pread_at(r, buf as *mut u8, count, offset as u64))
+    {
+        return r;
+    }
+    type Fn =
+        unsafe extern "C" fn(c_int, *mut c_void, libc::size_t, libc::off64_t) -> libc::ssize_t;
+    let Some(real) = real!(b"pread64\0", Fn) else { return no_sym(-1) };
+    real(fd, buf, count, offset)
+}
+
+/// `pwrite`: remote fds round-trip the daemon.
+///
+/// # Safety
+/// C ABI; pointer arguments must be valid per the libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn pwrite(
+    fd: c_int,
+    buf: *const c_void,
+    count: libc::size_t,
+    offset: libc::off_t,
+) -> libc::ssize_t {
+    if let Some(r) =
+        with_remote_fd(fd, |r| remote_pwrite_at(r, buf as *const u8, count, offset as u64))
+    {
+        return r;
+    }
+    type Fn =
+        unsafe extern "C" fn(c_int, *const c_void, libc::size_t, libc::off_t) -> libc::ssize_t;
+    let Some(real) = real!(b"pwrite\0", Fn) else { return no_sym(-1) };
+    real(fd, buf, count, offset)
+}
+
+/// `pwrite64`: identical to [`pwrite`].
+///
+/// # Safety
+/// C ABI; pointer arguments must be valid per the libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn pwrite64(
+    fd: c_int,
+    buf: *const c_void,
+    count: libc::size_t,
+    offset: libc::off64_t,
+) -> libc::ssize_t {
+    if let Some(r) =
+        with_remote_fd(fd, |r| remote_pwrite_at(r, buf as *const u8, count, offset as u64))
+    {
+        return r;
+    }
+    type Fn =
+        unsafe extern "C" fn(c_int, *const c_void, libc::size_t, libc::off64_t) -> libc::ssize_t;
+    let Some(real) = real!(b"pwrite64\0", Fn) else { return no_sym(-1) };
+    real(fd, buf, count, offset)
+}
+
+/// `read`: remote fds read at the tracked cursor.
+///
+/// # Safety
+/// C ABI; pointer arguments must be valid per the libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn read(fd: c_int, buf: *mut c_void, count: libc::size_t) -> libc::ssize_t {
+    if let Some(r) = with_remote_fd(fd, |r| {
+        let pos = r.pos;
+        let n = remote_pread_at(r, buf as *mut u8, count, pos);
+        if n > 0 {
+            r.pos = pos + n as u64;
+        }
+        n
+    }) {
+        return r;
+    }
+    type Fn = unsafe extern "C" fn(c_int, *mut c_void, libc::size_t) -> libc::ssize_t;
+    let Some(real) = real!(b"read\0", Fn) else { return no_sym(-1) };
+    real(fd, buf, count)
+}
+
+/// `write`: remote fds write at the tracked cursor (append handles
+/// resolve their real offset daemon-side, under the registry lock).
+///
+/// # Safety
+/// C ABI; pointer arguments must be valid per the libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn write(
+    fd: c_int,
+    buf: *const c_void,
+    count: libc::size_t,
+) -> libc::ssize_t {
+    if let Some(r) = with_remote_fd(fd, |r| {
+        let pos = r.pos;
+        let n = remote_pwrite_at(r, buf as *const u8, count, pos);
+        if n > 0 {
+            r.pos = pos + n as u64;
+        }
+        n
+    }) {
+        return r;
+    }
+    type Fn = unsafe extern "C" fn(c_int, *const c_void, libc::size_t) -> libc::ssize_t;
+    let Some(real) = real!(b"write\0", Fn) else { return no_sym(-1) };
+    real(fd, buf, count)
+}
+
+/// `lseek`: remote fds move the local cursor (`SEEK_END` asks the
+/// daemon for the live length).
+///
+/// # Safety
+/// C ABI; arguments per the libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn lseek(fd: c_int, offset: libc::off_t, whence: c_int) -> libc::off_t {
+    if let Some(r) = with_remote_fd(fd, |r| remote_seek(r, offset as i64, whence)) {
+        return r as libc::off_t;
+    }
+    type Fn = unsafe extern "C" fn(c_int, libc::off_t, c_int) -> libc::off_t;
+    let Some(real) = real!(b"lseek\0", Fn) else { return no_sym(-1) };
+    real(fd, offset, whence)
+}
+
+/// `lseek64`: identical to [`lseek`].
+///
+/// # Safety
+/// C ABI; arguments per the libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn lseek64(fd: c_int, offset: libc::off64_t, whence: c_int) -> libc::off64_t {
+    if let Some(r) = with_remote_fd(fd, |r| remote_seek(r, offset, whence)) {
+        return r;
+    }
+    type Fn = unsafe extern "C" fn(c_int, libc::off64_t, c_int) -> libc::off64_t;
+    let Some(real) = real!(b"lseek64\0", Fn) else { return no_sym(-1) };
+    real(fd, offset, whence)
+}
+
+fn remote_seek(r: &mut RemoteFd, offset: i64, whence: c_int) -> i64 {
+    let base = match whence {
+        libc::SEEK_SET => 0,
+        libc::SEEK_CUR => r.pos as i64,
+        libc::SEEK_END => match r.file.len() {
+            Ok(n) => n as i64,
+            Err(e) => {
+                set_sea_errno(&e);
+                return -1;
+            }
+        },
+        _ => {
+            set_errno(libc::EINVAL);
+            return -1;
+        }
+    };
+    match base.checked_add(offset) {
+        Some(t) if t >= 0 => {
+            r.pos = t as u64;
+            t
+        }
+        _ => {
+            set_errno(libc::EINVAL);
+            -1
+        }
+    }
+}
+
+/// `ftruncate`: remote fds set the daemon-side length.
+///
+/// # Safety
+/// C ABI; arguments per the libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn ftruncate(fd: c_int, len: libc::off_t) -> c_int {
+    if let Some(r) = with_remote_fd(fd, |r| remote_ftruncate(r, len as i64)) {
+        return r;
+    }
+    type Fn = unsafe extern "C" fn(c_int, libc::off_t) -> c_int;
+    let Some(real) = real!(b"ftruncate\0", Fn) else { return no_sym(-1) };
+    real(fd, len)
+}
+
+/// `ftruncate64`: identical to [`ftruncate`].
+///
+/// # Safety
+/// C ABI; arguments per the libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn ftruncate64(fd: c_int, len: libc::off64_t) -> c_int {
+    if let Some(r) = with_remote_fd(fd, |r| remote_ftruncate(r, len)) {
+        return r;
+    }
+    type Fn = unsafe extern "C" fn(c_int, libc::off64_t) -> c_int;
+    let Some(real) = real!(b"ftruncate64\0", Fn) else { return no_sym(-1) };
+    real(fd, len)
+}
+
+fn remote_ftruncate(r: &mut RemoteFd, len: i64) -> c_int {
+    if len < 0 {
+        set_errno(libc::EINVAL);
+        return -1;
+    }
+    match r.file.set_len(len as u64) {
+        Ok(()) => {
+            note_remote_gen(r);
+            0
+        }
+        Err(e) => {
+            set_sea_errno(&e);
+            -1
+        }
+    }
+}
+
+/// `fsync`: remote fds flush through the daemon.
+///
+/// # Safety
+/// C ABI; arguments per the libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn fsync(fd: c_int) -> c_int {
+    if let Some(r) = with_remote_fd(fd, |r| match r.file.fsync() {
+        Ok(()) => 0,
+        Err(e) => {
+            set_sea_errno(&e);
+            -1
+        }
+    }) {
+        return r;
+    }
+    type Fn = unsafe extern "C" fn(c_int) -> c_int;
+    let Some(real) = real!(b"fsync\0", Fn) else { return no_sym(-1) };
+    real(fd)
+}
+
+/// `fdatasync`: the daemon makes no data/metadata distinction.
+///
+/// # Safety
+/// C ABI; arguments per the libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn fdatasync(fd: c_int) -> c_int {
+    if let Some(r) = with_remote_fd(fd, |r| match r.file.fsync() {
+        Ok(()) => 0,
+        Err(e) => {
+            set_sea_errno(&e);
+            -1
+        }
+    }) {
+        return r;
+    }
+    type Fn = unsafe extern "C" fn(c_int) -> c_int;
+    let Some(real) = real!(b"fdatasync\0", Fn) else { return no_sym(-1) };
+    real(fd)
+}
+
+/// `fstat`: remote fds report the daemon-side length as a plain
+/// regular file (the placeholder fd is a char device — never expose
+/// its stat).
+///
+/// # Safety
+/// C ABI; pointers must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn fstat(fd: c_int, buf: *mut libc::stat) -> c_int {
+    if let Some(r) = with_remote_fd(fd, |r| match r.file.len() {
+        Ok(n) => {
+            fill_remote_stat!(buf, n);
+            0
+        }
+        Err(e) => {
+            set_sea_errno(&e);
+            -1
+        }
+    }) {
+        return r;
+    }
+    type Fn = unsafe extern "C" fn(c_int, *mut libc::stat) -> c_int;
+    let Some(real) = real!(b"fstat\0", Fn) else { return no_sym(-1) };
+    real(fd, buf)
+}
+
+/// `fstat64`: identical to [`fstat`].
+///
+/// # Safety
+/// C ABI; pointers must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn fstat64(fd: c_int, buf: *mut libc::stat64) -> c_int {
+    if let Some(r) = with_remote_fd(fd, |r| match r.file.len() {
+        Ok(n) => {
+            fill_remote_stat!(buf, n);
+            0
+        }
+        Err(e) => {
+            set_sea_errno(&e);
+            -1
+        }
+    }) {
+        return r;
+    }
+    type Fn = unsafe extern "C" fn(c_int, *mut libc::stat64) -> c_int;
+    let Some(real) = real!(b"fstat64\0", Fn) else { return no_sym(-1) };
+    real(fd, buf)
+}
+
+/// `close`: dropping the table entry sends the protocol `Close`; the
+/// placeholder descriptor is then released for real.
+///
+/// # Safety
+/// C ABI; arguments per the libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn close(fd: c_int) -> c_int {
+    if remote_enabled() && !IN_SHIM.with(|g| g.get()) {
+        IN_SHIM.with(|g| g.set(true));
+        let taken = remote_fds().lock().unwrap_or_else(|e| e.into_inner()).remove(&fd);
+        // drop outside the table lock: the protocol Close round-trips
+        drop(taken);
+        IN_SHIM.with(|g| g.set(false));
+    }
+    type Fn = unsafe extern "C" fn(c_int) -> c_int;
+    let Some(real) = real!(b"close\0", Fn) else { return no_sym(-1) };
+    real(fd)
+}
 
 /// `openat`: translate the path argument (position 1).
 ///
@@ -212,6 +1072,10 @@ pub unsafe extern "C" fn openat(
     flags: c_int,
     mode: libc::mode_t,
 ) -> c_int {
+    // mount paths are absolute, so dirfd is irrelevant per POSIX
+    if let Some(fd) = remote_open(path, flags) {
+        return fd;
+    }
     type Fn = unsafe extern "C" fn(c_int, *const c_char, c_int, libc::mode_t) -> c_int;
     let Some(real) = real!(b"openat\0", Fn) else { return no_sym(-1) };
     if path.is_null() {
@@ -266,6 +1130,18 @@ pub unsafe extern "C" fn fopen64(path: *const c_char, modes: *const c_char) -> *
 /// C ABI; pointers must be valid per libc contract.
 #[no_mangle]
 pub unsafe extern "C" fn stat(path: *const c_char, buf: *mut libc::stat) -> c_int {
+    if let Some(r) = remote_path_op(path, |fs, p| match fs.size(p) {
+        Ok(n) => {
+            fill_remote_stat!(buf, n);
+            0
+        }
+        Err(e) => {
+            set_sea_errno(&e);
+            -1
+        }
+    }) {
+        return r;
+    }
     type Fn = unsafe extern "C" fn(*const c_char, *mut libc::stat) -> c_int;
     let Some(real) = real!(b"stat\0", Fn) else { return no_sym(-1) };
     if path.is_null() {
@@ -284,6 +1160,19 @@ pub unsafe extern "C" fn stat(path: *const c_char, buf: *mut libc::stat) -> c_in
 /// C ABI; pointers must be valid per libc contract.
 #[no_mangle]
 pub unsafe extern "C" fn lstat(path: *const c_char, buf: *mut libc::stat) -> c_int {
+    // the daemon namespace has no symlinks: lstat ≡ stat there
+    if let Some(r) = remote_path_op(path, |fs, p| match fs.size(p) {
+        Ok(n) => {
+            fill_remote_stat!(buf, n);
+            0
+        }
+        Err(e) => {
+            set_sea_errno(&e);
+            -1
+        }
+    }) {
+        return r;
+    }
     type Fn = unsafe extern "C" fn(*const c_char, *mut libc::stat) -> c_int;
     let Some(real) = real!(b"lstat\0", Fn) else { return no_sym(-1) };
     if path.is_null() {
@@ -302,6 +1191,9 @@ pub unsafe extern "C" fn lstat(path: *const c_char, buf: *mut libc::stat) -> c_i
 /// C ABI; pointers must be valid per libc contract.
 #[no_mangle]
 pub unsafe extern "C" fn rename(from: *const c_char, to: *const c_char) -> c_int {
+    if let Some(r) = remote_rename(from, to) {
+        return r;
+    }
     type Fn = unsafe extern "C" fn(*const c_char, *const c_char) -> c_int;
     let Some(real) = real!(b"rename\0", Fn) else { return no_sym(-1) };
     let tf = if from.is_null() { None } else { translate(CStr::from_ptr(from)) };
@@ -442,10 +1334,60 @@ struct MapInfo {
     wb: Option<WriteBack>,
 }
 
+/// Where write-back bytes go: a duplicated real descriptor, or an
+/// independently opened daemon handle (correct across spills — the
+/// daemon-side handle follows the registry to the file's new device).
+enum WbSink {
+    Fd(c_int),
+    Remote(Box<RemoteFile>),
+}
+
+impl WbSink {
+    /// Write all of `buf` at `off`; `false` on any error.
+    fn pwrite_all(&mut self, buf: &[u8], off: u64) -> bool {
+        match self {
+            WbSink::Fd(fd) => unsafe { pwrite_all_raw(*fd, buf, off) },
+            WbSink::Remote(f) => f.pwrite_all(buf, off).is_ok(),
+        }
+    }
+
+    /// A second, independent sink for the same file (middle-cut
+    /// split). Errno is set on failure.
+    fn acquire_sibling(&self) -> Option<WbSink> {
+        match self {
+            WbSink::Fd(fd) => {
+                let dup = unsafe { libc::fcntl(*fd, libc::F_DUPFD_CLOEXEC, 0) };
+                if dup < 0 {
+                    None // fcntl left errno
+                } else {
+                    Some(WbSink::Fd(dup))
+                }
+            }
+            WbSink::Remote(f) => match f.sibling(OpenMode::ReadWrite) {
+                Ok(nf) => Some(WbSink::Remote(Box::new(nf))),
+                Err(_) => {
+                    set_errno(libc::EIO);
+                    None
+                }
+            },
+        }
+    }
+
+    /// Release the sink (close the dup / protocol-Close the handle).
+    fn release(self) {
+        match self {
+            WbSink::Fd(fd) => unsafe {
+                libc::close(fd);
+            },
+            WbSink::Remote(f) => drop(f),
+        }
+    }
+}
+
 /// Write-back state of a writable `MAP_SHARED` emulated region.
 struct WriteBack {
-    /// Duplicated descriptor (the caller may close theirs).
-    fd: c_int,
+    /// Outlives the caller's descriptor (they may close theirs).
+    sink: WbSink,
     dev: u64,
     ino: u64,
     /// The region's bytes as of the fill, refreshed after every
@@ -537,10 +1479,39 @@ unsafe fn sea_mappable(fd: c_int, flags: c_int, prot: c_int) -> Option<(u64, u64
     Some((st.st_dev as u64, st.st_ino as u64))
 }
 
-/// Copy `[offset, offset + out.len())` of `fd` into `out` through the
-/// shared page pool: pooled pages are memcpy'd, missing ones are
-/// pread (outside the pool lock) and inserted under the FIFO budget.
-unsafe fn fill_from_pool(out: &mut [u8], fd: c_int, offset: u64, dev: u64, ino: u64) -> bool {
+/// Whole-page reader over a real descriptor (zero-padded past EOF).
+fn read_page_raw(fd: c_int, page: &mut [u8], off: u64) -> bool {
+    let mut filled = 0usize;
+    while filled < page.len() {
+        let n = unsafe {
+            libc::pread(
+                fd,
+                page[filled..].as_mut_ptr() as *mut c_void,
+                page.len() - filled,
+                (off + filled as u64) as libc::off_t,
+            )
+        };
+        if n < 0 {
+            return false;
+        }
+        if n == 0 {
+            break; // past EOF: the tail stays zero
+        }
+        filled += n as usize;
+    }
+    true
+}
+
+/// Copy `[offset, offset + out.len())` of a file into `out` through
+/// the shared page pool: pooled pages are memcpy'd, missing ones are
+/// read via `read_page` (a raw pread or a daemon round trip, depending
+/// on the caller) and inserted under the FIFO budget.
+fn fill_from_pool(
+    out: &mut [u8],
+    offset: u64,
+    (dev, ino): (u64, u64),
+    read_page: &mut dyn FnMut(&mut [u8], u64) -> bool,
+) -> bool {
     let pb = MMAP_POOL_PAGE as u64;
     let mut done = 0usize;
     while done < out.len() {
@@ -561,21 +1532,8 @@ unsafe fn fill_from_pool(out: &mut [u8], fd: c_int, offset: u64, dev: u64, ino: 
         };
         if !pooled {
             let mut page = vec![0u8; MMAP_POOL_PAGE];
-            let mut filled = 0usize;
-            while filled < MMAP_POOL_PAGE {
-                let n = libc::pread(
-                    fd,
-                    page[filled..].as_mut_ptr() as *mut c_void,
-                    MMAP_POOL_PAGE - filled,
-                    (idx * pb + filled as u64) as libc::off_t,
-                );
-                if n < 0 {
-                    return false;
-                }
-                if n == 0 {
-                    break; // past EOF: the tail stays zero
-                }
-                filled += n as usize;
+            if !read_page(&mut page, idx * pb) {
+                return false;
             }
             out[done..done + span].copy_from_slice(&page[intra..intra + span]);
             let mut p = pool().lock().unwrap_or_else(|e| e.into_inner());
@@ -599,15 +1557,16 @@ unsafe fn fill_from_pool(out: &mut [u8], fd: c_int, offset: u64, dev: u64, ino: 
 }
 
 /// Build an emulated mapping: an anonymous region filled through the
-/// pool, standing in for `[offset, offset + len)` of the file.
+/// pool, standing in for `[offset, offset + len)` of the file. `sink`
+/// must be `Some` exactly when the mapping is writable `MAP_SHARED`
+/// (it becomes the write-back target and is released on failure).
 unsafe fn emulate_map(
     len: libc::size_t,
     prot: c_int,
-    flags: c_int,
-    fd: c_int,
     offset: u64,
-    dev: u64,
-    ino: u64,
+    key: (u64, u64),
+    sink: Option<WbSink>,
+    read_page: &mut dyn FnMut(&mut [u8], u64) -> bool,
 ) -> *mut c_void {
     let region = sys_mmap(
         std::ptr::null_mut(),
@@ -618,36 +1577,135 @@ unsafe fn emulate_map(
         0,
     );
     if region == libc::MAP_FAILED {
+        if let Some(s) = sink {
+            s.release();
+        }
         return region;
     }
     let out = std::slice::from_raw_parts_mut(region as *mut u8, len);
-    if !fill_from_pool(out, fd, offset, dev, ino) {
+    if !fill_from_pool(out, offset, key, read_page) {
         sys_munmap(region, len);
+        if let Some(s) = sink {
+            s.release();
+        }
         *libc::__errno_location() = libc::EIO;
         return libc::MAP_FAILED;
     }
-    let wb = if flags & libc::MAP_SHARED != 0 {
-        // writable shared mapping: keep a descriptor of our own (the
-        // caller may close theirs) for msync/munmap write-back, and a
-        // snapshot of the fill as the write-back diff base
-        let dup = libc::fcntl(fd, libc::F_DUPFD_CLOEXEC, 0);
-        if dup < 0 {
-            sys_munmap(region, len);
-            return libc::MAP_FAILED; // fcntl left errno
+    let (dev, ino) = key;
+    let wb = match sink {
+        // writable shared mapping: the sink outlives the caller's
+        // descriptor, and the fill snapshot is the write-back diff base
+        Some(sink) => Some(WriteBack { sink, dev, ino, snapshot: out.to_vec() }),
+        None => {
+            if prot & libc::PROT_WRITE == 0 {
+                // seal the private read-only mapping now that it is filled
+                libc::mprotect(region, len, prot);
+            }
+            None
         }
-        Some(WriteBack { fd: dup, dev, ino, snapshot: out.to_vec() })
-    } else {
-        if prot & libc::PROT_WRITE == 0 {
-            // seal the private read-only mapping now that it is filled
-            libc::mprotect(region, len, prot);
-        }
-        None
     };
     maps()
         .lock()
         .unwrap_or_else(|e| e.into_inner())
         .insert(region as usize, MapInfo { len, offset, wb });
     region
+}
+
+/// [`emulate_map`] over a real (kernel) descriptor: dup the fd for
+/// write-back and read pages with raw preads.
+unsafe fn emulate_map_real(
+    len: libc::size_t,
+    prot: c_int,
+    flags: c_int,
+    fd: c_int,
+    offset: u64,
+    dev: u64,
+    ino: u64,
+) -> *mut c_void {
+    let sink = if flags & libc::MAP_SHARED != 0 {
+        let dup = libc::fcntl(fd, libc::F_DUPFD_CLOEXEC, 0);
+        if dup < 0 {
+            return libc::MAP_FAILED; // fcntl left errno
+        }
+        Some(WbSink::Fd(dup))
+    } else {
+        None
+    };
+    let mut reader = |page: &mut [u8], off: u64| read_page_raw(fd, page, off);
+    emulate_map(len, prot, offset, (dev, ino), sink, &mut reader)
+}
+
+/// [`emulate_map`] over a daemon handle (`SEA_SOCKET` transport):
+/// pages fill via protocol preads keyed by the daemon-side identity,
+/// and writable shared regions write back through a sibling handle.
+/// Called with the entry locked and the re-entrancy guard held.
+fn emulate_map_remote(
+    r: &mut RemoteFd,
+    len: libc::size_t,
+    prot: c_int,
+    flags: c_int,
+    offset: u64,
+) -> *mut c_void {
+    if prot & libc::PROT_EXEC != 0 {
+        // no local file to hand the kernel: code mappings can't work
+        set_errno(libc::ENODEV);
+        return libc::MAP_FAILED;
+    }
+    // refresh the daemon-side generation first: a bump (another
+    // client's spill) purges this file's pooled pages, so the fill
+    // below re-reads post-spill bytes instead of serving stale ones
+    let _ = r.file.map_sync();
+    note_remote_gen(r);
+    let key = remote_pool_key(r);
+    let sink = if flags & libc::MAP_SHARED != 0 && prot & libc::PROT_WRITE != 0 {
+        match r.file.sibling(OpenMode::ReadWrite) {
+            Ok(f) => Some(WbSink::Remote(Box::new(f))),
+            Err(e) => {
+                set_sea_errno(&e);
+                return libc::MAP_FAILED;
+            }
+        }
+    } else {
+        None
+    };
+    let file = &mut r.file;
+    let mut reader = |page: &mut [u8], off: u64| -> bool {
+        let mut filled = 0usize;
+        while filled < page.len() {
+            match file.pread(&mut page[filled..], off + filled as u64) {
+                Ok(0) => break, // past EOF: the tail stays zero
+                Ok(n) => filled += n,
+                Err(_) => return false,
+            }
+        }
+        true
+    };
+    unsafe { emulate_map(len, prot, offset, key, sink, &mut reader) }
+}
+
+/// The remote branch of the `mmap` wrappers: `Some` when `fd` is a
+/// daemon-backed descriptor (manages the re-entrancy guard itself).
+unsafe fn remote_map(
+    len: libc::size_t,
+    prot: c_int,
+    flags: c_int,
+    fd: c_int,
+    offset: u64,
+) -> Option<*mut c_void> {
+    if !remote_enabled() || IN_SHIM.with(|g| g.get()) {
+        return None;
+    }
+    let entry = {
+        let m = remote_fds().lock().unwrap_or_else(|e| e.into_inner());
+        m.get(&fd).cloned()
+    }?;
+    IN_SHIM.with(|g| g.set(true));
+    let ret = {
+        let mut e = entry.lock().unwrap_or_else(|e| e.into_inner());
+        emulate_map_remote(&mut e, len, prot, flags, offset)
+    };
+    IN_SHIM.with(|g| g.set(false));
+    Some(ret)
 }
 
 /// Write all of `buf` to `fd` at `off`, raw; `false` on any error.
@@ -670,7 +1728,7 @@ unsafe fn pwrite_all_raw(fd: c_int, buf: &[u8], off: u64) -> bool {
 
 /// Diff `[lo0, hi0)` of the live emulated region at `base` against its
 /// fill snapshot and pwrite only the changed byte range of each pool
-/// page through the duplicated descriptor (writable shared mappings —
+/// page through the region's write-back sink (writable shared mappings —
 /// a range the caller never stored to writes nothing back, so
 /// concurrent updates to the file through other descriptors/processes
 /// survive outside the dirtied ranges), invalidating the file's pooled
@@ -695,7 +1753,7 @@ unsafe fn write_back_range(base: usize, info: &mut MapInfo, lo0: usize, hi0: usi
                 .zip(old)
                 .rposition(|(c, o)| c != o)
                 .map_or(cur.len(), |k| k + 1);
-            if !pwrite_all_raw(wb.fd, &cur[a..b], info.offset + (lo + a) as u64) {
+            if !wb.sink.pwrite_all(&cur[a..b], info.offset + (lo + a) as u64) {
                 ret = -1;
                 break;
             }
@@ -735,7 +1793,7 @@ unsafe fn emulated_sync(addr: *mut c_void) -> Option<c_int> {
 /// like the kernel), release exactly those pages, and trim the
 /// bookkeeping — a prefix cut re-keys the region, a suffix cut shrinks
 /// it, a middle cut splits it in two (the right half gets its own
-/// duplicated descriptor and snapshot tail, acquired *before* anything
+/// write-back sink and snapshot tail, acquired *before* anything
 /// is released so a failure leaves the region intact, like the
 /// kernel's own ENOMEM on a VMA split). `None` when the range is not
 /// inside an emulated region.
@@ -768,8 +1826,8 @@ unsafe fn emulated_unmap(addr: *mut c_void, len: libc::size_t) -> Option<c_int> 
     let mut ret = write_back_range(base, &mut info, lo, hi);
     if lo == 0 && hi == total {
         // full teardown
-        if let Some(wb) = info.wb.as_ref() {
-            libc::close(wb.fd);
+        if let Some(wb) = info.wb.take() {
+            wb.sink.release();
         }
         let r = sys_munmap(base as *mut c_void, total);
         if r != 0 {
@@ -777,19 +1835,18 @@ unsafe fn emulated_unmap(addr: *mut c_void, len: libc::size_t) -> Option<c_int> 
         }
         return Some(ret);
     }
-    // a middle cut needs a second descriptor for the right half —
+    // a middle cut needs a second write-back sink for the right half —
     // acquire it before releasing anything
-    let right_fd = if lo > 0 && hi < total {
+    let right_sink = if lo > 0 && hi < total {
         match info.wb.as_ref() {
             None => None,
-            Some(wb) => {
-                let dup = libc::fcntl(wb.fd, libc::F_DUPFD_CLOEXEC, 0);
-                if dup < 0 {
+            Some(wb) => match wb.sink.acquire_sibling() {
+                Some(s) => Some(s),
+                None => {
                     m.insert(base, info);
-                    return Some(-1); // fcntl left errno
+                    return Some(-1); // acquire_sibling left errno
                 }
-                Some(dup)
-            }
+            },
         }
     } else {
         None
@@ -797,8 +1854,8 @@ unsafe fn emulated_unmap(addr: *mut c_void, len: libc::size_t) -> Option<c_int> 
     let r = sys_munmap((base + lo) as *mut c_void, hi - lo);
     if r != 0 {
         // nothing was released: keep the bookkeeping intact
-        if let Some(fd) = right_fd {
-            libc::close(fd);
+        if let Some(s) = right_sink {
+            s.release();
         }
         m.insert(base, info);
         return Some(r);
@@ -820,13 +1877,13 @@ unsafe fn emulated_unmap(addr: *mut c_void, len: libc::size_t) -> Option<c_int> 
         info.len = lo;
         m.insert(base, info);
     } else {
-        // middle cut: left keeps the original descriptor, right gets
-        // the duplicate and the snapshot tail
+        // middle cut: left keeps the original sink, right gets the
+        // sibling and the snapshot tail
         let mut left = info;
-        let right_wb = match (left.wb.as_mut(), right_fd) {
-            (Some(wb), Some(fd)) => {
+        let right_wb = match (left.wb.as_mut(), right_sink) {
+            (Some(wb), Some(sink)) => {
                 let tail = wb.snapshot.split_off(hi);
-                Some(WriteBack { fd, dev: wb.dev, ino: wb.ino, snapshot: tail })
+                Some(WriteBack { sink, dev: wb.dev, ino: wb.ino, snapshot: tail })
             }
             _ => None,
         };
@@ -870,9 +1927,12 @@ pub unsafe extern "C" fn mmap(
     {
         return sys_mmap(addr, len, prot, flags, fd, offset as i64);
     }
+    if let Some(ret) = remote_map(len, prot, flags, fd, offset as u64) {
+        return ret;
+    }
     IN_SHIM.with(|g| g.set(true));
     let ret = match sea_mappable(fd, flags, prot) {
-        Some((dev, ino)) => emulate_map(len, prot, flags, fd, offset as u64, dev, ino),
+        Some((dev, ino)) => emulate_map_real(len, prot, flags, fd, offset as u64, dev, ino),
         None => sys_mmap(addr, len, prot, flags, fd, offset as i64),
     };
     IN_SHIM.with(|g| g.set(false));
@@ -900,17 +1960,21 @@ pub unsafe extern "C" fn mmap64(
     {
         return sys_mmap(addr, len, prot, flags, fd, offset);
     }
+    if let Some(ret) = remote_map(len, prot, flags, fd, offset as u64) {
+        return ret;
+    }
     IN_SHIM.with(|g| g.set(true));
     let ret = match sea_mappable(fd, flags, prot) {
-        Some((dev, ino)) => emulate_map(len, prot, flags, fd, offset as u64, dev, ino),
+        Some((dev, ino)) => emulate_map_real(len, prot, flags, fd, offset as u64, dev, ino),
         None => sys_mmap(addr, len, prot, flags, fd, offset),
     };
     IN_SHIM.with(|g| g.set(false));
     ret
 }
 
-/// `msync`: write an emulated region back through its duplicated
-/// descriptor; forward kernel mappings raw.
+/// `msync`: write an emulated region back through its write-back sink
+/// (a duplicated descriptor, or a daemon handle for remote regions);
+/// forward kernel mappings raw.
 ///
 /// # Safety
 /// C ABI; arguments per the libc contract.
@@ -982,6 +2046,7 @@ mod tests {
         std::env::set_var("SEA_MOUNT", "/sea");
         std::env::set_var("SEA_TARGET", &dir);
         std::env::remove_var("SEA_MMAP");
+        std::env::remove_var("SEA_SOCKET");
         dir
     }
 
@@ -1199,6 +2264,111 @@ mod tests {
             assert_eq!(munmap(a, MMAP_POOL_PAGE), 0);
             libc::close(fd);
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Spawn an in-process daemon over a `RealFs` rooted in
+    /// `dir/served` and point `SEA_SOCKET` at it. The daemon thread's
+    /// own file I/O passes back through these wrappers and falls
+    /// through (its paths are not under `SEA_MOUNT`, its fds are not
+    /// in the remote table) — exactly the re-entrancy the fd table's
+    /// per-entry locking is designed for.
+    fn spawn_shim_daemon(dir: &std::path::Path) -> sea::serve::Server {
+        let sock = dir.join("sea.sock");
+        let fs = std::sync::Arc::new(sea::vfs::RealFs::new(dir.join("served")).unwrap());
+        let server =
+            sea::serve::Server::spawn_vfs(fs, None, sea::serve::ServeCfg::new(&sock)).unwrap();
+        std::env::set_var("SEA_SOCKET", &sock);
+        server
+    }
+
+    #[test]
+    fn sea_socket_routes_fd_io_through_a_daemon() {
+        let _env = ENV_LOCK.lock().unwrap();
+        let dir = scratch_target("remote_fd");
+        let server = spawn_shim_daemon(&dir);
+        let c = CString::new("/sea/remote.dat").unwrap();
+        unsafe {
+            let fd = open(c.as_ptr(), libc::O_RDWR | libc::O_CREAT, 0o644);
+            assert!(fd >= 0, "remote open failed");
+            let hello = b"hello daemon";
+            assert_eq!(
+                pwrite(fd, hello.as_ptr() as *const c_void, hello.len(), 0),
+                hello.len() as libc::ssize_t
+            );
+            let mut back = [0u8; 12];
+            assert_eq!(
+                pread(fd, back.as_mut_ptr() as *mut c_void, back.len(), 0),
+                back.len() as libc::ssize_t
+            );
+            assert_eq!(&back, hello);
+            // cursor I/O: seek to the end, append through write(2)
+            assert_eq!(lseek(fd, 0, libc::SEEK_END), hello.len() as libc::off_t);
+            let more = b"!";
+            assert_eq!(write(fd, more.as_ptr() as *const c_void, 1), 1);
+            let mut st: libc::stat = std::mem::zeroed();
+            assert_eq!(fstat(fd, &mut st), 0);
+            assert_eq!(st.st_size, (hello.len() + 1) as libc::off_t);
+            assert_eq!(close(fd), 0);
+            // path-addressed calls round-trip the daemon too
+            assert_eq!(access(c.as_ptr(), libc::F_OK), 0);
+            let mut st2: libc::stat = std::mem::zeroed();
+            assert_eq!(stat(c.as_ptr(), &mut st2), 0);
+            assert_eq!(st2.st_size, (hello.len() + 1) as libc::off_t);
+        }
+        // the bytes landed in the daemon's backing tree, not under
+        // SEA_TARGET: the mount path was served, never translated
+        let served = dir.join("served/sea/remote.dat");
+        assert_eq!(std::fs::read(&served).unwrap(), b"hello daemon!");
+        assert!(!dir.join("remote.dat").exists());
+        unsafe {
+            assert_eq!(unlink(c.as_ptr()), 0);
+            assert_eq!(access(c.as_ptr(), libc::F_OK), -1);
+            assert_eq!(*libc::__errno_location(), libc::ENOENT);
+        }
+        assert!(!served.exists(), "unlink reached the daemon's tree");
+        std::env::remove_var("SEA_SOCKET");
+        server.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sea_socket_mappings_fill_remotely_and_write_back() {
+        let _env = ENV_LOCK.lock().unwrap();
+        let dir = scratch_target("remote_map");
+        // seed the served tree before the daemon comes up
+        let served = dir.join("served/sea/m.dat");
+        std::fs::create_dir_all(served.parent().unwrap()).unwrap();
+        let data: Vec<u8> = (0..150_000usize).map(|k| (k.wrapping_mul(17) % 251) as u8).collect();
+        std::fs::write(&served, &data).unwrap();
+        let server = spawn_shim_daemon(&dir);
+        let c = CString::new("/sea/m.dat").unwrap();
+        unsafe {
+            let fd = open(c.as_ptr(), libc::O_RDWR, 0);
+            assert!(fd >= 0, "remote open failed");
+            let a = mmap(
+                std::ptr::null_mut(),
+                data.len(),
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED,
+                fd,
+                0,
+            );
+            assert_ne!(a, libc::MAP_FAILED, "remote emulated mapping failed");
+            let buf = std::slice::from_raw_parts_mut(a as *mut u8, data.len());
+            assert_eq!(buf, &data[..], "fill round-tripped the daemon");
+            // stores write back through the sibling daemon handle
+            buf[100..107].copy_from_slice(b"remoted");
+            assert_eq!(msync(a, data.len(), libc::MS_SYNC), 0);
+            assert_eq!(&std::fs::read(&served).unwrap()[100..107], b"remoted");
+            // a post-msync store reaches the file via the unmap flush
+            buf[0] = 0xAB;
+            assert_eq!(munmap(a, data.len()), 0);
+            assert_eq!(std::fs::read(&served).unwrap()[0], 0xAB);
+            assert_eq!(close(fd), 0);
+        }
+        std::env::remove_var("SEA_SOCKET");
+        server.shutdown().unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }
 

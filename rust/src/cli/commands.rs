@@ -15,9 +15,10 @@ use crate::runtime::Engine;
 use crate::sim::spec::ClusterSpec;
 use crate::util::bytes::fmt_bw;
 use crate::util::{fmt_bytes, MIB};
+use crate::serve::{ServeCfg, Server};
 use crate::vfs::{
-    DeviceLedger, DeviceSpec, MgmtCounters, PageCache, RateLimitedFs, RealFs, SeaFs, SeaFsConfig,
-    SeaTuning, Vfs,
+    DeviceLedger, DeviceSpec, MgmtCounters, PageCache, RateLimitedFs, RealFs, RemoteFs,
+    SeaFs, SeaFsConfig, SeaTuning, Vfs,
 };
 use crate::workload::{dataset, IncrementationSpec};
 
@@ -341,6 +342,8 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
         println!(
             "sea run [--artifacts artifacts/] [--work /tmp/sea_run] [--blocks N]\n\
              \x20       [--iterations N] [--workers N] [--mode sea|direct|both]\n\
+             \x20       [--connect SOCKET]  # drive a `sea serve` daemon instead of\n\
+             \x20       # mounting in-process (same --work root as the daemon)\n\
              \x20       [--pfs-read-mibs N] [--pfs-write-mibs N] [--flush-all]\n\
              \x20       [--io-mode streamed|mmap]  # stride I/O flavour\n\
              \x20       [--config cfg.toml]  # [sea] tuning section\n\
@@ -418,6 +421,42 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
         }
         results.push(("direct".into(), r.makespan));
     }
+    if let Some(sock) = args.get("connect") {
+        // Drive an existing `sea serve` daemon instead of mounting
+        // in-process. The daemon must serve the same --work root so
+        // the freshly generated inputs are visible to it.
+        let vfs: Arc<dyn Vfs> = Arc::new(RemoteFs::connect(sock)?);
+        let remote_cache = (io_mode == IoMode::Mmap)
+            .then(|| Arc::new(PageCache::new(tuning.page_bytes, tuning.page_budget)));
+        let r = run_pipeline(&PipelineCfg {
+            engine: engine.clone(),
+            vfs,
+            dataset: ds.clone(),
+            mount_prefix: PathBuf::from("/sea"),
+            iterations,
+            workers,
+            read_back: true,
+            verify: true,
+            cleanup_intermediate: true,
+            max_open_outputs: 0,
+            io_mode,
+            page_cache: remote_cache,
+        })?;
+        println!(
+            "sea-remote : {:.2}s  ({} read, {} written, {} pjrt calls, {} io via {})",
+            r.makespan,
+            fmt_bytes(r.bytes_read),
+            fmt_bytes(r.bytes_written),
+            r.pjrt_calls,
+            io_mode.name(),
+            sock,
+        );
+        results.push(("sea-remote".into(), r.makespan));
+        if results.len() == 2 {
+            println!("speedup    : {:.2}x", results[0].1 / results[1].1);
+        }
+        return Ok(0);
+    }
     if mode == "sea" || mode == "both" {
         let pfs: Arc<dyn Vfs> = Arc::new(RateLimitedFs::new(
             RealFs::new(work.join("pfs"))?,
@@ -473,6 +512,95 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
     if results.len() == 2 {
         println!("speedup    : {:.2}x", results[0].1 / results[1].1);
     }
+    Ok(0)
+}
+
+/// `SIGTERM`/`SIGINT` latch for `sea serve` (no `libc` dependency in
+/// this crate: `signal(2)` is declared directly — std already links
+/// libc).
+static SERVE_STOP: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+extern "C" fn serve_stop_handler(_sig: i32) {
+    SERVE_STOP.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+fn install_stop_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    let h = serve_stop_handler as *const () as usize;
+    unsafe {
+        signal(SIGTERM, h);
+        signal(SIGINT, h);
+    }
+}
+
+/// `sea serve` — mount the `sea run`/`sea stat` work-root layout once
+/// and serve it to any number of client processes over a Unix socket
+/// (see [`crate::serve`]). `sea run --connect` / `sea stat --connect`
+/// and interposed binaries with `SEA_SOCKET` set are the clients.
+/// SIGTERM/SIGINT shut down gracefully: in-flight requests finish,
+/// writer handles close (running deferred management), the socket file
+/// is removed.
+pub fn run_serve(args: &mut Args) -> Result<i32> {
+    if args.has("help") {
+        println!(
+            "sea serve --socket PATH [--config cfg.toml]  # [sea] + [serve] sections\n\
+             \x20         [--work /tmp/sea_run] [--max-file-size 617MiB] [--procs N]\n\
+             \x20         [--idle-timeout-secs N]  # reap clients silent this long\n\
+             \x20         [--engine paper|temperature] [--flush-workers N] ...\n\
+             \x20         # all `sea stat` mount flags apply; clients must use\n\
+             \x20         # the same --work root for input paths to line up"
+        );
+        return Ok(0);
+    }
+    let serve_opts = match args.get("config") {
+        Some(path) => {
+            config::serve_from_doc(&config::Doc::load(std::path::Path::new(path))?)?
+        }
+        None => config::ServeOpts::default(),
+    };
+    let socket = match args.get("socket").map(String::from).or(serve_opts.socket) {
+        Some(s) => PathBuf::from(s),
+        None => {
+            return Err(Error::InvalidArg(
+                "sea serve needs --socket PATH (or [serve] socket in --config)".into(),
+            ))
+        }
+    };
+    let idle_secs =
+        args.usize_or("idle-timeout-secs", serve_opts.idle_timeout_secs as usize)?;
+    let work = PathBuf::from(args.str_or("work", "/tmp/sea_run"));
+    let tuning = tuning_from_args(args)?;
+    let rules = RuleSet::load_dir(&work)?;
+    let pfs: Arc<dyn Vfs> = Arc::new(RealFs::new(work.join("pfs"))?);
+    let sea = Arc::new(SeaFs::mount(SeaFsConfig {
+        mountpoint: PathBuf::from("/sea"),
+        devices: work_layout(&work)?,
+        pfs,
+        max_file_size: args.bytes_or("max-file-size", 617 * MIB)?,
+        parallel_procs: args.usize_or("procs", 2)? as u64,
+        rules,
+        seed: 11,
+        tuning,
+    })?);
+    let mut cfg = ServeCfg::new(&socket);
+    cfg.idle_timeout = std::time::Duration::from_secs(idle_secs as u64);
+    let server = Server::spawn(sea.clone(), cfg)?;
+    println!(
+        "sea serve: {} engine on {} (work root {}); SIGTERM to stop",
+        sea.engine_name(),
+        socket.display(),
+        work.display()
+    );
+    install_stop_handlers();
+    while !SERVE_STOP.load(std::sync::atomic::Ordering::SeqCst) {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    println!("sea serve: draining and shutting down");
+    server.shutdown()?;
     Ok(0)
 }
 
@@ -548,7 +676,8 @@ fn format_stat(engine: &str, ledger: &[DeviceLedger], c: MgmtCounters) -> String
 pub fn run_stat(args: &mut Args) -> Result<i32> {
     if args.has("help") {
         println!(
-            "sea stat [--work /tmp/sea_run] [--max-file-size 617MiB] [--procs N]\n\
+            "sea stat [--connect SOCKET]  # live counters from a `sea serve` daemon\n\
+             \x20        [--work /tmp/sea_run] [--max-file-size 617MiB] [--procs N]\n\
              \x20        [--config cfg.toml] [--engine paper|temperature]\n\
              \x20        [--flush-workers N] [--registry-shards N]\n\
              \x20        [--per-member-concurrency N]\n\
@@ -556,6 +685,17 @@ pub fn run_stat(args: &mut Args) -> Result<i32> {
              \x20        [--page-bytes 64KiB] [--page-budget 64MiB]\n\
              \x20        [--heat-decay X] [--heat-freq-weight X] [--promote-headroom S]\n\
              \x20        [--compress] [--compress-level 1..9] [--compress-min-ratio X]"
+        );
+        return Ok(0);
+    }
+    if let Some(sock) = args.get("connect") {
+        // Live daemon: its counters, its ledger, plus who's connected.
+        let fs = RemoteFs::connect(sock)?;
+        let c = fs.counters()?;
+        print!("{}", format_stat(&c.engine, &c.ledger, c.counters));
+        println!(
+            "clients: {} connected ({} total), {} open handles, {} ops served",
+            c.clients_connected, c.clients_total, c.open_handles, c.ops_served
         );
         return Ok(0);
     }

@@ -16,6 +16,7 @@ USAGE:
 
 COMMANDS:
     run            run the incrementation pipeline on REAL files through a Sea mount
+    serve          own a Sea mount as a daemon: serve it to other processes over a Unix socket
     stat           mount a Sea work root and print per-device ledgers + mgmt counters
     sim            run one simulated experiment on the paper-scale cluster
     experiment     regenerate a paper figure/table (fig2a|fig2b|fig2c|fig2d|fig3|table2)
@@ -39,6 +40,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
     };
     match cmd.as_str() {
         "run" => commands::run_real(&mut args),
+        "serve" => commands::run_serve(&mut args),
         "stat" => commands::run_stat(&mut args),
         "sim" => commands::run_sim(&mut args),
         "experiment" => commands::run_experiment(&mut args),

@@ -14,4 +14,4 @@ mod sea;
 
 pub use cluster::{load_cluster_spec, spec_from_doc};
 pub use parse::{Doc, Value};
-pub use sea::tuning_from_doc;
+pub use sea::{serve_from_doc, tuning_from_doc, ServeOpts};

@@ -56,6 +56,41 @@ pub fn tuning_from_doc(d: &Doc) -> Result<SeaTuning> {
     })
 }
 
+/// The `[serve]` section: `sea serve` daemon knobs. Missing keys keep
+/// the defaults; the socket path from `--socket` wins over the file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeOpts {
+    /// Socket path from `[serve] socket = "..."`, when present.
+    pub socket: Option<String>,
+    /// Reap clients silent for this many seconds between frames.
+    pub idle_timeout_secs: u64,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts { socket: None, idle_timeout_secs: 300 }
+    }
+}
+
+/// Build [`ServeOpts`] from a parsed document.
+pub fn serve_from_doc(d: &Doc) -> Result<ServeOpts> {
+    let dflt = ServeOpts::default();
+    let socket = {
+        let s = d.str_or("serve.socket", "");
+        if s.is_empty() {
+            None
+        } else {
+            Some(s)
+        }
+    };
+    Ok(ServeOpts {
+        socket,
+        idle_timeout_secs: d
+            .usize_or("serve.idle_timeout_secs", dflt.idle_timeout_secs as usize)
+            as u64,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,5 +138,18 @@ mod tests {
     fn unknown_engine_token_is_rejected() {
         let d = Doc::parse("[sea]\nengine = \"bogus\"\n").unwrap();
         assert!(matches!(tuning_from_doc(&d), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn serve_section_defaults_and_overrides() {
+        let d = Doc::parse("").unwrap();
+        assert_eq!(serve_from_doc(&d).unwrap(), ServeOpts::default());
+        let d = Doc::parse(
+            "[serve]\nsocket = \"/tmp/sea.sock\"\nidle_timeout_secs = 30\n",
+        )
+        .unwrap();
+        let s = serve_from_doc(&d).unwrap();
+        assert_eq!(s.socket.as_deref(), Some("/tmp/sea.sock"));
+        assert_eq!(s.idle_timeout_secs, 30);
     }
 }

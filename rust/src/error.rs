@@ -48,6 +48,17 @@ pub enum Error {
 
     /// Invalid argument to a public API.
     InvalidArg(String),
+
+    /// The `sea serve` daemon died or became unreachable mid-operation
+    /// (connection refused after retries, or EOF on a non-retryable
+    /// request). Distinct from [`Error::Daemon`] so callers can tell
+    /// "the daemon is gone" from "the daemon said no".
+    DaemonGone(String),
+
+    /// Daemon/protocol-level failure on a live connection (malformed
+    /// frame, version mismatch, stale handle, server-side fault that
+    /// does not map onto a more specific variant).
+    Daemon(String),
 }
 
 impl fmt::Display for Error {
@@ -67,6 +78,8 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Integrity(m) => write!(f, "integrity error: {m}"),
             Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            Error::DaemonGone(m) => write!(f, "sea daemon unreachable: {m}"),
+            Error::Daemon(m) => write!(f, "sea daemon error: {m}"),
         }
     }
 }

@@ -13,6 +13,9 @@
 //! * [`vfs`] — the interception layer: a `Vfs` trait with real
 //!   (`std::fs`) and simulated backends, and `SeaFs` implementing the
 //!   paper's mountpoint translation on top of any backend.
+//! * [`serve`] — Sea as a service: the `sea serve` daemon owning one
+//!   `SeaFs` mount for many client processes, its Unix-socket wire
+//!   protocol, and the [`vfs::remote::RemoteFs`] client transport.
 //! * [`hierarchy`] + [`placement`] — storage tiers, space accounting,
 //!   and the **`PlacementEngine`** decision surface: typed lifecycle
 //!   hooks (`place`, `on_access`, `on_close`, `on_pressure`,
@@ -43,6 +46,7 @@ pub mod model;
 pub mod placement;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod testkit;
 pub mod vfs;
 pub mod workload;

@@ -1,0 +1,627 @@
+//! **Sea as a service**: the `sea serve` daemon.
+//!
+//! Everything else in this crate is one process owning one mount. This
+//! module turns that mount into a shared service: a daemon owns the
+//! [`SeaFs`] — one placement brain, one ledger, one page budget — and
+//! any number of client processes (a [`crate::vfs::remote::RemoteFs`],
+//! or unmodified binaries through the `sea-interpose` shim with
+//! `SEA_SOCKET` set) speak a compact binary protocol to it over a Unix
+//! domain socket. Because every append from every client resolves its
+//! offset behind the daemon's registry shard lock, concurrent appenders
+//! in *different processes* never interleave records — closing the
+//! stripe-mode `OpenMode::Append` cross-process atomicity gap — and the
+//! heat map the placement engine sees is the cluster's access pattern,
+//! not one process's.
+//!
+//! ## Wire format
+//!
+//! See [`protocol`] for the full encoding. The short version:
+//!
+//! | frame    | layout                                                |
+//! |----------|-------------------------------------------------------|
+//! | any      | `[u32 len][payload…]`, little-endian, `len <=` [`protocol::MAX_FRAME`] |
+//! | request  | `[opcode u8][operands…]`                              |
+//! | response | `[status u8][gen u64][body…]`                         |
+//!
+//! The `gen` slot of every response carries the daemon-side map
+//! generation of the touched handle: one client's spill propagates to
+//! every other client on their next response, and they invalidate
+//! their emulated mappings — cross-process page coherence without a
+//! broadcast channel.
+//!
+//! ## Lifecycle
+//!
+//! [`Server::spawn`] claims the socket (probing for a live daemon
+//! before unlinking a stale file, then binding with `0600`
+//! permissions), and serves thread-per-connection. Each connection
+//! gets a version handshake, a private handle table, and an idle
+//! deadline ([`ServeCfg::idle_timeout`]) — a client silent for that
+//! long between frames is reaped (its handles drop, running any
+//! deferred Sea management). [`Server::shutdown`] drains: no new
+//! connections, in-flight requests finish and are answered, handle
+//! tables drop (closing writer handles), threads join, the socket file
+//! is removed.
+
+pub mod protocol;
+
+use std::collections::HashMap;
+use std::io::ErrorKind;
+use std::os::unix::fs::PermissionsExt;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::vfs::sea::SeaFs;
+use crate::vfs::{OpenMode, Vfs, VfsFile};
+use protocol::{
+    read_frame, write_frame, Body, CountersReply, ErrCode, Request, Response,
+    PROTOCOL_VERSION,
+};
+
+/// How often a connection thread wakes to check the shutdown flag and
+/// its idle deadline while waiting for the next frame.
+const POLL_TICK: Duration = Duration::from_millis(25);
+
+/// Daemon configuration.
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Unix-domain socket path to listen on.
+    pub socket: PathBuf,
+    /// Reap a client silent for this long between frames. Generous by
+    /// default — a reaped read-only client transparently reconnects.
+    pub idle_timeout: Duration,
+}
+
+impl ServeCfg {
+    /// Defaults: 5-minute idle reaping.
+    pub fn new(socket: impl Into<PathBuf>) -> ServeCfg {
+        ServeCfg { socket: socket.into(), idle_timeout: Duration::from_secs(300) }
+    }
+}
+
+/// Live service gauges (the `clients:` line of `sea stat --connect`).
+#[derive(Debug, Default)]
+struct Gauges {
+    clients_connected: AtomicU64,
+    clients_total: AtomicU64,
+    open_handles: AtomicU64,
+    ops_served: AtomicU64,
+}
+
+struct Shared {
+    fs: Arc<dyn Vfs>,
+    /// The concrete Sea mount when the served Vfs is one (counters,
+    /// ledger, engine name for the `Counters` reply).
+    sea: Option<Arc<SeaFs>>,
+    shutdown: AtomicBool,
+    idle_timeout: Duration,
+    gauges: Gauges,
+}
+
+/// A running `sea serve` daemon (in-process handle).
+///
+/// Dropping the server *without* calling [`Server::shutdown`] still
+/// shuts it down, but abruptly-ish: the flag is set and threads are
+/// joined, identical to `shutdown` minus the error reporting.
+pub struct Server {
+    shared: Arc<Shared>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    conn_threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    socket: PathBuf,
+}
+
+impl Server {
+    /// Claim `cfg.socket` and start serving `sea` on it.
+    pub fn spawn(sea: Arc<SeaFs>, cfg: ServeCfg) -> Result<Server> {
+        Server::spawn_vfs(sea.clone() as Arc<dyn Vfs>, Some(sea), cfg)
+    }
+
+    /// Serve an arbitrary [`Vfs`] (tests, decorated mounts). The
+    /// `Counters` reply degrades gracefully when `sea` is `None`.
+    pub fn spawn_vfs(
+        fs: Arc<dyn Vfs>,
+        sea: Option<Arc<SeaFs>>,
+        cfg: ServeCfg,
+    ) -> Result<Server> {
+        let listener = claim_socket(&cfg.socket)?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::io(cfg.socket.clone(), e))?;
+        let shared = Arc::new(Shared {
+            fs,
+            sea,
+            shutdown: AtomicBool::new(false),
+            idle_timeout: cfg.idle_timeout,
+            gauges: Gauges::default(),
+        });
+        let conn_threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let accept_shared = shared.clone();
+        let accept_conns = conn_threads.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("sea-serve-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared, accept_conns))
+            .map_err(|e| Error::io(cfg.socket.clone(), e))?;
+        Ok(Server {
+            shared,
+            accept_thread: Some(accept_thread),
+            conn_threads,
+            socket: cfg.socket,
+        })
+    }
+
+    /// The socket this daemon listens on.
+    pub fn socket_path(&self) -> &Path {
+        &self.socket
+    }
+
+    /// Has a shutdown been requested (e.g. by a signal handler)?
+    pub fn shutting_down(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Request + complete a graceful shutdown: stop accepting, let
+    /// every in-flight request finish and be answered, drop all handle
+    /// tables (running deferred Sea management for writer handles),
+    /// join all threads, remove the socket file.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop_and_join();
+        Ok(())
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        let threads: Vec<_> = {
+            let mut g = self.conn_threads.lock().unwrap();
+            g.drain(..).collect()
+        };
+        for t in threads {
+            let _ = t.join();
+        }
+        let _ = std::fs::remove_file(&self.socket);
+        // Writers are closed; give the mount a chance to drain the
+        // management those closes queued.
+        if let Some(sea) = &self.shared.sea {
+            let _ = sea.sync_mgmt();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Bind `socket`, removing a stale file first — but only after probing
+/// that no live daemon answers on it (a successful connect means one
+/// does, and we refuse to steal its socket). The bound socket gets
+/// `0600` permissions: the placement brain takes orders only from the
+/// owning user.
+fn claim_socket(socket: &Path) -> Result<UnixListener> {
+    if socket.exists() {
+        match UnixStream::connect(socket) {
+            Ok(_) => {
+                return Err(Error::Daemon(format!(
+                    "a live daemon already serves {}",
+                    socket.display()
+                )));
+            }
+            Err(_) => {
+                // Nobody home: a stale socket from an unclean exit.
+                std::fs::remove_file(socket)
+                    .map_err(|e| Error::io(socket.to_path_buf(), e))?;
+            }
+        }
+    }
+    if let Some(parent) = socket.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| Error::io(socket.to_path_buf(), e))?;
+        }
+    }
+    let listener =
+        UnixListener::bind(socket).map_err(|e| Error::io(socket.to_path_buf(), e))?;
+    std::fs::set_permissions(socket, std::fs::Permissions::from_mode(0o600))
+        .map_err(|e| Error::io(socket.to_path_buf(), e))?;
+    Ok(listener)
+}
+
+fn accept_loop(
+    listener: UnixListener,
+    shared: Arc<Shared>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+) {
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                shared.gauges.clients_total.fetch_add(1, Ordering::Relaxed);
+                shared.gauges.clients_connected.fetch_add(1, Ordering::Relaxed);
+                let conn_shared = shared.clone();
+                if let Ok(t) = std::thread::Builder::new()
+                    .name("sea-serve-conn".into())
+                    .spawn(move || {
+                        serve_connection(stream, &conn_shared);
+                        conn_shared
+                            .gauges
+                            .clients_connected
+                            .fetch_sub(1, Ordering::Relaxed);
+                    })
+                {
+                    conns.lock().unwrap().push(t);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL_TICK);
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// One open handle in a connection's table.
+struct Handle {
+    file: Box<dyn VfsFile>,
+}
+
+/// Wait for the next frame, polling so the shutdown flag and the idle
+/// deadline are honored *between* frames only — once the first header
+/// byte of a frame has arrived, the read commits until the frame
+/// completes (an idle cut mid-frame would desynchronize the stream).
+/// Returns `Ok(None)` on clean EOF, idle reap, or shutdown.
+fn next_frame(stream: &mut UnixStream, shared: &Shared) -> std::io::Result<Option<Vec<u8>>> {
+    let idle_deadline = Instant::now() + shared.idle_timeout;
+    stream.set_read_timeout(Some(POLL_TICK))?;
+    let mut first = [0u8; 1];
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        match std::io::Read::read(stream, &mut first) {
+            Ok(0) => return Ok(None), // clean EOF between frames
+            Ok(_) => break,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                if Instant::now() >= idle_deadline {
+                    return Ok(None); // idle reap
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    // Frame committed: finish it without an idle cut. Keep the short
+    // read timeout (so a wedged peer cannot pin the thread forever past
+    // shutdown) but retry timeouts until the frame completes.
+    let mut hdr = [0u8; 4];
+    hdr[0] = first[0];
+    read_full(stream, &mut hdr[1..])?;
+    let n = u32::from_le_bytes(hdr) as usize;
+    if n > protocol::MAX_FRAME {
+        return Err(std::io::Error::new(
+            ErrorKind::InvalidData,
+            format!("frame of {n} bytes exceeds MAX_FRAME"),
+        ));
+    }
+    let mut buf = vec![0u8; n];
+    read_full(stream, &mut buf)?;
+    Ok(Some(buf))
+}
+
+/// `read_exact` that rides over the polling read timeout.
+fn read_full(stream: &mut UnixStream, mut buf: &mut [u8]) -> std::io::Result<()> {
+    while !buf.is_empty() {
+        match std::io::Read::read(stream, buf) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "EOF mid-frame",
+                ))
+            }
+            Ok(k) => buf = &mut buf[k..],
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut
+                    || e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+fn serve_connection(mut stream: UnixStream, shared: &Shared) {
+    // Handshake: the first frame must be a matching Hello.
+    match next_frame(&mut stream, shared) {
+        Ok(Some(frame)) => match Request::decode(&frame) {
+            Ok(Request::Hello { version }) if version == PROTOCOL_VERSION => {
+                let resp = Response::ok(0, Body::Hello { version: PROTOCOL_VERSION });
+                if write_frame(&mut stream, &resp.encode()).is_err() {
+                    return;
+                }
+            }
+            Ok(Request::Hello { version }) => {
+                let resp = Response::err_code(
+                    ErrCode::VersionMismatch,
+                    format!("daemon speaks protocol {PROTOCOL_VERSION}, client sent {version}"),
+                );
+                let _ = write_frame(&mut stream, &resp.encode());
+                return;
+            }
+            Ok(other) => {
+                let resp = Response::err_code(
+                    ErrCode::Other,
+                    format!("expected Hello as first frame, got {other:?}"),
+                );
+                let _ = write_frame(&mut stream, &resp.encode());
+                return;
+            }
+            Err(e) => {
+                let resp = Response::err_code(ErrCode::Other, e.to_string());
+                let _ = write_frame(&mut stream, &resp.encode());
+                return;
+            }
+        },
+        _ => return,
+    }
+
+    let mut handles: HashMap<u64, Handle> = HashMap::new();
+    let mut next_handle: u64 = 1;
+
+    loop {
+        let frame = match next_frame(&mut stream, shared) {
+            Ok(Some(f)) => f,
+            _ => break,
+        };
+        let req = match Request::decode(&frame) {
+            Ok(r) => r,
+            Err(e) => {
+                // Protocol desync: answer once, then drop the peer.
+                let resp = Response::err_code(ErrCode::Other, e.to_string());
+                let _ = write_frame(&mut stream, &resp.encode());
+                break;
+            }
+        };
+        shared.gauges.ops_served.fetch_add(1, Ordering::Relaxed);
+        let resp = handle_request(req, shared, &mut handles, &mut next_handle);
+        if write_frame(&mut stream, &resp.encode()).is_err() {
+            break;
+        }
+    }
+
+    // Drop order: the handle table first (writer closes run deferred
+    // Sea management), then the stream.
+    let n = handles.len() as u64;
+    drop(handles);
+    shared.gauges.open_handles.fetch_sub(n, Ordering::Relaxed);
+}
+
+fn handle_request(
+    req: Request,
+    shared: &Shared,
+    handles: &mut HashMap<u64, Handle>,
+    next_handle: &mut u64,
+) -> Response {
+    /// Piggybacked generation of a handle after an op (0 when the
+    /// registry lookup itself fails — the op's own error wins).
+    fn gen_of(h: &mut Handle) -> u64 {
+        h.file.map_sync().unwrap_or(0)
+    }
+
+    macro_rules! with_handle {
+        ($id:expr, |$h:ident| $body:expr) => {
+            match handles.get_mut(&$id) {
+                Some($h) => $body,
+                None => Response::err_code(ErrCode::BadHandle, format!("handle {}", $id)),
+            }
+        };
+    }
+
+    match req {
+        Request::Hello { .. } => Response::ok(0, Body::Hello { version: PROTOCOL_VERSION }),
+        Request::Open { mode, path } => {
+            if shared.shutdown.load(Ordering::SeqCst) && mode.writable() {
+                return Response::err_code(ErrCode::Shutdown, "no new writers");
+            }
+            match shared.fs.open(Path::new(&path), mode) {
+                Ok(file) => {
+                    let id = *next_handle;
+                    *next_handle += 1;
+                    let mut h = Handle { file };
+                    let ident = h.file.map_identity();
+                    let gen = gen_of(&mut h);
+                    handles.insert(id, h);
+                    shared.gauges.open_handles.fetch_add(1, Ordering::Relaxed);
+                    Response::ok(gen, Body::Open { handle: id, ident })
+                }
+                Err(e) => Response::err(0, &e),
+            }
+        }
+        Request::Pread { handle, off, len } => with_handle!(handle, |h| {
+            let want = (len as usize).min(protocol::MAX_IO);
+            let mut buf = vec![0u8; want];
+            match h.file.pread(&mut buf, off) {
+                Ok(n) => {
+                    buf.truncate(n);
+                    Response::ok(gen_of(h), Body::Data(buf))
+                }
+                Err(e) => Response::err(gen_of(h), &e),
+            }
+        }),
+        Request::Pwrite { handle, off, data } => with_handle!(handle, |h| {
+            if data.len() > protocol::MAX_IO {
+                return Response::err_code(
+                    ErrCode::InvalidArg,
+                    format!("pwrite of {} bytes exceeds MAX_IO", data.len()),
+                );
+            }
+            match h.file.pwrite(&data, off) {
+                Ok(n) => Response::ok(gen_of(h), Body::Written(n as u32)),
+                Err(e) => Response::err(gen_of(h), &e),
+            }
+        }),
+        Request::SetLen { handle, len } => with_handle!(handle, |h| {
+            match h.file.set_len(len) {
+                Ok(()) => Response::ok(gen_of(h), Body::Unit),
+                Err(e) => Response::err(gen_of(h), &e),
+            }
+        }),
+        Request::Fsync { handle } => with_handle!(handle, |h| {
+            match h.file.fsync() {
+                Ok(()) => Response::ok(gen_of(h), Body::Unit),
+                Err(e) => Response::err(gen_of(h), &e),
+            }
+        }),
+        Request::Len { handle } => with_handle!(handle, |h| {
+            match h.file.len() {
+                Ok(n) => Response::ok(gen_of(h), Body::Size(n)),
+                Err(e) => Response::err(gen_of(h), &e),
+            }
+        }),
+        Request::Close { handle } => match handles.remove(&handle) {
+            Some(h) => {
+                drop(h); // deferred Sea management runs here
+                shared.gauges.open_handles.fetch_sub(1, Ordering::Relaxed);
+                Response::ok(0, Body::Unit)
+            }
+            None => Response::err_code(ErrCode::BadHandle, format!("handle {handle}")),
+        },
+        Request::MapSync { handle } => with_handle!(handle, |h| {
+            match h.file.map_sync() {
+                Ok(gen) => Response::ok(gen, Body::Unit),
+                Err(e) => Response::err(0, &e),
+            }
+        }),
+        Request::NoteFault { handle, off, len } => with_handle!(handle, |h| {
+            h.file.note_map_fault(off, len);
+            Response::ok(gen_of(h), Body::Unit)
+        }),
+        Request::Stat { path } => match shared.fs.size(Path::new(&path)) {
+            Ok(n) => Response::ok(0, Body::Size(n)),
+            Err(e) => Response::err(0, &e),
+        },
+        Request::Readdir { path } => match shared.fs.readdir(Path::new(&path)) {
+            Ok(names) => Response::ok(0, Body::Names(names)),
+            Err(e) => Response::err(0, &e),
+        },
+        Request::Rename { from, to } => {
+            match shared.fs.rename(Path::new(&from), Path::new(&to)) {
+                Ok(()) => Response::ok(0, Body::Unit),
+                Err(e) => Response::err(0, &e),
+            }
+        }
+        Request::Unlink { path } => match shared.fs.unlink(Path::new(&path)) {
+            Ok(()) => Response::ok(0, Body::Unit),
+            Err(e) => Response::err(0, &e),
+        },
+        Request::SyncMgmt => match shared.fs.sync_mgmt() {
+            Ok(()) => Response::ok(0, Body::Unit),
+            Err(e) => Response::err(0, &e),
+        },
+        Request::Counters => {
+            let (engine, ledger, counters) = match &shared.sea {
+                Some(sea) => {
+                    (sea.engine_name().to_string(), sea.ledger(), sea.counters())
+                }
+                None => (String::from("none"), Vec::new(), Default::default()),
+            };
+            let g = &shared.gauges;
+            Response::ok(
+                0,
+                Body::Counters(Box::new(CountersReply {
+                    engine,
+                    ledger,
+                    counters,
+                    clients_connected: g.clients_connected.load(Ordering::Relaxed),
+                    clients_total: g.clients_total.load(Ordering::Relaxed),
+                    open_handles: g.open_handles.load(Ordering::Relaxed),
+                    ops_served: g.ops_served.load(Ordering::Relaxed),
+                })),
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vfs::RealFs;
+
+    fn scratch(prefix: &str) -> PathBuf {
+        crate::vfs::testutil::scratch(prefix)
+    }
+
+    fn spawn_real(dir: &Path, socket: &Path) -> Server {
+        let fs = Arc::new(RealFs::new(dir).unwrap());
+        Server::spawn_vfs(fs, None, ServeCfg::new(socket)).unwrap()
+    }
+
+    #[test]
+    fn socket_gets_owner_only_permissions() {
+        let d = scratch("serve_perms");
+        let sock = d.join("sea.sock");
+        let srv = spawn_real(&d, &sock);
+        let mode = std::fs::metadata(&sock).unwrap().permissions().mode();
+        assert_eq!(mode & 0o777, 0o600, "socket must be 0600, got {mode:o}");
+        srv.shutdown().unwrap();
+        assert!(!sock.exists(), "shutdown must remove the socket file");
+    }
+
+    #[test]
+    fn stale_socket_is_reclaimed_live_one_is_not() {
+        let d = scratch("serve_stale");
+        let sock = d.join("sea.sock");
+        // A stale socket file nobody listens on: bind, then drop the
+        // listener without removing the file.
+        let l = UnixListener::bind(&sock).unwrap();
+        drop(l);
+        assert!(sock.exists(), "stale socket file should remain after drop");
+        let srv = spawn_real(&d, &sock);
+        // A second daemon must refuse the *live* socket.
+        let err = Server::spawn_vfs(
+            Arc::new(RealFs::new(&d).unwrap()),
+            None,
+            ServeCfg::new(&sock),
+        );
+        match err {
+            Err(Error::Daemon(msg)) => {
+                assert!(msg.contains("already serves"), "got: {msg}")
+            }
+            other => panic!("expected Daemon error, got {other:?}"),
+        }
+        srv.shutdown().unwrap();
+    }
+
+    #[test]
+    fn version_mismatch_gets_a_clear_error_frame() {
+        let d = scratch("serve_version");
+        let sock = d.join("sea.sock");
+        let srv = spawn_real(&d, &sock);
+        let mut s = UnixStream::connect(&sock).unwrap();
+        let hello = Request::Hello { version: PROTOCOL_VERSION + 7 }.encode();
+        write_frame(&mut s, &hello).unwrap();
+        let resp = Response::decode(&read_frame(&mut s).unwrap()).unwrap();
+        let we = resp.body.unwrap_err();
+        assert_eq!(we.code, ErrCode::VersionMismatch);
+        assert!(we.msg.contains("protocol 1"), "got: {}", we.msg);
+        srv.shutdown().unwrap();
+    }
+
+    #[test]
+    fn non_hello_first_frame_is_rejected() {
+        let d = scratch("serve_nohello");
+        let sock = d.join("sea.sock");
+        let srv = spawn_real(&d, &sock);
+        let mut s = UnixStream::connect(&sock).unwrap();
+        write_frame(&mut s, &Request::Counters.encode()).unwrap();
+        let resp = Response::decode(&read_frame(&mut s).unwrap()).unwrap();
+        assert!(resp.body.is_err());
+        srv.shutdown().unwrap();
+    }
+}

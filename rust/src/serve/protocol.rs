@@ -1,0 +1,957 @@
+//! The Sea service wire protocol: compact length-prefixed binary frames
+//! over a Unix domain socket. No external crates — every integer is
+//! little-endian, every string is length-prefixed UTF-8.
+//!
+//! ## Frame format
+//!
+//! Every message (request or response) travels as one frame:
+//!
+//! | bytes | field                                        |
+//! |-------|----------------------------------------------|
+//! | 4     | payload length `n` (u32 LE, `<=` [`MAX_FRAME`]) |
+//! | n     | payload                                      |
+//!
+//! A **request** payload is `[opcode u8][operands…]`; a **response**
+//! payload is `[status u8][gen u64][body…]` where status 0 = ok and
+//! status 1 = error. The `gen` slot piggybacks the daemon-side
+//! [`crate::vfs::VfsFile::map_sync`] generation of the handle the
+//! request touched (0 for path-level ops): a client that sees it move
+//! knows another process relocated the file (e.g. a mid-stream spill)
+//! and must invalidate any cached/mapped pages it holds — the
+//! cross-process analogue of the in-process page-cache generation key.
+//!
+//! Primitive encodings (all little-endian):
+//!
+//! | type  | encoding                                   |
+//! |-------|--------------------------------------------|
+//! | `u8`/`u32`/`u64`/`u128` | fixed-width LE          |
+//! | `str` | `u32` byte length + UTF-8 bytes            |
+//! | `bytes` | `u32` length + raw bytes                 |
+//! | `[T]` | `u32` count + each element                 |
+//!
+//! ## Handshake
+//!
+//! The first frame on a connection must be [`Request::Hello`] carrying
+//! [`PROTOCOL_VERSION`]; the daemon answers with its own version on
+//! success or an [`ErrCode::VersionMismatch`] error frame (and closes)
+//! so a mismatched client fails with a clear message instead of
+//! decoding garbage.
+//!
+//! ## Error frames
+//!
+//! `[1u8][gen u64][code u8][msg str][path str][a u64][b u64]` — `code`
+//! maps back onto the crate's typed [`Error`] variants on the client
+//! (`a`/`b` carry `NoSpace`'s needed/largest-free bytes; zero
+//! elsewhere), so a daemon-side `NotFound` is a client-side
+//! `Error::NotFound`, not a stringly-typed surprise.
+
+use std::io::{Read, Write};
+use std::path::PathBuf;
+
+use crate::error::{Error, Result};
+use crate::vfs::{DeviceLedger, MgmtCounters, OpenMode};
+
+/// Protocol revision. Bump on any wire-visible change; the daemon
+/// rejects clients speaking a different revision at handshake.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Largest single-request I/O payload the daemon accepts or serves.
+/// Bigger preads return short (positioned-I/O semantics allow it);
+/// bigger pwrites are truncated client-side to this size and report a
+/// short write, which `pwrite_all` loops over.
+pub const MAX_IO: usize = 8 * 1024 * 1024;
+
+/// Hard ceiling on one frame's payload: `MAX_IO` plus generous header
+/// room. A peer announcing more is protocol-broken — the connection is
+/// dropped rather than allocating unbounded memory.
+pub const MAX_FRAME: usize = MAX_IO + 64 * 1024;
+
+// --- opcodes ---------------------------------------------------------------
+
+const OP_HELLO: u8 = 0x01;
+const OP_OPEN: u8 = 0x02;
+const OP_PREAD: u8 = 0x03;
+const OP_PWRITE: u8 = 0x04;
+const OP_SET_LEN: u8 = 0x05;
+const OP_FSYNC: u8 = 0x06;
+const OP_CLOSE: u8 = 0x07;
+const OP_STAT: u8 = 0x08;
+const OP_READDIR: u8 = 0x09;
+const OP_RENAME: u8 = 0x0A;
+const OP_UNLINK: u8 = 0x0B;
+const OP_MAP_SYNC: u8 = 0x0C;
+const OP_NOTE_FAULT: u8 = 0x0D;
+const OP_COUNTERS: u8 = 0x0E;
+const OP_LEN: u8 = 0x0F;
+const OP_SYNC_MGMT: u8 = 0x10;
+
+/// One client request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Version handshake; must be the first frame on a connection.
+    Hello { version: u32 },
+    /// Open a handle on `path` (daemon-side `Vfs::open`).
+    Open { mode: OpenMode, path: String },
+    /// Positioned read of up to `len` bytes at `off`.
+    Pread { handle: u64, off: u64, len: u32 },
+    /// Positioned write of `data` at `off`.
+    Pwrite { handle: u64, off: u64, data: Vec<u8> },
+    /// Truncate/extend to exactly `len`.
+    SetLen { handle: u64, len: u64 },
+    /// Durably persist the handle.
+    Fsync { handle: u64 },
+    /// Release the handle (daemon runs deferred management).
+    Close { handle: u64 },
+    /// Current handle length.
+    Len { handle: u64 },
+    /// Size of the file at `path` (also the exists probe).
+    Stat { path: String },
+    /// Names under directory `path`.
+    Readdir { path: String },
+    /// Rename `from` to `to`.
+    Rename { from: String, to: String },
+    /// Remove `path`.
+    Unlink { path: String },
+    /// Refresh the handle against the registry; the response's `gen`
+    /// slot carries the result.
+    MapSync { handle: u64 },
+    /// A client-side page fault on `[off, off+len)` — feeds the
+    /// daemon's placement engine heat.
+    NoteFault { handle: u64, off: u64, len: u64 },
+    /// Live daemon counters + ledger + per-client stats.
+    Counters,
+    /// Block until the daemon's background management drains.
+    SyncMgmt,
+}
+
+/// Error category carried in an error frame; maps onto [`Error`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrCode {
+    /// Underlying I/O failure on the daemon side.
+    Io = 1,
+    /// `Error::NotFound`.
+    NotFound = 2,
+    /// `Error::NoSpace` (operands carry needed / largest-free).
+    NoSpace = 3,
+    /// `Error::OutsideMount`.
+    OutsideMount = 4,
+    /// `Error::InvalidArg`.
+    InvalidArg = 5,
+    /// The request named a handle this connection does not hold.
+    BadHandle = 6,
+    /// Handshake version differed from the daemon's.
+    VersionMismatch = 7,
+    /// The daemon is draining for shutdown.
+    Shutdown = 8,
+    /// Anything else (config/integrity/… collapsed to a message).
+    Other = 9,
+}
+
+impl ErrCode {
+    fn from_u8(b: u8) -> ErrCode {
+        match b {
+            1 => ErrCode::Io,
+            2 => ErrCode::NotFound,
+            3 => ErrCode::NoSpace,
+            4 => ErrCode::OutsideMount,
+            5 => ErrCode::InvalidArg,
+            6 => ErrCode::BadHandle,
+            7 => ErrCode::VersionMismatch,
+            8 => ErrCode::Shutdown,
+            _ => ErrCode::Other,
+        }
+    }
+}
+
+/// A typed error as it travels on the wire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    /// Category (drives the client-side [`Error`] reconstruction).
+    pub code: ErrCode,
+    /// Human-readable message.
+    pub msg: String,
+    /// Path the operation touched, when one exists.
+    pub path: String,
+    /// `NoSpace`: bytes needed. Zero otherwise.
+    pub a: u64,
+    /// `NoSpace`: largest free block. Zero otherwise.
+    pub b: u64,
+}
+
+impl WireError {
+    /// Encode a daemon-side [`Error`] for the wire.
+    pub fn from_error(e: &Error) -> WireError {
+        let (code, msg, path, a, b) = match e {
+            Error::Io { path, source } => {
+                (ErrCode::Io, source.to_string(), path.display().to_string(), 0, 0)
+            }
+            Error::NotFound(p) => {
+                (ErrCode::NotFound, String::new(), p.display().to_string(), 0, 0)
+            }
+            Error::NoSpace { path, needed, largest_free } => (
+                ErrCode::NoSpace,
+                String::new(),
+                path.display().to_string(),
+                *needed,
+                *largest_free,
+            ),
+            Error::OutsideMount(p) => {
+                (ErrCode::OutsideMount, String::new(), p.display().to_string(), 0, 0)
+            }
+            Error::InvalidArg(m) => (ErrCode::InvalidArg, m.clone(), String::new(), 0, 0),
+            other => (ErrCode::Other, other.to_string(), String::new(), 0, 0),
+        };
+        WireError { code, msg, path, a, b }
+    }
+
+    /// Reconstruct the typed [`Error`] on the client.
+    pub fn into_error(self) -> Error {
+        match self.code {
+            ErrCode::Io => Error::io(
+                PathBuf::from(self.path),
+                std::io::Error::new(std::io::ErrorKind::Other, self.msg),
+            ),
+            ErrCode::NotFound => Error::NotFound(PathBuf::from(self.path)),
+            ErrCode::NoSpace => Error::NoSpace {
+                path: PathBuf::from(self.path),
+                needed: self.a,
+                largest_free: self.b,
+            },
+            ErrCode::OutsideMount => Error::OutsideMount(PathBuf::from(self.path)),
+            ErrCode::InvalidArg => Error::InvalidArg(self.msg),
+            ErrCode::BadHandle => {
+                Error::Daemon(format!("stale/unknown remote handle: {}", self.msg))
+            }
+            ErrCode::VersionMismatch => Error::Daemon(format!(
+                "protocol version mismatch: {} (client speaks {PROTOCOL_VERSION})",
+                self.msg
+            )),
+            ErrCode::Shutdown => {
+                Error::DaemonGone(format!("daemon shutting down: {}", self.msg))
+            }
+            ErrCode::Other => Error::Daemon(self.msg),
+        }
+    }
+}
+
+/// Success payload of a response.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Body {
+    /// No payload beyond the piggybacked generation.
+    Unit,
+    /// Handshake echo: the daemon's protocol version.
+    Hello { version: u32 },
+    /// New handle id plus the daemon handle's frame-sharing identity
+    /// (`None` when the backend cannot name one).
+    Open { handle: u64, ident: Option<u128> },
+    /// Pread result.
+    Data(Vec<u8>),
+    /// Pwrite result: bytes accepted.
+    Written(u32),
+    /// Len/Stat result.
+    Size(u64),
+    /// Readdir result.
+    Names(Vec<String>),
+    /// Counters snapshot.
+    Counters(Box<CountersReply>),
+}
+
+/// The `Counters` response: everything `sea stat --connect` prints.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CountersReply {
+    /// Placement engine driving the daemon's mount.
+    pub engine: String,
+    /// Per-device ledger lines.
+    pub ledger: Vec<DeviceLedger>,
+    /// Cumulative management counters.
+    pub counters: MgmtCounters,
+    /// Clients connected right now.
+    pub clients_connected: u64,
+    /// Connections accepted since the daemon started.
+    pub clients_total: u64,
+    /// Remote handles currently open across all clients.
+    pub open_handles: u64,
+    /// Requests served since the daemon started.
+    pub ops_served: u64,
+}
+
+/// One response: the piggybacked map generation plus the outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    /// Daemon-side `map_sync` generation of the handle the request
+    /// touched (0 for path-level ops). See the module docs.
+    pub gen: u64,
+    /// Success payload or typed error.
+    pub body: std::result::Result<Body, WireError>,
+}
+
+// --- primitive encoders ----------------------------------------------------
+
+fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u128(buf: &mut Vec<u8>, v: u128) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
+    put_u32(buf, b.len() as u32);
+    buf.extend_from_slice(b);
+}
+
+/// Cursor over a received payload with typed, bounds-checked readers.
+struct Cur<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf, at: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.at + n > self.buf.len() {
+            return Err(Error::Daemon(format!(
+                "truncated frame: wanted {n} bytes at {}, have {}",
+                self.at,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        if n > MAX_FRAME {
+            return Err(Error::Daemon(format!("oversized string: {n} bytes")));
+        }
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| Error::Daemon("non-UTF-8 string in frame".into()))
+    }
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        if n > MAX_FRAME {
+            return Err(Error::Daemon(format!("oversized byte blob: {n} bytes")));
+        }
+        Ok(self.take(n)?.to_vec())
+    }
+    fn done(&self) -> Result<()> {
+        if self.at != self.buf.len() {
+            return Err(Error::Daemon(format!(
+                "trailing garbage in frame: {} of {} bytes consumed",
+                self.at,
+                self.buf.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn mode_to_u8(m: OpenMode) -> u8 {
+    match m {
+        OpenMode::Read => 0,
+        OpenMode::Write => 1,
+        OpenMode::ReadWrite => 2,
+        OpenMode::Append => 3,
+    }
+}
+
+fn mode_from_u8(b: u8) -> Result<OpenMode> {
+    Ok(match b {
+        0 => OpenMode::Read,
+        1 => OpenMode::Write,
+        2 => OpenMode::ReadWrite,
+        3 => OpenMode::Append,
+        other => return Err(Error::Daemon(format!("bad open mode byte {other}"))),
+    })
+}
+
+/// The wire order of [`MgmtCounters`]' fields. Count-prefixed on the
+/// wire so a field appended in a later revision decodes as zero on an
+/// older peer instead of desynchronizing the frame.
+fn counters_to_fields(c: &MgmtCounters) -> Vec<u64> {
+    vec![
+        c.flushes,
+        c.evictions,
+        c.self_spills,
+        c.victim_spills,
+        c.promotions,
+        c.prefetched,
+        c.flush_bytes,
+        c.spill_bytes,
+        c.promote_bytes,
+        c.prefetch_bytes,
+        c.flush_physical_bytes,
+        c.spill_physical_bytes,
+        c.promote_physical_bytes,
+        c.prefetch_physical_bytes,
+        c.peak_copy_buffer_bytes,
+        c.page_faults,
+        c.page_hits,
+        c.page_evictions,
+        c.page_writeback_bytes,
+        c.page_shared_hits,
+        c.page_frames_deduped,
+        c.page_resident_bytes,
+        c.page_peak_resident_bytes,
+    ]
+}
+
+fn counters_from_fields(f: &[u64]) -> MgmtCounters {
+    let g = |i: usize| f.get(i).copied().unwrap_or(0);
+    MgmtCounters {
+        flushes: g(0),
+        evictions: g(1),
+        self_spills: g(2),
+        victim_spills: g(3),
+        promotions: g(4),
+        prefetched: g(5),
+        flush_bytes: g(6),
+        spill_bytes: g(7),
+        promote_bytes: g(8),
+        prefetch_bytes: g(9),
+        flush_physical_bytes: g(10),
+        spill_physical_bytes: g(11),
+        promote_physical_bytes: g(12),
+        prefetch_physical_bytes: g(13),
+        peak_copy_buffer_bytes: g(14),
+        page_faults: g(15),
+        page_hits: g(16),
+        page_evictions: g(17),
+        page_writeback_bytes: g(18),
+        page_shared_hits: g(19),
+        page_frames_deduped: g(20),
+        page_resident_bytes: g(21),
+        page_peak_resident_bytes: g(22),
+    }
+}
+
+// --- request ---------------------------------------------------------------
+
+impl Request {
+    /// Serialize into a frame payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(32);
+        match self {
+            Request::Hello { version } => {
+                put_u8(&mut b, OP_HELLO);
+                put_u32(&mut b, *version);
+            }
+            Request::Open { mode, path } => {
+                put_u8(&mut b, OP_OPEN);
+                put_u8(&mut b, mode_to_u8(*mode));
+                put_str(&mut b, path);
+            }
+            Request::Pread { handle, off, len } => {
+                put_u8(&mut b, OP_PREAD);
+                put_u64(&mut b, *handle);
+                put_u64(&mut b, *off);
+                put_u32(&mut b, *len);
+            }
+            Request::Pwrite { handle, off, data } => {
+                put_u8(&mut b, OP_PWRITE);
+                put_u64(&mut b, *handle);
+                put_u64(&mut b, *off);
+                put_bytes(&mut b, data);
+            }
+            Request::SetLen { handle, len } => {
+                put_u8(&mut b, OP_SET_LEN);
+                put_u64(&mut b, *handle);
+                put_u64(&mut b, *len);
+            }
+            Request::Fsync { handle } => {
+                put_u8(&mut b, OP_FSYNC);
+                put_u64(&mut b, *handle);
+            }
+            Request::Close { handle } => {
+                put_u8(&mut b, OP_CLOSE);
+                put_u64(&mut b, *handle);
+            }
+            Request::Len { handle } => {
+                put_u8(&mut b, OP_LEN);
+                put_u64(&mut b, *handle);
+            }
+            Request::Stat { path } => {
+                put_u8(&mut b, OP_STAT);
+                put_str(&mut b, path);
+            }
+            Request::Readdir { path } => {
+                put_u8(&mut b, OP_READDIR);
+                put_str(&mut b, path);
+            }
+            Request::Rename { from, to } => {
+                put_u8(&mut b, OP_RENAME);
+                put_str(&mut b, from);
+                put_str(&mut b, to);
+            }
+            Request::Unlink { path } => {
+                put_u8(&mut b, OP_UNLINK);
+                put_str(&mut b, path);
+            }
+            Request::MapSync { handle } => {
+                put_u8(&mut b, OP_MAP_SYNC);
+                put_u64(&mut b, *handle);
+            }
+            Request::NoteFault { handle, off, len } => {
+                put_u8(&mut b, OP_NOTE_FAULT);
+                put_u64(&mut b, *handle);
+                put_u64(&mut b, *off);
+                put_u64(&mut b, *len);
+            }
+            Request::Counters => put_u8(&mut b, OP_COUNTERS),
+            Request::SyncMgmt => put_u8(&mut b, OP_SYNC_MGMT),
+        }
+        b
+    }
+
+    /// Parse a frame payload.
+    pub fn decode(buf: &[u8]) -> Result<Request> {
+        let mut c = Cur::new(buf);
+        let op = c.u8()?;
+        let req = match op {
+            OP_HELLO => Request::Hello { version: c.u32()? },
+            OP_OPEN => {
+                let mode = mode_from_u8(c.u8()?)?;
+                Request::Open { mode, path: c.str()? }
+            }
+            OP_PREAD => Request::Pread { handle: c.u64()?, off: c.u64()?, len: c.u32()? },
+            OP_PWRITE => {
+                Request::Pwrite { handle: c.u64()?, off: c.u64()?, data: c.bytes()? }
+            }
+            OP_SET_LEN => Request::SetLen { handle: c.u64()?, len: c.u64()? },
+            OP_FSYNC => Request::Fsync { handle: c.u64()? },
+            OP_CLOSE => Request::Close { handle: c.u64()? },
+            OP_LEN => Request::Len { handle: c.u64()? },
+            OP_STAT => Request::Stat { path: c.str()? },
+            OP_READDIR => Request::Readdir { path: c.str()? },
+            OP_RENAME => Request::Rename { from: c.str()?, to: c.str()? },
+            OP_UNLINK => Request::Unlink { path: c.str()? },
+            OP_MAP_SYNC => Request::MapSync { handle: c.u64()? },
+            OP_NOTE_FAULT => {
+                Request::NoteFault { handle: c.u64()?, off: c.u64()?, len: c.u64()? }
+            }
+            OP_COUNTERS => Request::Counters,
+            OP_SYNC_MGMT => Request::SyncMgmt,
+            other => return Err(Error::Daemon(format!("unknown opcode {other:#x}"))),
+        };
+        c.done()?;
+        Ok(req)
+    }
+
+    /// May this request be transparently retried on a fresh connection
+    /// after a mid-request connection loss? Only reads and probes —
+    /// a lost mutating request may or may not have been applied, so it
+    /// must surface [`Error::DaemonGone`] instead.
+    pub fn idempotent(&self) -> bool {
+        matches!(
+            self,
+            Request::Hello { .. }
+                | Request::Pread { .. }
+                | Request::Len { .. }
+                | Request::Stat { .. }
+                | Request::Readdir { .. }
+                | Request::MapSync { .. }
+                | Request::NoteFault { .. }
+                | Request::Counters
+        )
+    }
+}
+
+// --- response --------------------------------------------------------------
+
+const BODY_UNIT: u8 = 0;
+const BODY_HELLO: u8 = 1;
+const BODY_OPEN: u8 = 2;
+const BODY_DATA: u8 = 3;
+const BODY_WRITTEN: u8 = 4;
+const BODY_SIZE: u8 = 5;
+const BODY_NAMES: u8 = 6;
+const BODY_COUNTERS: u8 = 7;
+
+impl Response {
+    /// A success response.
+    pub fn ok(gen: u64, body: Body) -> Response {
+        Response { gen, body: Ok(body) }
+    }
+
+    /// An error response carrying a typed daemon-side failure.
+    pub fn err(gen: u64, e: &Error) -> Response {
+        Response { gen, body: Err(WireError::from_error(e)) }
+    }
+
+    /// An error response from an explicit wire code (protocol-level
+    /// failures that never existed as a daemon [`Error`]).
+    pub fn err_code(code: ErrCode, msg: impl Into<String>) -> Response {
+        Response {
+            gen: 0,
+            body: Err(WireError {
+                code,
+                msg: msg.into(),
+                path: String::new(),
+                a: 0,
+                b: 0,
+            }),
+        }
+    }
+
+    /// Serialize into a frame payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(32);
+        match &self.body {
+            Ok(body) => {
+                put_u8(&mut b, 0);
+                put_u64(&mut b, self.gen);
+                match body {
+                    Body::Unit => put_u8(&mut b, BODY_UNIT),
+                    Body::Hello { version } => {
+                        put_u8(&mut b, BODY_HELLO);
+                        put_u32(&mut b, *version);
+                    }
+                    Body::Open { handle, ident } => {
+                        put_u8(&mut b, BODY_OPEN);
+                        put_u64(&mut b, *handle);
+                        match ident {
+                            Some(i) => {
+                                put_u8(&mut b, 1);
+                                put_u128(&mut b, *i);
+                            }
+                            None => put_u8(&mut b, 0),
+                        }
+                    }
+                    Body::Data(d) => {
+                        put_u8(&mut b, BODY_DATA);
+                        put_bytes(&mut b, d);
+                    }
+                    Body::Written(n) => {
+                        put_u8(&mut b, BODY_WRITTEN);
+                        put_u32(&mut b, *n);
+                    }
+                    Body::Size(n) => {
+                        put_u8(&mut b, BODY_SIZE);
+                        put_u64(&mut b, *n);
+                    }
+                    Body::Names(names) => {
+                        put_u8(&mut b, BODY_NAMES);
+                        put_u32(&mut b, names.len() as u32);
+                        for n in names {
+                            put_str(&mut b, n);
+                        }
+                    }
+                    Body::Counters(c) => {
+                        put_u8(&mut b, BODY_COUNTERS);
+                        put_str(&mut b, &c.engine);
+                        put_u32(&mut b, c.ledger.len() as u32);
+                        for l in &c.ledger {
+                            put_str(&mut b, &l.name);
+                            put_u8(&mut b, l.tier);
+                            put_u64(&mut b, l.capacity);
+                            put_u64(&mut b, l.free);
+                            put_u64(&mut b, l.used);
+                            put_u64(&mut b, l.debits);
+                            put_u64(&mut b, l.credits);
+                            put_u64(&mut b, l.logical);
+                        }
+                        let fields = counters_to_fields(&c.counters);
+                        put_u32(&mut b, fields.len() as u32);
+                        for f in fields {
+                            put_u64(&mut b, f);
+                        }
+                        put_u64(&mut b, c.clients_connected);
+                        put_u64(&mut b, c.clients_total);
+                        put_u64(&mut b, c.open_handles);
+                        put_u64(&mut b, c.ops_served);
+                    }
+                }
+            }
+            Err(we) => {
+                put_u8(&mut b, 1);
+                put_u64(&mut b, self.gen);
+                put_u8(&mut b, we.code as u8);
+                put_str(&mut b, &we.msg);
+                put_str(&mut b, &we.path);
+                put_u64(&mut b, we.a);
+                put_u64(&mut b, we.b);
+            }
+        }
+        b
+    }
+
+    /// Parse a frame payload.
+    pub fn decode(buf: &[u8]) -> Result<Response> {
+        let mut c = Cur::new(buf);
+        let status = c.u8()?;
+        let gen = c.u64()?;
+        if status == 1 {
+            let code = ErrCode::from_u8(c.u8()?);
+            let msg = c.str()?;
+            let path = c.str()?;
+            let a = c.u64()?;
+            let b = c.u64()?;
+            c.done()?;
+            return Ok(Response { gen, body: Err(WireError { code, msg, path, a, b }) });
+        }
+        let tag = c.u8()?;
+        let body = match tag {
+            BODY_UNIT => Body::Unit,
+            BODY_HELLO => Body::Hello { version: c.u32()? },
+            BODY_OPEN => {
+                let handle = c.u64()?;
+                let ident = match c.u8()? {
+                    0 => None,
+                    _ => Some(c.u128()?),
+                };
+                Body::Open { handle, ident }
+            }
+            BODY_DATA => Body::Data(c.bytes()?),
+            BODY_WRITTEN => Body::Written(c.u32()?),
+            BODY_SIZE => Body::Size(c.u64()?),
+            BODY_NAMES => {
+                let n = c.u32()? as usize;
+                if n > MAX_FRAME / 4 {
+                    return Err(Error::Daemon(format!("oversized name list: {n}")));
+                }
+                let mut names = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    names.push(c.str()?);
+                }
+                Body::Names(names)
+            }
+            BODY_COUNTERS => {
+                let engine = c.str()?;
+                let nl = c.u32()? as usize;
+                if nl > 4096 {
+                    return Err(Error::Daemon(format!("oversized ledger: {nl}")));
+                }
+                let mut ledger = Vec::with_capacity(nl);
+                for _ in 0..nl {
+                    ledger.push(DeviceLedger {
+                        name: c.str()?,
+                        tier: c.u8()?,
+                        capacity: c.u64()?,
+                        free: c.u64()?,
+                        used: c.u64()?,
+                        debits: c.u64()?,
+                        credits: c.u64()?,
+                        logical: c.u64()?,
+                    });
+                }
+                let nf = c.u32()? as usize;
+                if nf > 1024 {
+                    return Err(Error::Daemon(format!("oversized counter list: {nf}")));
+                }
+                let mut fields = Vec::with_capacity(nf);
+                for _ in 0..nf {
+                    fields.push(c.u64()?);
+                }
+                Body::Counters(Box::new(CountersReply {
+                    engine,
+                    ledger,
+                    counters: counters_from_fields(&fields),
+                    clients_connected: c.u64()?,
+                    clients_total: c.u64()?,
+                    open_handles: c.u64()?,
+                    ops_served: c.u64()?,
+                }))
+            }
+            other => return Err(Error::Daemon(format!("unknown body tag {other}"))),
+        };
+        c.done()?;
+        Ok(Response { gen, body: Ok(body) })
+    }
+}
+
+// --- frame I/O -------------------------------------------------------------
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    debug_assert!(payload.len() <= MAX_FRAME);
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame. An EOF before the first header byte
+/// returns `UnexpectedEof` with an empty message (clean close); any
+/// other short read is a protocol error.
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
+    let mut hdr = [0u8; 4];
+    r.read_exact(&mut hdr)?;
+    let n = u32::from_le_bytes(hdr) as usize;
+    if n > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {n} bytes exceeds MAX_FRAME"),
+        ));
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt_req(r: Request) {
+        let enc = r.encode();
+        assert_eq!(Request::decode(&enc).unwrap(), r, "request round-trip");
+    }
+
+    fn rt_resp(r: Response) {
+        let enc = r.encode();
+        assert_eq!(Response::decode(&enc).unwrap(), r, "response round-trip");
+    }
+
+    #[test]
+    fn requests_round_trip() {
+        rt_req(Request::Hello { version: PROTOCOL_VERSION });
+        rt_req(Request::Open { mode: OpenMode::Append, path: "/sea/a/b.dat".into() });
+        rt_req(Request::Pread { handle: 7, off: 1 << 40, len: 4096 });
+        rt_req(Request::Pwrite { handle: 7, off: 0, data: vec![1, 2, 3] });
+        rt_req(Request::Pwrite { handle: 1, off: 9, data: Vec::new() });
+        rt_req(Request::SetLen { handle: 3, len: 12 });
+        rt_req(Request::Fsync { handle: 3 });
+        rt_req(Request::Close { handle: u64::MAX });
+        rt_req(Request::Len { handle: 9 });
+        rt_req(Request::Stat { path: "/sea/x".into() });
+        rt_req(Request::Readdir { path: "/sea".into() });
+        rt_req(Request::Rename { from: "/sea/a".into(), to: "/sea/b".into() });
+        rt_req(Request::Unlink { path: "/sea/a".into() });
+        rt_req(Request::MapSync { handle: 2 });
+        rt_req(Request::NoteFault { handle: 2, off: 64, len: 4096 });
+        rt_req(Request::Counters);
+        rt_req(Request::SyncMgmt);
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        rt_resp(Response::ok(0, Body::Unit));
+        rt_resp(Response::ok(3, Body::Hello { version: 1 }));
+        rt_resp(Response::ok(9, Body::Open { handle: 4, ident: Some(1 << 90) }));
+        rt_resp(Response::ok(9, Body::Open { handle: 4, ident: None }));
+        rt_resp(Response::ok(1, Body::Data(vec![0xAB; 100])));
+        rt_resp(Response::ok(1, Body::Written(77)));
+        rt_resp(Response::ok(0, Body::Size(u64::MAX / 3)));
+        rt_resp(Response::ok(0, Body::Names(vec!["a.dat".into(), "b".into()])));
+        rt_resp(Response::err_code(ErrCode::VersionMismatch, "daemon speaks 2"));
+    }
+
+    #[test]
+    fn counters_round_trip() {
+        let reply = CountersReply {
+            engine: "temperature".into(),
+            ledger: vec![DeviceLedger {
+                name: "/dev/shm/t0".into(),
+                tier: 0,
+                capacity: 100,
+                free: 40,
+                used: 60,
+                debits: 80,
+                credits: 20,
+                logical: 90,
+            }],
+            counters: MgmtCounters {
+                flushes: 1,
+                self_spills: 2,
+                page_peak_resident_bytes: 1 << 33,
+                ..Default::default()
+            },
+            clients_connected: 3,
+            clients_total: 11,
+            open_handles: 5,
+            ops_served: 400,
+        };
+        let r = Response::ok(0, Body::Counters(Box::new(reply.clone())));
+        let dec = Response::decode(&r.encode()).unwrap();
+        match dec.body.unwrap() {
+            Body::Counters(c) => {
+                assert_eq!(*c, reply);
+                assert_eq!(c.counters.self_spills, 2);
+            }
+            other => panic!("wrong body: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn typed_errors_survive_the_wire() {
+        let e = Error::NotFound(PathBuf::from("/sea/missing"));
+        let r = Response::err(0, &e);
+        let dec = Response::decode(&r.encode()).unwrap();
+        match dec.body.unwrap_err().into_error() {
+            Error::NotFound(p) => assert_eq!(p, PathBuf::from("/sea/missing")),
+            other => panic!("wrong error: {other}"),
+        }
+        let e = Error::NoSpace { path: "/sea/f".into(), needed: 9, largest_free: 4 };
+        let dec = Response::decode(&Response::err(0, &e).encode()).unwrap();
+        match dec.body.unwrap_err().into_error() {
+            Error::NoSpace { needed, largest_free, .. } => {
+                assert_eq!((needed, largest_free), (9, 4));
+            }
+            other => panic!("wrong error: {other}"),
+        }
+    }
+
+    #[test]
+    fn garbage_frames_are_typed_errors_not_panics() {
+        assert!(Request::decode(&[]).is_err());
+        assert!(Request::decode(&[0xFF]).is_err());
+        assert!(Request::decode(&[OP_PREAD, 1, 2]).is_err(), "truncated operands");
+        // trailing garbage is rejected, not silently ignored
+        let mut enc = Request::Fsync { handle: 1 }.encode();
+        enc.push(0);
+        assert!(Request::decode(&enc).is_err());
+        assert!(Response::decode(&[0]).is_err());
+        // oversized embedded string length
+        let mut b = vec![OP_STAT];
+        b.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(Request::decode(&b).is_err());
+    }
+
+    #[test]
+    fn frame_io_round_trips_and_caps() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        let mut rd = &buf[..];
+        assert_eq!(read_frame(&mut rd).unwrap(), b"hello");
+        // an oversized header is refused before allocating
+        let mut bad = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+        bad.extend_from_slice(&[0; 8]);
+        let mut rd = &bad[..];
+        assert!(read_frame(&mut rd).is_err());
+    }
+
+    #[test]
+    fn idempotence_classification() {
+        assert!(Request::Pread { handle: 1, off: 0, len: 1 }.idempotent());
+        assert!(Request::Stat { path: "x".into() }.idempotent());
+        assert!(Request::MapSync { handle: 1 }.idempotent());
+        assert!(!Request::Pwrite { handle: 1, off: 0, data: vec![] }.idempotent());
+        assert!(!Request::SetLen { handle: 1, len: 0 }.idempotent());
+        assert!(!Request::Unlink { path: "x".into() }.idempotent());
+        assert!(!Request::Rename { from: "x".into(), to: "y".into() }.idempotent());
+        assert!(!Request::SyncMgmt.idempotent());
+    }
+}

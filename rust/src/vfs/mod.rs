@@ -41,6 +41,11 @@
 //!   (`SeaTuning::engine` selects `paper` or `temperature`), the same
 //!   trait the simulator policies drive.
 //!
+//! * [`remote::RemoteFs`] — the **service transport**: every operation
+//!   rides the [`crate::serve`] wire protocol to a `sea serve` daemon
+//!   over a Unix socket, so many processes share one mounted `SeaFs`
+//!   (one placement brain, one ledger, one page budget).
+//!
 //! Decorators compose: a `SeaFs` mounted over
 //! `RateLimitedFs<StripedFs>` emulates a loaded, OST-striped Lustre.
 //!
@@ -90,6 +95,7 @@ pub mod mover;
 pub mod pages;
 pub mod rate;
 pub mod real;
+pub mod remote;
 pub mod sea;
 pub mod striped;
 
@@ -98,6 +104,7 @@ pub use mover::{copy_range, CodecMode, DataMover, MovePath, MoverCfg, MoverMetri
 pub use pages::{MapMode, MappedView, PageCache, PageCacheStats};
 pub use rate::RateLimitedFs;
 pub use real::RealFs;
+pub use remote::{RemoteFile, RemoteFs, RetryCfg};
 pub use sea::{DeviceLedger, DeviceSpec, MgmtCounters, SeaFs, SeaFsConfig, SeaTuning};
 pub use striped::StripedFs;
 

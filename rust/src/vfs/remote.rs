@@ -1,0 +1,579 @@
+//! `RemoteFs`: the client side of [`crate::serve`] — a [`Vfs`] whose
+//! every operation rides the Sea service wire protocol to a `sea
+//! serve` daemon over a Unix domain socket.
+//!
+//! One `RemoteFs` is one OS-level connection (plus the handshake); all
+//! of its [`RemoteFile`] handles multiplex over it behind a mutex, so
+//! a process that opens fifty files still costs the daemon one
+//! connection thread. Separate `RemoteFs` instances are fully
+//! independent clients — the integration tests use eight of them to
+//! prove cross-process append atomicity.
+//!
+//! ## Frame format (see [`crate::serve::protocol`] for the encoding)
+//!
+//! | frame    | layout                                         |
+//! |----------|------------------------------------------------|
+//! | any      | `[u32 len][payload…]`, little-endian           |
+//! | request  | `[opcode u8][operands…]`                       |
+//! | response | `[status u8][gen u64][body…]`                  |
+//!
+//! Every response piggybacks the daemon-side map generation of the
+//! touched handle ([`RemoteFile::generation`] caches it); a bump means
+//! another client's write spilled the file and any locally cached
+//! pages for it are stale. [`RemoteFile::map_sync`] forwards the
+//! explicit `MapSync` round trip, so [`MappedView`]s over a
+//! `RemoteFile` invalidate exactly like local views over a `SeaFile`.
+//!
+//! ## Failure semantics
+//!
+//! Connects retry with capped exponential backoff + jitter
+//! ([`RetryCfg`]). After a mid-request connection loss, *idempotent*
+//! requests (pread/len/stat/readdir/map-sync) transparently reconnect
+//! and retry once — read-only handles even reopen themselves by path —
+//! while mutating requests surface [`Error::DaemonGone`] immediately:
+//! a lost pwrite may or may not have been applied, and guessing is
+//! worse than failing. Nothing in this module blocks forever on a dead
+//! daemon and nothing panics.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::serve::protocol::{
+    read_frame, write_frame, Body, CountersReply, Request, Response, MAX_IO,
+    PROTOCOL_VERSION,
+};
+use crate::util::rng::Rng;
+use crate::vfs::{OpenMode, Vfs, VfsFile};
+
+/// Connect/retry policy: capped exponential backoff with jitter.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryCfg {
+    /// Connection attempts before giving up (min 1).
+    pub attempts: u32,
+    /// Backoff before the second attempt; doubles each retry.
+    pub base: Duration,
+    /// Ceiling on any single backoff sleep.
+    pub cap: Duration,
+}
+
+impl Default for RetryCfg {
+    fn default() -> RetryCfg {
+        RetryCfg {
+            attempts: 5,
+            base: Duration::from_millis(20),
+            cap: Duration::from_millis(500),
+        }
+    }
+}
+
+impl RetryCfg {
+    /// Backoff before attempt `i` (0-based): `min(cap, base·2^(i-1))`
+    /// plus up to 50% jitter so a herd of clients reconnecting to a
+    /// restarted daemon does not stampede in lockstep.
+    fn backoff(&self, i: u32, rng: &mut Rng) -> Duration {
+        if i == 0 {
+            return Duration::ZERO;
+        }
+        let exp = self.base.saturating_mul(1u32 << (i - 1).min(16));
+        let capped = exp.min(self.cap);
+        let jitter_ns = (capped.as_nanos() as u64 / 2).max(1);
+        capped + Duration::from_nanos(rng.next_u64() % jitter_ns)
+    }
+}
+
+/// One live, handshaken connection.
+struct Conn {
+    reader: BufReader<UnixStream>,
+    writer: BufWriter<UnixStream>,
+}
+
+impl Conn {
+    fn dial_once(socket: &Path) -> std::io::Result<Conn> {
+        let stream = UnixStream::connect(socket)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        let mut conn = Conn { reader, writer: BufWriter::new(stream) };
+        let resp = conn.call(&Request::Hello { version: PROTOCOL_VERSION })?;
+        match resp.body {
+            Ok(Body::Hello { .. }) => Ok(conn),
+            Ok(other) => Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("bad handshake reply: {other:?}"),
+            )),
+            // Version mismatch & co.: surface the daemon's words.
+            Err(we) => Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionRefused,
+                we.into_error().to_string(),
+            )),
+        }
+    }
+
+    /// One request/response round trip. Any I/O error means the
+    /// connection is dead and must be discarded.
+    fn call(&mut self, req: &Request) -> std::io::Result<Response> {
+        write_frame(&mut self.writer, &req.encode())?;
+        self.writer.flush()?;
+        let frame = read_frame(&mut self.reader)?;
+        Response::decode(&frame)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+    }
+}
+
+/// The connection slot shared by a `RemoteFs` and its files. `epoch`
+/// counts successful dials: a handle opened on epoch N is dead once
+/// the slot moves past N (the daemon's per-connection handle table
+/// died with the old socket).
+struct Slot {
+    conn: Option<Conn>,
+    epoch: u64,
+}
+
+struct Inner {
+    socket: PathBuf,
+    retry: RetryCfg,
+    slot: Mutex<Slot>,
+    rng: Mutex<Rng>,
+}
+
+impl Inner {
+    /// Ensure the slot holds a live connection, dialing with backoff
+    /// if not. Returns the slot's current epoch.
+    fn ensure_connected(&self, slot: &mut Slot) -> Result<u64> {
+        if slot.conn.is_some() {
+            return Ok(slot.epoch);
+        }
+        let mut last: Option<std::io::Error> = None;
+        for i in 0..self.retry.attempts.max(1) {
+            let nap = { self.retry.backoff(i, &mut self.rng.lock().unwrap()) };
+            if !nap.is_zero() {
+                std::thread::sleep(nap);
+            }
+            match Conn::dial_once(&self.socket) {
+                Ok(c) => {
+                    slot.conn = Some(c);
+                    slot.epoch += 1;
+                    return Ok(slot.epoch);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(Error::DaemonGone(format!(
+            "connect to {} failed after {} attempts: {}",
+            self.socket.display(),
+            self.retry.attempts.max(1),
+            last.map(|e| e.to_string()).unwrap_or_default()
+        )))
+    }
+
+    /// One round trip with reconnect-and-retry-once semantics for
+    /// idempotent requests. Mutating requests that lose the connection
+    /// mid-flight surface [`Error::DaemonGone`].
+    fn call(&self, req: &Request) -> Result<Response> {
+        let mut slot = self.slot.lock().unwrap();
+        self.call_locked(&mut slot, req)
+    }
+
+    fn call_locked(&self, slot: &mut Slot, req: &Request) -> Result<Response> {
+        self.ensure_connected(slot)?;
+        match slot.conn.as_mut().unwrap().call(req) {
+            Ok(resp) => Ok(resp),
+            Err(first) => {
+                slot.conn = None;
+                if !req.idempotent() {
+                    return Err(Error::DaemonGone(format!(
+                        "connection lost mid-request ({first}); not retrying a mutating op"
+                    )));
+                }
+                self.ensure_connected(slot)?;
+                slot.conn.as_mut().unwrap().call(req).map_err(|e| {
+                    slot.conn = None;
+                    Error::DaemonGone(format!("retry after reconnect failed: {e}"))
+                })
+            }
+        }
+    }
+}
+
+/// A [`Vfs`] served by a `sea serve` daemon over a Unix socket.
+pub struct RemoteFs {
+    inner: Arc<Inner>,
+}
+
+impl RemoteFs {
+    /// Connect to the daemon at `socket` with default retry policy.
+    pub fn connect(socket: impl Into<PathBuf>) -> Result<RemoteFs> {
+        RemoteFs::connect_with(socket, RetryCfg::default())
+    }
+
+    /// Connect with an explicit retry policy.
+    pub fn connect_with(socket: impl Into<PathBuf>, retry: RetryCfg) -> Result<RemoteFs> {
+        let socket = socket.into();
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos() as u64)
+            .unwrap_or(0);
+        let seed = (std::process::id() as u64) << 32 | nanos;
+        let inner = Arc::new(Inner {
+            socket,
+            retry,
+            slot: Mutex::new(Slot { conn: None, epoch: 0 }),
+            rng: Mutex::new(Rng::new(seed)),
+        });
+        // Dial eagerly so a bad socket path fails at construction, not
+        // on the first I/O.
+        {
+            let mut slot = inner.slot.lock().unwrap();
+            inner.ensure_connected(&mut slot)?;
+        }
+        Ok(RemoteFs { inner })
+    }
+
+    /// The socket this client targets.
+    pub fn socket(&self) -> &Path {
+        &self.inner.socket
+    }
+
+    /// [`Vfs::open`] returning the concrete handle type — the
+    /// interposer needs [`RemoteFile::generation`] /
+    /// [`RemoteFile::identity`], which a `Box<dyn VfsFile>` hides.
+    pub fn open_remote(&self, path: &Path, mode: OpenMode) -> Result<RemoteFile> {
+        open_on(&self.inner, path_str(path), mode)
+    }
+
+    /// Fetch the daemon's live counters, ledger, and client gauges
+    /// (`sea stat --connect`).
+    pub fn counters(&self) -> Result<CountersReply> {
+        match self.inner.call(&Request::Counters)?.body {
+            Ok(Body::Counters(c)) => Ok(*c),
+            Ok(other) => Err(Error::Daemon(format!("bad Counters reply: {other:?}"))),
+            Err(we) => Err(we.into_error()),
+        }
+    }
+}
+
+fn path_str(p: &Path) -> String {
+    p.to_string_lossy().into_owned()
+}
+
+/// Open `path` on the shared connection and build the handle.
+fn open_on(inner: &Arc<Inner>, path: String, mode: OpenMode) -> Result<RemoteFile> {
+    let req = Request::Open { mode, path: path.clone() };
+    let mut slot = inner.slot.lock().unwrap();
+    let resp = inner.call_locked(&mut slot, &req)?;
+    let epoch = slot.epoch;
+    drop(slot);
+    match resp.body {
+        Ok(Body::Open { handle, ident }) => Ok(RemoteFile {
+            inner: inner.clone(),
+            handle,
+            epoch,
+            path,
+            mode,
+            gen: resp.gen,
+            ident,
+        }),
+        Ok(other) => Err(Error::Daemon(format!("bad Open reply: {other:?}"))),
+        Err(we) => Err(we.into_error()),
+    }
+}
+
+impl Vfs for RemoteFs {
+    fn open(&self, path: &Path, mode: OpenMode) -> Result<Box<dyn VfsFile>> {
+        Ok(Box::new(self.open_remote(path, mode)?))
+    }
+
+    fn unlink(&self, path: &Path) -> Result<()> {
+        match self.inner.call(&Request::Unlink { path: path_str(path) })?.body {
+            Ok(_) => Ok(()),
+            Err(we) => Err(we.into_error()),
+        }
+    }
+
+    fn exists(&self, path: &Path) -> bool {
+        match self.inner.call(&Request::Stat { path: path_str(path) }) {
+            Ok(resp) => resp.body.is_ok(),
+            Err(_) => false,
+        }
+    }
+
+    fn size(&self, path: &Path) -> Result<u64> {
+        match self.inner.call(&Request::Stat { path: path_str(path) })?.body {
+            Ok(Body::Size(n)) => Ok(n),
+            Ok(other) => Err(Error::Daemon(format!("bad Stat reply: {other:?}"))),
+            Err(we) => Err(we.into_error()),
+        }
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> Result<()> {
+        let req = Request::Rename { from: path_str(from), to: path_str(to) };
+        match self.inner.call(&req)?.body {
+            Ok(_) => Ok(()),
+            Err(we) => Err(we.into_error()),
+        }
+    }
+
+    fn readdir(&self, path: &Path) -> Result<Vec<String>> {
+        match self.inner.call(&Request::Readdir { path: path_str(path) })?.body {
+            Ok(Body::Names(names)) => Ok(names),
+            Ok(other) => Err(Error::Daemon(format!("bad Readdir reply: {other:?}"))),
+            Err(we) => Err(we.into_error()),
+        }
+    }
+
+    fn sync_mgmt(&self) -> Result<()> {
+        match self.inner.call(&Request::SyncMgmt)?.body {
+            Ok(_) => Ok(()),
+            Err(we) => Err(we.into_error()),
+        }
+    }
+}
+
+/// A [`VfsFile`] whose bytes live behind the daemon.
+pub struct RemoteFile {
+    inner: Arc<Inner>,
+    handle: u64,
+    /// Slot epoch this handle was opened on; a later epoch means the
+    /// daemon-side handle table died with the old connection.
+    epoch: u64,
+    path: String,
+    mode: OpenMode,
+    /// Last piggybacked daemon-side map generation.
+    gen: u64,
+    /// Daemon-side frame-sharing identity from `Open`.
+    ident: Option<u128>,
+}
+
+impl RemoteFile {
+    /// Last daemon-side map generation piggybacked on a response. A
+    /// change since the caller last looked means another client moved
+    /// the file (spill) — locally cached pages for it are stale.
+    pub fn generation(&self) -> u64 {
+        self.gen
+    }
+
+    /// The daemon handle's frame-sharing identity (see
+    /// [`VfsFile::map_identity`]); `None` when the daemon backend
+    /// could not name one.
+    pub fn identity(&self) -> Option<u128> {
+        self.ident
+    }
+
+    /// Open an independent handle to the same path over the same
+    /// connection. The interposer's mmap emulation uses this for
+    /// write-back handles that must outlive the caller's descriptor
+    /// (correct across spills, too: the daemon-side handle follows the
+    /// registry to the file's new device).
+    pub fn sibling(&self, mode: OpenMode) -> Result<RemoteFile> {
+        open_on(&self.inner, self.path.clone(), mode)
+    }
+
+    /// Run `req` against this handle, healing a dead connection when
+    /// allowed: read-only handles reopen themselves by path and retry
+    /// idempotent requests once; writable handles surface
+    /// [`Error::DaemonGone`] (their daemon-side state is gone, and
+    /// silently reopening would drop append/truncate semantics).
+    fn call(&mut self, req: Request) -> Result<Response> {
+        let mut slot = self.inner.slot.lock().unwrap();
+        let cur = self.inner.ensure_connected(&mut slot)?;
+        if cur != self.epoch {
+            self.reopen(&mut slot)?;
+        }
+        // The reopen above may have changed our daemon-side handle id.
+        let req = req.rehandle(self.handle);
+        let resp = match slot.conn.as_mut().unwrap().call(&req) {
+            Ok(resp) => resp,
+            Err(first) => {
+                slot.conn = None;
+                if !(req.idempotent() && self.mode == OpenMode::Read) {
+                    return Err(Error::DaemonGone(format!(
+                        "connection lost mid-request on {} ({first})",
+                        self.path
+                    )));
+                }
+                self.inner.ensure_connected(&mut slot)?;
+                self.reopen(&mut slot)?;
+                let req = req.rehandle(self.handle);
+                slot.conn.as_mut().unwrap().call(&req).map_err(|e| {
+                    slot.conn = None;
+                    Error::DaemonGone(format!("retry after reconnect failed: {e}"))
+                })?
+            }
+        };
+        self.gen = resp.gen;
+        Ok(resp)
+    }
+
+    /// Re-open this handle's path on the current connection (read-only
+    /// handles after a reconnect).
+    fn reopen(&mut self, slot: &mut Slot) -> Result<()> {
+        if self.mode != OpenMode::Read {
+            return Err(Error::DaemonGone(format!(
+                "writable handle on {} lost with its connection",
+                self.path
+            )));
+        }
+        let req = Request::Open { mode: self.mode, path: self.path.clone() };
+        let resp = slot.conn.as_mut().unwrap().call(&req).map_err(|e| {
+            slot.conn = None;
+            Error::DaemonGone(format!("reopen of {} failed: {e}", self.path))
+        })?;
+        match resp.body {
+            Ok(Body::Open { handle, ident }) => {
+                self.handle = handle;
+                self.ident = ident;
+                self.epoch = slot.epoch;
+                self.gen = resp.gen;
+                Ok(())
+            }
+            Ok(other) => Err(Error::Daemon(format!("bad reopen reply: {other:?}"))),
+            Err(we) => Err(we.into_error()),
+        }
+    }
+}
+
+impl VfsFile for RemoteFile {
+    fn pread(&mut self, buf: &mut [u8], off: u64) -> Result<usize> {
+        let want = buf.len().min(MAX_IO) as u32;
+        let resp = self.call(Request::Pread { handle: self.handle, off, len: want })?;
+        match resp.body {
+            Ok(Body::Data(d)) => {
+                let n = d.len().min(buf.len());
+                buf[..n].copy_from_slice(&d[..n]);
+                Ok(n)
+            }
+            Ok(other) => Err(Error::Daemon(format!("bad Pread reply: {other:?}"))),
+            Err(we) => Err(we.into_error()),
+        }
+    }
+
+    fn pwrite(&mut self, data: &[u8], off: u64) -> Result<usize> {
+        // Clamp to one frame; `pwrite_all` loops over the short write.
+        let chunk = &data[..data.len().min(MAX_IO)];
+        let req =
+            Request::Pwrite { handle: self.handle, off, data: chunk.to_vec() };
+        match self.call(req)?.body {
+            Ok(Body::Written(n)) => Ok(n as usize),
+            Ok(other) => Err(Error::Daemon(format!("bad Pwrite reply: {other:?}"))),
+            Err(we) => Err(we.into_error()),
+        }
+    }
+
+    fn set_len(&mut self, len: u64) -> Result<()> {
+        match self.call(Request::SetLen { handle: self.handle, len })?.body {
+            Ok(_) => Ok(()),
+            Err(we) => Err(we.into_error()),
+        }
+    }
+
+    fn fsync(&mut self) -> Result<()> {
+        match self.call(Request::Fsync { handle: self.handle })?.body {
+            Ok(_) => Ok(()),
+            Err(we) => Err(we.into_error()),
+        }
+    }
+
+    fn len(&self) -> Result<u64> {
+        // `len` takes `&self`; route through the shared slot directly.
+        let req = Request::Len { handle: self.handle };
+        match self.inner.call(&req)?.body {
+            Ok(Body::Size(n)) => Ok(n),
+            Ok(other) => Err(Error::Daemon(format!("bad Len reply: {other:?}"))),
+            Err(we) => Err(we.into_error()),
+        }
+    }
+
+    fn map_sync(&mut self) -> Result<u64> {
+        let resp = self.call(Request::MapSync { handle: self.handle })?;
+        match resp.body {
+            Ok(_) => Ok(resp.gen),
+            Err(we) => Err(we.into_error()),
+        }
+    }
+
+    fn note_map_fault(&mut self, off: u64, len: u64) {
+        let _ = self.call(Request::NoteFault { handle: self.handle, off, len });
+    }
+
+    fn map_identity(&self) -> Option<u128> {
+        self.ident
+    }
+}
+
+impl Drop for RemoteFile {
+    fn drop(&mut self) {
+        // Best-effort close; the daemon reaps the handle with the
+        // connection anyway if this races a dead socket.
+        if let Ok(mut slot) = self.inner.slot.lock() {
+            if slot.epoch == self.epoch {
+                if let Some(conn) = slot.conn.as_mut() {
+                    if conn.call(&Request::Close { handle: self.handle }).is_err() {
+                        slot.conn = None;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Request {
+    /// The same request aimed at a different handle id (retry after a
+    /// reconnect re-opened the file under a new daemon-side id).
+    fn rehandle(self, handle: u64) -> Request {
+        match self {
+            Request::Pread { off, len, .. } => Request::Pread { handle, off, len },
+            Request::Pwrite { off, data, .. } => Request::Pwrite { handle, off, data },
+            Request::SetLen { len, .. } => Request::SetLen { handle, len },
+            Request::Fsync { .. } => Request::Fsync { handle },
+            Request::Close { .. } => Request::Close { handle },
+            Request::Len { .. } => Request::Len { handle },
+            Request::MapSync { .. } => Request::MapSync { handle },
+            Request::NoteFault { off, len, .. } => Request::NoteFault { handle, off, len },
+            other => other,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let cfg = RetryCfg {
+            attempts: 8,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(80),
+        };
+        let mut rng = Rng::new(7);
+        assert_eq!(cfg.backoff(0, &mut rng), Duration::ZERO);
+        let b1 = cfg.backoff(1, &mut rng);
+        assert!(b1 >= Duration::from_millis(10) && b1 < Duration::from_millis(16));
+        let b4 = cfg.backoff(4, &mut rng);
+        assert!(b4 >= Duration::from_millis(80), "uncapped exp: {b4:?}");
+        // cap + 50% jitter ceiling
+        assert!(b4 <= Duration::from_millis(121), "cap violated: {b4:?}");
+        let b30 = cfg.backoff(30, &mut rng); // shift clamp: no overflow
+        assert!(b30 <= Duration::from_millis(121));
+    }
+
+    #[test]
+    fn connect_to_missing_socket_is_typed_and_bounded() {
+        let cfg = RetryCfg {
+            attempts: 2,
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(2),
+        };
+        let t0 = std::time::Instant::now();
+        let err = RemoteFs::connect_with("/nonexistent/sea.sock", cfg);
+        match err {
+            Err(Error::DaemonGone(msg)) => {
+                assert!(msg.contains("2 attempts"), "got: {msg}")
+            }
+            other => panic!("expected DaemonGone, got {other:?}"),
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "retry must be bounded");
+    }
+}

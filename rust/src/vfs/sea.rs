@@ -274,7 +274,7 @@ pub struct SeaFsConfig {
 }
 
 /// One device's ledger joined with its hierarchy metadata (diagnostics).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct DeviceLedger {
     /// Device display name.
     pub name: String,

@@ -1,0 +1,291 @@
+//! Integration: `sea serve` daemon + `RemoteFs` clients over a real
+//! Unix socket.
+//!
+//! The acceptance claim of the service layer is that **separate
+//! OS-level connections share one placement brain**: every client's
+//! appends serialize behind the daemon's registry shard lock, one
+//! client's writes are immediately visible to another, and one
+//! client's spill invalidates every other client's mapped views via
+//! the map-generation piggyback. Each test spawns the daemon as a
+//! background thread on a tempdir socket — a real `UnixListener`,
+//! thread-per-connection, exactly the production path minus `fork`.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use sea::error::Error;
+use sea::placement::RuleSet;
+use sea::serve::{ServeCfg, Server};
+use sea::vfs::{
+    DeviceSpec, OpenMode, RealFs, RemoteFs, RetryCfg, SeaFs, SeaFsConfig, SeaTuning,
+    StripedFs, Vfs, VfsFile,
+};
+
+const MIB: u64 = 1024 * 1024;
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sea_daemon_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A Sea mount whose PFS is a chunk-striped `StripedFs` (stripe-mode
+/// files fan across members), with `tier0_cap` bytes of tier-0.
+fn stripe_mount(root: &Path, tier0_cap: u64, rules: RuleSet) -> Arc<SeaFs> {
+    let dirs: Vec<PathBuf> = (0..3).map(|i| root.join(format!("ost{i}"))).collect();
+    let pfs: Arc<dyn Vfs> = Arc::new(StripedFs::from_dirs_striped(dirs, 256 * 1024).unwrap());
+    Arc::new(
+        SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(root.join("tier0"), 0, tier0_cap).unwrap()],
+            pfs,
+            max_file_size: MIB,
+            parallel_procs: 1,
+            rules,
+            seed: 11,
+            tuning: SeaTuning::default(),
+        })
+        .unwrap(),
+    )
+}
+
+/// Snappy client policy: integration tests must fail fast, not ride
+/// the generous default backoff.
+fn fast_retry() -> RetryCfg {
+    RetryCfg {
+        attempts: 2,
+        base: Duration::from_millis(10),
+        cap: Duration::from_millis(50),
+    }
+}
+
+#[test]
+fn eight_client_connections_append_to_one_stripe_mode_file_without_interleaving() {
+    // Scenario 1: 8 OS-level connections, one shared append log. Every
+    // record must land contiguously — the daemon resolves each
+    // append's offset behind the registry shard lock, which is the
+    // whole point of serving the mount instead of sharing the library.
+    let root = scratch("append");
+    let sea = stripe_mount(&root, 64 * MIB, RuleSet::default());
+    let sock = root.join("sea.sock");
+    let server = Server::spawn(sea, ServeCfg::new(&sock)).unwrap();
+
+    const REC: usize = 64;
+    const PER: usize = 50;
+    const THREADS: usize = 8;
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let sock = sock.clone();
+            scope.spawn(move || {
+                // each thread is its own OS-level connection
+                let fs = RemoteFs::connect(&sock).unwrap();
+                let mut f = fs
+                    .open(Path::new("/sea/applog.bin"), OpenMode::Append)
+                    .unwrap();
+                for _ in 0..PER {
+                    f.pwrite_all(&[t as u8 + 1; REC], 0).unwrap();
+                }
+            });
+        }
+    });
+
+    // a ninth connection audits the log
+    let fs = RemoteFs::connect(&sock).unwrap();
+    let total = REC * PER * THREADS;
+    assert_eq!(
+        fs.size(Path::new("/sea/applog.bin")).unwrap(),
+        total as u64,
+        "no lost records"
+    );
+    let mut data = vec![0u8; total];
+    let mut f = fs.open(Path::new("/sea/applog.bin"), OpenMode::Read).unwrap();
+    f.pread_exact(&mut data, 0).unwrap();
+    let mut counts = [0usize; THREADS + 1];
+    for rec in data.chunks(REC) {
+        assert!(
+            rec.iter().all(|&b| b == rec[0]),
+            "interleaved record: {:?}",
+            &rec[..8]
+        );
+        counts[rec[0] as usize] += 1;
+    }
+    for t in 1..=THREADS {
+        assert_eq!(counts[t], PER, "client {t} lost records");
+    }
+
+    let c = fs.counters().unwrap();
+    assert!(c.clients_total >= 9, "daemon saw all connections: {}", c.clients_total);
+    drop(f);
+    drop(fs);
+    server.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn a_write_is_visible_to_another_clients_pread() {
+    // Scenario 2: cross-client read-your-writes — both clients resolve
+    // the file through the daemon's one registry.
+    let root = scratch("visible");
+    let sea = stripe_mount(&root, 16 * MIB, RuleSet::default());
+    let sock = root.join("sea.sock");
+    let server = Server::spawn(sea, ServeCfg::new(&sock)).unwrap();
+
+    let a = RemoteFs::connect(&sock).unwrap();
+    let b = RemoteFs::connect(&sock).unwrap();
+    let p = Path::new("/sea/shared.dat");
+    {
+        let mut fa = a.open(p, OpenMode::Write).unwrap();
+        fa.pwrite_all(b"written by A, observed by B", 0).unwrap();
+        fa.fsync().unwrap();
+    } // A's handle closes; the bytes stay with the daemon
+
+    assert!(b.exists(p), "B sees the file A created");
+    let mut fb = b.open(p, OpenMode::Read).unwrap();
+    let mut got = vec![0u8; 27];
+    fb.pread_exact(&mut got, 0).unwrap();
+    assert_eq!(&got, b"written by A, observed by B");
+
+    drop(fb);
+    server.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn a_spill_invalidates_another_clients_mapped_view() {
+    // Scenario 3: A outgrows tier-0 and the file self-spills to the
+    // PFS; B — a different OS connection holding a mapped view — must
+    // observe the map-generation bump on its next MapSync.
+    let root = scratch("spill");
+    // 2 MiB of tier-0, flush+evict everything: growing past capacity
+    // forces a self-spill mid-write (same mechanics the library's
+    // `pwrite_past_device_capacity_spills_to_pfs` proves in-process).
+    let sea = stripe_mount(&root, 2 * MIB, RuleSet::from_texts("**", "**", ""));
+    let sock = root.join("sea.sock");
+    let server = Server::spawn(sea, ServeCfg::new(&sock)).unwrap();
+
+    let a = RemoteFs::connect(&sock).unwrap();
+    let b = RemoteFs::connect(&sock).unwrap();
+    let p = Path::new("/sea/grow.dat");
+
+    let mut fa = a.open_remote(p, OpenMode::Write).unwrap();
+    fa.pwrite_all(&vec![1u8; MIB as usize], 0).unwrap();
+
+    // B maps the (still tier-0-resident) file and snapshots its gen
+    let mut fb = b.open_remote(p, OpenMode::Read).unwrap();
+    let g0 = fb.map_sync().unwrap();
+
+    // A grows the file past tier-0 capacity: the daemon spills it
+    for k in 1..4u64 {
+        fa.pwrite_all(&vec![(k + 1) as u8; MIB as usize], k * MIB).unwrap();
+    }
+    drop(fa);
+
+    let g1 = fb.map_sync().unwrap();
+    assert!(
+        g1 > g0,
+        "B's MapSync must see the spill A caused (gen {g0} -> {g1})"
+    );
+    let c = b.counters().unwrap();
+    assert!(c.counters.self_spills >= 1, "daemon recorded the spill: {:?}", c.counters);
+
+    // and B still reads coherent post-spill bytes
+    let mut tail = vec![0u8; MIB as usize];
+    fb.pread_exact(&mut tail, 3 * MIB).unwrap();
+    assert!(tail.iter().all(|&v| v == 4), "post-spill bytes read back");
+
+    drop(fb);
+    server.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn killing_the_daemon_mid_use_is_a_typed_error_not_a_hang() {
+    // Scenario 4: the daemon dies under a live client. Mutating ops
+    // surface `DaemonGone` immediately; idempotent ops retry with
+    // bounded backoff and then surface `DaemonGone` too. Nothing
+    // blocks forever.
+    let root = scratch("gone");
+    let served = root.join("served");
+    let sock = root.join("sea.sock");
+    let server = Server::spawn_vfs(
+        Arc::new(RealFs::new(&served).unwrap()),
+        None,
+        ServeCfg::new(&sock),
+    )
+    .unwrap();
+
+    let fs = RemoteFs::connect_with(&sock, fast_retry()).unwrap();
+    let p = Path::new("/sea/doomed.dat");
+    let mut writer = fs.open(p, OpenMode::ReadWrite).unwrap();
+    writer.pwrite_all(b"pre-shutdown", 0).unwrap();
+    let mut reader = fs.open(p, OpenMode::Read).unwrap();
+    let mut buf = [0u8; 12];
+    reader.pread_exact(&mut buf, 0).unwrap();
+    assert_eq!(&buf, b"pre-shutdown");
+
+    server.shutdown().unwrap(); // socket file removed, threads joined
+
+    let t0 = std::time::Instant::now();
+    match reader.pread(&mut buf, 0) {
+        Err(Error::DaemonGone(msg)) => {
+            assert!(!msg.is_empty(), "DaemonGone carries context")
+        }
+        other => panic!("pread against a dead daemon: expected DaemonGone, got {other:?}"),
+    }
+    match writer.pwrite(b"lost", 0) {
+        Err(Error::DaemonGone(_)) => {}
+        other => panic!("pwrite against a dead daemon: expected DaemonGone, got {other:?}"),
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "dead-daemon errors must be bounded, took {:?}",
+        t0.elapsed()
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn idle_reaped_read_clients_transparently_reconnect() {
+    // Satellite: the daemon reaps a client silent past the idle
+    // deadline; a read-only handle heals itself (reconnect + reopen by
+    // path) on its next request, while a writable handle — whose
+    // daemon-side state died with the connection — fails typed.
+    let root = scratch("reap");
+    let served = root.join("served");
+    let sock = root.join("sea.sock");
+    let cfg = ServeCfg {
+        socket: sock.clone(),
+        idle_timeout: Duration::from_millis(100),
+    };
+    let server =
+        Server::spawn_vfs(Arc::new(RealFs::new(&served).unwrap()), None, cfg).unwrap();
+
+    let fs = RemoteFs::connect_with(&sock, fast_retry()).unwrap();
+    let p = Path::new("/sea/nap.dat");
+    {
+        let mut f = fs.open(p, OpenMode::Write).unwrap();
+        f.pwrite_all(b"before the nap", 0).unwrap();
+    }
+    let mut reader = fs.open(p, OpenMode::Read).unwrap();
+    let mut writer = fs.open(p, OpenMode::ReadWrite).unwrap();
+    let mut buf = [0u8; 14];
+    reader.pread_exact(&mut buf, 0).unwrap();
+
+    // sleep well past the idle deadline: the daemon reaps the
+    // connection (and with it both daemon-side handles)
+    std::thread::sleep(Duration::from_millis(400));
+
+    reader.pread_exact(&mut buf, 0).unwrap();
+    assert_eq!(&buf, b"before the nap", "read handle healed across the reap");
+    match writer.pwrite(b"stale", 0) {
+        Err(Error::DaemonGone(_)) => {}
+        other => panic!("reaped writer: expected DaemonGone, got {other:?}"),
+    }
+
+    drop(reader);
+    drop(writer);
+    server.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
