@@ -10,8 +10,9 @@
 //! rate-limited striped PFS, emitting `BENCH_pagecache.json`), the
 //! cold-tier codec stage (on/off × corpus × chunk size, emitting
 //! `BENCH_compress.json`), and the service transport (the same mount
-//! pread in-process and through a `sea serve` daemon over a Unix
-//! socket, emitting `BENCH_remote.json`).
+//! pread in-process, over the `sea serve` wire, and through an
+//! `SCM_RIGHTS` fd lease, plus pipelined-vs-serialized handles on one
+//! connection, emitting `BENCH_remote.json`).
 //!
 //! `SEA_BENCH_SMOKE=1` runs only the tiny DataMover + PageCache +
 //! compress + remote sweeps — the CI smoke invocation that keeps the
@@ -450,12 +451,21 @@ fn compress_sweep(work: &Path, h: &mut Harness, smoke: bool) {
     }
 }
 
-/// Service-transport sweep: one Sea mount pread two ways — in-process
-/// (library calls) and through a `sea serve` daemon over a Unix domain
-/// socket (`RemoteFs`, the wire protocol's production path). Same
-/// offsets, same sizes {4 KiB, 64 KiB, 1 MiB}; the delta is the
-/// per-operation cost of framing + socket round trip. Emits
-/// `BENCH_remote.json`.
+/// Service-transport sweep: one Sea mount pread three ways — in-process
+/// (library calls), through a `sea serve` daemon with fd leases
+/// disabled (every pread is a framed round trip on the Unix socket),
+/// and through the default daemon where a read-only open of the
+/// tier-0-resident file hands back an `SCM_RIGHTS` fd lease and every
+/// pread becomes a local `pread(2)`. Same offsets, same sizes
+/// {4 KiB, 64 KiB, 1 MiB}. A fourth scenario measures the pipelined
+/// wire protocol: the same total op count issued serially on one
+/// handle vs concurrently on 8 handles multiplexed over one
+/// connection. Emits `BENCH_remote.json`.
+///
+/// Under `SEA_BENCH_SMOKE=1` the sweep doubles as the data-plane
+/// acceptance gate: leased preads must land within 1.5x of in-process
+/// reads, the 8-way pipelined run must beat the serialized one, and
+/// the daemon must have observed overlapping in-flight ops.
 fn remote_sweep(work: &Path, h: &mut Harness, smoke: bool) {
     let root = work.join("remote");
     let file_size: u64 = 2 * MIB;
@@ -466,7 +476,9 @@ fn remote_sweep(work: &Path, h: &mut Harness, smoke: bool) {
             mountpoint: PathBuf::from("/sea"),
             devices: vec![DeviceSpec::dir(root.join("dev0"), 0, 64 * MIB).expect("dev")],
             pfs,
-            max_file_size: MIB,
+            // keep the served file resident on the tier-0 device so the
+            // default daemon can lease its fd
+            max_file_size: 4 * MIB,
             parallel_procs: 1,
             rules: RuleSet::default(),
             seed: 3,
@@ -477,55 +489,164 @@ fn remote_sweep(work: &Path, h: &mut Harness, smoke: bool) {
     let payload: Vec<u8> = (0..file_size as usize).map(|k| (k % 251) as u8).collect();
     sea.write(Path::new("/sea/served.dat"), &payload).expect("payload");
 
-    let sock = root.join("bench.sock");
-    let server = Server::spawn(sea.clone(), ServeCfg::new(&sock)).expect("serve");
-    let remote = RemoteFs::connect(&sock).expect("connect");
+    // Two daemons over the same mount: the default one leases read fds,
+    // the other pins every read to the wire (`--no-leases`).
+    let sock_lease = root.join("bench_lease.sock");
+    let sock_wire = root.join("bench_wire.sock");
+    let srv_lease = Server::spawn(sea.clone(), ServeCfg::new(&sock_lease)).expect("serve");
+    let mut wire_cfg = ServeCfg::new(&sock_wire);
+    wire_cfg.lease_fds = false;
+    let srv_wire = Server::spawn(sea.clone(), wire_cfg).expect("serve");
+    let leased = RemoteFs::connect(&sock_lease).expect("connect leased");
+    let wire = RemoteFs::connect(&sock_wire).expect("connect wire");
 
     let sizes: [u64; 3] = [4 * KIB, 64 * KIB, MIB];
-    let mut rows: Vec<(u64, f64, f64)> = Vec::new();
+    let mut rows: Vec<(u64, f64, f64, f64)> = Vec::new();
     for &size in &sizes {
         let mut buf = vec![0u8; size as usize];
         let span = file_size - size; // keep every pread in-bounds
+        let off_at = |i: usize| (i as u64 * size) % (span + 1);
         // in-process: straight through the library
         let mut f = sea.open(Path::new("/sea/served.dat"), OpenMode::Read).expect("open");
         let t0 = Instant::now();
         for i in 0..reps {
-            let off = (i as u64 * size) % (span + 1);
-            f.pread_exact(&mut buf, off).expect("local pread");
+            f.pread_exact(&mut buf, off_at(i)).expect("local pread");
         }
-        let local_s = t0.elapsed().as_secs_f64();
-        // remote: identical preads through the wire protocol
-        let mut rf = remote
+        let inproc_s = t0.elapsed().as_secs_f64();
+        // wire: identical preads, each a framed round trip
+        let mut rf = wire
             .open(Path::new("/sea/served.dat"), OpenMode::Read)
-            .expect("remote open");
+            .expect("wire open");
         let t0 = Instant::now();
         for i in 0..reps {
-            let off = (i as u64 * size) % (span + 1);
-            rf.pread_exact(&mut buf, off).expect("remote pread");
+            rf.pread_exact(&mut buf, off_at(i)).expect("wire pread");
         }
-        let remote_s = t0.elapsed().as_secs_f64();
+        let wire_s = t0.elapsed().as_secs_f64();
+        // leased: identical preads served by pread(2) on the leased fd
+        let mut lf = leased
+            .open_remote(Path::new("/sea/served.dat"), OpenMode::Read)
+            .expect("leased open");
+        assert!(lf.has_lease(), "read-only open of a resident file should carry a lease");
+        let t0 = Instant::now();
+        for i in 0..reps {
+            lf.pread_exact(&mut buf, off_at(i)).expect("leased pread");
+        }
+        let leased_s = t0.elapsed().as_secs_f64();
         h.record(
             &format!("remote_pread_{size}b"),
-            vec![remote_s],
-            format!("inprocess {local_s:.6}s over {reps} preads"),
+            vec![wire_s],
+            format!("inprocess {inproc_s:.6}s, leased {leased_s:.6}s over {reps} preads"),
         );
-        rows.push((size, local_s, remote_s));
+        if smoke {
+            // Acceptance bound: a leased pread is a pread(2) plus a
+            // little bookkeeping, so it must stay within 1.5x of the
+            // in-process path (+1 ms of timer slack — smoke reps are
+            // tiny and both sides sit near clock granularity).
+            assert!(
+                leased_s <= inproc_s * 1.5 + 1e-3,
+                "leased preads ({leased_s:.6}s) exceed 1.5x in-process \
+                 ({inproc_s:.6}s) at {size}b"
+            );
+        }
+        rows.push((size, inproc_s, wire_s, leased_s));
     }
-    drop(remote);
-    server.shutdown().expect("shutdown");
+
+    // Pipelining: the same 8 x ops 64 KiB scattered preads issued two
+    // ways through the wire daemon — one handle, one round trip at a
+    // time, vs 8 handles multiplexed over the one shared connection
+    // with their requests in flight concurrently.
+    let ops: usize = if smoke { 32 } else { 256 };
+    let psize = 64 * KIB;
+    let pages = file_size / psize;
+    let mut sf = wire
+        .open(Path::new("/sea/served.dat"), OpenMode::Read)
+        .expect("serial open");
+    let mut pbuf = vec![0u8; psize as usize];
+    let t0 = Instant::now();
+    for i in 0..8 * ops {
+        let off = ((i as u64 * 37) % pages) * psize;
+        sf.pread_exact(&mut pbuf, off).expect("serial pread");
+    }
+    let serial_s = t0.elapsed().as_secs_f64();
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            wire.open_remote(Path::new("/sea/served.dat"), OpenMode::Read)
+                .expect("mux open")
+        })
+        .collect();
+    let t0 = Instant::now();
+    let threads: Vec<_> = handles
+        .into_iter()
+        .enumerate()
+        .map(|(t, mut fh)| {
+            std::thread::spawn(move || {
+                let mut b = vec![0u8; psize as usize];
+                for k in 0..ops {
+                    let off = (((k * 37 + t * 101) as u64) % pages) * psize;
+                    fh.pread_exact(&mut b, off).expect("mux pread");
+                }
+            })
+        })
+        .collect();
+    for th in threads {
+        th.join().expect("mux thread");
+    }
+    let pipelined_s = t0.elapsed().as_secs_f64();
+    h.record(
+        "remote_pipeline_8x",
+        vec![pipelined_s],
+        format!("serialized {serial_s:.6}s for the same {} preads", 8 * ops),
+    );
+    let wire_counters = wire.counters().expect("wire counters");
+    let lease_counters = leased.counters().expect("lease counters");
+    if smoke {
+        assert!(
+            pipelined_s < serial_s,
+            "8 pipelined handles ({pipelined_s:.6}s) should beat one serialized \
+             handle ({serial_s:.6}s)"
+        );
+        assert!(
+            wire_counters.inflight_peak >= 2,
+            "the mux run should overlap requests on one connection \
+             (inflight_peak = {})",
+            wire_counters.inflight_peak
+        );
+        assert!(
+            lease_counters.leases_granted >= sizes.len() as u64,
+            "every leased open should have been granted a lease \
+             (leases_granted = {})",
+            lease_counters.leases_granted
+        );
+    }
+    drop(sf);
+    drop(leased);
+    drop(wire);
+    srv_lease.shutdown().expect("shutdown");
+    srv_wire.shutdown().expect("shutdown");
 
     let mut json = String::from("{\n  \"target\": \"serve/remote\",\n");
     json.push_str(&format!(
         "  \"file_bytes\": {file_size},\n  \"preads_per_size\": {reps},\n  \"sweep\": [\n"
     ));
-    for (i, (size, local_s, remote_s)) in rows.iter().enumerate() {
+    for (i, (size, inproc_s, wire_s, leased_s)) in rows.iter().enumerate() {
         json.push_str(&format!(
-            "    {{\"pread_bytes\": {size}, \"inprocess_s\": {local_s:.6}, \
-             \"remote_s\": {remote_s:.6}}}{}\n",
+            "    {{\"pread_bytes\": {size}, \"inprocess_s\": {inproc_s:.6}, \
+             \"wire_s\": {wire_s:.6}, \"leased_s\": {leased_s:.6}}}{}\n",
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
-    json.push_str("  ]\n}\n");
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"pipeline\": {{\"handles\": 8, \"preads\": {}, \"pread_bytes\": {psize}, \
+         \"serialized_s\": {serial_s:.6}, \"pipelined_s\": {pipelined_s:.6}, \
+         \"inflight_peak\": {}}},\n",
+        8 * ops,
+        wire_counters.inflight_peak
+    ));
+    json.push_str(&format!(
+        "  \"leases_granted\": {}\n}}\n",
+        lease_counters.leases_granted
+    ));
     match std::fs::write("BENCH_remote.json", &json) {
         Ok(()) => println!("wrote BENCH_remote.json ({} sizes)", rows.len()),
         Err(e) => eprintln!("bench: could not write BENCH_remote.json: {e}"),

@@ -181,10 +181,40 @@ macro_rules! wrap_path_fn {
 }
 
 // path functions with no remote-transport meaning keep the pure
-// translation macro; the open/stat/unlink families below are written
-// out by hand so they can try the SEA_SOCKET route first
-wrap_path_fn!(mkdir, b"mkdir\0", (mode: libc::mode_t), c_int, -1);
+// translation macro; the open/stat/unlink/mkdir families below are
+// written out by hand so they can try the SEA_SOCKET route first
 wrap_path_fn!(chdir, b"chdir\0", (), c_int, -1);
+
+/// `mkdir`: mount paths are created through the daemon (the backend
+/// decides what a directory means — `RealFs` trees create for real,
+/// virtual namespaces no-op), so workloads laying out output trees
+/// under `/sea` work unchanged. `mode` only reaches the local
+/// fallback: the daemon's files are daemon-owned and its `RealFs`
+/// creates directories with its own umask.
+///
+/// # Safety
+/// C ABI; `path` must be valid per libc contract.
+#[no_mangle]
+pub unsafe extern "C" fn mkdir(path: *const c_char, mode: libc::mode_t) -> c_int {
+    if let Some(r) = remote_path_op(path, |fs, p| match fs.mkdir(p) {
+        Ok(()) => 0,
+        Err(e) => {
+            set_sea_errno(&e);
+            -1
+        }
+    }) {
+        return r;
+    }
+    type Fn = unsafe extern "C" fn(*const c_char, libc::mode_t) -> c_int;
+    let Some(real) = real!(b"mkdir\0", Fn) else { return no_sym(-1) };
+    if path.is_null() {
+        return real(path, mode);
+    }
+    match translate(CStr::from_ptr(path)) {
+        Some(t) => real(t.as_ptr(), mode),
+        None => real(path, mode),
+    }
+}
 
 // --- remote transport (SEA_SOCKET) ------------------------------------------
 //

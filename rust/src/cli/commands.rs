@@ -550,6 +550,7 @@ pub fn run_serve(args: &mut Args) -> Result<i32> {
             "sea serve --socket PATH [--config cfg.toml]  # [sea] + [serve] sections\n\
              \x20         [--work /tmp/sea_run] [--max-file-size 617MiB] [--procs N]\n\
              \x20         [--idle-timeout-secs N]  # reap clients silent this long\n\
+             \x20         [--no-leases]  # keep reads on the wire (no SCM_RIGHTS fds)\n\
              \x20         [--engine paper|temperature] [--flush-workers N] ...\n\
              \x20         # all `sea stat` mount flags apply; clients must use\n\
              \x20         # the same --work root for input paths to line up"
@@ -588,6 +589,7 @@ pub fn run_serve(args: &mut Args) -> Result<i32> {
     })?);
     let mut cfg = ServeCfg::new(&socket);
     cfg.idle_timeout = std::time::Duration::from_secs(idle_secs as u64);
+    cfg.lease_fds = serve_opts.lease_fds && !args.has("no-leases");
     let server = Server::spawn(sea.clone(), cfg)?;
     println!(
         "sea serve: {} engine on {} (work root {}); SIGTERM to stop",
@@ -696,6 +698,10 @@ pub fn run_stat(args: &mut Args) -> Result<i32> {
         println!(
             "clients: {} connected ({} total), {} open handles, {} ops served",
             c.clients_connected, c.clients_total, c.open_handles, c.ops_served
+        );
+        println!(
+            "dplane : {} fd leases granted, {} peak in-flight ops on one connection",
+            c.leases_granted, c.inflight_peak
         );
         return Ok(0);
     }

@@ -64,11 +64,15 @@ pub struct ServeOpts {
     pub socket: Option<String>,
     /// Reap clients silent for this many seconds between frames.
     pub idle_timeout_secs: u64,
+    /// Lease dup'd read fds to clients over `SCM_RIGHTS`
+    /// (`[serve] lease_fds = false` or `--no-leases` disables the
+    /// zero-copy read path).
+    pub lease_fds: bool,
 }
 
 impl Default for ServeOpts {
     fn default() -> ServeOpts {
-        ServeOpts { socket: None, idle_timeout_secs: 300 }
+        ServeOpts { socket: None, idle_timeout_secs: 300, lease_fds: true }
     }
 }
 
@@ -88,6 +92,7 @@ pub fn serve_from_doc(d: &Doc) -> Result<ServeOpts> {
         idle_timeout_secs: d
             .usize_or("serve.idle_timeout_secs", dflt.idle_timeout_secs as usize)
             as u64,
+        lease_fds: d.bool_or("serve.lease_fds", dflt.lease_fds),
     })
 }
 
@@ -145,11 +150,13 @@ mod tests {
         let d = Doc::parse("").unwrap();
         assert_eq!(serve_from_doc(&d).unwrap(), ServeOpts::default());
         let d = Doc::parse(
-            "[serve]\nsocket = \"/tmp/sea.sock\"\nidle_timeout_secs = 30\n",
+            "[serve]\nsocket = \"/tmp/sea.sock\"\nidle_timeout_secs = 30\n\
+             lease_fds = false\n",
         )
         .unwrap();
         let s = serve_from_doc(&d).unwrap();
         assert_eq!(s.socket.as_deref(), Some("/tmp/sea.sock"));
         assert_eq!(s.idle_timeout_secs, 30);
+        assert!(!s.lease_fds, "[serve] lease_fds = false must parse");
     }
 }

@@ -1,0 +1,281 @@
+//! `SCM_RIGHTS` fd passing for the zero-copy data plane.
+//!
+//! The daemon leases a dup'd `O_RDONLY` file descriptor to a read-only
+//! client by sending it as ancillary data **in the same `sendmsg(2)`
+//! as the `Open` reply frame**: stream ordering alone then associates
+//! the fd with the frame on the receiving side — no out-of-band
+//! channel, no fd table synchronization. The client reader drains fds
+//! with `MSG_CMSG_CLOEXEC` so leases never outlive an `exec`.
+//!
+//! The sea crate deliberately carries no external dependencies, so the
+//! small slice of the Linux x86-64 ABI this needs (`msghdr`,
+//! `cmsghdr`, `sendmsg`, `recvmsg`) is declared here directly. The
+//! daemon only ever attaches **one** fd per frame; the receive side
+//! still parses the control buffer generically because one `recvmsg`
+//! may observe ancillary data from a burst of replies.
+
+use std::io;
+use std::mem::size_of;
+use std::os::fd::{FromRawFd, OwnedFd, RawFd};
+
+#[repr(C)]
+struct IoVec {
+    base: *mut u8,
+    len: usize,
+}
+
+#[repr(C)]
+struct MsgHdr {
+    name: *mut u8,
+    namelen: u32,
+    iov: *mut IoVec,
+    iovlen: usize,
+    control: *mut u8,
+    controllen: usize,
+    flags: i32,
+}
+
+#[repr(C)]
+struct CmsgHdr {
+    len: usize,
+    level: i32,
+    ty: i32,
+}
+
+const SOL_SOCKET: i32 = 1;
+const SCM_RIGHTS: i32 = 1;
+/// Suppress `SIGPIPE` when the peer vanished mid-reply; the `EPIPE`
+/// errno is handled like any other write error.
+const MSG_NOSIGNAL: i32 = 0x4000;
+/// Received fds are opened close-on-exec atomically.
+const MSG_CMSG_CLOEXEC: i32 = 0x4000_0000;
+
+/// `CMSG_LEN(sizeof(int))`: header (16 on LP64) + one 4-byte fd.
+const CMSG_ONE_FD_LEN: usize = size_of::<CmsgHdr>() + 4;
+/// `CMSG_SPACE(sizeof(int))`: [`CMSG_ONE_FD_LEN`] rounded up to the
+/// 8-byte cmsg alignment.
+const CMSG_ONE_FD_SPACE: usize = (CMSG_ONE_FD_LEN + 7) & !7;
+/// Control-buffer room on the receive side; generous because one
+/// `recvmsg` can surface ancillary data for several coalesced replies.
+const RECV_CMSG_SPACE: usize = CMSG_ONE_FD_SPACE * 16;
+
+extern "C" {
+    fn sendmsg(fd: i32, msg: *const MsgHdr, flags: i32) -> isize;
+    fn recvmsg(fd: i32, msg: *mut MsgHdr, flags: i32) -> isize;
+}
+
+/// Send the concatenation of `bufs` over `sock`, attaching `fd` (when
+/// given) as a single `SCM_RIGHTS` cmsg riding the **first** byte of
+/// the payload. Partial sends are resumed plain — the ancillary data
+/// goes out exactly once, with the first successful `sendmsg`.
+pub fn send_frame_fd(sock: RawFd, bufs: &[&[u8]], fd: Option<RawFd>) -> io::Result<()> {
+    let total: usize = bufs.iter().map(|b| b.len()).sum();
+    if total == 0 {
+        return Ok(());
+    }
+    let mut sent = 0usize;
+    let mut fd_pending = fd;
+    while sent < total {
+        // Rebuild the iovec list past what already went out.
+        let mut skip = sent;
+        let mut iov: Vec<IoVec> = Vec::with_capacity(bufs.len());
+        for b in bufs {
+            if skip >= b.len() {
+                skip -= b.len();
+                continue;
+            }
+            iov.push(IoVec {
+                base: unsafe { b.as_ptr().add(skip) } as *mut u8,
+                len: b.len() - skip,
+            });
+            skip = 0;
+        }
+        let mut control = [0u8; CMSG_ONE_FD_SPACE];
+        let mut msg = MsgHdr {
+            name: std::ptr::null_mut(),
+            namelen: 0,
+            iov: iov.as_mut_ptr(),
+            iovlen: iov.len(),
+            control: std::ptr::null_mut(),
+            controllen: 0,
+            flags: 0,
+        };
+        if let Some(rfd) = fd_pending {
+            unsafe {
+                let hdr = control.as_mut_ptr() as *mut CmsgHdr;
+                (*hdr).len = CMSG_ONE_FD_LEN;
+                (*hdr).level = SOL_SOCKET;
+                (*hdr).ty = SCM_RIGHTS;
+                std::ptr::copy_nonoverlapping(
+                    (&rfd as *const RawFd).cast::<u8>(),
+                    control.as_mut_ptr().add(size_of::<CmsgHdr>()),
+                    4,
+                );
+            }
+            msg.control = control.as_mut_ptr();
+            msg.controllen = CMSG_ONE_FD_SPACE;
+        }
+        let n = unsafe { sendmsg(sock, &msg, MSG_NOSIGNAL) };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                continue;
+            }
+            return Err(e);
+        }
+        if n == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::WriteZero,
+                "sendmsg wrote zero bytes",
+            ));
+        }
+        fd_pending = None; // the cmsg rode the first successful send
+        sent += n as usize;
+    }
+    Ok(())
+}
+
+/// `recvmsg(2)` into `buf`, appending any `SCM_RIGHTS` fds (opened
+/// close-on-exec) to `fds` in stream order. Returns the byte count
+/// read (`0` means EOF).
+pub fn recv_with_fds(
+    sock: RawFd,
+    buf: &mut [u8],
+    fds: &mut Vec<OwnedFd>,
+) -> io::Result<usize> {
+    loop {
+        let mut iov = IoVec { base: buf.as_mut_ptr(), len: buf.len() };
+        let mut control = [0u8; RECV_CMSG_SPACE];
+        let mut msg = MsgHdr {
+            name: std::ptr::null_mut(),
+            namelen: 0,
+            iov: &mut iov,
+            iovlen: 1,
+            control: control.as_mut_ptr(),
+            controllen: RECV_CMSG_SPACE,
+            flags: 0,
+        };
+        let n = unsafe { recvmsg(sock, &mut msg, MSG_CMSG_CLOEXEC) };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                continue;
+            }
+            return Err(e);
+        }
+        collect_fds(&control, msg.controllen, fds);
+        return Ok(n as usize);
+    }
+}
+
+/// Walk the cmsg chain in `control[..used]` and claim every
+/// `SCM_RIGHTS` fd. Unknown cmsg types are skipped; a malformed length
+/// ends the walk (nothing after it can be trusted).
+fn collect_fds(control: &[u8], used: usize, out: &mut Vec<OwnedFd>) {
+    let used = used.min(control.len());
+    let mut off = 0usize;
+    while off + size_of::<CmsgHdr>() <= used {
+        let (len, level, ty) = unsafe {
+            let hdr = &*(control.as_ptr().add(off) as *const CmsgHdr);
+            (hdr.len, hdr.level, hdr.ty)
+        };
+        if len < size_of::<CmsgHdr>() || off + len > used {
+            break;
+        }
+        if level == SOL_SOCKET && ty == SCM_RIGHTS {
+            let data = off + size_of::<CmsgHdr>();
+            for i in 0..(len - size_of::<CmsgHdr>()) / 4 {
+                let mut raw = [0u8; 4];
+                raw.copy_from_slice(&control[data + i * 4..data + i * 4 + 4]);
+                let fd = RawFd::from_ne_bytes(raw);
+                if fd >= 0 {
+                    out.push(unsafe { OwnedFd::from_raw_fd(fd) });
+                }
+            }
+        }
+        let adv = (len + 7) & !7; // CMSG_ALIGN
+        if adv == 0 {
+            break;
+        }
+        off += adv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read as _, Seek as _, SeekFrom, Write as _};
+    use std::os::fd::{AsRawFd, IntoRawFd};
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn frame_bytes_and_fd_cross_a_socketpair_together() {
+        let dir = crate::vfs::testutil::scratch("fdpass_rt");
+        let path = dir.join("leased.dat");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(b"leased inode content").unwrap();
+        drop(f);
+        let src = std::fs::File::open(&path).unwrap();
+
+        let (a, b) = UnixStream::pair().unwrap();
+        let hdr = [7u8; 12];
+        let payload = b"open-reply-payload".to_vec();
+        send_frame_fd(
+            a.as_raw_fd(),
+            &[&hdr, &payload],
+            Some(src.as_raw_fd()),
+        )
+        .unwrap();
+        drop(src); // the dup'd fd in flight must keep the inode readable
+
+        let mut got = vec![0u8; hdr.len() + payload.len()];
+        let mut fds = Vec::new();
+        let mut read = 0;
+        while read < got.len() {
+            let n = recv_with_fds(b.as_raw_fd(), &mut got[read..], &mut fds).unwrap();
+            assert!(n > 0, "EOF before the frame completed");
+            read += n;
+        }
+        assert_eq!(&got[..12], &hdr);
+        assert_eq!(&got[12..], &payload[..]);
+        assert_eq!(fds.len(), 1, "exactly one leased fd");
+
+        let mut leased = std::fs::File::from(fds.pop().unwrap());
+        leased.seek(SeekFrom::Start(0)).unwrap();
+        let mut body = String::new();
+        leased.read_to_string(&mut body).unwrap();
+        assert_eq!(body, "leased inode content");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn plain_frames_carry_no_fds() {
+        let (a, b) = UnixStream::pair().unwrap();
+        send_frame_fd(a.as_raw_fd(), &[b"just-bytes"], None).unwrap();
+        let mut buf = [0u8; 32];
+        let mut fds = Vec::new();
+        let n = recv_with_fds(b.as_raw_fd(), &mut buf, &mut fds).unwrap();
+        assert_eq!(&buf[..n], b"just-bytes");
+        assert!(fds.is_empty());
+    }
+
+    #[test]
+    fn received_fds_are_cloexec() {
+        let (a, b) = UnixStream::pair().unwrap();
+        let f = std::fs::File::open("/dev/null").unwrap();
+        send_frame_fd(a.as_raw_fd(), &[b"x"], Some(f.as_raw_fd())).unwrap();
+        let mut buf = [0u8; 8];
+        let mut fds = Vec::new();
+        recv_with_fds(b.as_raw_fd(), &mut buf, &mut fds).unwrap();
+        let fd = fds.pop().unwrap().into_raw_fd();
+        // F_GETFD → FD_CLOEXEC must be set by MSG_CMSG_CLOEXEC.
+        extern "C" {
+            fn fcntl(fd: i32, cmd: i32, ...) -> i32;
+        }
+        const F_GETFD: i32 = 1;
+        const FD_CLOEXEC: i32 = 1;
+        let flags = unsafe { fcntl(fd, F_GETFD) };
+        assert!(flags >= 0 && flags & FD_CLOEXEC != 0, "flags: {flags}");
+        drop(unsafe { OwnedFd::from_raw_fd(fd) });
+    }
+}

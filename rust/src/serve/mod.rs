@@ -19,15 +19,29 @@
 //!
 //! | frame    | layout                                                |
 //! |----------|-------------------------------------------------------|
-//! | any      | `[u32 len][payload…]`, little-endian, `len <=` [`protocol::MAX_FRAME`] |
+//! | any      | `[u32 len][u64 req-id][payload…]`, little-endian, `len <=` [`protocol::MAX_FRAME`] |
 //! | request  | `[opcode u8][operands…]`                              |
-//! | response | `[status u8][gen u64][body…]`                         |
+//! | response | `[status u8][gen u64][body…]`, echoing the request id |
 //!
 //! The `gen` slot of every response carries the daemon-side map
 //! generation of the touched handle: one client's spill propagates to
 //! every other client on their next response, and they invalidate
 //! their emulated mappings — cross-process page coherence without a
 //! broadcast channel.
+//!
+//! ## Control plane vs data plane
+//!
+//! Since the request id lets responses travel out of order, each
+//! connection runs a small executor ([`CONN_WORKERS`] threads):
+//! independent requests from one client no longer serialize behind
+//! each other — only ops on the *same handle* do, behind that handle's
+//! lock. And for read-only opens whose resident replica sits on a
+//! local `RealFs`-backed device, the daemon leases a dup'd `O_RDONLY`
+//! fd to the client over `SCM_RIGHTS` ([`fdpass`]): the client then
+//! preads the file directly — zero round trips, zero wire copies —
+//! until a piggybacked generation bump revokes the lease. Spills and
+//! rename-over unlink the old inode but never truncate it, so a
+//! revoked-but-in-flight read still returns a consistent snapshot.
 //!
 //! ## Lifecycle
 //!
@@ -42,15 +56,17 @@
 //! tables drop (closing writer handles), threads join, the socket file
 //! is removed.
 
+pub mod fdpass;
 pub mod protocol;
 
 use std::collections::HashMap;
 use std::io::ErrorKind;
+use std::os::fd::AsRawFd;
 use std::os::unix::fs::PermissionsExt;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
@@ -65,6 +81,21 @@ use protocol::{
 /// its idle deadline while waiting for the next frame.
 const POLL_TICK: Duration = Duration::from_millis(25);
 
+/// Worker threads per connection: how many of one client's requests
+/// may execute concurrently. Small on purpose — enough to overlap a
+/// slow pread with metadata ops, without letting a single client
+/// monopolize the daemon.
+pub const CONN_WORKERS: usize = 4;
+
+/// Encoded-bytes budget of one `Readdir` reply page; keeps listing
+/// frames far under [`protocol::MAX_IO`] no matter how wide the
+/// directory is.
+const READDIR_PAGE_BYTES: usize = 256 * 1024;
+
+/// Readahead hint advertised in the `Hello` reply when the served Vfs
+/// is not a Sea mount (no `chunk_bytes` tuning to forward).
+const DEFAULT_CHUNK_HINT: u64 = 1 << 20;
+
 /// Daemon configuration.
 #[derive(Debug, Clone)]
 pub struct ServeCfg {
@@ -73,12 +104,21 @@ pub struct ServeCfg {
     /// Reap a client silent for this long between frames. Generous by
     /// default — a reaped read-only client transparently reconnects.
     pub idle_timeout: Duration,
+    /// Lease dup'd `O_RDONLY` fds to read-only clients over
+    /// `SCM_RIGHTS` when the resident replica supports it (see
+    /// [`crate::vfs::VfsFile::lease_fd`]). On by default; `sea serve
+    /// --no-leases` turns it off.
+    pub lease_fds: bool,
 }
 
 impl ServeCfg {
-    /// Defaults: 5-minute idle reaping.
+    /// Defaults: 5-minute idle reaping, fd leases on.
     pub fn new(socket: impl Into<PathBuf>) -> ServeCfg {
-        ServeCfg { socket: socket.into(), idle_timeout: Duration::from_secs(300) }
+        ServeCfg {
+            socket: socket.into(),
+            idle_timeout: Duration::from_secs(300),
+            lease_fds: true,
+        }
     }
 }
 
@@ -89,6 +129,8 @@ struct Gauges {
     clients_total: AtomicU64,
     open_handles: AtomicU64,
     ops_served: AtomicU64,
+    leases_granted: AtomicU64,
+    inflight_peak: AtomicU64,
 }
 
 struct Shared {
@@ -98,6 +140,10 @@ struct Shared {
     sea: Option<Arc<SeaFs>>,
     shutdown: AtomicBool,
     idle_timeout: Duration,
+    lease_fds: bool,
+    /// `chunk_bytes` forwarded to clients in the `Hello` reply as
+    /// their default readahead window.
+    chunk_hint: u64,
     gauges: Gauges,
 }
 
@@ -130,11 +176,17 @@ impl Server {
         listener
             .set_nonblocking(true)
             .map_err(|e| Error::io(cfg.socket.clone(), e))?;
+        let chunk_hint = sea
+            .as_ref()
+            .map(|s| s.chunk_bytes() as u64)
+            .unwrap_or(DEFAULT_CHUNK_HINT);
         let shared = Arc::new(Shared {
             fs,
             sea,
             shutdown: AtomicBool::new(false),
             idle_timeout: cfg.idle_timeout,
+            lease_fds: cfg.lease_fds,
+            chunk_hint,
             gauges: Gauges::default(),
         });
         let conn_threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
@@ -270,12 +322,33 @@ struct Handle {
     file: Box<dyn VfsFile>,
 }
 
+/// Per-connection executor state, shared by the frame-reader loop and
+/// the [`CONN_WORKERS`] op workers.
+struct ConnState {
+    shared: Arc<Shared>,
+    /// Every response frame (and any leased fd riding it) leaves
+    /// through here; the lock spans one whole vectored write, keeping
+    /// concurrently-finishing responses from interleaving.
+    writer: Mutex<UnixStream>,
+    /// Handle table. Ops on the *same* handle serialize behind its
+    /// `Mutex`; different handles proceed concurrently. `Close`
+    /// removes the entry while an in-flight op keeps its own `Arc`
+    /// clone alive until it finishes.
+    handles: Mutex<HashMap<u64, Arc<Mutex<Handle>>>>,
+    next_handle: AtomicU64,
+    /// Requests executing right now (feeds the `inflight_peak` gauge).
+    inflight: AtomicU64,
+}
+
 /// Wait for the next frame, polling so the shutdown flag and the idle
 /// deadline are honored *between* frames only — once the first header
 /// byte of a frame has arrived, the read commits until the frame
 /// completes (an idle cut mid-frame would desynchronize the stream).
 /// Returns `Ok(None)` on clean EOF, idle reap, or shutdown.
-fn next_frame(stream: &mut UnixStream, shared: &Shared) -> std::io::Result<Option<Vec<u8>>> {
+fn next_frame(
+    stream: &mut UnixStream,
+    shared: &Shared,
+) -> std::io::Result<Option<(u64, Vec<u8>)>> {
     let idle_deadline = Instant::now() + shared.idle_timeout;
     stream.set_read_timeout(Some(POLL_TICK))?;
     let mut first = [0u8; 1];
@@ -300,10 +373,11 @@ fn next_frame(stream: &mut UnixStream, shared: &Shared) -> std::io::Result<Optio
     // Frame committed: finish it without an idle cut. Keep the short
     // read timeout (so a wedged peer cannot pin the thread forever past
     // shutdown) but retry timeouts until the frame completes.
-    let mut hdr = [0u8; 4];
+    let mut hdr = [0u8; protocol::FRAME_HDR];
     hdr[0] = first[0];
     read_full(stream, &mut hdr[1..])?;
-    let n = u32::from_le_bytes(hdr) as usize;
+    let n = u32::from_le_bytes(hdr[..4].try_into().unwrap()) as usize;
+    let id = u64::from_le_bytes(hdr[4..].try_into().unwrap());
     if n > protocol::MAX_FRAME {
         return Err(std::io::Error::new(
             ErrorKind::InvalidData,
@@ -312,7 +386,7 @@ fn next_frame(stream: &mut UnixStream, shared: &Shared) -> std::io::Result<Optio
     }
     let mut buf = vec![0u8; n];
     read_full(stream, &mut buf)?;
-    Ok(Some(buf))
+    Ok(Some((id, buf)))
 }
 
 /// `read_exact` that rides over the polling read timeout.
@@ -336,13 +410,21 @@ fn read_full(stream: &mut UnixStream, mut buf: &mut [u8]) -> std::io::Result<()>
     Ok(())
 }
 
-fn serve_connection(mut stream: UnixStream, shared: &Shared) {
-    // Handshake: the first frame must be a matching Hello.
+fn serve_connection(mut stream: UnixStream, shared: &Arc<Shared>) {
+    // Handshake: the first frame must be a matching Hello. The reply
+    // echoes the client's id (0 by convention) and advertises the
+    // mount's chunk size as the readahead hint.
     match next_frame(&mut stream, shared) {
-        Ok(Some(frame)) => match Request::decode(&frame) {
+        Ok(Some((id, frame))) => match Request::decode(&frame) {
             Ok(Request::Hello { version }) if version == PROTOCOL_VERSION => {
-                let resp = Response::ok(0, Body::Hello { version: PROTOCOL_VERSION });
-                if write_frame(&mut stream, &resp.encode()).is_err() {
+                let resp = Response::ok(
+                    0,
+                    Body::Hello {
+                        version: PROTOCOL_VERSION,
+                        chunk_bytes: shared.chunk_hint,
+                    },
+                );
+                if write_frame(&mut stream, id, &resp.encode()).is_err() {
                     return;
                 }
             }
@@ -351,7 +433,7 @@ fn serve_connection(mut stream: UnixStream, shared: &Shared) {
                     ErrCode::VersionMismatch,
                     format!("daemon speaks protocol {PROTOCOL_VERSION}, client sent {version}"),
                 );
-                let _ = write_frame(&mut stream, &resp.encode());
+                let _ = write_frame(&mut stream, id, &resp.encode());
                 return;
             }
             Ok(other) => {
@@ -359,23 +441,54 @@ fn serve_connection(mut stream: UnixStream, shared: &Shared) {
                     ErrCode::Other,
                     format!("expected Hello as first frame, got {other:?}"),
                 );
-                let _ = write_frame(&mut stream, &resp.encode());
+                let _ = write_frame(&mut stream, id, &resp.encode());
                 return;
             }
             Err(e) => {
                 let resp = Response::err_code(ErrCode::Other, e.to_string());
-                let _ = write_frame(&mut stream, &resp.encode());
+                let _ = write_frame(&mut stream, id, &resp.encode());
                 return;
             }
         },
         _ => return,
     }
 
-    let mut handles: HashMap<u64, Handle> = HashMap::new();
-    let mut next_handle: u64 = 1;
+    let writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let conn = Arc::new(ConnState {
+        shared: shared.clone(),
+        writer: Mutex::new(writer),
+        handles: Mutex::new(HashMap::new()),
+        next_handle: AtomicU64::new(1),
+        inflight: AtomicU64::new(0),
+    });
+
+    // The per-connection executor: the frame loop feeds decoded
+    // requests to a small worker pool so independent ops overlap.
+    let (tx, rx) = mpsc::channel::<(u64, Request)>();
+    let rx = Arc::new(Mutex::new(rx));
+    let mut workers = Vec::with_capacity(CONN_WORKERS);
+    for w in 0..CONN_WORKERS {
+        let conn = conn.clone();
+        let rx = rx.clone();
+        if let Ok(t) = std::thread::Builder::new()
+            .name(format!("sea-serve-op-{w}"))
+            .spawn(move || loop {
+                let job = rx.lock().unwrap().recv();
+                match job {
+                    Ok((id, req)) => execute(&conn, id, req),
+                    Err(_) => break, // sender dropped: connection done
+                }
+            })
+        {
+            workers.push(t);
+        }
+    }
 
     loop {
-        let frame = match next_frame(&mut stream, shared) {
+        let (id, frame) = match next_frame(&mut stream, shared) {
             Ok(Some(f)) => f,
             _ => break,
         };
@@ -383,31 +496,71 @@ fn serve_connection(mut stream: UnixStream, shared: &Shared) {
             Ok(r) => r,
             Err(e) => {
                 // Protocol desync: answer once, then drop the peer.
-                let resp = Response::err_code(ErrCode::Other, e.to_string());
-                let _ = write_frame(&mut stream, &resp.encode());
+                respond(&conn, id, Response::err_code(ErrCode::Other, e.to_string()), None);
                 break;
             }
         };
         shared.gauges.ops_served.fetch_add(1, Ordering::Relaxed);
-        let resp = handle_request(req, shared, &mut handles, &mut next_handle);
-        if write_frame(&mut stream, &resp.encode()).is_err() {
+        if tx.send((id, req)).is_err() {
             break;
         }
     }
 
-    // Drop order: the handle table first (writer closes run deferred
-    // Sea management), then the stream.
-    let n = handles.len() as u64;
-    drop(handles);
+    // Drain: close the queue, let workers finish (and answer) every
+    // in-flight request, then drop the handle table — writer closes
+    // run deferred Sea management — and finally the stream.
+    drop(tx);
+    for t in workers {
+        let _ = t.join();
+    }
+    let n = {
+        let mut g = conn.handles.lock().unwrap();
+        let n = g.len() as u64;
+        g.clear();
+        n
+    };
     shared.gauges.open_handles.fetch_sub(n, Ordering::Relaxed);
 }
 
-fn handle_request(
-    req: Request,
-    shared: &Shared,
-    handles: &mut HashMap<u64, Handle>,
-    next_handle: &mut u64,
-) -> Response {
+/// Run one request on a worker and send its response (plus any leased
+/// fd riding the same sendmsg).
+fn execute(conn: &ConnState, id: u64, req: Request) {
+    let now = conn.inflight.fetch_add(1, Ordering::Relaxed) + 1;
+    conn.shared.gauges.inflight_peak.fetch_max(now, Ordering::Relaxed);
+    let (resp, lease) = handle_request(req, conn);
+    respond(conn, id, resp, lease);
+    conn.inflight.fetch_sub(1, Ordering::Relaxed);
+}
+
+/// Serialize and send one response frame. A write failure is not
+/// reported here — the frame loop notices the dead peer on its next
+/// read and tears the connection down.
+fn respond(conn: &ConnState, id: u64, resp: Response, lease: Option<std::fs::File>) {
+    let payload = resp.encode();
+    let w = conn.writer.lock().unwrap();
+    match lease {
+        Some(f) => {
+            // The fd must ride the exact frame that announces it, in
+            // one sendmsg: stream order is the association.
+            let hdr = protocol::frame_header(id, payload.len());
+            let _ = fdpass::send_frame_fd(
+                w.as_raw_fd(),
+                &[&hdr, &payload],
+                Some(f.as_raw_fd()),
+            );
+            // `f` drops here; the copy in flight keeps the open file
+            // description alive on its own.
+        }
+        None => {
+            let mut w = &*w;
+            let _ = write_frame(&mut w, id, &payload);
+        }
+    }
+}
+
+fn handle_request(req: Request, conn: &ConnState) -> (Response, Option<std::fs::File>) {
+    let shared = &*conn.shared;
+
     /// Piggybacked generation of a handle after an op (0 when the
     /// registry lookup itself fails — the op's own error wins).
     fn gen_of(h: &mut Handle) -> u64 {
@@ -415,30 +568,55 @@ fn handle_request(
     }
 
     macro_rules! with_handle {
-        ($id:expr, |$h:ident| $body:expr) => {
-            match handles.get_mut(&$id) {
-                Some($h) => $body,
+        ($id:expr, |$h:ident| $body:expr) => {{
+            let slot = conn.handles.lock().unwrap().get(&$id).cloned();
+            match slot {
+                Some(slot) => {
+                    let mut guard = slot.lock().unwrap();
+                    let $h = &mut *guard;
+                    $body
+                }
                 None => Response::err_code(ErrCode::BadHandle, format!("handle {}", $id)),
             }
-        };
+        }};
     }
 
-    match req {
-        Request::Hello { .. } => Response::ok(0, Body::Hello { version: PROTOCOL_VERSION }),
+    let resp = match req {
+        Request::Hello { .. } => Response::ok(
+            0,
+            Body::Hello { version: PROTOCOL_VERSION, chunk_bytes: shared.chunk_hint },
+        ),
         Request::Open { mode, path } => {
             if shared.shutdown.load(Ordering::SeqCst) && mode.writable() {
-                return Response::err_code(ErrCode::Shutdown, "no new writers");
+                return (Response::err_code(ErrCode::Shutdown, "no new writers"), None);
             }
             match shared.fs.open(Path::new(&path), mode) {
                 Ok(file) => {
-                    let id = *next_handle;
-                    *next_handle += 1;
+                    let id = conn.next_handle.fetch_add(1, Ordering::Relaxed);
                     let mut h = Handle { file };
                     let ident = h.file.map_identity();
                     let gen = gen_of(&mut h);
-                    handles.insert(id, h);
+                    // Data plane: a read-only open whose replica can
+                    // surface a raw fd gets it dup'd and leased at the
+                    // current generation.
+                    let lease = if mode == OpenMode::Read && shared.lease_fds {
+                        h.file.lease_fd()
+                    } else {
+                        None
+                    };
+                    if lease.is_some() {
+                        shared.gauges.leases_granted.fetch_add(1, Ordering::Relaxed);
+                    }
+                    conn.handles.lock().unwrap().insert(id, Arc::new(Mutex::new(h)));
                     shared.gauges.open_handles.fetch_add(1, Ordering::Relaxed);
-                    Response::ok(gen, Body::Open { handle: id, ident })
+                    let lease_gen = lease.as_ref().map(|_| gen);
+                    return (
+                        Response::ok(
+                            gen,
+                            Body::Open { handle: id, ident, lease: lease_gen },
+                        ),
+                        lease,
+                    );
                 }
                 Err(e) => Response::err(0, &e),
             }
@@ -456,9 +634,12 @@ fn handle_request(
         }),
         Request::Pwrite { handle, off, data } => with_handle!(handle, |h| {
             if data.len() > protocol::MAX_IO {
-                return Response::err_code(
-                    ErrCode::InvalidArg,
-                    format!("pwrite of {} bytes exceeds MAX_IO", data.len()),
+                return (
+                    Response::err_code(
+                        ErrCode::InvalidArg,
+                        format!("pwrite of {} bytes exceeds MAX_IO", data.len()),
+                    ),
+                    None,
                 );
             }
             match h.file.pwrite(&data, off) {
@@ -484,14 +665,19 @@ fn handle_request(
                 Err(e) => Response::err(gen_of(h), &e),
             }
         }),
-        Request::Close { handle } => match handles.remove(&handle) {
-            Some(h) => {
-                drop(h); // deferred Sea management runs here
-                shared.gauges.open_handles.fetch_sub(1, Ordering::Relaxed);
-                Response::ok(0, Body::Unit)
+        Request::Close { handle } => {
+            let slot = conn.handles.lock().unwrap().remove(&handle);
+            match slot {
+                Some(h) => {
+                    drop(h); // deferred Sea management runs here
+                    shared.gauges.open_handles.fetch_sub(1, Ordering::Relaxed);
+                    Response::ok(0, Body::Unit)
+                }
+                None => {
+                    Response::err_code(ErrCode::BadHandle, format!("handle {handle}"))
+                }
             }
-            None => Response::err_code(ErrCode::BadHandle, format!("handle {handle}")),
-        },
+        }
         Request::MapSync { handle } => with_handle!(handle, |h| {
             match h.file.map_sync() {
                 Ok(gen) => Response::ok(gen, Body::Unit),
@@ -506,10 +692,32 @@ fn handle_request(
             Ok(n) => Response::ok(0, Body::Size(n)),
             Err(e) => Response::err(0, &e),
         },
-        Request::Readdir { path } => match shared.fs.readdir(Path::new(&path)) {
-            Ok(names) => Response::ok(0, Body::Names(names)),
-            Err(e) => Response::err(0, &e),
-        },
+        Request::Readdir { path, token } => {
+            match shared.fs.readdir(Path::new(&path)) {
+                Ok(all) => {
+                    // Page the listing: a directory whose encoded
+                    // names exceed one frame would otherwise kill the
+                    // connection. `token` is the resume index.
+                    let start = (token as usize).min(all.len());
+                    let mut bytes = 0usize;
+                    let mut end = start;
+                    while end < all.len() {
+                        let cost = 4 + all[end].len();
+                        if end > start && bytes + cost > READDIR_PAGE_BYTES {
+                            break;
+                        }
+                        bytes += cost;
+                        end += 1;
+                    }
+                    let next = if end >= all.len() { 0 } else { end as u64 };
+                    Response::ok(
+                        0,
+                        Body::Names { names: all[start..end].to_vec(), next },
+                    )
+                }
+                Err(e) => Response::err(0, &e),
+            }
+        }
         Request::Rename { from, to } => {
             match shared.fs.rename(Path::new(&from), Path::new(&to)) {
                 Ok(()) => Response::ok(0, Body::Unit),
@@ -517,6 +725,10 @@ fn handle_request(
             }
         }
         Request::Unlink { path } => match shared.fs.unlink(Path::new(&path)) {
+            Ok(()) => Response::ok(0, Body::Unit),
+            Err(e) => Response::err(0, &e),
+        },
+        Request::Mkdir { path } => match shared.fs.mkdir(Path::new(&path)) {
             Ok(()) => Response::ok(0, Body::Unit),
             Err(e) => Response::err(0, &e),
         },
@@ -542,10 +754,13 @@ fn handle_request(
                     clients_total: g.clients_total.load(Ordering::Relaxed),
                     open_handles: g.open_handles.load(Ordering::Relaxed),
                     ops_served: g.ops_served.load(Ordering::Relaxed),
+                    leases_granted: g.leases_granted.load(Ordering::Relaxed),
+                    inflight_peak: g.inflight_peak.load(Ordering::Relaxed),
                 })),
             )
         }
-    }
+    };
+    (resp, None)
 }
 
 #[cfg(test)]
@@ -605,11 +820,13 @@ mod tests {
         let srv = spawn_real(&d, &sock);
         let mut s = UnixStream::connect(&sock).unwrap();
         let hello = Request::Hello { version: PROTOCOL_VERSION + 7 }.encode();
-        write_frame(&mut s, &hello).unwrap();
-        let resp = Response::decode(&read_frame(&mut s).unwrap()).unwrap();
+        write_frame(&mut s, 0, &hello).unwrap();
+        let (id, frame) = read_frame(&mut s).unwrap();
+        assert_eq!(id, 0, "handshake reply echoes the handshake id");
+        let resp = Response::decode(&frame).unwrap();
         let we = resp.body.unwrap_err();
         assert_eq!(we.code, ErrCode::VersionMismatch);
-        assert!(we.msg.contains("protocol 1"), "got: {}", we.msg);
+        assert!(we.msg.contains("protocol 2"), "got: {}", we.msg);
         srv.shutdown().unwrap();
     }
 
@@ -619,9 +836,32 @@ mod tests {
         let sock = d.join("sea.sock");
         let srv = spawn_real(&d, &sock);
         let mut s = UnixStream::connect(&sock).unwrap();
-        write_frame(&mut s, &Request::Counters.encode()).unwrap();
-        let resp = Response::decode(&read_frame(&mut s).unwrap()).unwrap();
+        write_frame(&mut s, 0, &Request::Counters.encode()).unwrap();
+        let (_, frame) = read_frame(&mut s).unwrap();
+        let resp = Response::decode(&frame).unwrap();
         assert!(resp.body.is_err());
+        srv.shutdown().unwrap();
+    }
+
+    #[test]
+    fn hello_reply_advertises_a_readahead_hint() {
+        let d = scratch("serve_hint");
+        let sock = d.join("sea.sock");
+        let srv = spawn_real(&d, &sock);
+        let mut s = UnixStream::connect(&sock).unwrap();
+        let hello = Request::Hello { version: PROTOCOL_VERSION }.encode();
+        write_frame(&mut s, 0, &hello).unwrap();
+        let (_, frame) = read_frame(&mut s).unwrap();
+        match Response::decode(&frame).unwrap().body.unwrap() {
+            Body::Hello { version, chunk_bytes } => {
+                assert_eq!(version, PROTOCOL_VERSION);
+                assert_eq!(
+                    chunk_bytes, DEFAULT_CHUNK_HINT,
+                    "non-Sea mounts advertise the default hint"
+                );
+            }
+            other => panic!("expected Hello body, got {other:?}"),
+        }
         srv.shutdown().unwrap();
     }
 }

@@ -9,7 +9,17 @@
 //! | bytes | field                                        |
 //! |-------|----------------------------------------------|
 //! | 4     | payload length `n` (u32 LE, `<=` [`MAX_FRAME`]) |
+//! | 8     | request id (u64 LE)                          |
 //! | n     | payload                                      |
+//!
+//! The **request id** is chosen by the client (0 is reserved for the
+//! handshake) and echoed verbatim on the matching response. Because
+//! responses carry the id, the daemon may answer **out of order** and
+//! a client may keep many requests in flight on one connection — the
+//! pipelining that lets every `RemoteFile` of a process share a single
+//! mux'd connection. Frames are written vectored (`writev`
+//! header+payload) so large payloads are never copied into a staging
+//! buffer.
 //!
 //! A **request** payload is `[opcode u8][operands…]`; a **response**
 //! payload is `[status u8][gen u64][body…]` where status 0 = ok and
@@ -19,6 +29,17 @@
 //! knows another process relocated the file (e.g. a mid-stream spill)
 //! and must invalidate any cached/mapped pages it holds — the
 //! cross-process analogue of the in-process page-cache generation key.
+//! The same bump revokes any fd **lease** the client holds on the
+//! file (see below).
+//!
+//! ## Data-plane frames
+//!
+//! | frame | layout | notes |
+//! |-------|--------|-------|
+//! | `Open` reply | `[handle u64][ident?][lease?: u64 gen]` | when `lease` is present, **one dup'd `O_RDONLY` fd rides this very frame** as `SCM_RIGHTS` ancillary data (sent in the same `sendmsg`, so stream order associates them). The client preads the leased fd directly — zero round trips — until any response piggybacks `gen > lease`. |
+//! | `Readdir` request | `[path str][token u64]` | `token` is the continuation cursor (0 starts the listing). |
+//! | `Names` reply | `[count u32][name str…][next u64]` | `next == 0` means the listing is complete; otherwise pass it back as the next `token`. Pages keep frames far under [`MAX_IO`] no matter how wide the directory is. |
+//! | `Hello` reply | `[version u32][chunk_bytes u64]` | `chunk_bytes` is the daemon's streamed-transfer chunk size — the client uses it as its default readahead window. |
 //!
 //! Primitive encodings (all little-endian):
 //!
@@ -53,7 +74,11 @@ use crate::vfs::{DeviceLedger, MgmtCounters, OpenMode};
 
 /// Protocol revision. Bump on any wire-visible change; the daemon
 /// rejects clients speaking a different revision at handshake.
-pub const PROTOCOL_VERSION: u32 = 1;
+///
+/// v2: request ids in the frame header (pipelining), fd leases on
+/// `Open` replies, paginated `Readdir`, `Mkdir`, and the readahead
+/// hint in the `Hello` reply.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Largest single-request I/O payload the daemon accepts or serves.
 /// Bigger preads return short (positioned-I/O semantics allow it);
@@ -84,6 +109,7 @@ const OP_NOTE_FAULT: u8 = 0x0D;
 const OP_COUNTERS: u8 = 0x0E;
 const OP_LEN: u8 = 0x0F;
 const OP_SYNC_MGMT: u8 = 0x10;
+const OP_MKDIR: u8 = 0x11;
 
 /// One client request.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -106,12 +132,17 @@ pub enum Request {
     Len { handle: u64 },
     /// Size of the file at `path` (also the exists probe).
     Stat { path: String },
-    /// Names under directory `path`.
-    Readdir { path: String },
+    /// One page of names under directory `path`, starting at
+    /// continuation cursor `token` (0 = from the top). The reply's
+    /// `next` field chains the pages.
+    Readdir { path: String, token: u64 },
     /// Rename `from` to `to`.
     Rename { from: String, to: String },
     /// Remove `path`.
     Unlink { path: String },
+    /// Ensure directory `path` exists (`create_dir_all` semantics —
+    /// succeeding when it already does, hence idempotent).
+    Mkdir { path: String },
     /// Refresh the handle against the registry; the response's `gen`
     /// slot carries the result.
     MapSync { handle: u64 },
@@ -240,19 +271,25 @@ impl WireError {
 pub enum Body {
     /// No payload beyond the piggybacked generation.
     Unit,
-    /// Handshake echo: the daemon's protocol version.
-    Hello { version: u32 },
+    /// Handshake echo: the daemon's protocol version plus its
+    /// streamed-transfer chunk size, which the client adopts as the
+    /// default readahead window.
+    Hello { version: u32, chunk_bytes: u64 },
     /// New handle id plus the daemon handle's frame-sharing identity
-    /// (`None` when the backend cannot name one).
-    Open { handle: u64, ident: Option<u128> },
+    /// (`None` when the backend cannot name one). `lease` is the map
+    /// generation the lease was minted at; when present, exactly one
+    /// dup'd `O_RDONLY` fd rides this frame as `SCM_RIGHTS` ancillary
+    /// data.
+    Open { handle: u64, ident: Option<u128>, lease: Option<u64> },
     /// Pread result.
     Data(Vec<u8>),
     /// Pwrite result: bytes accepted.
     Written(u32),
     /// Len/Stat result.
     Size(u64),
-    /// Readdir result.
-    Names(Vec<String>),
+    /// One Readdir page; `next` is the continuation token for the
+    /// following page (0 = listing complete).
+    Names { names: Vec<String>, next: u64 },
     /// Counters snapshot.
     Counters(Box<CountersReply>),
 }
@@ -274,6 +311,12 @@ pub struct CountersReply {
     pub open_handles: u64,
     /// Requests served since the daemon started.
     pub ops_served: u64,
+    /// Fd leases handed out since the daemon started (each one a
+    /// read path that bypasses the wire entirely).
+    pub leases_granted: u64,
+    /// High-water mark of concurrently executing requests on any one
+    /// connection — how much the pipelined executor is actually used.
+    pub inflight_peak: u64,
 }
 
 /// One response: the piggybacked map generation plus the outcome.
@@ -498,8 +541,13 @@ impl Request {
                 put_u8(&mut b, OP_STAT);
                 put_str(&mut b, path);
             }
-            Request::Readdir { path } => {
+            Request::Readdir { path, token } => {
                 put_u8(&mut b, OP_READDIR);
+                put_str(&mut b, path);
+                put_u64(&mut b, *token);
+            }
+            Request::Mkdir { path } => {
+                put_u8(&mut b, OP_MKDIR);
                 put_str(&mut b, path);
             }
             Request::Rename { from, to } => {
@@ -546,7 +594,8 @@ impl Request {
             OP_CLOSE => Request::Close { handle: c.u64()? },
             OP_LEN => Request::Len { handle: c.u64()? },
             OP_STAT => Request::Stat { path: c.str()? },
-            OP_READDIR => Request::Readdir { path: c.str()? },
+            OP_READDIR => Request::Readdir { path: c.str()?, token: c.u64()? },
+            OP_MKDIR => Request::Mkdir { path: c.str()? },
             OP_RENAME => Request::Rename { from: c.str()?, to: c.str()? },
             OP_UNLINK => Request::Unlink { path: c.str()? },
             OP_MAP_SYNC => Request::MapSync { handle: c.u64()? },
@@ -562,9 +611,10 @@ impl Request {
     }
 
     /// May this request be transparently retried on a fresh connection
-    /// after a mid-request connection loss? Only reads and probes —
-    /// a lost mutating request may or may not have been applied, so it
-    /// must surface [`Error::DaemonGone`] instead.
+    /// after a mid-request connection loss? Reads, probes, and
+    /// `Mkdir` (whose `create_dir_all` semantics make a replay a
+    /// no-op) — a lost mutating request may or may not have been
+    /// applied, so it must surface [`Error::DaemonGone`] instead.
     pub fn idempotent(&self) -> bool {
         matches!(
             self,
@@ -573,6 +623,7 @@ impl Request {
                 | Request::Len { .. }
                 | Request::Stat { .. }
                 | Request::Readdir { .. }
+                | Request::Mkdir { .. }
                 | Request::MapSync { .. }
                 | Request::NoteFault { .. }
                 | Request::Counters
@@ -626,17 +677,25 @@ impl Response {
                 put_u64(&mut b, self.gen);
                 match body {
                     Body::Unit => put_u8(&mut b, BODY_UNIT),
-                    Body::Hello { version } => {
+                    Body::Hello { version, chunk_bytes } => {
                         put_u8(&mut b, BODY_HELLO);
                         put_u32(&mut b, *version);
+                        put_u64(&mut b, *chunk_bytes);
                     }
-                    Body::Open { handle, ident } => {
+                    Body::Open { handle, ident, lease } => {
                         put_u8(&mut b, BODY_OPEN);
                         put_u64(&mut b, *handle);
                         match ident {
                             Some(i) => {
                                 put_u8(&mut b, 1);
                                 put_u128(&mut b, *i);
+                            }
+                            None => put_u8(&mut b, 0),
+                        }
+                        match lease {
+                            Some(g) => {
+                                put_u8(&mut b, 1);
+                                put_u64(&mut b, *g);
                             }
                             None => put_u8(&mut b, 0),
                         }
@@ -653,12 +712,13 @@ impl Response {
                         put_u8(&mut b, BODY_SIZE);
                         put_u64(&mut b, *n);
                     }
-                    Body::Names(names) => {
+                    Body::Names { names, next } => {
                         put_u8(&mut b, BODY_NAMES);
                         put_u32(&mut b, names.len() as u32);
                         for n in names {
                             put_str(&mut b, n);
                         }
+                        put_u64(&mut b, *next);
                     }
                     Body::Counters(c) => {
                         put_u8(&mut b, BODY_COUNTERS);
@@ -683,6 +743,8 @@ impl Response {
                         put_u64(&mut b, c.clients_total);
                         put_u64(&mut b, c.open_handles);
                         put_u64(&mut b, c.ops_served);
+                        put_u64(&mut b, c.leases_granted);
+                        put_u64(&mut b, c.inflight_peak);
                     }
                 }
             }
@@ -716,14 +778,18 @@ impl Response {
         let tag = c.u8()?;
         let body = match tag {
             BODY_UNIT => Body::Unit,
-            BODY_HELLO => Body::Hello { version: c.u32()? },
+            BODY_HELLO => Body::Hello { version: c.u32()?, chunk_bytes: c.u64()? },
             BODY_OPEN => {
                 let handle = c.u64()?;
                 let ident = match c.u8()? {
                     0 => None,
                     _ => Some(c.u128()?),
                 };
-                Body::Open { handle, ident }
+                let lease = match c.u8()? {
+                    0 => None,
+                    _ => Some(c.u64()?),
+                };
+                Body::Open { handle, ident, lease }
             }
             BODY_DATA => Body::Data(c.bytes()?),
             BODY_WRITTEN => Body::Written(c.u32()?),
@@ -737,7 +803,7 @@ impl Response {
                 for _ in 0..n {
                     names.push(c.str()?);
                 }
-                Body::Names(names)
+                Body::Names { names, next: c.u64()? }
             }
             BODY_COUNTERS => {
                 let engine = c.str()?;
@@ -774,6 +840,8 @@ impl Response {
                     clients_total: c.u64()?,
                     open_handles: c.u64()?,
                     ops_served: c.u64()?,
+                    leases_granted: c.u64()?,
+                    inflight_peak: c.u64()?,
                 }))
             }
             other => return Err(Error::Daemon(format!("unknown body tag {other}"))),
@@ -785,21 +853,57 @@ impl Response {
 
 // --- frame I/O -------------------------------------------------------------
 
-/// Write one length-prefixed frame.
-pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+/// Bytes of frame header preceding the payload: `[u32 len][u64 id]`.
+pub const FRAME_HDR: usize = 12;
+
+/// Encode the 12-byte frame header for a payload of `len` bytes.
+pub fn frame_header(id: u64, len: usize) -> [u8; FRAME_HDR] {
+    let mut hdr = [0u8; FRAME_HDR];
+    hdr[..4].copy_from_slice(&(len as u32).to_le_bytes());
+    hdr[4..].copy_from_slice(&id.to_le_bytes());
+    hdr
+}
+
+/// Write one id-bearing frame **vectored**: header and payload go out
+/// in a single `writev` when the writer supports it, so the payload is
+/// never copied into a staging buffer.
+pub fn write_frame(w: &mut impl Write, id: u64, payload: &[u8]) -> std::io::Result<()> {
     debug_assert!(payload.len() <= MAX_FRAME);
-    w.write_all(&(payload.len() as u32).to_le_bytes())?;
-    w.write_all(payload)?;
+    let hdr = frame_header(id, payload.len());
+    let total = FRAME_HDR + payload.len();
+    let mut sent = 0usize;
+    while sent < total {
+        let bufs = if sent < FRAME_HDR {
+            [std::io::IoSlice::new(&hdr[sent..]), std::io::IoSlice::new(payload)]
+        } else {
+            [
+                std::io::IoSlice::new(&payload[sent - FRAME_HDR..]),
+                std::io::IoSlice::new(&[]),
+            ]
+        };
+        match w.write_vectored(&bufs) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "frame write returned zero",
+                ))
+            }
+            Ok(n) => sent += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
     w.flush()
 }
 
-/// Read one length-prefixed frame. An EOF before the first header byte
-/// returns `UnexpectedEof` with an empty message (clean close); any
-/// other short read is a protocol error.
-pub fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
-    let mut hdr = [0u8; 4];
+/// Read one id-bearing frame, returning `(id, payload)`. An EOF before
+/// the first header byte returns `UnexpectedEof` with an empty message
+/// (clean close); any other short read is a protocol error.
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<(u64, Vec<u8>)> {
+    let mut hdr = [0u8; FRAME_HDR];
     r.read_exact(&mut hdr)?;
-    let n = u32::from_le_bytes(hdr) as usize;
+    let n = u32::from_le_bytes(hdr[..4].try_into().unwrap()) as usize;
+    let id = u64::from_le_bytes(hdr[4..].try_into().unwrap());
     if n > MAX_FRAME {
         return Err(std::io::Error::new(
             std::io::ErrorKind::InvalidData,
@@ -808,7 +912,7 @@ pub fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
     }
     let mut buf = vec![0u8; n];
     r.read_exact(&mut buf)?;
-    Ok(buf)
+    Ok((id, buf))
 }
 
 #[cfg(test)]
@@ -837,9 +941,11 @@ mod tests {
         rt_req(Request::Close { handle: u64::MAX });
         rt_req(Request::Len { handle: 9 });
         rt_req(Request::Stat { path: "/sea/x".into() });
-        rt_req(Request::Readdir { path: "/sea".into() });
+        rt_req(Request::Readdir { path: "/sea".into(), token: 0 });
+        rt_req(Request::Readdir { path: "/sea".into(), token: 4096 });
         rt_req(Request::Rename { from: "/sea/a".into(), to: "/sea/b".into() });
         rt_req(Request::Unlink { path: "/sea/a".into() });
+        rt_req(Request::Mkdir { path: "/sea/out/run7".into() });
         rt_req(Request::MapSync { handle: 2 });
         rt_req(Request::NoteFault { handle: 2, off: 64, len: 4096 });
         rt_req(Request::Counters);
@@ -849,13 +955,23 @@ mod tests {
     #[test]
     fn responses_round_trip() {
         rt_resp(Response::ok(0, Body::Unit));
-        rt_resp(Response::ok(3, Body::Hello { version: 1 }));
-        rt_resp(Response::ok(9, Body::Open { handle: 4, ident: Some(1 << 90) }));
-        rt_resp(Response::ok(9, Body::Open { handle: 4, ident: None }));
+        rt_resp(Response::ok(3, Body::Hello { version: 2, chunk_bytes: 1 << 20 }));
+        rt_resp(Response::ok(
+            9,
+            Body::Open { handle: 4, ident: Some(1 << 90), lease: Some(17) },
+        ));
+        rt_resp(Response::ok(9, Body::Open { handle: 4, ident: None, lease: None }));
         rt_resp(Response::ok(1, Body::Data(vec![0xAB; 100])));
         rt_resp(Response::ok(1, Body::Written(77)));
         rt_resp(Response::ok(0, Body::Size(u64::MAX / 3)));
-        rt_resp(Response::ok(0, Body::Names(vec!["a.dat".into(), "b".into()])));
+        rt_resp(Response::ok(
+            0,
+            Body::Names { names: vec!["a.dat".into(), "b".into()], next: 0 },
+        ));
+        rt_resp(Response::ok(
+            0,
+            Body::Names { names: vec!["page1".into()], next: 2048 },
+        ));
         rt_resp(Response::err_code(ErrCode::VersionMismatch, "daemon speaks 2"));
     }
 
@@ -883,6 +999,8 @@ mod tests {
             clients_total: 11,
             open_handles: 5,
             ops_served: 400,
+            leases_granted: 6,
+            inflight_peak: 4,
         };
         let r = Response::ok(0, Body::Counters(Box::new(reply.clone())));
         let dec = Response::decode(&r.encode()).unwrap();
@@ -933,14 +1051,28 @@ mod tests {
     #[test]
     fn frame_io_round_trips_and_caps() {
         let mut buf = Vec::new();
-        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, 42, b"hello").unwrap();
         let mut rd = &buf[..];
-        assert_eq!(read_frame(&mut rd).unwrap(), b"hello");
+        let (id, payload) = read_frame(&mut rd).unwrap();
+        assert_eq!(id, 42, "request id survives the header");
+        assert_eq!(payload, b"hello");
         // an oversized header is refused before allocating
         let mut bad = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
-        bad.extend_from_slice(&[0; 8]);
+        bad.extend_from_slice(&[0; 16]);
         let mut rd = &bad[..];
         assert!(read_frame(&mut rd).is_err());
+    }
+
+    #[test]
+    fn interleaved_frames_keep_their_ids() {
+        // The pipelining contract: ids written in one order can be
+        // consumed in any order because each frame carries its own.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 1, b"first").unwrap();
+        write_frame(&mut buf, 9, b"second").unwrap();
+        let mut rd = &buf[..];
+        assert_eq!(read_frame(&mut rd).unwrap(), (1, b"first".to_vec()));
+        assert_eq!(read_frame(&mut rd).unwrap(), (9, b"second".to_vec()));
     }
 
     #[test]
@@ -948,6 +1080,8 @@ mod tests {
         assert!(Request::Pread { handle: 1, off: 0, len: 1 }.idempotent());
         assert!(Request::Stat { path: "x".into() }.idempotent());
         assert!(Request::MapSync { handle: 1 }.idempotent());
+        assert!(Request::Mkdir { path: "x".into() }.idempotent());
+        assert!(Request::Readdir { path: "x".into(), token: 7 }.idempotent());
         assert!(!Request::Pwrite { handle: 1, off: 0, data: vec![] }.idempotent());
         assert!(!Request::SetLen { handle: 1, len: 0 }.idempotent());
         assert!(!Request::Unlink { path: "x".into() }.idempotent());

@@ -233,6 +233,19 @@ pub trait VfsFile: Send {
         let _ = (off, len);
     }
 
+    /// Surface a dup'd read-only fd on the handle's *current resident
+    /// replica*, for the `sea serve` data plane to lease to a client
+    /// over `SCM_RIGHTS` (see [`crate::serve::fdpass`]). `None` — the
+    /// default — means the bytes are not addressable as one raw local
+    /// fd: writable handles, striped or compressed replicas, decorators
+    /// whose policy (e.g. rate caps) must observe every read. Only
+    /// backends whose `pread` is byte-for-byte a `pread(2)` on one fd
+    /// should implement this; the daemon pairs the fd with the map
+    /// generation at mint time so relocation revokes the lease.
+    fn lease_fd(&self) -> Option<std::fs::File> {
+        None
+    }
+
     /// A stable identity for the *file* this handle addresses, shared
     /// by every handle open on the same file, or `None` when the
     /// backend cannot name one. [`MappedView`]s key cache frames by
@@ -304,6 +317,17 @@ pub trait Vfs: Send + Sync {
 
     /// List file names (not paths) under directory `path`.
     fn readdir(&self, path: &Path) -> Result<Vec<String>>;
+
+    /// Ensure directory `path` exists (`create_dir_all` semantics:
+    /// succeeds when it already does). Backends with a purely virtual
+    /// namespace — where files materialize parents implicitly — keep
+    /// the default no-op; directory-backed ones create it for real so
+    /// daemon-served workloads laying out output trees see them on the
+    /// mount.
+    fn mkdir(&self, path: &Path) -> Result<()> {
+        let _ = path;
+        Ok(())
+    }
 
     /// Block until background management work (flush/evict) is complete.
     /// No-op for backends without daemons.

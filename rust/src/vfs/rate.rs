@@ -132,6 +132,11 @@ impl VfsFile for RateLimitedFile {
     fn map_identity(&self) -> Option<u128> {
         self.inner.map_identity()
     }
+
+    // Deliberately NOT delegated: `lease_fd`. A leased fd would let a
+    // remote client pread the inner file directly, bypassing the token
+    // buckets this decorator exists to enforce. The trait default
+    // (`None`) keeps rate-limited reads on the accounted path.
 }
 
 impl<F: Vfs> Vfs for RateLimitedFs<F> {
@@ -165,6 +170,10 @@ impl<F: Vfs> Vfs for RateLimitedFs<F> {
 
     fn readdir(&self, path: &Path) -> Result<Vec<String>> {
         self.inner.readdir(path)
+    }
+
+    fn mkdir(&self, path: &Path) -> Result<()> {
+        self.inner.mkdir(path)
     }
 
     fn sync_mgmt(&self) -> Result<()> {

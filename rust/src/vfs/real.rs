@@ -42,6 +42,9 @@ pub struct RealFile {
     /// `O_APPEND` handle: writes go through the kernel's atomic
     /// end-of-file placement instead of `write_at`.
     append: bool,
+    /// Opened [`OpenMode::Read`]: the underlying fd is `O_RDONLY`, so
+    /// it is safe to lease to a remote client as-is.
+    read_only: bool,
 }
 
 impl RealFile {
@@ -71,7 +74,12 @@ impl RealFile {
             std::io::ErrorKind::NotFound => Error::NotFound(path.clone()),
             _ => Error::io(&path, e),
         })?;
-        Ok(RealFile { path, file, append: mode.appends() })
+        Ok(RealFile {
+            path,
+            file,
+            append: mode.appends(),
+            read_only: !mode.writable(),
+        })
     }
 }
 
@@ -109,6 +117,19 @@ impl VfsFile for RealFile {
             .metadata()
             .map(|m| m.len())
             .map_err(|e| Error::io(&self.path, e))
+    }
+
+    fn lease_fd(&self) -> Option<std::fs::File> {
+        // A read-only RealFile *is* one O_RDONLY fd whose pread is a
+        // raw pread(2): dup it (try_clone) and let the daemon lease the
+        // dup. Unlink/rename/spill leave the inode intact under the
+        // dup, so a revoked-but-in-flight read stays a consistent
+        // snapshot.
+        if self.read_only {
+            self.file.try_clone().ok()
+        } else {
+            None
+        }
     }
 
     fn map_identity(&self) -> Option<u128> {
@@ -190,6 +211,11 @@ impl Vfs for RealFs {
         }
         names.sort();
         Ok(names)
+    }
+
+    fn mkdir(&self, path: &Path) -> Result<()> {
+        let p = self.resolve(path);
+        fs::create_dir_all(&p).map_err(|e| Error::io(&p, e))
     }
 }
 
@@ -342,6 +368,38 @@ mod tests {
             view.write_at(b"MAPPED", 0).unwrap();
         }
         assert_eq!(fs_.read(Path::new("m.dat")).unwrap(), b"MAPPED-bytes");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn only_read_handles_surface_a_lease_fd() {
+        let dir = scratch("realfs_lease");
+        let fs_ = RealFs::new(&dir).unwrap();
+        let p = Path::new("leased.dat");
+        fs_.write(p, b"snapshot-bytes").unwrap();
+        let reader = fs_.open(p, OpenMode::Read).unwrap();
+        let leased = reader.lease_fd().expect("read handle leases its fd");
+        // the lease survives unlink: the inode outlives the name
+        fs_.unlink(p).unwrap();
+        use std::os::unix::fs::FileExt as _;
+        let mut buf = [0u8; 14];
+        leased.read_at(&mut buf, 0).unwrap();
+        assert_eq!(&buf, b"snapshot-bytes");
+        // writable handles never lease
+        fs_.write(p, b"x").unwrap();
+        let writer = fs_.open(p, OpenMode::ReadWrite).unwrap();
+        assert!(writer.lease_fd().is_none(), "writable fds must not leak");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mkdir_creates_real_directories() {
+        let dir = scratch("realfs_mkdir");
+        let fs_ = RealFs::new(&dir).unwrap();
+        fs_.mkdir(Path::new("/out/run7/logs")).unwrap();
+        assert!(dir.join("out/run7/logs").is_dir());
+        // create_dir_all semantics: repeating is fine
+        fs_.mkdir(Path::new("/out/run7/logs")).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }
 

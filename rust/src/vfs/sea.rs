@@ -1063,6 +1063,14 @@ impl SeaFs {
         self.shared.engine.name()
     }
 
+    /// The mount's streamed-transfer chunk size
+    /// (`SeaTuning::chunk_bytes`, min-clamped at mount). The daemon
+    /// forwards it to clients in the `Hello` reply as their default
+    /// readahead window.
+    pub fn chunk_bytes(&self) -> usize {
+        self.shared.mover_cfg.chunk_bytes
+    }
+
     /// Per-device ledger lines joined with device metadata.
     pub fn ledger(&self) -> Vec<DeviceLedger> {
         let lines = self.shared.accountant.lines();
@@ -1951,6 +1959,22 @@ impl VfsFile for SeaFile {
             self.shared.engine.on_access(&self.rel, Access::Read);
         }
         self.file.pread(buf, off)
+    }
+
+    fn lease_fd(&self) -> Option<std::fs::File> {
+        // Delegate to the resident replica's handle: a dir-device (or
+        // plain-RealFs PFS) replica surfaces its O_RDONLY fd; striped
+        // or compressed replicas decline. Reader handles only — the
+        // daemon pairs the fd with the map generation, and a spill's
+        // generation bump revokes it while the orphaned inode keeps
+        // serving in-flight reads a consistent snapshot. Note leased
+        // reads bypass `on_access` heat; the trade is deliberate (the
+        // data plane's whole point is zero daemon involvement).
+        if self.reader {
+            self.file.lease_fd()
+        } else {
+            None
+        }
     }
 
     fn pwrite(&mut self, data: &[u8], off: u64) -> Result<usize> {

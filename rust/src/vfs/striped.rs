@@ -512,6 +512,15 @@ impl Vfs for StripedFs {
         Ok(names)
     }
 
+    fn mkdir(&self, path: &Path) -> Result<()> {
+        // Any member may end up holding a file under this directory
+        // (hash placement / striping), so create it on all of them.
+        for m in &self.members {
+            m.mkdir(path)?;
+        }
+        Ok(())
+    }
+
     fn sync_mgmt(&self) -> Result<()> {
         for m in &self.members {
             m.sync_mgmt()?;

@@ -258,6 +258,7 @@ fn idle_reaped_read_clients_transparently_reconnect() {
     let cfg = ServeCfg {
         socket: sock.clone(),
         idle_timeout: Duration::from_millis(100),
+        lease_fds: true,
     };
     let server =
         Server::spawn_vfs(Arc::new(RealFs::new(&served).unwrap()), None, cfg).unwrap();
@@ -286,6 +287,173 @@ fn idle_reaped_read_clients_transparently_reconnect() {
 
     drop(reader);
     drop(writer);
+    server.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn a_spill_revokes_the_fd_lease_but_in_flight_reads_stay_consistent() {
+    // Tentpole: B holds an SCM_RIGHTS fd lease on a tier-0-resident
+    // file and hammers zero-round-trip preads *while* A grows the file
+    // past tier-0 capacity, forcing a self-spill. The spill unlinks
+    // the tier-0 replica's *name*, not its inode, so every leased read
+    // racing the move returns the consistent pre-spill snapshot; the
+    // next response B observes (MapSync) piggybacks the bumped
+    // generation and revokes the lease back to the wire path.
+    let root = scratch("lease_spill");
+    let sea = stripe_mount(&root, 2 * MIB, RuleSet::from_texts("**", "**", ""));
+    let sock = root.join("sea.sock");
+    let server = Server::spawn(sea, ServeCfg::new(&sock)).unwrap();
+
+    let a = RemoteFs::connect(&sock).unwrap();
+    let b = RemoteFs::connect(&sock).unwrap();
+    let p = Path::new("/sea/leased.dat");
+
+    let mut fa = a.open_remote(p, OpenMode::Write).unwrap();
+    fa.pwrite_all(&vec![1u8; MIB as usize], 0).unwrap();
+
+    let mut fb = b.open_remote(p, OpenMode::Read).unwrap();
+    assert!(
+        fb.has_lease(),
+        "read-only open on a tier-0 (RealFs-backed) resident must come leased"
+    );
+    let g0 = fb.map_sync().unwrap();
+
+    // Reader thread: leased preads in a tight loop while the spill
+    // happens underneath. Every read must return pre-spill bytes.
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let reader = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut buf = vec![0u8; 64 * 1024];
+            let mut reads = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let off = (reads * 64 * 1024) % MIB;
+                fb.pread_exact(&mut buf, off).unwrap();
+                assert!(
+                    buf.iter().all(|&v| v == 1),
+                    "torn leased read at {off} during spill"
+                );
+                reads += 1;
+            }
+            (fb, reads)
+        })
+    };
+
+    // A grows the file past tier-0 capacity: the daemon spills it.
+    for k in 1..4u64 {
+        fa.pwrite_all(&vec![(k + 1) as u8; MIB as usize], k * MIB).unwrap();
+    }
+    drop(fa);
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let (mut fb, reads) = reader.join().unwrap();
+    assert!(reads > 0, "the reader thread must actually have read");
+
+    // Nothing revoked the lease yet — leased preads never touch the
+    // wire, so B has not seen the new generation.
+    assert!(fb.has_lease(), "revocation needs an observed response");
+    let g1 = fb.map_sync().unwrap();
+    assert!(g1 > g0, "B's MapSync must observe the spill (gen {g0} -> {g1})");
+    assert!(!fb.has_lease(), "a newer piggybacked gen revokes the lease");
+
+    // Post-revocation reads ride the wire and see post-spill bytes.
+    let mut tail = vec![0u8; MIB as usize];
+    fb.pread_exact(&mut tail, 3 * MIB).unwrap();
+    assert!(tail.iter().all(|&v| v == 4), "wire reads see the spilled replica");
+
+    drop(fb);
+    server.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn unlink_by_another_client_leaves_the_lease_snapshot_readable() {
+    // Satellite: cross-client unlink-under-lease. A unlinks the file
+    // while B holds a leased fd on it; B's reads keep serving the
+    // snapshot (the inode outlives its name) even though the namespace
+    // entry is gone for everyone.
+    let root = scratch("lease_unlink");
+    let served = root.join("served");
+    let sock = root.join("sea.sock");
+    let server = Server::spawn_vfs(
+        Arc::new(RealFs::new(&served).unwrap()),
+        None,
+        ServeCfg::new(&sock),
+    )
+    .unwrap();
+
+    let a = RemoteFs::connect(&sock).unwrap();
+    let b = RemoteFs::connect(&sock).unwrap();
+    let p = Path::new("/sea/ephemeral.dat");
+    {
+        let mut f = a.open(p, OpenMode::Write).unwrap();
+        f.pwrite_all(&vec![7u8; 256 * 1024], 0).unwrap();
+    }
+
+    let mut fb = b.open_remote(p, OpenMode::Read).unwrap();
+    assert!(fb.has_lease());
+    a.unlink(p).unwrap();
+    assert!(!b.exists(p), "the name is gone for everyone");
+
+    let mut buf = vec![0u8; 256 * 1024];
+    fb.pread_exact(&mut buf, 0).unwrap();
+    assert!(
+        buf.iter().all(|&v| v == 7),
+        "leased reads serve the snapshot after unlink"
+    );
+
+    drop(fb);
+    server.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn eight_leased_handles_read_concurrently_on_one_connection() {
+    // Satellite: the mux + lease paths under real thread concurrency —
+    // eight handles of ONE RemoteFs, each leased, each hammering raw
+    // pread(2)s from its own thread while Open/Close traffic shares
+    // the connection. (The wire-path twin of this test lives in
+    // `vfs::remote`; both run under TSan in CI.)
+    let root = scratch("lease_mux");
+    let served = root.join("served");
+    std::fs::create_dir_all(&served).unwrap();
+    let data: Vec<u8> = (0..1u64 << 20).map(|i| (i % 251) as u8).collect();
+    std::fs::write(served.join("big.dat"), &data).unwrap();
+    let sock = root.join("sea.sock");
+    let server = Server::spawn_vfs(
+        Arc::new(RealFs::new(&served).unwrap()),
+        None,
+        ServeCfg::new(&sock),
+    )
+    .unwrap();
+
+    let fs = RemoteFs::connect(&sock).unwrap();
+    let data = Arc::new(data);
+    let mut threads = Vec::new();
+    for t in 0..8u64 {
+        let mut f = fs.open_remote(Path::new("big.dat"), OpenMode::Read).unwrap();
+        assert!(f.has_lease());
+        let data = data.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut buf = vec![0u8; 4096];
+            for k in 0..128u64 {
+                let page = (k * 53 + t * 97) % 256;
+                let off = page * 4096;
+                f.pread_exact(&mut buf, off).unwrap();
+                assert_eq!(
+                    buf[..],
+                    data[off as usize..off as usize + 4096],
+                    "thread {t} leased read at {off}"
+                );
+            }
+        }));
+    }
+    for th in threads {
+        th.join().unwrap();
+    }
+
+    let c = fs.counters().unwrap();
+    assert!(c.leases_granted >= 8, "leases_granted gauge: {}", c.leases_granted);
     server.shutdown().unwrap();
     let _ = std::fs::remove_dir_all(&root);
 }
