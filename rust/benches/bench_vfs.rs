@@ -12,11 +12,17 @@
 //! `BENCH_compress.json`), and the service transport (the same mount
 //! pread in-process, over the `sea serve` wire, and through an
 //! `SCM_RIGHTS` fd lease, plus pipelined-vs-serialized handles on one
-//! connection, emitting `BENCH_remote.json`).
+//! connection, emitting `BENCH_remote.json`), and the observability
+//! layer itself (histogram-enabled vs -disabled pread overhead plus a
+//! traced flush/spill workload, emitting `BENCH_obs.json`; every sweep
+//! row also carries per-combo latency percentiles diffed from the
+//! `sea::obs` histograms, and `SEA_TRACE=FILE` dumps the flight
+//! recorder as Chrome trace JSON on the way out).
 //!
 //! `SEA_BENCH_SMOKE=1` runs only the tiny DataMover + PageCache +
-//! compress + remote sweeps — the CI smoke invocation that keeps the
-//! bench harness compiling and running.
+//! compress + remote + obs sweeps — the CI smoke invocation that keeps
+//! the bench harness compiling and running and asserts the histogram
+//! overhead bound.
 
 mod common;
 
@@ -69,7 +75,8 @@ fn pagecache_sweep(work: &Path, h: &mut Harness, smoke: bool) {
     } else {
         vec![MIB, 4 * MIB]
     };
-    let mut rows: Vec<(usize, u64, f64, f64, f64, u64, u64, u64, u64)> = Vec::new();
+    let mut rows: Vec<(usize, u64, f64, f64, f64, u64, u64, u64, u64, (u64, u64, u64, u64))> =
+        Vec::new();
     for &page in &page_sizes {
         for &budget in &budgets {
             // baseline: strided pread through a plain handle, two passes
@@ -92,6 +99,7 @@ fn pagecache_sweep(work: &Path, h: &mut Harness, smoke: bool) {
             let mut f = pfs.open(Path::new("blk.dat"), OpenMode::Read).expect("open");
             let mut view = f.map(&cache, 0, file_size, MapMode::Read).expect("map");
             let mut buf = vec![0u8; stride];
+            let obs0 = sea::obs::snapshot();
             let t0 = Instant::now();
             let mut off = 0u64;
             while off < file_size {
@@ -107,6 +115,7 @@ fn pagecache_sweep(work: &Path, h: &mut Harness, smoke: bool) {
                 off += stride as u64;
             }
             let warm_s = t0.elapsed().as_secs_f64();
+            let fill_lat = lat_delta(&obs0, sea::obs::Metric::PageFaultFill);
             let st = cache.stats();
             assert!(
                 st.peak_resident_bytes <= cache.budget(),
@@ -132,6 +141,7 @@ fn pagecache_sweep(work: &Path, h: &mut Harness, smoke: bool) {
                 st.hits,
                 st.evictions,
                 st.peak_resident_bytes,
+                fill_lat,
             ));
         }
     }
@@ -183,14 +193,15 @@ fn pagecache_sweep(work: &Path, h: &mut Harness, smoke: bool) {
     json.push_str(&format!(
         "  \"file_bytes\": {file_size},\n  \"stripe_bytes\": {stripe},\n  \"members\": 4,\n  \"sweep\": [\n"
     ));
-    for (i, (page, budget, pread_s, cold_s, warm_s, faults, hits, ev, peak)) in
+    for (i, (page, budget, pread_s, cold_s, warm_s, faults, hits, ev, peak, lat)) in
         rows.iter().enumerate()
     {
         json.push_str(&format!(
             "    {{\"page_bytes\": {page}, \"budget_bytes\": {budget}, \
              \"pread_s\": {pread_s:.6}, \"mapped_cold_s\": {cold_s:.6}, \
              \"mapped_warm_s\": {warm_s:.6}, \"faults\": {faults}, \"hits\": {hits}, \
-             \"evictions\": {ev}, \"peak_resident_bytes\": {peak}}}{}\n",
+             \"evictions\": {ev}, \"peak_resident_bytes\": {peak}, {}}}{}\n",
+            lat_json("fill", *lat),
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -224,7 +235,7 @@ fn datamover_sweep(work: &Path, h: &mut Harness, smoke: bool) {
     let windows: Vec<usize> = if smoke { vec![2] } else { vec![1, 2, 4] };
     let src_fs = RealFs::new(work.join("dm_src")).expect("src");
     let dst_fs = RealFs::new(work.join("dm_dst")).expect("dst");
-    let mut rows: Vec<(u64, usize, usize, f64, f64, u64)> = Vec::new();
+    let mut rows: Vec<(u64, usize, usize, f64, f64, u64, (u64, u64, u64, u64))> = Vec::new();
     for &size in &sizes {
         let name = format!("f{size}.dat");
         src_fs
@@ -243,6 +254,7 @@ fn datamover_sweep(work: &Path, h: &mut Harness, smoke: bool) {
                 let mut dst = dst_fs
                     .open(Path::new("streamed.dat"), OpenMode::Write)
                     .expect("open");
+                let obs0 = sea::obs::snapshot();
                 let t0 = Instant::now();
                 let n = DataMover::new(
                     MoverCfg { chunk_bytes: chunk, copy_window: window, ..MoverCfg::default() },
@@ -252,6 +264,7 @@ fn datamover_sweep(work: &Path, h: &mut Harness, smoke: bool) {
                 .copy(src.as_mut(), dst.as_mut(), size)
                 .expect("copy");
                 let streamed_s = t0.elapsed().as_secs_f64();
+                let chunk_lat = lat_delta(&obs0, sea::obs::Metric::MoverChunk);
                 assert_eq!(n, size);
                 let peak = metrics.peak_buffer_bytes();
                 assert!(
@@ -263,7 +276,7 @@ fn datamover_sweep(work: &Path, h: &mut Harness, smoke: bool) {
                     vec![streamed_s],
                     format!("wholefile {whole_s:.6}s, peak buffers {peak}B"),
                 );
-                rows.push((size, chunk, window, whole_s, streamed_s, peak));
+                rows.push((size, chunk, window, whole_s, streamed_s, peak, chunk_lat));
             }
         }
     }
@@ -304,11 +317,12 @@ fn datamover_sweep(work: &Path, h: &mut Harness, smoke: bool) {
         format!("{fan_size}B over 4 members, stripe {fan_stripe}B"),
     );
     let mut json = String::from("{\n  \"target\": \"vfs/datamover\",\n  \"sweep\": [\n");
-    for (i, (size, chunk, window, whole_s, streamed_s, peak)) in rows.iter().enumerate() {
+    for (i, (size, chunk, window, whole_s, streamed_s, peak, lat)) in rows.iter().enumerate() {
         json.push_str(&format!(
             "    {{\"file_bytes\": {size}, \"chunk_bytes\": {chunk}, \"copy_window\": {window}, \
              \"wholefile_s\": {whole_s:.6}, \"streamed_s\": {streamed_s:.6}, \
-             \"peak_buffer_bytes\": {peak}}}{}\n",
+             \"peak_buffer_bytes\": {peak}, {}}}{}\n",
+            lat_json("chunk", *lat),
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -374,7 +388,7 @@ fn compress_sweep(work: &Path, h: &mut Harness, smoke: bool) {
                 .collect(),
         ),
     ];
-    let mut rows: Vec<(String, usize, String, f64, u64)> = Vec::new();
+    let mut rows: Vec<(String, usize, String, f64, u64, (u64, u64, u64, u64))> = Vec::new();
     for (label, data) in &corpora {
         let name = format!("{label}.dat");
         src_fs.write(Path::new(&name), data).expect("payload");
@@ -386,12 +400,14 @@ fn compress_sweep(work: &Path, h: &mut Harness, smoke: bool) {
                 let mut dst = dst_fs.open(Path::new(&out), OpenMode::Write).expect("open");
                 let cfg = MoverCfg { chunk_bytes: chunk, copy_window: 2, codec: *codec }
                     .aligned_to(dst_fs.stripe_bytes());
+                let obs0 = sea::obs::snapshot();
                 let t0 = Instant::now();
                 let (n, phys) = DataMover::new(cfg, MovePath::Flush)
                     .with_metrics(&metrics)
                     .copy_counted(src.as_mut(), dst.as_mut(), size)
                     .expect("copy");
                 let wall_s = t0.elapsed().as_secs_f64();
+                let chunk_lat = lat_delta(&obs0, sea::obs::Metric::MoverChunk);
                 assert_eq!(n, size);
                 // every destination reads back byte-identical
                 let mut f = dst_fs.open(Path::new(&out), OpenMode::Read).expect("open");
@@ -429,7 +445,7 @@ fn compress_sweep(work: &Path, h: &mut Harness, smoke: bool) {
                     vec![wall_s],
                     format!("{size}B logical, {phys}B physical"),
                 );
-                rows.push((label.to_string(), chunk, cname.to_string(), wall_s, phys));
+                rows.push((label.to_string(), chunk, cname.to_string(), wall_s, phys, chunk_lat));
             }
         }
     }
@@ -437,10 +453,12 @@ fn compress_sweep(work: &Path, h: &mut Harness, smoke: bool) {
     json.push_str(&format!(
         "  \"file_bytes\": {size},\n  \"stripe_bytes\": {stripe},\n  \"members\": 4,\n  \"sweep\": [\n"
     ));
-    for (i, (label, chunk, cname, wall_s, phys)) in rows.iter().enumerate() {
+    for (i, (label, chunk, cname, wall_s, phys, lat)) in rows.iter().enumerate() {
         json.push_str(&format!(
             "    {{\"corpus\": \"{label}\", \"chunk_bytes\": {chunk}, \"codec\": \"{cname}\", \
-             \"wall_s\": {wall_s:.6}, \"logical_bytes\": {size}, \"physical_bytes\": {phys}}}{}\n",
+             \"wall_s\": {wall_s:.6}, \"logical_bytes\": {size}, \"physical_bytes\": {phys}, \
+             {}}}{}\n",
+            lat_json("chunk", *lat),
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -501,7 +519,7 @@ fn remote_sweep(work: &Path, h: &mut Harness, smoke: bool) {
     let wire = RemoteFs::connect(&sock_wire).expect("connect wire");
 
     let sizes: [u64; 3] = [4 * KIB, 64 * KIB, MIB];
-    let mut rows: Vec<(u64, f64, f64, f64)> = Vec::new();
+    let mut rows: Vec<(u64, f64, f64, f64, (u64, u64, u64, u64))> = Vec::new();
     for &size in &sizes {
         let mut buf = vec![0u8; size as usize];
         let span = file_size - size; // keep every pread in-bounds
@@ -517,11 +535,13 @@ fn remote_sweep(work: &Path, h: &mut Harness, smoke: bool) {
         let mut rf = wire
             .open(Path::new("/sea/served.dat"), OpenMode::Read)
             .expect("wire open");
+        let obs0 = sea::obs::snapshot();
         let t0 = Instant::now();
         for i in 0..reps {
             rf.pread_exact(&mut buf, off_at(i)).expect("wire pread");
         }
         let wire_s = t0.elapsed().as_secs_f64();
+        let wire_lat = lat_delta(&obs0, sea::obs::Metric::WireRtt);
         // leased: identical preads served by pread(2) on the leased fd
         let mut lf = leased
             .open_remote(Path::new("/sea/served.dat"), OpenMode::Read)
@@ -548,7 +568,7 @@ fn remote_sweep(work: &Path, h: &mut Harness, smoke: bool) {
                  ({inproc_s:.6}s) at {size}b"
             );
         }
-        rows.push((size, inproc_s, wire_s, leased_s));
+        rows.push((size, inproc_s, wire_s, leased_s, wire_lat));
     }
 
     // Pipelining: the same 8 x ops 64 KiB scattered preads issued two
@@ -628,10 +648,11 @@ fn remote_sweep(work: &Path, h: &mut Harness, smoke: bool) {
     json.push_str(&format!(
         "  \"file_bytes\": {file_size},\n  \"preads_per_size\": {reps},\n  \"sweep\": [\n"
     ));
-    for (i, (size, inproc_s, wire_s, leased_s)) in rows.iter().enumerate() {
+    for (i, (size, inproc_s, wire_s, leased_s, lat)) in rows.iter().enumerate() {
         json.push_str(&format!(
             "    {{\"pread_bytes\": {size}, \"inprocess_s\": {inproc_s:.6}, \
-             \"wire_s\": {wire_s:.6}, \"leased_s\": {leased_s:.6}}}{}\n",
+             \"wire_s\": {wire_s:.6}, \"leased_s\": {leased_s:.6}, {}}}{}\n",
+            lat_json("wire", *lat),
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -653,19 +674,213 @@ fn remote_sweep(work: &Path, h: &mut Harness, smoke: bool) {
     }
 }
 
+/// Per-combo latency percentiles from the obs histograms: diff the
+/// registry against a snapshot taken before the combo and return
+/// `(n, p50, p95, p99)` nanoseconds for `metric` (zeros when nothing
+/// was recorded — e.g. histograms disabled).
+fn lat_delta(before: &sea::obs::ObsSnapshot, metric: sea::obs::Metric) -> (u64, u64, u64, u64) {
+    let d = sea::obs::snapshot().diff(before);
+    match d.get(metric) {
+        Some(h) => (h.count, h.p50(), h.p95(), h.p99()),
+        None => (0, 0, 0, 0),
+    }
+}
+
+/// JSON fragment for one [`lat_delta`] quad, prefixed `"{key}_..."`.
+fn lat_json(key: &str, q: (u64, u64, u64, u64)) -> String {
+    format!(
+        "\"{key}_n\": {}, \"{key}_p50_ns\": {}, \"{key}_p95_ns\": {}, \"{key}_p99_ns\": {}",
+        q.0, q.1, q.2, q.3
+    )
+}
+
+/// Histogram-overhead sweep (the observability acceptance gate): the
+/// same strided 64 KiB pread workload through a Sea mount with latency
+/// histograms enabled vs disabled, min-of-reps; under
+/// `SEA_BENCH_SMOKE=1` the enabled run must stay within 5% of the
+/// disabled one (+5 ms of timer slack for clock granularity). Also
+/// runs a tiny flush-then-spill management workload so a `SEA_TRACE`'d
+/// bench run captures full lifecycles in its dump. Emits
+/// `BENCH_obs.json` with wall-time percentiles of both modes and the
+/// enabled run's per-metric latency percentiles.
+fn obs_sweep(work: &Path, h: &mut Harness, smoke: bool) {
+    let root = work.join("obs");
+    let file_size: u64 = 2 * MIB;
+    let reps: usize = if smoke { 5 } else { 9 };
+    let passes: usize = if smoke { 4 } else { 16 };
+    let pfs = Arc::new(RealFs::new(root.join("pfs")).expect("pfs"));
+    let sea = SeaFs::mount(SeaFsConfig {
+        mountpoint: PathBuf::from("/sea"),
+        devices: vec![DeviceSpec::dir(root.join("dev0"), 0, 64 * MIB).expect("dev")],
+        pfs,
+        max_file_size: 4 * MIB,
+        parallel_procs: 1,
+        rules: RuleSet::default(),
+        seed: 5,
+        tuning: SeaTuning::default(),
+    })
+    .expect("mount");
+    let payload: Vec<u8> = (0..file_size as usize).map(|k| (k % 249) as u8).collect();
+    sea.write(Path::new("/sea/obs.dat"), &payload).expect("payload");
+    let stride = (64 * KIB) as usize;
+    let time_mode = |on: bool| -> Vec<f64> {
+        sea::obs::set_enabled(on);
+        let mut f = sea.open(Path::new("/sea/obs.dat"), OpenMode::Read).expect("open");
+        let mut buf = vec![0u8; stride];
+        let mut samples = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            for _pass in 0..passes {
+                let mut off = 0u64;
+                while off < file_size {
+                    f.pread_exact(&mut buf, off).expect("pread");
+                    off += stride as u64;
+                }
+            }
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples
+    };
+    let _ = time_mode(false); // warm both the page cache and the code path
+    let off_samples = time_mode(false);
+    sea::obs::reset();
+    let empty = sea::obs::snapshot();
+    let on_samples = time_mode(true);
+    let pread_lat = lat_delta(&empty, sea::obs::Metric::PreadTier0);
+    let snap = sea::obs::snapshot();
+    sea::obs::set_enabled(true); // later sweeps emit their percentiles
+    let min_of = |v: &[f64]| v.iter().cloned().fold(f64::INFINITY, f64::min);
+    let (off_s, on_s) = (min_of(&off_samples), min_of(&on_samples));
+    assert!(
+        pread_lat.0 >= (reps * passes * (file_size as usize / stride)) as u64,
+        "enabled run must have recorded every pread ({} samples)",
+        pread_lat.0
+    );
+    h.record(
+        "obs_pread_64k_hist_on",
+        on_samples.clone(),
+        format!("disabled min {off_s:.6}s"),
+    );
+    h.record("obs_pread_64k_hist_off", off_samples.clone(), String::new());
+    if smoke {
+        // Acceptance bound: recording is 4 relaxed atomic RMWs + two
+        // clock reads per op, so the enabled path must stay within 5%
+        // of the disabled one (+5 ms slack — smoke runs sit near
+        // clock granularity).
+        assert!(
+            on_s <= off_s * 1.05 + 5e-3,
+            "histogram overhead breached 5%: enabled {on_s:.6}s vs disabled {off_s:.6}s"
+        );
+    }
+    // a tiny flush-then-spill management workload: under SEA_TRACE the
+    // dump then covers both lifecycles end to end
+    let mroot = work.join("obs_mgmt");
+    let mpfs = Arc::new(RealFs::new(mroot.join("pfs")).expect("pfs"));
+    let mgmt = SeaFs::mount(SeaFsConfig {
+        mountpoint: PathBuf::from("/sea"),
+        devices: vec![DeviceSpec::dir(mroot.join("dev0"), 0, 2 * MIB).expect("dev")],
+        pfs: mpfs,
+        max_file_size: MIB,
+        parallel_procs: 1,
+        rules: RuleSet::from_texts("**_final.dat", "**_final.dat", ""),
+        seed: 5,
+        tuning: SeaTuning::default(),
+    })
+    .expect("mount");
+    mgmt.write(Path::new("/sea/a_final.dat"), &vec![1u8; (512 * KIB) as usize])
+        .expect("flush payload");
+    mgmt.sync_mgmt().expect("flush drain"); // flush + evict: device empties
+    {
+        // a streaming writer overruns the 2 MiB device mid-write, so
+        // management must spill to make room (placement fallback alone
+        // would never record a spill lifecycle)
+        let mut f = mgmt.open(Path::new("/sea/hot.dat"), OpenMode::Write).expect("hot");
+        let chunk = vec![9u8; (256 * KIB) as usize];
+        for k in 0..12u64 {
+            f.pwrite_all(&chunk, k * 256 * KIB).expect("stream");
+        }
+    }
+    mgmt.sync_mgmt().expect("spill drain");
+    let mc = mgmt.counters();
+    assert!(mc.flushes >= 1, "mgmt workload must flush: {mc:?}");
+    assert!(
+        mc.self_spills + mc.victim_spills >= 1,
+        "mgmt workload must spill: {mc:?}"
+    );
+
+    let off_sum = sea::util::Summary::of(&off_samples).expect("samples");
+    let on_sum = sea::util::Summary::of(&on_samples).expect("samples");
+    let mut json = String::from("{\n  \"target\": \"vfs/obs\",\n");
+    json.push_str(&format!(
+        "  \"file_bytes\": {file_size},\n  \"stride_bytes\": {stride},\n  \
+         \"passes\": {passes},\n  \"reps\": {reps},\n"
+    ));
+    json.push_str(&format!(
+        "  \"overhead\": {{\"off_min_s\": {off_s:.6}, \"on_min_s\": {on_s:.6}, \
+         \"on_over_off\": {:.4}, \"off_p95_s\": {:.6}, \"off_p99_s\": {:.6}, \
+         \"on_p95_s\": {:.6}, \"on_p99_s\": {:.6}}},\n",
+        on_s / off_s.max(1e-12),
+        off_sum.p95,
+        off_sum.p99,
+        on_sum.p95,
+        on_sum.p99
+    ));
+    json.push_str("  \"latency_ns\": [\n");
+    for (i, (idx, hs)) in snap.metrics.iter().enumerate() {
+        let name = sea::obs::Metric::from_index(*idx as usize)
+            .map(|m| m.name().to_string())
+            .unwrap_or_else(|| format!("metric#{idx}"));
+        json.push_str(&format!(
+            "    {{\"metric\": \"{name}\", \"n\": {}, \"p50\": {}, \"p95\": {}, \
+             \"p99\": {}, \"max\": {}}}{}\n",
+            hs.count,
+            hs.p50(),
+            hs.p95(),
+            hs.p99(),
+            hs.max,
+            if i + 1 == snap.metrics.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_obs.json", &json) {
+        Ok(()) => println!("wrote BENCH_obs.json ({} metrics)", snap.metrics.len()),
+        Err(e) => eprintln!("bench: could not write BENCH_obs.json: {e}"),
+    }
+}
+
+/// `SEA_TRACE=FILE` support for bench runs: dump the flight recorder
+/// on the way out (both the smoke and full paths).
+fn dump_trace(path: &Option<PathBuf>) {
+    if let Some(p) = path {
+        match sea::obs::trace::dump_to(p) {
+            Ok(n) => println!("wrote {} ({n} trace events)", p.display()),
+            Err(e) => eprintln!("bench: could not write {}: {e}", p.display()),
+        }
+    }
+}
+
 fn main() {
     let work = std::env::temp_dir().join("sea_bench_vfs");
     let _ = std::fs::remove_dir_all(&work);
+    let trace_path = std::env::var("SEA_TRACE").ok().map(PathBuf::from);
+    if trace_path.is_some() {
+        sea::obs::trace::set_enabled(true);
+    }
+    // histograms default on (SEA_OBS), but make it explicit: every
+    // sweep's JSON carries percentile fields derived from them
+    sea::obs::set_enabled(true);
     if std::env::var("SEA_BENCH_SMOKE").is_ok() {
-        // CI smoke: tiny DataMover + PageCache + codec + remote sweeps
-        // only — proves the harness still builds, runs, and emits its
-        // JSON files
+        // CI smoke: tiny DataMover + PageCache + codec + remote + obs
+        // sweeps only — proves the harness still builds, runs, emits
+        // its JSON files, and keeps the histogram overhead bounded
         let mut h = Harness::new("vfs").with_reps(1, 1);
         datamover_sweep(&work, &mut h, true);
         pagecache_sweep(&work, &mut h, true);
         compress_sweep(&work, &mut h, true);
         remote_sweep(&work, &mut h, true);
+        obs_sweep(&work, &mut h, true);
         let _ = h.finish();
+        dump_trace(&trace_path);
         let _ = std::fs::remove_dir_all(&work);
         return;
     }
@@ -797,7 +1012,7 @@ fn main() {
     const MEMBERS: usize = 4;
     const SCALE_FILES: usize = 32;
     const SCALE_KIB: u64 = 256;
-    let mut grid: Vec<(usize, usize, f64, Vec<usize>)> = Vec::new();
+    let mut grid: Vec<(usize, usize, f64, Vec<usize>, (u64, u64, u64, u64))> = Vec::new();
     for &workers in &[1usize, 2, 4, 8] {
         for &per_member in &[1usize, 2, 4] {
             let root = work.join(format!("scale_w{workers}_m{per_member}"));
@@ -828,6 +1043,7 @@ fn main() {
             })
             .expect("mount");
             let payload = vec![1u8; (SCALE_KIB * KIB) as usize];
+            let obs0 = sea::obs::snapshot();
             let t0 = std::time::Instant::now();
             for i in 0..SCALE_FILES {
                 let p = PathBuf::from(format!("/sea/s/f{i:02}.dat"));
@@ -836,6 +1052,7 @@ fn main() {
             }
             mount.sync_mgmt().expect("drain");
             let drain_s = t0.elapsed().as_secs_f64();
+            let chunk_lat = lat_delta(&obs0, sea::obs::Metric::MoverChunk);
             let (fl, ev) = mount.mgmt_counters();
             assert_eq!((fl, ev), (SCALE_FILES as u64, SCALE_FILES as u64));
             let peaks = mount.flush_member_peaks().unwrap_or_default();
@@ -845,7 +1062,7 @@ fn main() {
                 vec![drain_s],
                 format!("member peaks {peaks:?}"),
             );
-            grid.push((workers, per_member, drain_s, peaks));
+            grid.push((workers, per_member, drain_s, peaks, chunk_lat));
             let _ = std::fs::remove_dir_all(&root);
         }
     }
@@ -853,14 +1070,15 @@ fn main() {
     json.push_str(&format!(
         "  \"members\": {MEMBERS},\n  \"files\": {SCALE_FILES},\n  \"file_kib\": {SCALE_KIB},\n  \"grid\": [\n"
     ));
-    for (i, (w, m, s, peaks)) in grid.iter().enumerate() {
+    for (i, (w, m, s, peaks, lat)) in grid.iter().enumerate() {
         let peaks_json = peaks
             .iter()
             .map(|p| p.to_string())
             .collect::<Vec<_>>()
             .join(", ");
         json.push_str(&format!(
-            "    {{\"workers\": {w}, \"per_member\": {m}, \"drain_s\": {s:.6}, \"member_peaks\": [{peaks_json}]}}{}\n",
+            "    {{\"workers\": {w}, \"per_member\": {m}, \"drain_s\": {s:.6}, \"member_peaks\": [{peaks_json}], {}}}{}\n",
+            lat_json("chunk", *lat),
             if i + 1 == grid.len() { "" } else { "," }
         ));
     }
@@ -875,7 +1093,8 @@ fn main() {
     // the temperature engine spills the cold residents (the writer stays
     // on the fast device) and promotes them back once space frees.
     // Emits BENCH_engine_compare.json.
-    let mut engine_rows: Vec<(&str, f64, sea::vfs::MgmtCounters)> = Vec::new();
+    let mut engine_rows: Vec<(&str, f64, sea::vfs::MgmtCounters, (u64, u64, u64, u64))> =
+        Vec::new();
     for kind in [EngineKind::Paper, EngineKind::Temperature] {
         let root = work.join(format!("engine_{}", kind.name()));
         let pfs = Arc::new(RealFs::new(root.join("pfs")).expect("pfs"));
@@ -890,6 +1109,7 @@ fn main() {
             tuning: SeaTuning { engine: kind, ..SeaTuning::default() },
         })
         .expect("mount");
+        let obs0 = sea::obs::snapshot();
         let t0 = std::time::Instant::now();
         for i in 0..4u8 {
             mount
@@ -912,6 +1132,7 @@ fn main() {
         mount.unlink(Path::new("/sea/hot.dat")).expect("unlink");
         mount.sync_mgmt().expect("drain");
         let elapsed = t0.elapsed().as_secs_f64();
+        let chunk_lat = lat_delta(&obs0, sea::obs::Metric::MoverChunk);
         let c = mount.counters();
         match kind {
             EngineKind::Paper => {
@@ -933,20 +1154,21 @@ fn main() {
                 c.self_spills, c.victim_spills, c.promotions
             ),
         );
-        engine_rows.push((kind.name(), elapsed, c));
+        engine_rows.push((kind.name(), elapsed, c, chunk_lat));
         let _ = std::fs::remove_dir_all(&root);
     }
     let mut ejson = String::from("{\n  \"target\": \"vfs/engine_compare\",\n  \"engines\": [\n");
-    for (i, (name, s, c)) in engine_rows.iter().enumerate() {
+    for (i, (name, s, c, lat)) in engine_rows.iter().enumerate() {
         ejson.push_str(&format!(
             "    {{\"engine\": \"{name}\", \"elapsed_s\": {s:.6}, \"flushes\": {}, \
              \"evictions\": {}, \"self_spills\": {}, \"victim_spills\": {}, \
-             \"promotions\": {}}}{}\n",
+             \"promotions\": {}, {}}}{}\n",
             c.flushes,
             c.evictions,
             c.self_spills,
             c.victim_spills,
             c.promotions,
+            lat_json("chunk", *lat),
             if i + 1 == engine_rows.len() { "" } else { "," }
         ));
     }
@@ -970,6 +1192,9 @@ fn main() {
     // in-process vs served-over-a-socket preads (BENCH_remote.json)
     remote_sweep(&work, &mut h, false);
 
+    // histogram overhead on/off + per-metric percentiles (BENCH_obs.json)
+    obs_sweep(&work, &mut h, false);
+
     let results = h.finish();
     // derive the per-op interception overhead from the 4k pair
     let mean = |name: &str| {
@@ -982,5 +1207,6 @@ fn main() {
     let overhead =
         (mean("seafs_write_4k_x200") - mean("realfs_write_4k_x200")) / N as f64 * 1e6;
     println!("\nper-write interception overhead (4k): {overhead:.2} µs");
+    dump_trace(&trace_path);
     let _ = std::fs::remove_dir_all(&work);
 }

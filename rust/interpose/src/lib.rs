@@ -40,6 +40,12 @@
 //! * `SEA_TARGET` — directory that backs the mountpoint.
 //! * `SEA_SOCKET` — `sea serve` socket; routes mount paths through the
 //!   daemon instead of translating them.
+//! * `SEA_TRACE`  — arm the library's flight recorder at load and dump
+//!   the host process's client-side events (lease revocations, …) as
+//!   Chrome trace-event JSON to this path at exit. Daemon-side
+//!   lifecycles land in the *daemon's* `SEA_TRACE` dump, not here.
+//! * `SEA_OBS`    — set to `0` to disable the wire-RTT latency
+//!   histograms the remote transport records.
 //!
 //! Wrapped symbols: `open`, `open64`, `openat`, `creat`, `creat64`,
 //! `fopen`, `fopen64`, `stat`, `lstat`, `access`, `unlink`, `mkdir`,
@@ -215,6 +221,33 @@ pub unsafe extern "C" fn mkdir(path: *const c_char, mode: libc::mode_t) -> c_int
         None => real(path, mode),
     }
 }
+
+// --- flight recorder (SEA_TRACE) --------------------------------------------
+
+/// Arm the library's flight recorder when `SEA_TRACE` names a dump
+/// path. Runs from `.init_array` — after libc is up, before `main` —
+/// so events from the host process's very first intercepted call are
+/// captured; the dump is registered with `atexit(3)`.
+extern "C" {
+    fn atexit(cb: extern "C" fn()) -> c_int;
+}
+
+extern "C" fn sea_trace_init() {
+    if std::env::var_os("SEA_TRACE").is_some() {
+        sea::obs::trace::set_enabled(true);
+        unsafe { atexit(sea_trace_dump) };
+    }
+}
+
+extern "C" fn sea_trace_dump() {
+    if let Some(p) = std::env::var_os("SEA_TRACE") {
+        let _ = sea::obs::trace::dump_to(std::path::Path::new(&p));
+    }
+}
+
+#[used]
+#[link_section = ".init_array"]
+static SEA_TRACE_CTOR: extern "C" fn() = sea_trace_init;
 
 // --- remote transport (SEA_SOCKET) ------------------------------------------
 //

@@ -107,7 +107,8 @@ impl Harness {
             "case", "mean", "min", "max", "note"
         );
         let mut csv = Csv::new(vec![
-            "target", "case", "n", "mean_s", "std_s", "min_s", "max_s", "note",
+            "target", "case", "n", "mean_s", "std_s", "min_s", "max_s", "p95_s",
+            "p99_s", "note",
         ]);
         for r in &self.results {
             let s = r.summary();
@@ -137,6 +138,8 @@ impl Harness {
                 f(s.std),
                 f(s.min),
                 f(s.max),
+                f(s.p95),
+                f(s.p99),
                 r.note.clone(),
             ]);
         }

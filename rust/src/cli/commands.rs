@@ -9,13 +9,14 @@ use crate::coordinator::{run_pipeline, ExperimentCfg, IoMode, Mode, PipelineCfg}
 use crate::coordinator::run_experiment as run_sim_experiment;
 use crate::error::{Error, Result};
 use crate::model::{lustre_bounds, sea_bounds, ModelParams};
+use crate::obs::{self, trace, ObsSnapshot};
 use crate::placement::{EngineKind, RuleSet};
 use crate::report::{self, describe_run, Scale};
 use crate::runtime::Engine;
 use crate::sim::spec::ClusterSpec;
 use crate::util::bytes::fmt_bw;
 use crate::util::{fmt_bytes, MIB};
-use crate::serve::{ServeCfg, Server};
+use crate::serve::{protocol::CountersReply, ServeCfg, Server};
 use crate::vfs::{
     DeviceLedger, DeviceSpec, MgmtCounters, PageCache, RateLimitedFs, RealFs, RemoteFs,
     SeaFs, SeaFsConfig, SeaTuning, Vfs,
@@ -102,6 +103,29 @@ fn print_pagecache(s: &crate::vfs::PageCacheStats) {
         fmt_bytes(s.writeback_bytes),
         fmt_bytes(s.peak_resident_bytes),
     );
+}
+
+/// Resolve the flight-recorder output for `sea run --trace FILE` /
+/// `SEA_TRACE=FILE` (flag wins) and arm the recorder when one is set.
+/// Pair with [`finish_trace`] on every exit path.
+fn trace_target(flag: Option<&str>) -> Option<PathBuf> {
+    let out = flag
+        .map(String::from)
+        .or_else(|| std::env::var("SEA_TRACE").ok())
+        .map(PathBuf::from);
+    if out.is_some() {
+        trace::set_enabled(true);
+    }
+    out
+}
+
+/// Dump the flight recorder to `path` (no-op when tracing is off).
+fn finish_trace(path: Option<&std::path::Path>) -> Result<()> {
+    if let Some(p) = path {
+        let events = trace::dump_to(p).map_err(|e| Error::io(p, e))?;
+        println!("trace      : {events} events -> {} (chrome://tracing)", p.display());
+    }
+    Ok(())
 }
 
 fn mode_from(args: &Args) -> Result<Mode> {
@@ -354,7 +378,9 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
              \x20       [--engine paper|temperature]  # placement engine\n\
              \x20       [--heat-decay X] [--heat-freq-weight X] [--promote-headroom S]\n\
              \x20       [--compress] [--compress-level 1..9] [--compress-min-ratio X]\n\
-             \x20       # encode cold-tier flushes/spills (see vfs::compress)"
+             \x20       # encode cold-tier flushes/spills (see vfs::compress)\n\
+             \x20       [--trace FILE]  # flight-recorder dump as Chrome trace JSON\n\
+             \x20       # (or SEA_TRACE=FILE; load in chrome://tracing / Perfetto)"
         );
         return Ok(0);
     }
@@ -372,6 +398,7 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
         Error::InvalidArg(format!("--io-mode {io_tok:?}: expected streamed | mmap"))
     })?;
     let tuning = tuning_from_args(args)?;
+    let trace_out = trace_target(args.get("trace"));
 
     let engine = Arc::new(Engine::load(&artifacts)?);
     let elems = engine.chunk_elems();
@@ -455,6 +482,7 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
         if results.len() == 2 {
             println!("speedup    : {:.2}x", results[0].1 / results[1].1);
         }
+        finish_trace(trace_out.as_deref())?;
         return Ok(0);
     }
     if mode == "sea" || mode == "both" {
@@ -512,6 +540,7 @@ pub fn run_real(args: &mut Args) -> Result<i32> {
     if results.len() == 2 {
         println!("speedup    : {:.2}x", results[0].1 / results[1].1);
     }
+    finish_trace(trace_out.as_deref())?;
     Ok(0)
 }
 
@@ -553,7 +582,8 @@ pub fn run_serve(args: &mut Args) -> Result<i32> {
              \x20         [--no-leases]  # keep reads on the wire (no SCM_RIGHTS fds)\n\
              \x20         [--engine paper|temperature] [--flush-workers N] ...\n\
              \x20         # all `sea stat` mount flags apply; clients must use\n\
-             \x20         # the same --work root for input paths to line up"
+             \x20         # the same --work root for input paths to line up\n\
+             \x20         # SEA_TRACE=FILE dumps the flight recorder on shutdown"
         );
         return Ok(0);
     }
@@ -575,6 +605,7 @@ pub fn run_serve(args: &mut Args) -> Result<i32> {
         args.usize_or("idle-timeout-secs", serve_opts.idle_timeout_secs as usize)?;
     let work = PathBuf::from(args.str_or("work", "/tmp/sea_run"));
     let tuning = tuning_from_args(args)?;
+    let trace_out = trace_target(None);
     let rules = RuleSet::load_dir(&work)?;
     let pfs: Arc<dyn Vfs> = Arc::new(RealFs::new(work.join("pfs"))?);
     let sea = Arc::new(SeaFs::mount(SeaFsConfig {
@@ -603,12 +634,57 @@ pub fn run_serve(args: &mut Args) -> Result<i32> {
     }
     println!("sea serve: draining and shutting down");
     server.shutdown()?;
+    finish_trace(trace_out.as_deref())?;
     Ok(0)
 }
 
+/// `sea stat --connect SOCKET --watch SECS`: after the initial full
+/// report, poll the daemon every interval and print what changed —
+/// request rate, lease grants, and per-op-class latency percentiles
+/// over *that interval* (histogram diffs, not cumulative totals; see
+/// [`ObsSnapshot::diff`]). Quiet op classes print nothing. Runs until
+/// SIGINT/SIGTERM.
+fn watch_daemon(fs: &RemoteFs, first: CountersReply, secs: u64) -> Result<()> {
+    install_stop_handlers();
+    let mut prev = first;
+    loop {
+        // sleep in 100ms slices so Ctrl-C lands promptly, not at the
+        // end of a long interval
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(secs);
+        while std::time::Instant::now() < deadline {
+            if SERVE_STOP.load(std::sync::atomic::Ordering::SeqCst) {
+                return Ok(());
+            }
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+        let cur = fs.counters()?;
+        let dops = cur.ops_served.saturating_sub(prev.ops_served);
+        println!(
+            "-- +{secs}s: {} ops ({}/s), {} clients connected, +{} fd leases",
+            dops,
+            dops / secs.max(1),
+            cur.clients_connected,
+            cur.leases_granted.saturating_sub(prev.leases_granted),
+        );
+        match (&cur.lat, &prev.lat) {
+            (Some(c), Some(p)) => print!("{}", c.diff(p).render()),
+            (Some(c), None) => print!("{}", c.render()),
+            _ => {}
+        }
+        prev = cur;
+    }
+}
+
 /// Render a mount's per-device ledger lines and management counters
-/// (the `sea stat` body).
-fn format_stat(engine: &str, ledger: &[DeviceLedger], c: MgmtCounters) -> String {
+/// (the `sea stat` body). `lat` appends one `lat:` percentile line per
+/// op class when histograms are available — `None` (an obs-disabled
+/// mount, or a pre-v3 daemon) keeps the classic counter-only shape.
+fn format_stat(
+    engine: &str,
+    ledger: &[DeviceLedger],
+    c: MgmtCounters,
+    lat: Option<&ObsSnapshot>,
+) -> String {
     // `logical / physical (ratio)`: what the device's residents decode
     // to over what they actually store — 1.00x everywhere unless a
     // codec ran (see `vfs::compress`)
@@ -662,6 +738,9 @@ fn format_stat(engine: &str, ledger: &[DeviceLedger], c: MgmtCounters) -> String
         fmt_bytes(c.page_resident_bytes),
         fmt_bytes(c.page_peak_resident_bytes),
     ));
+    if let Some(l) = lat {
+        out.push_str(&l.render());
+    }
     out
 }
 
@@ -679,6 +758,7 @@ pub fn run_stat(args: &mut Args) -> Result<i32> {
     if args.has("help") {
         println!(
             "sea stat [--connect SOCKET]  # live counters from a `sea serve` daemon\n\
+             \x20        [--watch SECS]  # with --connect: poll and print interval deltas\n\
              \x20        [--work /tmp/sea_run] [--max-file-size 617MiB] [--procs N]\n\
              \x20        [--config cfg.toml] [--engine paper|temperature]\n\
              \x20        [--flush-workers N] [--registry-shards N]\n\
@@ -690,11 +770,14 @@ pub fn run_stat(args: &mut Args) -> Result<i32> {
         );
         return Ok(0);
     }
+    let watch_secs = args.usize_or("watch", 0)? as u64;
     if let Some(sock) = args.get("connect") {
         // Live daemon: its counters, its ledger, plus who's connected.
+        // A v3 daemon also ships its latency histograms; a v2 one
+        // leaves `lat` empty and the output degrades to counters only.
         let fs = RemoteFs::connect(sock)?;
         let c = fs.counters()?;
-        print!("{}", format_stat(&c.engine, &c.ledger, c.counters));
+        print!("{}", format_stat(&c.engine, &c.ledger, c.counters, c.lat.as_ref()));
         println!(
             "clients: {} connected ({} total), {} open handles, {} ops served",
             c.clients_connected, c.clients_total, c.open_handles, c.ops_served
@@ -703,7 +786,17 @@ pub fn run_stat(args: &mut Args) -> Result<i32> {
             "dplane : {} fd leases granted, {} peak in-flight ops on one connection",
             c.leases_granted, c.inflight_peak
         );
+        if watch_secs > 0 {
+            watch_daemon(&fs, c, watch_secs)?;
+        }
         return Ok(0);
+    }
+    if watch_secs > 0 {
+        return Err(Error::InvalidArg(
+            "--watch needs --connect SOCKET: an ephemeral local mount has \
+             nothing running to watch"
+                .into(),
+        ));
     }
     let work = PathBuf::from(args.str_or("work", "/tmp/sea_run"));
     let tuning = tuning_from_args(args)?;
@@ -720,7 +813,8 @@ pub fn run_stat(args: &mut Args) -> Result<i32> {
         tuning,
     })?;
     sea.sync_mgmt()?;
-    print!("{}", format_stat(sea.engine_name(), &sea.ledger(), sea.counters()));
+    let lat = obs::snapshot();
+    print!("{}", format_stat(sea.engine_name(), &sea.ledger(), sea.counters(), Some(&lat)));
     Ok(0)
 }
 
@@ -780,7 +874,7 @@ mod tests {
             page_resident_bytes: MIB / 2,
             page_peak_resident_bytes: MIB,
         };
-        let s = format_stat("temperature", &ledger, counters);
+        let s = format_stat("temperature", &ledger, counters, None);
         assert!(s.contains("engine : temperature"), "{s}");
         assert!(s.contains("/dev/shm/tier0"), "{s}");
         assert!(s.contains("disk0"), "{s}");
@@ -801,7 +895,36 @@ mod tests {
         assert_eq!(
             s.lines().count(),
             1 + 1 + 2 + 1 + 1 + 1,
-            "header + table + mgmt + moved + pages"
+            "header + table + mgmt + moved + pages (no lat block without histograms)"
+        );
+    }
+
+    #[test]
+    fn format_stat_appends_latency_lines_when_histograms_arrive() {
+        let counters = MgmtCounters::default();
+        let h = crate::obs::hist::Hist::new();
+        for v in [10_000u64, 20_000, 3_000_000] {
+            h.record(v);
+        }
+        let lat = ObsSnapshot {
+            metrics: vec![
+                (crate::obs::Metric::PreadTier0.index() as u8, h.snapshot()),
+                (crate::obs::Metric::DaemonRequest.index() as u8, h.snapshot()),
+            ],
+        };
+        let s = format_stat("paper", &[], counters, Some(&lat));
+        assert!(s.contains("lat    : pread.tier0"), "{s}");
+        assert!(s.contains("lat    : daemon.req"), "{s}");
+        assert!(s.contains("p95"), "{s}");
+        // base shape (minus the ledger table rows) plus one lat line
+        // per metric
+        let base = format_stat("paper", &[], counters, None);
+        assert_eq!(s.lines().count(), base.lines().count() + 2, "{s}");
+        // an empty snapshot adds nothing
+        let empty = ObsSnapshot::default();
+        assert_eq!(
+            format_stat("paper", &[], counters, Some(&empty)).lines().count(),
+            base.lines().count()
         );
     }
 

@@ -34,6 +34,10 @@
 //!   compute (`artifacts/*.hlo.txt`); Python never runs at request time.
 //! * [`workload`] + [`coordinator`] — the incrementation application
 //!   (paper Algorithm 1) and the leader/worker pipeline driver.
+//! * [`obs`] — observability: lock-free latency histograms (p50/p95/p99
+//!   per op class × layer, surfaced by `sea stat` locally and over the
+//!   wire) and a flight recorder dumping Chrome trace-event JSON
+//!   (`sea run --trace` / `SEA_TRACE`).
 //! * [`bench`], [`testkit`] — offline substitutes for criterion/proptest.
 
 pub mod bench;
@@ -43,6 +47,7 @@ pub mod coordinator;
 pub mod error;
 pub mod hierarchy;
 pub mod model;
+pub mod obs;
 pub mod placement;
 pub mod report;
 pub mod runtime;

@@ -1,0 +1,397 @@
+//! Lock-free log₂-bucketed latency histograms.
+//!
+//! A [`Hist`] is 64 atomic `u64` buckets — bucket `i` counts samples in
+//! `[2^i, 2^(i+1))` nanoseconds (bucket 0 additionally absorbs 0) —
+//! plus running count/sum/max. Recording is four relaxed atomic RMWs
+//! and never takes a lock, so call sites on hot I/O paths stay cheap
+//! and any number of threads record concurrently.
+//!
+//! [`Hist::snapshot`] freezes a [`HistSnapshot`]: a plain-value copy
+//! that merges with others (client + daemon sides of one op class) and
+//! estimates quantiles by cumulative-rank walk with linear
+//! interpolation inside the bucket. The estimate is bounded by the
+//! bucket that holds the true order statistic: it never leaves
+//! `[2^i, 2^(i+1))`, so relative error is at most 2x (tighter near the
+//! top, where the observed max clamps the last bucket).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log₂ buckets (one per bit of a `u64` nanosecond value).
+pub const BUCKETS: usize = 64;
+
+/// Log₂ bucket index of `v`: `floor(log2(v))`, with 0 mapping to
+/// bucket 0.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    (63 - (v | 1).leading_zeros()) as usize
+}
+
+/// Inclusive lower bound of bucket `i` (`0` for bucket 0).
+#[inline]
+pub fn bucket_lo(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << i
+    }
+}
+
+/// Inclusive upper bound of bucket `i`.
+#[inline]
+pub fn bucket_hi(i: usize) -> u64 {
+    if i >= 63 {
+        u64::MAX
+    } else {
+        (1u64 << (i + 1)) - 1
+    }
+}
+
+/// A concurrent log₂ latency histogram (values in nanoseconds).
+pub struct Hist {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    /// An empty histogram.
+    pub fn new() -> Hist {
+        Hist {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample. Wait-free: four relaxed atomic RMWs.
+    #[inline]
+    pub fn record(&self, nanos: u64) {
+        self.buckets[bucket_of(nanos)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(nanos, Ordering::Relaxed);
+        self.max.fetch_max(nanos, Ordering::Relaxed);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Freeze a point-in-time copy. Concurrent recorders may land
+    /// between the field loads, so a snapshot taken mid-burst can be
+    /// off by the in-flight samples — fine for reporting, never torn
+    /// per field.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut s = HistSnapshot::default();
+        for (i, b) in self.buckets.iter().enumerate() {
+            s.buckets[i] = b.load(Ordering::Relaxed);
+        }
+        s.count = self.count.load(Ordering::Relaxed);
+        s.sum = self.sum.load(Ordering::Relaxed);
+        s.max = self.max.load(Ordering::Relaxed);
+        s
+    }
+
+    /// Reset every bucket and gauge to zero (bench interval deltas).
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Plain-value copy of a [`Hist`]: mergeable, wire-encodable, and the
+/// thing quantiles are estimated from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Per-bucket sample counts (`buckets[i]` covers `[2^i, 2^(i+1))`).
+    pub buckets: [u64; BUCKETS],
+    /// Total samples.
+    pub count: u64,
+    /// Sum of all samples in nanoseconds.
+    pub sum: u64,
+    /// Largest sample observed.
+    pub max: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> HistSnapshot {
+        HistSnapshot { buckets: [0u64; BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// No samples recorded?
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Fold `other` into `self` (e.g. client-side and daemon-side
+    /// halves of the same op class).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Samples recorded since `prev` was taken, assuming `prev` is an
+    /// earlier snapshot of the same monotonically-growing histogram
+    /// (`sea stat --watch` interval deltas). Counts subtract
+    /// saturating, so a reset between snapshots degrades to the
+    /// current totals instead of wrapping. `max` is all-time, not
+    /// per-interval — the bucket counters don't retain enough to
+    /// recover an interval max, so the delta keeps the current one.
+    pub fn diff(&self, prev: &HistSnapshot) -> HistSnapshot {
+        let mut out = HistSnapshot {
+            buckets: [0u64; BUCKETS],
+            count: self.count.saturating_sub(prev.count),
+            sum: self.sum.saturating_sub(prev.sum),
+            max: self.max,
+        };
+        for (i, (a, b)) in self.buckets.iter().zip(prev.buckets.iter()).enumerate() {
+            out.buckets[i] = a.saturating_sub(*b);
+        }
+        out
+    }
+
+    /// Mean sample in nanoseconds (0 when empty).
+    pub fn mean(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum / self.count
+        }
+    }
+
+    /// Estimate the `q`-quantile (`0.0..=1.0`) in nanoseconds.
+    ///
+    /// Walks buckets to the one holding the sample of rank
+    /// `ceil(q * count)` and interpolates linearly inside it; the
+    /// result is clamped to the bucket's bounds and the observed max,
+    /// so the estimate shares a log₂ bucket with the true order
+    /// statistic (≤ 2x relative error, exact at the recorded `max`).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= rank {
+                let lo = bucket_lo(i);
+                let hi = bucket_hi(i).min(self.max.max(lo));
+                let frac = (rank - seen) as f64 / c as f64;
+                let est = lo as f64 + frac * (hi - lo) as f64;
+                return (est as u64).clamp(lo, hi);
+            }
+            seen += c;
+        }
+        self.max
+    }
+
+    /// p50 estimate in nanoseconds.
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    /// p95 estimate in nanoseconds.
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    /// p99 estimate in nanoseconds.
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::percentile_sorted;
+
+    #[test]
+    fn bucket_bounds_partition_u64() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(u64::MAX), 63);
+        for i in 0..BUCKETS {
+            assert!(bucket_of(bucket_lo(i).max(1)) <= i);
+            assert_eq!(bucket_of(bucket_hi(i)), i);
+            if i > 0 {
+                assert_eq!(bucket_of(bucket_lo(i)), i);
+                assert_eq!(bucket_lo(i), bucket_hi(i - 1) + 1, "buckets must tile");
+            }
+        }
+    }
+
+    #[test]
+    fn record_snapshot_and_stats() {
+        let h = Hist::new();
+        for v in [0u64, 1, 100, 1000, 1000, 50_000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 6);
+        assert_eq!(s.sum, 52_101);
+        assert_eq!(s.max, 50_000);
+        assert_eq!(s.mean(), 52_101 / 6);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 6);
+        // two samples of 1000 share floor(log2(1000)) = bucket 9
+        assert_eq!(s.buckets[9], 2);
+        h.reset();
+        assert!(h.snapshot().is_empty());
+    }
+
+    #[test]
+    fn quantiles_of_uniform_samples_land_in_the_right_bucket() {
+        let h = Hist::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        // exact p50 = 500 (bucket 8: 256..511)
+        let p50 = s.p50();
+        assert_eq!(bucket_of(p50), bucket_of(500), "p50 {p50}");
+        let p99 = s.p99();
+        assert_eq!(bucket_of(p99), bucket_of(990), "p99 {p99}");
+        assert!(s.quantile(1.0) <= s.max);
+        assert_eq!(s.quantile(1.0), 1000, "max rank clamps to observed max");
+    }
+
+    #[test]
+    fn merge_is_additive() {
+        let a = Hist::new();
+        let b = Hist::new();
+        for v in [10u64, 20, 30] {
+            a.record(v);
+        }
+        for v in [1_000u64, 2_000] {
+            b.record(v);
+        }
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count, 5);
+        assert_eq!(m.sum, 3_060);
+        assert_eq!(m.max, 2_000);
+        assert_eq!(m.buckets.iter().sum::<u64>(), 5);
+    }
+
+    #[test]
+    fn diff_recovers_the_interval_between_two_snapshots() {
+        let h = Hist::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        let before = h.snapshot();
+        for v in [1_000u64, 2_000] {
+            h.record(v);
+        }
+        let d = h.snapshot().diff(&before);
+        assert_eq!(d.count, 2);
+        assert_eq!(d.sum, 3_000);
+        assert_eq!(d.max, 2_000, "max stays all-time");
+        assert_eq!(d.buckets.iter().sum::<u64>(), 2);
+        // a reset between snapshots must not wrap
+        h.reset();
+        h.record(5);
+        let d = h.snapshot().diff(&before);
+        assert_eq!(d.count, 1, "saturating diff after reset");
+    }
+
+    /// Property: over random sample sets, every quantile estimate
+    /// stays inside the log₂ buckets that bracket the exact
+    /// `percentile_sorted` interpolation neighbours — the documented
+    /// bucket-boundary error bound.
+    #[test]
+    fn quantile_estimates_track_percentile_sorted_within_bucket_bounds() {
+        let mut rng = Rng::new(0xB0CE7);
+        for case in 0..200 {
+            let n = 1 + (rng.next_u64() % 500) as usize;
+            // mix magnitudes: nanoseconds from single digits to seconds
+            let mut samples: Vec<u64> = (0..n)
+                .map(|_| {
+                    let shift = rng.next_u64() % 31;
+                    rng.next_u64() % (1u64 << (shift + 1))
+                })
+                .collect();
+            let h = Hist::new();
+            for &v in &samples {
+                h.record(v);
+            }
+            let s = h.snapshot();
+            samples.sort_unstable();
+            let sorted: Vec<f64> = samples.iter().map(|&v| v as f64).collect();
+            for &p in &[50.0, 95.0, 99.0] {
+                let est = s.quantile(p / 100.0);
+                let exact = percentile_sorted(&sorted, p);
+                // the exact percentile interpolates between two
+                // adjacent order statistics; our rank rounds to one of
+                // them (±1) — bound the estimate by the bucket range
+                // those neighbours span
+                let pos = (n - 1) as f64 * p / 100.0;
+                let lo_idx = (pos.floor() as usize).saturating_sub(1);
+                let hi_idx = (pos.ceil() as usize + 1).min(n - 1);
+                let lo = bucket_lo(bucket_of(samples[lo_idx]));
+                let hi = bucket_hi(bucket_of(samples[hi_idx]));
+                assert!(
+                    est >= lo && est <= hi,
+                    "case {case} n {n} p{p}: est {est} outside [{lo}, {hi}] \
+                     (exact {exact:.1}, max {})",
+                    s.max
+                );
+            }
+        }
+    }
+
+    /// Concurrency: hammer one histogram from many threads; totals
+    /// must balance exactly (runs under TSan in CI via the `obs::`
+    /// filter).
+    #[test]
+    fn concurrent_recorders_never_lose_samples() {
+        let h = std::sync::Arc::new(Hist::new());
+        const THREADS: u64 = 8;
+        const PER: u64 = 10_000;
+        let mut handles = Vec::new();
+        for t in 0..THREADS {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for k in 0..PER {
+                    h.record(t * 1_000 + k);
+                }
+            }));
+        }
+        for th in handles {
+            th.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, THREADS * PER);
+        assert_eq!(s.buckets.iter().sum::<u64>(), THREADS * PER);
+        let expect_sum: u64 =
+            (0..THREADS).map(|t| (0..PER).map(|k| t * 1_000 + k).sum::<u64>()).sum();
+        assert_eq!(s.sum, expect_sum);
+        assert_eq!(s.max, (THREADS - 1) * 1_000 + PER - 1);
+    }
+}

@@ -1,0 +1,494 @@
+//! Observability: latency histograms and a flight recorder.
+//!
+//! Two dependency-free halves:
+//!
+//! - [`hist`] — lock-free log₂-bucketed latency histograms, one per
+//!   [`Metric`] (op class × layer), recorded via [`Timer`] at the I/O
+//!   call sites in `vfs/sea.rs`, `vfs/pages.rs`, `vfs/mover.rs`,
+//!   `vfs/remote.rs`, and `serve/mod.rs`. `sea stat` renders them as
+//!   `lat:` p50/p95/p99/max lines, and [`ObsSnapshot`] travels in the
+//!   wire `Counters` reply (protocol ≥ 3) so `sea stat --connect`
+//!   shows daemon-side latencies.
+//! - [`trace`] — a bounded per-thread ring of structured events
+//!   (placement decisions, flush/spill/promote lifecycles, page-cache
+//!   eviction/write-back, lease grant/revoke), dumpable as Chrome
+//!   trace-event JSON via `sea run --trace FILE` or `SEA_TRACE=path`.
+//!
+//! Histogram recording defaults **on** (set `SEA_OBS=0` to disable; a
+//! disabled [`Timer::start`] is one relaxed atomic load and no clock
+//! read). The flight recorder defaults **off** and is armed by
+//! `--trace`/`SEA_TRACE`. The bench suite asserts the enabled-vs-
+//! disabled pread overhead stays ≤ 5%.
+
+pub mod hist;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use hist::{Hist, HistSnapshot};
+
+/// I/O operation classes timed per backend tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoOp {
+    Pread,
+    Pwrite,
+    Open,
+    Fsync,
+}
+
+/// Everything the histogram layer can time: four I/O op classes per
+/// backend layer (burst tiers 0/1, deeper tiers folded into `TierN`,
+/// and the PFS), plus one metric per cross-cutting path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Metric {
+    PreadTier0 = 0,
+    PreadTier1 = 1,
+    PreadTierN = 2,
+    PreadPfs = 3,
+    PwriteTier0 = 4,
+    PwriteTier1 = 5,
+    PwriteTierN = 6,
+    PwritePfs = 7,
+    OpenTier0 = 8,
+    OpenTier1 = 9,
+    OpenTierN = 10,
+    OpenPfs = 11,
+    FsyncTier0 = 12,
+    FsyncTier1 = 13,
+    FsyncTierN = 14,
+    FsyncPfs = 15,
+    /// Page-cache miss: filling one page from the backing file.
+    PageFaultFill = 16,
+    /// One DataMover chunk written to the destination.
+    MoverChunk = 17,
+    /// Client-observed wire round-trip (send → matching reply).
+    WireRtt = 18,
+    /// Daemon-side per-request service time (decode → reply queued).
+    DaemonRequest = 19,
+}
+
+/// Number of metrics ([`Metric::ALL`] length, histogram registry size).
+pub const NMETRICS: usize = 20;
+
+impl Metric {
+    /// Every metric, index-ordered (`ALL[m.index()] == m`).
+    pub const ALL: [Metric; NMETRICS] = [
+        Metric::PreadTier0,
+        Metric::PreadTier1,
+        Metric::PreadTierN,
+        Metric::PreadPfs,
+        Metric::PwriteTier0,
+        Metric::PwriteTier1,
+        Metric::PwriteTierN,
+        Metric::PwritePfs,
+        Metric::OpenTier0,
+        Metric::OpenTier1,
+        Metric::OpenTierN,
+        Metric::OpenPfs,
+        Metric::FsyncTier0,
+        Metric::FsyncTier1,
+        Metric::FsyncTierN,
+        Metric::FsyncPfs,
+        Metric::PageFaultFill,
+        Metric::MoverChunk,
+        Metric::WireRtt,
+        Metric::DaemonRequest,
+    ];
+
+    /// Dense index into the histogram registry.
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Inverse of [`Metric::index`]; `None` for out-of-range (e.g. a
+    /// newer peer's metric arriving over the wire).
+    pub fn from_index(i: usize) -> Option<Metric> {
+        Metric::ALL.get(i).copied()
+    }
+
+    /// The metric for `op` against a device of tier `tier` (`None` =
+    /// the PFS). Tiers ≥ 2 fold into `TierN`.
+    pub fn io(op: IoOp, tier: Option<u8>) -> Metric {
+        let t = match tier {
+            Some(0) => 0,
+            Some(1) => 1,
+            Some(_) => 2,
+            None => 3,
+        };
+        Metric::ALL[match op {
+            IoOp::Pread => 0,
+            IoOp::Pwrite => 4,
+            IoOp::Open => 8,
+            IoOp::Fsync => 12,
+        } + t]
+    }
+
+    /// Stable display name (also used as the wire-independent key in
+    /// `sea stat` output).
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::PreadTier0 => "pread.tier0",
+            Metric::PreadTier1 => "pread.tier1",
+            Metric::PreadTierN => "pread.tierN",
+            Metric::PreadPfs => "pread.pfs",
+            Metric::PwriteTier0 => "pwrite.tier0",
+            Metric::PwriteTier1 => "pwrite.tier1",
+            Metric::PwriteTierN => "pwrite.tierN",
+            Metric::PwritePfs => "pwrite.pfs",
+            Metric::OpenTier0 => "open.tier0",
+            Metric::OpenTier1 => "open.tier1",
+            Metric::OpenTierN => "open.tierN",
+            Metric::OpenPfs => "open.pfs",
+            Metric::FsyncTier0 => "fsync.tier0",
+            Metric::FsyncTier1 => "fsync.tier1",
+            Metric::FsyncTierN => "fsync.tierN",
+            Metric::FsyncPfs => "fsync.pfs",
+            Metric::PageFaultFill => "page.fill",
+            Metric::MoverChunk => "mover.chunk",
+            Metric::WireRtt => "wire.rtt",
+            Metric::DaemonRequest => "daemon.req",
+        }
+    }
+}
+
+// Histogram gate: 0 = uninitialised, 1 = off, 2 = on. Initialised
+// lazily from SEA_OBS (default on; "0"/"off" disable) so the library
+// needs no init call; benches flip it with `set_enabled`.
+static STATE: AtomicU8 = AtomicU8::new(0);
+
+fn init_state() -> u8 {
+    let on = match std::env::var("SEA_OBS") {
+        Ok(v) => !matches!(v.trim(), "0" | "off" | "false"),
+        Err(_) => true,
+    };
+    let s = if on { 2 } else { 1 };
+    // racing initialisers agree (same env), so a plain store is fine
+    STATE.store(s, Ordering::Relaxed);
+    s
+}
+
+/// Are latency histograms recording? One relaxed load after first use.
+#[inline]
+pub fn enabled() -> bool {
+    let s = STATE.load(Ordering::Relaxed);
+    if s == 0 {
+        return init_state() == 2;
+    }
+    s == 2
+}
+
+/// Force histogram recording on/off (overrides `SEA_OBS`; used by the
+/// bench overhead sweep and tests).
+pub fn set_enabled(on: bool) {
+    STATE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+/// Serializes tests that toggle the process-wide gates (`STATE` here,
+/// the trace `ENABLED` flag) or that depend on them staying on for a
+/// stretch — without it, a parallel test's brief off-window silently
+/// drops another test's samples.
+#[cfg(test)]
+pub(crate) fn test_gate() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn hists() -> &'static Vec<Hist> {
+    static HISTS: OnceLock<Vec<Hist>> = OnceLock::new();
+    HISTS.get_or_init(|| (0..NMETRICS).map(|_| Hist::new()).collect())
+}
+
+/// Record one latency sample (ns) against `m`, if enabled.
+#[inline]
+pub fn record(m: Metric, nanos: u64) {
+    if enabled() {
+        hists()[m.index()].record(nanos);
+    }
+}
+
+/// A started latency measurement. [`Timer::start`] reads the clock
+/// only when histograms are enabled; [`Timer::stop`] records the
+/// elapsed time against a metric chosen at stop time (call sites often
+/// only know the tier after the op completes).
+#[must_use]
+pub struct Timer {
+    t0: Option<Instant>,
+}
+
+impl Timer {
+    /// Start timing (no-op, no clock read, when disabled).
+    #[inline]
+    pub fn start() -> Timer {
+        Timer { t0: enabled().then(Instant::now) }
+    }
+
+    /// Is this timer live? Lets call sites skip key bookkeeping that
+    /// only matters if `stop` will record.
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.t0.is_some()
+    }
+
+    /// Record the elapsed nanoseconds against `m`.
+    #[inline]
+    pub fn stop(self, m: Metric) {
+        if let Some(t0) = self.t0 {
+            hists()[m.index()].record(t0.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+/// A point-in-time copy of every non-empty histogram, keyed by metric
+/// index. Mergeable (client + daemon), wire-encodable, and renderable
+/// as the `lat:` block in `sea stat`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ObsSnapshot {
+    /// `(metric index, histogram)` pairs, ascending by index. Indices
+    /// outside [`Metric::ALL`] (a newer peer) are preserved but
+    /// rendered under a numeric key.
+    pub metrics: Vec<(u8, HistSnapshot)>,
+}
+
+/// Snapshot every non-empty histogram.
+pub fn snapshot() -> ObsSnapshot {
+    let mut metrics = Vec::new();
+    for m in Metric::ALL {
+        let s = hists()[m.index()].snapshot();
+        if !s.is_empty() {
+            metrics.push((m.index() as u8, s));
+        }
+    }
+    ObsSnapshot { metrics }
+}
+
+/// Reset every histogram (tests and `--watch` interval deltas are
+/// snapshot-diff based; this is for bench isolation).
+pub fn reset() {
+    for h in hists() {
+        h.reset();
+    }
+}
+
+impl ObsSnapshot {
+    /// No samples anywhere?
+    pub fn is_empty(&self) -> bool {
+        self.metrics.iter().all(|(_, h)| h.is_empty())
+    }
+
+    /// Sum of sample counts across all metrics.
+    pub fn total_count(&self) -> u64 {
+        self.metrics.iter().map(|(_, h)| h.count).sum()
+    }
+
+    /// The histogram for `m`, if any samples were recorded.
+    pub fn get(&self, m: Metric) -> Option<&HistSnapshot> {
+        let idx = m.index() as u8;
+        self.metrics.iter().find(|(i, _)| *i == idx).map(|(_, h)| h)
+    }
+
+    /// Fold `other`'s samples into `self` (e.g. daemon + local).
+    pub fn merge(&mut self, other: &ObsSnapshot) {
+        for (idx, h) in &other.metrics {
+            match self.metrics.iter_mut().find(|(i, _)| i == idx) {
+                Some((_, mine)) => mine.merge(h),
+                None => {
+                    let at = self
+                        .metrics
+                        .iter()
+                        .position(|(i, _)| i > idx)
+                        .unwrap_or(self.metrics.len());
+                    self.metrics.insert(at, (*idx, h.clone()));
+                }
+            }
+        }
+    }
+
+    /// Per-metric deltas since `prev` (an earlier snapshot of the same
+    /// registry — `sea stat --watch` intervals). Metrics absent from
+    /// `prev` pass through whole; metrics whose delta is empty are
+    /// dropped, so rendering a quiet interval prints nothing.
+    pub fn diff(&self, prev: &ObsSnapshot) -> ObsSnapshot {
+        let mut metrics = Vec::new();
+        for (idx, h) in &self.metrics {
+            let d = match prev.metrics.iter().find(|(i, _)| i == idx) {
+                Some((_, p)) => h.diff(p),
+                None => h.clone(),
+            };
+            if !d.is_empty() {
+                metrics.push((*idx, d));
+            }
+        }
+        ObsSnapshot { metrics }
+    }
+
+    /// Render the `lat:` block for `sea stat`: one line per non-empty
+    /// metric with count and p50/p95/p99/max. Empty string if no
+    /// samples.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (idx, h) in &self.metrics {
+            if h.is_empty() {
+                continue;
+            }
+            let name = match Metric::from_index(*idx as usize) {
+                Some(m) => m.name().to_string(),
+                None => format!("metric#{idx}"),
+            };
+            out.push_str(&format!(
+                "lat    : {:<12} n {:>9}  p50 {:>8}  p95 {:>8}  p99 {:>8}  max {:>8}\n",
+                name,
+                h.count,
+                fmt_ns(h.p50()),
+                fmt_ns(h.p95()),
+                fmt_ns(h.p99()),
+                fmt_ns(h.max),
+            ));
+        }
+        out
+    }
+}
+
+/// Human-scale duration: `512ns`, `42.0us`, `1.50ms`, `2.10s`.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.1}us", ns as f64 / 1_000.0)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1_000_000.0)
+    } else {
+        format!("{:.2}s", ns as f64 / 1_000_000_000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_indices_are_dense_and_invertible() {
+        for (i, m) in Metric::ALL.iter().enumerate() {
+            assert_eq!(m.index(), i);
+            assert_eq!(Metric::from_index(i), Some(*m));
+        }
+        assert_eq!(Metric::from_index(NMETRICS), None);
+        // names are unique (they key `sea stat` lines)
+        let mut names: Vec<_> = Metric::ALL.iter().map(|m| m.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), NMETRICS);
+    }
+
+    #[test]
+    fn io_metric_maps_op_and_tier() {
+        assert_eq!(Metric::io(IoOp::Pread, Some(0)), Metric::PreadTier0);
+        assert_eq!(Metric::io(IoOp::Pread, Some(1)), Metric::PreadTier1);
+        assert_eq!(Metric::io(IoOp::Pread, Some(2)), Metric::PreadTierN);
+        assert_eq!(Metric::io(IoOp::Pread, Some(7)), Metric::PreadTierN);
+        assert_eq!(Metric::io(IoOp::Pread, None), Metric::PreadPfs);
+        assert_eq!(Metric::io(IoOp::Pwrite, Some(0)), Metric::PwriteTier0);
+        assert_eq!(Metric::io(IoOp::Open, None), Metric::OpenPfs);
+        assert_eq!(Metric::io(IoOp::Fsync, Some(1)), Metric::FsyncTier1);
+    }
+
+    // The histogram registry is process-global, so tests assert via
+    // deltas on metrics the I/O paths never touch concurrently, or on
+    // snapshot/merge/render structure only.
+
+    #[test]
+    fn timer_records_into_the_registry_when_enabled() {
+        // Other lib tests exercise instrumented paths concurrently, so
+        // counts only ever grow — assert deltas as lower bounds.
+        let _gate = test_gate();
+        set_enabled(true);
+        let before = hists()[Metric::WireRtt.index()].count();
+        let t = Timer::start();
+        assert!(t.armed());
+        t.stop(Metric::WireRtt);
+        assert!(hists()[Metric::WireRtt.index()].count() > before);
+
+        set_enabled(false);
+        let t = Timer::start();
+        assert!(!t.armed(), "disabled timer must not read the clock");
+        t.stop(Metric::WireRtt); // records nothing: no start instant
+        set_enabled(true);
+    }
+
+    fn snap_of(vals: &[u64]) -> HistSnapshot {
+        let h = Hist::new();
+        for &v in vals {
+            h.record(v);
+        }
+        h.snapshot()
+    }
+
+    #[test]
+    fn snapshot_merge_and_render_shape() {
+        let mut a = ObsSnapshot::default();
+        assert!(a.is_empty());
+        assert_eq!(a.render(), "");
+
+        let h1 = snap_of(&[100, 200, 400, 100_000]);
+        a.metrics.push((Metric::PreadTier0.index() as u8, h1.clone()));
+
+        let mut b = ObsSnapshot::default();
+        b.metrics.push((Metric::PreadTier0.index() as u8, h1.clone()));
+        b.metrics.push((Metric::DaemonRequest.index() as u8, h1.clone()));
+
+        a.merge(&b);
+        assert_eq!(a.get(Metric::PreadTier0).unwrap().count, 8);
+        assert_eq!(a.get(Metric::DaemonRequest).unwrap().count, 4);
+        assert!(a.get(Metric::MoverChunk).is_none());
+        assert_eq!(a.total_count(), 12);
+        // merge keeps indices sorted
+        assert!(a.metrics.windows(2).all(|w| w[0].0 < w[1].0));
+
+        let r = a.render();
+        assert!(r.contains("pread.tier0"), "{r}");
+        assert!(r.contains("daemon.req"), "{r}");
+        assert!(r.contains("p50"), "{r}");
+        assert!(r.contains("p99"), "{r}");
+        assert_eq!(r.lines().count(), 2, "{r}");
+        assert!(r.lines().all(|l| l.starts_with("lat    : ")), "{r}");
+    }
+
+    #[test]
+    fn snapshot_diff_keeps_only_changed_metrics() {
+        let mut prev = ObsSnapshot::default();
+        prev.metrics.push((Metric::PreadTier0.index() as u8, snap_of(&[100, 200])));
+        prev.metrics.push((Metric::WireRtt.index() as u8, snap_of(&[500])));
+
+        let mut cur = ObsSnapshot::default();
+        cur.metrics
+            .push((Metric::PreadTier0.index() as u8, snap_of(&[100, 200, 400, 800])));
+        cur.metrics.push((Metric::WireRtt.index() as u8, snap_of(&[500])));
+        cur.metrics.push((Metric::MoverChunk.index() as u8, snap_of(&[9000])));
+
+        let d = cur.diff(&prev);
+        // quiet WireRtt dropped; grown PreadTier0 keeps the delta;
+        // brand-new MoverChunk passes through whole
+        assert!(d.get(Metric::WireRtt).is_none());
+        assert_eq!(d.get(Metric::PreadTier0).unwrap().count, 2);
+        assert_eq!(d.get(Metric::MoverChunk).unwrap().count, 1);
+        assert_eq!(d.total_count(), 3);
+    }
+
+    #[test]
+    fn unknown_metric_indices_render_under_a_numeric_key() {
+        let s = ObsSnapshot { metrics: vec![(200, snap_of(&[5000]))] };
+        let r = s.render();
+        assert!(r.contains("metric#200"), "{r}");
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(512), "512ns");
+        assert_eq!(fmt_ns(42_000), "42.0us");
+        assert_eq!(fmt_ns(1_500_000), "1.50ms");
+        assert_eq!(fmt_ns(2_100_000_000), "2.10s");
+    }
+}

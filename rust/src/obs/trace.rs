@@ -1,0 +1,364 @@
+//! Flight recorder: bounded per-thread rings of structured events,
+//! dumpable as Chrome trace-event JSON.
+//!
+//! Recording is off unless armed ([`set_enabled`]) — `sea run --trace
+//! FILE` and the `SEA_TRACE=path` environment variable arm it. When
+//! off, [`span`] and [`instant`] cost one relaxed atomic load. When
+//! on, each event lands in the calling thread's own ring buffer
+//! (capacity [`RING_CAP`], overwriting oldest), so a recorder on a hot
+//! path never contends with other threads and a runaway workload can
+//! never grow memory unboundedly — the recorder keeps the *last*
+//! window of activity, like an aircraft flight recorder.
+//!
+//! Event names, categories and causes are `&'static str` drawn from a
+//! small fixed vocabulary (no allocation on the record path; the JSON
+//! writer emits them unescaped). Timestamps are monotonic nanoseconds
+//! from a process-wide epoch taken at first use.
+//!
+//! [`dump_to`] collects every ring (including those of exited
+//! threads), sorts by timestamp, and writes the Chrome `traceEvents`
+//! JSON array — load it in `chrome://tracing` / Perfetto, or parse it
+//! with any JSON tool (CI validates with `python3 -m json.tool`).
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Events kept per thread; older ones are overwritten.
+pub const RING_CAP: usize = 4096;
+
+/// Chrome trace-event phase of an [`Event`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ph {
+    /// A duration (`ph:"X"`): begin timestamp + `dur`.
+    Complete,
+    /// A point event (`ph:"i"`, thread-scoped).
+    Point,
+}
+
+/// One recorded event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// What happened (`"flush"`, `"spill"`, `"page-evict"`, …).
+    pub name: &'static str,
+    /// Subsystem (`"mgmt"`, `"pages"`, `"placement"`, `"daemon"`, …).
+    pub cat: &'static str,
+    /// Why it happened (`"close"`, `"pressure"`, `"heat"`, …; `""`
+    /// when not applicable).
+    pub cause: &'static str,
+    /// Duration vs point event.
+    pub ph: Ph,
+    /// Start, in nanoseconds since the process trace epoch.
+    pub ts_ns: u64,
+    /// Duration in nanoseconds (0 for point events).
+    pub dur_ns: u64,
+    /// Bytes the event moved/covered (0 when not applicable).
+    pub bytes: u64,
+    /// Recorder thread id (dense, assigned at first record).
+    pub tid: u64,
+}
+
+struct Ring {
+    tid: u64,
+    buf: Vec<Event>,
+    /// Next overwrite position once `buf` reached capacity.
+    head: usize,
+    /// Total events ever pushed (dropped = total - buf.len()).
+    total: u64,
+}
+
+impl Ring {
+    fn push(&mut self, e: Event) {
+        self.total += 1;
+        if self.buf.len() < RING_CAP {
+            self.buf.push(e);
+        } else {
+            self.buf[self.head] = e;
+            self.head = (self.head + 1) % RING_CAP;
+        }
+    }
+
+    /// Events oldest-first.
+    fn ordered(&self) -> Vec<Event> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Rings of every thread that ever recorded, including exited ones
+/// (their events stay dumpable).
+fn rings() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    static RINGS: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static MY_RING: Arc<Mutex<Ring>> = {
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        let ring = Arc::new(Mutex::new(Ring {
+            tid,
+            buf: Vec::new(),
+            head: 0,
+            total: 0,
+        }));
+        rings().lock().expect("trace rings poisoned").push(ring.clone());
+        ring
+    };
+}
+
+/// Arm or disarm the recorder. Events recorded while armed stay in the
+/// rings until [`dump_to`] (or process exit).
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch(); // pin the epoch before the first event
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is the recorder armed? One relaxed load — the full cost of a
+/// disabled [`span`]/[`instant`].
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+fn push(e: Event) {
+    MY_RING.with(|r| {
+        let mut ring = r.lock().expect("trace ring poisoned");
+        let tid = ring.tid;
+        ring.push(Event { tid, ..e });
+    });
+}
+
+/// Record a point event (eviction, write-back, lease grant/revoke,
+/// placement decision). No-op unless armed.
+#[inline]
+pub fn instant(name: &'static str, cat: &'static str, cause: &'static str, bytes: u64) {
+    if !enabled() {
+        return;
+    }
+    push(Event {
+        name,
+        cat,
+        cause,
+        ph: Ph::Point,
+        ts_ns: now_ns(),
+        dur_ns: 0,
+        bytes,
+        tid: 0,
+    });
+}
+
+/// RAII span: records a `Complete` event covering its lifetime when
+/// dropped. Obtain one with [`span`]; a span built while the recorder
+/// is disarmed records nothing.
+pub struct Span {
+    live: Option<(u64, &'static str, &'static str, &'static str)>,
+    bytes: u64,
+}
+
+/// Open a span (`flush`/`spill`/`promote` lifecycles). Cost when
+/// disarmed: one relaxed load.
+#[inline]
+pub fn span(name: &'static str, cat: &'static str, cause: &'static str) -> Span {
+    if !enabled() {
+        return Span { live: None, bytes: 0 };
+    }
+    Span { live: Some((now_ns(), name, cat, cause)), bytes: 0 }
+}
+
+impl Span {
+    /// Attach a byte count to the span's `args`.
+    pub fn bytes(&mut self, n: u64) {
+        self.bytes = n;
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((t0, name, cat, cause)) = self.live.take() {
+            let end = now_ns();
+            push(Event {
+                name,
+                cat,
+                cause,
+                ph: Ph::Complete,
+                ts_ns: t0,
+                dur_ns: end.saturating_sub(t0),
+                bytes: self.bytes,
+                tid: 0,
+            });
+        }
+    }
+}
+
+/// All recorded events across every thread, oldest-first.
+pub fn collect() -> Vec<Event> {
+    let rings = rings().lock().expect("trace rings poisoned");
+    let mut all = Vec::new();
+    for r in rings.iter() {
+        all.extend(r.lock().expect("trace ring poisoned").ordered());
+    }
+    all.sort_by_key(|e| e.ts_ns);
+    all
+}
+
+/// Drop every recorded event (tests; dumps are otherwise cumulative).
+pub fn clear() {
+    let rings = rings().lock().expect("trace rings poisoned");
+    for r in rings.iter() {
+        let mut ring = r.lock().expect("trace ring poisoned");
+        ring.buf.clear();
+        ring.head = 0;
+    }
+}
+
+/// Serialize every recorded event as Chrome trace-event JSON
+/// (`{"traceEvents":[...]}`; `ts`/`dur` in microseconds).
+pub fn to_chrome_json() -> String {
+    let events = collect();
+    let pid = std::process::id();
+    let mut out = String::with_capacity(events.len() * 128 + 32);
+    out.push_str("{\"traceEvents\":[");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let ts = e.ts_ns as f64 / 1_000.0;
+        match e.ph {
+            Ph::Complete => {
+                let dur = e.dur_ns as f64 / 1_000.0;
+                out.push_str(&format!(
+                    "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":{pid},\
+                     \"tid\":{},\"ts\":{ts:.3},\"dur\":{dur:.3},\
+                     \"args\":{{\"cause\":\"{}\",\"bytes\":{}}}}}",
+                    e.name, e.cat, e.tid, e.cause, e.bytes
+                ));
+            }
+            Ph::Point => {
+                out.push_str(&format!(
+                    "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\
+                     \"pid\":{pid},\"tid\":{},\"ts\":{ts:.3},\
+                     \"args\":{{\"cause\":\"{}\",\"bytes\":{}}}}}",
+                    e.name, e.cat, e.tid, e.cause, e.bytes
+                ));
+            }
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Write the Chrome trace JSON to `path`, returning the event count.
+pub fn dump_to(path: &Path) -> std::io::Result<u64> {
+    let events = collect();
+    let n = events.len() as u64;
+    let json = to_chrome_json();
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(json.as_bytes())?;
+    f.flush()?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Global recorder state is shared across the test process, so the
+    /// assertions here are presence/shape-based, never exact counts.
+    #[test]
+    fn spans_and_instants_record_when_armed_only() {
+        let _gate = crate::obs::test_gate();
+        // disarmed: nothing lands
+        set_enabled(false);
+        let before = collect().len();
+        instant("never", "test", "", 0);
+        drop(span("never-span", "test", ""));
+        assert_eq!(collect().len(), before, "disarmed recorder must be silent");
+
+        set_enabled(true);
+        instant("trace-test-point", "test", "unit", 7);
+        {
+            let mut sp = span("trace-test-span", "test", "unit");
+            sp.bytes(1234);
+        }
+        set_enabled(false);
+        let all = collect();
+        assert!(all.iter().any(|e| e.name == "trace-test-point" && e.bytes == 7));
+        let sp = all
+            .iter()
+            .find(|e| e.name == "trace-test-span")
+            .expect("span must be recorded");
+        assert_eq!(sp.ph, Ph::Complete);
+        assert_eq!(sp.bytes, 1234);
+        assert_eq!(sp.cause, "unit");
+        assert!(sp.tid > 0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_beyond_capacity() {
+        let mut ring = Ring { tid: 1, buf: Vec::new(), head: 0, total: 0 };
+        let ev = |ts| Event {
+            name: "e",
+            cat: "t",
+            cause: "",
+            ph: Ph::Point,
+            ts_ns: ts,
+            dur_ns: 0,
+            bytes: 0,
+            tid: 1,
+        };
+        for i in 0..(RING_CAP as u64 + 10) {
+            ring.push(ev(i));
+        }
+        let got = ring.ordered();
+        assert_eq!(got.len(), RING_CAP);
+        assert_eq!(ring.total, RING_CAP as u64 + 10);
+        assert_eq!(got[0].ts_ns, 10, "oldest 10 must have been overwritten");
+        assert_eq!(got[RING_CAP - 1].ts_ns, RING_CAP as u64 + 9);
+        // oldest-first, no seam at the wrap point
+        for w in got.windows(2) {
+            assert!(w[0].ts_ns < w[1].ts_ns);
+        }
+    }
+
+    #[test]
+    fn chrome_json_is_structurally_sound() {
+        let _gate = crate::obs::test_gate();
+        set_enabled(true);
+        instant("json-test", "test", "unit", 42);
+        {
+            let mut sp = span("json-test-span", "test", "unit");
+            sp.bytes(9);
+        }
+        set_enabled(false);
+        let json = to_chrome_json();
+        assert!(json.starts_with("{\"traceEvents\":["), "{json}");
+        assert!(json.ends_with("]}"), "{json}");
+        assert!(json.contains("\"name\":\"json-test\""));
+        assert!(json.contains("\"ph\":\"X\""), "span must emit a Complete event");
+        assert!(json.contains("\"ph\":\"i\""), "instant must emit a Point event");
+        assert!(json.contains("\"bytes\":42"));
+        // balanced braces/brackets — names come from a fixed static
+        // vocabulary, so no escaping can unbalance them
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        assert_eq!(json.matches('"').count() % 2, 0);
+    }
+}

@@ -70,11 +70,12 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+use crate::obs::{self, trace};
 use crate::vfs::sea::SeaFs;
 use crate::vfs::{OpenMode, Vfs, VfsFile};
 use protocol::{
     read_frame, write_frame, Body, CountersReply, ErrCode, Request, Response,
-    PROTOCOL_VERSION,
+    MIN_PROTOCOL_VERSION, PROTOCOL_VERSION,
 };
 
 /// How often a connection thread wakes to check the shutdown flag and
@@ -338,6 +339,10 @@ struct ConnState {
     next_handle: AtomicU64,
     /// Requests executing right now (feeds the `inflight_peak` gauge).
     inflight: AtomicU64,
+    /// Protocol revision negotiated at handshake — the client's, which
+    /// the daemon serves verbatim. Gates reply fields newer clients
+    /// understand (the v3 `Counters` histogram tail).
+    version: u32,
 }
 
 /// Wait for the next frame, polling so the shutdown flag and the idle
@@ -414,24 +419,29 @@ fn serve_connection(mut stream: UnixStream, shared: &Arc<Shared>) {
     // Handshake: the first frame must be a matching Hello. The reply
     // echoes the client's id (0 by convention) and advertises the
     // mount's chunk size as the readahead hint.
-    match next_frame(&mut stream, shared) {
+    let conn_version = match next_frame(&mut stream, shared) {
         Ok(Some((id, frame))) => match Request::decode(&frame) {
-            Ok(Request::Hello { version }) if version == PROTOCOL_VERSION => {
+            Ok(Request::Hello { version })
+                if (MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&version) =>
+            {
+                // serve the connection at the client's revision and
+                // echo it back, so both sides agree on the frame shapes
                 let resp = Response::ok(
                     0,
-                    Body::Hello {
-                        version: PROTOCOL_VERSION,
-                        chunk_bytes: shared.chunk_hint,
-                    },
+                    Body::Hello { version, chunk_bytes: shared.chunk_hint },
                 );
                 if write_frame(&mut stream, id, &resp.encode()).is_err() {
                     return;
                 }
+                version
             }
             Ok(Request::Hello { version }) => {
                 let resp = Response::err_code(
                     ErrCode::VersionMismatch,
-                    format!("daemon speaks protocol {PROTOCOL_VERSION}, client sent {version}"),
+                    format!(
+                        "daemon speaks protocol {MIN_PROTOCOL_VERSION}..={PROTOCOL_VERSION}, \
+                         client sent {version}"
+                    ),
                 );
                 let _ = write_frame(&mut stream, id, &resp.encode());
                 return;
@@ -451,7 +461,7 @@ fn serve_connection(mut stream: UnixStream, shared: &Arc<Shared>) {
             }
         },
         _ => return,
-    }
+    };
 
     let writer = match stream.try_clone() {
         Ok(w) => w,
@@ -463,6 +473,7 @@ fn serve_connection(mut stream: UnixStream, shared: &Arc<Shared>) {
         handles: Mutex::new(HashMap::new()),
         next_handle: AtomicU64::new(1),
         inflight: AtomicU64::new(0),
+        version: conn_version,
     });
 
     // The per-connection executor: the frame loop feeds decoded
@@ -527,8 +538,12 @@ fn serve_connection(mut stream: UnixStream, shared: &Arc<Shared>) {
 fn execute(conn: &ConnState, id: u64, req: Request) {
     let now = conn.inflight.fetch_add(1, Ordering::Relaxed) + 1;
     conn.shared.gauges.inflight_peak.fetch_max(now, Ordering::Relaxed);
+    // per-request service time: decode already done, reply queued on
+    // the writer before the timer stops
+    let t = obs::Timer::start();
     let (resp, lease) = handle_request(req, conn);
     respond(conn, id, resp, lease);
+    t.stop(obs::Metric::DaemonRequest);
     conn.inflight.fetch_sub(1, Ordering::Relaxed);
 }
 
@@ -606,6 +621,7 @@ fn handle_request(req: Request, conn: &ConnState) -> (Response, Option<std::fs::
                     };
                     if lease.is_some() {
                         shared.gauges.leases_granted.fetch_add(1, Ordering::Relaxed);
+                        trace::instant("lease-grant", "daemon", "read-open", 0);
                     }
                     conn.handles.lock().unwrap().insert(id, Arc::new(Mutex::new(h)));
                     shared.gauges.open_handles.fetch_add(1, Ordering::Relaxed);
@@ -756,6 +772,10 @@ fn handle_request(req: Request, conn: &ConnState) -> (Response, Option<std::fs::
                     ops_served: g.ops_served.load(Ordering::Relaxed),
                     leases_granted: g.leases_granted.load(Ordering::Relaxed),
                     inflight_peak: g.inflight_peak.load(Ordering::Relaxed),
+                    // v3 clients get the daemon-side latency
+                    // histograms; a v2 connection keeps its frames
+                    // byte-compatible by omitting the tail
+                    lat: (conn.version >= 3).then(obs::snapshot),
                 })),
             )
         }
@@ -826,7 +846,65 @@ mod tests {
         let resp = Response::decode(&frame).unwrap();
         let we = resp.body.unwrap_err();
         assert_eq!(we.code, ErrCode::VersionMismatch);
-        assert!(we.msg.contains("protocol 2"), "got: {}", we.msg);
+        assert!(
+            we.msg
+                .contains(&format!("protocol {MIN_PROTOCOL_VERSION}..={PROTOCOL_VERSION}")),
+            "got: {}",
+            we.msg
+        );
+        srv.shutdown().unwrap();
+    }
+
+    #[test]
+    fn v2_client_still_handshakes_and_reads_counters() {
+        // Back-compat: a previous-revision client is served at its own
+        // revision — the Hello echoes v2, and its Counters frame has no
+        // histogram tail (the reply is byte-compatible with v2).
+        let d = scratch("serve_v2compat");
+        let sock = d.join("sea.sock");
+        let srv = spawn_real(&d, &sock);
+        let mut s = UnixStream::connect(&sock).unwrap();
+        let hello = Request::Hello { version: MIN_PROTOCOL_VERSION }.encode();
+        write_frame(&mut s, 0, &hello).unwrap();
+        let (_, frame) = read_frame(&mut s).unwrap();
+        match Response::decode(&frame).unwrap().body.unwrap() {
+            Body::Hello { version, .. } => assert_eq!(version, MIN_PROTOCOL_VERSION),
+            other => panic!("expected Hello body, got {other:?}"),
+        }
+        write_frame(&mut s, 1, &Request::Counters.encode()).unwrap();
+        let (id, frame) = read_frame(&mut s).unwrap();
+        assert_eq!(id, 1);
+        match Response::decode(&frame).unwrap().body.unwrap() {
+            Body::Counters(c) => {
+                assert!(c.lat.is_none(), "v2 connection must not get the v3 tail");
+            }
+            other => panic!("expected Counters body, got {other:?}"),
+        }
+        srv.shutdown().unwrap();
+    }
+
+    #[test]
+    fn v3_client_gets_daemon_latency_histograms() {
+        // hold the gate so a parallel test can't disable recording
+        // while the daemon serves our requests
+        let _gate = crate::obs::test_gate();
+        let d = scratch("serve_v3lat");
+        std::fs::write(d.join("warm.dat"), vec![7u8; 4096]).unwrap();
+        let sock = d.join("sea.sock");
+        let srv = spawn_real(&d, &sock);
+        crate::obs::set_enabled(true);
+        let fs = crate::vfs::remote::RemoteFs::connect(&sock).unwrap();
+        // generate some daemon-side requests so DaemonRequest has data
+        let data = fs.read(Path::new("warm.dat")).unwrap();
+        assert_eq!(data.len(), 4096);
+        let c = fs.counters().unwrap();
+        let lat = c.lat.expect("v3 connection carries the histogram tail");
+        let daemon = lat
+            .get(crate::obs::Metric::DaemonRequest)
+            .expect("daemon served requests, so daemon.req has samples");
+        assert!(daemon.count > 0);
+        assert!(daemon.max > 0, "service time samples are in nanoseconds");
+        drop(fs);
         srv.shutdown().unwrap();
     }
 

@@ -70,15 +70,28 @@ use std::io::{Read, Write};
 use std::path::PathBuf;
 
 use crate::error::{Error, Result};
+use crate::obs::{hist, ObsSnapshot};
 use crate::vfs::{DeviceLedger, MgmtCounters, OpenMode};
 
 /// Protocol revision. Bump on any wire-visible change; the daemon
-/// rejects clients speaking a different revision at handshake.
+/// accepts clients speaking any revision in
+/// [`MIN_PROTOCOL_VERSION`]..=[`PROTOCOL_VERSION`] and serves each
+/// connection at the client's revision, so an old client keeps working
+/// against a new daemon (it simply never sees the newer reply fields).
 ///
 /// v2: request ids in the frame header (pipelining), fd leases on
 /// `Open` replies, paginated `Readdir`, `Mkdir`, and the readahead
 /// hint in the `Hello` reply.
-pub const PROTOCOL_VERSION: u32 = 2;
+///
+/// v3: the `Counters` reply may carry an optional latency-histogram
+/// tail ([`CountersReply::lat`]) — appended after the v2 fields, so a
+/// v2 decoder that stops early still consumes a valid frame, and a v3
+/// decoder treats "no bytes left" as "no histograms".
+pub const PROTOCOL_VERSION: u32 = 3;
+
+/// Oldest client revision the daemon still serves (see
+/// [`PROTOCOL_VERSION`]).
+pub const MIN_PROTOCOL_VERSION: u32 = 2;
 
 /// Largest single-request I/O payload the daemon accepts or serves.
 /// Bigger preads return short (positioned-I/O semantics allow it);
@@ -317,6 +330,11 @@ pub struct CountersReply {
     /// High-water mark of concurrently executing requests on any one
     /// connection — how much the pipelined executor is actually used.
     pub inflight_peak: u64,
+    /// Daemon-side latency histograms (protocol ≥ 3). `None` when the
+    /// connection speaks v2, when the daemon predates them, or when
+    /// the daemon disabled recording — `sea stat --connect` then
+    /// degrades to counters-only.
+    pub lat: Option<ObsSnapshot>,
 }
 
 /// One response: the piggybacked map generation plus the outcome.
@@ -400,6 +418,9 @@ impl<'a> Cur<'a> {
             return Err(Error::Daemon(format!("oversized byte blob: {n} bytes")));
         }
         Ok(self.take(n)?.to_vec())
+    }
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.at
     }
     fn done(&self) -> Result<()> {
         if self.at != self.buf.len() {
@@ -490,6 +511,52 @@ fn counters_from_fields(f: &[u64]) -> MgmtCounters {
         page_resident_bytes: g(21),
         page_peak_resident_bytes: g(22),
     }
+}
+
+/// Encode an [`ObsSnapshot`] sparsely: per metric its index, the
+/// count/sum/max gauges, and only the non-zero log₂ buckets as
+/// `(bucket index, count)` pairs — an idle daemon's tail is a handful
+/// of bytes, not 20 × 64 zeros.
+fn put_obs(b: &mut Vec<u8>, s: &ObsSnapshot) {
+    put_u32(b, s.metrics.len() as u32);
+    for (idx, h) in &s.metrics {
+        put_u8(b, *idx);
+        put_u64(b, h.count);
+        put_u64(b, h.sum);
+        put_u64(b, h.max);
+        let filled = h.buckets.iter().enumerate().filter(|(_, &c)| c > 0);
+        put_u8(b, filled.clone().count() as u8);
+        for (bi, &bc) in filled {
+            put_u8(b, bi as u8);
+            put_u64(b, bc);
+        }
+    }
+}
+
+fn get_obs(c: &mut Cur) -> Result<ObsSnapshot> {
+    let n = c.u32()? as usize;
+    if n > 256 {
+        return Err(Error::Daemon(format!("oversized histogram list: {n}")));
+    }
+    let mut metrics = Vec::with_capacity(n);
+    for _ in 0..n {
+        let idx = c.u8()?;
+        let count = c.u64()?;
+        let sum = c.u64()?;
+        let max = c.u64()?;
+        let nb = c.u8()? as usize;
+        let mut buckets = [0u64; hist::BUCKETS];
+        for _ in 0..nb {
+            let bi = c.u8()? as usize;
+            let bc = c.u64()?;
+            if bi >= hist::BUCKETS {
+                return Err(Error::Daemon(format!("histogram bucket {bi} out of range")));
+            }
+            buckets[bi] = bc;
+        }
+        metrics.push((idx, hist::HistSnapshot { buckets, count, sum, max }));
+    }
+    Ok(ObsSnapshot { metrics })
 }
 
 // --- request ---------------------------------------------------------------
@@ -745,6 +812,12 @@ impl Response {
                         put_u64(&mut b, c.ops_served);
                         put_u64(&mut b, c.leases_granted);
                         put_u64(&mut b, c.inflight_peak);
+                        // v3 tail: present only when the daemon chose
+                        // to attach histograms (it sets `lat: None` on
+                        // v2 connections, keeping their frames v2)
+                        if let Some(lat) = &c.lat {
+                            put_obs(&mut b, lat);
+                        }
                     }
                 }
             }
@@ -832,16 +905,26 @@ impl Response {
                 for _ in 0..nf {
                     fields.push(c.u64()?);
                 }
+                let clients_connected = c.u64()?;
+                let clients_total = c.u64()?;
+                let open_handles = c.u64()?;
+                let ops_served = c.u64()?;
+                let leases_granted = c.u64()?;
+                let inflight_peak = c.u64()?;
+                // v3 histogram tail: a v2 peer's frame simply ends
+                // here, which decodes as "no histograms"
+                let lat = if c.remaining() > 0 { Some(get_obs(&mut c)?) } else { None };
                 Body::Counters(Box::new(CountersReply {
                     engine,
                     ledger,
                     counters: counters_from_fields(&fields),
-                    clients_connected: c.u64()?,
-                    clients_total: c.u64()?,
-                    open_handles: c.u64()?,
-                    ops_served: c.u64()?,
-                    leases_granted: c.u64()?,
-                    inflight_peak: c.u64()?,
+                    clients_connected,
+                    clients_total,
+                    open_handles,
+                    ops_served,
+                    leases_granted,
+                    inflight_peak,
+                    lat,
                 }))
             }
             other => return Err(Error::Daemon(format!("unknown body tag {other}"))),
@@ -1001,6 +1084,7 @@ mod tests {
             ops_served: 400,
             leases_granted: 6,
             inflight_peak: 4,
+            lat: None,
         };
         let r = Response::ok(0, Body::Counters(Box::new(reply.clone())));
         let dec = Response::decode(&r.encode()).unwrap();
@@ -1011,6 +1095,84 @@ mod tests {
             }
             other => panic!("wrong body: {other:?}"),
         }
+    }
+
+    fn sample_snapshot() -> ObsSnapshot {
+        let h = hist::Hist::new();
+        for v in [120u64, 900, 15_000, 15_001, 2_000_000] {
+            h.record(v);
+        }
+        ObsSnapshot { metrics: vec![(0, h.snapshot()), (19, h.snapshot())] }
+    }
+
+    #[test]
+    fn counters_with_histograms_round_trip_sparsely() {
+        let reply = CountersReply {
+            engine: "paper".into(),
+            ledger: Vec::new(),
+            counters: MgmtCounters::default(),
+            clients_connected: 1,
+            clients_total: 1,
+            open_handles: 0,
+            ops_served: 9,
+            leases_granted: 0,
+            inflight_peak: 1,
+            lat: Some(sample_snapshot()),
+        };
+        let enc = Response::ok(0, Body::Counters(Box::new(reply.clone()))).encode();
+        // sparse: two metrics × (1 + 24 + 1 + 4 non-zero buckets × 9)
+        // plus the u32 metric count — nowhere near 20 × 64 × 8
+        let no_lat = Response::ok(
+            0,
+            Body::Counters(Box::new(CountersReply { lat: None, ..reply.clone() })),
+        )
+        .encode();
+        assert!(enc.len() - no_lat.len() < 200, "tail is {}", enc.len() - no_lat.len());
+        let dec = Response::decode(&enc).unwrap();
+        match dec.body.unwrap() {
+            Body::Counters(c) => {
+                assert_eq!(*c, reply);
+                let lat = c.lat.unwrap();
+                assert_eq!(lat.metrics.len(), 2);
+                assert_eq!(lat.metrics[0].1.count, 5);
+                assert_eq!(lat.metrics[0].1.max, 2_000_000);
+            }
+            other => panic!("wrong body: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v2_counters_frame_decodes_on_a_v3_client() {
+        // A v2 daemon's Counters frame is byte-identical to a v3 frame
+        // with no histogram tail: encoding with `lat: None` *is* the
+        // v2 layout. Both directions of the compat contract hold —
+        // the old frame decodes (lat == None, nothing lost), and the
+        // new client's `sea stat --connect` degrades to counters-only.
+        let v2 = CountersReply {
+            engine: "temperature".into(),
+            ledger: Vec::new(),
+            counters: MgmtCounters { flushes: 7, ..Default::default() },
+            clients_connected: 2,
+            clients_total: 2,
+            open_handles: 1,
+            ops_served: 50,
+            leases_granted: 1,
+            inflight_peak: 2,
+            lat: None,
+        };
+        let frame = Response::ok(0, Body::Counters(Box::new(v2.clone()))).encode();
+        let dec = Response::decode(&frame).unwrap();
+        match dec.body.unwrap() {
+            Body::Counters(c) => {
+                assert_eq!(c.counters.flushes, 7);
+                assert!(c.lat.is_none(), "absent tail must decode as None");
+            }
+            other => panic!("wrong body: {other:?}"),
+        }
+        // and a malformed (truncated) tail is a typed error, not a panic
+        let mut bad = frame;
+        bad.extend_from_slice(&3u32.to_le_bytes()); // claims 3 histograms, has none
+        assert!(Response::decode(&bad).is_err());
     }
 
     #[test]

@@ -15,6 +15,11 @@ pub struct Summary {
     pub max: f64,
     /// Median (linear interpolation).
     pub median: f64,
+    /// 95th percentile (linear interpolation; collapses toward `max`
+    /// for small sample counts).
+    pub p95: f64,
+    /// 99th percentile (linear interpolation).
+    pub p99: f64,
 }
 
 impl Summary {
@@ -39,6 +44,8 @@ impl Summary {
             min: sorted[0],
             max: sorted[n - 1],
             median: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
         })
     }
 }
@@ -82,6 +89,19 @@ mod tests {
         assert_eq!(s.max, 4.0);
         assert_eq!(s.median, 2.5);
         assert!((s.std - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tail_percentiles() {
+        // 1..=100: p95 interpolates at rank 94.05, p99 at rank 98.01
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs).unwrap();
+        assert!((s.p95 - 95.05).abs() < 1e-9, "{}", s.p95);
+        assert!((s.p99 - 99.01).abs() < 1e-9, "{}", s.p99);
+        // tiny n: tail percentiles collapse toward the max
+        let s = Summary::of(&[3.0]).unwrap();
+        assert_eq!(s.p95, 3.0);
+        assert_eq!(s.p99, 3.0);
     }
 
     #[test]

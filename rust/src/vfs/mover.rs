@@ -45,6 +45,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 
 use crate::error::{Error, Result};
+use crate::obs::{Metric, Timer};
 use crate::vfs::compress::{encode_frame, IndexBuilder, Lz, FRAME_HDR};
 use crate::vfs::VfsFile;
 
@@ -268,7 +269,9 @@ pub fn copy_range(
         if n == 0 {
             break;
         }
+        let t = Timer::start();
         dst.pwrite_all(&buf[..n], off + done)?;
+        t.stop(Metric::MoverChunk);
         done += n as u64;
     }
     Ok(done)
@@ -412,7 +415,9 @@ impl<'a> DataMover<'a> {
                 break;
             }
             encode_frame(codec, &read_buf[..filled], min_ratio_pct, &mut frame);
+            let t = Timer::start();
             dst.pwrite_all(&frame, phys)?;
+            t.stop(Metric::MoverChunk);
             index.push(phys, filled as u32, (frame.len() - FRAME_HDR) as u32);
             phys += frame.len() as u64;
             done += filled as u64;
@@ -491,10 +496,12 @@ impl<'a> DataMover<'a> {
             let mut phys = 0u64;
             let mut werr: Option<Error> = None;
             while let Ok((frame, logical)) = data_rx.recv() {
+                let t = Timer::start();
                 if let Err(e) = dst.pwrite_all(&frame, phys) {
                     werr = Some(e);
                     break;
                 }
+                t.stop(Metric::MoverChunk);
                 index.push(phys, logical as u32, (frame.len() - FRAME_HDR) as u32);
                 phys += frame.len() as u64;
                 done += logical as u64;
@@ -577,10 +584,12 @@ impl<'a> DataMover<'a> {
             let mut done = 0u64;
             let mut werr: Option<Error> = None;
             while let Ok((off, buf, n)) = data_rx.recv() {
+                let t = Timer::start();
                 if let Err(e) = dst.pwrite_all(&buf[..n], off) {
                     werr = Some(e);
                     break;
                 }
+                t.stop(Metric::MoverChunk);
                 done += n as u64;
                 let _ = free_tx.send(buf); // reader may already be done
             }

@@ -73,6 +73,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::error::{Error, Result};
+use crate::obs::{trace, Metric, Timer};
 use crate::vfs::VfsFile;
 
 /// Default page size: matches the workload drivers' 64 KiB strides.
@@ -279,6 +280,7 @@ impl PageCache {
                 drop(guard);
                 self.shrink_resident(1);
                 self.evictions.fetch_add(1, Ordering::Relaxed);
+                trace::instant("page-evict", "pages", "budget", self.page_bytes as u64);
                 return true;
             }
         }
@@ -612,6 +614,7 @@ impl<'f> MappedView<'f> {
                 self.cache
                     .writeback_bytes
                     .fetch_add(seg.len() as u64, Ordering::Relaxed);
+                trace::instant("page-writeback", "pages", "dirty", seg.len() as u64);
                 let mut sh = shard.lock().expect("page shard poisoned");
                 if let Some(p) = sh.pages.get_mut(&key) {
                     // clear only if no store landed since the
@@ -720,6 +723,7 @@ impl<'f> MappedView<'f> {
         if !whole_page_write {
             let file_off = idx * pb as u64;
             self.file.note_map_fault(file_off, pb as u64);
+            let t = Timer::start();
             let mut filled = 0usize;
             while filled < pb {
                 let n = match self.file.pread(&mut data[filled..], file_off + filled as u64) {
@@ -734,6 +738,7 @@ impl<'f> MappedView<'f> {
                 }
                 filled += n;
             }
+            t.stop(Metric::PageFaultFill);
         }
         cache.faults.fetch_add(1, Ordering::Relaxed);
         let mut page = Page { data, owner: self.id, tick: 0, dirty: None, seq: 0 };

@@ -263,13 +263,16 @@ impl Conn {
     /// One request/response round trip over the mux. Any error means
     /// this connection must be discarded.
     fn call_raw(&self, req: &Request) -> io::Result<Reply> {
+        let t = crate::obs::Timer::start();
         let rx = self.send(req)?;
-        rx.recv().map_err(|_| {
+        let reply = rx.recv().map_err(|_| {
             io::Error::new(
                 io::ErrorKind::BrokenPipe,
                 "connection closed with the request in flight",
             )
-        })
+        })?;
+        t.stop(crate::obs::Metric::WireRtt);
+        Ok(reply)
     }
 }
 
@@ -741,6 +744,7 @@ impl RemoteFile {
         if let Some((_, minted_at)) = &self.lease {
             if gen > *minted_at {
                 self.lease = None;
+                crate::obs::trace::instant("lease-revoke", "daemon", "gen-bump", 0);
             }
         }
         self.gen = gen;

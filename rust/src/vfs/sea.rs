@@ -87,6 +87,7 @@ use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
 use crate::hierarchy::{DeviceRef, Hierarchy, SelectCfg, SpaceAccountant};
+use crate::obs::{trace, IoOp, Metric, Timer};
 use crate::placement::engine::{
     build_engine, flush_evict_flags, Access, CloseCtx, Decision, EngineCtx, EngineKind, PlaceCtx,
     Placement, PlacementEngine, PressureCtx, Resident, TempTuning,
@@ -1173,6 +1174,7 @@ impl SeaFs {
         );
         match pick {
             Placement::Device(dev) => {
+                trace::instant("place", "placement", "device", data.len() as u64);
                 if let Err(e) = sh.backend(dev).write(Path::new(rel), data) {
                     // placement reserved the bytes; a failed backend
                     // write must give them back
@@ -1184,6 +1186,7 @@ impl SeaFs {
                 Ok(Some((dev, gen)))
             }
             Placement::Pfs => {
+                trace::instant("place", "placement", "pfs", data.len() as u64);
                 sh.pfs.write(Path::new(rel), data)?;
                 Ok(None)
             }
@@ -1207,8 +1210,10 @@ impl SeaFs {
             .engine
             .place(sh.ectx(), PlaceCtx { rel, size, prefetch: true });
         let Placement::Device(dev) = pick else {
+            trace::instant("place", "placement", "pfs", size);
             return Ok(false);
         };
+        trace::instant("place", "placement", "prefetch", size);
         let backend = sh.backend(dev).clone();
         if let Err(e) =
             sh.stream_into(&backend, rel, src.as_mut(), size, MovePath::Prefetch, phys)
@@ -1294,6 +1299,7 @@ impl SeaFs {
             .place(sh.ectx(), PlaceCtx { rel, size: 0, prefetch: false });
         match pick {
             Placement::Device(dev) => {
+                trace::instant("place", "placement", "device", 0);
                 let file = sh.backend(dev).open(Path::new(rel), OpenMode::Write)?;
                 let gen = sh.next_gen();
                 sh.insert_placed(rel, Entry::new(Some(dev), 0, false, gen, 1));
@@ -1630,6 +1636,13 @@ struct SeaFile {
 }
 
 impl SeaFile {
+    /// The latency-histogram metric for `op` on this handle's current
+    /// layer: the tier of the device it targets, or the PFS once it
+    /// followed a spill (or opened against the PFS copy).
+    fn io_metric(&self, op: IoOp) -> Metric {
+        Metric::io(op, self.dev.map(|d| self.shared.hierarchy.info(d).tier))
+    }
+
     /// Resolve the write offset (`off = None` for append) and reserve
     /// registry/ledger space for `len` bytes, atomically under the
     /// entry's shard lock. Size update and ledger debit happen
@@ -1813,6 +1826,10 @@ impl SeaFile {
         let Some((dev, size0, serial0)) = armed else {
             return Ok(None);
         };
+        // flight-recorder span covering phases 2–4 (bulk copy through
+        // drain + flip): a mid-stream spill is the writer-observed cost
+        let mut sp = trace::span("spill", "mgmt", "pressure");
+        sp.bytes(size0);
         // phase 2: bulk copy without the shard lock, streamed through
         // the DataMover — device read-ahead overlaps the PFS
         // write-behind, and peak memory is chunk_bytes × copy_window
@@ -1958,7 +1975,10 @@ impl VfsFile for SeaFile {
             // heated once at open instead of once per chunk.
             self.shared.engine.on_access(&self.rel, Access::Read);
         }
-        self.file.pread(buf, off)
+        let t = Timer::start();
+        let n = self.file.pread(buf, off)?;
+        t.stop(self.io_metric(IoOp::Pread));
+        Ok(n)
     }
 
     fn lease_fd(&self) -> Option<std::fs::File> {
@@ -1988,17 +2008,29 @@ impl VfsFile for SeaFile {
             return Ok(0);
         }
         let want = if self.append { None } else { Some(off) };
+        // timed from first reservation attempt: spill relief and
+        // busy-waits are part of the latency a writer observes
+        let t = Timer::start();
         loop {
             match self.reserve(want, data.len() as u64)? {
-                Step::Go(at) => return self.file.pwrite(data, at),
+                Step::Go(at) => {
+                    let n = self.file.pwrite(data, at)?;
+                    t.stop(self.io_metric(IoOp::Pwrite));
+                    return Ok(n);
+                }
                 Step::GoTracked(at) => {
                     let r = self.file.pwrite(data, at);
                     self.complete_device_write(at, data.len() as u64);
+                    if r.is_ok() {
+                        t.stop(self.io_metric(IoOp::Pwrite));
+                    }
                     return r;
                 }
                 Step::Orphan => {
                     let at = self.file.len()?;
-                    return self.file.pwrite(data, at);
+                    let n = self.file.pwrite(data, at)?;
+                    t.stop(self.io_metric(IoOp::Pwrite));
+                    return Ok(n);
                 }
                 Step::Spill { need } => self.relieve_pressure(need)?,
                 Step::Reopen => self.reopen_on_pfs()?,
@@ -2087,7 +2119,10 @@ impl VfsFile for SeaFile {
     }
 
     fn fsync(&mut self) -> Result<()> {
-        self.file.fsync()
+        let t = Timer::start();
+        self.file.fsync()?;
+        t.stop(self.io_metric(IoOp::Fsync));
+        Ok(())
     }
 
     fn len(&self) -> Result<u64> {
@@ -2275,6 +2310,13 @@ fn run_mgmt(sh: &Shared, rel: &str, gen: u64, flush: bool, evict: bool, class: M
         if src_len != entry.size {
             return;
         }
+        // flight-recorder span over the streamed copy (a victim spill
+        // rides this same path with `class = Spill`)
+        let mut sp = match class {
+            MovePath::Spill => trace::span("spill", "mgmt", "victim"),
+            _ => trace::span("flush", "mgmt", "close"),
+        };
+        sp.bytes(src_len);
         // OST-aware gate: cap in-flight flushes per PFS member (every
         // member a stripe-mode file touches holds a slot). On failure,
         // stream_into removes the partial destination — a stale prior
@@ -2320,6 +2362,7 @@ fn run_mgmt(sh: &Shared, rel: &str, gen: u64, flush: bool, evict: bool, class: M
             if let Some(d) = e.dev {
                 let _ = sh.backend(d).unlink(Path::new(rel));
                 sh.counters.lock().expect("counters poisoned").evictions += 1;
+                trace::instant("evict", "mgmt", if flush { "moved" } else { "disposable" }, e.size);
                 sh.credit_and_notify(d, e.size);
             }
         }
@@ -2342,6 +2385,8 @@ fn run_promote(sh: &Shared, rel: &str, tier: u8) {
     // `size` is the file's logical length and the promoted device copy
     // is raw logical bytes (fast tiers never hold framed replicas).
     let Ok((mut src, size, phys)) = sh.open_pfs_source(rel) else { return };
+    let mut sp = trace::span("promote", "mgmt", "heat");
+    sp.bytes(size);
     for d in sh.hierarchy.tier_devices(tier) {
         let Some(backend) = sh.hierarchy.backend(d) else {
             continue;
@@ -2399,16 +2444,34 @@ impl Vfs for SeaFs {
     fn open(&self, path: &Path, mode: OpenMode) -> Result<Box<dyn VfsFile>> {
         match self.rel_of(path) {
             None => self.shared.pfs.open(path, mode),
-            Some(rel) => match mode {
-                // wrap the backend handle in a reader-mode SeaFile:
-                // preads keep heating the engine, and the registry
-                // hooks (map_sync / map_identity) let read views
-                // follow a spill and share frames with writers —
-                // instead of pinning a raw inode across relocation
-                OpenMode::Read => Ok(Box::new(self.open_reader(rel, false)?)),
-                OpenMode::Append => self.open_append(&rel),
-                OpenMode::Write | OpenMode::ReadWrite => self.open_writer(&rel, mode),
-            },
+            Some(rel) => {
+                // time the whole dispatch (placement decision + backend
+                // open); the layer is whatever the registry says the
+                // file landed on once the open completed
+                let t = Timer::start();
+                let f = match mode {
+                    // wrap the backend handle in a reader-mode SeaFile:
+                    // preads keep heating the engine, and the registry
+                    // hooks (map_sync / map_identity) let read views
+                    // follow a spill and share frames with writers —
+                    // instead of pinning a raw inode across relocation
+                    OpenMode::Read => {
+                        Box::new(self.open_reader(rel.clone(), false)?) as Box<dyn VfsFile>
+                    }
+                    OpenMode::Append => self.open_append(&rel)?,
+                    OpenMode::Write | OpenMode::ReadWrite => self.open_writer(&rel, mode)?,
+                };
+                if t.armed() {
+                    let tier = self
+                        .shared
+                        .registry
+                        .get(&rel)
+                        .and_then(|e| e.dev)
+                        .map(|d| self.shared.hierarchy.info(d).tier);
+                    t.stop(Metric::io(IoOp::Open, tier));
+                }
+                Ok(f)
+            }
         }
     }
 
@@ -2664,6 +2727,60 @@ mod tests {
         assert_eq!(sea.read(p).unwrap().len(), MIB as usize);
         assert_eq!(sea.mgmt_counters(), (1, 1));
         let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// Acceptance: the flight recorder captures one full flush and one
+    /// spill lifecycle as Chrome `ph:"X"` spans.
+    #[test]
+    fn flight_recorder_captures_flush_and_spill_lifecycles() {
+        use crate::obs::trace;
+        let _gate = crate::obs::test_gate();
+        trace::set_enabled(true);
+        // flush: a move-mode file drained by sync_mgmt
+        let (sea, root, _) =
+            mount(RuleSet::from_texts("**_final.dat", "**_final.dat", ""), 10 * MIB);
+        sea.write(Path::new("/sea/out/t_final.dat"), &vec![3u8; MIB as usize]).unwrap();
+        sea.sync_mgmt().unwrap();
+        // spill: a single small device with cold residents; a streaming
+        // writer overruns it, so something must move down to the PFS
+        // (self-spill or victim-spill — both record a "spill" span)
+        let root2 = scratch("seafs_trace_spill");
+        let pfs2 = Arc::new(RealFs::new(root2.join("pfs")).unwrap());
+        let sea2 = SeaFs::mount(SeaFsConfig {
+            mountpoint: PathBuf::from("/sea"),
+            devices: vec![DeviceSpec::dir(root2.join("dev0"), 0, 4 * MIB).unwrap()],
+            pfs: pfs2,
+            max_file_size: MIB,
+            parallel_procs: 1,
+            rules: RuleSet::default(),
+            seed: 3,
+            tuning: SeaTuning::default(),
+        })
+        .unwrap();
+        for i in 0..2u8 {
+            sea2.write(Path::new(&format!("/sea/cold{i}.dat")), &vec![i; MIB as usize])
+                .unwrap();
+        }
+        {
+            let mut f = sea2.open(Path::new("/sea/hot.dat"), OpenMode::Write).unwrap();
+            let chunk = vec![9u8; (256 * KIB) as usize];
+            for k in 0..16u64 {
+                f.pwrite_all(&chunk, k * 256 * KIB).unwrap();
+            }
+        }
+        sea2.sync_mgmt().unwrap();
+        trace::set_enabled(false);
+        let json = trace::to_chrome_json();
+        assert!(
+            json.contains("\"name\":\"flush\",\"cat\":\"mgmt\",\"ph\":\"X\""),
+            "flush lifecycle missing from trace"
+        );
+        assert!(
+            json.contains("\"name\":\"spill\",\"cat\":\"mgmt\",\"ph\":\"X\""),
+            "spill lifecycle missing from trace"
+        );
+        let _ = std::fs::remove_dir_all(&root);
+        let _ = std::fs::remove_dir_all(&root2);
     }
 
     #[test]
